@@ -1,0 +1,43 @@
+//! Strategy shoot-out on one kernel — a miniature of the paper's Fig. 1b:
+//! the 2D Convolution kernel on the GTX Titan X, all seven strategies,
+//! repeated runs, MAE + mean-deviation summary.
+//!
+//!     cargo run --release --example compare_strategies [-- --repeats N]
+
+use std::sync::Arc;
+
+use ktbo::harness::figures::objective_for;
+use ktbo::harness::metrics::mean_deviation_factor;
+use ktbo::harness::runner::run_strategy;
+use ktbo::gpusim::device::Device;
+use ktbo::objective::Objective;
+use ktbo::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let repeats = args.usize_or("repeats", 7);
+    let device = Device::gtx_titan_x();
+    let obj = objective_for("convolution", &device);
+    println!(
+        "Convolution on {}: {} configs, minimum {:.3} ms, {repeats} repeats each\n",
+        device.name,
+        obj.space().len(),
+        obj.known_minimum().unwrap()
+    );
+
+    let strategies =
+        ["ei", "multi", "advanced_multi", "random", "simulated_annealing", "mls", "genetic_algorithm"];
+    let mut maes = Vec::new();
+    println!("{:<22} {:>10} {:>10} {:>12}", "strategy", "MAE", "±std", "final best");
+    for s in strategies {
+        let out = run_strategy(&Arc::clone(&obj), s, 220, repeats, 99, 0);
+        let final_best = out.mean_curve[out.mean_curve.len() - 1];
+        println!("{:<22} {:>10.4} {:>10.4} {:>12.4}", s, out.mae.mean, out.mae.std, final_best);
+        maes.push(out.mae.mean);
+    }
+    let mdf = mean_deviation_factor(&[maes]);
+    println!("\ndeviation factors (lower is better):");
+    for (s, (m, _)) in strategies.iter().zip(mdf) {
+        println!("  {s:<22} {m:.3}");
+    }
+}

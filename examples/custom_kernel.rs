@@ -1,0 +1,105 @@
+//! Bring your own kernel: the paper's "unseen kernels" scenario (§IV-E)
+//! from the user's side. Defines a brand-new tunable kernel — a fused
+//! softmax-attention row kernel — against the `KernelModel` trait,
+//! simulates its search space on the A100, and tunes it with the full
+//! strategy zoo. Nothing in the library knows this kernel; everything
+//! (restrictions, invalidity staging, roofline timing, BO) composes.
+//!
+//!     cargo run --release --example custom_kernel
+
+use ktbo::gpusim::device::Device;
+use ktbo::gpusim::kernels::KernelModel;
+use ktbo::gpusim::occupancy::Resources;
+use ktbo::gpusim::timing::WorkEstimate;
+use ktbo::gpusim::SimulatedSpace;
+use ktbo::objective::{Objective, TableObjective};
+use ktbo::space::{Assignment, Param, Restriction};
+use ktbo::strategies::registry::by_name;
+use ktbo::util::rng::Rng;
+
+/// Rows × head-dim of the attention problem.
+const ROWS: usize = 16384;
+const HEAD: usize = 128;
+
+struct SoftmaxAttentionRow;
+
+impl KernelModel for SoftmaxAttentionRow {
+    fn name(&self) -> &'static str {
+        "softmax_attention_row"
+    }
+
+    fn id(&self) -> u64 {
+        0x50f7
+    }
+
+    fn params(&self) -> Vec<Param> {
+        vec![
+            Param::ints("block_size_x", &[32, 64, 128, 256, 512, 1024]),
+            Param::ints("rows_per_block", &[1, 2, 4, 8, 16]),
+            Param::ints("vector_width", &[1, 2, 4]),
+            Param::bools("use_online_softmax"),
+            Param::bools("stage_kv_in_smem"),
+        ]
+    }
+
+    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
+        vec![Restriction::new("one warp per row minimum", |a| {
+            a.i("block_size_x") / a.i("rows_per_block") >= 32
+        })]
+    }
+
+    fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {
+        let bsx = a.i("block_size_x") as usize;
+        let rpb = a.i("rows_per_block") as usize;
+        let smem = if a.b("stage_kv_in_smem") { rpb * HEAD * 2 * 4 } else { 0 };
+        let regs = 28 + 4 * a.i("vector_width") as usize + if a.b("use_online_softmax") { 10 } else { 0 };
+        Resources {
+            threads_per_block: bsx,
+            smem_bytes: smem,
+            regs_per_thread: regs,
+            grid_blocks: ROWS.div_ceil(rpb),
+        }
+    }
+
+    fn work(&self, a: &Assignment, _dev: &Device) -> WorkEstimate {
+        let cells = (ROWS * HEAD) as f64;
+        // Two passes without online softmax, one with (more flops/pass).
+        let (passes, ops) = if a.b("use_online_softmax") { (1.0, 14.0) } else { (2.0, 9.0) };
+        let vw_eff: f64 = match a.i("vector_width") {
+            1 => 0.8,
+            2 => 0.95,
+            _ => 1.0,
+        };
+        WorkEstimate {
+            flops: cells * ops * passes,
+            dram_bytes: cells * 4.0 * (passes + 1.0) / if a.b("stage_kv_in_smem") { 1.6 } else { 1.0 },
+            compute_efficiency: (0.85 * vw_eff).clamp(0.05, 1.0),
+            memory_efficiency: 0.9,
+            ..Default::default()
+        }
+    }
+}
+
+fn main() {
+    let device = Device::a100();
+    let sim = SimulatedSpace::build(&SoftmaxAttentionRow, &device);
+    println!(
+        "custom kernel '{}' on {}: {} configs, {} invalid, min {:.4} ms",
+        sim.kernel_name,
+        device.name,
+        sim.space.len(),
+        sim.invalid_count(),
+        sim.global_minimum().1
+    );
+    let obj = TableObjective::from_sim(sim);
+    let global = obj.known_minimum().unwrap();
+
+    println!("\n{:<22} {:>10} {:>12}", "strategy", "best (ms)", "vs optimum");
+    for name in ["advanced_multi", "multi", "ei", "genetic_algorithm", "mls", "simulated_annealing", "random"] {
+        let s = by_name(name).unwrap();
+        let mut rng = Rng::new(7);
+        let trace = s.run(&obj, 120, &mut rng);
+        let best = trace.best().map(|(_, v)| v).unwrap_or(f64::NAN);
+        println!("{:<22} {:>10.4} {:>11.2}%", name, best, 100.0 * (best / global - 1.0));
+    }
+}

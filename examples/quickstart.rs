@@ -1,0 +1,57 @@
+//! Quickstart: tune the CLBlast-style GEMM kernel on the simulated
+//! GTX Titan X with the paper's best strategy (`advanced multi`).
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the 30-second tour of the public API: build a simulated search
+//! space (Kernel Tuner "simulation mode"), pick a strategy from the
+//! registry, run it with the paper's §IV-A budget, inspect the result.
+
+use ktbo::gpusim::device::Device;
+use ktbo::gpusim::kernels::kernel_by_name;
+use ktbo::gpusim::SimulatedSpace;
+use ktbo::objective::{Objective, TableObjective};
+use ktbo::strategies::registry::by_name;
+use ktbo::util::rng::Rng;
+
+fn main() {
+    // 1. A tunable kernel + a device = a search space and an objective.
+    let kernel = kernel_by_name("gemm").unwrap();
+    let device = Device::gtx_titan_x();
+    let sim = SimulatedSpace::build(kernel.as_ref(), &device);
+    println!(
+        "GEMM on {}: {} configurations ({} invalid), global minimum {:.3} ms",
+        device.name,
+        sim.space.len(),
+        sim.invalid_count(),
+        sim.global_minimum().1
+    );
+    let objective = TableObjective::from_sim(sim);
+
+    // 2. Pick a strategy and run with the paper's budget: 20 initial
+    //    samples + 200 optimization evaluations.
+    let strategy = by_name("advanced_multi").unwrap();
+    let mut rng = Rng::new(2021);
+    let t0 = std::time::Instant::now();
+    let trace = strategy.run(&objective, 220, &mut rng);
+
+    // 3. Inspect.
+    let (best_idx, best) = trace.best().expect("found a valid configuration");
+    let global = objective.known_minimum().unwrap();
+    println!(
+        "advanced multi: best {:.3} ms after {} evaluations ({:.1}% above optimum, {:?})",
+        best,
+        trace.len(),
+        100.0 * (best / global - 1.0),
+        t0.elapsed()
+    );
+    println!("best configuration: {}", objective.space().describe(best_idx));
+
+    // Best-found curve at the paper's checkpoints.
+    let curve = trace.best_curve();
+    print!("best-found curve:");
+    for cp in ktbo::harness::metrics::checkpoints() {
+        print!("  {}:{:.2}", cp, curve[cp - 1]);
+    }
+    println!();
+}

@@ -1,0 +1,87 @@
+"""AOT compile path: lower the Layer-2 graphs (which embed the Layer-1
+Pallas kernels) to HLO **text** artifacts for the Rust PJRT runtime.
+
+Run once by `make artifacts`; Python never runs on the tuning path.
+
+HLO text — NOT `lowered.compile()`/serialized protos — is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the runtime's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and resources/aot_recipe.md).
+
+Artifacts:
+  gp_fitpredict_n{N}_c{C}.hlo.txt   GP surrogate buckets (runtime contract
+                                    in rust/src/runtime/artifacts.rs)
+  pallas_gemm_m{BM}_n{BN}_k{BK}.hlo.txt
+                                    tunable-GEMM variants for the e2e
+                                    example (examples/tune_pallas_gemm.rs)
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import tunable_gemm
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(path: str, lowered) -> None:
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def emit_gp_buckets(out_dir: str, lengthscale: float, nu: str, noise: float) -> None:
+    for n in model.N_BUCKETS:
+        fn = functools.partial(model.gp_fit_predict,
+                               lengthscale=lengthscale, nu=nu, noise=noise)
+        lowered = jax.jit(fn).lower(*model.example_args(n))
+        emit(os.path.join(out_dir, f"gp_fitpredict_n{n}_c{model.C_CHUNK}.hlo.txt"),
+             lowered)
+
+
+def emit_gemm_variants(out_dir: str) -> None:
+    spec = jax.ShapeDtypeStruct((tunable_gemm.M, tunable_gemm.K), jnp.float32)
+    spec2 = jax.ShapeDtypeStruct((tunable_gemm.K, tunable_gemm.N), jnp.float32)
+    for bm, bn, bk in tunable_gemm.variant_grid():
+        fn = functools.partial(tunable_gemm.tunable_gemm,
+                               block_m=bm, block_n=bn, block_k=bk)
+        lowered = jax.jit(fn).lower(spec, spec2)
+        emit(os.path.join(out_dir, f"pallas_gemm_m{bm}_n{bn}_k{bk}.hlo.txt"), lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--lengthscale", type=float, default=1.5,
+                    help="Matérn lengthscale (Table I CV default)")
+    ap.add_argument("--nu", default="matern32",
+                    choices=["matern32", "matern52", "rbf"])
+    ap.add_argument("--noise", type=float, default=1e-6)
+    ap.add_argument("--skip-gemm", action="store_true",
+                    help="only emit the GP surrogate buckets")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    emit_gp_buckets(args.out, args.lengthscale, args.nu, args.noise)
+    if not args.skip_gemm:
+        emit_gemm_variants(args.out)
+    print("AOT artifacts complete", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Layer 1 — Pallas kernel: Matérn cross-covariance for exhaustive GP
+prediction.
+
+The optimizer's hot spot (paper §III-G: "we exhaustively predict every
+discrete point in the model") is the [C, N] cross-covariance between every
+candidate configuration and the training set, recomputed every iteration.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): candidates are tiled along C
+into VMEM-sized blocks via BlockSpec (the HBM↔VMEM schedule standing in
+for the CUDA threadblock schedule); the pairwise squared distance is
+expressed as |c|² + |x|² − 2·c·xᵀ so the −2·c·xᵀ term is a
+[BLOCK_C, D] × [D, N] contraction feeding the MXU; the Matérn evaluation is
+elementwise VPU work on the resident tile.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO that runs on any backend
+(and is what `make artifacts` ships to the Rust runtime).
+
+VMEM footprint at the default BLOCK_C=512, N=256, D=16 (fp32):
+  cand tile 512×16×4 = 32 KiB, x 256×16×4 = 16 KiB,
+  out tile 512×256×4 = 512 KiB, scratch ≈ out tile → ≈ 1.1 MiB ≪ 16 MiB.
+MXU utilization estimate: the contraction is (512×16×256) MACs per tile —
+K=16 underfills the 128×128 systolic array (≈12% MXU efficiency); the
+kernel is VPU/memory-bound on the Matérn elementwise tail, which is the
+expected regime for this memory-bound prediction workload.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate-axis tile. 512 keeps the output tile at 512 KiB fp32 for
+# N ≤ 256 — comfortably inside VMEM with double-buffering headroom.
+BLOCK_C = 512
+
+SQRT3 = 1.7320508075688772
+SQRT5 = 2.23606797749979
+
+
+def _matern_kernel_body(x_ref, c_ref, o_ref, *, lengthscale: float, nu: str):
+    """One C-tile: distances via MXU-shaped contraction, then Matérn."""
+    c = c_ref[...]  # [BLOCK_C, D]
+    x = x_ref[...]  # [N, D]
+    # |c−x|² = |c|² + |x|² − 2 c·xᵀ ; the matmul term hits the MXU.
+    c2 = jnp.sum(c * c, axis=1, keepdims=True)  # [BLOCK_C, 1]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True).T  # [1, N]
+    cross = jax.lax.dot_general(
+        c, x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [BLOCK_C, N]
+    d2 = jnp.maximum(c2 + x2 - 2.0 * cross, 0.0)
+    r = jnp.sqrt(d2) / lengthscale
+    if nu == "matern32":
+        s = SQRT3 * r
+        o_ref[...] = (1.0 + s) * jnp.exp(-s)
+    elif nu == "matern52":
+        s = SQRT5 * r
+        o_ref[...] = (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+    elif nu == "rbf":
+        o_ref[...] = jnp.exp(-0.5 * r * r)
+    else:  # pragma: no cover - guarded by caller
+        raise ValueError(f"unknown covariance '{nu}'")
+
+
+@functools.partial(jax.jit, static_argnames=("lengthscale", "nu", "block_c"))
+def matern_cross(cand, x, *, lengthscale: float = 1.5, nu: str = "matern32",
+                 block_c: int = BLOCK_C):
+    """Cross-covariance K(cand, x) → [C, N], tiled over the candidate axis.
+
+    ``C`` must be a multiple of ``block_c`` (the AOT shapes guarantee it;
+    tests pad). ``x`` is resident per tile (N ≤ a few hundred in BO).
+    """
+    c_total, d = cand.shape
+    n, d2 = x.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    assert c_total % block_c == 0, f"C={c_total} not a multiple of {block_c}"
+    grid = (c_total // block_c,)
+    return pl.pallas_call(
+        functools.partial(_matern_kernel_body, lengthscale=lengthscale, nu=nu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),          # x: resident
+            pl.BlockSpec((block_c, d), lambda i: (i, 0)),    # cand: streamed
+        ],
+        out_specs=pl.BlockSpec((block_c, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_total, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.float32), cand.astype(jnp.float32))
+
+
+def pad_candidates(cand, block_c: int = BLOCK_C):
+    """Pad the candidate axis up to a multiple of ``block_c`` by repeating
+    row 0 (results for padded rows are discarded by the caller)."""
+    c = cand.shape[0]
+    pad = (-c) % block_c
+    if pad == 0:
+        return cand, c
+    return jnp.concatenate([cand, jnp.broadcast_to(cand[:1], (pad, cand.shape[1]))]), c

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernel and the full GP fit+predict
+graph. This is the CORE correctness signal: every artifact shipped to the
+Rust runtime is validated against these references by pytest at build
+time (and the Rust-native GP is cross-checked against the same math in
+`rust/src/gp`)."""
+
+import jax.numpy as jnp
+from jax.scipy.linalg import cholesky, solve_triangular
+
+SQRT3 = 1.7320508075688772
+SQRT5 = 2.23606797749979
+
+
+def cov(r, lengthscale: float, nu: str):
+    """Stationary covariance at distance r (unit signal variance)."""
+    s = r / lengthscale
+    if nu == "matern32":
+        t = SQRT3 * s
+        return (1.0 + t) * jnp.exp(-t)
+    if nu == "matern52":
+        t = SQRT5 * s
+        return (1.0 + t + t * t / 3.0) * jnp.exp(-t)
+    if nu == "rbf":
+        return jnp.exp(-0.5 * s * s)
+    raise ValueError(f"unknown covariance '{nu}'")
+
+
+def cdist(a, b):
+    """Pairwise Euclidean distances [A, B] (stable direct form)."""
+    diff = a[:, None, :] - b[None, :, :]
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def matern_cross_ref(cand, x, *, lengthscale: float = 1.5, nu: str = "matern32"):
+    """Reference for kernels.gp_predict.matern_cross."""
+    return cov(cdist(cand.astype(jnp.float32), x.astype(jnp.float32)),
+               lengthscale, nu).astype(jnp.float32)
+
+
+def gp_fit_predict_ref(x, yc, mask, cand, *, lengthscale: float = 1.5,
+                       nu: str = "matern32", noise: float = 1e-6):
+    """Reference masked-padded GP fit+predict (same contract as the
+    artifact: yc centered with zeros on padding; returns centered mu)."""
+    n = x.shape[0]
+    k = cov(cdist(x, x), lengthscale, nu)
+    k = k * (mask[:, None] * mask[None, :])
+    k = k + jnp.diag(noise * mask + (1.0 - mask))
+    chol = cholesky(k, lower=True)
+    w = solve_triangular(chol, yc * mask, lower=True)
+    ks = cov(cdist(cand, x), lengthscale, nu) * mask[None, :]
+    v = solve_triangular(chol, ks.T, lower=True)  # [N, C]
+    mu = v.T @ w
+    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
+    return mu.astype(jnp.float32), var.astype(jnp.float32)
+
+
+def dense_gp_ref(x, y, cand, *, lengthscale: float = 1.5, nu: str = "matern32",
+                 noise: float = 1e-6):
+    """Unpadded textbook GP (centered internally) — ground truth for the
+    masking logic."""
+    y_mean = jnp.mean(y)
+    n = x.shape[0]
+    k = cov(cdist(x, x), lengthscale, nu) + noise * jnp.eye(n)
+    chol = cholesky(k, lower=True)
+    w = solve_triangular(chol, y - y_mean, lower=True)
+    ks = cov(cdist(cand, x), lengthscale, nu)
+    v = solve_triangular(chol, ks.T, lower=True)
+    mu = y_mean + v.T @ w
+    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
+    return mu, var

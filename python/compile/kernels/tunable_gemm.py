@@ -1,0 +1,73 @@
+"""Layer 1 — a *tunable* Pallas GEMM kernel: the real-workload objective
+for the end-to-end example (`examples/tune_pallas_gemm.rs`).
+
+This is the reproduction's stand-in for the paper's CLBlast GEMM: a tiled
+matrix multiplication whose tile sizes (block_m, block_n, block_k) are the
+tunable parameters. `make artifacts` AOT-lowers a grid of variants to HLO;
+the Rust BO tuner executes them through PJRT and wall-clocks each variant —
+a genuine (CPU-backed) auto-tuning loop across all three layers.
+
+Restriction (spec stage, like CLBlast's): every block size must divide the
+matrix dimension.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Problem size of the e2e example (kept small: interpret-mode CPU).
+M = N = K = 256
+
+
+def _gemm_body(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o += x_tile @ y_tile.
+
+    The output BlockSpec ignores the k grid axis, so the same output tile
+    stays resident across the k loop and serves as the accumulator."""
+    del n_k
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...], y_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def tunable_gemm(x, y, *, block_m: int = 64, block_n: int = 64, block_k: int = 64):
+    """z = x @ y with a (block_m, block_n, block_k) tiling schedule."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, \
+        f"blocks ({block_m},{block_n},{block_k}) must divide ({m},{n},{k})"
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_gemm_body, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def gemm_ref(x, y):
+    return (x.astype(jnp.float32) @ y.astype(jnp.float32)).astype(jnp.float32)
+
+
+def variant_grid():
+    """The e2e example's search space: blocks dividing 256."""
+    blocks = (32, 64, 128)
+    ks = (32, 128)
+    return [(bm, bn, bk) for bm in blocks for bn in blocks for bk in ks]

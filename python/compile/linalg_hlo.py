@@ -1,0 +1,45 @@
+"""Pure-HLO dense linear algebra for the AOT path.
+
+`jax.scipy.linalg.cholesky` / `solve_triangular` lower on CPU to LAPACK
+custom-calls with the typed-FFI API (`lapack_spotrf_ffi`, …) that the
+runtime's xla_extension 0.5.1 cannot execute ("Unknown custom-call API
+version enum value: 4"). These replacements express the same factorization
+and substitutions as `lax.fori_loop` + dense contractions, which lower to
+plain HLO (While + Dot) and run on any PJRT backend.
+
+Shapes are tiny on the factorization side (N ≤ 256), and the O(N²·C)
+substitution against the candidate block is exactly the work the math
+requires — no asymptotic penalty vs LAPACK.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def cholesky_hlo(a, jitter: float = 0.0):
+    """Lower-triangular Cholesky factor via the left-looking column
+    algorithm: one fori_loop step per column, each a masked matvec."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def step(j, l):
+        # c = a[:, j] − L · L[j, :]ᵀ, restricted to columns < j.
+        lj = jnp.where(idx < j, l[j, :], 0.0)
+        c = a[:, j] - l @ lj
+        d = jnp.sqrt(jnp.maximum(c[j] + jitter, 1e-12))
+        col = jnp.where(idx >= j, c / d, 0.0)
+        return l.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, n, step, jnp.zeros_like(a))
+
+
+def solve_lower_hlo(l, b):
+    """Forward substitution L·w = b for b of shape [n] or [n, c]."""
+    n = l.shape[0]
+
+    def step(i, w):
+        # w rows ≥ i are still zero, so l[i, :] @ w only sees solved rows.
+        s = l[i, :] @ w
+        return w.at[i].set((b[i] - s) / l[i, i])
+
+    return jax.lax.fori_loop(0, n, step, jnp.zeros_like(b))

@@ -1,0 +1,70 @@
+"""Layer 2 — the JAX GP fit+predict graph served to the Rust coordinator.
+
+One jitted function per (N, C) padding bucket: fit a fixed-lengthscale
+Matérn GP on up to N (masked) observations and predict mean/variance over
+C candidate configurations. The cross-covariance hot spot calls the
+Layer-1 Pallas kernel so it lowers into the same HLO module.
+
+Interface contract with `rust/src/runtime/artifacts.rs`:
+  inputs  (f32): x[N,16], yc[N] (centered, 0 on padding), mask[N] (1/0),
+                 cand[C,16]
+  outputs (f32): tuple (mu[C] in centered units, var[C])
+
+Padded rows are neutralized algebraically (no branching in the graph):
+masked K rows/cols collapse to identity rows, so the Cholesky factor of
+the padded system embeds the factor of the real system exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gp_predict
+from compile.kernels.ref import cdist, cov
+from compile.linalg_hlo import cholesky_hlo, solve_lower_hlo
+
+# Padding contract shared with the Rust side (runtime/artifacts.rs D_PAD).
+D_PAD = 16
+N_BUCKETS = (32, 64, 128, 256)
+C_CHUNK = 4096
+
+
+@functools.partial(jax.jit, static_argnames=("lengthscale", "nu", "noise"))
+def gp_fit_predict(x, yc, mask, cand, *, lengthscale: float = 1.5,
+                   nu: str = "matern32", noise: float = 1e-6):
+    """Masked GP fit + exhaustive prediction (see module docstring)."""
+    x = x.astype(jnp.float32)
+    yc = yc.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    cand = cand.astype(jnp.float32)
+
+    # K over the padded training block (N is small: plain jnp, not Pallas).
+    k = cov(cdist(x, x), lengthscale, nu)
+    k = k * (mask[:, None] * mask[None, :])
+    k = k + jnp.diag(noise * mask + (1.0 - mask))
+    # Pure-HLO factorization/substitution: the LAPACK custom-calls that
+    # jax.scipy.linalg would emit are not executable by the runtime's
+    # xla_extension (see compile/linalg_hlo.py).
+    chol = cholesky_hlo(k)
+    w = solve_lower_hlo(chol, yc * mask)
+
+    # Cross-covariance over all candidates — the Pallas hot path.
+    ks = gp_predict.matern_cross(cand, x, lengthscale=lengthscale, nu=nu)
+    ks = ks * mask[None, :]
+
+    v = solve_lower_hlo(chol, ks.T)  # [N, C]
+    mu = v.T @ w
+    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
+    return mu, var
+
+
+def example_args(n: int, c: int = C_CHUNK, d: int = D_PAD):
+    """Shape specs for AOT lowering of one bucket."""
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, d), f),   # x
+        jax.ShapeDtypeStruct((n,), f),     # yc
+        jax.ShapeDtypeStruct((n,), f),     # mask
+        jax.ShapeDtypeStruct((c, d), f),   # cand
+    )

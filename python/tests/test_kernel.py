@@ -1,0 +1,91 @@
+"""L1 correctness: the Pallas Matérn cross-covariance kernel vs the
+pure-jnp oracle, including hypothesis sweeps over shapes, dtypes, and
+covariance hyperparameters."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gp_predict import matern_cross, pad_candidates
+from compile.kernels.ref import matern_cross_ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, dtype=np.float32, scale=1.0):
+    return (RNG.random(shape) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("nu", ["matern32", "matern52", "rbf"])
+def test_matches_ref_all_covariances(nu):
+    cand = rand((512, 16))
+    x = rand((64, 16))
+    got = matern_cross(jnp.array(cand), jnp.array(x), lengthscale=1.5, nu=nu,
+                       block_c=256)
+    want = matern_cross_ref(jnp.array(cand), jnp.array(x), lengthscale=1.5, nu=nu)
+    np.testing.assert_allclose(got, want, atol=5e-6)
+
+
+def test_unit_diagonal_at_zero_distance():
+    x = rand((32, 16))
+    got = matern_cross(jnp.array(x[:32]), jnp.array(x), block_c=32)
+    # k(x_i, x_i) = 1.
+    np.testing.assert_allclose(np.diag(np.asarray(got)), 1.0, atol=1e-5)
+
+
+def test_values_in_unit_interval():
+    cand = rand((256, 16), scale=3.0)
+    x = rand((16, 16), scale=3.0)
+    got = np.asarray(matern_cross(jnp.array(cand), jnp.array(x), block_c=128))
+    assert got.min() >= 0.0 and got.max() <= 1.0 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c_tiles=st.integers(min_value=1, max_value=4),
+    block_c=st.sampled_from([32, 64, 128]),
+    n=st.integers(min_value=1, max_value=96),
+    d=st.integers(min_value=1, max_value=16),
+    ls=st.floats(min_value=0.3, max_value=4.0),
+    nu=st.sampled_from(["matern32", "matern52", "rbf"]),
+)
+def test_hypothesis_shape_sweep(c_tiles, block_c, n, d, ls, nu):
+    """The kernel must agree with the oracle for any tile count, training
+    size, dimensionality, lengthscale, and covariance family."""
+    c = c_tiles * block_c
+    cand = rand((c, d))
+    x = rand((n, d))
+    got = matern_cross(jnp.array(cand), jnp.array(x), lengthscale=float(ls),
+                       nu=nu, block_c=block_c)
+    want = matern_cross_ref(jnp.array(cand), jnp.array(x), lengthscale=float(ls),
+                            nu=nu)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dtype=st.sampled_from([np.float32, np.float64, np.float16]))
+def test_hypothesis_dtype_sweep(dtype):
+    """Inputs of any float dtype are accepted and produce f32 outputs."""
+    cand = rand((128, 8)).astype(dtype)
+    x = rand((16, 8)).astype(dtype)
+    got = matern_cross(jnp.array(cand), jnp.array(x), block_c=64)
+    assert got.dtype == jnp.float32
+    want = matern_cross_ref(jnp.array(cand, jnp.float32), jnp.array(x, jnp.float32))
+    np.testing.assert_allclose(got, want, atol=5e-3 if dtype == np.float16 else 1e-5)
+
+
+def test_pad_candidates_roundtrip():
+    cand = jnp.array(rand((100, 4)))
+    padded, real = pad_candidates(cand, block_c=64)
+    assert real == 100
+    assert padded.shape == (128, 4)
+    np.testing.assert_array_equal(np.asarray(padded[:100]), np.asarray(cand))
+    # Padding repeats row 0 (valid inputs, discarded outputs).
+    np.testing.assert_array_equal(np.asarray(padded[100:]),
+                                  np.tile(np.asarray(cand[:1]), (28, 1)))
+
+
+def test_rejects_non_multiple_block():
+    with pytest.raises(AssertionError):
+        matern_cross(jnp.zeros((100, 4)), jnp.zeros((8, 4)), block_c=64)

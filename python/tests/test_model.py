@@ -1,0 +1,102 @@
+"""L2 correctness: the masked/padded GP fit+predict graph vs the textbook
+dense GP, plus the padding-neutrality invariant the Rust runtime relies
+on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import dense_gp_ref, gp_fit_predict_ref
+
+RNG = np.random.default_rng(99)
+
+
+def make_case(n_real, n_pad, c, d=16):
+    x = np.zeros((n_pad, d), np.float32)
+    x[:n_real] = RNG.random((n_real, d))
+    y = RNG.random(n_real).astype(np.float32) * 10.0 + 3.0
+    yc = np.zeros(n_pad, np.float32)
+    yc[:n_real] = y - y.mean()
+    mask = np.zeros(n_pad, np.float32)
+    mask[:n_real] = 1.0
+    cand = RNG.random((c, d)).astype(np.float32)
+    return x, y, yc, mask, cand
+
+
+def test_matches_masked_reference():
+    x, _, yc, mask, cand = make_case(40, 64, 512)
+    mu, var = model.gp_fit_predict(jnp.array(x), jnp.array(yc), jnp.array(mask),
+                                   jnp.array(cand))
+    mu_r, var_r = gp_fit_predict_ref(jnp.array(x), jnp.array(yc),
+                                     jnp.array(mask), jnp.array(cand))
+    np.testing.assert_allclose(mu, mu_r, atol=2e-5)
+    np.testing.assert_allclose(var, var_r, atol=2e-5)
+
+
+def test_padding_is_neutral():
+    """The runtime contract: padding to the bucket must not change the
+    posterior — compare against the dense unpadded GP."""
+    x, y, yc, mask, cand = make_case(30, 64, 512)
+    mu, var = model.gp_fit_predict(jnp.array(x), jnp.array(yc), jnp.array(mask),
+                                   jnp.array(cand))
+    mu_d, var_d = dense_gp_ref(jnp.array(x[:30]), jnp.array(y), jnp.array(cand))
+    np.testing.assert_allclose(np.asarray(mu) + y.mean(), mu_d, atol=5e-4)
+    np.testing.assert_allclose(var, var_d, atol=5e-4)
+
+
+def test_variance_properties():
+    x, _, yc, mask, cand = make_case(20, 32, 512)
+    # Include the training points themselves among the candidates.
+    cand[:20] = x[:20]
+    mu, var = model.gp_fit_predict(jnp.array(x), jnp.array(yc), jnp.array(mask),
+                                   jnp.array(cand))
+    var = np.asarray(var)
+    assert var.min() > 0.0
+    assert var.max() <= 1.0 + 1e-5
+    # Variance at training points ≈ noise (tiny), far away ≈ prior (1).
+    assert var[:20].max() < 1e-3
+    far = np.full((512, 16), 50.0, np.float32)
+    _, var_far = model.gp_fit_predict(jnp.array(x), jnp.array(yc),
+                                      jnp.array(mask), jnp.array(far))
+    assert np.asarray(var_far).min() > 0.99
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_real=st.integers(min_value=2, max_value=64),
+    bucket=st.sampled_from([64, 128]),
+    nu=st.sampled_from(["matern32", "matern52"]),
+    ls=st.floats(min_value=0.5, max_value=3.0),
+)
+def test_hypothesis_bucket_sweep(n_real, bucket, nu, ls):
+    if n_real > bucket:
+        n_real = bucket
+    x, y, yc, mask, cand = make_case(n_real, bucket, 512)
+    mu, var = model.gp_fit_predict(jnp.array(x), jnp.array(yc), jnp.array(mask),
+                                   jnp.array(cand), lengthscale=float(ls), nu=nu)
+    mu_d, var_d = dense_gp_ref(jnp.array(x[:n_real]), jnp.array(y),
+                               jnp.array(cand), lengthscale=float(ls), nu=nu)
+    np.testing.assert_allclose(np.asarray(mu) + y.mean(), mu_d, atol=2e-3)
+    np.testing.assert_allclose(var, var_d, atol=2e-3)
+
+
+def test_example_args_shapes():
+    args = model.example_args(64)
+    assert args[0].shape == (64, model.D_PAD)
+    assert args[1].shape == (64,)
+    assert args[3].shape == (model.C_CHUNK, model.D_PAD)
+
+
+@pytest.mark.parametrize("n", model.N_BUCKETS)
+def test_all_buckets_lower_to_hlo(n):
+    """Every artifact bucket must lower to parseable HLO text."""
+    import functools
+    import jax
+    from compile.aot import to_hlo_text
+
+    fn = functools.partial(model.gp_fit_predict)
+    lowered = jax.jit(fn).lower(*model.example_args(n))
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text and len(text) > 1000

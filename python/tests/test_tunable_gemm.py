@@ -1,0 +1,48 @@
+"""L1 correctness: the tunable Pallas GEMM (e2e example objective) vs
+jnp matmul across its whole variant grid, plus hypothesis sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.tunable_gemm import gemm_ref, tunable_gemm, variant_grid, M, N, K
+
+RNG = np.random.default_rng(7)
+
+
+def test_variant_grid_is_valid():
+    g = variant_grid()
+    assert len(g) == 18
+    for bm, bn, bk in g:
+        assert M % bm == 0 and N % bn == 0 and K % bk == 0
+
+
+@pytest.mark.parametrize("bm,bn,bk", variant_grid())
+def test_every_variant_matches_ref(bm, bn, bk):
+    x = jnp.array(RNG.standard_normal((M, K)), jnp.float32)
+    y = jnp.array(RNG.standard_normal((K, N)), jnp.float32)
+    z = tunable_gemm(x, y, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(z, gemm_ref(x, y), atol=1e-3, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([16, 32, 64]),
+    bn=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    scale=st.floats(min_value=0.1, max_value=10.0),
+)
+def test_hypothesis_small_matrices(bm, bn, bk, scale):
+    m, n, k = 64, 64, 64
+    x = jnp.array(RNG.standard_normal((m, k)) * scale, jnp.float32)
+    y = jnp.array(RNG.standard_normal((k, n)) * scale, jnp.float32)
+    z = tunable_gemm(x, y, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(z, gemm_ref(x, y), atol=2e-2 * scale * scale,
+                               rtol=1e-3)
+
+
+def test_rejects_non_dividing_blocks():
+    x = jnp.zeros((64, 64))
+    with pytest.raises(AssertionError):
+        tunable_gemm(x, x, block_m=48, block_n=64, block_k=64)

@@ -1,0 +1,109 @@
+//! Micro-benchmarks of the optimizer's hot path (custom harness — no
+//! criterion in the offline vendor set): the exhaustive GP posterior over
+//! a GEMM-sized candidate set, across the three surrogate backends, plus
+//! acquisition scoring and one full BO iteration loop.
+//!
+//! Run: `cargo bench --bench gp_hotpath` (results land in
+//! EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+use ktbo::bo::acquisition::{argmin_score, score};
+use ktbo::bo::Acq;
+use ktbo::gp::{CovFn, Gpr, IncrementalGp, NativeSurrogate, Surrogate};
+use ktbo::util::rng::Rng;
+
+const DIMS: usize = 15; // GEMM dimensionality
+const M_CAND: usize = 17956; // GEMM restricted-space size
+
+fn timeit<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
+    // Warm-up.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{label:<58} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let cov = CovFn::Matern32 { lengthscale: 1.5 };
+    let cand: Vec<f64> = (0..M_CAND * DIMS).map(|_| rng.f64()).collect();
+    println!("== GP hot path: {M_CAND} candidates × {DIMS} dims ==");
+
+    for &n in &[50usize, 120, 220] {
+        let x: Vec<f64> = (0..n * DIMS).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut mu = vec![0.0; M_CAND];
+        let mut var = vec![0.0; M_CAND];
+
+        // Batch (one-shot refit) — what scikit-learn/Kernel Tuner do.
+        let iters = if n > 150 { 2 } else { 4 };
+        timeit(&format!("batch Gpr fit+predict_into        (n={n})"), iters, || {
+            let gp = Gpr::fit(cov, 1e-6, &x, DIMS, &y).unwrap();
+            gp.predict_into(&cand, &mut mu, &mut var);
+        });
+
+        // Incremental (our optimized path): a full simulated BO loop —
+        // n sequential (add observation, predict everything) iterations —
+        // reported per iteration. This is exactly the engine's workload.
+        let t0 = Instant::now();
+        let mut inc = IncrementalGp::new(cov, 1e-6, cand.clone(), DIMS);
+        for i in 0..n {
+            inc.add(&x[i * DIMS..(i + 1) * DIMS]);
+            inc.predict_into(&y[..i + 1], &mut mu, &mut var);
+        }
+        let per = t0.elapsed().as_secs_f64() / n as f64;
+        println!(
+            "{:<58} {:>10.3} ms/iter",
+            format!("incremental add+predict, amortized (n={n})"),
+            per * 1e3
+        );
+
+        // NativeSurrogate through the Surrogate trait (same as batch, with
+        // the trait-object overhead the XLA backend also pays).
+        let mut nat = NativeSurrogate::new(cov, 1e-6);
+        timeit(&format!("NativeSurrogate::fit_predict      (n={n})"), iters, || {
+            nat.fit_predict(&x, &y, DIMS, &cand, &mut mu, &mut var).unwrap();
+        });
+
+        // Acquisition scoring over the full candidate set.
+        let masked = vec![false; M_CAND];
+        timeit(&format!("EI argmin over candidates         (n={n})"), 20, || {
+            let _ = argmin_score(Acq::Ei, &mu, &var, 0.0, 0.01, &masked);
+        });
+    }
+
+    // XLA artifact backend, when available.
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&dir).join("gp_fitpredict_n256_c4096.hlo.txt").exists() {
+        println!("== XLA artifact backend (PJRT CPU) ==");
+        let backend = ktbo::runtime::XlaContext::load(&dir).expect("artifacts");
+        let mut xla = ktbo::runtime::XlaSurrogate::new(backend);
+        for &n in &[50usize, 220] {
+            let x: Vec<f64> = (0..n * DIMS).map(|_| rng.f64()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut mu = vec![0.0; M_CAND];
+            let mut var = vec![0.0; M_CAND];
+            timeit(&format!("XlaSurrogate::fit_predict         (n={n})"), 2, || {
+                xla.fit_predict(&x, &y, DIMS, &cand, &mut mu, &mut var).unwrap();
+            });
+        }
+    } else {
+        println!("(skipping XLA backend bench — run `make artifacts`)");
+    }
+
+    // Scalar acquisition-function throughput.
+    let t = timeit("acquisition score() x 1e6", 5, || {
+        let mut acc = 0.0;
+        for i in 0..1_000_000 {
+            acc += score(Acq::Ei, (i % 97) as f64 * 0.01, 0.5, 0.3, 0.01);
+        }
+        std::hint::black_box(acc);
+    });
+    println!("  = {:.1} ns per score", t * 1e3);
+}
+

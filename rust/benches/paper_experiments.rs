@@ -1,0 +1,53 @@
+//! End-to-end benches regenerating the paper's tables and figures at
+//! bench scale (custom harness; one section per Table/Figure family).
+//!
+//!   cargo bench --bench paper_experiments                (quick: scale 0.1)
+//!   KTBO_BENCH_SCALE=1.0 cargo bench --bench paper_experiments  (full §IV-A)
+//!
+//! Output: the same rows/series the paper reports (best-found curves at
+//! checkpoints, MDF bars, Table II/III stats, Fig 4 match counts), wall
+//! times per experiment, CSVs under results/bench/.
+
+use std::time::Instant;
+
+use ktbo::harness::figures as figs;
+use ktbo::harness::Options;
+
+fn main() {
+    let scale: f64 = std::env::var("KTBO_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let opts = Options {
+        repeat_scale: scale,
+        seed: 20210601,
+        threads: ktbo::util::pool::default_threads(),
+        out_dir: "results/bench".into(),
+    };
+    std::fs::create_dir_all(&opts.out_dir).expect("out dir");
+    println!("== paper experiment benches (repeat scale {scale}) ==\n");
+
+    let mut total = 0.0;
+    let mut section = |name: &str, body: &dyn Fn() -> String| {
+        let t0 = Instant::now();
+        let report = body();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!("{report}");
+        println!("--- {name}: {dt:.1}s ---\n");
+    };
+
+    section("Table I", &figs::table1);
+    section("Table II", &figs::table2);
+    section("Table III", &figs::table3);
+    section("Fig 1 (Titan X)", &|| figs::fig1(&opts));
+    section("Fig 2 (2070 Super)", &|| figs::fig2(&opts));
+    section("Fig 3 (A100)", &|| figs::fig3(&opts));
+    section("Fig 4 (match EI@220)", &|| figs::fig4(&opts));
+    section("Fig 5 (frameworks)", &|| figs::fig5(&opts));
+    section("Fig 6 (ExpDist)", &|| figs::fig6(&opts));
+    section("Fig 7 (Adding)", &|| figs::fig7(&opts));
+    section("§IV-F headline", &|| figs::headline(&opts));
+
+    println!("== total bench wall time: {total:.1}s ==");
+}

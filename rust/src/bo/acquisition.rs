@@ -1,0 +1,132 @@
+//! Basic acquisition functions (§III-C), minimization variants.
+//!
+//! Scores are "lower is better": the engine picks the arg-min over
+//! candidates. Inputs are in *normalized observation units* (the engine
+//! z-scores y before fitting), so the exploration factor λ is scale-free —
+//! exactly the problem the paper's contextual variance solves for raw
+//! observation scales.
+
+use crate::bo::config::Acq;
+
+/// Standard normal PDF.
+#[inline]
+pub fn phi(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Error function (Abramowitz & Stegun 7.1.26, |ε| ≤ 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+#[inline]
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Score one candidate under an acquisition function. `f_best` is the best
+/// (lowest) observation so far; `lambda` the exploration factor.
+#[inline]
+pub fn score(acq: Acq, mu: f64, var: f64, f_best: f64, lambda: f64) -> f64 {
+    let sigma = var.max(1e-12).sqrt();
+    match acq {
+        Acq::Ei => {
+            // Minimization EI: E[max(f_best − g(x) − ξ, 0)], negated.
+            let imp = f_best - mu - lambda;
+            let z = imp / sigma;
+            -(imp * norm_cdf(z) + sigma * phi(z))
+        }
+        Acq::Poi => {
+            // P(g(x) ≤ f_best − ξ), negated.
+            -norm_cdf((f_best - mu - lambda) / sigma)
+        }
+        Acq::Lcb => mu - lambda * sigma,
+    }
+}
+
+/// Arg-min of `score` over candidate predictions, skipping masked entries.
+/// Returns the position within the candidate arrays.
+pub fn argmin_score(acq: Acq, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for i in 0..mu.len() {
+        if masked[i] {
+            continue;
+        }
+        let s = score(acq, mu[i], var[i], f_best, lambda);
+        if best.map_or(true, |(_, b)| s < b) {
+            best = Some((i, s));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // erf(0)=0, erf(1)≈0.8427, erf(−1)≈−0.8427, erf(2)≈0.9953.
+        assert!(erf(0.0).abs() < 1.5e-7); // A&S 7.1.26 approximation error
+        assert!((erf(1.0) - 0.8427008).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427008).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953223).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdf_properties() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!(norm_cdf(-5.0) < 1e-5);
+        assert!(norm_cdf(5.0) > 1.0 - 1e-5);
+        // Symmetry.
+        assert!((norm_cdf(1.3) + norm_cdf(-1.3) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ei_prefers_lower_mean_same_variance() {
+        let s_low = score(Acq::Ei, 0.5, 0.1, 1.0, 0.0);
+        let s_high = score(Acq::Ei, 0.9, 0.1, 1.0, 0.0);
+        assert!(s_low < s_high);
+    }
+
+    #[test]
+    fn ei_prefers_higher_variance_same_mean() {
+        let s_sure = score(Acq::Ei, 1.0, 0.01, 1.0, 0.0);
+        let s_unsure = score(Acq::Ei, 1.0, 1.0, 1.0, 0.0);
+        assert!(s_unsure < s_sure);
+    }
+
+    #[test]
+    fn poi_is_probability_like() {
+        let s = -score(Acq::Poi, 0.0, 1.0, 1.0, 0.0);
+        assert!(s > 0.5 && s <= 1.0, "P(improve)={s}");
+    }
+
+    #[test]
+    fn lcb_lambda_increases_exploration() {
+        // With λ=0 LCB is pure exploitation (mean); candidate A (low mean,
+        // low var) wins. With large λ candidate B (high var) wins.
+        let a = (0.5, 0.01);
+        let b = (0.8, 1.0);
+        assert!(score(Acq::Lcb, a.0, a.1, 0.0, 0.0) < score(Acq::Lcb, b.0, b.1, 0.0, 0.0));
+        assert!(score(Acq::Lcb, b.0, b.1, 0.0, 2.0) < score(Acq::Lcb, a.0, a.1, 0.0, 2.0));
+    }
+
+    #[test]
+    fn argmin_respects_mask() {
+        let mu = [0.1, 0.0, 0.5];
+        let var = [0.1, 0.1, 0.1];
+        let mask = [false, true, false];
+        let i = argmin_score(Acq::Lcb, &mu, &var, 1.0, 0.0, &mask).unwrap();
+        assert_eq!(i, 0, "index 1 is masked even though its score is best");
+        assert!(argmin_score(Acq::Lcb, &mu, &var, 1.0, 0.0, &[true, true, true]).is_none());
+    }
+}

@@ -1,0 +1,128 @@
+//! BO hyperparameters with the paper's tuned defaults (Table I).
+
+use crate::gp::CovFn;
+
+/// Which basic acquisition function scores candidates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Acq {
+    /// Expected Improvement (minimization variant).
+    Ei,
+    /// Probability of Improvement.
+    Poi,
+    /// Lower Confidence Bound (minimization variant of UCB).
+    Lcb,
+}
+
+impl Acq {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Acq::Ei => "ei",
+            Acq::Poi => "poi",
+            Acq::Lcb => "lcb",
+        }
+    }
+}
+
+/// Acquisition meta-strategy (§III-G).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcqPolicyKind {
+    /// One fixed basic acquisition function.
+    Single(Acq),
+    /// Round-robin with duplicate-driven skipping ("multi").
+    Multi,
+    /// Round-robin with score-driven skipping/promotion ("advanced multi").
+    AdvancedMulti,
+}
+
+/// Exploration-factor schedule for the acquisition functions (§III-F).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Exploration {
+    /// Fixed hyperparameter λ.
+    Constant(f64),
+    /// The paper's contextual variance: λ = (σ̄² / (μ_s / f(x⁺))) / σ̄_s².
+    ContextualVariance,
+}
+
+/// Initial-sampling flavor (§III-E).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitialSampling {
+    Random,
+    /// Latin Hypercube Sample with random replacement of invalid draws.
+    Lhs,
+    /// Best-of-k LHS by maximin pairwise distance (Table I default).
+    Maximin,
+}
+
+/// Full BO configuration. Defaults = Table I.
+#[derive(Clone, Debug)]
+pub struct BoConfig {
+    pub cov: CovFn,
+    /// Observation noise added to the kernel diagonal.
+    pub noise: f64,
+    pub acq: AcqPolicyKind,
+    pub exploration: Exploration,
+    /// Basic-AF rotation order for multi/advanced multi.
+    pub af_order: [Acq; 3],
+    /// Initial sample size (the paper uses 20 of the 220-eval budget).
+    pub init_samples: usize,
+    pub init_sampling: InitialSampling,
+    /// Duplicate/score strikes before an AF is skipped.
+    pub skip_threshold: usize,
+    /// Relative score margin for skip/promote in advanced multi.
+    pub improvement_factor: f64,
+    /// Discount factor of the discounted-observation score.
+    pub discount: f64,
+    /// Prune candidates that neighbor observed-invalid configurations.
+    pub pruning: bool,
+}
+
+impl BoConfig {
+    /// Table I defaults with a single acquisition function.
+    pub fn single(acq: Acq) -> BoConfig {
+        BoConfig {
+            // Matérn ν=3/2 with lengthscale 1.5 under contextual variance
+            // (Table I: "Covariance function lengthscale (CV): 3/2, 1.5").
+            cov: CovFn::Matern32 { lengthscale: 1.5 },
+            noise: 1e-6,
+            acq: AcqPolicyKind::Single(acq),
+            exploration: Exploration::ContextualVariance,
+            af_order: [Acq::Ei, Acq::Poi, Acq::Lcb],
+            init_samples: 20,
+            init_sampling: InitialSampling::Maximin,
+            skip_threshold: 5,
+            improvement_factor: 0.1,
+            discount: 0.65,
+            pruning: true,
+        }
+    }
+
+    /// Table I defaults for the `multi` meta-acquisition function.
+    pub fn multi() -> BoConfig {
+        BoConfig { acq: AcqPolicyKind::Multi, discount: 0.65, ..BoConfig::single(Acq::Ei) }
+    }
+
+    /// Table I defaults for `advanced multi`.
+    pub fn advanced_multi() -> BoConfig {
+        BoConfig { acq: AcqPolicyKind::AdvancedMulti, discount: 0.75, ..BoConfig::single(Acq::Ei) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_i_defaults() {
+        let c = BoConfig::advanced_multi();
+        assert_eq!(c.skip_threshold, 5);
+        assert!((c.improvement_factor - 0.1).abs() < 1e-12);
+        assert!((c.discount - 0.75).abs() < 1e-12);
+        assert_eq!(c.init_samples, 20);
+        assert_eq!(c.init_sampling, InitialSampling::Maximin);
+        assert!(c.pruning);
+        assert_eq!(c.af_order, [Acq::Ei, Acq::Poi, Acq::Lcb]);
+        assert_eq!(c.exploration, Exploration::ContextualVariance);
+        assert_eq!(c.cov.name(), "matern32");
+        assert!((BoConfig::multi().discount - 0.65).abs() < 1e-12);
+    }
+}

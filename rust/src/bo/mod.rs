@@ -1,0 +1,12 @@
+//! The paper's Bayesian-Optimization search strategy (§III): config and
+//! Table I defaults, basic acquisition functions, initial sampling,
+//! acquisition meta-policies (`multi`, `advanced multi`), and the engine.
+
+pub mod acquisition;
+pub mod config;
+pub mod engine;
+pub mod multi;
+pub mod sampling;
+
+pub use config::{Acq, AcqPolicyKind, BoConfig, Exploration, InitialSampling};
+pub use engine::{Backend, BoStrategy};

@@ -1,0 +1,423 @@
+//! Acquisition-function selection policies (§III-G): single AF, the
+//! `multi` AF (duplicate-driven skipping), and the `advanced multi` AF
+//! (discounted-observation-score-driven skipping and promotion).
+//!
+//! Both meta-strategies evaluate the basic AFs in a round-robin fashion,
+//! optimizing *one* AF per function evaluation over the shared posterior
+//! predictions (unlike GP-Hedge, which optimizes all of them every time).
+
+use crate::bo::acquisition::argmin_score;
+use crate::bo::config::{Acq, BoConfig};
+use crate::util::linalg::median;
+
+/// Outcome bookkeeping interface of an acquisition policy.
+pub trait AcqPolicy: Send {
+    /// Pick a candidate position given shared predictions (normalized
+    /// units) and the candidate mask. Returns `None` when every candidate
+    /// is masked.
+    fn choose(&mut self, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize>;
+
+    /// Report the *raw* observation produced by the last `choose`
+    /// (`None` for an invalid configuration). `valid_so_far` holds all raw
+    /// valid observations, for the median imputation of advanced multi.
+    fn observe(&mut self, y: Option<f64>, valid_so_far: &[f64]);
+
+    /// Currently active basic AFs (for logging/tests).
+    fn active(&self) -> Vec<Acq>;
+}
+
+/// Discounted observation score: dos_t = Σᵢ oᵢ·γ^(t−i) — recent
+/// observations weigh more. Lower is better under minimization.
+#[derive(Clone, Debug, Default)]
+pub struct Dos {
+    value: f64,
+    count: usize,
+}
+
+impl Dos {
+    pub fn push(&mut self, obs: f64, discount: f64) {
+        self.value = self.value * discount + obs;
+        self.count += 1;
+    }
+
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Mean-normalized view: dos divided by the discounted weight mass, so
+    /// AFs with different observation counts compare fairly.
+    pub fn normalized(&self, discount: f64) -> f64 {
+        if self.count == 0 {
+            return f64::INFINITY;
+        }
+        // Σ γ^(t-i) for i = 1..count.
+        let mass = if (discount - 1.0).abs() < 1e-12 {
+            self.count as f64
+        } else {
+            (1.0 - discount.powi(self.count as i32)) / (1.0 - discount)
+        };
+        self.value / mass
+    }
+}
+
+/// Policy: one fixed acquisition function.
+pub struct SinglePolicy {
+    pub acq: Acq,
+}
+
+impl AcqPolicy for SinglePolicy {
+    fn choose(&mut self, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize> {
+        argmin_score(self.acq, mu, var, f_best, lambda, masked)
+    }
+
+    fn observe(&mut self, _y: Option<f64>, _valid: &[f64]) {}
+
+    fn active(&self) -> Vec<Acq> {
+        vec![self.acq]
+    }
+}
+
+/// The `multi` acquisition function: skips AFs that repeatedly suggest the
+/// same candidates as another AF; ties are broken by the discounted
+/// observation score of each AF's own evaluations.
+pub struct MultiPolicy {
+    order: Vec<Acq>,
+    active: Vec<bool>,
+    dup_counts: Vec<usize>,
+    dos: Vec<Dos>,
+    rr: usize,
+    last_chooser: Option<usize>,
+    skip_threshold: usize,
+    discount: f64,
+}
+
+impl MultiPolicy {
+    pub fn new(cfg: &BoConfig) -> MultiPolicy {
+        let order: Vec<Acq> = cfg.af_order.to_vec();
+        let k = order.len();
+        MultiPolicy {
+            order,
+            active: vec![true; k],
+            dup_counts: vec![0; k],
+            dos: vec![Dos::default(); k],
+            rr: 0,
+            last_chooser: None,
+            skip_threshold: cfg.skip_threshold,
+            discount: cfg.discount,
+        }
+    }
+
+    fn next_active(&mut self) -> Option<usize> {
+        let k = self.order.len();
+        for _ in 0..k {
+            let i = self.rr % k;
+            self.rr += 1;
+            if self.active[i] {
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+impl AcqPolicy for MultiPolicy {
+    fn choose(&mut self, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize> {
+        // Shared predictions: compute every active AF's suggestion (cheap —
+        // the expensive part, the posterior, is already done). Duplicate
+        // suggestions increment the involved AFs' conflict counters.
+        let suggestions: Vec<Option<usize>> = self
+            .order
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                if self.active[i] {
+                    argmin_score(a, mu, var, f_best, lambda, masked)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        for i in 0..suggestions.len() {
+            for j in i + 1..suggestions.len() {
+                if let (Some(si), Some(sj)) = (suggestions[i], suggestions[j]) {
+                    if si == sj {
+                        self.dup_counts[i] += 1;
+                        self.dup_counts[j] += 1;
+                    }
+                }
+            }
+        }
+        // Conflict resolution: among AFs over the threshold, keep the one
+        // with the best (lowest) discounted observation score.
+        let over: Vec<usize> = (0..self.order.len())
+            .filter(|&i| self.active[i] && self.dup_counts[i] > self.skip_threshold)
+            .collect();
+        if over.len() > 1 {
+            let keep = *over
+                .iter()
+                .min_by(|&&a, &&b| {
+                    self.dos[a]
+                        .normalized(self.discount)
+                        .partial_cmp(&self.dos[b].normalized(self.discount))
+                        .unwrap()
+                })
+                .unwrap();
+            for &i in &over {
+                if i != keep {
+                    self.active[i] = false;
+                }
+            }
+            for c in self.dup_counts.iter_mut() {
+                *c = 0;
+            }
+        }
+
+        let chooser = self.next_active()?;
+        self.last_chooser = Some(chooser);
+        suggestions[chooser].or_else(|| {
+            // The chooser had no suggestion (fully masked): fall back to
+            // any other active AF's suggestion.
+            suggestions.iter().flatten().next().copied()
+        })
+    }
+
+    fn observe(&mut self, y: Option<f64>, _valid: &[f64]) {
+        if let (Some(c), Some(v)) = (self.last_chooser, y) {
+            self.dos[c].push(v, self.discount);
+        }
+    }
+
+    fn active(&self) -> Vec<Acq> {
+        self.order
+            .iter()
+            .zip(&self.active)
+            .filter(|(_, a)| **a)
+            .map(|(q, _)| *q)
+            .collect()
+    }
+}
+
+/// The `advanced multi` acquisition function: judges AFs directly by their
+/// discounted observation scores. An AF scoring worse than
+/// (1 + improvement_factor)·mean for `skip_threshold` consecutive strikes
+/// is dropped (and the others' strikes reset); one scoring better than
+/// (1 − improvement_factor)·mean as often is promoted to sole AF.
+pub struct AdvancedMultiPolicy {
+    order: Vec<Acq>,
+    active: Vec<bool>,
+    dos: Vec<Dos>,
+    bad_strikes: Vec<usize>,
+    good_strikes: Vec<usize>,
+    rr: usize,
+    last_chooser: Option<usize>,
+    skip_threshold: usize,
+    improvement_factor: f64,
+    discount: f64,
+}
+
+impl AdvancedMultiPolicy {
+    pub fn new(cfg: &BoConfig) -> AdvancedMultiPolicy {
+        let order: Vec<Acq> = cfg.af_order.to_vec();
+        let k = order.len();
+        AdvancedMultiPolicy {
+            order,
+            active: vec![true; k],
+            dos: vec![Dos::default(); k],
+            bad_strikes: vec![0; k],
+            good_strikes: vec![0; k],
+            rr: 0,
+            last_chooser: None,
+            skip_threshold: cfg.skip_threshold,
+            improvement_factor: cfg.improvement_factor,
+            discount: cfg.discount,
+        }
+    }
+
+    fn n_active(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
+    }
+}
+
+impl AcqPolicy for AdvancedMultiPolicy {
+    fn choose(&mut self, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize> {
+        let k = self.order.len();
+        let mut chooser = None;
+        for _ in 0..k {
+            let i = self.rr % k;
+            self.rr += 1;
+            if self.active[i] {
+                chooser = Some(i);
+                break;
+            }
+        }
+        let chooser = chooser?;
+        self.last_chooser = Some(chooser);
+        argmin_score(self.order[chooser], mu, var, f_best, lambda, masked)
+    }
+
+    fn observe(&mut self, y: Option<f64>, valid_so_far: &[f64]) {
+        let Some(c) = self.last_chooser else { return };
+        // Invalid observations are imputed with the median of the valid
+        // observations, to avoid skewing the score (§III-G).
+        let obs = y.unwrap_or_else(|| median(valid_so_far));
+        if !obs.is_finite() {
+            return; // no valid observations yet to impute from
+        }
+        self.dos[c].push(obs, self.discount);
+
+        // Judge the chooser against the mean of active AFs' scores, once
+        // every active AF has a score.
+        let scores: Vec<(usize, f64)> = (0..self.order.len())
+            .filter(|&i| self.active[i] && self.dos[i].count() > 0)
+            .map(|i| (i, self.dos[i].normalized(self.discount)))
+            .collect();
+        if scores.len() < self.n_active() || scores.len() < 2 {
+            return;
+        }
+        let mean: f64 = scores.iter().map(|(_, s)| s).sum::<f64>() / scores.len() as f64;
+        let own = self.dos[c].normalized(self.discount);
+        if own > mean * (1.0 + self.improvement_factor) {
+            self.bad_strikes[c] += 1;
+            if self.bad_strikes[c] >= self.skip_threshold && self.n_active() > 1 {
+                self.active[c] = false;
+                for i in 0..self.order.len() {
+                    self.bad_strikes[i] = 0;
+                    self.good_strikes[i] = 0;
+                }
+            }
+        } else if own < mean * (1.0 - self.improvement_factor) {
+            self.good_strikes[c] += 1;
+            if self.good_strikes[c] >= self.skip_threshold {
+                for i in 0..self.order.len() {
+                    self.active[i] = i == c;
+                }
+            }
+        } else {
+            self.bad_strikes[c] = 0;
+            self.good_strikes[c] = 0;
+        }
+    }
+
+    fn active(&self) -> Vec<Acq> {
+        self.order
+            .iter()
+            .zip(&self.active)
+            .filter(|(_, a)| **a)
+            .map(|(q, _)| *q)
+            .collect()
+    }
+}
+
+/// Build the policy described by a config.
+pub fn make_policy(cfg: &BoConfig) -> Box<dyn AcqPolicy> {
+    match cfg.acq {
+        crate::bo::config::AcqPolicyKind::Single(a) => Box::new(SinglePolicy { acq: a }),
+        crate::bo::config::AcqPolicyKind::Multi => Box::new(MultiPolicy::new(cfg)),
+        crate::bo::config::AcqPolicyKind::AdvancedMulti => Box::new(AdvancedMultiPolicy::new(cfg)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BoConfig {
+        BoConfig::multi()
+    }
+
+    #[test]
+    fn dos_discounts_recent_more() {
+        let mut d = Dos::default();
+        d.push(10.0, 0.5);
+        d.push(2.0, 0.5);
+        // dos = 10·0.5 + 2 = 7; mass = 1.5 → normalized ≈ 4.67 (closer to
+        // the recent 2 than the plain mean 6 would be... well, weighted).
+        assert!((d.value() - 7.0).abs() < 1e-12);
+        assert!((d.normalized(0.5) - 7.0 / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_policy_tracks_argmin() {
+        let mut p = SinglePolicy { acq: Acq::Lcb };
+        let mu = [1.0, 0.2, 0.9];
+        let var = [0.1, 0.1, 0.1];
+        let pick = p.choose(&mu, &var, 1.0, 0.0, &[false, false, false]).unwrap();
+        assert_eq!(pick, 1);
+        assert_eq!(p.active(), vec![Acq::Lcb]);
+    }
+
+    #[test]
+    fn multi_skips_duplicating_afs() {
+        let mut p = MultiPolicy::new(&cfg());
+        // Degenerate posterior where all AFs agree on candidate 0 forever:
+        // after enough rounds only one AF must remain active.
+        let mu = [0.0, 5.0, 5.0];
+        let var = [1.0, 0.01, 0.01];
+        for step in 0..30 {
+            let pick = p.choose(&mu, &var, 1.0, 0.1, &[false, false, false]).unwrap();
+            assert_eq!(pick, 0);
+            p.observe(Some(1.0 + step as f64 * 0.01), &[1.0]);
+        }
+        assert_eq!(p.active().len(), 1, "duplicating AFs must be skipped");
+    }
+
+    #[test]
+    fn multi_round_robins_while_disagreeing() {
+        let mut p = MultiPolicy::new(&cfg());
+        // POI prefers the near-certain tiny improvement (candidate 0);
+        // EI and LCB prefer the larger expected improvement (candidate 1).
+        let mu = [0.45, 0.2];
+        let var = [0.0001, 0.0625];
+        let picks: Vec<usize> = (0..5)
+            .map(|_| {
+                let c = p.choose(&mu, &var, 0.5, 0.0, &[false, false]).unwrap();
+                p.observe(Some(1.0), &[1.0]);
+                c
+            })
+            .collect();
+        let distinct: std::collections::HashSet<_> = picks.iter().collect();
+        assert!(distinct.len() >= 2, "disagreeing AFs must alternate: {picks:?}");
+        assert!(p.active().len() >= 2);
+    }
+
+    #[test]
+    fn advanced_multi_promotes_consistent_winner() {
+        let c = BoConfig::advanced_multi();
+        let mut p = AdvancedMultiPolicy::new(&c);
+        let mu = [0.0, 2.0, 3.0];
+        let var = [0.01, 0.01, 9.0];
+        // Feed: whenever the chooser is EI (round-robin position 0) give an
+        // excellent observation; others get poor ones.
+        for step in 0..60 {
+            if p.active().len() == 1 {
+                break;
+            }
+            let _ = p.choose(&mu, &var, 0.5, 1.0, &[false, false, false]);
+            let is_ei_turn = step % p.order.len() == 0; // approximation of rr
+            p.observe(Some(if is_ei_turn { 1.0 } else { 10.0 }), &[1.0]);
+        }
+        assert_eq!(p.active().len(), 1, "a consistently better AF must be promoted");
+    }
+
+    #[test]
+    fn advanced_multi_imputes_invalid_with_median() {
+        let c = BoConfig::advanced_multi();
+        let mut p = AdvancedMultiPolicy::new(&c);
+        let mu = [0.0];
+        let var = [1.0];
+        let _ = p.choose(&mu, &var, 0.5, 0.1, &[false]);
+        p.observe(None, &[2.0, 4.0, 6.0]); // median 4.0
+        assert!((p.dos[0].value() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_factory_dispatch() {
+        assert_eq!(make_policy(&BoConfig::single(Acq::Ei)).active(), vec![Acq::Ei]);
+        assert_eq!(make_policy(&BoConfig::multi()).active().len(), 3);
+        assert_eq!(make_policy(&BoConfig::advanced_multi()).active().len(), 3);
+    }
+}

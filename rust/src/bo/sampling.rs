@@ -1,0 +1,185 @@
+//! Initial sampling (§III-E): Latin Hypercube Sampling over the normalized
+//! unit cube, snapped to the nearest not-yet-chosen configuration, with a
+//! maximin variant (best of k LHS draws by minimum pairwise distance —
+//! Table I's tuned default). Invalid draws are replaced by random samples
+//! (the paper's combination that "avoids a skewed initial sample").
+
+use crate::space::SearchSpace;
+use crate::util::rng::Rng;
+
+/// One Latin Hypercube Sample: `n` points in [0,1]^dims, one per stratum
+/// per dimension.
+pub fn lhs_points(n: usize, dims: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut out = vec![0.0; n * dims];
+    let mut perm: Vec<usize> = (0..n).collect();
+    for d in 0..dims {
+        rng.shuffle(&mut perm);
+        for (i, &p) in perm.iter().enumerate() {
+            out[i * dims + d] = (p as f64 + rng.f64()) / n as f64;
+        }
+    }
+    out
+}
+
+/// Minimum pairwise distance of a point set (maximin criterion).
+pub fn min_pairwise_dist(points: &[f64], dims: usize) -> f64 {
+    let n = points.len() / dims;
+    let mut best = f64::INFINITY;
+    for i in 0..n {
+        for j in i + 1..n {
+            let d: f64 = (0..dims)
+                .map(|k| {
+                    let diff = points[i * dims + k] - points[j * dims + k];
+                    diff * diff
+                })
+                .sum();
+            best = best.min(d);
+        }
+    }
+    best.sqrt()
+}
+
+/// Maximin LHS: best of `k` LHS draws by minimum pairwise distance.
+pub fn maximin_lhs_points(n: usize, dims: usize, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut best: Option<(f64, Vec<f64>)> = None;
+    for _ in 0..k.max(1) {
+        let pts = lhs_points(n, dims, rng);
+        let score = min_pairwise_dist(&pts, dims);
+        if best.as_ref().map_or(true, |(s, _)| score > *s) {
+            best = Some((score, pts));
+        }
+    }
+    best.unwrap().1
+}
+
+/// Snap continuous points to distinct configurations: for each point, the
+/// nearest configuration (normalized coords) not yet taken.
+pub fn snap_to_configs(points: &[f64], space: &SearchSpace, taken: &mut Vec<bool>) -> Vec<usize> {
+    let dims = space.dims();
+    let n = points.len() / dims;
+    let all = space.points();
+    let mut out = Vec::with_capacity(n);
+    for p in points.chunks_exact(dims) {
+        let mut best: Option<(usize, f64)> = None;
+        for idx in 0..space.len() {
+            if taken[idx] {
+                continue;
+            }
+            let q = &all[idx * dims..(idx + 1) * dims];
+            let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((idx, d));
+            }
+        }
+        if let Some((idx, _)) = best {
+            taken[idx] = true;
+            out.push(idx);
+        }
+    }
+    out
+}
+
+/// A random not-yet-taken configuration (replacement sampling for invalid
+/// draws). Returns `None` when the space is exhausted.
+pub fn random_untaken(_space: &SearchSpace, taken: &mut [bool], rng: &mut Rng) -> Option<usize> {
+    let remaining = taken.iter().filter(|t| !**t).count();
+    if remaining == 0 {
+        return None;
+    }
+    // Rejection sampling is fast while the space is mostly untaken; fall
+    // back to an indexed draw when it gets crowded.
+    if remaining * 4 > taken.len() {
+        loop {
+            let i = rng.below(taken.len());
+            if !taken[i] {
+                taken[i] = true;
+                return Some(i);
+            }
+        }
+    }
+    let k = rng.below(remaining);
+    let idx = taken
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| !**t)
+        .nth(k)
+        .map(|(i, _)| i)
+        .expect("counted above");
+    taken[idx] = true;
+    Some(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Param;
+
+    fn space() -> SearchSpace {
+        SearchSpace::build(
+            "toy",
+            vec![
+                Param::ints("a", &(0..20).collect::<Vec<_>>()),
+                Param::ints("b", &(0..20).collect::<Vec<_>>()),
+            ],
+            &[],
+        )
+    }
+
+    #[test]
+    fn lhs_stratifies_each_dimension() {
+        let mut rng = Rng::new(1);
+        let n = 10;
+        let pts = lhs_points(n, 3, &mut rng);
+        for d in 0..3 {
+            let mut strata = vec![false; n];
+            for i in 0..n {
+                let s = (pts[i * 3 + d] * n as f64) as usize;
+                strata[s.min(n - 1)] = true;
+            }
+            assert!(strata.iter().all(|&s| s), "dimension {d} misses a stratum");
+        }
+    }
+
+    #[test]
+    fn maximin_at_least_as_spread_as_single_draw() {
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        let single = lhs_points(8, 2, &mut r1);
+        let multi = maximin_lhs_points(8, 2, 20, &mut r2);
+        assert!(min_pairwise_dist(&multi, 2) >= min_pairwise_dist(&single, 2) - 1e-12);
+    }
+
+    #[test]
+    fn snap_gives_distinct_configs() {
+        let s = space();
+        let mut rng = Rng::new(3);
+        let pts = lhs_points(20, 2, &mut rng);
+        let mut taken = vec![false; s.len()];
+        let idxs = snap_to_configs(&pts, &s, &mut taken);
+        assert_eq!(idxs.len(), 20);
+        let set: std::collections::HashSet<_> = idxs.iter().collect();
+        assert_eq!(set.len(), 20, "snapped configs must be distinct");
+    }
+
+    #[test]
+    fn snap_prefers_nearby() {
+        let s = space();
+        let mut taken = vec![false; s.len()];
+        // A point at the origin snaps to config (0,0).
+        let idxs = snap_to_configs(&[0.0, 0.0], &s, &mut taken);
+        assert_eq!(s.config(idxs[0]), &vec![0u16, 0]);
+    }
+
+    #[test]
+    fn random_untaken_exhausts() {
+        let s = SearchSpace::build("tiny", vec![Param::ints("a", &[1, 2, 3])], &[]);
+        let mut taken = vec![false; s.len()];
+        let mut rng = Rng::new(4);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            seen.insert(random_untaken(&s, &mut taken, &mut rng).unwrap());
+        }
+        assert_eq!(seen.len(), 3);
+        assert!(random_untaken(&s, &mut taken, &mut rng).is_none());
+    }
+}

@@ -1,0 +1,153 @@
+//! Covariance (kernel) functions for the GP surrogate (§III-B).
+//!
+//! The paper selects the Matérn family with *fixed* lengthscale — rough
+//! discrete landscapes break the usual marginal-likelihood lengthscale
+//! fitting (the lengthscale collapses to the least smooth region), so the
+//! hyperparameter table fixes ν=3/2 with l=2.0 (l=1.5 when the contextual
+//! variance exploration factor is active). RBF and Rational Quadratic are
+//! implemented for the ablation benches.
+
+/// A stationary covariance function k(r) over Euclidean distance r.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CovFn {
+    /// Matérn ν=3/2: (1 + √3 r/l)·exp(−√3 r/l) — rough, once-differentiable.
+    Matern32 { lengthscale: f64 },
+    /// Matérn ν=5/2: (1 + √5 r/l + 5r²/3l²)·exp(−√5 r/l).
+    Matern52 { lengthscale: f64 },
+    /// Squared exponential.
+    Rbf { lengthscale: f64 },
+    /// Scale mixture of RBFs.
+    RationalQuadratic { lengthscale: f64, alpha: f64 },
+}
+
+impl CovFn {
+    /// Covariance at distance r (unit signal variance).
+    #[inline]
+    pub fn eval(&self, r: f64) -> f64 {
+        debug_assert!(r >= 0.0);
+        match *self {
+            CovFn::Matern32 { lengthscale } => {
+                let s = 3f64.sqrt() * r / lengthscale;
+                (1.0 + s) * (-s).exp()
+            }
+            CovFn::Matern52 { lengthscale } => {
+                let s = 5f64.sqrt() * r / lengthscale;
+                (1.0 + s + s * s / 3.0) * (-s).exp()
+            }
+            CovFn::Rbf { lengthscale } => (-0.5 * (r / lengthscale) * (r / lengthscale)).exp(),
+            CovFn::RationalQuadratic { lengthscale, alpha } => {
+                (1.0 + r * r / (2.0 * alpha * lengthscale * lengthscale)).powf(-alpha)
+            }
+        }
+    }
+
+    pub fn lengthscale(&self) -> f64 {
+        match *self {
+            CovFn::Matern32 { lengthscale }
+            | CovFn::Matern52 { lengthscale }
+            | CovFn::Rbf { lengthscale }
+            | CovFn::RationalQuadratic { lengthscale, .. } => lengthscale,
+        }
+    }
+
+    /// Short name for configs/CLI; parsed by `parse`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CovFn::Matern32 { .. } => "matern32",
+            CovFn::Matern52 { .. } => "matern52",
+            CovFn::Rbf { .. } => "rbf",
+            CovFn::RationalQuadratic { .. } => "rq",
+        }
+    }
+
+    pub fn parse(name: &str, lengthscale: f64) -> Option<CovFn> {
+        match name {
+            "matern32" => Some(CovFn::Matern32 { lengthscale }),
+            "matern52" => Some(CovFn::Matern52 { lengthscale }),
+            "rbf" => Some(CovFn::Rbf { lengthscale }),
+            "rq" => Some(CovFn::RationalQuadratic { lengthscale, alpha: 1.0 }),
+            _ => None,
+        }
+    }
+}
+
+/// Euclidean distance between two points.
+#[inline]
+pub fn dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const COVS: [CovFn; 4] = [
+        CovFn::Matern32 { lengthscale: 2.0 },
+        CovFn::Matern52 { lengthscale: 0.8 },
+        CovFn::Rbf { lengthscale: 1.0 },
+        CovFn::RationalQuadratic { lengthscale: 1.0, alpha: 1.0 },
+    ];
+
+    #[test]
+    fn unit_at_zero_distance() {
+        for c in COVS {
+            assert!((c.eval(0.0) - 1.0).abs() < 1e-12, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        for c in COVS {
+            let mut prev = c.eval(0.0);
+            for i in 1..50 {
+                let v = c.eval(i as f64 * 0.1);
+                assert!(v < prev + 1e-15, "{c:?} not decreasing at r={}", i as f64 * 0.1);
+                assert!(v > 0.0);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn matern32_matches_closed_form() {
+        // k(r) = (1 + √3 r/l) exp(−√3 r/l), l = 2, r = 1.
+        let c = CovFn::Matern32 { lengthscale: 2.0 };
+        let s = 3f64.sqrt() / 2.0;
+        assert!((c.eval(1.0) - (1.0 + s) * (-s).exp()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn matern52_smoother_than_matern32() {
+        // At small r, ν=5/2 stays closer to 1 (smoother process).
+        let m32 = CovFn::Matern32 { lengthscale: 1.0 };
+        let m52 = CovFn::Matern52 { lengthscale: 1.0 };
+        assert!(m52.eval(0.1) > m32.eval(0.1));
+    }
+
+    #[test]
+    fn longer_lengthscale_is_smoother() {
+        let short = CovFn::Matern32 { lengthscale: 0.5 };
+        let long = CovFn::Matern32 { lengthscale: 3.0 };
+        assert!(long.eval(1.0) > short.eval(1.0));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for c in COVS {
+            let p = CovFn::parse(c.name(), c.lengthscale()).unwrap();
+            assert_eq!(p.name(), c.name());
+        }
+        assert!(CovFn::parse("periodic", 1.0).is_none());
+    }
+
+    #[test]
+    fn dist_euclidean() {
+        assert!((dist(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(dist(&[1.0], &[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Gaussian-process regression (the surrogate model, §III-B).
+//!
+//! Equivalent math to scikit-learn's `GaussianProcessRegressor` as the
+//! paper uses it: zero-mean prior after centering the observations,
+//! jittered Cholesky factorization of K + σ²I, posterior mean via α =
+//! K⁻¹y, posterior variance via triangular solves. Lengthscales are fixed
+//! (never optimized) per the paper's design.
+
+use crate::gp::cov::{dist, CovFn};
+use crate::util::linalg::{cho_solve, cholesky, mean, solve_lower, Mat};
+
+/// Fitted GP model over row-major points (`n × dims`).
+pub struct Gpr {
+    pub cov: CovFn,
+    pub noise: f64,
+    dims: usize,
+    x: Vec<f64>,
+    n: usize,
+    y_mean: f64,
+    l: Mat,
+    alpha: Vec<f64>,
+}
+
+impl Gpr {
+    /// Fit on `n` training points `x` (row-major, `n*dims` long) with
+    /// observations `y`.
+    pub fn fit(cov: CovFn, noise: f64, x: &[f64], dims: usize, y: &[f64]) -> Result<Gpr, String> {
+        let n = y.len();
+        assert_eq!(x.len(), n * dims, "x shape mismatch");
+        assert!(n > 0, "cannot fit GP on zero observations");
+        let y_mean = mean(y);
+        let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            k[(i, i)] = 1.0 + noise;
+            for j in 0..i {
+                let v = cov.eval(dist(&x[i * dims..(i + 1) * dims], &x[j * dims..(j + 1) * dims]));
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        let l = cholesky(&k, 1e-10)?;
+        let alpha = cho_solve(&l, &yc);
+        Ok(Gpr { cov, noise, dims, x: x.to_vec(), n, y_mean, l, alpha })
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.n
+    }
+
+    /// Posterior mean and variance at one point.
+    pub fn predict_one(&self, p: &[f64]) -> (f64, f64) {
+        let mut mu = [0.0];
+        let mut var = [0.0];
+        self.predict_into(p, &mut mu, &mut var);
+        (mu[0], var[0])
+    }
+
+    /// Posterior mean and variance at `points` (row-major `m × dims`),
+    /// written into the provided buffers. This is the optimizer's hot
+    /// path: exhaustive prediction over every non-evaluated configuration
+    /// (§III-G — "we exhaustively predict every discrete point in the
+    /// model").
+    pub fn predict_into(&self, points: &[f64], mu: &mut [f64], var: &mut [f64]) {
+        let d = self.dims;
+        let m = points.len() / d;
+        assert_eq!(points.len(), m * d);
+        assert!(mu.len() >= m && var.len() >= m);
+        let mut ks = vec![0.0; self.n];
+        for (pi, p) in points.chunks_exact(d).enumerate() {
+            for (j, xj) in self.x.chunks_exact(d).enumerate() {
+                ks[j] = self.cov.eval(dist(p, xj));
+            }
+            // mean = k*ᵀ α  (+ y mean added back)
+            let m_c: f64 = ks.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+            // var = k(0) − ‖L⁻¹ k*‖²
+            let v = solve_lower(&self.l, &ks);
+            let reduction: f64 = v.iter().map(|x| x * x).sum();
+            mu[pi] = m_c + self.y_mean;
+            var[pi] = (1.0 - reduction).max(1e-12);
+        }
+    }
+
+    /// Convenience allocation wrapper.
+    pub fn predict(&self, points: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let m = points.len() / self.dims;
+        let mut mu = vec![0.0; m];
+        let mut var = vec![0.0; m];
+        self.predict_into(points, &mut mu, &mut var);
+        (mu, var)
+    }
+}
+
+/// One-shot fit+predict interface shared by the native GP and the
+/// XLA-compiled GP artifact (`runtime::XlaSurrogate`). One call per BO
+/// iteration: fit on all observations, predict over all candidates.
+pub trait Surrogate: Send {
+    /// Fit on `(x, y)` (row-major `n×dims`) and predict into `mu`/`var`
+    /// over `cand` (row-major `m×dims`).
+    #[allow(clippy::too_many_arguments)]
+    fn fit_predict(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        dims: usize,
+        cand: &[f64],
+        mu: &mut [f64],
+        var: &mut [f64],
+    ) -> Result<(), String>;
+
+    /// Human-readable backend name (for the perf benches).
+    fn backend(&self) -> &'static str;
+}
+
+/// Pure-Rust surrogate backend.
+pub struct NativeSurrogate {
+    pub cov: CovFn,
+    pub noise: f64,
+}
+
+impl NativeSurrogate {
+    pub fn new(cov: CovFn, noise: f64) -> Self {
+        NativeSurrogate { cov, noise }
+    }
+}
+
+impl Surrogate for NativeSurrogate {
+    fn fit_predict(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        dims: usize,
+        cand: &[f64],
+        mu: &mut [f64],
+        var: &mut [f64],
+    ) -> Result<(), String> {
+        let gpr = Gpr::fit(self.cov, self.noise, x, dims, y)?;
+        gpr.predict_into(cand, mu, var);
+        Ok(())
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cov() -> CovFn {
+        CovFn::Matern32 { lengthscale: 1.0 }
+    }
+
+    #[test]
+    fn interpolates_training_points_with_small_noise() {
+        let x = vec![0.0, 0.25, 0.5, 0.75, 1.0];
+        let y: Vec<f64> = x.iter().map(|v: &f64| (v * 6.0).sin()).collect();
+        let gp = Gpr::fit(cov(), 1e-8, &x, 1, &y).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            let (m, v) = gp.predict_one(&[*xi]);
+            assert!((m - yi).abs() < 1e-4, "mean at train point: {m} vs {yi}");
+            assert!(v < 1e-4, "variance at train point: {v}");
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let x = vec![0.4, 0.5, 0.6];
+        let y = vec![1.0, 0.5, 1.0];
+        let gp = Gpr::fit(cov(), 1e-6, &x, 1, &y).unwrap();
+        let (_, v_near) = gp.predict_one(&[0.5]);
+        let (_, v_far) = gp.predict_one(&[3.0]);
+        assert!(v_far > v_near * 10.0);
+        // Far from data, the prediction reverts to the observation mean.
+        let (m_far, _) = gp.predict_one(&[50.0]);
+        assert!((m_far - (1.0 + 0.5 + 1.0) / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multidim_fit_predict() {
+        let mut rng = Rng::new(5);
+        let dims = 4;
+        let n = 30;
+        let x: Vec<f64> = (0..n * dims).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = x.chunks(dims).map(|p| p.iter().sum::<f64>()).collect();
+        let gp = Gpr::fit(cov(), 1e-6, &x, dims, &y).unwrap();
+        // Predict at a held-out point near training data: error bounded.
+        let p = [0.5, 0.5, 0.5, 0.5];
+        let (m, _) = gp.predict_one(&p);
+        assert!((m - 2.0).abs() < 0.5, "mean {m}");
+    }
+
+    #[test]
+    fn predict_into_matches_predict() {
+        let x = vec![0.0, 0.5, 1.0];
+        let y = vec![0.0, 1.0, 0.0];
+        let gp = Gpr::fit(cov(), 1e-6, &x, 1, &y).unwrap();
+        let pts: Vec<f64> = (0..11).map(|i| i as f64 / 10.0).collect();
+        let (mu, var) = gp.predict(&pts);
+        let mut mu2 = vec![0.0; 11];
+        let mut var2 = vec![0.0; 11];
+        gp.predict_into(&pts, &mut mu2, &mut var2);
+        assert_eq!(mu, mu2);
+        assert_eq!(var, var2);
+    }
+
+    #[test]
+    fn native_surrogate_trait_roundtrip() {
+        let mut s = NativeSurrogate::new(cov(), 1e-6);
+        let x = vec![0.0, 1.0];
+        let y = vec![2.0, 4.0];
+        let cand = vec![0.5];
+        let mut mu = vec![0.0];
+        let mut var = vec![0.0];
+        s.fit_predict(&x, &y, 1, &cand, &mut mu, &mut var).unwrap();
+        assert!(mu[0] > 2.0 && mu[0] < 4.0);
+        assert!(var[0] > 0.0);
+        assert_eq!(s.backend(), "native");
+    }
+
+    #[test]
+    fn duplicate_points_need_jitter_and_survive() {
+        // Two identical training points make K singular without jitter.
+        let x = vec![0.5, 0.5];
+        let y = vec![1.0, 1.2];
+        let gp = Gpr::fit(cov(), 1e-10, &x, 1, &y).unwrap();
+        let (m, _) = gp.predict_one(&[0.5]);
+        assert!((m - 1.1).abs() < 0.2);
+    }
+
+    #[test]
+    fn variance_never_negative() {
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..40).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let gp = Gpr::fit(cov(), 1e-6, &x, 1, &y).unwrap();
+        let pts: Vec<f64> = (0..1000).map(|i| i as f64 / 999.0).collect();
+        let (_, var) = gp.predict(&pts);
+        assert!(var.iter().all(|&v| v > 0.0));
+    }
+}

@@ -1,0 +1,225 @@
+//! Incrementally updated GP posterior over a *fixed* candidate set.
+//!
+//! The paper's method predicts the posterior exhaustively over every
+//! non-evaluated configuration at every iteration (§III-G). A naive refit
+//! costs O(n²·m) per iteration (n observations, m configurations: a
+//! triangular solve per candidate). Because BO only ever *appends*
+//! observations, we maintain the Cholesky factor L and the solved
+//! cross-covariance block V = L⁻¹·K(X, C) incrementally:
+//!
+//! - appending observation x adds one row to L (O(n²)) and one row to V
+//!   (O(n·m)),
+//! - posterior variance over all candidates is 1 − colsum(V²), maintained
+//!   as a running accumulator (O(m) per append),
+//! - posterior mean is Vᵀ·(L⁻¹ y_c), O(n·m) per query (y re-centering
+//!   changes every iteration, so the mean is recomputed per query).
+//!
+//! Same math as `Gpr`, ~n× faster per BO iteration; `Gpr` remains the
+//! reference implementation and the tests cross-check the two.
+
+use crate::gp::cov::{dist, CovFn};
+
+pub struct IncrementalGp {
+    cov: CovFn,
+    noise: f64,
+    dims: usize,
+    /// Candidate matrix (row-major m×dims) — typically the whole space.
+    cand: Vec<f64>,
+    m: usize,
+    /// Training points appended so far (row-major n×dims).
+    x: Vec<f64>,
+    /// Rows of the lower-triangular Cholesky factor (row i has i+1 entries).
+    l: Vec<Vec<f64>>,
+    /// Rows of V = L⁻¹ K(X, C), each of length m. Stored in f32: the
+    /// predict pass is memory-bandwidth-bound over n·m elements, and
+    /// halving the traffic buys ~1.7× (EXPERIMENTS.md §Perf); the ~1e-7
+    /// relative rounding is far below the GP's own noise floor.
+    v: Vec<Vec<f32>>,
+    /// Running Σᵢ V[i][j]² per candidate j.
+    sq: Vec<f64>,
+}
+
+impl IncrementalGp {
+    pub fn new(cov: CovFn, noise: f64, cand: Vec<f64>, dims: usize) -> IncrementalGp {
+        assert!(dims > 0 && cand.len() % dims == 0);
+        let m = cand.len() / dims;
+        IncrementalGp { cov, noise, dims, cand, m, x: Vec::new(), l: Vec::new(), v: Vec::new(), sq: vec![0.0; m] }
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.l.len()
+    }
+
+    pub fn n_cand(&self) -> usize {
+        self.m
+    }
+
+    /// Append one training point (length = dims).
+    pub fn add(&mut self, point: &[f64]) {
+        assert_eq!(point.len(), self.dims);
+        let n = self.l.len();
+        // New row of L: forward-substitute k(x_new, x_i) through existing rows.
+        let mut lrow = Vec::with_capacity(n + 1);
+        for i in 0..n {
+            let k = self.cov.eval(dist(point, &self.x[i * self.dims..(i + 1) * self.dims]));
+            let s: f64 = (0..i).map(|r| lrow[r] * self.l[i][r]).sum();
+            lrow.push((k - s) / self.l[i][i]);
+        }
+        let diag2 = (1.0 + self.noise - lrow.iter().map(|v| v * v).sum::<f64>()).max(1e-10);
+        lrow.push(diag2.sqrt());
+
+        // New row of V: (k(x_new, c_j) − Σ_r lrow[r]·V[r][j]) / diag.
+        // All-f32 accumulation (see field comment): the subtraction chain
+        // is ≤ n ≈ 220 terms, √n·ε₃₂ ≈ 1e-6 — below the jitter floor.
+        let mut vrow = vec![0.0f32; self.m];
+        for (j, vj) in vrow.iter_mut().enumerate() {
+            *vj = self.cov.eval(dist(point, &self.cand[j * self.dims..(j + 1) * self.dims])) as f32;
+        }
+        for (r, lr) in lrow[..n].iter().enumerate() {
+            if *lr == 0.0 {
+                continue;
+            }
+            let lr32 = *lr as f32;
+            let vr = &self.v[r];
+            for (vj, vrj) in vrow.iter_mut().zip(vr) {
+                *vj -= lr32 * vrj;
+            }
+        }
+        let inv_diag = (1.0 / lrow[n]) as f32;
+        for (vj, sqj) in vrow.iter_mut().zip(self.sq.iter_mut()) {
+            *vj *= inv_diag;
+            *sqj += f64::from(*vj) * f64::from(*vj);
+        }
+
+        self.x.extend_from_slice(point);
+        self.l.push(lrow);
+        self.v.push(vrow);
+    }
+
+    /// Posterior mean and variance over all candidates given the raw
+    /// observations `y` (same order as `add` calls). Observations are
+    /// centered internally; outputs are in the units of `y`.
+    pub fn predict_into(&self, y: &[f64], mu: &mut [f64], var: &mut [f64]) {
+        let n = self.l.len();
+        assert_eq!(y.len(), n);
+        assert!(mu.len() >= self.m && var.len() >= self.m);
+        let y_mean = crate::util::linalg::mean(y);
+        // w = L⁻¹ (y − ȳ).
+        let mut w = vec![0.0; n];
+        for i in 0..n {
+            let s: f64 = (0..i).map(|r| self.l[i][r] * w[r]).sum();
+            w[i] = (y[i] - y_mean - s) / self.l[i][i];
+        }
+        // Accumulate the mean in f32 (8-lane SIMD, no widening in the
+        // inner loop); ~√n·ε₃₂ accumulation error ≪ GP noise floor.
+        let mut mu32 = vec![0.0f32; self.m];
+        for (r, wr) in w.iter().enumerate() {
+            if *wr == 0.0 {
+                continue;
+            }
+            let wr32 = *wr as f32;
+            let vr = &self.v[r];
+            for (mj, vrj) in mu32.iter_mut().zip(vr) {
+                *mj += wr32 * vrj;
+            }
+        }
+        for (mj, m32) in mu[..self.m].iter_mut().zip(&mu32) {
+            *mj = y_mean + f64::from(*m32);
+        }
+        for j in 0..self.m {
+            var[j] = (1.0 - self.sq[j]).max(1e-12);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::gpr::Gpr;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_batch_gpr() {
+        let mut rng = Rng::new(7);
+        let dims = 3;
+        let m = 50;
+        let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
+        let cov = CovFn::Matern32 { lengthscale: 1.5 };
+        let noise = 1e-6;
+        let mut inc = IncrementalGp::new(cov, noise, cand.clone(), dims);
+
+        let n = 25;
+        let x: Vec<f64> = (0..n * dims).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal() + 3.0).collect();
+        for i in 0..n {
+            inc.add(&x[i * dims..(i + 1) * dims]);
+        }
+        let mut mu_i = vec![0.0; m];
+        let mut var_i = vec![0.0; m];
+        inc.predict_into(&y, &mut mu_i, &mut var_i);
+
+        let gpr = Gpr::fit(cov, noise, &x, dims, &y).unwrap();
+        let (mu_b, var_b) = gpr.predict(&cand);
+        for j in 0..m {
+            assert!((mu_i[j] - mu_b[j]).abs() < 5e-4, "mu mismatch at {j}: {} vs {}", mu_i[j], mu_b[j]); // f32 V storage
+            assert!((var_i[j] - var_b[j]).abs() < 5e-4, "var mismatch at {j}");
+        }
+    }
+
+    #[test]
+    fn matches_batch_after_every_append() {
+        let mut rng = Rng::new(8);
+        let dims = 2;
+        let cand: Vec<f64> = (0..20 * dims).map(|_| rng.f64()).collect();
+        // Noise 1e-4 keeps K well-conditioned so the two algebraically
+        // identical paths stay within float round-off of each other.
+        let cov = CovFn::Matern52 { lengthscale: 0.8 };
+        let mut inc = IncrementalGp::new(cov, 1e-4, cand.clone(), dims);
+        let mut xs: Vec<f64> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for step in 0..12 {
+            let p = [rng.f64(), rng.f64()];
+            inc.add(&p);
+            xs.extend_from_slice(&p);
+            ys.push(rng.normal());
+            let mut mu = vec![0.0; 20];
+            let mut var = vec![0.0; 20];
+            inc.predict_into(&ys, &mut mu, &mut var);
+            let gpr = Gpr::fit(cov, 1e-4, &xs, dims, &ys).unwrap();
+            let (mu_b, var_b) = gpr.predict(&cand);
+            for j in 0..20 {
+                assert!(
+                    (mu[j] - mu_b[j]).abs() < 5e-4,
+                    "step {step} mu[{j}]: {} vs {}",
+                    mu[j],
+                    mu_b[j]
+                );
+                assert!((var[j] - var_b[j]).abs() < 5e-4, "step {step} var[{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn survives_duplicate_points() {
+        let cov = CovFn::Matern32 { lengthscale: 1.0 };
+        let mut inc = IncrementalGp::new(cov, 1e-8, vec![0.1, 0.9], 1);
+        inc.add(&[0.5]);
+        inc.add(&[0.5]); // duplicate → clamped diagonal, no NaN
+        let mut mu = vec![0.0; 2];
+        let mut var = vec![0.0; 2];
+        inc.predict_into(&[1.0, 1.2], &mut mu, &mut var);
+        assert!(mu.iter().all(|v| v.is_finite()));
+        assert!(var.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn prior_before_observations() {
+        let cov = CovFn::Rbf { lengthscale: 1.0 };
+        let inc = IncrementalGp::new(cov, 1e-6, vec![0.0, 0.5, 1.0], 1);
+        let mut mu = vec![9.0; 3];
+        let mut var = vec![9.0; 3];
+        inc.predict_into(&[], &mut mu, &mut var);
+        assert_eq!(mu, vec![0.0; 3]);
+        assert!(var.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+    }
+}

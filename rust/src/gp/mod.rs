@@ -1,0 +1,11 @@
+//! Gaussian-process substrate: covariance functions and regression
+//! (§III-B), plus the `Surrogate` backend abstraction shared by the
+//! pure-Rust implementation and the XLA-compiled artifact.
+
+pub mod cov;
+pub mod incremental;
+pub mod gpr;
+
+pub use cov::{dist, CovFn};
+pub use incremental::IncrementalGp;
+pub use gpr::{Gpr, NativeSurrogate, Surrogate};

@@ -1,0 +1,178 @@
+//! GPU device models for the three GPUs the paper evaluates on.
+//!
+//! Substitution note (DESIGN.md): the paper timed real kernels on real
+//! GPUs; this reproduction replaces execution with an analytical
+//! performance model. The device description carries exactly the resources
+//! that drive (a) occupancy, (b) resource-limit invalidity (the paper's
+//! compile-/run-time invalid configurations), and (c) roofline throughput.
+//! Numbers follow the public spec sheets cited in the paper ([49]–[51]).
+
+/// GPU architecture generation; drives a few model details (shared-memory
+/// bank width, transfer link generation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arch {
+    Maxwell,
+    Turing,
+    Ampere,
+}
+
+/// An analytical GPU device model.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub arch: Arch,
+    pub sm_count: usize,
+    pub cores_per_sm: usize,
+    pub clock_ghz: f64,
+    /// Programming-model limit on threads per block.
+    pub max_threads_per_block: usize,
+    pub max_threads_per_sm: usize,
+    pub max_blocks_per_sm: usize,
+    /// Static shared memory available to one block at compile time (bytes).
+    pub smem_per_block: usize,
+    /// Shared memory per SM available for occupancy (bytes).
+    pub smem_per_sm: usize,
+    /// Register file per SM (32-bit registers).
+    pub regfile_per_sm: usize,
+    /// Hardware cap on registers per thread.
+    pub max_regs_per_thread: usize,
+    /// DRAM bandwidth (GB/s).
+    pub dram_gbs: f64,
+    /// L2 cache size (KiB).
+    pub l2_kib: usize,
+    /// Host↔device transfer bandwidth (GB/s) — PCIe generation dependent.
+    pub pcie_gbs: f64,
+    /// fp64 throughput as a fraction of fp32.
+    pub fp64_ratio: f64,
+    /// Fixed kernel-launch overhead (ms).
+    pub launch_overhead_ms: f64,
+}
+
+impl Device {
+    /// Peak fp32 throughput in GFLOP/s (2 FLOPs per core per cycle: FMA).
+    pub fn peak_gflops(&self) -> f64 {
+        (self.sm_count * self.cores_per_sm) as f64 * self.clock_ghz * 2.0
+    }
+
+    pub fn peak_gflops_f64(&self) -> f64 {
+        self.peak_gflops() * self.fp64_ratio
+    }
+
+    /// NVIDIA GTX Titan X (Maxwell, 2015) — the paper's primary GPU [49].
+    pub fn gtx_titan_x() -> Device {
+        Device {
+            name: "GTX Titan X",
+            arch: Arch::Maxwell,
+            sm_count: 24,
+            cores_per_sm: 128,
+            clock_ghz: 1.075,
+            max_threads_per_block: 1024,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            smem_per_block: 48 * 1024,
+            smem_per_sm: 96 * 1024,
+            regfile_per_sm: 65536,
+            max_regs_per_thread: 255,
+            dram_gbs: 336.6,
+            l2_kib: 3072,
+            pcie_gbs: 6.0, // PCIe 3.0 x16 effective
+            fp64_ratio: 1.0 / 32.0,
+            launch_overhead_ms: 0.006,
+        }
+    }
+
+    /// NVIDIA RTX 2070 Super (Turing, 2019) [50].
+    pub fn rtx_2070_super() -> Device {
+        Device {
+            name: "RTX 2070 Super",
+            arch: Arch::Turing,
+            sm_count: 40,
+            cores_per_sm: 64,
+            clock_ghz: 1.770,
+            max_threads_per_block: 1024,
+            max_threads_per_sm: 1024,
+            max_blocks_per_sm: 16,
+            smem_per_block: 48 * 1024,
+            smem_per_sm: 64 * 1024,
+            regfile_per_sm: 65536,
+            max_regs_per_thread: 255,
+            dram_gbs: 448.0,
+            l2_kib: 4096,
+            pcie_gbs: 11.0,
+            fp64_ratio: 1.0 / 32.0,
+            launch_overhead_ms: 0.005,
+        }
+    }
+
+    /// NVIDIA A100 SXM4 40 GB (Ampere, 2020) [51].
+    pub fn a100() -> Device {
+        Device {
+            name: "A100",
+            arch: Arch::Ampere,
+            sm_count: 108,
+            cores_per_sm: 64,
+            clock_ghz: 1.410,
+            max_threads_per_block: 1024,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            smem_per_block: 48 * 1024,
+            smem_per_sm: 164 * 1024,
+            regfile_per_sm: 65536,
+            max_regs_per_thread: 255,
+            dram_gbs: 1555.0,
+            l2_kib: 40 * 1024,
+            // Effective host link in the paper's testbed: PnPoly's A100
+            // minimum (13.09 ms) is *worse* than the 2070 Super's (12.33),
+            // indicating a slower effective host↔device path than raw
+            // PCIe 4.0 (SXM4 board behind a PCIe switch).
+            pcie_gbs: 10.5,
+            fp64_ratio: 0.5,
+            launch_overhead_ms: 0.004,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name.to_ascii_lowercase().replace([' ', '-', '_'], "").as_str() {
+            "gtxtitanx" | "titanx" | "maxwell" => Some(Device::gtx_titan_x()),
+            "rtx2070super" | "2070super" | "2070s" | "turing" => Some(Device::rtx_2070_super()),
+            "a100" | "ampere" => Some(Device::a100()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<Device> {
+        vec![Device::gtx_titan_x(), Device::rtx_2070_super(), Device::a100()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_flops_match_spec_sheets() {
+        // Spec-sheet fp32 peaks: Titan X ≈ 6.6 TF, 2070S ≈ 9.06 TF, A100 ≈ 19.5 TF.
+        assert!((Device::gtx_titan_x().peak_gflops() - 6604.8).abs() < 10.0);
+        assert!((Device::rtx_2070_super().peak_gflops() - 9062.4).abs() < 10.0);
+        assert!((Device::a100().peak_gflops() - 19491.8).abs() < 20.0);
+    }
+
+    #[test]
+    fn a100_fp64_is_half_rate() {
+        let d = Device::a100();
+        assert!((d.peak_gflops_f64() / d.peak_gflops() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Device::by_name("A100").unwrap().name, "A100");
+        assert_eq!(Device::by_name("gtx-titan-x").unwrap().name, "GTX Titan X");
+        assert_eq!(Device::by_name("2070s").unwrap().name, "RTX 2070 Super");
+        assert!(Device::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn all_returns_three() {
+        assert_eq!(Device::all().len(), 3);
+    }
+}

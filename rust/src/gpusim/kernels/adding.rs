@@ -1,0 +1,155 @@
+//! Adding — the RTE-RRTMGP diffuse-radiation transport kernel of [56].
+//!
+//! The paper's second *unseen* kernel (§IV-E, A100): computes transport of
+//! diffuse radiation through a vertically layered atmosphere. Tunables:
+//! 2D thread-block dimensions, a partial unroll factor for the 140-iteration
+//! vertical loop, and a recompute-vs-store switch for a value produced in
+//! the first loop and consumed in the second. Small space (~4.7k configs),
+//! no invalid configurations.
+
+use crate::gpusim::device::Device;
+use crate::gpusim::kernels::KernelModel;
+use crate::gpusim::occupancy::Resources;
+use crate::gpusim::timing::WorkEstimate;
+use crate::space::{Assignment, Param, Restriction};
+
+/// Columns × gpoints of the atmosphere problem; 140 vertical layers.
+pub const COLS: usize = 2048;
+pub const GPOINTS: usize = 224;
+pub const LAYERS: usize = 140;
+
+#[derive(Default)]
+pub struct Adding;
+
+impl KernelModel for Adding {
+    fn name(&self) -> &'static str {
+        "adding"
+    }
+
+    fn id(&self) -> u64 {
+        0xadd1_4c
+    }
+
+    fn params(&self) -> Vec<Param> {
+        // Divisors of 140 as unroll factors (0 = let the compiler choose),
+        // matching the kernel's 140-iteration second loop.
+        vec![
+            Param::ints("block_size_x", &(2..=128).map(|i| i * 8).collect::<Vec<_>>()),
+            Param::ints("block_size_y", &[1, 2, 4, 7, 14, 28]),
+            Param::ints("loop_unroll_factor", &[0, 1, 2, 4, 5, 7, 10, 14, 20, 28, 35, 70, 140]),
+            Param::bools("recompute_denom"),
+        ]
+    }
+
+    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
+        vec![
+            Restriction::new("threads <= 1024", |a| a.i("block_size_x") * a.i("block_size_y") <= 1024),
+            Restriction::new("threads >= 32", |a| a.i("block_size_x") * a.i("block_size_y") >= 32),
+        ]
+    }
+
+    fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {
+        let (bsx, bsy) = (a.i("block_size_x") as usize, a.i("block_size_y") as usize);
+        let unroll = a.i("loop_unroll_factor") as usize;
+        // Unrolling the vertical loop inflates register use linearly but
+        // mildly; storing (not recomputing) the denominator costs a couple
+        // of registers of live state per layer chunk.
+        let regs = 32 + unroll.min(35) / 2 + if a.b("recompute_denom") { 0 } else { 6 };
+        Resources {
+            threads_per_block: bsx * bsy,
+            smem_bytes: 0,
+            regs_per_thread: regs.min(255),
+            grid_blocks: COLS.div_ceil(bsx) * GPOINTS.div_ceil(bsy),
+        }
+    }
+
+    fn work(&self, a: &Assignment, _dev: &Device) -> WorkEstimate {
+        let cells = (COLS * GPOINTS * LAYERS) as f64;
+        let recompute = a.b("recompute_denom");
+        // ~14 fp64 ops per cell per sweep; recomputing the denominator in
+        // the second loop adds ~4 ops but removes a store+load round trip.
+        let ops = if recompute { 18.0 } else { 14.0 };
+        let f64_flops = cells * ops;
+
+        // Layered state streamed per column: 6 fp64 fields up+down, plus
+        // the stored denominator when not recomputing.
+        let fields = if recompute { 6.0 } else { 8.0 };
+        let dram_bytes = cells * fields * 8.0;
+
+        let unroll = a.i("loop_unroll_factor");
+        let unroll_eff: f64 = match unroll {
+            0 => 0.9,
+            1 => 0.86,
+            2 => 0.92,
+            4 | 5 | 7 => 0.985,
+            10 | 14 | 20 => 1.0,
+            28 | 35 => 0.97,
+            _ => 0.9, // 70, 140: icache pressure
+        };
+        let bsx = a.f("block_size_x");
+        let warp_eff: f64 = if (bsx as usize) % 32 == 0 { 1.0 } else { 0.85 };
+        let compute_efficiency = (0.92 * unroll_eff * warp_eff).clamp(0.05, 1.0);
+        // Column-major streaming coalesces when bsx spans a warp.
+        let memory_efficiency = if (bsx as usize) % 32 == 0 { 0.95 } else { 0.7 };
+
+        WorkEstimate { f64_flops, dram_bytes, compute_efficiency, memory_efficiency, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::occupancy::{check_validity, Validity};
+    use crate::space::SearchSpace;
+
+    #[test]
+    fn space_size_near_paper() {
+        let k = Adding;
+        let dev = Device::a100();
+        let s = SearchSpace::build("adding", k.params(), &k.restrictions(&dev));
+        // Paper: 4654 configurations.
+        assert!(s.len() > 3000 && s.len() < 7000, "size {}", s.len());
+    }
+
+    #[test]
+    fn no_invalid_configs() {
+        let k = Adding;
+        let dev = Device::a100();
+        let s = SearchSpace::build("adding", k.params(), &k.restrictions(&dev));
+        for i in 0..s.len() {
+            assert_eq!(check_validity(&k.resources(&s.assignment(i), &dev), &dev), Validity::Ok);
+        }
+    }
+
+    #[test]
+    fn recompute_tradeoff_present() {
+        // Recompute: more flops, less traffic. Store: fewer flops, more
+        // traffic. Both paths must differ in both axes.
+        let k = Adding;
+        let dev = Device::a100();
+        let s = SearchSpace::build("adding", k.params(), &k.restrictions(&dev));
+        let (mut w_re, mut w_st) = (None, None);
+        for i in 0..s.len() {
+            let a = s.assignment(i);
+            if a.b("recompute_denom") {
+                w_re.get_or_insert(k.work(&a, &dev));
+            } else {
+                w_st.get_or_insert(k.work(&a, &dev));
+            }
+        }
+        let (re, st) = (w_re.unwrap(), w_st.unwrap());
+        assert!(re.f64_flops > st.f64_flops);
+        assert!(re.dram_bytes < st.dram_bytes);
+    }
+
+    #[test]
+    fn unroll_changes_efficiency() {
+        let k = Adding;
+        let dev = Device::a100();
+        let s = SearchSpace::build("adding", k.params(), &k.restrictions(&dev));
+        let effs: std::collections::HashSet<u64> = (0..s.len())
+            .map(|i| (k.work(&s.assignment(i), &dev).compute_efficiency * 1e6) as u64)
+            .collect();
+        assert!(effs.len() > 3, "unroll factors must differentiate efficiency");
+    }
+}

@@ -1,0 +1,231 @@
+//! GEMM — the CLBlast tunable OpenCL matrix-multiplication kernel [52].
+//!
+//! 15 tunable parameters describing the per-block tile (MWG×NWG×KWG), the
+//! thread grid inside a block (MDIMC×NDIMC), the re-shaped load grids for
+//! the shared-memory staging of A and B (MDIMA, NDIMB), vector widths
+//! (VWM, VWN), loop unrolling (KWI), strided access toggles (STRM, STRN),
+//! and shared-memory staging toggles (SA, SB). Value sets match the
+//! Kernel Tuner CLBlast benchmark: Cartesian product 82944, restricted
+//! space ≈ 18k, zero compile/runtime invalids (the CLBlast restrictions
+//! are exactly the validity conditions — this is why Table II reports 0%
+//! invalid for GEMM).
+
+use crate::gpusim::device::Device;
+use crate::gpusim::kernels::KernelModel;
+use crate::gpusim::occupancy::Resources;
+use crate::gpusim::timing::WorkEstimate;
+use crate::space::{Assignment, Param, Restriction};
+
+/// Problem size: C[M,N] = A[M,K] · B[K,N], single precision.
+pub const M: usize = 4096;
+pub const N: usize = 4096;
+pub const K: usize = 4096;
+
+#[derive(Default)]
+pub struct Gemm;
+
+impl KernelModel for Gemm {
+    fn name(&self) -> &'static str {
+        "gemm"
+    }
+
+    fn id(&self) -> u64 {
+        0x6e33 // arbitrary stable tag
+    }
+
+    fn params(&self) -> Vec<Param> {
+        vec![
+            Param::ints("MWG", &[16, 32, 64, 128]),
+            Param::ints("NWG", &[16, 32, 64, 128]),
+            Param::ints("KWG", &[32]),
+            Param::ints("MDIMC", &[8, 16, 32]),
+            Param::ints("NDIMC", &[8, 16, 32]),
+            Param::ints("MDIMA", &[8, 16, 32]),
+            Param::ints("NDIMB", &[8, 16, 32]),
+            Param::ints("KWI", &[2]),
+            Param::ints("VWM", &[1, 2, 4, 8]),
+            Param::ints("VWN", &[1, 2, 4, 8]),
+            Param::ints("STRM", &[0]),
+            Param::ints("STRN", &[0]),
+            Param::ints("SA", &[0, 1]),
+            Param::ints("SB", &[0, 1]),
+            Param::ints("PRECISION", &[32]),
+        ]
+    }
+
+    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
+        // The CLBlast validity conditions (same as the Kernel Tuner GEMM
+        // benchmark). Divisibility guarantees every thread has work and
+        // the staging loads tile exactly.
+        vec![
+            Restriction::new("KWG % KWI == 0", |a| a.i("KWG") % a.i("KWI") == 0),
+            Restriction::new("MWG % (MDIMC * VWM) == 0", |a| a.i("MWG") % (a.i("MDIMC") * a.i("VWM")) == 0),
+            Restriction::new("NWG % (NDIMC * VWN) == 0", |a| a.i("NWG") % (a.i("NDIMC") * a.i("VWN")) == 0),
+            Restriction::new("MWG % (MDIMA * VWM) == 0", |a| a.i("MWG") % (a.i("MDIMA") * a.i("VWM")) == 0),
+            Restriction::new("NWG % (NDIMB * VWN) == 0", |a| a.i("NWG") % (a.i("NDIMB") * a.i("VWN")) == 0),
+            Restriction::new("KWG % (MDIMC*NDIMC/MDIMA) == 0", |a| {
+                let lpta = (a.i("MDIMC") * a.i("NDIMC")) / a.i("MDIMA");
+                lpta > 0 && a.i("KWG") % lpta == 0
+            }),
+            Restriction::new("KWG % (MDIMC*NDIMC/NDIMB) == 0", |a| {
+                let lptb = (a.i("MDIMC") * a.i("NDIMC")) / a.i("NDIMB");
+                lptb > 0 && a.i("KWG") % lptb == 0
+            }),
+        ]
+    }
+
+    fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {
+        let (mwg, nwg, kwg) = (a.i("MWG") as usize, a.i("NWG") as usize, a.i("KWG") as usize);
+        let (mdimc, ndimc) = (a.i("MDIMC") as usize, a.i("NDIMC") as usize);
+        let (vwm, vwn) = (a.i("VWM") as usize, a.i("VWN") as usize);
+        let threads = mdimc * ndimc;
+        let smem = (a.i("SA") as usize) * kwg * mwg * 4 + (a.i("SB") as usize) * kwg * nwg * 4;
+        // Accumulator tile per thread + staging vectors + indices.
+        let acc = (mwg / mdimc) * (nwg / ndimc);
+        let regs = 18 + acc + 2 * (vwm + vwn);
+        Resources {
+            threads_per_block: threads,
+            smem_bytes: smem,
+            regs_per_thread: regs.min(255),
+            grid_blocks: (M / mwg) * (N / nwg),
+        }
+    }
+
+    fn work(&self, a: &Assignment, _dev: &Device) -> WorkEstimate {
+        let (mwg, nwg) = (a.f("MWG"), a.f("NWG"));
+        let (mdimc, ndimc) = (a.f("MDIMC"), a.f("NDIMC"));
+        let (mdima, ndimb) = (a.f("MDIMA"), a.f("NDIMB"));
+        let (vwm, vwn) = (a.i("VWM"), a.i("VWN"));
+        let (sa, sb) = (a.b("SA"), a.b("SB"));
+
+        let flops = 2.0 * (M as f64) * (N as f64) * (K as f64);
+
+        // DRAM traffic: with shared-memory staging each A tile is read once
+        // per block-column; without, L1/L2 caching recovers only part of
+        // the reuse.
+        let a_reuse = if sa { 1.0 } else { 1.9 };
+        let b_reuse = if sb { 1.0 } else { 1.9 };
+        let a_traffic = (M * K * 4) as f64 * (N as f64 / nwg) * a_reuse / (K as f64 / 32.0).max(1.0) * (K as f64 / 32.0).max(1.0) / (N as f64 / nwg); // simplify below
+        let _ = a_traffic;
+        // Cleaner derivation: every block (there are (M/MWG)·(N/NWG)) loads
+        // an MWG×K strip of A and a K×NWG strip of B.
+        let blocks_m = M as f64 / mwg;
+        let blocks_n = N as f64 / nwg;
+        let a_bytes = blocks_n * (M as f64) * (K as f64) * 4.0 * a_reuse;
+        let b_bytes = blocks_m * (N as f64) * (K as f64) * 4.0 * b_reuse;
+        let c_bytes = (M * N * 4) as f64;
+        let dram_bytes = a_bytes + b_bytes + c_bytes;
+
+        // Compute efficiency: vector width sweet spots, per-thread tile ILP,
+        // staging-grid mismatch, smem path overhead.
+        let vw_eff = |v: i64| match v {
+            1 => 0.84,
+            2 => 0.95,
+            4 => 1.0,
+            8 => 0.93,
+            _ => 0.8,
+        };
+        let acc = (mwg / mdimc) * (nwg / ndimc);
+        // ILP from the accumulator tile: too small starves the pipeline,
+        // too large thrashes the register file.
+        let ilp = (acc / 16.0).min(1.0).powf(0.35) * if acc > 128.0 { 0.85 } else { 1.0 };
+        let stage_a = if (mdima - mdimc).abs() > 0.0 { 0.975 } else { 1.0 };
+        let stage_b = if (ndimb - ndimc).abs() > 0.0 { 0.975 } else { 1.0 };
+        let smem_overhead = match (sa, sb) {
+            (true, true) => 0.97,
+            (true, false) | (false, true) => 0.985,
+            (false, false) => 1.0,
+        };
+        let compute_efficiency =
+            (0.96 * vw_eff(vwm) * vw_eff(vwn) * ilp * stage_a * stage_b * smem_overhead).clamp(0.05, 1.0);
+
+        // Memory efficiency: coalescing improves with vector width of the
+        // global loads; staging through smem decouples the access pattern.
+        let coalesce = |v: i64| 0.72 + 0.28 * ((v as f64).log2() / 3.0);
+        let mem_a = if sa { 0.97 } else { coalesce(vwm) };
+        let mem_b = if sb { 0.97 } else { coalesce(vwn) };
+        let memory_efficiency = (0.5 * (mem_a + mem_b)).clamp(0.05, 1.0);
+
+        WorkEstimate {
+            flops,
+            dram_bytes,
+            compute_efficiency,
+            memory_efficiency,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::occupancy::{check_validity, Validity};
+    use crate::space::SearchSpace;
+
+    fn space(dev: &Device) -> SearchSpace {
+        let g = Gemm;
+        SearchSpace::build("gemm", g.params(), &g.restrictions(dev))
+    }
+
+    #[test]
+    fn cartesian_matches_paper() {
+        let g = Gemm;
+        let cart: usize = g.params().iter().map(|p| p.len()).product();
+        assert_eq!(cart, 82944, "paper: Cartesian product of size 82944");
+    }
+
+    #[test]
+    fn restricted_space_near_paper() {
+        let dev = Device::gtx_titan_x();
+        let s = space(&dev);
+        // Paper: 17956. The exact count depends on CLBlast kernel-source
+        // details; require the same order and document the actual number.
+        assert!(s.len() > 10_000 && s.len() < 30_000, "restricted size {}", s.len());
+    }
+
+    #[test]
+    fn no_invalid_configs_on_any_device() {
+        // Table II/III: GEMM has 0 invalid configurations — restrictions
+        // are exactly the validity conditions.
+        let g = Gemm;
+        for dev in Device::all() {
+            let s = space(&dev);
+            for i in 0..s.len() {
+                let a = s.assignment(i);
+                let r = g.resources(&a, &dev);
+                assert_eq!(check_validity(&r, &dev), Validity::Ok, "config {}", s.describe(i));
+            }
+        }
+    }
+
+    #[test]
+    fn work_is_sane() {
+        let dev = Device::gtx_titan_x();
+        let s = space(&dev);
+        let g = Gemm;
+        for i in (0..s.len()).step_by(997) {
+            let a = s.assignment(i);
+            let w = g.work(&a, &dev);
+            assert!(w.flops > 1e11 && w.flops < 2e11);
+            assert!(w.dram_bytes >= (M * N * 4) as f64);
+            assert!(w.compute_efficiency > 0.0 && w.compute_efficiency <= 1.0);
+            assert!(w.memory_efficiency > 0.0 && w.memory_efficiency <= 1.0);
+        }
+    }
+
+    #[test]
+    fn smem_only_when_staging_enabled() {
+        let dev = Device::gtx_titan_x();
+        let s = space(&dev);
+        let g = Gemm;
+        for i in (0..s.len()).step_by(313) {
+            let a = s.assignment(i);
+            let r = g.resources(&a, &dev);
+            if !a.b("SA") && !a.b("SB") {
+                assert_eq!(r.smem_bytes, 0);
+            } else {
+                assert!(r.smem_bytes > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Analytical models of the paper's five tunable GPU kernels.
+//!
+//! Each model declares its tunable parameters and spec-stage restrictions
+//! (these define the search space, Table II/III "Configurations"), maps a
+//! configuration to launch resources (driving compile-/run-time invalidity
+//! and occupancy) and to a `WorkEstimate` (driving the roofline time).
+//! The parameter sets mirror the Kernel Tuner benchmark kernels the paper
+//! uses; constants are calibrated so space sizes, invalid fractions, and
+//! minima land near Table II/III (exact values reported in
+//! EXPERIMENTS.md).
+
+pub mod adding;
+pub mod conv;
+pub mod expdist;
+pub mod gemm;
+pub mod pnpoly;
+
+use crate::gpusim::device::Device;
+use crate::gpusim::occupancy::Resources;
+use crate::gpusim::timing::WorkEstimate;
+use crate::space::{Assignment, Param, Restriction};
+
+/// An analytically modeled tunable GPU kernel.
+pub trait KernelModel: Send + Sync {
+    /// Kernel name as used by the CLI and the harness.
+    fn name(&self) -> &'static str;
+
+    /// Stable id mixed into the roughness hash.
+    fn id(&self) -> u64;
+
+    /// Tunable parameters (device-independent, as in Kernel Tuner).
+    fn params(&self) -> Vec<Param>;
+
+    /// Spec-stage restrictions; may depend on the device (Kernel Tuner
+    /// restrictions can reference device properties).
+    fn restrictions(&self, dev: &Device) -> Vec<Restriction>;
+
+    /// Launch resources of a configuration.
+    fn resources(&self, a: &Assignment, dev: &Device) -> Resources;
+
+    /// Work estimate of a configuration.
+    fn work(&self, a: &Assignment, dev: &Device) -> WorkEstimate;
+
+    /// Transform raw kernel time into the tuning objective. Default:
+    /// identity (minimize milliseconds). ExpDist overrides this with
+    /// 10⁵ / GFLOP/s because its work depends on the configuration (§IV-E).
+    fn objective(&self, time_ms: f64, _a: &Assignment, _dev: &Device) -> f64 {
+        time_ms
+    }
+}
+
+/// All five kernels, in the paper's order.
+pub fn all_kernels() -> Vec<Box<dyn KernelModel>> {
+    vec![
+        Box::new(gemm::Gemm::default()),
+        Box::new(conv::Convolution::default()),
+        Box::new(pnpoly::PnPoly::default()),
+        Box::new(expdist::ExpDist::default()),
+        Box::new(adding::Adding::default()),
+    ]
+}
+
+/// Look a kernel up by CLI name.
+pub fn kernel_by_name(name: &str) -> Option<Box<dyn KernelModel>> {
+    match name.to_ascii_lowercase().as_str() {
+        "gemm" => Some(Box::new(gemm::Gemm::default())),
+        "convolution" | "conv" => Some(Box::new(conv::Convolution::default())),
+        "pnpoly" => Some(Box::new(pnpoly::PnPoly::default())),
+        "expdist" => Some(Box::new(expdist::ExpDist::default())),
+        "adding" => Some(Box::new(adding::Adding::default())),
+        _ => None,
+    }
+}

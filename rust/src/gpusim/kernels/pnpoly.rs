@@ -1,0 +1,177 @@
+//! PnPoly — the heterogeneous point-in-polygon kernel of [54].
+//!
+//! 20M points are tested against a 600-vertex polygon; host→device
+//! transfers overlap with GPU compute, so transfer time is part of the
+//! objective (§IV-A). Tunables: block size, per-thread tile, the
+//! "between" comparison method, precomputed-slopes toggle, and the overall
+//! algorithm switch. No spec-stage restrictions (the paper: "PnPoly has no
+//! restrictions applied"), so the space is the full Cartesian product of
+//! 8184 configurations; a few percent die at runtime from register-file
+//! exhaustion at large block sizes — the paper's example of invalids that
+//! only the actual device reveals.
+
+use crate::gpusim::device::Device;
+use crate::gpusim::kernels::KernelModel;
+use crate::gpusim::occupancy::Resources;
+use crate::gpusim::timing::WorkEstimate;
+use crate::space::{Assignment, Param, Restriction};
+
+pub const POINTS: usize = 20_000_000;
+pub const VERTICES: usize = 600;
+
+#[derive(Default)]
+pub struct PnPoly;
+
+impl KernelModel for PnPoly {
+    fn name(&self) -> &'static str {
+        "pnpoly"
+    }
+
+    fn id(&self) -> u64 {
+        0x9019
+    }
+
+    fn params(&self) -> Vec<Param> {
+        // 31 × 11 × 4 × 2 × 3 = 8184 configurations (Table II).
+        let block_sizes: Vec<i64> = (1..=31).map(|i| i * 32).collect();
+        vec![
+            Param::ints("block_size_x", &block_sizes),
+            Param::ints("tile_size", &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]),
+            Param::ints("between_method", &[0, 1, 2, 3]),
+            Param::ints("use_precomputed_slopes", &[0, 1]),
+            Param::ints("use_method", &[0, 1, 2]),
+        ]
+    }
+
+    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
+        Vec::new()
+    }
+
+    fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {
+        let bsx = a.i("block_size_x") as usize;
+        let tile = a.i("tile_size") as usize;
+        let method = a.i("use_method") as usize;
+        // Register pressure grows with the per-thread tile and the more
+        // elaborate methods; large blocks × heavy variants exhaust the
+        // register file at launch (runtime invalids, ~4%).
+        let regs = 26 + (tile * (4 + 2 * method) * 3) / 4 + 5 * a.i("use_precomputed_slopes") as usize;
+        Resources {
+            threads_per_block: bsx,
+            smem_bytes: if a.i("use_method") == 2 { VERTICES * 8 } else { 0 },
+            regs_per_thread: regs.min(255),
+            grid_blocks: POINTS.div_ceil(bsx * tile),
+        }
+    }
+
+    fn work(&self, a: &Assignment, _dev: &Device) -> WorkEstimate {
+        let tile = a.f("tile_size");
+        let between = a.i("between_method");
+        let slopes = a.b("use_precomputed_slopes");
+        let method = a.i("use_method");
+
+        // Crossing-number test: each point visits every polygon edge.
+        let ops_per_edge = match between {
+            0 => 7.0, // two comparisons + select
+            1 => 6.0, // multiplication trick
+            2 => 5.5, // bit trick
+            _ => 6.5, // mixed
+        } + if slopes { 2.0 } else { 4.0 };
+        let flops = POINTS as f64 * VERTICES as f64 * ops_per_edge
+            * match method {
+                0 => 1.0,  // full crossing test
+                1 => 0.55, // bounding-box prefilter (fewer edges on average)
+                _ => 0.62, // smem-staged vertices, slightly more setup
+            };
+
+        // Points streamed once; vertices negligible.
+        let dram_bytes = (POINTS * 8) as f64 + (POINTS * 4) as f64 / tile.max(1.0);
+
+        // Divergence: the prefilter diverges within warps; bigger tiles
+        // amortize index math.
+        let divergence = match method {
+            1 => 0.8,
+            _ => 0.97,
+        };
+        let ilp = (tile / 3.0).min(1.0).powf(0.25);
+        let compute_efficiency = (0.92 * divergence * ilp).clamp(0.05, 1.0);
+
+        // Host→device: x,y per point (fp32) up, bitmask down; the kernel
+        // overlaps transfers with compute in `tile`-sized stages — deeper
+        // tiling overlaps better.
+        let transfer_bytes = (POINTS * 8 + POINTS) as f64;
+        let transfer_overlap = (0.35 + 0.05 * tile).min(0.85);
+
+        WorkEstimate {
+            flops,
+            dram_bytes,
+            transfer_bytes,
+            transfer_overlap,
+            compute_efficiency,
+            memory_efficiency: 0.95,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::occupancy::{check_validity, Validity};
+    use crate::space::SearchSpace;
+
+    #[test]
+    fn space_is_full_cartesian_8184() {
+        let k = PnPoly;
+        let dev = Device::gtx_titan_x();
+        let s = SearchSpace::build("pnpoly", k.params(), &k.restrictions(&dev));
+        assert_eq!(s.len(), 8184, "paper Table II: 8184 configurations");
+        assert_eq!(s.cartesian_size, 8184);
+    }
+
+    #[test]
+    fn a_few_percent_runtime_invalid() {
+        let k = PnPoly;
+        for dev in Device::all() {
+            let s = SearchSpace::build("pnpoly", k.params(), &k.restrictions(&dev));
+            let mut runtime = 0usize;
+            let mut compile = 0usize;
+            for i in 0..s.len() {
+                let a = s.assignment(i);
+                match check_validity(&k.resources(&a, &dev), &dev) {
+                    Validity::RuntimeError => runtime += 1,
+                    Validity::CompileError => compile += 1,
+                    Validity::Ok => {}
+                }
+            }
+            let frac = (runtime + compile) as f64 / s.len() as f64;
+            // Paper: 3.9% (Titan X), 3.5% (2070S), 3.9% (A100).
+            assert!(frac > 0.005 && frac < 0.12, "{}: invalid fraction {frac}", dev.name);
+            assert!(runtime > 0, "{}: PnPoly invalids must be runtime-stage", dev.name);
+        }
+    }
+
+    #[test]
+    fn transfer_dominates_on_titan_x() {
+        // Paper: minimum 26.97 ms on Titan X ≈ PCIe transfer of 160 MB.
+        let k = PnPoly;
+        let dev = Device::gtx_titan_x();
+        let s = SearchSpace::build("pnpoly", k.params(), &k.restrictions(&dev));
+        let a = s.assignment(0);
+        let w = k.work(&a, &dev);
+        let transfer_ms = w.transfer_bytes / (dev.pcie_gbs * 1e6);
+        assert!(transfer_ms > 20.0 && transfer_ms < 35.0, "transfer {transfer_ms} ms");
+    }
+
+    #[test]
+    fn work_depends_on_method() {
+        let k = PnPoly;
+        let dev = Device::a100();
+        let s = SearchSpace::build("pnpoly", k.params(), &k.restrictions(&dev));
+        let mut flops: Vec<f64> = Vec::new();
+        for i in 0..s.len() {
+            flops.push(k.work(&s.assignment(i), &dev).flops);
+        }
+        flops.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(flops[0] < flops[flops.len() - 1] * 0.7, "methods must differentiate work");
+    }
+}

@@ -1,0 +1,188 @@
+//! Resource accounting, validity staging, and the occupancy model.
+//!
+//! The paper (§III-D2) distinguishes three stages at which a configuration
+//! can turn out invalid: (1) programming-model spec checks before
+//! compilation — modeled as space restrictions; (2) compile errors —
+//! modeled here as static resource overruns (shared memory per block,
+//! registers per thread); (3) runtime errors — modeled as launch-time
+//! resource overruns on the *actual device* (threads per block beyond the
+//! device limit, zero achievable occupancy). This module implements stages
+//! (2) and (3) plus the standard CUDA occupancy calculation used by the
+//! timing models.
+
+use crate::gpusim::device::Device;
+
+/// Static + launch resources of one kernel configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Resources {
+    /// Threads per block requested by the configuration.
+    pub threads_per_block: usize,
+    /// Static shared memory per block (bytes).
+    pub smem_bytes: usize,
+    /// Registers per thread (estimated by the kernel model).
+    pub regs_per_thread: usize,
+    /// Number of blocks in the grid.
+    pub grid_blocks: usize,
+}
+
+/// Outcome of validity staging.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Validity {
+    Ok,
+    /// Static resource overrun — the toolchain rejects the build.
+    CompileError,
+    /// Launch failure on the concrete device.
+    RuntimeError,
+}
+
+/// Stage-2/3 validity checks for a configuration's resources on a device.
+pub fn check_validity(r: &Resources, dev: &Device) -> Validity {
+    // Stage 2 — compile time: static smem and register pressure.
+    if r.smem_bytes > dev.smem_per_block {
+        return Validity::CompileError;
+    }
+    if r.regs_per_thread > dev.max_regs_per_thread {
+        return Validity::CompileError;
+    }
+    // Stage 3 — launch time on the device.
+    if r.threads_per_block == 0 || r.threads_per_block > dev.max_threads_per_block {
+        return Validity::RuntimeError;
+    }
+    if r.grid_blocks == 0 {
+        return Validity::RuntimeError;
+    }
+    // Register file must accommodate at least one block.
+    if r.regs_per_thread * r.threads_per_block > dev.regfile_per_sm {
+        return Validity::RuntimeError;
+    }
+    if active_blocks_per_sm(r, dev) == 0 {
+        return Validity::RuntimeError;
+    }
+    Validity::Ok
+}
+
+/// Number of thread blocks resident per SM (CUDA occupancy calculation,
+/// warp-granular register allocation approximated at thread granularity).
+pub fn active_blocks_per_sm(r: &Resources, dev: &Device) -> usize {
+    if r.threads_per_block == 0 {
+        return 0;
+    }
+    let by_threads = dev.max_threads_per_sm / r.threads_per_block;
+    let by_blocks = dev.max_blocks_per_sm;
+    let by_smem = if r.smem_bytes == 0 { usize::MAX } else { dev.smem_per_sm / r.smem_bytes };
+    let regs_per_block = r.regs_per_thread.max(16) * r.threads_per_block;
+    let by_regs = if regs_per_block == 0 { usize::MAX } else { dev.regfile_per_sm / regs_per_block };
+    by_threads.min(by_blocks).min(by_smem).min(by_regs)
+}
+
+/// Achieved occupancy: resident threads / max resident threads, in [0, 1].
+pub fn occupancy(r: &Resources, dev: &Device) -> f64 {
+    let blocks = active_blocks_per_sm(r, dev);
+    ((blocks * r.threads_per_block) as f64 / dev.max_threads_per_sm as f64).min(1.0)
+}
+
+/// Latency-hiding efficiency as a function of occupancy: saturating curve
+/// with a knee — low occupancy cannot hide memory latency, but beyond
+/// ~50% extra occupancy buys little (standard GPU folklore, and the reason
+/// tuning block sizes matters).
+pub fn occupancy_efficiency(occ: f64) -> f64 {
+    let knee = 0.25;
+    (occ / (occ + knee)).min(1.0) * (1.0 + knee)
+}
+
+/// Tail effect: when the grid does not evenly fill the SMs' capacity the
+/// last wave runs underpopulated. Returns a multiplier ≥ 1 on time.
+pub fn tail_effect(grid_blocks: usize, blocks_per_sm: usize, dev: &Device) -> f64 {
+    if grid_blocks == 0 || blocks_per_sm == 0 {
+        return 1.0;
+    }
+    let wave = dev.sm_count * blocks_per_sm;
+    let waves = grid_blocks as f64 / wave as f64;
+    let full = waves.floor();
+    if waves <= 1.0 {
+        // Single partial wave: time is that of a full wave.
+        return 1.0 / waves.max(1.0 / wave as f64);
+    }
+    let frac = waves - full;
+    if frac < 1e-9 {
+        1.0
+    } else {
+        // Partial last wave takes a full wave's time.
+        (full + 1.0) / waves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Device {
+        Device::gtx_titan_x()
+    }
+
+    fn res(threads: usize, smem: usize, regs: usize, blocks: usize) -> Resources {
+        Resources { threads_per_block: threads, smem_bytes: smem, regs_per_thread: regs, grid_blocks: blocks }
+    }
+
+    #[test]
+    fn valid_config_passes() {
+        assert_eq!(check_validity(&res(256, 16 * 1024, 64, 1000), &dev()), Validity::Ok);
+    }
+
+    #[test]
+    fn smem_overrun_is_compile_error() {
+        assert_eq!(check_validity(&res(256, 49 * 1024, 32, 10), &dev()), Validity::CompileError);
+    }
+
+    #[test]
+    fn register_overrun_is_compile_error() {
+        assert_eq!(check_validity(&res(64, 0, 256, 10), &dev()), Validity::CompileError);
+    }
+
+    #[test]
+    fn too_many_threads_is_runtime_error() {
+        assert_eq!(check_validity(&res(2048, 0, 32, 10), &dev()), Validity::RuntimeError);
+    }
+
+    #[test]
+    fn regfile_exhaustion_is_runtime_error() {
+        // 1024 threads × 128 regs = 131072 > 65536.
+        assert_eq!(check_validity(&res(1024, 0, 128, 10), &dev()), Validity::RuntimeError);
+    }
+
+    #[test]
+    fn occupancy_basic() {
+        // 256 threads, nothing else limiting: 2048/256 = 8 blocks, full occupancy.
+        let r = res(256, 0, 16, 1000);
+        assert_eq!(active_blocks_per_sm(&r, &dev()), 8);
+        assert!((occupancy(&r, &dev()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smem_limits_occupancy() {
+        // 48 KiB static smem: only 2 blocks fit in 96 KiB/SM.
+        let r = res(128, 48 * 1024, 16, 1000);
+        assert_eq!(active_blocks_per_sm(&r, &dev()), 2);
+        assert!(occupancy(&r, &dev()) < 0.2);
+    }
+
+    #[test]
+    fn occupancy_efficiency_monotone_saturating() {
+        let lo = occupancy_efficiency(0.1);
+        let mid = occupancy_efficiency(0.5);
+        let hi = occupancy_efficiency(1.0);
+        assert!(lo < mid && mid < hi);
+        assert!(hi <= 1.0 + 1e-9);
+        assert!((occupancy_efficiency(1.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_effect_bounds() {
+        let d = dev();
+        // Exactly two full waves: no tail.
+        assert!((tail_effect(2 * d.sm_count * 4, 4, &d) - 1.0).abs() < 1e-9);
+        // 2.5 waves: 3 wave-times for 2.5 waves of work.
+        let t = tail_effect((2.5 * (d.sm_count * 4) as f64) as usize, 4, &d);
+        assert!(t > 1.0 && t <= 1.5);
+    }
+}

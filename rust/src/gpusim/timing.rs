@@ -1,0 +1,178 @@
+//! Roofline-style timing combinator + deterministic roughness.
+//!
+//! Every kernel model reduces a configuration to a `WorkEstimate`; this
+//! module turns it into milliseconds on a device. The landscape properties
+//! the paper's optimizer faces — rough, multimodal, discontinuous — come
+//! from (a) discrete efficiency cliffs already in the models (bank
+//! conflicts, divisibility, caching), (b) occupancy steps, and (c) a
+//! deterministic per-(kernel, device, config) lognormal "roughness" term
+//! standing in for all unmodeled microarchitectural interactions. The
+//! roughness is *hashed*, not sampled: the simulated search space is a
+//! fixed function, exactly like the paper's recorded spaces in simulation
+//! mode.
+
+use crate::gpusim::device::Device;
+use crate::gpusim::occupancy::{active_blocks_per_sm, occupancy, occupancy_efficiency, tail_effect, Resources};
+use crate::util::rng::hash_normal;
+
+/// Work performed by one kernel configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkEstimate {
+    /// Floating-point operations (fp32-equivalent; fp64 kernels scale by
+    /// the device's fp64 ratio via `f64_flops`).
+    pub flops: f64,
+    /// fp64 operations (billed at the device fp64 rate).
+    pub f64_flops: f64,
+    /// DRAM traffic in bytes.
+    pub dram_bytes: f64,
+    /// Host↔device transfer bytes (0 for pure-GPU kernels).
+    pub transfer_bytes: f64,
+    /// Fraction of the transfer overlapped with compute, in [0,1].
+    pub transfer_overlap: f64,
+    /// Multiplicative compute-efficiency factor in (0, 1]: vectorization,
+    /// unrolling, bank conflicts, divergence — kernel-model specific.
+    pub compute_efficiency: f64,
+    /// Multiplicative memory-efficiency factor in (0, 1]: coalescing,
+    /// cache hit rates.
+    pub memory_efficiency: f64,
+}
+
+impl Default for WorkEstimate {
+    fn default() -> Self {
+        WorkEstimate {
+            flops: 0.0,
+            f64_flops: 0.0,
+            dram_bytes: 0.0,
+            transfer_bytes: 0.0,
+            transfer_overlap: 0.0,
+            compute_efficiency: 1.0,
+            memory_efficiency: 1.0,
+        }
+    }
+}
+
+/// Scale of the multiplicative lognormal roughness (sigma of log-time).
+pub const ROUGHNESS_SIGMA: f64 = 0.08;
+
+/// Deterministic execution-time model: roofline over compute and memory,
+/// modulated by occupancy, tail effect, launch overhead, transfer
+/// (partially overlapped), and hashed roughness.
+pub fn execution_time_ms(work: &WorkEstimate, res: &Resources, dev: &Device, noise_key: u64) -> f64 {
+    debug_assert!(work.compute_efficiency > 0.0 && work.compute_efficiency <= 1.0);
+    debug_assert!(work.memory_efficiency > 0.0 && work.memory_efficiency <= 1.0);
+
+    let compute_ms = work.flops / (dev.peak_gflops() * 1e6 * work.compute_efficiency)
+        + work.f64_flops / (dev.peak_gflops_f64() * 1e6 * work.compute_efficiency);
+    let mem_ms = work.dram_bytes / (dev.dram_gbs * 1e6 * work.memory_efficiency);
+
+    let occ = occupancy(res, dev);
+    let eff = occupancy_efficiency(occ).max(1e-3);
+    let blocks_per_sm = active_blocks_per_sm(res, dev);
+    let tail = tail_effect(res.grid_blocks, blocks_per_sm, dev);
+
+    // Roofline with soft max: overlap is imperfect, so the slower side
+    // dominates but the faster side still contributes a little.
+    let roof = compute_ms.max(mem_ms) + 0.12 * compute_ms.min(mem_ms);
+    let kernel_ms = roof * tail / eff + dev.launch_overhead_ms;
+
+    let transfer_ms = work.transfer_bytes / (dev.pcie_gbs * 1e6);
+    let exposed_transfer = transfer_ms * (1.0 - work.transfer_overlap)
+        + (transfer_ms * work.transfer_overlap - kernel_ms).max(0.0);
+
+    let base = kernel_ms + exposed_transfer;
+    let rough = (ROUGHNESS_SIGMA * hash_normal(noise_key)).exp();
+    base * rough
+}
+
+/// Key mixing for the roughness hash: kernel id, device, config index.
+pub fn noise_key(kernel_id: u64, device_name: &str, config_key: u64) -> u64 {
+    let mut h: u64 = kernel_id ^ 0x9e37_79b9_7f4a_7c15;
+    for b in device_name.bytes() {
+        h = h.rotate_left(7) ^ u64::from(b).wrapping_mul(0x100_0000_01b3);
+    }
+    h ^ config_key.wrapping_mul(0xd6e8_feb8_6659_fd93)
+}
+
+/// Fold a configuration (value indices) into a u64 key.
+pub fn config_key(cfg: &[u16]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in cfg {
+        h ^= u64::from(v).wrapping_add(0x9e37_79b9);
+        h = h.wrapping_mul(0x1000_0000_01b3).rotate_left(13);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> Device {
+        Device::gtx_titan_x()
+    }
+
+    fn res() -> Resources {
+        Resources { threads_per_block: 256, smem_bytes: 8192, regs_per_thread: 48, grid_blocks: 4096 }
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = WorkEstimate { flops: 1e11, dram_bytes: 1e9, ..Default::default() };
+        let a = execution_time_ms(&w, &res(), &dev(), 42);
+        let b = execution_time_ms(&w, &res(), &dev(), 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn compute_bound_scales_with_flops() {
+        let w1 = WorkEstimate { flops: 1e11, dram_bytes: 1e6, ..Default::default() };
+        let w2 = WorkEstimate { flops: 2e11, dram_bytes: 1e6, ..Default::default() };
+        let t1 = execution_time_ms(&w1, &res(), &dev(), 1);
+        let t2 = execution_time_ms(&w2, &res(), &dev(), 1);
+        assert!(t2 / t1 > 1.8 && t2 / t1 < 2.2, "ratio {}", t2 / t1);
+    }
+
+    #[test]
+    fn memory_bound_scales_with_bytes() {
+        let w1 = WorkEstimate { flops: 1e6, dram_bytes: 1e9, ..Default::default() };
+        let w2 = WorkEstimate { flops: 1e6, dram_bytes: 3e9, ..Default::default() };
+        let t1 = execution_time_ms(&w1, &res(), &dev(), 2);
+        let t2 = execution_time_ms(&w2, &res(), &dev(), 2);
+        assert!(t2 / t1 > 2.7 && t2 / t1 < 3.3);
+    }
+
+    #[test]
+    fn lower_efficiency_is_slower() {
+        let w_hi = WorkEstimate { flops: 1e11, compute_efficiency: 1.0, ..Default::default() };
+        let w_lo = WorkEstimate { flops: 1e11, compute_efficiency: 0.5, ..Default::default() };
+        assert!(execution_time_ms(&w_lo, &res(), &dev(), 3) > execution_time_ms(&w_hi, &res(), &dev(), 3));
+    }
+
+    #[test]
+    fn unoverlapped_transfer_adds_time() {
+        let w0 = WorkEstimate { flops: 1e10, ..Default::default() };
+        let wt = WorkEstimate { flops: 1e10, transfer_bytes: 1e9, transfer_overlap: 0.0, ..Default::default() };
+        let wo = WorkEstimate { flops: 1e10, transfer_bytes: 1e9, transfer_overlap: 0.9, ..Default::default() };
+        let t0 = execution_time_ms(&w0, &res(), &dev(), 4);
+        let tt = execution_time_ms(&wt, &res(), &dev(), 4);
+        let to = execution_time_ms(&wo, &res(), &dev(), 4);
+        assert!(tt > to && to > t0);
+    }
+
+    #[test]
+    fn roughness_is_bounded() {
+        // Lognormal with sigma 0.08: 6 sigma ≈ ×1.6; times differ by < 2×
+        // across noise keys for identical work.
+        let w = WorkEstimate { flops: 1e11, ..Default::default() };
+        let ts: Vec<f64> = (0..1000).map(|k| execution_time_ms(&w, &res(), &dev(), k)).collect();
+        let min = ts.iter().cloned().fold(f64::MAX, f64::min);
+        let max = ts.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max / min < 2.0, "roughness spread {}", max / min);
+    }
+
+    #[test]
+    fn config_key_distinguishes() {
+        assert_ne!(config_key(&[0, 1, 2]), config_key(&[0, 2, 1]));
+        assert_ne!(config_key(&[0]), config_key(&[0, 0]));
+    }
+}

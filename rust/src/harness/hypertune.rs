@@ -1,0 +1,162 @@
+//! §III-H — hyperparameter tuning of the BO implementation itself.
+//!
+//! The paper tuned the hyperparameters of the initial sampling, surrogate
+//! model, and acquisition functions on the Table II kernels (GTX Titan X)
+//! and reported the optimum as Table I. This driver reproduces that
+//! process: a full grid over the BO design space, each cell scored by MDF
+//! across GEMM + Convolution + PnPoly, reported best-first.
+//!
+//! ```text
+//! ktbo hypertune --repeat-scale 0.2 --top 15
+//! ```
+
+use std::sync::Arc;
+
+use crate::bo::{Acq, AcqPolicyKind, BoConfig, BoStrategy, Exploration, InitialSampling};
+use crate::gp::CovFn;
+use crate::gpusim::device::Device;
+use crate::harness::figures::{objective_for, Options};
+use crate::harness::metrics::{mean_deviation_factor, run_mae};
+use crate::harness::runner::{repeats_for, BUDGET};
+use crate::objective::Objective;
+use crate::strategies::Strategy;
+use crate::util::csv::{fnum, CsvWriter};
+use crate::util::linalg::mean;
+use crate::util::pool::run_parallel;
+use crate::util::rng::Rng;
+
+/// One grid cell.
+#[derive(Clone)]
+pub struct Cell {
+    pub label: String,
+    pub config: BoConfig,
+}
+
+/// The §III-H search grid (the axes Table I reports).
+pub fn grid() -> Vec<Cell> {
+    let covs: Vec<(&str, CovFn)> = vec![
+        ("m32/1.5", CovFn::Matern32 { lengthscale: 1.5 }),
+        ("m32/2.0", CovFn::Matern32 { lengthscale: 2.0 }),
+        ("m52/0.8", CovFn::Matern52 { lengthscale: 0.8 }),
+        ("m52/1.5", CovFn::Matern52 { lengthscale: 1.5 }),
+        ("rbf/1.0", CovFn::Rbf { lengthscale: 1.0 }),
+    ];
+    let explorations: Vec<(&str, Exploration)> = vec![
+        ("CV", Exploration::ContextualVariance),
+        ("c0.01", Exploration::Constant(0.01)),
+        ("c0.1", Exploration::Constant(0.1)),
+    ];
+    let acqs: Vec<(&str, AcqPolicyKind)> = vec![
+        ("advmulti", AcqPolicyKind::AdvancedMulti),
+        ("multi", AcqPolicyKind::Multi),
+        ("ei", AcqPolicyKind::Single(Acq::Ei)),
+    ];
+    let samplings: Vec<(&str, InitialSampling)> =
+        vec![("maximin", InitialSampling::Maximin), ("lhs", InitialSampling::Lhs)];
+
+    let mut out = Vec::new();
+    for (cn, cov) in &covs {
+        for (en, expl) in &explorations {
+            for (an, acq) in &acqs {
+                for (sn, samp) in &samplings {
+                    let mut config = match acq {
+                        AcqPolicyKind::AdvancedMulti => BoConfig::advanced_multi(),
+                        AcqPolicyKind::Multi => BoConfig::multi(),
+                        AcqPolicyKind::Single(a) => BoConfig::single(*a),
+                    };
+                    config.cov = *cov;
+                    config.exploration = *expl;
+                    config.init_sampling = *samp;
+                    out.push(Cell { label: format!("{an}|{cn}|{en}|{sn}"), config });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the grid; returns the report text and writes hypertune.csv.
+pub fn hypertune(opts: &Options, top: usize) -> String {
+    let dev = Device::gtx_titan_x();
+    let kernels = ["gemm", "convolution", "pnpoly"];
+    let cells = grid();
+    let reps = repeats_for("ei", opts.repeat_scale).min(9);
+
+    // MAE matrix: kernels × cells.
+    let mut mae_matrix: Vec<Vec<f64>> = Vec::new();
+    for kernel in kernels {
+        let obj = objective_for(kernel, &dev);
+        let global = obj.known_minimum().unwrap();
+        let fallback = {
+            let vals: Vec<f64> = obj.table().iter().filter_map(|e| e.value()).collect();
+            mean(&vals)
+        };
+        let jobs: Vec<_> = cells
+            .iter()
+            .enumerate()
+            .map(|(ci, cell)| {
+                let obj = Arc::clone(&obj);
+                let config = cell.config.clone();
+                let seed = opts.seed;
+                move || {
+                    let s = BoStrategy::new("ht", config);
+                    let maes: Vec<f64> = (0..reps)
+                        .map(|rep| {
+                            let mut seeder = Rng::with_stream(seed ^ 0x47, (ci * 1000 + rep) as u64 + 1);
+                            let mut rng = seeder.split(rep as u64);
+                            let t = s.run(obj.as_ref(), BUDGET, &mut rng);
+                            run_mae(&t.best_curve(), global, fallback)
+                        })
+                        .collect();
+                    mean(&maes)
+                }
+            })
+            .collect();
+        mae_matrix.push(run_parallel(jobs, opts.threads));
+    }
+
+    let mdf = mean_deviation_factor(&mae_matrix);
+    let mut order: Vec<usize> = (0..cells.len()).collect();
+    order.sort_by(|&a, &b| mdf[a].0.partial_cmp(&mdf[b].0).unwrap());
+
+    let mut report = format!(
+        "### §III-H hyperparameter tuning: {} grid cells × {} kernels × {reps} repeats (Titan X)\n",
+        cells.len(),
+        kernels.len()
+    );
+    report += &format!("{:<34} {:>8} {:>8}   (acq|cov/ls|explore|init)\n", "cell", "MDF", "±std");
+    let mut w = CsvWriter::new(&["rank", "cell", "mdf", "std", "mae_gemm", "mae_conv", "mae_pnpoly"]);
+    for (rank, &i) in order.iter().enumerate() {
+        if rank < top {
+            report += &format!("{:<34} {:>8.3} {:>8.3}\n", cells[i].label, mdf[i].0, mdf[i].1);
+        }
+        w.row(&[
+            (rank + 1).to_string(),
+            cells[i].label.clone(),
+            fnum(mdf[i].0),
+            fnum(mdf[i].1),
+            fnum(mae_matrix[0][i]),
+            fnum(mae_matrix[1][i]),
+            fnum(mae_matrix[2][i]),
+        ]);
+    }
+    w.write_to(&std::path::Path::new(&opts.out_dir).join("hypertune.csv")).expect("csv");
+    report += &format!("\nbest cell: {} — compare against Table I defaults\n", cells[order[0]].label);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_all_axes() {
+        let g = grid();
+        assert_eq!(g.len(), 5 * 3 * 3 * 2);
+        // Every label unique.
+        let set: std::collections::HashSet<_> = g.iter().map(|c| c.label.clone()).collect();
+        assert_eq!(set.len(), g.len());
+        // Table I's winning cell is in the grid.
+        assert!(g.iter().any(|c| c.label == "advmulti|m32/1.5|CV|maximin"));
+    }
+}

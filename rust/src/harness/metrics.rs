@@ -1,0 +1,134 @@
+//! Evaluation metrics from §IV-A: MAE against the global minimum over the
+//! function-evaluation checkpoints 40, 60, …, 220, and the Mean Deviation
+//! Factor (MDF) for cross-kernel comparison.
+
+use crate::util::linalg::{mean, std_dev};
+
+/// Checkpoints used by the paper: 20·i for i = 2..=11.
+pub fn checkpoints() -> Vec<usize> {
+    (2..=11).map(|i| 20 * i).collect()
+}
+
+/// Mean absolute error of a single run's best-found curve against the
+/// global minimum: (1/10)·Σ_{i=2..11} |f(x⁺ at 20i) − f(x′)|.
+///
+/// Curves shorter than a checkpoint (space exhausted) contribute their
+/// final value; checkpoints before the first valid observation contribute
+/// `fallback` (mean valid value of the space — an uninformative prior).
+pub fn run_mae(best_curve: &[f64], global_min: f64, fallback: f64) -> f64 {
+    let cps = checkpoints();
+    let mut total = 0.0;
+    for cp in &cps {
+        let v = if best_curve.is_empty() {
+            fallback
+        } else {
+            let idx = (*cp - 1).min(best_curve.len() - 1);
+            let b = best_curve[idx];
+            if b.is_finite() {
+                b
+            } else {
+                fallback
+            }
+        };
+        total += (v - global_min).abs();
+    }
+    total / cps.len() as f64
+}
+
+/// Per-strategy aggregate over repeats.
+#[derive(Clone, Debug)]
+pub struct MaeStats {
+    pub mean: f64,
+    pub std: f64,
+}
+
+pub fn mae_stats(maes: &[f64]) -> MaeStats {
+    MaeStats { mean: mean(maes), std: std_dev(maes) }
+}
+
+/// Mean Deviation Factor across kernels: for each kernel, each strategy's
+/// mean MAE is divided by the mean (over strategies) of the kernel's mean
+/// MAEs — removing the kernel's performance scale; the MDF is the mean of
+/// these factors over kernels, with the std of the factors as the error
+/// bar.
+///
+/// `mae[kernel][strategy]` must be rectangular. Returns `(mdf, std)` per
+/// strategy.
+pub fn mean_deviation_factor(mae: &[Vec<f64>]) -> Vec<(f64, f64)> {
+    assert!(!mae.is_empty());
+    let n_strat = mae[0].len();
+    assert!(mae.iter().all(|row| row.len() == n_strat), "ragged MAE matrix");
+    let mut factors: Vec<Vec<f64>> = vec![Vec::with_capacity(mae.len()); n_strat];
+    for row in mae {
+        let kernel_mean = mean(row);
+        assert!(kernel_mean > 0.0, "degenerate kernel MAE row");
+        for (s, &v) in row.iter().enumerate() {
+            factors[s].push(v / kernel_mean);
+        }
+    }
+    factors.iter().map(|f| (mean(f), std_dev(f))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoints_match_paper() {
+        assert_eq!(checkpoints(), vec![40, 60, 80, 100, 120, 140, 160, 180, 200, 220]);
+    }
+
+    #[test]
+    fn mae_of_perfect_run_is_zero() {
+        let curve = vec![5.0; 220];
+        assert_eq!(run_mae(&curve, 5.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn mae_averages_checkpoints() {
+        // Curve at 6.0 until eval 100, then 5.0: checkpoints 40..100 (the
+        // checkpoint index is eval−1) give 1.0; later ones 0.0.
+        let mut curve = vec![6.0; 220];
+        for v in curve.iter_mut().skip(100) {
+            *v = 5.0;
+        }
+        let mae = run_mae(&curve, 5.0, 100.0);
+        // Checkpoints ≤ 100: 40, 60, 80, 100 → curve[idx≤99] = 6.0 → 4 of 10.
+        assert!((mae - 0.4).abs() < 1e-12, "mae {mae}");
+    }
+
+    #[test]
+    fn short_curves_extend_with_final_value() {
+        let curve = vec![7.0; 50]; // space exhausted at 50 evals
+        assert_eq!(run_mae(&curve, 5.0, 100.0), 2.0);
+    }
+
+    #[test]
+    fn infinite_prefix_uses_fallback() {
+        let mut curve = vec![f64::INFINITY; 220];
+        for v in curve.iter_mut().skip(59) {
+            *v = 5.0;
+        }
+        let mae = run_mae(&curve, 5.0, 15.0);
+        // Checkpoint 40 hits the fallback (10.0 error); all others 0.
+        assert!((mae - 1.0).abs() < 1e-12, "mae {mae}");
+    }
+
+    #[test]
+    fn mdf_normalizes_scale() {
+        // Two kernels with wildly different scales, same relative ranking:
+        // strategy A twice as good as B on both → identical factors.
+        let mae = vec![vec![1.0, 2.0], vec![100.0, 200.0]];
+        let mdf = mean_deviation_factor(&mae);
+        assert!((mdf[0].0 - 2.0 / 3.0).abs() < 1e-12);
+        assert!((mdf[1].0 - 4.0 / 3.0).abs() < 1e-12);
+        assert!(mdf[0].1 < 1e-12 && mdf[1].1 < 1e-12, "identical factors → zero std");
+    }
+
+    #[test]
+    fn mdf_lower_is_better_ordering_preserved() {
+        let mae = vec![vec![1.0, 5.0, 3.0], vec![2.0, 9.0, 4.0]];
+        let mdf = mean_deviation_factor(&mae);
+        assert!(mdf[0].0 < mdf[2].0 && mdf[2].0 < mdf[1].0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: metrics (§IV-A), the threaded runner, and drivers
+//! regenerating every table and figure of the paper.
+
+pub mod figures;
+pub mod hypertune;
+pub mod metrics;
+pub mod runner;
+
+pub use figures::Options;
+pub use runner::{run_comparison, run_strategy, StrategyOutcome, BUDGET, REPEATS, REPEATS_RANDOM};

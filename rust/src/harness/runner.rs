@@ -1,0 +1,172 @@
+//! Experiment runner: executes (strategy × repeat) jobs across threads
+//! with deterministic per-job seeding and aggregates best-found curves and
+//! MAE statistics (§IV-A protocol: 220 evaluations, 35 repeats, 100 for
+//! random search).
+
+use std::sync::Arc;
+
+use crate::harness::metrics::{mae_stats, run_mae, MaeStats};
+use crate::objective::{Objective, TableObjective};
+use crate::strategies::registry::by_name;
+use crate::util::pool::run_parallel;
+use crate::util::rng::Rng;
+
+/// §IV-A defaults.
+pub const BUDGET: usize = 220;
+pub const REPEATS: usize = 35;
+pub const REPEATS_RANDOM: usize = 100;
+
+/// Repeats for a strategy under a global scale factor (for quick runs).
+pub fn repeats_for(strategy: &str, scale: f64) -> usize {
+    let base = if strategy == "random" { REPEATS_RANDOM } else { REPEATS };
+    ((base as f64 * scale).round() as usize).max(3)
+}
+
+/// Aggregated outcome of one strategy on one objective.
+#[derive(Clone, Debug)]
+pub struct StrategyOutcome {
+    pub name: String,
+    /// Mean best-found value after each evaluation (over repeats);
+    /// entries before any valid observation are the fallback value.
+    pub mean_curve: Vec<f64>,
+    /// Per-repeat MAE values.
+    pub maes: Vec<f64>,
+    pub mae: MaeStats,
+    /// Per-repeat final best values.
+    pub finals: Vec<f64>,
+}
+
+/// Run one strategy `repeats` times on a shared objective.
+pub fn run_strategy(
+    obj: &Arc<TableObjective>,
+    strategy: &str,
+    budget: usize,
+    repeats: usize,
+    base_seed: u64,
+    threads: usize,
+) -> StrategyOutcome {
+    let global_min = obj.known_minimum().expect("table objective knows its minimum");
+    let fallback = {
+        let vals: Vec<f64> = obj.table().iter().filter_map(|e| e.value()).collect();
+        crate::util::linalg::mean(&vals)
+    };
+
+    let jobs: Vec<_> = (0..repeats)
+        .map(|rep| {
+            let obj = Arc::clone(obj);
+            let name = strategy.to_string();
+            move || {
+                let s = by_name(&name).unwrap_or_else(|| panic!("unknown strategy {name}"));
+                // Deterministic independent stream per (strategy, repeat).
+                let mut seeder = Rng::with_stream(base_seed, fxhash(&name));
+                let mut rng = seeder.split(rep as u64 + 1);
+                let trace = s.run(obj.as_ref(), budget, &mut rng);
+                trace.best_curve()
+            }
+        })
+        .collect();
+    let curves = run_parallel(jobs, threads);
+
+    // Aggregate: mean curve (finite-ified), per-repeat MAE, finals.
+    let mut mean_curve = vec![0.0; budget];
+    for c in &curves {
+        for i in 0..budget {
+            let v = if c.is_empty() {
+                fallback
+            } else {
+                let x = c[i.min(c.len() - 1)];
+                if x.is_finite() {
+                    x
+                } else {
+                    fallback
+                }
+            };
+            mean_curve[i] += v;
+        }
+    }
+    for v in mean_curve.iter_mut() {
+        *v /= curves.len() as f64;
+    }
+    let maes: Vec<f64> = curves.iter().map(|c| run_mae(c, global_min, fallback)).collect();
+    let finals: Vec<f64> = curves
+        .iter()
+        .map(|c| c.last().copied().filter(|v| v.is_finite()).unwrap_or(fallback))
+        .collect();
+    StrategyOutcome { name: strategy.to_string(), mean_curve, mae: mae_stats(&maes), maes, finals }
+}
+
+/// Run a whole comparison (several strategies on one objective).
+pub fn run_comparison(
+    obj: &Arc<TableObjective>,
+    strategies: &[&str],
+    budget: usize,
+    repeat_scale: f64,
+    base_seed: u64,
+    threads: usize,
+) -> Vec<StrategyOutcome> {
+    strategies
+        .iter()
+        .map(|s| run_strategy(obj, s, budget, repeats_for(s, repeat_scale), base_seed, threads))
+        .collect()
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::Eval;
+    use crate::space::{Param, SearchSpace};
+
+    fn toy_obj() -> Arc<TableObjective> {
+        let vals: Vec<i64> = (0..40).collect();
+        let space = SearchSpace::build("toy", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+        let table: Vec<Eval> = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                Eval::Valid(2.0 + (p[0] - 0.3).powi(2) + (p[1] - 0.6).powi(2))
+            })
+            .collect();
+        Arc::new(TableObjective::new(space, table))
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let obj = toy_obj();
+        let a = run_strategy(&obj, "random", 60, 5, 99, 1);
+        let b = run_strategy(&obj, "random", 60, 5, 99, 4);
+        assert_eq!(a.mean_curve, b.mean_curve, "parallelism must not change results");
+        assert_eq!(a.maes, b.maes);
+    }
+
+    #[test]
+    fn outcomes_have_expected_shapes() {
+        let obj = toy_obj();
+        let out = run_comparison(&obj, &["random", "mls"], 60, 0.1, 1, 2);
+        assert_eq!(out.len(), 2);
+        for o in &out {
+            assert_eq!(o.mean_curve.len(), 60);
+            assert!(o.maes.len() >= 3);
+            assert!(o.mae.mean >= 0.0);
+            // Mean curve is non-increasing (best-so-far).
+            for w in o.mean_curve.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn repeats_for_scales() {
+        assert_eq!(repeats_for("random", 1.0), 100);
+        assert_eq!(repeats_for("ei", 1.0), 35);
+        assert_eq!(repeats_for("ei", 0.1), 4);
+        assert_eq!(repeats_for("ei", 0.01), 3); // floor
+    }
+}

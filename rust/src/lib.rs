@@ -1,0 +1,29 @@
+//! # ktbo — Bayesian Optimization for auto-tuning GPU kernels
+//!
+//! Production-grade reproduction of Willemsen, van Nieuwpoort & van
+//! Werkhoven, *"Bayesian Optimization for auto-tuning GPU kernels"* (2021)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the auto-tuning coordinator: search-space
+//!   engine, GPU performance-model simulator, Gaussian-process surrogate,
+//!   the paper's BO strategies (contextual variance, `multi`,
+//!   `advanced multi`), the baseline strategy zoo, and the experiment
+//!   harness that regenerates every table and figure.
+//! - **Layer 2** — a JAX-authored GP fit+predict graph, AOT-lowered to HLO
+//!   text at build time (`python/compile/model.py`).
+//! - **Layer 1** — a Pallas kernel for the exhaustive GP posterior
+//!   prediction hot spot (`python/compile/kernels/gp_predict.py`),
+//!   executed from Rust through PJRT (`runtime`).
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bo;
+pub mod gp;
+pub mod gpusim;
+pub mod harness;
+pub mod objective;
+pub mod runtime;
+pub mod space;
+pub mod strategies;
+pub mod util;

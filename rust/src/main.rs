@@ -1,0 +1,201 @@
+//! `ktbo` — CLI launcher for the Kernel Tuner BO reproduction.
+//!
+//! Subcommands:
+//!   spaces                         print Table II/III-style space stats
+//!   tune <kernel> <gpu>            tune one kernel (simulation mode)
+//!   experiment <id>                regenerate a paper table/figure
+//!                                  (fig1..fig7, table1..table3, headline, all)
+//!
+//! Common flags: --strategy <name> --budget N --seed N --repeat-scale F
+//!               --threads N --out DIR --backend native|xla --noise F
+
+use ktbo::bo::{Acq, BoConfig, BoStrategy};
+use ktbo::gpusim::device::Device;
+use ktbo::harness::figures as figs;
+use ktbo::harness::Options;
+use ktbo::objective::Objective;
+use ktbo::strategies::registry::{all_names, by_name};
+use ktbo::strategies::Strategy;
+use ktbo::util::cli::Args;
+use ktbo::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positionals.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "spaces" => cmd_spaces(&args),
+        "tune" => cmd_tune(&args),
+        "experiment" => cmd_experiment(&args),
+        "hypertune" => cmd_hypertune(&args),
+        _ => usage(),
+    }
+}
+
+fn usage() {
+    println!("ktbo — Bayesian Optimization for auto-tuning GPU kernels (reproduction)");
+    println!();
+    println!("USAGE:");
+    println!("  ktbo spaces");
+    println!("  ktbo tune <kernel> <gpu> [--strategy NAME] [--budget N] [--seed N] [--backend native|xla]");
+    println!("  ktbo experiment <fig1..fig7|table1..table3|headline|ablation|extended|noise|all>");
+    println!("  ktbo hypertune [--repeat-scale F] [--top N]");
+    println!("                  [--repeat-scale F] [--seed N] [--threads N] [--out DIR]");
+    println!();
+    println!("kernels:    gemm convolution pnpoly expdist adding");
+    println!("gpus:       titanx 2070super a100");
+    println!("strategies: {}", all_names().join(" "));
+}
+
+fn cmd_hypertune(args: &Args) {
+    let opts = Options {
+        repeat_scale: args.f64_or("repeat-scale", 0.2),
+        seed: args.u64_or("seed", 20210601),
+        threads: args.usize_or("threads", ktbo::util::pool::default_threads()),
+        out_dir: args.str_or("out", "results"),
+    };
+    std::fs::create_dir_all(&opts.out_dir).expect("create out dir");
+    let report = ktbo::harness::hypertune::hypertune(&opts, args.usize_or("top", 15));
+    println!("{report}");
+    let _ = std::fs::write(std::path::Path::new(&opts.out_dir).join("hypertune.txt"), &report);
+}
+
+fn cmd_spaces(args: &Args) {
+    println!(
+        "{}",
+        figs::table_spaces(&Device::all(), &["gemm", "convolution", "pnpoly", "expdist", "adding"])
+    );
+    // Optional simulation-mode cache export (Kernel Tuner interchange).
+    if let Some(dir) = args.get("export") {
+        for dev in Device::all() {
+            for kernel in ["gemm", "convolution", "pnpoly", "expdist", "adding"] {
+                let k = ktbo::gpusim::kernels::kernel_by_name(kernel).unwrap();
+                let sim = ktbo::gpusim::SimulatedSpace::build(k.as_ref(), &dev);
+                let file = format!("{dir}/{kernel}_{}.json", dev.name.to_lowercase().replace(' ', "_"));
+                ktbo::objective::cache::write_cache(&sim, std::path::Path::new(&file)).expect("write cache");
+                println!("exported {file}");
+            }
+        }
+    }
+}
+
+fn cmd_tune(args: &Args) {
+    let kernel = args.positionals.get(1).map(String::as_str).unwrap_or("gemm");
+    let gpu = args.positionals.get(2).map(String::as_str).unwrap_or("titanx");
+    let Some(dev) = Device::by_name(gpu) else {
+        eprintln!("unknown GPU '{gpu}'");
+        std::process::exit(2);
+    };
+    let strategy_name = args.str_or("strategy", "advanced_multi");
+    let budget = args.usize_or("budget", 220);
+    let seed = args.u64_or("seed", 42);
+
+    // Simulation-mode cache file takes precedence over the built-in
+    // simulator (Kernel Tuner cache interchange).
+    let obj: std::sync::Arc<ktbo::objective::TableObjective> = match args.get("cache") {
+        Some(path) => {
+            let (o, k, d) = ktbo::objective::cache::load_cache(std::path::Path::new(path))
+                .unwrap_or_else(|e| {
+                    eprintln!("failed to load cache: {e}");
+                    std::process::exit(2);
+                });
+            println!("loaded cache: kernel={k} device={d} ({} configs)", o.space().len());
+            std::sync::Arc::new(o)
+        }
+        None => figs::objective_for(kernel, &dev),
+    };
+    let strategy: Box<dyn Strategy> = if args.str_or("backend", "native") == "xla" {
+        // XLA-compiled GP surrogate via PJRT artifacts (Layers 1+2).
+        let acq = match strategy_name.as_str() {
+            "poi" => Acq::Poi,
+            "lcb" => Acq::Lcb,
+            _ => Acq::Ei,
+        };
+        let cfg = BoConfig::single(acq);
+        match ktbo::runtime::xla_backend(&args.str_or("artifacts", "artifacts")) {
+            Ok(backend) => Box::new(BoStrategy::with_backend("bo-xla", cfg, backend)),
+            Err(e) => {
+                eprintln!("failed to initialize XLA backend: {e}");
+                std::process::exit(3);
+            }
+        }
+    } else {
+        match by_name(&strategy_name) {
+            Some(s) => s,
+            None => {
+                eprintln!("unknown strategy '{strategy_name}'");
+                std::process::exit(2);
+            }
+        }
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(seed);
+    let trace = strategy.run(obj.as_ref(), budget, &mut rng);
+    let elapsed = t0.elapsed();
+    match trace.best() {
+        Some((idx, val)) => {
+            println!("kernel={kernel} gpu={} strategy={strategy_name}", dev.name);
+            println!(
+                "evaluations={} best={val:.4} global_min={:.4} ratio={:.3} wall={:.2?}",
+                trace.len(),
+                obj.known_minimum().unwrap(),
+                val / obj.known_minimum().unwrap(),
+                elapsed
+            );
+            println!("best config: {}", obj.space().describe(idx));
+        }
+        None => println!("no valid configuration found in {} evaluations", trace.len()),
+    }
+}
+
+fn cmd_experiment(args: &Args) {
+    let id = args.positionals.get(1).map(String::as_str).unwrap_or("all");
+    let opts = Options {
+        repeat_scale: args.f64_or("repeat-scale", 1.0),
+        seed: args.u64_or("seed", 20210601),
+        threads: args.usize_or("threads", ktbo::util::pool::default_threads()),
+        out_dir: args.str_or("out", "results"),
+    };
+    std::fs::create_dir_all(&opts.out_dir).expect("create out dir");
+    let run_one = |id: &str| -> Option<String> {
+        let t0 = std::time::Instant::now();
+        let r = match id {
+            "fig1" => Some(figs::fig1(&opts)),
+            "fig2" => Some(figs::fig2(&opts)),
+            "fig3" => Some(figs::fig3(&opts)),
+            "fig4" => Some(figs::fig4(&opts)),
+            "fig5" => Some(figs::fig5(&opts)),
+            "fig6" => Some(figs::fig6(&opts)),
+            "fig7" => Some(figs::fig7(&opts)),
+            "table1" => Some(figs::table1()),
+            "table2" => Some(figs::table2()),
+            "table3" => Some(figs::table3()),
+            "headline" => Some(figs::headline(&opts)),
+            "ablation" => Some(figs::ablation(&opts)),
+            "extended" => Some(figs::extended(&opts)),
+            "noise" => Some(figs::noise(&opts)),
+            _ => None,
+        };
+        r.map(|s| format!("{s}\n[{id} took {:.1?}]\n", t0.elapsed()))
+    };
+    if id == "all" {
+        for id in [
+            "table1", "table2", "table3", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "headline", "ablation", "extended", "noise",
+        ] {
+            let report = run_one(id).unwrap();
+            println!("{report}");
+            let _ = std::fs::write(std::path::Path::new(&opts.out_dir).join(format!("{id}.txt")), &report);
+        }
+    } else {
+        match run_one(id) {
+            Some(report) => {
+                println!("{report}");
+                let _ = std::fs::write(std::path::Path::new(&opts.out_dir).join(format!("{id}.txt")), &report);
+            }
+            None => {
+                eprintln!("unknown experiment '{id}'");
+                std::process::exit(2);
+            }
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Simulation-mode cache files — the interchange format of the paper's
+//! Kernel Tuner contribution ("we extend Kernel Tuner with a simulation
+//! mode, to enable benchmarking of search strategies without the need for
+//! a GPU"). A cache is the full `(configuration) → time | invalid` table
+//! plus the parameter schema, as JSON:
+//!
+//! ```json
+//! {
+//!   "kernel": "gemm", "device": "GTX Titan X",
+//!   "params": [{"name": "MWG", "values": [16, 32, 64, 128]}, ...],
+//!   "entries": [
+//!     {"config": [0, 2, 0, ...], "time": 28.31},
+//!     {"config": [1, 0, 0, ...], "invalid": "compile"},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! `ktbo spaces --export DIR` writes caches for every (kernel, GPU);
+//! `ktbo tune --cache FILE` tunes against one without re-simulating.
+
+use std::path::Path;
+
+use crate::gpusim::SimulatedSpace;
+use crate::objective::{Eval, TableObjective};
+use crate::space::{Config, PValue, Param, SearchSpace};
+use crate::util::json::Json;
+use crate::util::jsonparse;
+
+/// Serialize a simulated space to cache JSON.
+pub fn to_json(sim: &SimulatedSpace) -> Json {
+    let params: Vec<Json> = sim
+        .space
+        .params
+        .iter()
+        .map(|p| {
+            let values: Vec<Json> = p
+                .values
+                .iter()
+                .map(|v| match v {
+                    PValue::Int(x) => Json::Num(*x as f64),
+                    PValue::Float(x) => Json::Num(*x),
+                    PValue::Bool(b) => Json::Bool(*b),
+                    PValue::Str(s) => Json::Str((*s).to_string()),
+                })
+                .collect();
+            Json::obj().set("name", p.name.as_str()).set("values", Json::Arr(values))
+        })
+        .collect();
+    let entries: Vec<Json> = (0..sim.space.len())
+        .map(|i| {
+            let cfg: Vec<Json> =
+                sim.space.config(i).iter().map(|&v| Json::Num(f64::from(v))).collect();
+            let e = Json::obj().set("config", Json::Arr(cfg));
+            match sim.table[i] {
+                Eval::Valid(t) => e.set("time", t),
+                Eval::CompileError => e.set("invalid", "compile"),
+                Eval::RuntimeError => e.set("invalid", "runtime"),
+            }
+        })
+        .collect();
+    Json::obj()
+        .set("kernel", sim.kernel_name.as_str())
+        .set("device", sim.device_name.as_str())
+        .set("params", Json::Arr(params))
+        .set("entries", Json::Arr(entries))
+}
+
+/// Write a cache file.
+pub fn write_cache(sim: &SimulatedSpace, path: &Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, to_json(sim).render())
+}
+
+/// Parse cache JSON back into a table objective (plus kernel/device tags).
+pub fn from_json(j: &Json) -> Result<(TableObjective, String, String), String> {
+    let kernel = j.get("kernel").and_then(Json::as_str).unwrap_or("unknown").to_string();
+    let device = j.get("device").and_then(Json::as_str).unwrap_or("unknown").to_string();
+
+    let params_json = j.get("params").and_then(Json::as_arr).ok_or("missing 'params'")?;
+    let mut params = Vec::with_capacity(params_json.len());
+    for pj in params_json {
+        let name = pj.get("name").and_then(Json::as_str).ok_or("param missing 'name'")?;
+        let values_json = pj.get("values").and_then(Json::as_arr).ok_or("param missing 'values'")?;
+        let values: Vec<PValue> = values_json
+            .iter()
+            .map(|v| match v {
+                Json::Num(x) if *x == x.trunc() => Ok(PValue::Int(*x as i64)),
+                Json::Num(x) => Ok(PValue::Float(*x)),
+                Json::Bool(b) => Ok(PValue::Bool(*b)),
+                // PValue::Str holds &'static str; cache strings get leaked
+                // once per load, which is bounded and intentional.
+                Json::Str(s) => Ok(PValue::Str(Box::leak(s.clone().into_boxed_str()))),
+                _ => Err("unsupported parameter value".to_string()),
+            })
+            .collect::<Result<_, _>>()?;
+        params.push(Param { name: name.to_string(), values });
+    }
+
+    let entries = j.get("entries").and_then(Json::as_arr).ok_or("missing 'entries'")?;
+    let mut configs: Vec<Config> = Vec::with_capacity(entries.len());
+    let mut table: Vec<Eval> = Vec::with_capacity(entries.len());
+    for e in entries {
+        let cfg_json = e.get("config").and_then(Json::as_arr).ok_or("entry missing 'config'")?;
+        let cfg: Config = cfg_json
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as u16).ok_or("bad config index".to_string()))
+            .collect::<Result<_, _>>()?;
+        configs.push(cfg);
+        let eval = if let Some(t) = e.get("time").and_then(Json::as_f64) {
+            Eval::Valid(t)
+        } else {
+            match e.get("invalid").and_then(Json::as_str) {
+                Some("compile") => Eval::CompileError,
+                Some("runtime") => Eval::RuntimeError,
+                _ => return Err("entry has neither 'time' nor a known 'invalid'".into()),
+            }
+        };
+        table.push(eval);
+    }
+    let space = SearchSpace::from_configs(&kernel, params, configs);
+    Ok((TableObjective::new(space, table), kernel, device))
+}
+
+/// Load a cache file.
+pub fn load_cache(path: &Path) -> Result<(TableObjective, String, String), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    from_json(&jsonparse::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::device::Device;
+    use crate::gpusim::kernels::kernel_by_name;
+    use crate::objective::Objective;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_pnpoly_cache() {
+        // PnPoly: mixed valid/invalid table, integer params.
+        let k = kernel_by_name("pnpoly").unwrap();
+        let sim = SimulatedSpace::build(k.as_ref(), &Device::gtx_titan_x());
+        let n = sim.space.len();
+        let inv = sim.invalid_count();
+        let (_, min) = sim.global_minimum();
+
+        let j = to_json(&sim);
+        let (obj, kernel, device) = from_json(&jsonparse::parse(&j.render()).unwrap()).unwrap();
+        assert_eq!(kernel, "pnpoly");
+        assert_eq!(device, "GTX Titan X");
+        assert_eq!(obj.space().len(), n);
+        assert_eq!(obj.table().iter().filter(|e| !e.is_valid()).count(), inv);
+        assert_eq!(obj.known_minimum(), Some(min));
+        // Spot-check a few entries agree exactly.
+        let orig = TableObjective::from_sim(sim);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let i = rng.below(n);
+            assert_eq!(obj.table()[i].value(), orig.table()[i].value(), "entry {i}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let k = kernel_by_name("adding").unwrap();
+        let sim = SimulatedSpace::build(k.as_ref(), &Device::a100());
+        let path = std::env::temp_dir().join("ktbo-cache-test/adding_a100.json");
+        write_cache(&sim, &path).unwrap();
+        let (obj, _, _) = load_cache(&path).unwrap();
+        assert_eq!(obj.space().len(), sim.space.len());
+        // Strategies run on the imported cache exactly as on the original.
+        let s = crate::strategies::registry::by_name("multi").unwrap();
+        let mut rng = Rng::new(3);
+        let t = s.run(&obj, 60, &mut rng);
+        assert!(t.best().is_some());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_json(&jsonparse::parse(r#"{"entries": []}"#).unwrap()).is_err());
+        assert!(from_json(
+            &jsonparse::parse(r#"{"params": [], "entries": [{"config": []}]}"#).unwrap()
+        )
+        .is_err());
+    }
+}

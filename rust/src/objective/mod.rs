@@ -1,0 +1,173 @@
+//! Objective-function abstraction: what a search strategy evaluates.
+//!
+//! Strategies never see the simulator or the GPU directly — only an
+//! `Objective` handing back `Eval`s, mirroring Kernel Tuner where a
+//! strategy's `run` receives a cost function. Three implementations:
+//! a table (simulation mode), a noisy wrapper (live-measurement emulation),
+//! and — in `runtime::pjrt_objective` — a real PJRT-executed kernel grid.
+
+pub mod cache;
+
+use crate::space::SearchSpace;
+use crate::util::rng::Rng;
+
+/// Result of evaluating one configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Eval {
+    /// Objective value (time in ms, or the kernel's custom objective).
+    Valid(f64),
+    /// Toolchain rejected the configuration (stage 2).
+    CompileError,
+    /// Launch/execution failed on the device (stage 3).
+    RuntimeError,
+}
+
+impl Eval {
+    pub fn value(&self) -> Option<f64> {
+        match self {
+            Eval::Valid(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn is_valid(&self) -> bool {
+        matches!(self, Eval::Valid(_))
+    }
+}
+
+/// A tunable objective over an enumerated search space.
+pub trait Objective: Send + Sync {
+    fn space(&self) -> &SearchSpace;
+
+    /// Evaluate configuration `idx`. `rng` models measurement noise; table
+    /// objectives ignore it.
+    fn evaluate(&self, idx: usize, rng: &mut Rng) -> Eval;
+
+    /// The known global minimum (for metrics); simulation-mode tables know
+    /// it, live objectives may not.
+    fn known_minimum(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Simulation-mode objective: replay a fixed table.
+pub struct TableObjective {
+    space: SearchSpace,
+    table: Vec<Eval>,
+    minimum: f64,
+}
+
+impl TableObjective {
+    pub fn new(space: SearchSpace, table: Vec<Eval>) -> TableObjective {
+        assert_eq!(space.len(), table.len());
+        let minimum = table
+            .iter()
+            .filter_map(Eval::value)
+            .fold(f64::INFINITY, f64::min);
+        TableObjective { space, table, minimum }
+    }
+
+    pub fn from_sim(sim: crate::gpusim::SimulatedSpace) -> TableObjective {
+        TableObjective::new(sim.space, sim.table)
+    }
+
+    pub fn table(&self) -> &[Eval] {
+        &self.table
+    }
+}
+
+impl Objective for TableObjective {
+    fn space(&self) -> &SearchSpace {
+        &self.space
+    }
+
+    fn evaluate(&self, idx: usize, _rng: &mut Rng) -> Eval {
+        self.table[idx]
+    }
+
+    fn known_minimum(&self) -> Option<f64> {
+        self.minimum.is_finite().then_some(self.minimum)
+    }
+}
+
+/// Wraps an objective with multiplicative lognormal measurement noise,
+/// emulating live benchmarking (Kernel Tuner averages `iterations` runs;
+/// noise shrinks with √iterations).
+pub struct NoisyObjective<O: Objective> {
+    inner: O,
+    sigma: f64,
+}
+
+impl<O: Objective> NoisyObjective<O> {
+    pub fn new(inner: O, sigma: f64, iterations: usize) -> Self {
+        NoisyObjective { inner, sigma: sigma / (iterations.max(1) as f64).sqrt() }
+    }
+}
+
+impl<O: Objective> Objective for NoisyObjective<O> {
+    fn space(&self) -> &SearchSpace {
+        self.inner.space()
+    }
+
+    fn evaluate(&self, idx: usize, rng: &mut Rng) -> Eval {
+        match self.inner.evaluate(idx, rng) {
+            Eval::Valid(v) => Eval::Valid(v * rng.lognormal(0.0, self.sigma)),
+            e => e,
+        }
+    }
+
+    fn known_minimum(&self) -> Option<f64> {
+        self.inner.known_minimum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Param;
+
+    fn toy() -> TableObjective {
+        let space = SearchSpace::build("toy", vec![Param::ints("a", &[1, 2, 3, 4])], &[]);
+        let table = vec![Eval::Valid(3.0), Eval::Valid(1.5), Eval::CompileError, Eval::Valid(2.0)];
+        TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn table_replays() {
+        let o = toy();
+        let mut rng = Rng::new(1);
+        assert_eq!(o.evaluate(0, &mut rng), Eval::Valid(3.0));
+        assert_eq!(o.evaluate(2, &mut rng), Eval::CompileError);
+        assert_eq!(o.known_minimum(), Some(1.5));
+    }
+
+    #[test]
+    fn noisy_preserves_invalids_and_perturbs_valids() {
+        let o = NoisyObjective::new(toy(), 0.2, 1);
+        let mut rng = Rng::new(2);
+        assert_eq!(o.evaluate(2, &mut rng), Eval::CompileError);
+        let v = o.evaluate(0, &mut rng).value().unwrap();
+        assert!(v > 1.0 && v < 9.0);
+        assert_ne!(v, 3.0);
+    }
+
+    #[test]
+    fn noise_shrinks_with_iterations() {
+        let o1 = NoisyObjective::new(toy(), 0.5, 1);
+        let o32 = NoisyObjective::new(toy(), 0.5, 32);
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let spread = |o: &dyn Objective, rng: &mut Rng| {
+            let vs: Vec<f64> = (0..200).map(|_| o.evaluate(0, rng).value().unwrap()).collect();
+            crate::util::linalg::std_dev(&vs)
+        };
+        assert!(spread(&o32, &mut r2) < spread(&o1, &mut r1) * 0.4);
+    }
+
+    #[test]
+    fn eval_helpers() {
+        assert!(Eval::Valid(1.0).is_valid());
+        assert!(!Eval::RuntimeError.is_valid());
+        assert_eq!(Eval::CompileError.value(), None);
+    }
+}

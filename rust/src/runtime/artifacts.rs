@@ -1,0 +1,93 @@
+//! Artifact registry: discovers and compiles the AOT-lowered HLO graphs.
+//!
+//! Artifact naming contract with `python/compile/aot.py`:
+//!   `gp_fitpredict_n{N}_c{C}.hlo.txt` — GP fit+predict for up to N
+//!     (padded) observations and C (padded) candidates, D padded to 16.
+//!   Inputs  (f32): x[N,16], yc[N] (centered, 0 on padding), mask[N],
+//!                  cand[C,16]
+//!   Outputs (f32 tuple): mu[C] (centered units), var[C]
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits serialized protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Dimension padding shared with the Python side.
+pub const D_PAD: usize = 16;
+
+/// One compiled GP executable for a given (N, C) padding bucket.
+pub struct GpExecutable {
+    pub n_obs: usize,
+    pub n_cand: usize,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// All compiled buckets, plus the PJRT client that owns them.
+pub struct ArtifactSet {
+    pub client: xla::PjRtClient,
+    /// Keyed by observation bucket N → executable (one C per N in v1).
+    pub buckets: BTreeMap<usize, GpExecutable>,
+}
+
+/// Parse `gp_fitpredict_n{N}_c{C}.hlo.txt` → (N, C).
+pub fn parse_artifact_name(name: &str) -> Option<(usize, usize)> {
+    let stem = name.strip_suffix(".hlo.txt")?;
+    let rest = stem.strip_prefix("gp_fitpredict_n")?;
+    let (n_str, c_str) = rest.split_once("_c")?;
+    Some((n_str.parse().ok()?, c_str.parse().ok()?))
+}
+
+impl ArtifactSet {
+    /// Load and compile every GP artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<ArtifactSet, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT client: {e}"))?;
+        let mut buckets = BTreeMap::new();
+        let entries = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some((n, c)) = parse_artifact_name(&name.to_string_lossy()) else { continue };
+            let path: PathBuf = entry.path();
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| format!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| format!("compile {}: {e}", path.display()))?;
+            buckets.insert(n, GpExecutable { n_obs: n, n_cand: c, exe });
+        }
+        if buckets.is_empty() {
+            return Err(format!(
+                "no gp_fitpredict_n*_c*.hlo.txt artifacts in {} — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        Ok(ArtifactSet { client, buckets })
+    }
+
+    /// Smallest bucket that fits `n` observations.
+    pub fn bucket_for(&self, n: usize) -> Option<&GpExecutable> {
+        self.buckets.range(n..).next().map(|(_, e)| e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_artifact_names() {
+        assert_eq!(parse_artifact_name("gp_fitpredict_n64_c4096.hlo.txt"), Some((64, 4096)));
+        assert_eq!(parse_artifact_name("gp_fitpredict_n256_c4096.hlo.txt"), Some((256, 4096)));
+        assert_eq!(parse_artifact_name("model.hlo.txt"), None);
+        assert_eq!(parse_artifact_name("gp_fitpredict_nX_c1.hlo.txt"), None);
+    }
+
+    #[test]
+    fn missing_dir_is_informative_error() {
+        let err = match ArtifactSet::load(Path::new("/nonexistent-ktbo")) {
+            Err(e) => e,
+            Ok(_) => panic!("load must fail"),
+        };
+        assert!(err.contains("/nonexistent-ktbo"));
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime — loads the AOT-compiled GP fit+predict graph (authored in
+//! JAX + Pallas, lowered to HLO text by `python/compile/aot.py`) and
+//! serves it as a `Surrogate` backend for the BO engine. Python never runs
+//! here: artifacts are compiled once at build time (`make artifacts`); the
+//! Rust binary is self-contained afterwards.
+
+pub mod artifacts;
+pub mod surrogate;
+
+pub use artifacts::{ArtifactSet, GpExecutable};
+pub use surrogate::{xla_backend, XlaContext, XlaSurrogate};

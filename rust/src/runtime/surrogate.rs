@@ -1,0 +1,134 @@
+//! `XlaSurrogate`: the GP fit+predict hot path served by the AOT-compiled
+//! XLA executable (Layers 1+2) through PJRT, behind the same `Surrogate`
+//! interface as the pure-Rust backend. Inputs are padded to the artifact's
+//! (N, C) bucket; candidates are processed in C-sized chunks.
+
+use std::sync::{Arc, Mutex};
+
+use crate::bo::{Backend, BoConfig};
+use crate::gp::Surrogate;
+use crate::runtime::artifacts::{ArtifactSet, D_PAD};
+use crate::util::linalg::mean;
+
+/// Shared, thread-safe artifact context (compilation happens once).
+pub struct XlaContext {
+    artifacts: Mutex<ArtifactSet>,
+}
+
+// SAFETY: the `xla` crate wraps PJRT handles in `Rc` + raw pointers and is
+// therefore not auto-Send/Sync, but the underlying PJRT CPU client and
+// loaded executables are thread-safe C++ objects, the `Rc`s never leave
+// this module, and every access goes through the `Mutex` above —
+// serializing all use of the handles.
+unsafe impl Send for XlaContext {}
+unsafe impl Sync for XlaContext {}
+
+impl XlaContext {
+    pub fn load(dir: &str) -> Result<Arc<XlaContext>, String> {
+        let artifacts = ArtifactSet::load(std::path::Path::new(dir))?;
+        Ok(Arc::new(XlaContext { artifacts: Mutex::new(artifacts) }))
+    }
+
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.artifacts.lock().unwrap().buckets.keys().copied().collect()
+    }
+}
+
+/// Per-run surrogate handle.
+pub struct XlaSurrogate {
+    ctx: Arc<XlaContext>,
+}
+
+impl XlaSurrogate {
+    pub fn new(ctx: Arc<XlaContext>) -> XlaSurrogate {
+        XlaSurrogate { ctx }
+    }
+}
+
+impl Surrogate for XlaSurrogate {
+    fn fit_predict(
+        &mut self,
+        x: &[f64],
+        y: &[f64],
+        dims: usize,
+        cand: &[f64],
+        mu: &mut [f64],
+        var: &mut [f64],
+    ) -> Result<(), String> {
+        let n = y.len();
+        assert_eq!(x.len(), n * dims);
+        assert!(dims <= D_PAD, "dims {dims} exceeds artifact padding {D_PAD}");
+        let m = cand.len() / dims;
+        assert!(mu.len() >= m && var.len() >= m);
+
+        let artifacts = self.ctx.artifacts.lock().unwrap();
+        let exe = artifacts
+            .bucket_for(n)
+            .ok_or_else(|| format!("no artifact bucket for {n} observations"))?;
+        let (n_pad, c_pad) = (exe.n_obs, exe.n_cand);
+
+        // Pad observations. The graph expects centered y (zero-mean), zero
+        // on padded rows, and a 1/0 mask.
+        let y_mean = mean(y);
+        let mut xf = vec![0.0f32; n_pad * D_PAD];
+        for i in 0..n {
+            for d in 0..dims {
+                xf[i * D_PAD + d] = x[i * dims + d] as f32;
+            }
+        }
+        let mut ycf = vec![0.0f32; n_pad];
+        let mut maskf = vec![0.0f32; n_pad];
+        for i in 0..n {
+            ycf[i] = (y[i] - y_mean) as f32;
+            maskf[i] = 1.0;
+        }
+        let x_lit = xla::Literal::vec1(&xf).reshape(&[n_pad as i64, D_PAD as i64]).map_err(es)?;
+        let yc_lit = xla::Literal::vec1(&ycf);
+        let mask_lit = xla::Literal::vec1(&maskf);
+
+        // Candidate chunks: pad the tail chunk with copies of row 0 (valid
+        // math, results discarded).
+        let mut done = 0usize;
+        while done < m {
+            let take = (m - done).min(c_pad);
+            let mut cf = vec![0.0f32; c_pad * D_PAD];
+            for i in 0..take {
+                for d in 0..dims {
+                    cf[i * D_PAD + d] = cand[(done + i) * dims + d] as f32;
+                }
+            }
+            let c_lit = xla::Literal::vec1(&cf).reshape(&[c_pad as i64, D_PAD as i64]).map_err(es)?;
+            let result = exe
+                .exe
+                .execute::<xla::Literal>(&[x_lit.clone(), yc_lit.clone(), mask_lit.clone(), c_lit])
+                .map_err(es)?[0][0]
+                .to_literal_sync()
+                .map_err(es)?;
+            let (mu_l, var_l) = result.to_tuple2().map_err(es)?;
+            let mu_v: Vec<f32> = mu_l.to_vec().map_err(es)?;
+            let var_v: Vec<f32> = var_l.to_vec().map_err(es)?;
+            for i in 0..take {
+                mu[done + i] = mu_v[i] as f64 + y_mean;
+                var[done + i] = (var_v[i] as f64).max(1e-12);
+            }
+            done += take;
+        }
+        Ok(())
+    }
+
+    fn backend(&self) -> &'static str {
+        "xla"
+    }
+}
+
+fn es<E: std::fmt::Display>(e: E) -> String {
+    e.to_string()
+}
+
+/// Build a BO `Backend` that serves the GP through the XLA artifacts.
+pub fn xla_backend(artifact_dir: &str) -> Result<Backend, String> {
+    let ctx = XlaContext::load(artifact_dir)?;
+    Ok(Backend::OneShot(Arc::new(move |_cfg: &BoConfig| {
+        Box::new(XlaSurrogate::new(Arc::clone(&ctx))) as Box<dyn Surrogate>
+    })))
+}

@@ -1,0 +1,111 @@
+//! Search-space restrictions (Kernel Tuner's `restrictions=`).
+//!
+//! A restriction is a named predicate over a full parameter assignment.
+//! Restrictions model what the paper calls the *first stage* of invalidity
+//! detection: checking individual-parameter / cross-parameter validity
+//! against the programming-model specification *before* compile time.
+//! Configurations failing a restriction are excluded from the search space
+//! entirely (they are not "invalid configs" in the Table II sense — those
+//! are discovered at compile/run time by the objective).
+
+use crate::space::param::{PValue, Param};
+
+/// A typed view of one concrete parameter assignment, by name.
+pub struct Assignment<'a> {
+    params: &'a [Param],
+    indices: &'a [u16],
+}
+
+impl<'a> Assignment<'a> {
+    pub fn new(params: &'a [Param], indices: &'a [u16]) -> Self {
+        debug_assert_eq!(params.len(), indices.len());
+        Assignment { params, indices }
+    }
+
+    fn pos(&self, name: &str) -> usize {
+        self.params
+            .iter()
+            .position(|p| p.name == name)
+            .unwrap_or_else(|| panic!("unknown parameter '{name}'"))
+    }
+
+    pub fn value(&self, name: &str) -> &PValue {
+        let i = self.pos(name);
+        &self.params[i].values[self.indices[i] as usize]
+    }
+
+    /// Integer view (panics for categoricals).
+    pub fn i(&self, name: &str) -> i64 {
+        self.value(name).as_i64()
+    }
+
+    pub fn f(&self, name: &str) -> f64 {
+        self.value(name).as_f64()
+    }
+
+    pub fn b(&self, name: &str) -> bool {
+        self.value(name).as_bool()
+    }
+
+    pub fn s(&self, name: &str) -> &str {
+        self.value(name).as_str()
+    }
+}
+
+/// A named restriction predicate.
+pub struct Restriction {
+    pub name: String,
+    pub pred: Box<dyn Fn(&Assignment) -> bool + Send + Sync>,
+}
+
+impl Restriction {
+    pub fn new(name: &str, pred: impl Fn(&Assignment) -> bool + Send + Sync + 'static) -> Self {
+        Restriction { name: name.into(), pred: Box::new(pred) }
+    }
+
+    pub fn check(&self, a: &Assignment) -> bool {
+        (self.pred)(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> Vec<Param> {
+        vec![
+            Param::ints("bx", &[16, 32, 64]),
+            Param::ints("by", &[1, 2, 4]),
+            Param::bools("pad"),
+        ]
+    }
+
+    #[test]
+    fn assignment_typed_access() {
+        let ps = params();
+        let idx = [2u16, 0, 1];
+        let a = Assignment::new(&ps, &idx);
+        assert_eq!(a.i("bx"), 64);
+        assert_eq!(a.i("by"), 1);
+        assert!(a.b("pad"));
+        assert_eq!(a.f("bx"), 64.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown parameter")]
+    fn unknown_param_panics() {
+        let ps = params();
+        let idx = [0u16, 0, 0];
+        Assignment::new(&ps, &idx).i("nope");
+    }
+
+    #[test]
+    fn restriction_checks() {
+        let ps = params();
+        let r = Restriction::new("threads<=128", |a| a.i("bx") * a.i("by") <= 128);
+        let ok = [1u16, 1, 0]; // 32*2 = 64
+        let bad = [2u16, 2, 0]; // 64*4 = 256
+        assert!(r.check(&Assignment::new(&ps, &ok)));
+        assert!(!r.check(&Assignment::new(&ps, &bad)));
+    }
+}

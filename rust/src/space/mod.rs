@@ -1,0 +1,14 @@
+//! Search-space engine: tunable parameters, restrictions, enumeration,
+//! normalization (§III-D), and neighborhood operators for the
+//! local-search baselines.
+
+pub mod constraint;
+pub mod neighbors;
+pub mod param;
+#[allow(clippy::module_inception)]
+pub mod space;
+
+pub use constraint::{Assignment, Restriction};
+pub use neighbors::{neighbors, Neighborhood};
+pub use param::{PValue, Param};
+pub use space::{Config, SearchSpace};

@@ -1,0 +1,174 @@
+//! Neighborhood operators over the restricted space.
+//!
+//! The local-search baselines (MLS, SA) and the GA mutation operator walk
+//! the space through neighborhoods, mirroring Kernel Tuner's
+//! `get_neighbors` with its "Hamming" and "adjacent" strategies:
+//!
+//! - *Hamming*: configs differing in exactly one parameter (any value).
+//! - *Adjacent*: configs where every parameter index moved by at most 1,
+//!   and at least one moved.
+//!
+//! Restricted spaces make neighborhoods irregular — a Hamming move can
+//! land outside the space — so all operators filter through the space
+//! index and can therefore return fewer (or zero) neighbors.
+
+use crate::space::space::{Config, SearchSpace};
+
+/// Neighborhood flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Neighborhood {
+    Hamming,
+    Adjacent,
+}
+
+/// All neighbors of `idx` under the given flavor, as space indices.
+pub fn neighbors(space: &SearchSpace, idx: usize, kind: Neighborhood) -> Vec<usize> {
+    match kind {
+        Neighborhood::Hamming => hamming(space, idx),
+        Neighborhood::Adjacent => adjacent(space, idx),
+    }
+}
+
+fn hamming(space: &SearchSpace, idx: usize) -> Vec<usize> {
+    let base = space.config(idx).clone();
+    let mut out = Vec::new();
+    for d in 0..space.dims() {
+        let orig = base[d];
+        let mut cand: Config = base.clone();
+        for v in 0..space.params[d].len() as u16 {
+            if v == orig {
+                continue;
+            }
+            cand[d] = v;
+            if let Some(j) = space.index_of(&cand) {
+                out.push(j);
+            }
+        }
+    }
+    out
+}
+
+fn adjacent(space: &SearchSpace, idx: usize) -> Vec<usize> {
+    let base = space.config(idx).clone();
+    let dims = space.dims();
+    let mut out = Vec::new();
+    // Enumerate {-1, 0, +1}^dims deltas, skipping the zero delta. dims ≤ 15
+    // so 3^dims can be large; restrict to deltas touching ≤ 2 params, which
+    // matches Kernel Tuner's practical behaviour of small adjacent moves
+    // while keeping enumeration cheap.
+    for d1 in 0..dims {
+        for s1 in [-1i32, 1] {
+            let Some(c1) = step(&base, d1, s1, space) else { continue };
+            if let Some(j) = space.index_of(&c1) {
+                out.push(j);
+            }
+            for d2 in d1 + 1..dims {
+                for s2 in [-1i32, 1] {
+                    if let Some(c2) = step(&c1, d2, s2, space) {
+                        if let Some(j) = space.index_of(&c2) {
+                            out.push(j);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+fn step(cfg: &Config, d: usize, delta: i32, space: &SearchSpace) -> Option<Config> {
+    let cur = cfg[d] as i32;
+    let next = cur + delta;
+    if next < 0 || next as usize >= space.params[d].len() {
+        return None;
+    }
+    let mut out = cfg.clone();
+    out[d] = next as u16;
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::constraint::Restriction;
+    use crate::space::param::Param;
+
+    fn space() -> SearchSpace {
+        let params = vec![Param::ints("a", &[1, 2, 3, 4]), Param::ints("b", &[10, 20, 30])];
+        SearchSpace::build("toy", params, &[])
+    }
+
+    fn restricted() -> SearchSpace {
+        let params = vec![Param::ints("a", &[1, 2, 3, 4]), Param::ints("b", &[10, 20, 30])];
+        let r = vec![Restriction::new("a+b/10<=5", |x| x.i("a") + x.i("b") / 10 <= 5)];
+        SearchSpace::build("toy-r", params, &r)
+    }
+
+    #[test]
+    fn hamming_counts_in_free_space() {
+        let s = space();
+        let idx = s.index_of(&vec![0, 0]).unwrap();
+        // (4-1) + (3-1) = 5 Hamming neighbors.
+        assert_eq!(neighbors(&s, idx, Neighborhood::Hamming).len(), 5);
+    }
+
+    #[test]
+    fn hamming_neighbors_differ_in_one_param() {
+        let s = space();
+        for i in 0..s.len() {
+            for j in neighbors(&s, i, Neighborhood::Hamming) {
+                let diff = s
+                    .config(i)
+                    .iter()
+                    .zip(s.config(j))
+                    .filter(|(x, y)| x != y)
+                    .count();
+                assert_eq!(diff, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn adjacent_moves_bounded() {
+        let s = space();
+        for i in 0..s.len() {
+            for j in neighbors(&s, i, Neighborhood::Adjacent) {
+                assert_ne!(i, j);
+                for (x, y) in s.config(i).iter().zip(s.config(j)) {
+                    assert!((*x as i32 - *y as i32).abs() <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn restricted_neighbors_stay_valid() {
+        let s = restricted();
+        for i in 0..s.len() {
+            for kind in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+                for j in neighbors(&s, i, kind) {
+                    assert!(j < s.len());
+                    let a = s.assignment(j);
+                    assert!(a.i("a") + a.i("b") / 10 <= 5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_self_neighbor_no_dupes() {
+        let s = space();
+        for i in 0..s.len() {
+            for kind in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+                let ns = neighbors(&s, i, kind);
+                assert!(!ns.contains(&i));
+                let mut sorted = ns.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), ns.len());
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Tunable parameters of mixed types (§III-D1 of the paper).
+//!
+//! GPU-kernel tunables mix integers (block sizes), non-linear integers
+//! (powers of two), booleans (use shared memory?), and categoricals
+//! (algorithm switches). A parameter is a *name* plus an ordered, finite
+//! list of values; the user-given ordering is meaningful (the paper leaves
+//! ordering responsibility with the user rather than one-hot/binary
+//! encoding).
+
+/// A single parameter value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(&'static str),
+}
+
+impl PValue {
+    /// Numeric view used by performance models; booleans map to 0/1,
+    /// strings panic (models must match on `as_str` instead).
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            PValue::Int(x) => *x as f64,
+            PValue::Float(x) => *x,
+            PValue::Bool(b) => {
+                if *b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            PValue::Str(s) => panic!("categorical value '{s}' has no numeric view"),
+        }
+    }
+
+    pub fn as_i64(&self) -> i64 {
+        match self {
+            PValue::Int(x) => *x,
+            PValue::Bool(b) => i64::from(*b),
+            PValue::Float(x) => *x as i64,
+            PValue::Str(s) => panic!("categorical value '{s}' has no integer view"),
+        }
+    }
+
+    pub fn as_bool(&self) -> bool {
+        match self {
+            PValue::Bool(b) => *b,
+            PValue::Int(x) => *x != 0,
+            _ => panic!("value {self:?} has no boolean view"),
+        }
+    }
+
+    pub fn as_str(&self) -> &str {
+        match self {
+            PValue::Str(s) => s,
+            _ => panic!("value {self:?} is not categorical"),
+        }
+    }
+}
+
+impl std::fmt::Display for PValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PValue::Int(x) => write!(f, "{x}"),
+            PValue::Float(x) => write!(f, "{x}"),
+            PValue::Bool(b) => write!(f, "{b}"),
+            PValue::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// A named tunable parameter with its ordered domain.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub values: Vec<PValue>,
+}
+
+impl Param {
+    pub fn ints(name: &str, values: &[i64]) -> Param {
+        Param { name: name.into(), values: values.iter().map(|&v| PValue::Int(v)).collect() }
+    }
+
+    pub fn bools(name: &str) -> Param {
+        Param { name: name.into(), values: vec![PValue::Bool(false), PValue::Bool(true)] }
+    }
+
+    pub fn cats(name: &str, values: &[&'static str]) -> Param {
+        Param { name: name.into(), values: values.iter().map(|&v| PValue::Str(v)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Normalized coordinate of value index `i`: linear spacing by *index*
+    /// (§III-D1 — linear normalization removes the distance distortion of
+    /// non-linear domains like powers of two).
+    pub fn norm(&self, i: usize) -> f64 {
+        if self.values.len() <= 1 {
+            0.0
+        } else {
+            i as f64 / (self.values.len() - 1) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_views() {
+        assert_eq!(PValue::Int(8).as_f64(), 8.0);
+        assert_eq!(PValue::Bool(true).as_f64(), 1.0);
+        assert_eq!(PValue::Float(2.5).as_f64(), 2.5);
+        assert!(PValue::Bool(true).as_bool());
+        assert_eq!(PValue::Str("texture").as_str(), "texture");
+    }
+
+    #[test]
+    #[should_panic]
+    fn categorical_has_no_numeric_view() {
+        let _ = PValue::Str("a").as_f64();
+    }
+
+    #[test]
+    fn normalization_is_linear_in_index() {
+        // Powers of two: indices normalize linearly, not by magnitude.
+        let p = Param::ints("vw", &[1, 2, 4, 8]);
+        assert_eq!(p.norm(0), 0.0);
+        assert!((p.norm(1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p.norm(2) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(p.norm(3), 1.0);
+    }
+
+    #[test]
+    fn singleton_param_norm_zero() {
+        let p = Param::ints("precision", &[32]);
+        assert_eq!(p.norm(0), 0.0);
+    }
+
+    #[test]
+    fn constructors() {
+        assert_eq!(Param::bools("use_padding").len(), 2);
+        assert_eq!(Param::cats("method", &["a", "b", "c"]).len(), 3);
+    }
+}

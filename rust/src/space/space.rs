@@ -1,0 +1,229 @@
+//! The enumerated, restricted, normalized search space (§III-D).
+//!
+//! The paper's core representational choice: a *discrete* search space
+//! where every parameter configuration is known up front, values are
+//! normalized linearly per parameter, and the acquisition function is
+//! optimized *exhaustively over the non-evaluated configurations only*.
+//! This module materializes that representation: the restricted Cartesian
+//! product, the normalized coordinate matrix, and an index for O(1)
+//! membership tests (needed by the neighbor operators of SA/MLS/GA).
+
+use std::collections::HashMap;
+
+use crate::space::constraint::{Assignment, Restriction};
+use crate::space::param::{PValue, Param};
+
+/// A parameter configuration, as per-parameter value indices.
+pub type Config = Vec<u16>;
+
+pub struct SearchSpace {
+    pub name: String,
+    pub params: Vec<Param>,
+    /// All configurations that satisfy the restrictions.
+    configs: Vec<Config>,
+    /// Flattened row-major normalized coordinates: `configs.len() × dims`.
+    norm: Vec<f64>,
+    /// Config -> position in `configs`.
+    index: HashMap<Config, usize>,
+    /// Size of the unrestricted Cartesian product.
+    pub cartesian_size: usize,
+}
+
+impl SearchSpace {
+    /// Enumerate the restricted Cartesian product.
+    pub fn build(name: &str, params: Vec<Param>, restrictions: &[Restriction]) -> SearchSpace {
+        assert!(!params.is_empty());
+        for p in &params {
+            assert!(!p.is_empty(), "parameter {} has empty domain", p.name);
+            assert!(p.len() < u16::MAX as usize);
+        }
+        let dims = params.len();
+        let cartesian_size = params.iter().map(|p| p.len()).product();
+        let mut configs = Vec::new();
+        let mut cursor: Config = vec![0; dims];
+        loop {
+            let a = Assignment::new(&params, &cursor);
+            if restrictions.iter().all(|r| r.check(&a)) {
+                configs.push(cursor.clone());
+            }
+            // Odometer increment.
+            let mut d = dims;
+            loop {
+                if d == 0 {
+                    // Wrapped past the most significant digit: done.
+                    let norm = Self::normalize(&params, &configs);
+                    let index = configs.iter().cloned().zip(0..).collect();
+                    return SearchSpace { name: name.into(), params, configs, norm, index, cartesian_size };
+                }
+                d -= 1;
+                cursor[d] += 1;
+                if (cursor[d] as usize) < params[d].len() {
+                    break;
+                }
+                cursor[d] = 0;
+            }
+        }
+    }
+
+    /// Build from an explicit configuration list (simulation-mode cache
+    /// import: the restrictions that produced the list are not replayed).
+    pub fn from_configs(name: &str, params: Vec<Param>, configs: Vec<Config>) -> SearchSpace {
+        let dims = params.len();
+        for cfg in &configs {
+            assert_eq!(cfg.len(), dims, "config arity mismatch");
+            for (d, &vi) in cfg.iter().enumerate() {
+                assert!((vi as usize) < params[d].len(), "value index out of range");
+            }
+        }
+        let cartesian_size = params.iter().map(|p| p.len()).product();
+        let norm = Self::normalize(&params, &configs);
+        let index = configs.iter().cloned().zip(0..).collect();
+        SearchSpace { name: name.into(), params, configs, norm, index, cartesian_size }
+    }
+
+    fn normalize(params: &[Param], configs: &[Config]) -> Vec<f64> {
+        let dims = params.len();
+        let mut norm = Vec::with_capacity(configs.len() * dims);
+        for cfg in configs {
+            for (d, &vi) in cfg.iter().enumerate() {
+                norm.push(params[d].norm(vi as usize));
+            }
+        }
+        norm
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    pub fn dims(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn config(&self, i: usize) -> &Config {
+        &self.configs[i]
+    }
+
+    /// Normalized coordinates of config `i` (length = dims).
+    pub fn point(&self, i: usize) -> &[f64] {
+        let d = self.dims();
+        &self.norm[i * d..(i + 1) * d]
+    }
+
+    /// The full normalized matrix, row-major `len × dims`.
+    pub fn points(&self) -> &[f64] {
+        &self.norm
+    }
+
+    pub fn index_of(&self, cfg: &Config) -> Option<usize> {
+        self.index.get(cfg).copied()
+    }
+
+    /// Typed assignment view of config `i`.
+    pub fn assignment(&self, i: usize) -> Assignment<'_> {
+        Assignment::new(&self.params, &self.configs[i])
+    }
+
+    /// Value of parameter `d` in config `i`.
+    pub fn value(&self, i: usize, d: usize) -> &PValue {
+        &self.params[d].values[self.configs[i][d] as usize]
+    }
+
+    /// Human-readable rendering of config `i`.
+    pub fn describe(&self, i: usize) -> String {
+        self.params
+            .iter()
+            .zip(self.configs[i].iter())
+            .map(|(p, &vi)| format!("{}={}", p.name, p.values[vi as usize]))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// Fraction of the Cartesian product that survives the restrictions.
+    pub fn restriction_survival(&self) -> f64 {
+        self.configs.len() as f64 / self.cartesian_size as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::constraint::Restriction;
+
+    fn small_space() -> SearchSpace {
+        let params = vec![
+            Param::ints("bx", &[16, 32, 64]),
+            Param::ints("tile", &[1, 2, 4, 8]),
+            Param::bools("pad"),
+        ];
+        let restr = vec![Restriction::new("bx*tile<=128", |a| a.i("bx") * a.i("tile") <= 128)];
+        SearchSpace::build("toy", params, &restr)
+    }
+
+    #[test]
+    fn cartesian_and_restricted_sizes() {
+        let s = small_space();
+        assert_eq!(s.cartesian_size, 3 * 4 * 2);
+        // Valid (bx,tile): 16×{1,2,4,8}, 32×{1,2,4}, 64×{1,2} = 9 pairs × 2 pad values.
+        assert_eq!(s.len(), 18);
+    }
+
+    #[test]
+    fn no_restrictions_gives_cartesian() {
+        let params = vec![Param::ints("a", &[1, 2]), Param::ints("b", &[1, 2, 3])];
+        let s = SearchSpace::build("free", params, &[]);
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.cartesian_size, 6);
+        assert!((s.restriction_survival() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_configs_satisfy_restrictions() {
+        let s = small_space();
+        for i in 0..s.len() {
+            let a = s.assignment(i);
+            assert!(a.i("bx") * a.i("tile") <= 128, "config {i} violates restriction");
+        }
+    }
+
+    #[test]
+    fn index_roundtrips() {
+        let s = small_space();
+        for i in 0..s.len() {
+            assert_eq!(s.index_of(s.config(i)), Some(i));
+        }
+        assert_eq!(s.index_of(&vec![2, 3, 0]), None); // 64*8 violates
+    }
+
+    #[test]
+    fn normalized_in_unit_cube() {
+        let s = small_space();
+        assert_eq!(s.points().len(), s.len() * s.dims());
+        for i in 0..s.len() {
+            for &x in s.point(i) {
+                assert!((0.0..=1.0).contains(&x));
+            }
+        }
+    }
+
+    #[test]
+    fn points_distinct() {
+        let s = small_space();
+        for i in 0..s.len() {
+            for j in i + 1..s.len() {
+                assert_ne!(s.point(i), s.point(j), "configs {i},{j} collide in normalized space");
+            }
+        }
+    }
+
+    #[test]
+    fn describe_mentions_all_params() {
+        let s = small_space();
+        let d = s.describe(0);
+        assert!(d.contains("bx=") && d.contains("tile=") && d.contains("pad="));
+    }
+}

@@ -1,0 +1,170 @@
+//! Differential Evolution (DE/rand/1/bin) over the discrete normalized
+//! space — another Kernel Tuner strategy for the extended comparison.
+//! Trial vectors are built in the continuous cube and snapped to the
+//! nearest restricted configuration; unique-evaluation budget semantics.
+
+use crate::objective::Objective;
+use crate::strategies::{CachedEvaluator, Strategy, Trace};
+use crate::util::rng::Rng;
+
+pub struct DifferentialEvolution {
+    pub pop_size: usize,
+    /// Differential weight F.
+    pub f: f64,
+    /// Crossover probability CR.
+    pub cr: f64,
+}
+
+impl Default for DifferentialEvolution {
+    fn default() -> Self {
+        DifferentialEvolution { pop_size: 20, f: 0.8, cr: 0.9 }
+    }
+}
+
+fn snap(space: &crate::space::SearchSpace, p: &[f64]) -> usize {
+    let dims = space.dims();
+    let pts = space.points();
+    let mut best = (0usize, f64::INFINITY);
+    for i in 0..space.len() {
+        let q = &pts[i * dims..(i + 1) * dims];
+        let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best.0
+}
+
+impl Strategy for DifferentialEvolution {
+    fn name(&self) -> String {
+        "differential_evolution".into()
+    }
+
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let space = obj.space();
+        let dims = space.dims();
+        let mut ev = CachedEvaluator::new(obj, max_fevals);
+
+        // Population of continuous agents with their evaluated fitness.
+        let mut pop: Vec<Vec<f64>> =
+            (0..self.pop_size).map(|_| (0..dims).map(|_| rng.f64()).collect()).collect();
+        let mut fit: Vec<f64> = Vec::with_capacity(self.pop_size);
+        for agent in &pop {
+            let Some(e) = ev.eval(snap(space, agent), rng) else { break };
+            fit.push(e.value().unwrap_or(f64::INFINITY));
+        }
+        fit.resize(self.pop_size, f64::INFINITY);
+
+        let mut stale = 0usize;
+        while ev.budget_left() && ev.n_seen() < space.len() {
+            let mut improved = false;
+            for i in 0..self.pop_size {
+                // Three distinct agents a, b, c ≠ i.
+                let mut picks = [0usize; 3];
+                for slot in 0..3 {
+                    loop {
+                        let c = rng.below(self.pop_size);
+                        if c != i && !picks[..slot].contains(&c) {
+                            picks[slot] = c;
+                            break;
+                        }
+                    }
+                }
+                let (a, b, c) = (picks[0], picks[1], picks[2]);
+                // Binomial crossover of the mutant v = a + F (b − c).
+                let jrand = rng.below(dims);
+                let mut trial = pop[i].clone();
+                for d in 0..dims {
+                    if d == jrand || rng.chance(self.cr) {
+                        trial[d] = (pop[a][d] + self.f * (pop[b][d] - pop[c][d])).clamp(0.0, 1.0);
+                    }
+                }
+                let before = ev.n_seen();
+                let Some(e) = ev.eval(snap(space, &trial), rng) else { return ev.into_trace() };
+                let tv = e.value().unwrap_or(f64::INFINITY);
+                if tv < fit[i] {
+                    pop[i] = trial;
+                    fit[i] = tv;
+                    improved = true;
+                }
+                if ev.n_seen() > before {
+                    stale = 0;
+                } else {
+                    stale += 1;
+                }
+            }
+            if !improved && stale > 2 * self.pop_size {
+                // Converged population re-proposing cached configs: restart
+                // the worst half to keep the search alive.
+                let mut order: Vec<usize> = (0..self.pop_size).collect();
+                order.sort_by(|&x, &y| fit[y].partial_cmp(&fit[x]).unwrap());
+                for &k in order.iter().take(self.pop_size / 2) {
+                    pop[k] = (0..dims).map(|_| rng.f64()).collect();
+                    fit[k] = f64::INFINITY;
+                }
+                stale = 0;
+            }
+        }
+        ev.into_trace()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{Eval, TableObjective};
+    use crate::space::{Param, SearchSpace};
+
+    fn rastrigin_like() -> TableObjective {
+        // Mildly multimodal 2D surface.
+        let vals: Vec<i64> = (0..24).collect();
+        let space = SearchSpace::build("r", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+        let table = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                let base = (p[0] - 0.25).powi(2) + (p[1] - 0.75).powi(2);
+                let ripple = 0.02 * ((p[0] * 20.0).sin() + (p[1] * 20.0).cos());
+                Eval::Valid(1.0 + base + ripple + 0.04)
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn optimizes_multimodal_surface() {
+        let o = rastrigin_like();
+        let mut rng = Rng::new(8);
+        let t = DifferentialEvolution::default().run(&o, 150, &mut rng);
+        let global = {
+            let mut m = f64::INFINITY;
+            for e in o.table() {
+                if let Some(v) = e.value() {
+                    m = m.min(v);
+                }
+            }
+            m
+        };
+        assert!(t.best().unwrap().1 < global + 0.05, "best {}", t.best().unwrap().1);
+    }
+
+    #[test]
+    fn budget_and_uniqueness() {
+        let o = rastrigin_like();
+        let mut rng = Rng::new(9);
+        let t = DifferentialEvolution::default().run(&o, 60, &mut rng);
+        assert!(t.len() <= 60);
+        let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
+        assert_eq!(set.len(), t.len());
+    }
+
+    #[test]
+    fn exhausts_tiny_space() {
+        let space = SearchSpace::build("t", vec![Param::ints("a", &(0..5).collect::<Vec<_>>())], &[]);
+        let table = (0..5).map(|i| Eval::Valid((5 - i) as f64)).collect();
+        let o = TableObjective::new(space, table);
+        let mut rng = Rng::new(10);
+        let t = DifferentialEvolution::default().run(&o, 200, &mut rng);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.best().unwrap().1, 1.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Genetic Algorithm, following Kernel Tuner's defaults: population of 20,
+//! two-point crossover, per-gene mutation, rank-weighted selection.
+//! Offspring violating the space restrictions are repaired by mutation or
+//! replaced by random configurations; invalid (compile/runtime) members
+//! get infinite fitness but their evaluation costs budget.
+
+use crate::objective::{Eval, Objective};
+use crate::space::{Config, SearchSpace};
+use crate::strategies::{CachedEvaluator, Strategy, Trace};
+use crate::util::rng::Rng;
+
+pub struct GeneticAlgorithm {
+    pub pop_size: usize,
+    pub mutation_rate: f64,
+}
+
+impl Default for GeneticAlgorithm {
+    fn default() -> Self {
+        GeneticAlgorithm { pop_size: 20, mutation_rate: 0.1 }
+    }
+}
+
+impl GeneticAlgorithm {
+    fn random_config(space: &SearchSpace, rng: &mut Rng) -> usize {
+        rng.below(space.len())
+    }
+
+    /// Two-point crossover in parameter space; returns the child's value
+    /// indices (may violate restrictions).
+    fn crossover(a: &Config, b: &Config, rng: &mut Rng) -> Config {
+        let d = a.len();
+        if d < 2 {
+            return a.clone();
+        }
+        let mut p1 = rng.below(d);
+        let mut p2 = rng.below(d);
+        if p1 > p2 {
+            std::mem::swap(&mut p1, &mut p2);
+        }
+        let mut child = a.clone();
+        child[p1..=p2].copy_from_slice(&b[p1..=p2]);
+        child
+    }
+
+    fn mutate(space: &SearchSpace, cfg: &mut Config, rate: f64, rng: &mut Rng) {
+        for (d, v) in cfg.iter_mut().enumerate() {
+            if rng.chance(rate) {
+                *v = rng.below(space.params[d].len()) as u16;
+            }
+        }
+    }
+
+    /// Map a (possibly restriction-violating) genome to a space index:
+    /// try as-is, then a few mutation repairs, then give up to random.
+    fn legalize(space: &SearchSpace, mut cfg: Config, rng: &mut Rng) -> usize {
+        for _ in 0..10 {
+            if let Some(idx) = space.index_of(&cfg) {
+                return idx;
+            }
+            Self::mutate(space, &mut cfg, 0.3, rng);
+        }
+        Self::random_config(space, rng)
+    }
+}
+
+impl Strategy for GeneticAlgorithm {
+    fn name(&self) -> String {
+        "genetic_algorithm".into()
+    }
+
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let space = obj.space();
+        let mut ev = CachedEvaluator::new(obj, max_fevals);
+
+        // Initial population.
+        let mut pop: Vec<usize> = (0..self.pop_size).map(|_| Self::random_config(space, rng)).collect();
+        let mut fitness: Vec<f64> = Vec::with_capacity(pop.len());
+        for &idx in &pop {
+            match ev.eval(idx, rng) {
+                Some(Eval::Valid(v)) => fitness.push(v),
+                Some(_) => fitness.push(f64::INFINITY),
+                None => break,
+            }
+        }
+        fitness.resize(pop.len(), f64::INFINITY);
+
+        while ev.budget_left() && ev.n_seen() < space.len() {
+            // Rank-weighted parent selection (lower objective = fitter).
+            let mut order: Vec<usize> = (0..pop.len()).collect();
+            order.sort_by(|&a, &b| fitness[a].partial_cmp(&fitness[b]).unwrap());
+            let pick_parent = |rng: &mut Rng| -> usize {
+                // Linear rank weights: rank 0 (best) weight n, rank n−1 weight 1.
+                let n = order.len();
+                let total = n * (n + 1) / 2;
+                let mut ticket = rng.below(total);
+                for (rank, &i) in order.iter().enumerate() {
+                    let w = n - rank;
+                    if ticket < w {
+                        return pop[i];
+                    }
+                    ticket -= w;
+                }
+                pop[order[0]]
+            };
+
+            // Next generation (elitism: keep the best).
+            let elite = pop[order[0]];
+            let mut next: Vec<usize> = vec![elite];
+            while next.len() < self.pop_size {
+                let pa = space.config(pick_parent(rng)).clone();
+                let pb = space.config(pick_parent(rng)).clone();
+                let mut child = Self::crossover(&pa, &pb, rng);
+                Self::mutate(space, &mut child, self.mutation_rate, rng);
+                next.push(Self::legalize(space, child, rng));
+            }
+            pop = next;
+            fitness.clear();
+            for &idx in &pop {
+                match ev.eval(idx, rng) {
+                    Some(Eval::Valid(v)) => fitness.push(v),
+                    Some(_) => fitness.push(f64::INFINITY),
+                    None => {
+                        fitness.resize(pop.len(), f64::INFINITY);
+                        return ev.into_trace();
+                    }
+                }
+            }
+        }
+        ev.into_trace()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::TableObjective;
+    use crate::space::{Param, Restriction};
+
+    fn constrained_bowl() -> TableObjective {
+        let vals: Vec<i64> = (0..16).collect();
+        let space = SearchSpace::build(
+            "cb",
+            vec![Param::ints("x", &vals), Param::ints("y", &vals)],
+            &[Restriction::new("x+y even", |a| (a.i("x") + a.i("y")) % 2 == 0)],
+        );
+        let table = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                Eval::Valid(1.0 + (p[0] - 0.4).powi(2) + (p[1] - 0.6).powi(2))
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn improves_and_respects_restrictions() {
+        let o = constrained_bowl();
+        let mut rng = Rng::new(7);
+        let t = GeneticAlgorithm::default().run(&o, 100, &mut rng);
+        assert!(t.len() <= 100);
+        let best = t.best().unwrap().1;
+        assert!(best < 1.05, "best {best}");
+        // Every record is a real space index (legalized).
+        for (i, _) in &t.records {
+            assert!(*i < o.space().len());
+        }
+    }
+
+    #[test]
+    fn crossover_produces_mix() {
+        let mut rng = Rng::new(8);
+        let a: Config = vec![0, 0, 0, 0, 0, 0];
+        let b: Config = vec![1, 1, 1, 1, 1, 1];
+        let mut saw_mix = false;
+        for _ in 0..50 {
+            let c = GeneticAlgorithm::crossover(&a, &b, &mut rng);
+            if c.iter().any(|&x| x == 0) && c.iter().any(|&x| x == 1) {
+                saw_mix = true;
+            }
+        }
+        assert!(saw_mix);
+    }
+
+    #[test]
+    fn unique_budget_semantics() {
+        let o = constrained_bowl();
+        let mut rng = Rng::new(9);
+        let t = GeneticAlgorithm::default().run(&o, 50, &mut rng);
+        let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
+        assert_eq!(set.len(), t.len(), "revisits must not consume budget");
+    }
+}

@@ -1,0 +1,167 @@
+//! Iterated Local Search: hill-climb to a local optimum, then *perturb*
+//! the incumbent (random multi-parameter kick) instead of restarting from
+//! scratch — Kernel Tuner's ILS strategy, part of the extended comparison.
+
+use crate::objective::{Eval, Objective};
+use crate::space::{neighbors, Neighborhood};
+use crate::strategies::{CachedEvaluator, Strategy, Trace};
+use crate::util::rng::Rng;
+
+pub struct IteratedLocalSearch {
+    /// Parameters perturbed per kick.
+    pub kick_strength: usize,
+}
+
+impl Default for IteratedLocalSearch {
+    fn default() -> Self {
+        IteratedLocalSearch { kick_strength: 3 }
+    }
+}
+
+impl IteratedLocalSearch {
+    /// Kick: re-randomize `kick_strength` parameters of the incumbent,
+    /// legalized against the restricted space by retry.
+    fn kick(&self, space: &crate::space::SearchSpace, cur: usize, rng: &mut Rng) -> usize {
+        let dims = space.dims();
+        for _ in 0..20 {
+            let mut cfg = space.config(cur).clone();
+            for _ in 0..self.kick_strength.min(dims) {
+                let d = rng.below(dims);
+                cfg[d] = rng.below(space.params[d].len()) as u16;
+            }
+            if let Some(idx) = space.index_of(&cfg) {
+                if idx != cur {
+                    return idx;
+                }
+            }
+        }
+        rng.below(space.len())
+    }
+}
+
+impl Strategy for IteratedLocalSearch {
+    fn name(&self) -> String {
+        "ils".into()
+    }
+
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let space = obj.space();
+        let mut ev = CachedEvaluator::new(obj, max_fevals);
+
+        // Valid starting point.
+        let mut cur = rng.below(space.len());
+        let mut cur_val;
+        let mut attempts = 0;
+        loop {
+            attempts += 1;
+            if attempts > 4 * space.len() {
+                return ev.into_trace();
+            }
+            match ev.eval(cur, rng) {
+                Some(Eval::Valid(v)) => {
+                    cur_val = v;
+                    break;
+                }
+                Some(_) => cur = rng.below(space.len()),
+                None => return ev.into_trace(),
+            }
+        }
+        let mut home = cur; // best local optimum so far
+        let mut home_val = cur_val;
+
+        'outer: while ev.budget_left() && ev.n_seen() < space.len() {
+            // Best-improvement descent.
+            loop {
+                let mut best: Option<(usize, f64)> = None;
+                for nb in neighbors(space, cur, Neighborhood::Hamming) {
+                    match ev.eval(nb, rng) {
+                        Some(Eval::Valid(v)) if v < cur_val => {
+                            if best.map_or(true, |(_, b)| v < b) {
+                                best = Some((nb, v));
+                            }
+                        }
+                        Some(_) => {}
+                        None => break 'outer,
+                    }
+                }
+                match best {
+                    Some((nb, v)) => {
+                        cur = nb;
+                        cur_val = v;
+                    }
+                    None => break,
+                }
+            }
+            // Acceptance: keep the better basin as home.
+            if cur_val <= home_val {
+                home = cur;
+                home_val = cur_val;
+            }
+            // Kick from home.
+            let kicked = self.kick(space, home, rng);
+            match ev.eval(kicked, rng) {
+                Some(Eval::Valid(v)) => {
+                    cur = kicked;
+                    cur_val = v;
+                }
+                Some(_) => {
+                    cur = home;
+                    cur_val = home_val;
+                }
+                None => break,
+            }
+        }
+        ev.into_trace()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::TableObjective;
+    use crate::space::{Param, SearchSpace};
+
+    fn two_basin() -> TableObjective {
+        let vals: Vec<i64> = (0..20).collect();
+        let space = SearchSpace::build("tb", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+        let table = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                let g = (p[0] - 0.15).powi(2) + (p[1] - 0.15).powi(2);
+                let l = (p[0] - 0.85).powi(2) + (p[1] - 0.85).powi(2) + 0.08;
+                Eval::Valid(1.0 + g.min(l))
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn escapes_local_basin() {
+        let o = two_basin();
+        let mut rng = Rng::new(12);
+        let t = IteratedLocalSearch::default().run(&o, 250, &mut rng);
+        assert!((t.best().unwrap().1 - 1.0).abs() < 0.02, "best {}", t.best().unwrap().1);
+    }
+
+    #[test]
+    fn budget_and_uniqueness() {
+        let o = two_basin();
+        let mut rng = Rng::new(13);
+        let t = IteratedLocalSearch::default().run(&o, 70, &mut rng);
+        assert!(t.len() <= 70);
+        let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
+        assert_eq!(set.len(), t.len());
+    }
+
+    #[test]
+    fn kick_stays_in_space() {
+        let o = two_basin();
+        let ils = IteratedLocalSearch::default();
+        let mut rng = Rng::new(14);
+        for _ in 0..50 {
+            let cur = rng.below(o.space().len());
+            let k = ils.kick(o.space(), cur, &mut rng);
+            assert!(k < o.space().len());
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Multi-start Local Search (Kernel Tuner's greedy MLS): best-improvement
+//! hill climbing over Hamming neighborhoods; on a local optimum, restart
+//! from a fresh random configuration. Invalid neighbors are skipped (but
+//! their unique evaluation costs budget, as on a real tuner).
+
+use crate::objective::{Eval, Objective};
+use crate::space::{neighbors, Neighborhood};
+use crate::strategies::{CachedEvaluator, Strategy, Trace};
+use crate::util::rng::Rng;
+
+#[derive(Default)]
+pub struct MultiStartLocalSearch;
+
+impl Strategy for MultiStartLocalSearch {
+    fn name(&self) -> String {
+        "mls".into()
+    }
+
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let space = obj.space();
+        let mut ev = CachedEvaluator::new(obj, max_fevals);
+
+        'restarts: while ev.budget_left() && ev.n_seen() < space.len() {
+            // Random (valid) start; bail out if the space appears to hold
+            // no (remaining) valid configuration.
+            let mut cur;
+            let mut cur_val;
+            let mut attempts = 0usize;
+            loop {
+                attempts += 1;
+                if attempts > 4 * space.len() {
+                    break 'restarts;
+                }
+                let start = rng.below(space.len());
+                match ev.eval(start, rng) {
+                    Some(Eval::Valid(v)) => {
+                        cur = start;
+                        cur_val = v;
+                        break;
+                    }
+                    Some(_) => continue,
+                    None => break 'restarts,
+                }
+            }
+            // Best-improvement hill climbing.
+            loop {
+                let mut best: Option<(usize, f64)> = None;
+                let mut ns = neighbors(space, cur, Neighborhood::Hamming);
+                rng.shuffle(&mut ns);
+                for nb in ns {
+                    match ev.eval(nb, rng) {
+                        Some(Eval::Valid(v)) if v < cur_val => {
+                            if best.map_or(true, |(_, b)| v < b) {
+                                best = Some((nb, v));
+                            }
+                        }
+                        Some(_) => {}
+                        None => break 'restarts,
+                    }
+                }
+                match best {
+                    Some((nb, v)) => {
+                        cur = nb;
+                        cur_val = v;
+                    }
+                    None => break, // local optimum → restart
+                }
+            }
+        }
+        ev.into_trace()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::TableObjective;
+    use crate::space::{Param, SearchSpace};
+
+    fn multimodal() -> TableObjective {
+        // Two basins; global at (0.2, 0.2), local at (0.8, 0.8).
+        let vals: Vec<i64> = (0..20).collect();
+        let space = SearchSpace::build("mm", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+        let table = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                let g = (p[0] - 0.2).powi(2) + (p[1] - 0.2).powi(2);
+                let l = (p[0] - 0.8).powi(2) + (p[1] - 0.8).powi(2) + 0.05;
+                Eval::Valid(g.min(l) + 1.0)
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn descends_to_a_local_optimum() {
+        let o = multimodal();
+        let mut rng = Rng::new(1);
+        let t = MultiStartLocalSearch.run(&o, 150, &mut rng);
+        let best = t.best().unwrap().1;
+        // Must at least reach one of the two basin floors.
+        assert!(best < 1.06, "best {best}");
+    }
+
+    #[test]
+    fn restarts_escape_local_optimum_eventually() {
+        let o = multimodal();
+        let mut rng = Rng::new(2);
+        let t = MultiStartLocalSearch.run(&o, 399, &mut rng);
+        // With most of the space evaluated across restarts, the global
+        // basin must be found.
+        assert!((t.best().unwrap().1 - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn budget_and_uniqueness() {
+        let o = multimodal();
+        let mut rng = Rng::new(3);
+        let t = MultiStartLocalSearch.run(&o, 60, &mut rng);
+        assert!(t.len() <= 60);
+        let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
+        assert_eq!(set.len(), t.len());
+    }
+}

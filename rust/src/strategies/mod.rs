@@ -1,0 +1,169 @@
+//! Search-strategy abstraction and the baseline strategy zoo.
+//!
+//! Everything a tuner run produces is a `Trace`: the ordered list of
+//! (configuration index, evaluation result). All metrics (best-found
+//! curves, MAE, MDF) derive from traces, matching how the paper's plots
+//! set performance off against the number of function evaluations.
+
+pub mod de;
+pub mod framework_bo;
+pub mod ga;
+pub mod hedge;
+pub mod ils;
+pub mod mls;
+pub mod pso;
+pub mod random;
+pub mod registry;
+pub mod sa;
+
+use crate::objective::{Eval, Objective};
+use crate::util::rng::Rng;
+
+/// Record of one tuning run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub records: Vec<(usize, Eval)>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn push(&mut self, idx: usize, eval: Eval) {
+        self.records.push((idx, eval));
+    }
+
+    /// Number of objective evaluations consumed.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Best valid value found so far after each evaluation
+    /// (`f(x⁺)` as a function of evaluation count); +∞ before the first
+    /// valid observation.
+    pub fn best_curve(&self) -> Vec<f64> {
+        let mut best = f64::INFINITY;
+        self.records
+            .iter()
+            .map(|(_, e)| {
+                if let Some(v) = e.value() {
+                    best = best.min(v);
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Final best (index, value).
+    pub fn best(&self) -> Option<(usize, f64)> {
+        let mut out: Option<(usize, f64)> = None;
+        for (i, e) in &self.records {
+            if let Some(v) = e.value() {
+                if out.map_or(true, |(_, b)| v < b) {
+                    out = Some((*i, v));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Sentinel index for evaluations of configurations *outside* the
+/// restricted search space (constraint-blind external frameworks propose
+/// these; they fail and waste budget — §IV-D).
+pub const OUT_OF_SPACE: usize = usize::MAX;
+
+/// Budgeted evaluator with memoization. Kernel Tuner counts *unique*
+/// function evaluations (Fig. 4's x-axis): local-search strategies may
+/// revisit configurations freely — revisits hit the cache and cost no
+/// budget.
+pub struct CachedEvaluator<'a> {
+    obj: &'a dyn Objective,
+    pub trace: Trace,
+    cache: std::collections::HashMap<usize, Eval>,
+    max_fevals: usize,
+}
+
+impl<'a> CachedEvaluator<'a> {
+    pub fn new(obj: &'a dyn Objective, max_fevals: usize) -> Self {
+        CachedEvaluator { obj, trace: Trace::new(), cache: std::collections::HashMap::new(), max_fevals }
+    }
+
+    pub fn budget_left(&self) -> bool {
+        self.trace.len() < self.max_fevals
+    }
+
+    /// Remaining unique evaluations.
+    pub fn remaining(&self) -> usize {
+        self.max_fevals - self.trace.len()
+    }
+
+    /// Evaluate (or recall) a configuration. Returns `None` when the
+    /// budget is exhausted and the value is not cached.
+    pub fn eval(&mut self, idx: usize, rng: &mut Rng) -> Option<Eval> {
+        if let Some(e) = self.cache.get(&idx) {
+            return Some(*e);
+        }
+        if !self.budget_left() {
+            return None;
+        }
+        let e = self.obj.evaluate(idx, rng);
+        self.cache.insert(idx, e);
+        self.trace.push(idx, e);
+        Some(e)
+    }
+
+    pub fn seen(&self, idx: usize) -> bool {
+        self.cache.contains_key(&idx)
+    }
+
+    pub fn n_seen(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+}
+
+/// A search strategy: consumes an evaluation budget on an objective.
+pub trait Strategy: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Run with a total budget of `max_fevals` objective evaluations
+    /// (invalid evaluations consume budget too — they cost real time on a
+    /// real tuner and Kernel Tuner counts them).
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_curve_monotone_and_handles_invalids() {
+        let mut t = Trace::new();
+        t.push(0, Eval::CompileError);
+        t.push(1, Eval::Valid(5.0));
+        t.push(2, Eval::Valid(7.0));
+        t.push(3, Eval::RuntimeError);
+        t.push(4, Eval::Valid(3.0));
+        let c = t.best_curve();
+        assert_eq!(c[0], f64::INFINITY);
+        assert_eq!(&c[1..], &[5.0, 5.0, 5.0, 3.0]);
+        assert_eq!(t.best(), Some((4, 3.0)));
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = Trace::new();
+        assert!(t.is_empty());
+        assert!(t.best().is_none());
+        assert!(t.best_curve().is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! Particle Swarm Optimization over the discrete normalized space —
+//! one of the remaining Kernel Tuner strategies (the paper selected
+//! SA/MLS/GA as the best three competitors; PSO is part of the "other
+//! search strategies" context and of the extended comparison experiment).
+//!
+//! Particles move in the continuous normalized cube and snap to the
+//! nearest restricted configuration for evaluation (Kernel Tuner's PSO
+//! does the same), with unique-evaluation budget semantics.
+
+use crate::objective::{Eval, Objective};
+use crate::strategies::{CachedEvaluator, Strategy, Trace};
+use crate::util::rng::Rng;
+
+pub struct ParticleSwarm {
+    pub particles: usize,
+    pub inertia: f64,
+    pub cognitive: f64,
+    pub social: f64,
+}
+
+impl Default for ParticleSwarm {
+    fn default() -> Self {
+        // Kernel Tuner defaults: 20 particles, w=0.5, c1=2, c2=1.
+        ParticleSwarm { particles: 20, inertia: 0.5, cognitive: 2.0, social: 1.0 }
+    }
+}
+
+struct Particle {
+    pos: Vec<f64>,
+    vel: Vec<f64>,
+    best_pos: Vec<f64>,
+    best_val: f64,
+}
+
+/// Nearest space index to a continuous point (linear scan — spaces are
+/// tens of thousands of points; candidate for k-d acceleration if PSO ever
+/// became a hot path).
+fn snap(space: &crate::space::SearchSpace, p: &[f64]) -> usize {
+    let dims = space.dims();
+    let pts = space.points();
+    let mut best = (0usize, f64::INFINITY);
+    for i in 0..space.len() {
+        let q = &pts[i * dims..(i + 1) * dims];
+        let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best.0
+}
+
+impl Strategy for ParticleSwarm {
+    fn name(&self) -> String {
+        "pso".into()
+    }
+
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let space = obj.space();
+        let dims = space.dims();
+        let mut ev = CachedEvaluator::new(obj, max_fevals);
+
+        let mut swarm: Vec<Particle> = (0..self.particles)
+            .map(|_| {
+                let pos: Vec<f64> = (0..dims).map(|_| rng.f64()).collect();
+                let vel: Vec<f64> = (0..dims).map(|_| (rng.f64() - 0.5) * 0.2).collect();
+                Particle { best_pos: pos.clone(), pos, vel, best_val: f64::INFINITY }
+            })
+            .collect();
+        let mut gbest_pos: Vec<f64> = swarm[0].pos.clone();
+        let mut gbest_val = f64::INFINITY;
+
+        while ev.budget_left() && ev.n_seen() < space.len() {
+            let mut progressed = false;
+            for p in swarm.iter_mut() {
+                let idx = snap(space, &p.pos);
+                let before = ev.n_seen();
+                let Some(e) = ev.eval(idx, rng) else { return ev.into_trace() };
+                progressed |= ev.n_seen() > before;
+                if let Eval::Valid(v) = e {
+                    if v < p.best_val {
+                        p.best_val = v;
+                        p.best_pos = p.pos.clone();
+                    }
+                    if v < gbest_val {
+                        gbest_val = v;
+                        gbest_pos = p.pos.clone();
+                    }
+                }
+                // Velocity/position update (clamped to the unit cube).
+                for d in 0..dims {
+                    let r1 = rng.f64();
+                    let r2 = rng.f64();
+                    p.vel[d] = self.inertia * p.vel[d]
+                        + self.cognitive * r1 * (p.best_pos[d] - p.pos[d])
+                        + self.social * r2 * (gbest_pos[d] - p.pos[d]);
+                    p.vel[d] = p.vel[d].clamp(-0.5, 0.5);
+                    p.pos[d] = (p.pos[d] + p.vel[d]).clamp(0.0, 1.0);
+                }
+            }
+            if !progressed {
+                // Swarm has converged onto already-seen configs: scatter a
+                // random particle to keep consuming budget meaningfully.
+                let k = rng.below(swarm.len());
+                for d in 0..dims {
+                    swarm[k].pos[d] = rng.f64();
+                    swarm[k].vel[d] = (rng.f64() - 0.5) * 0.4;
+                }
+            }
+        }
+        ev.into_trace()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::TableObjective;
+    use crate::space::{Param, SearchSpace};
+
+    fn bowl() -> TableObjective {
+        let vals: Vec<i64> = (0..20).collect();
+        let space = SearchSpace::build("b", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+        let table = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                Eval::Valid(1.0 + (p[0] - 0.7).powi(2) + (p[1] - 0.3).powi(2))
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn converges_on_bowl() {
+        let o = bowl();
+        let mut rng = Rng::new(4);
+        let t = ParticleSwarm::default().run(&o, 120, &mut rng);
+        assert!(t.best().unwrap().1 < 1.03, "best {}", t.best().unwrap().1);
+    }
+
+    #[test]
+    fn respects_budget_and_uniqueness() {
+        let o = bowl();
+        let mut rng = Rng::new(5);
+        let t = ParticleSwarm::default().run(&o, 50, &mut rng);
+        assert!(t.len() <= 50);
+        let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
+        assert_eq!(set.len(), t.len());
+    }
+
+    #[test]
+    fn terminates_on_tiny_space() {
+        let space = SearchSpace::build("t", vec![Param::ints("a", &[1, 2, 3])], &[]);
+        let o = TableObjective::new(space, vec![Eval::Valid(3.0), Eval::Valid(1.0), Eval::Valid(2.0)]);
+        let mut rng = Rng::new(6);
+        let t = ParticleSwarm::default().run(&o, 100, &mut rng);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.best().unwrap().1, 1.0);
+    }
+}

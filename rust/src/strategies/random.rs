@@ -1,0 +1,57 @@
+//! Random-sample baseline: uniform draws without replacement, as in
+//! Kernel Tuner. The paper repeats it 100× (vs 35×) due to its variance.
+
+use crate::objective::Objective;
+use crate::strategies::{Strategy, Trace};
+use crate::util::rng::Rng;
+
+pub struct RandomSearch;
+
+impl Strategy for RandomSearch {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let space = obj.space();
+        let n = space.len();
+        let mut trace = Trace::new();
+        let order = rng.sample_indices(n, max_fevals.min(n));
+        for idx in order {
+            trace.push(idx, obj.evaluate(idx, rng));
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{Eval, TableObjective};
+    use crate::space::{Param, SearchSpace};
+
+    fn obj() -> TableObjective {
+        let space = SearchSpace::build("t", vec![Param::ints("a", &(0..50).collect::<Vec<_>>())], &[]);
+        let table = (0..50).map(|i| Eval::Valid(i as f64)).collect();
+        TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn draws_without_replacement() {
+        let o = obj();
+        let mut rng = Rng::new(1);
+        let t = RandomSearch.run(&o, 30, &mut rng);
+        assert_eq!(t.len(), 30);
+        let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
+        assert_eq!(set.len(), 30);
+    }
+
+    #[test]
+    fn caps_at_space_size() {
+        let o = obj();
+        let mut rng = Rng::new(2);
+        let t = RandomSearch.run(&o, 500, &mut rng);
+        assert_eq!(t.len(), 50);
+        assert_eq!(t.best().unwrap().1, 0.0);
+    }
+}

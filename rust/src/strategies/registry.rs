@@ -1,0 +1,96 @@
+//! Strategy registry: name → strategy, covering the paper's full zoo.
+//!
+//! "Our methods" (diamonds in the figures): `ei`, `multi`,
+//! `advanced_multi`. Kernel Tuner competitors (dots): `random`,
+//! `simulated_annealing`, `mls`, `genetic_algorithm`. External frameworks
+//! (§IV-D): `bayesianoptimization`, `scikit-optimize`.
+
+use crate::bo::{Acq, BoConfig, BoStrategy};
+use crate::strategies::de::DifferentialEvolution;
+use crate::strategies::framework_bo::{Framework, FrameworkBo};
+use crate::strategies::hedge::GpHedge;
+use crate::strategies::ils::IteratedLocalSearch;
+use crate::strategies::pso::ParticleSwarm;
+use crate::strategies::ga::GeneticAlgorithm;
+use crate::strategies::mls::MultiStartLocalSearch;
+use crate::strategies::random::RandomSearch;
+use crate::strategies::sa::SimulatedAnnealing;
+use crate::strategies::Strategy;
+
+/// Instantiate a strategy by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Strategy>> {
+    match name {
+        "ei" => Some(Box::new(BoStrategy::new("ei", BoConfig::single(Acq::Ei)))),
+        "poi" => Some(Box::new(BoStrategy::new("poi", BoConfig::single(Acq::Poi)))),
+        "lcb" => Some(Box::new(BoStrategy::new("lcb", BoConfig::single(Acq::Lcb)))),
+        "multi" => Some(Box::new(BoStrategy::new("multi", BoConfig::multi()))),
+        "advanced_multi" => Some(Box::new(BoStrategy::new("advanced_multi", BoConfig::advanced_multi()))),
+        "random" => Some(Box::new(RandomSearch)),
+        "simulated_annealing" | "sa" => Some(Box::new(SimulatedAnnealing::default())),
+        "mls" => Some(Box::new(MultiStartLocalSearch)),
+        "genetic_algorithm" | "ga" => Some(Box::new(GeneticAlgorithm::default())),
+        "pso" => Some(Box::new(ParticleSwarm::default())),
+        "differential_evolution" | "de" => Some(Box::new(DifferentialEvolution::default())),
+        "ils" => Some(Box::new(IteratedLocalSearch::default())),
+        "gp_hedge" => Some(Box::new(GpHedge::default())),
+        "bayesianoptimization" => Some(Box::new(FrameworkBo::new(Framework::BayesianOptimization))),
+        "scikit-optimize" | "skopt" => Some(Box::new(FrameworkBo::new(Framework::ScikitOptimize))),
+        _ => None,
+    }
+}
+
+/// The paper's BO methods (diamond markers).
+pub fn our_methods() -> Vec<&'static str> {
+    vec!["ei", "multi", "advanced_multi"]
+}
+
+/// The Kernel Tuner competitor methods (dot markers) used in Figs. 1–3.
+pub fn kernel_tuner_methods() -> Vec<&'static str> {
+    vec!["random", "simulated_annealing", "mls", "genetic_algorithm"]
+}
+
+/// External BO frameworks (Fig. 5).
+pub fn framework_methods() -> Vec<&'static str> {
+    vec!["bayesianoptimization", "scikit-optimize"]
+}
+
+/// The remaining Kernel Tuner strategies, used by the extended comparison
+/// (the paper picked SA/MLS/GA as the strongest three of this pool).
+pub fn extended_methods() -> Vec<&'static str> {
+    vec!["pso", "differential_evolution", "ils", "gp_hedge"]
+}
+
+/// Everything, for exhaustive CLI listings.
+pub fn all_names() -> Vec<&'static str> {
+    let mut v = our_methods();
+    v.extend(kernel_tuner_methods());
+    v.extend(extended_methods());
+    v.extend(framework_methods());
+    v.push("poi");
+    v.push("lcb");
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for n in all_names() {
+            assert!(by_name(n).is_some(), "unknown strategy {n}");
+        }
+        assert!(by_name("gradient_descent").is_none());
+    }
+
+    #[test]
+    fn names_are_stable() {
+        for n in all_names() {
+            let s = by_name(n).unwrap();
+            // Aliases map to canonical names; canonical names round-trip.
+            if !matches!(n, "sa" | "ga" | "skopt" | "de") {
+                assert_eq!(s.name(), n);
+            }
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Simulated Annealing, following Kernel Tuner's implementation: random
+//! start, exponential cooling, random adjacent-neighbor proposals,
+//! Metropolis acceptance on the (minimized) objective. Invalid proposals
+//! are always rejected but still consume (unique-)evaluation budget.
+
+use crate::objective::{Eval, Objective};
+use crate::space::{neighbors, Neighborhood};
+use crate::strategies::{CachedEvaluator, Strategy, Trace};
+use crate::util::rng::Rng;
+
+pub struct SimulatedAnnealing {
+    pub t_max: f64,
+    pub t_min: f64,
+}
+
+impl Default for SimulatedAnnealing {
+    fn default() -> Self {
+        SimulatedAnnealing { t_max: 1.0, t_min: 1e-3 }
+    }
+}
+
+impl Strategy for SimulatedAnnealing {
+    fn name(&self) -> String {
+        "simulated_annealing".into()
+    }
+
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let space = obj.space();
+        let mut ev = CachedEvaluator::new(obj, max_fevals);
+
+        // Random valid-ish starting point.
+        let mut cur = rng.below(space.len());
+        let mut attempts = 0usize;
+        let mut cur_val = loop {
+            attempts += 1;
+            if attempts > 4 * space.len() {
+                return ev.into_trace();
+            }
+            match ev.eval(cur, rng) {
+                Some(Eval::Valid(v)) => break v,
+                Some(_) => {
+                    if !ev.budget_left() {
+                        return ev.into_trace();
+                    }
+                    cur = rng.below(space.len());
+                }
+                None => return ev.into_trace(),
+            }
+        };
+
+        // Exponential cooling over the expected number of steps. The
+        // objective scale is normalized by a running mean of |Δ|, so the
+        // temperature schedule is scale-free.
+        let steps = max_fevals.max(2) as f64;
+        let cool = (self.t_min / self.t_max).powf(1.0 / steps);
+        let mut temp = self.t_max;
+        let mut delta_scale = cur_val.abs().max(1e-9) * 0.1;
+
+        let mut stale = 0usize;
+        while ev.budget_left() && ev.n_seen() < space.len() {
+            temp *= cool;
+            let ns = neighbors(space, cur, Neighborhood::Adjacent);
+            let mut proposal = if ns.is_empty() { rng.below(space.len()) } else { *rng.choose(&ns) };
+            // A fully cached neighborhood burns no budget: after enough
+            // stale iterations, teleport (Kernel Tuner restarts likewise).
+            if ev.seen(proposal) {
+                stale += 1;
+                if stale > 50 {
+                    stale = 0;
+                    for _ in 0..4 * space.len() {
+                        let c = rng.below(space.len());
+                        if !ev.seen(c) {
+                            proposal = c;
+                            break;
+                        }
+                    }
+                }
+            } else {
+                stale = 0;
+            }
+            let Some(e) = ev.eval(proposal, rng) else { break };
+            match e {
+                Eval::Valid(v) => {
+                    let delta = v - cur_val;
+                    delta_scale = 0.9 * delta_scale + 0.1 * delta.abs().max(1e-12);
+                    let accept = delta <= 0.0 || rng.chance((-delta / (delta_scale * temp.max(1e-12))).exp());
+                    if accept {
+                        cur = proposal;
+                        cur_val = v;
+                    }
+                }
+                _ => {
+                    // Invalid neighbor: occasionally teleport to escape
+                    // invalid regions (Kernel Tuner restarts on stuck).
+                    if rng.chance(0.2) {
+                        cur = rng.below(space.len());
+                        if let Some(Eval::Valid(v)) = ev.eval(cur, rng) {
+                            cur_val = v;
+                        }
+                    }
+                }
+            }
+        }
+        ev.into_trace()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::TableObjective;
+    use crate::space::{Param, SearchSpace};
+
+    fn bowl() -> TableObjective {
+        let vals: Vec<i64> = (0..25).collect();
+        let space = SearchSpace::build("b", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+        let table = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                Eval::Valid(1.0 + (p[0] - 0.5).powi(2) + (p[1] - 0.5).powi(2))
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn improves_over_start_and_respects_budget() {
+        let o = bowl();
+        let mut rng = Rng::new(3);
+        let t = SimulatedAnnealing::default().run(&o, 100, &mut rng);
+        assert!(t.len() <= 100);
+        let curve = t.best_curve();
+        assert!(curve[curve.len() - 1] < 1.05, "end {}", curve[curve.len() - 1]);
+    }
+
+    #[test]
+    fn unique_evaluations_only() {
+        let o = bowl();
+        let mut rng = Rng::new(4);
+        let t = SimulatedAnnealing::default().run(&o, 80, &mut rng);
+        let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
+        assert_eq!(set.len(), t.len());
+    }
+
+    #[test]
+    fn survives_invalid_heavy_space() {
+        let vals: Vec<i64> = (0..20).collect();
+        let space = SearchSpace::build("inv", vec![Param::ints("x", &vals)], &[]);
+        let table: Vec<Eval> = (0..20)
+            .map(|i| if i % 3 == 0 { Eval::Valid(i as f64) } else { Eval::RuntimeError })
+            .collect();
+        let o = TableObjective::new(space, table);
+        let mut rng = Rng::new(5);
+        let t = SimulatedAnnealing::default().run(&o, 40, &mut rng);
+        assert_eq!(t.best().unwrap().1, 0.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (no `clap` in the vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: HashMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                    a.seen.push(k.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(rest.to_string(), argv[i + 1].clone());
+                    a.seen.push(rest.to_string());
+                    i += 1;
+                } else {
+                    a.flags.insert(rest.to_string(), "true".to_string());
+                    a.seen.push(rest.to_string());
+                }
+            } else {
+                a.positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&sv(&["tune", "gemm", "--gpu", "a100", "--repeats=5", "--verbose"]));
+        assert_eq!(a.positionals, vec!["tune", "gemm"]);
+        assert_eq!(a.get("gpu"), Some("a100"));
+        assert_eq!(a.usize_or("repeats", 1), 5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]));
+        assert_eq!(a.str_or("strategy", "ei"), "ei");
+        assert_eq!(a.f64_or("noise", 0.1), 0.1);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&sv(&["--dry-run", "--out", "x.csv"]));
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+}

@@ -1,0 +1,103 @@
+//! CSV emission for experiment artifacts (no external csv crate vendored).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Accumulates rows and writes RFC-4180-ish CSV (quotes fields containing
+/// commas/quotes/newlines).
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Convenience: a row of display-ables.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&v);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&join_csv(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&join_csv(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+fn join_csv(fields: &[String]) -> String {
+    fields.iter().map(|f| escape_field(f)).collect::<Vec<_>>().join(",")
+}
+
+fn escape_field(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+/// Format a float with enough precision for plotting but stable output.
+pub fn fnum(x: f64) -> String {
+    if !x.is_finite() {
+        return "nan".into();
+    }
+    if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_header() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "x,y".into()]);
+        w.row(&["2".into(), "he said \"hi\"".into()]);
+        let s = w.render();
+        assert_eq!(s, "a,b\n1,\"x,y\"\n2,\"he said \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fnum_formats() {
+        assert_eq!(fnum(3.0), "3");
+        assert_eq!(fnum(3.25), "3.250000");
+        assert_eq!(fnum(f64::NAN), "nan");
+    }
+}

@@ -1,0 +1,315 @@
+//! Dense linear algebra for the Gaussian-process substrate.
+//!
+//! The vendor set has no `nalgebra`/`ndarray`, so we implement the small
+//! set of kernels a GP needs: row-major matrices, Cholesky with adaptive
+//! jitter, triangular solves (single and multi-RHS), and matmul. Sizes are
+//! small (≤ ~224 training points), so clarity beats blocking; the one hot
+//! loop (posterior over ~18k candidates) lives in `gp::gpr` and the XLA
+//! artifact, not here.
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// C = A · B.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj order: streams B rows, accumulates into the output row.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// y = A · x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix, with adaptive diagonal jitter: if factorization fails, jitter
+/// is multiplied by 10 and retried (standard GP practice — scikit-learn
+/// does the same under `alpha`).
+pub fn cholesky(a: &Mat, base_jitter: f64) -> Result<Mat, String> {
+    assert_eq!(a.rows, a.cols, "cholesky needs square matrix");
+    let n = a.rows;
+    let mut jitter = base_jitter;
+    'attempt: for _ in 0..8 {
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                if i == j {
+                    sum += jitter;
+                }
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        jitter = if jitter == 0.0 { 1e-10 } else { jitter * 10.0 };
+                        continue 'attempt;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        return Ok(l);
+    }
+    Err(format!("cholesky failed even with jitter {jitter}"))
+}
+
+/// Solve L·x = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let row = l.row(i);
+        let s = dot(&row[..i], &x[..i]);
+        x[i] = (x[i] - s) / row[i];
+    }
+    x
+}
+
+/// Solve Lᵀ·x = b for lower-triangular L (back substitution).
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve (L Lᵀ) x = b given the Cholesky factor L.
+pub fn cho_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (copies + sorts; fine at harness scale).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        // A = B·Bᵀ + n·I is SPD.
+        let mut b = Mat::zeros(n, n);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = random_spd(6, &mut rng);
+        let i = Mat::identity(6);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(2);
+        for n in [1usize, 2, 5, 20, 64] {
+            let a = random_spd(n, &mut rng);
+            let l = cholesky(&a, 0.0).unwrap();
+            let recon = l.matmul(&l.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(
+                        (recon[(i, j)] - a[(i, j)]).abs() < 1e-8 * (1.0 + a[(i, j)].abs()),
+                        "mismatch at ({i},{j}) for n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_jitters_near_singular() {
+        // Rank-deficient matrix: needs jitter, must not error.
+        let a = Mat::from_rows(&[vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let l = cholesky(&a, 1e-10).unwrap();
+        assert!(l[(0, 0)] > 0.0 && l[(1, 1)] > 0.0);
+    }
+
+    #[test]
+    fn solves_invert() {
+        let mut rng = Rng::new(3);
+        let n = 12;
+        let a = random_spd(n, &mut rng);
+        let l = cholesky(&a, 0.0).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let x = cho_solve(&l, &b);
+        let ax = a.matvec(&x);
+        for (u, v) in ax.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn lower_solves_consistent() {
+        let mut rng = Rng::new(4);
+        let a = random_spd(8, &mut rng);
+        let l = cholesky(&a, 0.0).unwrap();
+        let b: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let y = solve_lower(&l, &b);
+        let ly = l.matvec(&y);
+        for (u, v) in ly.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let z = solve_lower_t(&l, &b);
+        let ltz = l.transpose().matvec(&z);
+        for (u, v) in ltz.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn stats_helpers() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+}

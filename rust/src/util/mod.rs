@@ -1,0 +1,14 @@
+//! Hand-rolled substrates: the offline vendor set carries only `xla` and
+//! its transitive dependencies, so randomness, linear algebra, JSON/CSV,
+//! CLI parsing, thread pooling, plotting, and property testing are all
+//! implemented here from scratch.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod jsonparse;
+pub mod linalg;
+pub mod plot;
+pub mod pool;
+pub mod proptest;
+pub mod rng;

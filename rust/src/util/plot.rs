@@ -1,0 +1,108 @@
+//! ASCII plotting for terminal output of the paper's figures.
+//!
+//! The harness writes CSV for real plotting, but prints an ASCII rendition
+//! so `ktbo experiment figN` is self-contained in a terminal.
+
+/// A named series of (x, y) points.
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render multiple series on one canvas. Each series gets a distinct glyph.
+pub fn line_plot(title: &str, xlabel: &str, ylabel: &str, series: &[Series], width: usize, height: usize) -> String {
+    const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&', '$', '~'];
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).filter(|(x, y)| x.is_finite() && y.is_finite()).collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax, mut ymin, mut ymax) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            canvas[row][cx.min(width - 1)] = glyph;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    out.push_str(&format!("y: {ylabel}  [{ymin:.4} .. {ymax:.4}]\n"));
+    for row in &canvas {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("x: {xlabel}  [{xmin:.1} .. {xmax:.1}]\n"));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out
+}
+
+/// Horizontal bar chart with error bars, for the MDF figures.
+pub fn bar_chart(title: &str, entries: &[(String, f64, f64)], width: usize) -> String {
+    let vmax = entries.iter().map(|e| e.1 + e.2).fold(0.0f64, f64::max).max(1e-12);
+    let name_w = entries.iter().map(|e| e.0.len()).max().unwrap_or(4).max(4);
+    let mut out = format!("== {title} ==\n");
+    for (name, val, err) in entries {
+        let bar = ((val / vmax) * width as f64).round() as usize;
+        let errpos = (((val + err) / vmax) * width as f64).round() as usize;
+        let mut line = "█".repeat(bar);
+        if errpos > bar {
+            line.push_str(&"─".repeat(errpos - bar - 1));
+            line.push('|');
+        }
+        out.push_str(&format!("{name:>name_w$} | {line} {val:.3} ±{err:.3}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_contains_series_glyphs() {
+        let s = vec![
+            Series { name: "a".into(), points: vec![(0.0, 0.0), (1.0, 1.0)] },
+            Series { name: "b".into(), points: vec![(0.0, 1.0), (1.0, 0.0)] },
+        ];
+        let p = line_plot("t", "x", "y", &s, 20, 10);
+        assert!(p.contains('*') && p.contains('o'));
+        assert!(p.contains("a") && p.contains("b"));
+    }
+
+    #[test]
+    fn empty_plot_safe() {
+        let p = line_plot("t", "x", "y", &[], 20, 10);
+        assert!(p.contains("no data"));
+    }
+
+    #[test]
+    fn bars_scale() {
+        let b = bar_chart("mdf", &[("ga".into(), 1.0, 0.1), ("ei".into(), 0.5, 0.05)], 40);
+        assert!(b.contains("ga"));
+        assert!(b.lines().count() >= 3);
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal scoped thread pool for the experiment harness (no rayon/tokio
+//! in the vendor set). Work items are closures producing `T`; results are
+//! returned in submission order so repeated experiments stay deterministic
+//! regardless of scheduling.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `jobs` across up to `threads` workers, returning results in the
+/// original order.
+pub fn run_parallel<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let threads = threads.max(1).min(jobs.len().max(1));
+    if threads <= 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let n = jobs.len();
+    let queue: Arc<Mutex<Vec<(usize, F)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut handles = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            match job {
+                Some((idx, f)) => {
+                    let out = f();
+                    if tx.send((idx, out)).is_err() {
+                        return;
+                    }
+                }
+                None => return,
+            }
+        }));
+    }
+    drop(tx);
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (idx, val) in rx {
+        slots[idx] = Some(val);
+    }
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    slots.into_iter().map(|s| s.expect("missing result")).collect()
+}
+
+/// Default parallelism for the harness.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..57).map(|i| move || i * 2).collect();
+        let out = run_parallel(jobs, 8);
+        assert_eq!(out, (0..57).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i + 1).collect();
+        assert_eq!(run_parallel(jobs, 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![];
+        assert!(run_parallel(jobs, 4).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_jobs() {
+        let jobs: Vec<_> = (0..2).map(|i| move || i).collect();
+        assert_eq!(run_parallel(jobs, 64), vec![0, 1]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Miniature property-based testing harness (no `proptest` crate in the
+//! vendor set). Provides random-case generation with seed reporting and
+//! greedy input shrinking for integer-vector cases — enough to express the
+//! coordinator invariants (routing, batching, state) as properties.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Fixed default seed: CI-deterministic. Override via KTBO_PROP_SEED.
+        let seed = std::env::var("KTBO_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x5eed);
+        Config { cases: 64, seed, max_shrink: 200 }
+    }
+}
+
+/// Run a property over generated values. On failure, attempts shrinking via
+/// the `shrink` callback and panics with the minimal failing case rendered
+/// through `show`.
+pub fn check<T, G, P, S>(name: &str, cfg: &Config, mut gen: G, mut prop: P, show: S)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> String,
+{
+    let mut rng = Rng::new(cfg.seed ^ fxhash(name));
+    for case in 0..cfg.cases {
+        let value = gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {:#x}): {msg}\ninput: {}",
+                cfg.seed,
+                show(&value)
+            );
+        }
+    }
+}
+
+/// Like `check`, but with shrinking: `shrinks(t)` proposes smaller variants.
+pub fn check_shrink<T, G, P, S, H>(name: &str, cfg: &Config, mut gen: G, mut prop: P, shrinks: H, show: S)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    H: Fn(&T) -> Vec<T>,
+    S: Fn(&T) -> String,
+    T: Clone,
+{
+    let mut rng = Rng::new(cfg.seed ^ fxhash(name));
+    for case in 0..cfg.cases {
+        let value = gen(&mut rng);
+        if let Err(first_msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first smaller variant that
+            // still fails.
+            let mut best = value.clone();
+            let mut msg = first_msg;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in shrinks(&best) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed on case {case} (seed {:#x}): {msg}\nminimal input: {}",
+                cfg.seed,
+                show(&best)
+            );
+        }
+    }
+}
+
+/// Standard shrinker for Vec<usize>: drop elements, halve elements.
+pub fn shrink_vec_usize(v: &Vec<usize>) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    for i in 0..v.len() {
+        let mut w = v.clone();
+        w.remove(i);
+        out.push(w);
+    }
+    for i in 0..v.len() {
+        if v[i] > 0 {
+            let mut w = v.clone();
+            w[i] /= 2;
+            out.push(w);
+        }
+    }
+    out
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-nonneg",
+            &Config::default(),
+            |rng| (0..8).map(|_| rng.below(100)).collect::<Vec<usize>>(),
+            |v| {
+                if v.iter().sum::<usize>() < usize::MAX {
+                    Ok(())
+                } else {
+                    Err("overflow".into())
+                }
+            },
+            |v| format!("{v:?}"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check(
+            "always-fails",
+            &Config { cases: 1, ..Config::default() },
+            |rng| rng.below(10),
+            |_| Err("nope".into()),
+            |v| format!("{v}"),
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property "no element >= 50" fails; the shrunk case should be small.
+        let caught = std::panic::catch_unwind(|| {
+            check_shrink(
+                "shrinks",
+                &Config { cases: 20, ..Config::default() },
+                |rng| (0..10).map(|_| rng.below(100)).collect::<Vec<usize>>(),
+                |v| {
+                    if v.iter().all(|&x| x < 50) {
+                        Ok(())
+                    } else {
+                        Err("elem >= 50".into())
+                    }
+                },
+                shrink_vec_usize,
+                |v| format!("{v:?}"),
+            )
+        });
+        let err = caught.expect_err("should fail");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        // Minimal failing input is a single element in [50, 100).
+        assert!(msg.contains("minimal input: [") && msg.matches(',').count() == 0, "{msg}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Full-stack integration: simulated spaces for every (kernel, GPU) pair,
+//! every strategy, the §IV-A protocol at reduced scale, and the paper's
+//! qualitative claims at small repeat counts.
+
+use std::sync::Arc;
+
+use ktbo::gpusim::device::Device;
+use ktbo::gpusim::kernels::{all_kernels, kernel_by_name};
+use ktbo::gpusim::SimulatedSpace;
+use ktbo::harness::figures::objective_for;
+use ktbo::harness::metrics::mean_deviation_factor;
+use ktbo::harness::runner::{run_comparison, run_strategy};
+use ktbo::objective::{Objective, TableObjective};
+use ktbo::strategies::registry::{all_names, by_name};
+use ktbo::util::rng::Rng;
+
+#[test]
+fn every_kernel_builds_on_every_device() {
+    for dev in Device::all() {
+        for k in all_kernels() {
+            let sim = SimulatedSpace::build(k.as_ref(), &dev);
+            assert!(sim.space.len() > 1000, "{} on {} too small", k.name(), dev.name);
+            let (idx, min) = sim.global_minimum();
+            assert!(min > 0.0 && min.is_finite());
+            assert!(idx < sim.space.len());
+            // The minimum must beat the valid mean by a real margin —
+            // otherwise tuning would be pointless.
+            assert!(
+                min < sim.valid_mean() * 0.8,
+                "{} on {}: minimum {min} too close to mean {}",
+                k.name(),
+                dev.name,
+                sim.valid_mean()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_strategy_runs_on_every_kernel() {
+    // One cheap smoke run per (strategy, kernel) on the Titan X.
+    let dev = Device::gtx_titan_x();
+    for kernel in ["gemm", "convolution", "pnpoly", "expdist", "adding"] {
+        let obj = objective_for(kernel, &dev);
+        for name in all_names() {
+            let s = by_name(name).unwrap();
+            let mut rng = Rng::new(1);
+            let trace = s.run(obj.as_ref(), 40, &mut rng);
+            assert!(!trace.is_empty(), "{name} produced no evaluations on {kernel}");
+            assert!(trace.len() <= 40);
+            assert!(trace.best().is_some(), "{name} found nothing valid on {kernel}");
+        }
+    }
+}
+
+#[test]
+fn bo_beats_random_on_gemm() {
+    // The paper's core claim at minimum viable scale: on GEMM/Titan X the
+    // BO methods' MAE must beat random search decisively.
+    let obj = objective_for("gemm", &Device::gtx_titan_x());
+    let bo = run_strategy(&obj, "ei", 220, 5, 7, 0);
+    let rnd = run_strategy(&obj, "random", 220, 10, 7, 0);
+    assert!(
+        bo.mae.mean < rnd.mae.mean * 0.7,
+        "EI MAE {} not clearly better than random {}",
+        bo.mae.mean,
+        rnd.mae.mean
+    );
+}
+
+#[test]
+fn advanced_multi_beats_random_across_kernels() {
+    let dev = Device::gtx_titan_x();
+    let mut mae = Vec::new();
+    for kernel in ["gemm", "convolution"] {
+        let obj = objective_for(kernel, &dev);
+        let out = run_comparison(&obj, &["advanced_multi", "random"], 220, 0.1, 3, 0);
+        mae.push(out.iter().map(|o| o.mae.mean).collect::<Vec<_>>());
+    }
+    let mdf = mean_deviation_factor(&mae);
+    assert!(
+        mdf[0].0 < mdf[1].0,
+        "advanced_multi MDF {} should beat random {}",
+        mdf[0].0,
+        mdf[1].0
+    );
+}
+
+#[test]
+fn framework_bo_struggles_on_restricted_gemm() {
+    // §IV-D: on the heavily restricted GEMM space, constraint-blind
+    // framework BO wastes many evaluations out of space.
+    let obj = objective_for("gemm", &Device::rtx_2070_super());
+    let s = by_name("bayesianoptimization").unwrap();
+    let mut rng = Rng::new(5);
+    let trace = s.run(obj.as_ref(), 100, &mut rng);
+    let wasted = trace
+        .records
+        .iter()
+        .filter(|(i, _)| *i == ktbo::strategies::OUT_OF_SPACE)
+        .count();
+    // GEMM keeps ~22% of its Cartesian product: the majority of blind
+    // proposals must fail.
+    assert!(
+        wasted > trace.len() / 4,
+        "expected heavy budget waste, got {wasted}/{}",
+        trace.len()
+    );
+}
+
+#[test]
+fn table_objective_known_minimum_consistent() {
+    let k = kernel_by_name("adding").unwrap();
+    let sim = SimulatedSpace::build(k.as_ref(), &Device::a100());
+    let (_, min) = sim.global_minimum();
+    let obj = TableObjective::from_sim(sim);
+    assert_eq!(obj.known_minimum(), Some(min));
+}
+
+#[test]
+fn comparison_runner_is_seed_stable() {
+    let obj: Arc<TableObjective> = objective_for("adding", &Device::a100());
+    let a = run_strategy(&obj, "multi", 100, 3, 42, 2);
+    let b = run_strategy(&obj, "multi", 100, 3, 42, 4);
+    assert_eq!(a.maes, b.maes, "results must not depend on thread count");
+    let c = run_strategy(&obj, "multi", 100, 3, 43, 2);
+    assert_ne!(a.maes, c.maes, "different seeds must differ");
+}

@@ -1,0 +1,276 @@
+//! Property-based tests of the coordinator invariants, using the in-tree
+//! mini property-testing harness (`util::proptest`): random search spaces,
+//! random objective tables, random budgets — the invariants must hold for
+//! all of them.
+
+use std::collections::HashSet;
+
+use ktbo::bo::{Acq, BoConfig, BoStrategy};
+use ktbo::harness::metrics::{mean_deviation_factor, run_mae};
+use ktbo::objective::{Eval, Objective, TableObjective};
+use ktbo::space::{neighbors, Neighborhood, Param, Restriction, SearchSpace};
+use ktbo::strategies::registry::by_name;
+use ktbo::strategies::Strategy;
+use ktbo::util::proptest::{check, Config};
+use ktbo::util::rng::Rng;
+
+/// A random space of 2–4 integer parameters with a random sum restriction,
+/// plus a random objective table with a random invalid rate.
+fn random_case(rng: &mut Rng) -> (TableObjective, u64) {
+    let dims = 2 + rng.below(3);
+    let params: Vec<Param> = (0..dims)
+        .map(|d| {
+            let k = 3 + rng.below(8) as i64;
+            Param::ints(&format!("p{d}"), &(1..=k).collect::<Vec<_>>())
+        })
+        .collect();
+    let modulus = 2 + rng.below(3) as i64;
+    let restrictions = vec![Restriction::new("sum % m != 0", move |a| {
+        let s: i64 = (0..dims).map(|d| a.i(&format!("p{d}"))).sum();
+        s % modulus != 0
+    })];
+    let space = SearchSpace::build("prop", params, &restrictions);
+    let invalid_rate = rng.f64() * 0.4;
+    let table: Vec<Eval> = (0..space.len())
+        .map(|i| {
+            if rng.f64() < invalid_rate {
+                if rng.chance(0.5) {
+                    Eval::CompileError
+                } else {
+                    Eval::RuntimeError
+                }
+            } else {
+                let p = space.point(i);
+                let v: f64 =
+                    1.0 + p.iter().map(|x| (x - 0.5) * (x - 0.5)).sum::<f64>() + rng.f64() * 0.1;
+                Eval::Valid(v)
+            }
+        })
+        .collect();
+    let seed = rng.next_u64();
+    (TableObjective::new(space, table), seed)
+}
+
+#[test]
+fn prop_space_enumeration_is_sound() {
+    check(
+        "space-enumeration",
+        &Config { cases: 30, ..Config::default() },
+        random_case,
+        |(obj, _)| {
+            let s = obj.space();
+            if s.is_empty() {
+                return Ok(()); // empty restricted spaces are legal
+            }
+            for i in 0..s.len() {
+                if s.index_of(s.config(i)) != Some(i) {
+                    return Err(format!("index_of roundtrip failed at {i}"));
+                }
+                for &x in s.point(i) {
+                    if !(0.0..=1.0).contains(&x) {
+                        return Err(format!("coordinate {x} outside unit cube"));
+                    }
+                }
+            }
+            if s.len() > s.cartesian_size {
+                return Err("restricted space larger than Cartesian".into());
+            }
+            Ok(())
+        },
+        |(obj, _)| format!("space of {} configs", obj.space().len()),
+    );
+}
+
+#[test]
+fn prop_neighbors_are_symmetric_and_in_space() {
+    check(
+        "neighbors-symmetric",
+        &Config { cases: 15, ..Config::default() },
+        random_case,
+        |(obj, seed)| {
+            let s = obj.space();
+            if s.is_empty() {
+                return Ok(());
+            }
+            let mut rng = Rng::new(*seed);
+            for _ in 0..10.min(s.len()) {
+                let i = rng.below(s.len());
+                for kind in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+                    for j in neighbors(s, i, kind) {
+                        if j >= s.len() {
+                            return Err(format!("neighbor {j} out of range"));
+                        }
+                        if j == i {
+                            return Err("self-neighbor".into());
+                        }
+                        // Symmetry: i ∈ N(j) ⟺ j ∈ N(i).
+                        if !neighbors(s, j, kind).contains(&i) {
+                            return Err(format!("asymmetric {kind:?} neighborhood {i}<->{j}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+        |(obj, seed)| format!("space {} seed {seed:#x}", obj.space().len()),
+    );
+}
+
+#[test]
+fn prop_every_strategy_respects_budget_and_uniqueness() {
+    // The coordinator's core state-management invariant: no strategy may
+    // exceed the evaluation budget, and no strategy spends budget twice on
+    // the same configuration (unique-evaluation semantics).
+    let names =
+        ["ei", "multi", "advanced_multi", "random", "simulated_annealing", "mls", "genetic_algorithm"];
+    check(
+        "budget-and-uniqueness",
+        &Config { cases: 8, ..Config::default() },
+        random_case,
+        |(obj, seed)| {
+            if obj.space().is_empty() {
+                return Ok(());
+            }
+            let mut seeder = Rng::new(*seed);
+            let budget = 10 + seeder.below(60);
+            for name in names {
+                let s = by_name(name).unwrap();
+                let mut rng = Rng::new(*seed ^ 0xabc);
+                let trace = s.run(obj, budget, &mut rng);
+                if trace.len() > budget {
+                    return Err(format!("{name} exceeded budget: {} > {budget}", trace.len()));
+                }
+                let idxs: HashSet<usize> = trace.records.iter().map(|(i, _)| *i).collect();
+                if idxs.len() != trace.len() {
+                    return Err(format!("{name} re-evaluated a configuration"));
+                }
+                if let Some(&bad) = idxs.iter().find(|&&i| i >= obj.space().len()) {
+                    return Err(format!("{name} evaluated out-of-space index {bad}"));
+                }
+            }
+            Ok(())
+        },
+        |(obj, seed)| format!("space {} seed {seed:#x}", obj.space().len()),
+    );
+}
+
+#[test]
+fn prop_best_curve_monotone_nonincreasing() {
+    check(
+        "best-curve-monotone",
+        &Config { cases: 12, ..Config::default() },
+        random_case,
+        |(obj, seed)| {
+            if obj.space().is_empty() {
+                return Ok(());
+            }
+            for name in ["random", "genetic_algorithm", "advanced_multi"] {
+                let s = by_name(name).unwrap();
+                let mut rng = Rng::new(*seed);
+                let curve = s.run(obj, 50, &mut rng).best_curve();
+                for w in curve.windows(2) {
+                    if w[1] > w[0] {
+                        return Err(format!("{name}: best curve increased {} -> {}", w[0], w[1]));
+                    }
+                }
+            }
+            Ok(())
+        },
+        |(obj, seed)| format!("space {} seed {seed:#x}", obj.space().len()),
+    );
+}
+
+#[test]
+fn prop_bo_best_matches_table() {
+    // §III-D2 consequence: the reported best must be a *valid* table entry
+    // (invalid observations are never fitted nor reported).
+    check(
+        "bo-best-valid",
+        &Config { cases: 8, ..Config::default() },
+        random_case,
+        |(obj, seed)| {
+            if obj.space().is_empty() {
+                return Ok(());
+            }
+            let mut cfg = BoConfig::single(Acq::Ei);
+            cfg.pruning = false;
+            cfg.init_samples = 8;
+            let s = BoStrategy::new("ei", cfg);
+            let mut rng = Rng::new(*seed);
+            let trace = s.run(obj, 40, &mut rng);
+            if let Some((idx, v)) = trace.best() {
+                match obj.table()[idx] {
+                    Eval::Valid(tv) if (tv - v).abs() < 1e-12 => {}
+                    _ => return Err("best() does not match the table".into()),
+                }
+            }
+            Ok(())
+        },
+        |(obj, seed)| format!("space {} seed {seed:#x}", obj.space().len()),
+    );
+}
+
+#[test]
+fn prop_mae_and_mdf_invariances() {
+    check(
+        "metric-invariances",
+        &Config { cases: 40, ..Config::default() },
+        |rng| {
+            let n = 2 + rng.below(4);
+            let k = 2 + rng.below(3);
+            let mae: Vec<Vec<f64>> =
+                (0..k).map(|_| (0..n).map(|_| 0.1 + rng.f64() * 10.0).collect()).collect();
+            let scale = 0.5 + rng.f64() * 100.0;
+            (mae, scale)
+        },
+        |(mae, scale)| {
+            // MDF is invariant to per-kernel scaling.
+            let base = mean_deviation_factor(mae);
+            let scaled: Vec<Vec<f64>> =
+                mae.iter().map(|row| row.iter().map(|v| v * scale).collect()).collect();
+            let after = mean_deviation_factor(&scaled);
+            for (a, b) in base.iter().zip(&after) {
+                if (a.0 - b.0).abs() > 1e-9 {
+                    return Err(format!("MDF not scale-invariant: {} vs {}", a.0, b.0));
+                }
+            }
+            // MAE of a constant-at-minimum curve is 0.
+            let curve = vec![3.5; 220];
+            if run_mae(&curve, 3.5, 10.0).abs() > 1e-12 {
+                return Err("MAE of optimal curve not zero".into());
+            }
+            Ok(())
+        },
+        |(mae, scale)| format!("{}x{} matrix, scale {scale}", mae.len(), mae[0].len()),
+    );
+}
+
+#[test]
+fn prop_seeding_is_deterministic() {
+    // Same seed → identical trace, for every strategy (reproducibility of
+    // the experiment harness).
+    check(
+        "determinism",
+        &Config { cases: 6, ..Config::default() },
+        random_case,
+        |(obj, seed)| {
+            if obj.space().is_empty() {
+                return Ok(());
+            }
+            for name in ["ei", "random", "simulated_annealing", "genetic_algorithm", "mls"] {
+                let s = by_name(name).unwrap();
+                let mut r1 = Rng::new(*seed);
+                let mut r2 = Rng::new(*seed);
+                let a = s.run(obj, 30, &mut r1);
+                let b = s.run(obj, 30, &mut r2);
+                let ia: Vec<usize> = a.records.iter().map(|(i, _)| *i).collect();
+                let ib: Vec<usize> = b.records.iter().map(|(i, _)| *i).collect();
+                if ia != ib {
+                    return Err(format!("{name} is not deterministic under a fixed seed"));
+                }
+            }
+            Ok(())
+        },
+        |(obj, seed)| format!("space {} seed {seed:#x}", obj.space().len()),
+    );
+}

@@ -1,0 +1,134 @@
+//! Integration: the XLA-compiled GP artifact (Layers 1+2, via PJRT) must
+//! agree with the pure-Rust GP and drive the BO engine end-to-end.
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when the artifact
+//! directory is absent so `cargo test` works in a fresh checkout.
+
+use std::sync::Arc;
+
+use ktbo::bo::{Acq, Backend, BoConfig, BoStrategy};
+use ktbo::gp::{CovFn, NativeSurrogate, Surrogate};
+use ktbo::objective::{Eval, Objective, TableObjective};
+use ktbo::runtime::{xla_backend, XlaContext, XlaSurrogate};
+use ktbo::space::{Param, SearchSpace};
+use ktbo::strategies::Strategy;
+use ktbo::util::rng::Rng;
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::env::var("KTBO_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    if std::path::Path::new(&dir).join("gp_fitpredict_n32_c4096.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts in {dir} — run `make artifacts`");
+        None
+    }
+}
+
+/// The artifact's lowering constants must match the Rust default config
+/// (Matérn 3/2, lengthscale 1.5, noise 1e-6 — Table I CV defaults).
+fn reference_cov() -> CovFn {
+    CovFn::Matern32 { lengthscale: 1.5 }
+}
+
+#[test]
+fn xla_surrogate_matches_native_gp() {
+    let Some(dir) = artifact_dir() else { return };
+    let ctx = XlaContext::load(&dir).expect("load artifacts");
+    let mut xla = XlaSurrogate::new(ctx);
+    let mut native = NativeSurrogate::new(reference_cov(), 1e-6);
+
+    let mut rng = Rng::new(42);
+    let dims = 6;
+    let n = 23; // deliberately not a bucket size → exercises padding
+    let x: Vec<f64> = (0..n * dims).map(|_| rng.f64()).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0 + 7.0).collect();
+    let m = 1000; // not a chunk multiple → exercises chunk tail
+    let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
+
+    let (mut mu_x, mut var_x) = (vec![0.0; m], vec![0.0; m]);
+    let (mut mu_n, mut var_n) = (vec![0.0; m], vec![0.0; m]);
+    xla.fit_predict(&x, &y, dims, &cand, &mut mu_x, &mut var_x).expect("xla fit_predict");
+    native.fit_predict(&x, &y, dims, &cand, &mut mu_n, &mut var_n).expect("native fit_predict");
+
+    for j in 0..m {
+        assert!(
+            (mu_x[j] - mu_n[j]).abs() < 1e-3,
+            "mu mismatch at {j}: xla {} vs native {}",
+            mu_x[j],
+            mu_n[j]
+        );
+        assert!(
+            (var_x[j] - var_n[j]).abs() < 1e-3,
+            "var mismatch at {j}: xla {} vs native {}",
+            var_x[j],
+            var_n[j]
+        );
+    }
+}
+
+#[test]
+fn xla_backend_drives_bo_to_optimum() {
+    let Some(dir) = artifact_dir() else { return };
+    // A smooth bowl over a 25×25 grid: BO through the PJRT artifact must
+    // find the global minimum just like the native backend.
+    let vals: Vec<i64> = (0..25).collect();
+    let space = SearchSpace::build("bowl", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+    let table: Vec<Eval> = (0..space.len())
+        .map(|i| {
+            let p = space.point(i);
+            Eval::Valid(10.0 + 100.0 * ((p[0] - 0.6).powi(2) + (p[1] - 0.4).powi(2)))
+        })
+        .collect();
+    let obj = TableObjective::new(space, table);
+
+    let backend = xla_backend(&dir).expect("backend");
+    let mut cfg = BoConfig::single(Acq::Ei);
+    // The artifact bakes the CV-default covariance; keep configs aligned.
+    cfg.cov = reference_cov();
+    let strat = BoStrategy::with_backend("bo-xla", cfg, backend);
+    let mut rng = Rng::new(3);
+    let trace = strat.run(&obj, 60, &mut rng);
+    let best = trace.best().expect("found something").1;
+    let global = obj.known_minimum().unwrap();
+    assert!(best < global * 1.05, "xla-backed BO best {best} vs global {global}");
+}
+
+#[test]
+fn xla_and_native_backends_agree_on_trajectory() {
+    let Some(dir) = artifact_dir() else { return };
+    let vals: Vec<i64> = (0..20).collect();
+    let space = SearchSpace::build("bowl2", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+    let table: Vec<Eval> = (0..space.len())
+        .map(|i| {
+            let p = space.point(i);
+            Eval::Valid(1.0 + (p[0] - 0.2).powi(2) + (p[1] - 0.8).powi(2))
+        })
+        .collect();
+    let obj = TableObjective::new(space, table);
+
+    let mut cfg = BoConfig::single(Acq::Ei);
+    cfg.cov = reference_cov();
+
+    let native = BoStrategy::with_backend(
+        "bo-native",
+        cfg.clone(),
+        Backend::OneShot(Arc::new(|c: &BoConfig| {
+            Box::new(NativeSurrogate::new(c.cov, c.noise)) as Box<dyn Surrogate>
+        })),
+    );
+    let xla = BoStrategy::with_backend("bo-xla", cfg, xla_backend(&dir).expect("backend"));
+
+    let mut r1 = Rng::new(11);
+    let mut r2 = Rng::new(11);
+    let t_native = native.run(&obj, 40, &mut r1);
+    let t_xla = xla.run(&obj, 40, &mut r2);
+    // f32 vs f64 may reorder near-tie acquisition argmins late in the run;
+    // the early trajectory and the outcome must agree.
+    let a: Vec<usize> = t_native.records.iter().map(|(i, _)| *i).take(25).collect();
+    let b: Vec<usize> = t_xla.records.iter().map(|(i, _)| *i).take(25).collect();
+    assert_eq!(a, b, "early trajectories diverged");
+    let (bn, bx) = (t_native.best().unwrap().1, t_xla.best().unwrap().1);
+    assert!((bn - bx).abs() < 0.05, "outcomes differ: native {bn} xla {bx}");
+}
