@@ -1,16 +1,23 @@
 //! Micro-benchmarks of the optimizer's hot path (custom harness — no
-//! criterion in the offline vendor set): the exhaustive GP posterior over
-//! a GEMM-sized candidate set, across the three surrogate backends, plus
-//! acquisition scoring and one full BO iteration loop.
+//! criterion in the offline vendor set).
 //!
-//! Run: `cargo bench --bench gp_hotpath` (results land in
-//! EXPERIMENTS.md §Perf).
+//! Primary section: simulated BO loops over the sharded flat-tile GP with
+//! fused acquisition scoring — the GEMM restricted space (17956
+//! candidates) and a 200k-candidate space, at n ∈ {50, 120, 220} ×
+//! threads ∈ {1, 4, 8}, against the seed-style serial baseline. Results
+//! are written to `BENCH_gp_hotpath.json` at the repo root so the perf
+//! trajectory is tracked across PRs (see EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench gp_hotpath` (or `scripts/bench.sh`).
+//! Flags: `--smoke` (tiny grid), `--out PATH` (JSON destination).
+//!
+//! The loop logic lives in `ktbo::harness::gp_bench`, which the test
+//! suite also exercises — this binary cannot silently rot.
 
 use std::time::Instant;
 
-use ktbo::bo::acquisition::{argmin_score, score};
-use ktbo::bo::Acq;
-use ktbo::gp::{CovFn, Gpr, IncrementalGp, NativeSurrogate, Surrogate};
+use ktbo::gp::{CovFn, Gpr, NativeSurrogate, Surrogate};
+use ktbo::harness::gp_bench::{run_scenario, scenario_grid, to_json};
 use ktbo::util::rng::Rng;
 
 const DIMS: usize = 15; // GEMM dimensionality
@@ -28,59 +35,38 @@ fn timeit<F: FnMut()>(label: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
-fn main() {
+/// Reference one-shot backends over the GEMM-sized space — what
+/// scikit-learn/Kernel Tuner pay per iteration, for context.
+fn oneshot_reference_section() {
     let mut rng = Rng::new(1);
     let cov = CovFn::Matern32 { lengthscale: 1.5 };
     let cand: Vec<f64> = (0..M_CAND * DIMS).map(|_| rng.f64()).collect();
-    println!("== GP hot path: {M_CAND} candidates × {DIMS} dims ==");
-
-    for &n in &[50usize, 120, 220] {
+    println!("\n== one-shot reference backends: {M_CAND} candidates × {DIMS} dims ==");
+    for &n in &[50usize, 220] {
         let x: Vec<f64> = (0..n * DIMS).map(|_| rng.f64()).collect();
         let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let mut mu = vec![0.0; M_CAND];
         let mut var = vec![0.0; M_CAND];
-
-        // Batch (one-shot refit) — what scikit-learn/Kernel Tuner do.
         let iters = if n > 150 { 2 } else { 4 };
         timeit(&format!("batch Gpr fit+predict_into        (n={n})"), iters, || {
             let gp = Gpr::fit(cov, 1e-6, &x, DIMS, &y).unwrap();
             gp.predict_into(&cand, &mut mu, &mut var);
         });
-
-        // Incremental (our optimized path): a full simulated BO loop —
-        // n sequential (add observation, predict everything) iterations —
-        // reported per iteration. This is exactly the engine's workload.
-        let t0 = Instant::now();
-        let mut inc = IncrementalGp::new(cov, 1e-6, cand.clone(), DIMS);
-        for i in 0..n {
-            inc.add(&x[i * DIMS..(i + 1) * DIMS]);
-            inc.predict_into(&y[..i + 1], &mut mu, &mut var);
-        }
-        let per = t0.elapsed().as_secs_f64() / n as f64;
-        println!(
-            "{:<58} {:>10.3} ms/iter",
-            format!("incremental add+predict, amortized (n={n})"),
-            per * 1e3
-        );
-
-        // NativeSurrogate through the Surrogate trait (same as batch, with
-        // the trait-object overhead the XLA backend also pays).
         let mut nat = NativeSurrogate::new(cov, 1e-6);
         timeit(&format!("NativeSurrogate::fit_predict      (n={n})"), iters, || {
             nat.fit_predict(&x, &y, DIMS, &cand, &mut mu, &mut var).unwrap();
         });
-
-        // Acquisition scoring over the full candidate set.
-        let masked = vec![false; M_CAND];
-        timeit(&format!("EI argmin over candidates         (n={n})"), 20, || {
-            let _ = argmin_score(Acq::Ei, &mu, &var, 0.0, 0.01, &masked);
-        });
     }
+}
 
-    // XLA artifact backend, when available.
+/// XLA artifact backend, when compiled in and artifacts exist.
+#[cfg(feature = "xla-runtime")]
+fn xla_section() {
+    let mut rng = Rng::new(2);
+    let cand: Vec<f64> = (0..M_CAND * DIMS).map(|_| rng.f64()).collect();
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     if std::path::Path::new(&dir).join("gp_fitpredict_n256_c4096.hlo.txt").exists() {
-        println!("== XLA artifact backend (PJRT CPU) ==");
+        println!("\n== XLA artifact backend (PJRT CPU) ==");
         let backend = ktbo::runtime::XlaContext::load(&dir).expect("artifacts");
         let mut xla = ktbo::runtime::XlaSurrogate::new(backend);
         for &n in &[50usize, 220] {
@@ -95,15 +81,65 @@ fn main() {
     } else {
         println!("(skipping XLA backend bench — run `make artifacts`)");
     }
-
-    // Scalar acquisition-function throughput.
-    let t = timeit("acquisition score() x 1e6", 5, || {
-        let mut acc = 0.0;
-        for i in 0..1_000_000 {
-            acc += score(Acq::Ei, (i % 97) as f64 * 0.01, 0.5, 0.3, 0.01);
-        }
-        std::hint::black_box(acc);
-    });
-    println!("  = {:.1} ns per score", t * 1e3);
 }
 
+#[cfg(not(feature = "xla-runtime"))]
+fn xla_section() {
+    println!("(XLA backend bench requires --features xla-runtime)");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    // Smoke runs must never clobber the tracked full-grid trajectory file.
+    let default_name = if smoke { "BENCH_gp_hotpath.smoke.json" } else { "BENCH_gp_hotpath.json" };
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| format!("{}/../{default_name}", env!("CARGO_MANIFEST_DIR")));
+
+    println!("== gp_hotpath: sharded flat-tile GP, fused acquisition scoring ==");
+    println!("{:<18} {:>5} {:>8} {:>8} {:>10} {:>12}", "variant", "n", "m", "threads", "shard_len", "ms/iter");
+    let mut records = Vec::new();
+    for sc in scenario_grid(smoke) {
+        let r = run_scenario(&sc);
+        println!(
+            "{:<18} {:>5} {:>8} {:>8} {:>10} {:>12.3}",
+            sc.variant(),
+            sc.n,
+            sc.m,
+            sc.threads,
+            sc.shard_len,
+            r.ms_per_iter
+        );
+        records.push(r);
+    }
+
+    // Speedup summary: fused@8 threads vs serial baseline, per (n, m).
+    for base in records.iter().filter(|r| !r.scenario.fused) {
+        if let Some(fused) = records
+            .iter()
+            .filter(|r| r.scenario.fused && r.scenario.threads >= 8 && r.scenario.n == base.scenario.n && r.scenario.m == base.scenario.m)
+            .last()
+        {
+            println!(
+                "speedup n={:<4} m={:<7}: {:.2}x (baseline {:.3} → fused {:.3} ms/iter)",
+                base.scenario.n,
+                base.scenario.m,
+                base.ms_per_iter / fused.ms_per_iter.max(1e-12),
+                base.ms_per_iter,
+                fused.ms_per_iter
+            );
+        }
+    }
+
+    let doc = to_json(&records).render_pretty();
+    std::fs::write(&out, &doc).expect("write bench json");
+    println!("wrote {out}");
+
+    if !smoke {
+        oneshot_reference_section();
+        xla_section();
+    }
+}

@@ -52,8 +52,23 @@ pub fn score(acq: Acq, mu: f64, var: f64, f_best: f64, lambda: f64) -> f64 {
     }
 }
 
+/// "Is `s` a better (lower) score than the incumbent `b`?" — the one
+/// comparison rule shared by the reference scan, the per-shard sweep, and
+/// the cross-shard reduction. NaN never beats a non-NaN score (it acts as
+/// +∞ with first-index tie-breaking), which makes the fold associative:
+/// chunk-local argmins combined in ascending order give exactly the
+/// global scan's answer for *any* partition, NaNs included.
+#[inline]
+fn better(s: f64, b: f64) -> bool {
+    s < b || (b.is_nan() && !s.is_nan())
+}
+
 /// Arg-min of `score` over candidate predictions, skipping masked entries.
 /// Returns the position within the candidate arrays.
+///
+/// This is the *reference* composition; the engine's hot path runs
+/// [`score_chunk`] per shard + [`reduce_shard_argmins`] instead, which
+/// reproduce it exactly (property-tested in `tests/properties.rs`).
 pub fn argmin_score(acq: Acq, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize> {
     let mut best: Option<(usize, f64)> = None;
     for i in 0..mu.len() {
@@ -61,11 +76,85 @@ pub fn argmin_score(acq: Acq, mu: &[f64], var: &[f64], f_best: f64, lambda: f64,
             continue;
         }
         let s = score(acq, mu[i], var[i], f_best, lambda);
-        if best.map_or(true, |(_, b)| s < b) {
+        if best.map_or(true, |(_, b)| better(s, b)) {
             best = Some((i, s));
         }
     }
     best.map(|(i, _)| i)
+}
+
+/// One fused shard sweep: for each acquisition function in `afs`, the
+/// running (global index, score) argmin over this chunk, skipping masked
+/// candidates. `offset` is the chunk's first global candidate index.
+/// Ascending scan with the shared [`better`] rule keeps the lowest index
+/// on ties and rejects NaN scores; composed with
+/// [`reduce_shard_argmins`] this reproduces [`argmin_score`] exactly for
+/// any chunk partition.
+pub fn score_chunk(
+    afs: &[Acq],
+    mu: &[f64],
+    var: &[f64],
+    masked: &[bool],
+    offset: usize,
+    f_best: f64,
+    lambda: f64,
+) -> Vec<Option<(usize, f64)>> {
+    debug_assert!(mu.len() == var.len() && mu.len() == masked.len());
+    let mut best: Vec<Option<(usize, f64)>> = vec![None; afs.len()];
+    for j in 0..mu.len() {
+        if masked[j] {
+            continue;
+        }
+        for (a, b) in afs.iter().zip(best.iter_mut()) {
+            let s = score(*a, mu[j], var[j], f_best, lambda);
+            if b.map_or(true, |(_, bs)| better(s, bs)) {
+                *b = Some((offset + j, s));
+            }
+        }
+    }
+    best
+}
+
+/// Reduce per-shard fused argmins (in ascending shard order) into one
+/// global argmin per acquisition function. The shared [`better`] rule ⇒
+/// lowest-index tie-breaking and NaN-as-+∞, independent of the shard
+/// partition and thread count.
+pub fn reduce_shard_argmins(shards: &[Vec<Option<(usize, f64)>>], n_afs: usize) -> Vec<Option<usize>> {
+    let mut best: Vec<Option<(usize, f64)>> = vec![None; n_afs];
+    for part in shards {
+        debug_assert_eq!(part.len(), n_afs);
+        for (b, p) in best.iter_mut().zip(part) {
+            if let Some((idx, s)) = p {
+                if b.map_or(true, |(_, bs)| better(*s, bs)) {
+                    *b = Some((*idx, *s));
+                }
+            }
+        }
+    }
+    best.into_iter().map(|b| b.map(|(i, _)| i)).collect()
+}
+
+/// Fixed-point scale (2⁶⁴) for the deterministic posterior-variance
+/// reduction. Per-candidate variances convert to u128 fixed point so the
+/// cross-shard sum is an *integer* sum — associative, hence bit-identical
+/// for every shard partition and thread count (an f64 partial-sum tree
+/// would shift with the shard boundaries). Resolution 2⁻⁶⁴ keeps ~2⁻²⁴
+/// relative accuracy even at the 1e-12 variance floor — far below the
+/// GP's jitter.
+pub const VAR_FP_SCALE: f64 = 18446744073709551616.0; // 2^64
+
+/// Convert one posterior variance to fixed point. Clamped to [0, 1e6] —
+/// far beyond any sane GP posterior — so even a million-candidate sum
+/// stays below 2¹²⁸.
+#[inline]
+pub fn var_to_fp(v: f64) -> u128 {
+    (v.clamp(0.0, 1e6) * VAR_FP_SCALE) as u128
+}
+
+/// Fixed-point sum back to f64 (one deterministic rounding).
+#[inline]
+pub fn var_from_fp(sum: u128) -> f64 {
+    sum as f64 / VAR_FP_SCALE
 }
 
 #[cfg(test)]
@@ -128,5 +217,82 @@ mod tests {
         let i = argmin_score(Acq::Lcb, &mu, &var, 1.0, 0.0, &mask).unwrap();
         assert_eq!(i, 0, "index 1 is masked even though its score is best");
         assert!(argmin_score(Acq::Lcb, &mu, &var, 1.0, 0.0, &[true, true, true]).is_none());
+    }
+
+    #[test]
+    fn chunked_argmin_matches_reference_and_breaks_ties_low() {
+        let afs = [Acq::Ei, Acq::Poi, Acq::Lcb];
+        // Deliberate exact tie between indices 1 and 4 (identical inputs).
+        let mu = [0.9, 0.2, 0.7, 0.5, 0.2, 0.6];
+        let var = [0.1, 0.3, 0.2, 0.1, 0.3, 0.4];
+        let masked = [false, false, true, false, false, false];
+        for chunk in 1..=mu.len() {
+            let mut parts = Vec::new();
+            let mut start = 0;
+            while start < mu.len() {
+                let end = (start + chunk).min(mu.len());
+                parts.push(score_chunk(&afs, &mu[start..end], &var[start..end], &masked[start..end], start, 0.4, 0.05));
+                start = end;
+            }
+            let fused = reduce_shard_argmins(&parts, afs.len());
+            for (i, acq) in afs.iter().enumerate() {
+                let reference = argmin_score(*acq, &mu, &var, 0.4, 0.05, &masked);
+                assert_eq!(fused[i], reference, "{acq:?} diverged at chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_scores_never_shadow_finite_ones_under_any_partition() {
+        // mu = +∞ makes EI's score NaN (-∞·0). Reference and every chunk
+        // partition must agree on the finite winner, even when the NaN
+        // lands first in a chunk.
+        let afs = [Acq::Ei];
+        let mu = [0.5, f64::INFINITY, 0.3, f64::INFINITY];
+        let var = [0.1, 0.1, 0.1, 0.1];
+        let masked = [false; 4];
+        let reference = argmin_score(Acq::Ei, &mu, &var, 0.0, 0.0, &masked);
+        assert_eq!(reference, Some(2), "finite best must win over NaN scores");
+        for chunk in 1..=4 {
+            let mut parts = Vec::new();
+            let mut start = 0;
+            while start < mu.len() {
+                let end = (start + chunk).min(mu.len());
+                parts.push(score_chunk(&afs, &mu[start..end], &var[start..end], &masked[start..end], start, 0.0, 0.0));
+                start = end;
+            }
+            assert_eq!(reduce_shard_argmins(&parts, 1), vec![reference], "chunk={chunk}");
+        }
+        // All-NaN input: the first index is still reported (not None).
+        let all_inf = [f64::INFINITY, f64::INFINITY];
+        assert_eq!(argmin_score(Acq::Ei, &all_inf, &var[..2], 0.0, 0.0, &masked[..2]), Some(0));
+    }
+
+    #[test]
+    fn chunked_argmin_all_masked_is_none() {
+        let afs = [Acq::Ei];
+        let parts = vec![
+            score_chunk(&afs, &[1.0, 2.0], &[0.1, 0.1], &[true, true], 0, 0.0, 0.0),
+            score_chunk(&afs, &[3.0], &[0.1], &[true], 2, 0.0, 0.0),
+        ];
+        assert_eq!(reduce_shard_argmins(&parts, 1), vec![None]);
+    }
+
+    #[test]
+    fn var_fixed_point_roundtrip_and_associativity() {
+        let vals = [1e-12, 0.25, 0.999999, 1.0, 2.0];
+        for &v in &vals {
+            let back = var_from_fp(var_to_fp(v));
+            assert!((back - v).abs() <= v * 1e-9 + 1e-18, "{v} -> {back}");
+        }
+        // The whole point: the sum is independent of the partition.
+        let seq: u128 = vals.iter().map(|&v| var_to_fp(v)).sum();
+        let split = (var_to_fp(vals[0]) + var_to_fp(vals[1]))
+            + (var_to_fp(vals[2]) + (var_to_fp(vals[3]) + var_to_fp(vals[4])));
+        assert_eq!(seq, split);
+        // Out-of-range inputs stay finite and deterministic.
+        assert_eq!(var_to_fp(-1.0), 0);
+        assert_eq!(var_to_fp(f64::NAN), 0);
+        assert_eq!(var_to_fp(f64::INFINITY), var_to_fp(1e6));
     }
 }

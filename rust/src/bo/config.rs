@@ -74,6 +74,14 @@ pub struct BoConfig {
     pub discount: f64,
     /// Prune candidates that neighbor observed-invalid configurations.
     pub pruning: bool,
+    /// Worker threads for the sharded GP hot path (0 = auto: one per
+    /// available core, capped by the shard count; 1 = fully serial). The
+    /// evaluation sequence is identical for every value — enforced by the
+    /// engine's determinism tests.
+    pub threads: usize,
+    /// Candidates per GP shard tile (0 = auto: `gp::DEFAULT_SHARD_LEN`).
+    /// Like `threads`, affects performance only, never results.
+    pub shard_len: usize,
 }
 
 impl BoConfig {
@@ -93,6 +101,8 @@ impl BoConfig {
             improvement_factor: 0.1,
             discount: 0.65,
             pruning: true,
+            threads: 0,
+            shard_len: 0,
         }
     }
 

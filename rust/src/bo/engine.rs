@@ -15,17 +15,39 @@
 //! - optional pruning drops candidates adjacent to ≥2 observed-invalid
 //!   configurations — resource-limit invalidity is locally correlated on
 //!   GPUs (our reading of Table I's "Pruning: yes").
+//!
+//! Hot-path organization (the per-iteration O(m) work over the whole
+//! candidate set): one long-lived [`ShardPool`] serves the entire run, and
+//! each iteration makes exactly two sharded sweeps —
+//!
+//! 1. **mask+λ fold** ([`mask_var_fold`]): candidate mask, posterior
+//!    variance (from the GP's running Σ V², no posterior solve needed)
+//!    and the Σvar/count reduction that feeds the contextual-variance λ,
+//!    all in one O(m) pass with fixed-point partial sums;
+//! 2. **fused predict+score** (`IncrementalGp::predict_scored`): the
+//!    O(n·m) posterior sweep computes each shard's (mu, var) chunk and
+//!    immediately arg-minimizes every acquisition function the policy
+//!    [`wanted`](AcqPolicy::wanted) while the tile is hot — there is no
+//!    separate full-space `argmin_score` scan anymore.
+//!
+//! Determinism: shard boundaries are fixed by the config (never by the
+//! thread count), per-shard accumulation order is scheduling-independent,
+//! argmin reductions tie-break on the lowest index, and the λ reduction
+//! sums integers — so a run's evaluation sequence is bit-identical for
+//! every `threads`/`shard_len` (enforced by the tests below).
 
 use std::sync::Arc;
 
-use crate::bo::config::{BoConfig, Exploration, InitialSampling};
+use crate::bo::acquisition::{reduce_shard_argmins, score_chunk, var_from_fp, var_to_fp};
+use crate::bo::config::{Acq, BoConfig, Exploration, InitialSampling};
 use crate::bo::multi::{make_policy, AcqPolicy};
 use crate::bo::sampling::{lhs_points, maximin_lhs_points, random_untaken, snap_to_configs};
-use crate::gp::{IncrementalGp, Surrogate};
+use crate::gp::{IncrementalGp, Surrogate, DEFAULT_SHARD_LEN};
 use crate::objective::{Eval, Objective};
-use crate::space::{neighbors, Neighborhood};
+use crate::space::{neighbors, Neighborhood, SearchSpace};
 use crate::strategies::{Strategy, Trace};
 use crate::util::linalg::{mean, std_dev};
+use crate::util::pool::{nested_threads, ShardPool};
 use crate::util::rng::Rng;
 
 /// Surrogate backend selection.
@@ -61,6 +83,11 @@ struct RunState<'a> {
     rng: &'a mut Rng,
     trace: Trace,
     visited: Vec<bool>,
+    /// Scratch mask reused by every snap/random-replacement draw: the
+    /// samplers mark tentative picks in it, so it must start each draw as
+    /// a copy of `visited` — a copy into this buffer instead of a fresh
+    /// O(m) allocation per draw.
+    taken: Vec<bool>,
     obs_idx: Vec<usize>,
     obs_y: Vec<f64>,
     max_fevals: usize,
@@ -69,6 +96,12 @@ struct RunState<'a> {
 impl<'a> RunState<'a> {
     fn budget_left(&self) -> bool {
         self.trace.len() < self.max_fevals
+    }
+
+    /// A uniformly random not-yet-visited configuration.
+    fn random_unvisited(&mut self, space: &SearchSpace) -> Option<usize> {
+        self.taken.copy_from_slice(&self.visited);
+        random_untaken(space, &mut self.taken, self.rng)
     }
 
     /// Evaluate a configuration, consuming budget. Returns the raw valid
@@ -108,6 +141,7 @@ impl Strategy for BoStrategy {
             rng,
             trace: Trace::new(),
             visited: vec![false; m],
+            taken: vec![false; m],
             obs_idx: Vec::new(),
             obs_y: Vec::new(),
             max_fevals,
@@ -122,8 +156,8 @@ impl Strategy for BoStrategy {
         };
         let mut newly_invalid: Vec<usize> = Vec::new();
         if let Some(pts) = pts {
-            let mut taken = st.visited.clone();
-            let idxs = snap_to_configs(&pts, space, &mut taken);
+            st.taken.copy_from_slice(&st.visited);
+            let idxs = snap_to_configs(&pts, space, &mut st.taken);
             for idx in idxs {
                 if !st.budget_left() {
                     break;
@@ -136,8 +170,7 @@ impl Strategy for BoStrategy {
         // Replace invalid/missing draws with random samples until the
         // initial sample is complete (or budget/space is exhausted).
         while st.obs_y.len() < init_n && st.budget_left() {
-            let mut taken = st.visited.clone();
-            match random_untaken(space, &mut taken, st.rng) {
+            match st.random_unvisited(space) {
                 Some(idx) => {
                     if st.evaluate(idx).is_none() {
                         newly_invalid.push(idx);
@@ -152,7 +185,19 @@ impl Strategy for BoStrategy {
         let mu_s = mean(&st.obs_y); // initial-sample mean (raw units)
 
         // ---- Surrogate state ----
-        let mut inc = IncrementalGp::new(cfg.cov, cfg.noise, space.points().to_vec(), dims);
+        // Shard boundaries depend only on the config; the worker count
+        // caps at the shard count and, in auto mode, divides the machine
+        // by any harness-level parallelism already running (35 concurrent
+        // repeats must not each spawn a core-count pool). Neither setting
+        // affects results.
+        let shard_len = if cfg.shard_len == 0 { DEFAULT_SHARD_LEN } else { cfg.shard_len };
+        let n_shards = (m + shard_len - 1) / shard_len;
+        let pool_threads = match cfg.threads {
+            0 => nested_threads().min(n_shards),
+            t => t.min(n_shards),
+        };
+        let pool = ShardPool::new(pool_threads);
+        let mut inc = IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.points().to_vec(), dims, shard_len);
         let mut fed = 0usize; // observations already fed to the GP
         let mut oneshot = match &self.backend {
             Backend::Incremental => None,
@@ -193,14 +238,15 @@ impl Strategy for BoStrategy {
             };
             let y_z: Vec<f64> = st.obs_y.iter().map(|v| (v - y_mean) / y_std).collect();
 
-            // Posterior over the whole space.
+            // Feed new observations to the surrogate. The incremental
+            // backend defers its posterior sweep to the fused pass below;
+            // the one-shot backend must produce mu/var up front.
             match &mut oneshot {
                 None => {
                     while fed < st.obs_idx.len() {
-                        inc.add(space.point(st.obs_idx[fed]));
+                        inc.add_par(space.point(st.obs_idx[fed]), &pool);
                         fed += 1;
                     }
-                    inc.predict_into(&y_z, &mut mu, &mut var);
                 }
                 Some(s) => {
                     // One-shot backend: fit on observations, predict over
@@ -222,31 +268,28 @@ impl Strategy for BoStrategy {
                 }
             }
 
-            // Candidate mask: evaluated configs are out (§III-D); pruned
-            // configs (≥2 invalid adjacent neighbors) are out while other
-            // candidates remain.
-            for i in 0..m {
-                masked[i] = st.visited[i] || (cfg.pruning && invalid_adj[i] >= 2);
-            }
-            if masked.iter().all(|&x| x) {
-                // Pruning ate everything: relax it.
-                for i in 0..m {
-                    masked[i] = st.visited[i];
-                }
-            }
-
-            // Mean posterior variance over the candidates (for λ).
-            let (mut var_sum, mut n_cand) = (0.0, 0usize);
-            for i in 0..m {
-                if !masked[i] {
-                    var_sum += var[i];
-                    n_cand += 1;
-                }
+            // Candidate mask (§III-D: evaluated configs are out; pruned
+            // configs — ≥2 invalid adjacent neighbors — are out while
+            // other candidates remain) folded with the Σvar/count
+            // reduction for λ into one sharded O(m) pass. The incremental
+            // backend also materializes `var` here, straight from the
+            // GP's running Σ V² — no posterior solve needed yet.
+            let sq_chunks: Option<Vec<&[f64]>> =
+                if oneshot.is_none() { Some(inc.sq_chunks().collect()) } else { None };
+            let adj = if cfg.pruning { Some(&invalid_adj[..]) } else { None };
+            let (mut var_fp, mut n_cand) =
+                mask_var_fold(&pool, shard_len, &mut masked, &mut var, sq_chunks.as_deref(), &st.visited, adj);
+            if n_cand == 0 && cfg.pruning {
+                // Pruning ate everything: relax it to visited-only.
+                let relaxed =
+                    mask_var_fold(&pool, shard_len, &mut masked, &mut var, sq_chunks.as_deref(), &st.visited, None);
+                var_fp = relaxed.0;
+                n_cand = relaxed.1;
             }
             if n_cand == 0 {
                 break; // space exhausted
             }
-            let sigma_bar2 = var_sum / n_cand as f64;
+            let sigma_bar2 = var_from_fp(var_fp) / n_cand as f64;
             let s_s2 = *sigma_s2.get_or_insert(sigma_bar2);
 
             // Exploration factor (§III-F).
@@ -259,18 +302,31 @@ impl Strategy for BoStrategy {
                     ((sigma_bar2 / improvement) / s_s2.max(1e-12)).max(0.0)
                 }
             };
-
             let f_best_z = (f_best - y_mean) / y_std;
-            let pick = policy.choose(&mu, &var, f_best_z, lambda, &masked);
+
+            // Fused acquisition pass: one sweep computes every wanted AF's
+            // exhaustive argmin (plus, for the incremental backend, the
+            // posterior itself).
+            let wanted = policy.wanted();
+            let suggestions: Vec<Option<usize>> = if wanted.is_empty() {
+                Vec::new()
+            } else if oneshot.is_none() {
+                let parts = inc.predict_scored(&y_z, &pool, &mut mu, &mut var, |start, mu_c, var_c| {
+                    score_chunk(&wanted, mu_c, var_c, &masked[start..start + mu_c.len()], start, f_best_z, lambda)
+                });
+                reduce_shard_argmins(&parts, wanted.len())
+            } else {
+                let parts = score_pass(&pool, shard_len, &wanted, &mu, &var, &masked, f_best_z, lambda);
+                reduce_shard_argmins(&parts, wanted.len())
+            };
+
+            let pick = policy.choose(&suggestions);
             let idx = match pick {
                 Some(i) => i,
-                None => {
-                    let mut taken = st.visited.clone();
-                    match random_untaken(space, &mut taken, st.rng) {
-                        Some(i) => i,
-                        None => break,
-                    }
-                }
+                None => match st.random_unvisited(space) {
+                    Some(i) => i,
+                    None => break,
+                },
             };
             let value = st.evaluate(idx);
             if value.is_none() {
@@ -280,6 +336,99 @@ impl Strategy for BoStrategy {
         }
         st.trace
     }
+}
+
+/// One sharded O(m) fold over the candidate set: writes the mask (visited
+/// ∪ pruned), optionally materializes the posterior variance from the
+/// GP's running Σ V² chunks, and reduces (Σ unmasked var, unmasked count).
+/// Chunk boundaries are fixed by `chunk` and the variance sum uses
+/// associative fixed-point arithmetic, so the result is bit-identical for
+/// every partition and thread count.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mask_var_fold(
+    pool: &ShardPool,
+    chunk: usize,
+    masked: &mut [bool],
+    var: &mut [f64],
+    sq_chunks: Option<&[&[f64]]>,
+    visited: &[bool],
+    invalid_adj: Option<&[u8]>,
+) -> (u128, usize) {
+    let m = masked.len();
+    let n_chunks = (m + chunk - 1) / chunk;
+    let mut parts: Vec<(u128, usize)> = vec![(0, 0); n_chunks];
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = masked
+            .chunks_mut(chunk)
+            .zip(var.chunks_mut(chunk))
+            .zip(visited.chunks(chunk))
+            .zip(parts.iter_mut())
+            .enumerate()
+            .map(|(ci, (((mk, vr), vis), slot))| {
+                let start = ci * chunk;
+                let sq = sq_chunks.map(|s| s[ci]);
+                let adj = invalid_adj.map(|a| &a[start..start + mk.len()]);
+                Box::new(move || {
+                    let mut fp = 0u128;
+                    let mut n = 0usize;
+                    for j in 0..mk.len() {
+                        if let Some(sq) = sq {
+                            vr[j] = (1.0 - sq[j]).max(1e-12);
+                        }
+                        let pruned = adj.map_or(false, |a| a[j] >= 2);
+                        mk[j] = vis[j] || pruned;
+                        if !mk[j] {
+                            fp += var_to_fp(vr[j]);
+                            n += 1;
+                        }
+                    }
+                    *slot = (fp, n);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(jobs);
+    }
+    let mut fp = 0u128;
+    let mut n = 0usize;
+    for (p, c) in parts {
+        fp += p;
+        n += c;
+    }
+    (fp, n)
+}
+
+/// Sharded acquisition argmin over precomputed (mu, var) arrays — the
+/// one-shot/XLA backend's equivalent of the fused incremental pass.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn score_pass(
+    pool: &ShardPool,
+    chunk: usize,
+    afs: &[Acq],
+    mu: &[f64],
+    var: &[f64],
+    masked: &[bool],
+    f_best: f64,
+    lambda: f64,
+) -> Vec<Vec<Option<(usize, f64)>>> {
+    let m = masked.len();
+    let n_chunks = (m + chunk - 1) / chunk;
+    let mut parts: Vec<Vec<Option<(usize, f64)>>> = Vec::with_capacity(n_chunks);
+    parts.resize_with(n_chunks, Vec::new);
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = parts
+            .iter_mut()
+            .enumerate()
+            .map(|(ci, slot)| {
+                let start = ci * chunk;
+                let end = (start + chunk).min(m);
+                Box::new(move || {
+                    *slot = score_chunk(afs, &mu[start..end], &var[start..end], &masked[start..end], start, f_best, lambda);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run(jobs);
+    }
+    parts
 }
 
 #[cfg(test)]
@@ -420,6 +569,35 @@ mod tests {
         let a: Vec<usize> = inc.records.iter().map(|(i, _)| *i).collect();
         let b: Vec<usize> = t2.records.iter().map(|(i, _)| *i).collect();
         assert_eq!(a, b, "one-shot backend must reproduce the incremental path");
+    }
+
+    /// The PR's determinism criterion: the sharded hot path must
+    /// reproduce the serial single-tile (seed-equivalent) evaluation
+    /// sequence bit for bit, at every shard partition and thread count.
+    #[test]
+    fn evaluation_sequence_identical_across_shards_and_threads() {
+        let obj = bowl_with_invalid(); // exercises pruning + invalid paths too
+        let seq = |cfg_base: BoConfig, shard_len: usize, threads: usize| -> Vec<usize> {
+            let mut cfg = cfg_base;
+            cfg.shard_len = shard_len;
+            cfg.threads = threads;
+            let t = run_bo(cfg, &obj, 17, 80);
+            t.records.iter().map(|(i, _)| *i).collect()
+        };
+        for base in [BoConfig::single(Acq::Ei), BoConfig::multi(), BoConfig::advanced_multi()] {
+            // 900 candidates in one tile, zero worker threads: the serial
+            // reference path.
+            let reference = seq(base.clone(), 900, 1);
+            assert_eq!(reference.len(), 80);
+            for &(sl, th) in &[(450, 2), (113, 8), (64, 3), (0, 8), (900, 4)] {
+                assert_eq!(
+                    seq(base.clone(), sl, th),
+                    reference,
+                    "{:?}: sequence diverged at shard_len={sl} threads={th}",
+                    base.acq
+                );
+            }
+        }
     }
 
     #[test]

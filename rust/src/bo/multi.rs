@@ -5,17 +5,29 @@
 //! Both meta-strategies evaluate the basic AFs in a round-robin fashion,
 //! optimizing *one* AF per function evaluation over the shared posterior
 //! predictions (unlike GP-Hedge, which optimizes all of them every time).
+//!
+//! The interface is split so the engine can *fuse* acquisition scoring
+//! into the posterior sweep: a policy first declares which basic AFs it
+//! needs exhaustively arg-minimized this iteration ([`AcqPolicy::wanted`]),
+//! the engine computes all of them in one sharded pass over the posterior,
+//! and the policy then picks from the resulting suggestions
+//! ([`AcqPolicy::choose`]) without ever touching the O(m) arrays itself.
 
-use crate::bo::acquisition::argmin_score;
 use crate::bo::config::{Acq, BoConfig};
 use crate::util::linalg::median;
 
 /// Outcome bookkeeping interface of an acquisition policy.
 pub trait AcqPolicy: Send {
-    /// Pick a candidate position given shared predictions (normalized
-    /// units) and the candidate mask. Returns `None` when every candidate
-    /// is masked.
-    fn choose(&mut self, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize>;
+    /// The basic AFs whose exhaustive argmins the engine must compute for
+    /// this iteration, in order. Must not mutate state: the matching
+    /// `choose` call advances the rotation.
+    fn wanted(&self) -> Vec<Acq>;
+
+    /// Pick a candidate position given one argmin suggestion per AF
+    /// returned by the matching `wanted()` call (`suggestions[i]` ↔
+    /// `wanted()[i]`; `None` = every candidate masked under that AF).
+    /// Returns `None` when no AF has a suggestion.
+    fn choose(&mut self, suggestions: &[Option<usize>]) -> Option<usize>;
 
     /// Report the *raw* observation produced by the last `choose`
     /// (`None` for an invalid configuration). `valid_so_far` holds all raw
@@ -70,8 +82,12 @@ pub struct SinglePolicy {
 }
 
 impl AcqPolicy for SinglePolicy {
-    fn choose(&mut self, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize> {
-        argmin_score(self.acq, mu, var, f_best, lambda, masked)
+    fn wanted(&self) -> Vec<Acq> {
+        vec![self.acq]
+    }
+
+    fn choose(&mut self, suggestions: &[Option<usize>]) -> Option<usize> {
+        suggestions.first().copied().flatten()
     }
 
     fn observe(&mut self, _y: Option<f64>, _valid: &[f64]) {}
@@ -125,22 +141,30 @@ impl MultiPolicy {
 }
 
 impl AcqPolicy for MultiPolicy {
-    fn choose(&mut self, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize> {
-        // Shared predictions: compute every active AF's suggestion (cheap —
-        // the expensive part, the posterior, is already done). Duplicate
-        // suggestions increment the involved AFs' conflict counters.
-        let suggestions: Vec<Option<usize>> = self
-            .order
+    fn wanted(&self) -> Vec<Acq> {
+        // Every active AF's suggestion is needed: duplicate detection
+        // compares them pairwise. The engine fuses all of them into the
+        // one posterior sweep, so this costs one pass regardless.
+        self.order
             .iter()
-            .enumerate()
-            .map(|(i, &a)| {
-                if self.active[i] {
-                    argmin_score(a, mu, var, f_best, lambda, masked)
-                } else {
-                    None
-                }
-            })
-            .collect();
+            .zip(&self.active)
+            .filter(|(_, a)| **a)
+            .map(|(q, _)| *q)
+            .collect()
+    }
+
+    fn choose(&mut self, fused: &[Option<usize>]) -> Option<usize> {
+        // Scatter the fused suggestions (one per *active* AF, in order)
+        // back onto rotation positions; inactive AFs get `None`, exactly
+        // as when they were scored inline.
+        let k = self.order.len();
+        let mut suggestions: Vec<Option<usize>> = vec![None; k];
+        let mut it = fused.iter();
+        for (i, sug) in suggestions.iter_mut().enumerate() {
+            if self.active[i] {
+                *sug = it.next().copied().flatten();
+            }
+        }
         for i in 0..suggestions.len() {
             for j in i + 1..suggestions.len() {
                 if let (Some(si), Some(sj)) = (suggestions[i], suggestions[j]) {
@@ -242,21 +266,31 @@ impl AdvancedMultiPolicy {
     }
 }
 
-impl AcqPolicy for AdvancedMultiPolicy {
-    fn choose(&mut self, mu: &[f64], var: &[f64], f_best: f64, lambda: f64, masked: &[bool]) -> Option<usize> {
+impl AdvancedMultiPolicy {
+    /// The AF the rotation will hand the next evaluation to, without
+    /// advancing it (`wanted` must be side-effect free).
+    fn peek_chooser(&self) -> Option<usize> {
         let k = self.order.len();
-        let mut chooser = None;
-        for _ in 0..k {
-            let i = self.rr % k;
-            self.rr += 1;
-            if self.active[i] {
-                chooser = Some(i);
-                break;
-            }
+        (0..k).map(|d| (self.rr + d) % k).find(|&i| self.active[i])
+    }
+}
+
+impl AcqPolicy for AdvancedMultiPolicy {
+    fn wanted(&self) -> Vec<Acq> {
+        // Unlike `multi`, only the rotation's current AF is optimized —
+        // one argmin per evaluation, as in the paper.
+        match self.peek_chooser() {
+            Some(i) => vec![self.order[i]],
+            None => Vec::new(),
         }
-        let chooser = chooser?;
+    }
+
+    fn choose(&mut self, suggestions: &[Option<usize>]) -> Option<usize> {
+        let k = self.order.len();
+        let chooser = self.peek_chooser()?;
+        self.rr = (chooser + 1) % k; // congruent to the pre-split rr walk
         self.last_chooser = Some(chooser);
-        argmin_score(self.order[chooser], mu, var, f_best, lambda, masked)
+        suggestions.first().copied().flatten()
     }
 
     fn observe(&mut self, y: Option<f64>, valid_so_far: &[f64]) {
@@ -324,9 +358,27 @@ pub fn make_policy(cfg: &BoConfig) -> Box<dyn AcqPolicy> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bo::acquisition::argmin_score;
 
     fn cfg() -> BoConfig {
         BoConfig::multi()
+    }
+
+    /// Drive a policy the way the engine does: ask for its wanted AFs,
+    /// arg-minimize each with the reference scan, hand back the
+    /// suggestions.
+    fn choose_on(
+        p: &mut dyn AcqPolicy,
+        mu: &[f64],
+        var: &[f64],
+        f_best: f64,
+        lambda: f64,
+        masked: &[bool],
+    ) -> Option<usize> {
+        let wanted = p.wanted();
+        let suggestions: Vec<Option<usize>> =
+            wanted.iter().map(|a| argmin_score(*a, mu, var, f_best, lambda, masked)).collect();
+        p.choose(&suggestions)
     }
 
     #[test]
@@ -345,7 +397,8 @@ mod tests {
         let mut p = SinglePolicy { acq: Acq::Lcb };
         let mu = [1.0, 0.2, 0.9];
         let var = [0.1, 0.1, 0.1];
-        let pick = p.choose(&mu, &var, 1.0, 0.0, &[false, false, false]).unwrap();
+        assert_eq!(p.wanted(), vec![Acq::Lcb]);
+        let pick = choose_on(&mut p, &mu, &var, 1.0, 0.0, &[false, false, false]).unwrap();
         assert_eq!(pick, 1);
         assert_eq!(p.active(), vec![Acq::Lcb]);
     }
@@ -358,11 +411,13 @@ mod tests {
         let mu = [0.0, 5.0, 5.0];
         let var = [1.0, 0.01, 0.01];
         for step in 0..30 {
-            let pick = p.choose(&mu, &var, 1.0, 0.1, &[false, false, false]).unwrap();
+            let pick = choose_on(&mut p, &mu, &var, 1.0, 0.1, &[false, false, false]).unwrap();
             assert_eq!(pick, 0);
             p.observe(Some(1.0 + step as f64 * 0.01), &[1.0]);
         }
         assert_eq!(p.active().len(), 1, "duplicating AFs must be skipped");
+        // Once skipped, wanted() shrinks with the active set.
+        assert_eq!(p.wanted().len(), 1);
     }
 
     #[test]
@@ -374,7 +429,7 @@ mod tests {
         let var = [0.0001, 0.0625];
         let picks: Vec<usize> = (0..5)
             .map(|_| {
-                let c = p.choose(&mu, &var, 0.5, 0.0, &[false, false]).unwrap();
+                let c = choose_on(&mut p, &mu, &var, 0.5, 0.0, &[false, false]).unwrap();
                 p.observe(Some(1.0), &[1.0]);
                 c
             })
@@ -382,6 +437,23 @@ mod tests {
         let distinct: std::collections::HashSet<_> = picks.iter().collect();
         assert!(distinct.len() >= 2, "disagreeing AFs must alternate: {picks:?}");
         assert!(p.active().len() >= 2);
+    }
+
+    #[test]
+    fn advanced_multi_wants_exactly_one_af_per_round() {
+        let c = BoConfig::advanced_multi();
+        let mut p = AdvancedMultiPolicy::new(&c);
+        // The rotation must advance one AF per choose, matching af_order.
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            let w = p.wanted();
+            assert_eq!(w.len(), 1, "advanced multi optimizes one AF per evaluation");
+            seen.push(w[0]);
+            let _ = p.choose(&[Some(0)]);
+            p.observe(Some(1.0), &[1.0]);
+        }
+        assert_eq!(&seen[..3], &c.af_order, "rotation must follow af_order");
+        assert_eq!(&seen[3..], &c.af_order, "rotation must wrap");
     }
 
     #[test]
@@ -396,7 +468,7 @@ mod tests {
             if p.active().len() == 1 {
                 break;
             }
-            let _ = p.choose(&mu, &var, 0.5, 1.0, &[false, false, false]);
+            let _ = choose_on(&mut p, &mu, &var, 0.5, 1.0, &[false, false, false]);
             let is_ei_turn = step % p.order.len() == 0; // approximation of rr
             p.observe(Some(if is_ei_turn { 1.0 } else { 10.0 }), &[1.0]);
         }
@@ -409,7 +481,7 @@ mod tests {
         let mut p = AdvancedMultiPolicy::new(&c);
         let mu = [0.0];
         let var = [1.0];
-        let _ = p.choose(&mu, &var, 0.5, 0.1, &[false]);
+        let _ = choose_on(&mut p, &mu, &var, 0.5, 0.1, &[false]);
         p.observe(None, &[2.0, 4.0, 6.0]); // median 4.0
         assert!((p.dos[0].value() - 4.0).abs() < 1e-12);
     }

@@ -1,4 +1,5 @@
-//! Incrementally updated GP posterior over a *fixed* candidate set.
+//! Incrementally updated GP posterior over a *fixed* candidate set,
+//! stored as a candidate-sharded flat-tile buffer.
 //!
 //! The paper's method predicts the posterior exhaustively over every
 //! non-evaluated configuration at every iteration (§III-G). A naive refit
@@ -14,10 +15,103 @@
 //! - posterior mean is Vᵀ·(L⁻¹ y_c), O(n·m) per query (y re-centering
 //!   changes every iteration, so the mean is recomputed per query).
 //!
+//! Layout: V is partitioned over the *candidate* axis into fixed shards of
+//! [`DEFAULT_SHARD_LEN`] columns. Each shard owns one contiguous tile
+//! (row-major n×len f32), so both the append and the predict sweep walk
+//! each tile front to back — L2-resident for the paper-scale n — and the
+//! shards are embarrassingly parallel across a [`ShardPool`]. Shard
+//! boundaries depend only on (m, shard_len), never on the thread count,
+//! and no floating-point accumulation ever crosses a candidate column, so
+//! results are **bit-identical for every shard partition and thread
+//! count** (`sharding_is_bit_exact` below enforces this).
+//!
+//! V is f32: the sweeps are memory-bandwidth-bound over n·m elements, and
+//! halving the traffic buys ~1.7× (EXPERIMENTS.md §Perf); the ~1e-7
+//! relative rounding is far below the GP's own noise floor.
+//!
 //! Same math as `Gpr`, ~n× faster per BO iteration; `Gpr` remains the
 //! reference implementation and the tests cross-check the two.
 
 use crate::gp::cov::{dist, CovFn};
+use crate::util::pool::ShardPool;
+
+/// Default candidates per shard tile. A full-budget tile (220 rows × 1024
+/// columns × 4 B ≈ 0.9 MB) stays resident in a typical 1–2 MB L2 slice
+/// for the whole add+predict sweep; 17956-candidate GEMM splits into 18
+/// shards, a 200k-candidate space into ~196 — plenty of parallelism.
+pub const DEFAULT_SHARD_LEN: usize = 1024;
+
+/// One candidate shard: a contiguous slice of V plus its running column
+/// sums of squares.
+struct Shard {
+    /// First (global) candidate index covered by this shard.
+    start: usize,
+    /// Number of candidates covered.
+    len: usize,
+    /// Flat tile of V restricted to this shard's candidates: row-major
+    /// n×len, one row appended per observation.
+    tile: Vec<f32>,
+    /// Running Σᵢ V[i][j]² per local candidate j.
+    sq: Vec<f64>,
+}
+
+impl Shard {
+    /// Append one row of V: covariances of the new training point against
+    /// this shard's candidates, forward-substituted through the shard's
+    /// existing rows. Identical per-element operation order to the
+    /// unsharded implementation, so the result does not depend on the
+    /// partition.
+    fn add_row(&mut self, cov: CovFn, point: &[f64], cand: &[f64], dims: usize, lrow: &[f64], inv_diag: f32) {
+        let n = lrow.len() - 1;
+        let len = self.len;
+        debug_assert_eq!(self.tile.len(), n * len);
+        self.tile.reserve(len);
+        for j in 0..len {
+            let c = &cand[(self.start + j) * dims..(self.start + j + 1) * dims];
+            self.tile.push(cov.eval(dist(point, c)) as f32);
+        }
+        let (prev, row) = self.tile.split_at_mut(n * len);
+        for (r, lr) in lrow[..n].iter().enumerate() {
+            if *lr == 0.0 {
+                continue;
+            }
+            let lr32 = *lr as f32;
+            let vr = &prev[r * len..(r + 1) * len];
+            for (vj, vrj) in row.iter_mut().zip(vr) {
+                *vj -= lr32 * vrj;
+            }
+        }
+        for (vj, sqj) in row.iter_mut().zip(self.sq.iter_mut()) {
+            *vj *= inv_diag;
+            *sqj += f64::from(*vj) * f64::from(*vj);
+        }
+    }
+
+    /// One posterior sweep over this shard: mean accumulated in f32 over
+    /// the hot tile, mu/var written to the shard's chunk of the global
+    /// buffers.
+    fn predict_rows(&self, w: &[f64], y_mean: f64, mu: &mut [f64], var: &mut [f64]) {
+        let len = self.len;
+        debug_assert!(mu.len() == len && var.len() == len);
+        let mut mu32 = vec![0.0f32; len];
+        for (r, wr) in w.iter().enumerate() {
+            if *wr == 0.0 {
+                continue;
+            }
+            let wr32 = *wr as f32;
+            let vr = &self.tile[r * len..(r + 1) * len];
+            for (mj, vrj) in mu32.iter_mut().zip(vr) {
+                *mj += wr32 * vrj;
+            }
+        }
+        for (mj, m32) in mu.iter_mut().zip(&mu32) {
+            *mj = y_mean + f64::from(*m32);
+        }
+        for (vj, sqj) in var.iter_mut().zip(&self.sq) {
+            *vj = (1.0 - *sqj).max(1e-12);
+        }
+    }
+}
 
 pub struct IncrementalGp {
     cov: CovFn,
@@ -26,24 +120,35 @@ pub struct IncrementalGp {
     /// Candidate matrix (row-major m×dims) — typically the whole space.
     cand: Vec<f64>,
     m: usize,
+    shard_len: usize,
     /// Training points appended so far (row-major n×dims).
     x: Vec<f64>,
     /// Rows of the lower-triangular Cholesky factor (row i has i+1 entries).
     l: Vec<Vec<f64>>,
-    /// Rows of V = L⁻¹ K(X, C), each of length m. Stored in f32: the
-    /// predict pass is memory-bandwidth-bound over n·m elements, and
-    /// halving the traffic buys ~1.7× (EXPERIMENTS.md §Perf); the ~1e-7
-    /// relative rounding is far below the GP's own noise floor.
-    v: Vec<Vec<f32>>,
-    /// Running Σᵢ V[i][j]² per candidate j.
-    sq: Vec<f64>,
+    /// Candidate shards of V (fixed boundaries, ascending `start`).
+    shards: Vec<Shard>,
 }
 
 impl IncrementalGp {
     pub fn new(cov: CovFn, noise: f64, cand: Vec<f64>, dims: usize) -> IncrementalGp {
+        IncrementalGp::with_shard_len(cov, noise, cand, dims, DEFAULT_SHARD_LEN)
+    }
+
+    /// Explicit shard sizing — the engine passes its configured value,
+    /// tests exercise degenerate partitions. Results are bit-identical for
+    /// every `shard_len`; only performance changes.
+    pub fn with_shard_len(cov: CovFn, noise: f64, cand: Vec<f64>, dims: usize, shard_len: usize) -> IncrementalGp {
         assert!(dims > 0 && cand.len() % dims == 0);
+        assert!(shard_len > 0);
         let m = cand.len() / dims;
-        IncrementalGp { cov, noise, dims, cand, m, x: Vec::new(), l: Vec::new(), v: Vec::new(), sq: vec![0.0; m] }
+        let mut shards = Vec::with_capacity((m + shard_len - 1) / shard_len);
+        let mut start = 0;
+        while start < m {
+            let len = shard_len.min(m - start);
+            shards.push(Shard { start, len, tile: Vec::new(), sq: vec![0.0; len] });
+            start += len;
+        }
+        IncrementalGp { cov, noise, dims, cand, m, shard_len, x: Vec::new(), l: Vec::new(), shards }
     }
 
     pub fn n_obs(&self) -> usize {
@@ -54,8 +159,35 @@ impl IncrementalGp {
         self.m
     }
 
-    /// Append one training point (length = dims).
+    pub fn shard_len(&self) -> usize {
+        self.shard_len
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard running Σ V² chunks, in candidate order (chunk boundaries
+    /// = the shard partition). Posterior variance of candidate j is
+    /// `(1 − sq[j]).max(1e-12)` — available without a predict sweep, which
+    /// is what lets the engine compute the exploration factor λ *before*
+    /// the fused predict+score pass.
+    pub fn sq_chunks(&self) -> impl Iterator<Item = &[f64]> + '_ {
+        self.shards.iter().map(|s| s.sq.as_slice())
+    }
+
+    /// Append one training point (length = dims), serially.
     pub fn add(&mut self, point: &[f64]) {
+        self.add_with(point, None);
+    }
+
+    /// Append one training point, fanning the per-shard row append across
+    /// the pool.
+    pub fn add_par(&mut self, point: &[f64], pool: &ShardPool) {
+        self.add_with(point, Some(pool));
+    }
+
+    fn add_with(&mut self, point: &[f64], pool: Option<&ShardPool>) {
         assert_eq!(point.len(), self.dims);
         let n = self.l.len();
         // New row of L: forward-substitute k(x_new, x_i) through existing rows.
@@ -67,68 +199,103 @@ impl IncrementalGp {
         }
         let diag2 = (1.0 + self.noise - lrow.iter().map(|v| v * v).sum::<f64>()).max(1e-10);
         lrow.push(diag2.sqrt());
-
-        // New row of V: (k(x_new, c_j) − Σ_r lrow[r]·V[r][j]) / diag.
-        // All-f32 accumulation (see field comment): the subtraction chain
-        // is ≤ n ≈ 220 terms, √n·ε₃₂ ≈ 1e-6 — below the jitter floor.
-        let mut vrow = vec![0.0f32; self.m];
-        for (j, vj) in vrow.iter_mut().enumerate() {
-            *vj = self.cov.eval(dist(point, &self.cand[j * self.dims..(j + 1) * self.dims])) as f32;
-        }
-        for (r, lr) in lrow[..n].iter().enumerate() {
-            if *lr == 0.0 {
-                continue;
-            }
-            let lr32 = *lr as f32;
-            let vr = &self.v[r];
-            for (vj, vrj) in vrow.iter_mut().zip(vr) {
-                *vj -= lr32 * vrj;
-            }
-        }
         let inv_diag = (1.0 / lrow[n]) as f32;
-        for (vj, sqj) in vrow.iter_mut().zip(self.sq.iter_mut()) {
-            *vj *= inv_diag;
-            *sqj += f64::from(*vj) * f64::from(*vj);
+
+        let cov = self.cov;
+        let dims = self.dims;
+        let cand: &[f64] = &self.cand;
+        let lrow_ref: &[f64] = &lrow;
+        match pool {
+            Some(pool) if pool.threads() > 0 && self.shards.len() > 1 => {
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                    .shards
+                    .iter_mut()
+                    .map(|shard| {
+                        Box::new(move || shard.add_row(cov, point, cand, dims, lrow_ref, inv_diag))
+                            as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run(jobs);
+            }
+            _ => {
+                for shard in self.shards.iter_mut() {
+                    shard.add_row(cov, point, cand, dims, lrow_ref, inv_diag);
+                }
+            }
         }
 
         self.x.extend_from_slice(point);
         self.l.push(lrow);
-        self.v.push(vrow);
+    }
+
+    /// w = L⁻¹ (y − ȳ).
+    fn solve_w(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.l.len();
+        assert_eq!(y.len(), n);
+        let y_mean = crate::util::linalg::mean(y);
+        let mut w = vec![0.0; n];
+        for i in 0..n {
+            let s: f64 = (0..i).map(|r| self.l[i][r] * w[r]).sum();
+            w[i] = (y[i] - y_mean - s) / self.l[i][i];
+        }
+        w
     }
 
     /// Posterior mean and variance over all candidates given the raw
     /// observations `y` (same order as `add` calls). Observations are
     /// centered internally; outputs are in the units of `y`.
     pub fn predict_into(&self, y: &[f64], mu: &mut [f64], var: &mut [f64]) {
-        let n = self.l.len();
-        assert_eq!(y.len(), n);
         assert!(mu.len() >= self.m && var.len() >= self.m);
+        let w = self.solve_w(y);
         let y_mean = crate::util::linalg::mean(y);
-        // w = L⁻¹ (y − ȳ).
-        let mut w = vec![0.0; n];
-        for i in 0..n {
-            let s: f64 = (0..i).map(|r| self.l[i][r] * w[r]).sum();
-            w[i] = (y[i] - y_mean - s) / self.l[i][i];
+        for shard in &self.shards {
+            let (s, e) = (shard.start, shard.start + shard.len);
+            shard.predict_rows(&w, y_mean, &mut mu[s..e], &mut var[s..e]);
         }
-        // Accumulate the mean in f32 (8-lane SIMD, no widening in the
-        // inner loop); ~√n·ε₃₂ accumulation error ≪ GP noise floor.
-        let mut mu32 = vec![0.0f32; self.m];
-        for (r, wr) in w.iter().enumerate() {
-            if *wr == 0.0 {
-                continue;
-            }
-            let wr32 = *wr as f32;
-            let vr = &self.v[r];
-            for (mj, vrj) in mu32.iter_mut().zip(vr) {
-                *mj += wr32 * vrj;
-            }
+    }
+
+    /// Fused posterior + acquisition sweep: each shard computes its
+    /// (mu, var) chunk and immediately reduces it through `score` while
+    /// the tile is hot, in parallel across the pool. `score` receives
+    /// `(chunk start index, mu chunk, var chunk)` and must be pure —
+    /// it runs concurrently. Returns the per-shard reductions in ascending
+    /// shard order, so the caller's final reduction is deterministic
+    /// regardless of scheduling.
+    pub fn predict_scored<R, F>(
+        &self,
+        y: &[f64],
+        pool: &ShardPool,
+        mu: &mut [f64],
+        var: &mut [f64],
+        score: F,
+    ) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &[f64], &[f64]) -> R + Sync,
+    {
+        assert!(mu.len() >= self.m && var.len() >= self.m);
+        let w = self.solve_w(y);
+        let y_mean = crate::util::linalg::mean(y);
+        let mut out: Vec<Option<R>> = Vec::with_capacity(self.shards.len());
+        out.resize_with(self.shards.len(), || None);
+        {
+            let wref: &[f64] = &w;
+            let score = &score;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                .shards
+                .iter()
+                .zip(out.iter_mut())
+                .zip(mu[..self.m].chunks_mut(self.shard_len).zip(var[..self.m].chunks_mut(self.shard_len)))
+                .map(|((shard, slot), (mu_c, var_c))| {
+                    Box::new(move || {
+                        shard.predict_rows(wref, y_mean, mu_c, var_c);
+                        *slot = Some(score(shard.start, &mu_c[..], &var_c[..]));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(jobs);
         }
-        for (mj, m32) in mu[..self.m].iter_mut().zip(&mu32) {
-            *mj = y_mean + f64::from(*m32);
-        }
-        for j in 0..self.m {
-            var[j] = (1.0 - self.sq[j]).max(1e-12);
-        }
+        out.into_iter().map(|r| r.expect("shard job did not run")).collect()
     }
 }
 
@@ -221,5 +388,106 @@ mod tests {
         inc.predict_into(&[], &mut mu, &mut var);
         assert_eq!(mu, vec![0.0; 3]);
         assert!(var.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+    }
+
+    /// The tentpole determinism guarantee: every shard partition × thread
+    /// count reproduces the single-tile serial posterior bit for bit.
+    #[test]
+    fn sharding_is_bit_exact() {
+        let mut rng = Rng::new(21);
+        let dims = 4;
+        let m = 103;
+        let n = 17;
+        let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
+        let x: Vec<f64> = (0..n * dims).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let cov = CovFn::Matern32 { lengthscale: 1.2 };
+
+        let run = |shard_len: usize, threads: usize| -> (Vec<f64>, Vec<f64>) {
+            let pool = ShardPool::new(threads);
+            let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand.clone(), dims, shard_len);
+            for i in 0..n {
+                inc.add_par(&x[i * dims..(i + 1) * dims], &pool);
+            }
+            let mut mu = vec![0.0; m];
+            let mut var = vec![0.0; m];
+            inc.predict_into(&y, &mut mu, &mut var);
+            (mu, var)
+        };
+
+        let (mu_ref, var_ref) = run(m, 1); // 1 shard, serial: the unsharded layout
+        for &(sl, th) in &[((m + 1) / 2, 2), ((m + 7) / 8, 8), (13, 3), (1, 4)] {
+            let (mu, var) = run(sl, th);
+            assert_eq!(mu, mu_ref, "mu bits differ at shard_len={sl} threads={th}");
+            assert_eq!(var, var_ref, "var bits differ at shard_len={sl} threads={th}");
+        }
+    }
+
+    /// The fused sweep must hand the scorer exactly the chunks that
+    /// `predict_into` writes, with correct global offsets.
+    #[test]
+    fn fused_sweep_sees_the_same_posterior() {
+        let mut rng = Rng::new(33);
+        let dims = 3;
+        let m = 41;
+        let n = 9;
+        let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
+        let cov = CovFn::Matern52 { lengthscale: 1.0 };
+        let pool = ShardPool::new(4);
+        let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand, dims, 7);
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let p: Vec<f64> = (0..dims).map(|_| rng.f64()).collect();
+            inc.add_par(&p, &pool);
+            y.push(rng.normal());
+        }
+
+        let mut mu_a = vec![0.0; m];
+        let mut var_a = vec![0.0; m];
+        inc.predict_into(&y, &mut mu_a, &mut var_a);
+
+        let mut mu_b = vec![0.0; m];
+        let mut var_b = vec![0.0; m];
+        let parts = inc.predict_scored(&y, &pool, &mut mu_b, &mut var_b, |start, mu_c, var_c| {
+            (start, mu_c.to_vec(), var_c.to_vec())
+        });
+        assert_eq!(mu_a, mu_b);
+        assert_eq!(var_a, var_b);
+        assert_eq!(parts.len(), inc.n_shards());
+        let mut covered = 0;
+        for (start, mu_c, var_c) in parts {
+            assert_eq!(start, covered, "shard results must arrive in candidate order");
+            assert_eq!(mu_c, mu_a[start..start + mu_c.len()].to_vec());
+            assert_eq!(var_c, var_a[start..start + var_c.len()].to_vec());
+            covered += mu_c.len();
+        }
+        assert_eq!(covered, m);
+    }
+
+    /// sq_chunks must expose the same variances predict_into reports,
+    /// chunked on the shard partition.
+    #[test]
+    fn sq_chunks_match_predicted_variance() {
+        let mut rng = Rng::new(55);
+        let dims = 2;
+        let m = 23;
+        let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
+        let mut inc = IncrementalGp::with_shard_len(CovFn::Rbf { lengthscale: 0.7 }, 1e-6, cand, dims, 6);
+        for _ in 0..5 {
+            let p = [rng.f64(), rng.f64()];
+            inc.add(&p);
+        }
+        let y = vec![0.3, -0.1, 0.8, 0.0, 0.2];
+        let mut mu = vec![0.0; m];
+        let mut var = vec![0.0; m];
+        inc.predict_into(&y, &mut mu, &mut var);
+        let mut j = 0;
+        for chunk in inc.sq_chunks() {
+            for sq in chunk {
+                assert_eq!(var[j], (1.0 - *sq).max(1e-12), "var/sq mismatch at {j}");
+                j += 1;
+            }
+        }
+        assert_eq!(j, m);
     }
 }

@@ -7,5 +7,5 @@ pub mod incremental;
 pub mod gpr;
 
 pub use cov::{dist, CovFn};
-pub use incremental::IncrementalGp;
+pub use incremental::{IncrementalGp, DEFAULT_SHARD_LEN};
 pub use gpr::{Gpr, NativeSurrogate, Surrogate};

@@ -1,0 +1,198 @@
+//! Reusable core of the `gp_hotpath` bench: a simulated BO-iteration loop
+//! over the sharded GP hot path, timed per iteration, with
+//! machine-readable output (`BENCH_gp_hotpath.json` at the repo root).
+//!
+//! The bench binary (`benches/gp_hotpath.rs`) is a thin CLI over these
+//! functions, and the test suite runs a tiny smoke grid through the same
+//! code (`gp_hotpath_bench_smoke` in `tests/integration.rs`) — so the
+//! bench logic compiles and runs on every `cargo test` and can never
+//! silently rot.
+//!
+//! Two variants per scenario:
+//! - `baseline_serial` — the seed hot path: serial incremental
+//!   add + predict, then a *separate* full-space mask scan, variance
+//!   reduction, and acquisition argmin scan.
+//! - `fused_sharded` — this PR's engine path: pooled shard-parallel add,
+//!   one folded mask+variance pass, and the fused predict+score sweep.
+
+use std::time::Instant;
+
+use crate::bo::acquisition::{argmin_score, reduce_shard_argmins, score_chunk, var_from_fp};
+use crate::bo::engine::mask_var_fold;
+use crate::bo::Acq;
+use crate::gp::{CovFn, IncrementalGp, DEFAULT_SHARD_LEN};
+use crate::util::json::Json;
+use crate::util::pool::ShardPool;
+use crate::util::rng::Rng;
+
+/// One hot-path scenario: `n` simulated BO iterations over `m` candidates.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub n: usize,
+    pub m: usize,
+    pub dims: usize,
+    pub threads: usize,
+    pub shard_len: usize,
+    /// Engine-style fused path vs the seed-style separate passes.
+    pub fused: bool,
+}
+
+impl Scenario {
+    pub fn variant(&self) -> &'static str {
+        if self.fused {
+            "fused_sharded"
+        } else {
+            "baseline_serial"
+        }
+    }
+}
+
+/// Timing outcome of one scenario.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub scenario: Scenario,
+    pub ms_per_iter: f64,
+    pub total_s: f64,
+    /// Order-sensitive digest of the per-iteration argmin picks — equal
+    /// digests ⇒ identical simulated trajectories (the determinism hook
+    /// for tests; also lands in the JSON so perf runs are comparable).
+    pub picks_digest: u64,
+}
+
+/// Run one simulated BO loop: every iteration appends one observation to
+/// the GP, rebuilds the candidate mask + mean posterior variance, and
+/// arg-minimizes EI over all non-evaluated candidates — exactly the
+/// engine's per-iteration O(m)/O(n·m) workload, without objective noise.
+pub fn run_scenario(sc: &Scenario) -> Record {
+    let mut rng = Rng::new(0x9e37_79b9);
+    let cand: Vec<f64> = (0..sc.m * sc.dims).map(|_| rng.f64()).collect();
+    let x: Vec<f64> = (0..sc.n * sc.dims).map(|_| rng.f64()).collect();
+    let y: Vec<f64> = (0..sc.n).map(|_| rng.normal()).collect();
+    let cov = CovFn::Matern32 { lengthscale: 1.5 };
+
+    let pool = ShardPool::new(if sc.fused { sc.threads } else { 1 });
+    let shard_len = if sc.fused { sc.shard_len.max(1) } else { sc.m.max(1) };
+    let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand, sc.dims, shard_len);
+    let mut mu = vec![0.0; sc.m];
+    let mut var = vec![0.0; sc.m];
+    let mut masked = vec![false; sc.m];
+    let mut visited = vec![false; sc.m];
+    let afs = [Acq::Ei];
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+
+    let t0 = Instant::now();
+    for i in 0..sc.n {
+        inc.add_par(&x[i * sc.dims..(i + 1) * sc.dims], &pool);
+        let yw = &y[..i + 1];
+        let f_best = yw.iter().cloned().fold(f64::INFINITY, f64::min);
+        let pick = if sc.fused {
+            // Engine path: folded mask+var pass, then fused predict+score.
+            let sq_chunks: Vec<&[f64]> = inc.sq_chunks().collect();
+            let (var_fp, n_cand) =
+                mask_var_fold(&pool, inc.shard_len(), &mut masked, &mut var, Some(&sq_chunks[..]), &visited, None);
+            let lambda = 0.01 * var_from_fp(var_fp) / n_cand.max(1) as f64;
+            let parts = inc.predict_scored(yw, &pool, &mut mu, &mut var, |start, mu_c, var_c| {
+                score_chunk(&afs, mu_c, var_c, &masked[start..start + mu_c.len()], start, f_best, lambda)
+            });
+            reduce_shard_argmins(&parts, afs.len())[0]
+        } else {
+            // Seed path: serial predict, then separate mask scan, variance
+            // reduction, and argmin scan — three extra O(m) passes.
+            inc.predict_into(yw, &mut mu, &mut var);
+            for j in 0..sc.m {
+                masked[j] = visited[j];
+            }
+            let (mut var_sum, mut n_cand) = (0.0, 0usize);
+            for j in 0..sc.m {
+                if !masked[j] {
+                    var_sum += var[j];
+                    n_cand += 1;
+                }
+            }
+            let lambda = 0.01 * var_sum / n_cand.max(1) as f64;
+            argmin_score(Acq::Ei, &mu, &var, f_best, lambda, &masked)
+        };
+        if let Some(p) = pick {
+            visited[p] = true;
+            digest = (digest ^ p as u64).wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    std::hint::black_box(digest);
+    Record {
+        scenario: sc.clone(),
+        ms_per_iter: total_s * 1e3 / sc.n.max(1) as f64,
+        total_s,
+        picks_digest: digest,
+    }
+}
+
+/// The bench grid. `smoke` shrinks it to sub-second sizes for the test
+/// suite; the full grid covers the GEMM restricted space (17956) and a
+/// 200k-candidate space at n ∈ {50, 120, 220} × threads ∈ {1, 4, 8},
+/// plus the serial seed-style baseline for the before/after ratio.
+pub fn scenario_grid(smoke: bool) -> Vec<Scenario> {
+    if smoke {
+        return vec![
+            Scenario { n: 6, m: 160, dims: 4, threads: 1, shard_len: 160, fused: false },
+            Scenario { n: 6, m: 160, dims: 4, threads: 2, shard_len: 37, fused: true },
+            Scenario { n: 6, m: 160, dims: 4, threads: 4, shard_len: 16, fused: true },
+        ];
+    }
+    let mut grid = Vec::new();
+    for &m in &[17956usize, 200_000] {
+        for &n in &[50usize, 120, 220] {
+            grid.push(Scenario { n, m, dims: 15, threads: 1, shard_len: DEFAULT_SHARD_LEN, fused: false });
+            for &threads in &[1usize, 4, 8] {
+                grid.push(Scenario { n, m, dims: 15, threads, shard_len: DEFAULT_SHARD_LEN, fused: true });
+            }
+        }
+    }
+    grid
+}
+
+/// Render records as the `BENCH_gp_hotpath.json` document tracked from
+/// this PR onward (append-friendly, diffable: insertion-ordered keys).
+pub fn to_json(records: &[Record]) -> Json {
+    let rows: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("variant", r.scenario.variant())
+                .set("n", r.scenario.n)
+                .set("m", r.scenario.m)
+                .set("dims", r.scenario.dims)
+                .set("threads", r.scenario.threads)
+                .set("shard_len", r.scenario.shard_len)
+                .set("ms_per_iter", r.ms_per_iter)
+                .set("total_s", r.total_s)
+                .set("picks_digest", format!("{:016x}", r.picks_digest))
+        })
+        .collect();
+    Json::obj()
+        .set("bench", "gp_hotpath")
+        .set("unit", "ms_per_iter")
+        .set("description", "simulated BO loop: per-iteration GP append + mask/var fold + exhaustive EI argmin")
+        .set("records", Json::Arr(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The end-to-end smoke of the grid + JSON serialization lives in
+    // tests/integration.rs (gp_hotpath_bench_smoke) — one copy only.
+
+    /// The fused path must walk an identical trajectory for every shard
+    /// partition and thread count (same inputs via the fixed RNG seed).
+    #[test]
+    fn fused_trajectory_is_partition_independent() {
+        let digest = |threads: usize, shard_len: usize| -> u64 {
+            run_scenario(&Scenario { n: 8, m: 120, dims: 3, threads, shard_len, fused: true }).picks_digest
+        };
+        let reference = digest(1, 120);
+        assert_eq!(digest(2, 60), reference);
+        assert_eq!(digest(4, 13), reference);
+        assert_eq!(digest(8, 1), reference);
+    }
+}

@@ -2,6 +2,7 @@
 //! regenerating every table and figure of the paper.
 
 pub mod figures;
+pub mod gp_bench;
 pub mod hypertune;
 pub mod metrics;
 pub mod runner;

@@ -139,11 +139,16 @@ mod tests {
 
     #[test]
     fn deterministic_across_thread_counts() {
+        // Both the harness pool (outer) and the BO engine's shard pool
+        // (inner, exercised by "ei") must leave results untouched by
+        // parallelism.
         let obj = toy_obj();
-        let a = run_strategy(&obj, "random", 60, 5, 99, 1);
-        let b = run_strategy(&obj, "random", 60, 5, 99, 4);
-        assert_eq!(a.mean_curve, b.mean_curve, "parallelism must not change results");
-        assert_eq!(a.maes, b.maes);
+        for strategy in ["random", "ei"] {
+            let a = run_strategy(&obj, strategy, 60, 5, 99, 1);
+            let b = run_strategy(&obj, strategy, 60, 5, 99, 4);
+            assert_eq!(a.mean_curve, b.mean_curve, "{strategy}: parallelism must not change results");
+            assert_eq!(a.maes, b.maes, "{strategy}: parallelism must not change MAEs");
+        }
     }
 
     #[test]

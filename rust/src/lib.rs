@@ -23,6 +23,9 @@ pub mod gp;
 pub mod gpusim;
 pub mod harness;
 pub mod objective;
+/// PJRT/XLA artifact backend — needs the vendored `xla` crate, so the
+/// default build ships without it (see Cargo.toml `xla-runtime`).
+#[cfg(feature = "xla-runtime")]
 pub mod runtime;
 pub mod space;
 pub mod strategies;

@@ -9,7 +9,6 @@
 //! Common flags: --strategy <name> --budget N --seed N --repeat-scale F
 //!               --threads N --out DIR --backend native|xla --noise F
 
-use ktbo::bo::{Acq, BoConfig, BoStrategy};
 use ktbo::gpusim::device::Device;
 use ktbo::harness::figures as figs;
 use ktbo::harness::Options;
@@ -104,20 +103,7 @@ fn cmd_tune(args: &Args) {
         None => figs::objective_for(kernel, &dev),
     };
     let strategy: Box<dyn Strategy> = if args.str_or("backend", "native") == "xla" {
-        // XLA-compiled GP surrogate via PJRT artifacts (Layers 1+2).
-        let acq = match strategy_name.as_str() {
-            "poi" => Acq::Poi,
-            "lcb" => Acq::Lcb,
-            _ => Acq::Ei,
-        };
-        let cfg = BoConfig::single(acq);
-        match ktbo::runtime::xla_backend(&args.str_or("artifacts", "artifacts")) {
-            Ok(backend) => Box::new(BoStrategy::with_backend("bo-xla", cfg, backend)),
-            Err(e) => {
-                eprintln!("failed to initialize XLA backend: {e}");
-                std::process::exit(3);
-            }
-        }
+        build_xla_strategy(args, &strategy_name)
     } else {
         match by_name(&strategy_name) {
             Some(s) => s,
@@ -146,6 +132,31 @@ fn cmd_tune(args: &Args) {
         }
         None => println!("no valid configuration found in {} evaluations", trace.len()),
     }
+}
+
+/// XLA-compiled GP surrogate via PJRT artifacts (Layers 1+2).
+#[cfg(feature = "xla-runtime")]
+fn build_xla_strategy(args: &Args, strategy_name: &str) -> Box<dyn Strategy> {
+    use ktbo::bo::{Acq, BoConfig, BoStrategy};
+    let acq = match strategy_name {
+        "poi" => Acq::Poi,
+        "lcb" => Acq::Lcb,
+        _ => Acq::Ei,
+    };
+    let cfg = BoConfig::single(acq);
+    match ktbo::runtime::xla_backend(&args.str_or("artifacts", "artifacts")) {
+        Ok(backend) => Box::new(BoStrategy::with_backend("bo-xla", cfg, backend)),
+        Err(e) => {
+            eprintln!("failed to initialize XLA backend: {e}");
+            std::process::exit(3);
+        }
+    }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn build_xla_strategy(_args: &Args, _strategy_name: &str) -> Box<dyn Strategy> {
+    eprintln!("the XLA backend requires building with `--features xla-runtime` (plus the vendored xla crate)");
+    std::process::exit(3);
 }
 
 fn cmd_experiment(args: &Args) {

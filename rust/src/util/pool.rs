@@ -1,10 +1,58 @@
-//! Minimal scoped thread pool for the experiment harness (no rayon/tokio
-//! in the vendor set). Work items are closures producing `T`; results are
-//! returned in submission order so repeated experiments stay deterministic
-//! regardless of scheduling.
+//! Minimal thread pools for the coordinator (no rayon/tokio in the vendor
+//! set).
+//!
+//! Two tiers with different lifecycles:
+//!
+//! - [`run_parallel`] spawns fresh threads per call and returns results in
+//!   submission order — fine for the experiment harness, where each job is
+//!   a whole tuning run and the spawn cost amortizes over seconds.
+//! - [`ShardPool`] is a *long-lived* worker pool for the BO engine's
+//!   sharded GP hot path: one pool lives across all (~220) iterations of
+//!   a run, so the per-iteration cost is a condvar wake, not a thread
+//!   spawn. Jobs are borrowed closures (a scoped API): `run` blocks until
+//!   every job finished, which is what makes handing out `&mut` shard
+//!   state to workers sound.
+//!
+//! Determinism: neither pool reorders *results*. `run_parallel` collects
+//! by submission index; `ShardPool::run` writes through per-job captured
+//! slots, so reductions happen on the caller's side in a fixed order
+//! regardless of which worker ran which shard when.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Harness workers currently alive (incremented for the duration of each
+/// multi-threaded `run_parallel` call). Nested consumers — the BO engine's
+/// auto thread mode — divide the machine by this so 35 concurrent repeats
+/// don't each spawn a core-count shard pool on top of the core-count
+/// harness pool.
+static ACTIVE_HARNESS_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+struct HarnessWorkersGuard(usize);
+
+impl HarnessWorkersGuard {
+    fn enter(workers: usize) -> HarnessWorkersGuard {
+        ACTIVE_HARNESS_WORKERS.fetch_add(workers, Ordering::Relaxed);
+        HarnessWorkersGuard(workers)
+    }
+}
+
+impl Drop for HarnessWorkersGuard {
+    fn drop(&mut self) {
+        ACTIVE_HARNESS_WORKERS.fetch_sub(self.0, Ordering::Relaxed);
+    }
+}
+
+/// Threads a nested parallel stage should use so the whole process stays
+/// near one thread per core: the machine divided by the harness workers
+/// currently running (at least 1). Purely a performance heuristic — shard
+/// results are thread-count-independent by construction.
+pub fn nested_threads() -> usize {
+    let outer = ACTIVE_HARNESS_WORKERS.load(Ordering::Relaxed);
+    (default_threads() / outer.max(1)).max(1)
+}
 
 /// Run `jobs` across up to `threads` workers, returning results in the
 /// original order.
@@ -17,6 +65,7 @@ where
     if threads <= 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
+    let _nesting = HarnessWorkersGuard::enter(threads);
     let n = jobs.len();
     let queue: Arc<Mutex<Vec<(usize, F)>>> =
         Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
@@ -54,6 +103,160 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// A job handed to the pool: boxed so shards of different closures mix,
+/// lifetime-erased inside `run` (see the SAFETY note there).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    /// Slots for the current batch; workers `take()` them by index.
+    jobs: Vec<Option<Job>>,
+    /// Next job index to hand out.
+    next: usize,
+    /// Jobs finished so far in this batch.
+    completed: usize,
+    /// Jobs in this batch.
+    total: usize,
+    /// A job panicked (re-raised on the caller after the batch drains).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new batch.
+    work_cv: Condvar,
+    /// The caller waits here for batch completion.
+    done_cv: Condvar,
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if st.next < st.jobs.len() {
+            let idx = st.next;
+            st.next += 1;
+            let job = st.jobs[idx].take().expect("job taken twice");
+            drop(st);
+            let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+            st = shared.state.lock().unwrap();
+            if !ok {
+                st.panicked = true;
+            }
+            st.completed += 1;
+            if st.completed == st.total {
+                shared.done_cv.notify_all();
+            }
+        } else {
+            st = shared.work_cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Long-lived worker pool for the sharded GP hot path. Construct once per
+/// BO run (or per bench scenario); `run` one batch of shard jobs per pass.
+///
+/// `threads <= 1` spawns no workers at all — `run` then executes inline on
+/// the caller, so serial configurations pay zero synchronization.
+pub struct ShardPool {
+    shared: Arc<PoolShared>,
+    /// Serializes concurrent `run` calls (the state machine holds one
+    /// batch at a time).
+    submit: Mutex<()>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ShardPool {
+    pub fn new(threads: usize) -> ShardPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                jobs: Vec::new(),
+                next: 0,
+                completed: 0,
+                total: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let n_workers = if threads <= 1 { 0 } else { threads };
+        let workers = (0..n_workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        ShardPool { shared, submit: Mutex::new(()), workers }
+    }
+
+    /// Worker-thread count (0 means `run` executes inline).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute every job, blocking until all have finished. Jobs may
+    /// borrow from the caller's stack: the blocking guarantee bounds their
+    /// lifetime. Worker panics are re-raised here after the batch drains.
+    pub fn run<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if self.workers.is_empty() || jobs.len() <= 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let _guard = self.submit.lock().unwrap();
+        let total = jobs.len();
+        // SAFETY: `run` does not return until `completed == total`, i.e.
+        // until every job has been consumed and finished, so no job (or
+        // anything it borrows with lifetime 'a) is referenced after this
+        // call. The transmute erases only the lifetime; Box<dyn ...> has
+        // the same layout on both sides.
+        let jobs: Vec<Job> = jobs
+            .into_iter()
+            .map(|j| unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(j) })
+            .collect();
+        let mut st = self.shared.state.lock().unwrap();
+        st.jobs = jobs.into_iter().map(Some).collect();
+        st.next = 0;
+        st.completed = 0;
+        st.total = total;
+        st.panicked = false;
+        drop(st);
+        self.shared.work_cv.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.completed < st.total {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.jobs.clear();
+        st.next = 0;
+        st.completed = 0;
+        st.total = 0;
+        let panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        drop(_guard);
+        if panicked {
+            panic!("ShardPool worker job panicked");
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +284,89 @@ mod tests {
     fn more_threads_than_jobs() {
         let jobs: Vec<_> = (0..2).map(|i| move || i).collect();
         assert_eq!(run_parallel(jobs, 64), vec![0, 1]);
+    }
+
+    fn shard_jobs(out: &mut [u64]) -> Vec<Box<dyn FnOnce() + Send + '_>> {
+        out.iter_mut()
+            .enumerate()
+            .map(|(i, slot)| {
+                Box::new(move || {
+                    *slot = (i as u64 + 1) * 3;
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_pool_runs_borrowed_jobs() {
+        let pool = ShardPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let mut out = vec![0u64; 37];
+        pool.run(shard_jobs(&mut out));
+        assert_eq!(out, (0..37).map(|i| (i + 1) * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shard_pool_serial_fallback() {
+        let pool = ShardPool::new(1);
+        assert_eq!(pool.threads(), 0);
+        let mut out = vec![0u64; 5];
+        pool.run(shard_jobs(&mut out));
+        assert_eq!(out, vec![3, 6, 9, 12, 15]);
+    }
+
+    #[test]
+    fn shard_pool_reusable_across_batches() {
+        let pool = ShardPool::new(3);
+        for round in 1..=20u64 {
+            let mut out = vec![0u64; 11];
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .iter_mut()
+                .map(|slot| {
+                    Box::new(move || {
+                        *slot = round;
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(jobs);
+            assert!(out.iter().all(|&v| v == round), "round {round}: {out:?}");
+        }
+    }
+
+    #[test]
+    fn nested_threads_stays_within_the_machine() {
+        // Loose bounds only: other tests may run harness pools concurrently.
+        assert!(nested_threads() >= 1);
+        let jobs: Vec<_> = (0..4).map(|_| nested_threads).collect();
+        let inner = run_parallel(jobs, 4);
+        assert!(inner.iter().all(|&t| (1..=default_threads()).contains(&t)));
+    }
+
+    #[test]
+    fn shard_pool_empty_batch_is_noop() {
+        let pool = ShardPool::new(2);
+        pool.run(Vec::new());
+    }
+
+    #[test]
+    fn shard_pool_propagates_panics() {
+        let pool = ShardPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("boom");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(jobs);
+        }));
+        assert!(caught.is_err(), "worker panic must surface on the caller");
+        // The pool must stay usable after a panicked batch.
+        let mut out = vec![0u64; 6];
+        pool.run(shard_jobs(&mut out));
+        assert_eq!(out, vec![3, 6, 9, 12, 15, 18]);
     }
 }

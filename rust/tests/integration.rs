@@ -118,6 +118,44 @@ fn table_objective_known_minimum_consistent() {
 }
 
 #[test]
+fn gp_hotpath_bench_smoke() {
+    // The gp_hotpath bench binary is a thin CLI over harness::gp_bench;
+    // running the smoke grid here keeps the bench from silently rotting.
+    use ktbo::harness::gp_bench::{run_scenario, scenario_grid, to_json};
+    let records: Vec<_> = scenario_grid(true).iter().map(run_scenario).collect();
+    assert!(!records.is_empty());
+    for r in &records {
+        assert!(r.ms_per_iter.is_finite() && r.ms_per_iter >= 0.0, "bad timing in {:?}", r.scenario);
+    }
+    let doc = to_json(&records).render_pretty();
+    assert!(doc.contains("\"bench\": \"gp_hotpath\""));
+    assert!(doc.contains("fused_sharded") && doc.contains("baseline_serial"));
+}
+
+#[test]
+fn bo_sequence_survives_thread_and_shard_sweep_on_simulated_space() {
+    // Engine-level determinism on a real simulated kernel space (adding on
+    // the A100): the full §III pipeline — pruning, contextual variance,
+    // advanced multi — must produce one evaluation sequence for every
+    // (shard, thread) configuration.
+    use ktbo::bo::{BoConfig, BoStrategy};
+    use ktbo::strategies::Strategy;
+    let obj = objective_for("adding", &Device::a100());
+    let seq = |shard_len: usize, threads: usize| -> Vec<usize> {
+        let mut cfg = BoConfig::advanced_multi();
+        cfg.shard_len = shard_len;
+        cfg.threads = threads;
+        let s = BoStrategy::new("advanced_multi", cfg);
+        let mut rng = Rng::new(20210601);
+        s.run(obj.as_ref(), 60, &mut rng).records.iter().map(|(i, _)| *i).collect()
+    };
+    let reference = seq(1 << 30, 1); // single shard, serial
+    for &(sl, th) in &[(0, 8), (512, 2), (257, 4)] {
+        assert_eq!(seq(sl, th), reference, "diverged at shard_len={sl} threads={th}");
+    }
+}
+
+#[test]
 fn comparison_runner_is_seed_stable() {
     let obj: Arc<TableObjective> = objective_for("adding", &Device::a100());
     let a = run_strategy(&obj, "multi", 100, 3, 42, 2);

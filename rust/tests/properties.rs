@@ -5,6 +5,7 @@
 
 use std::collections::HashSet;
 
+use ktbo::bo::acquisition::{argmin_score, reduce_shard_argmins, score_chunk};
 use ktbo::bo::{Acq, BoConfig, BoStrategy};
 use ktbo::harness::metrics::{mean_deviation_factor, run_mae};
 use ktbo::objective::{Eval, Objective, TableObjective};
@@ -242,6 +243,62 @@ fn prop_mae_and_mdf_invariances() {
             Ok(())
         },
         |(mae, scale)| format!("{}x{} matrix, scale {scale}", mae.len(), mae[0].len()),
+    );
+}
+
+#[test]
+fn prop_fused_shard_scoring_matches_reference() {
+    // The engine's fused per-shard score+argmin (score_chunk over a
+    // partition + reduce_shard_argmins) must reproduce the reference
+    // score/argmin_score composition for every AF on arbitrary inputs —
+    // including all-masked and single-candidate cases, and for every
+    // chunk size (1 ⇒ one shard per candidate, ≥ m ⇒ one shard total).
+    check(
+        "fused-score-argmin",
+        &Config { cases: 150, ..Config::default() },
+        |rng| {
+            let m = 1 + rng.below(64);
+            let mu: Vec<f64> = (0..m).map(|_| rng.normal() * 2.0).collect();
+            let var: Vec<f64> = (0..m).map(|_| 1e-12 + rng.f64()).collect();
+            let all_masked = rng.chance(0.15);
+            let masked: Vec<bool> = (0..m).map(|_| all_masked || rng.chance(0.3)).collect();
+            let f_best = rng.normal();
+            let lambda = rng.f64() * 2.0;
+            let chunk = 1 + rng.below(m + 4); // may exceed m: single shard
+            (mu, var, masked, f_best, lambda, chunk)
+        },
+        |(mu, var, masked, f_best, lambda, chunk)| {
+            let afs = [Acq::Ei, Acq::Poi, Acq::Lcb];
+            let mut parts = Vec::new();
+            let mut start = 0;
+            while start < mu.len() {
+                let end = (start + chunk).min(mu.len());
+                parts.push(score_chunk(
+                    &afs,
+                    &mu[start..end],
+                    &var[start..end],
+                    &masked[start..end],
+                    start,
+                    *f_best,
+                    *lambda,
+                ));
+                start = end;
+            }
+            let fused = reduce_shard_argmins(&parts, afs.len());
+            for (i, acq) in afs.iter().enumerate() {
+                let reference = argmin_score(*acq, mu, var, *f_best, *lambda, masked);
+                if fused[i] != reference {
+                    return Err(format!("{acq:?}: fused {:?} vs reference {:?}", fused[i], reference));
+                }
+            }
+            Ok(())
+        },
+        |(mu, _, masked, f_best, lambda, chunk)| {
+            format!(
+                "m={} chunk={chunk} f_best={f_best} lambda={lambda} masked={masked:?}",
+                mu.len()
+            )
+        },
     );
 }
 

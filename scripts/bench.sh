@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Kick-the-tires perf runner: release build, gp_hotpath bench, and
+# BENCH_gp_hotpath.json refreshed at the repo root.
+#
+#   scripts/bench.sh            # full grid (17956 & 200k candidates)
+#   scripts/bench.sh --smoke    # tiny grid, seconds — sanity check only
+#
+# After a full run, copy the ms/iter numbers into EXPERIMENTS.md §Perf.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+ROOT="$(pwd)"
+
+OUT="$ROOT/BENCH_gp_hotpath.json"
+for arg in "$@"; do
+  # A smoke run must not overwrite the tracked full-grid trajectory file.
+  [ "$arg" = "--smoke" ] && OUT="$ROOT/BENCH_gp_hotpath.smoke.json"
+done
+
+cd rust
+cargo build --release
+cargo bench --bench gp_hotpath -- --out "$OUT" "$@"
+
+echo
+echo "perf records: $OUT (update EXPERIMENTS.md §Perf after full runs)"
