@@ -2,24 +2,29 @@
 //! the 2D Convolution kernel on the GTX Titan X, all seven strategies,
 //! repeated runs, MAE + mean-deviation summary.
 //!
-//!     cargo run --release --example compare_strategies [-- --repeats N]
+//! Runs through the sweep orchestrator: every (strategy, repeat) cell is
+//! an independent session interleaved on one shared worker pool, and the
+//! per-cell seeding matches `ktbo sweep`, so the numbers below line up
+//! with sweep records for the same seed.
+//!
+//!     cargo run --release --example compare_strategies [-- --repeat-scale F --threads N]
 
-use std::sync::Arc;
-
+use ktbo::gpusim::device::Device;
 use ktbo::harness::figures::objective_for;
 use ktbo::harness::metrics::mean_deviation_factor;
-use ktbo::harness::runner::run_strategy;
-use ktbo::gpusim::device::Device;
+use ktbo::harness::runner::{objective_id, run_comparison};
 use ktbo::objective::Objective;
 use ktbo::util::cli::Args;
 
 fn main() {
     let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
-    let repeats = args.usize_or("repeats", 7);
+    let repeat_scale = args.f64_or("repeat-scale", 0.2);
+    let threads = args.usize_or("threads", ktbo::util::pool::default_threads());
     let device = Device::gtx_titan_x();
     let obj = objective_for("convolution", &device);
+    let obj_id = objective_id("convolution", device.name);
     println!(
-        "Convolution on {}: {} configs, minimum {:.3} ms, {repeats} repeats each\n",
+        "Convolution on {}: {} configs, minimum {:.3} ms, repeat scale {repeat_scale}\n",
         device.name,
         obj.space().len(),
         obj.known_minimum().unwrap()
@@ -27,13 +32,20 @@ fn main() {
 
     let strategies =
         ["ei", "multi", "advanced_multi", "random", "simulated_annealing", "mls", "genetic_algorithm"];
+    let outcomes = run_comparison(&obj, &obj_id, &strategies, 220, repeat_scale, 99, threads);
+    println!("{:<22} {:>8} {:>10} {:>10} {:>12}", "strategy", "repeats", "MAE", "±std", "final best");
     let mut maes = Vec::new();
-    println!("{:<22} {:>10} {:>10} {:>12}", "strategy", "MAE", "±std", "final best");
-    for s in strategies {
-        let out = run_strategy(&Arc::clone(&obj), s, 220, repeats, 99, 0);
-        let final_best = out.mean_curve[out.mean_curve.len() - 1];
-        println!("{:<22} {:>10.4} {:>10.4} {:>12.4}", s, out.mae.mean, out.mae.std, final_best);
-        maes.push(out.mae.mean);
+    for o in &outcomes {
+        let final_best = o.mean_curve[o.mean_curve.len() - 1];
+        println!(
+            "{:<22} {:>8} {:>10.4} {:>10.4} {:>12.4}",
+            o.name,
+            o.maes.len(),
+            o.mae.mean,
+            o.mae.std,
+            final_best
+        );
+        maes.push(o.mae.mean);
     }
     let mdf = mean_deviation_factor(&[maes]);
     println!("\ndeviation factors (lower is better):");

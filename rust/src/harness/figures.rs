@@ -10,7 +10,9 @@ use crate::gpusim::device::Device;
 use crate::gpusim::kernels::kernel_by_name;
 use crate::gpusim::SimulatedSpace;
 use crate::harness::metrics::mean_deviation_factor;
-use crate::harness::runner::{run_comparison, run_strategy, repeats_for, StrategyOutcome, BUDGET};
+use crate::harness::runner::{
+    fallback_value, objective_id, repeats_for, run_comparison, run_strategy, StrategyOutcome, BUDGET,
+};
 use crate::objective::{Objective, TableObjective};
 use crate::strategies::registry::{by_name, framework_methods, kernel_tuner_methods, our_methods};
 use crate::util::csv::{fnum, CsvWriter};
@@ -74,7 +76,9 @@ pub fn fig_comparison(
     let mut mae_matrix: Vec<Vec<f64>> = Vec::new();
     for kernel in kernels {
         let obj = objective_for(kernel, dev);
-        let outcomes = run_comparison(&obj, strategies, BUDGET, opts.repeat_scale, opts.seed, opts.threads);
+        let obj_id = objective_id(kernel, dev.name);
+        let outcomes =
+            run_comparison(&obj, &obj_id, strategies, BUDGET, opts.repeat_scale, opts.seed, opts.threads);
         let min = obj.known_minimum().unwrap();
         write_curves_csv(
             &Path::new(&opts.out_dir).join(format!("{tag}_{kernel}_curves.csv")),
@@ -171,7 +175,7 @@ pub fn fig4(opts: &Options) -> String {
     let reps = repeats_for("ei", opts.repeat_scale);
 
     // Target: EI's mean best at 220.
-    let ei = run_strategy(&obj, "ei", BUDGET, reps, opts.seed, opts.threads);
+    let ei = run_strategy(&obj, &objective_id("gemm", dev.name), "ei", BUDGET, reps, opts.seed, opts.threads);
     let target = ei.mean_curve[BUDGET - 1];
 
     let mut report = format!("### fig4: evaluations to match EI@220 (target {target:.3} ms) on GEMM / {}\n", dev.name);
@@ -320,10 +324,7 @@ pub fn ablation(opts: &Options) -> String {
     for kernel in kernels {
         let obj = objective_for(kernel, &dev);
         let global = obj.known_minimum().unwrap();
-        let fallback = {
-            let vals: Vec<f64> = obj.table().iter().filter_map(|e| e.value()).collect();
-            crate::util::linalg::mean(&vals)
-        };
+        let fallback = fallback_value(&obj);
         let mut row = Vec::new();
         for (name, cfg) in &variants {
             let jobs: Vec<_> = (0..reps)
@@ -386,10 +387,7 @@ pub fn noise(opts: &Options) -> String {
 
     let base = objective_for(kernel, &dev);
     let global = base.known_minimum().unwrap();
-    let fallback = {
-        let vals: Vec<f64> = base.table().iter().filter_map(|e| e.value()).collect();
-        crate::util::linalg::mean(&vals)
-    };
+    let fallback = fallback_value(&base);
 
     let mut report = format!("### noise robustness: {kernel} on {} (MAE vs measurement noise σ)\n", dev.name);
     let mut w = CsvWriter::new(&["strategy", "sigma", "mae_mean", "mae_std"]);
@@ -472,7 +470,9 @@ pub fn headline(opts: &Options) -> String {
         let mut mae_matrix = Vec::new();
         for k in &kernels {
             let obj = objective_for(k, &dev);
-            let outcomes = run_comparison(&obj, &strategies, BUDGET, opts.repeat_scale, opts.seed, opts.threads);
+            let obj_id = objective_id(k, dev.name);
+            let outcomes =
+                run_comparison(&obj, &obj_id, &strategies, BUDGET, opts.repeat_scale, opts.seed, opts.threads);
             mae_matrix.push(outcomes.iter().map(|o| o.mae.mean).collect::<Vec<f64>>());
         }
         let mdf = mean_deviation_factor(&mae_matrix);

@@ -87,10 +87,7 @@ pub fn hypertune(opts: &Options, top: usize) -> String {
     for kernel in kernels {
         let obj = objective_for(kernel, &dev);
         let global = obj.known_minimum().unwrap();
-        let fallback = {
-            let vals: Vec<f64> = obj.table().iter().filter_map(|e| e.value()).collect();
-            mean(&vals)
-        };
+        let fallback = crate::harness::runner::fallback_value(&obj);
         let jobs: Vec<_> = cells
             .iter()
             .enumerate()

@@ -1,11 +1,16 @@
-//! Experiment harness: metrics (§IV-A), the threaded runner, and drivers
-//! regenerating every table and figure of the paper.
+//! Experiment harness: metrics (§IV-A), the threaded runner, the
+//! concurrent sweep orchestrator, and drivers regenerating every table
+//! and figure of the paper.
 
 pub mod figures;
 pub mod gp_bench;
 pub mod hypertune;
 pub mod metrics;
+pub mod orchestrator;
 pub mod runner;
 
 pub use figures::Options;
-pub use runner::{run_comparison, run_strategy, StrategyOutcome, BUDGET, REPEATS, REPEATS_RANDOM};
+pub use orchestrator::{sweep, SweepReport, SweepSpec};
+pub use runner::{
+    objective_id, run_comparison, run_strategy, StrategyOutcome, BUDGET, REPEATS, REPEATS_RANDOM,
+};

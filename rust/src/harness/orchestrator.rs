@@ -1,0 +1,853 @@
+//! Concurrent multi-session sweep orchestrator for the full evaluation
+//! matrix.
+//!
+//! The paper's headline comparison is a big matrix — every strategy,
+//! repeated tens of times, on every (kernel, GPU) objective. The seed
+//! harness executed that matrix strictly serially per strategy, idling
+//! most of the machine whenever one strategy's tail repeats were still
+//! running. This module treats each (kernel, device, strategy, repeat)
+//! cell as an independent *session* and schedules all sessions of a sweep
+//! onto one shared [`ShardPool`]: cells from different strategies and
+//! objectives interleave freely, so the pool stays saturated until the
+//! whole matrix drains.
+//!
+//! Three invariants make concurrency safe here:
+//!
+//! 1. **Seeding** — every cell's RNG comes from
+//!    [`runner::cell_rng`](crate::harness::runner::cell_rng), a pure
+//!    function of (base seed, objective id, strategy, repeat). Scheduling
+//!    order, worker count, and cache state cannot touch it, so a cell's
+//!    evaluation sequence is bit-identical to the serial reference path.
+//! 2. **Aggregation** — per-cell curves are folded through the same
+//!    [`runner::aggregate_outcome`] as the serial path, in a fixed
+//!    (objective, strategy, repeat) order regardless of completion order.
+//! 3. **Persistence** — each finished cell appends one JSONL record
+//!    (`SWEEP_<tag>.jsonl`) carrying its coordinates, seeds, and raw
+//!    best-found curve. Floats round-trip exactly (shortest-repr render,
+//!    `str::parse::<f64>` read back; `null` ⇔ `+∞`), so a resumed sweep
+//!    reuses completed cells without perturbing aggregate results.
+//!
+//! Sessions of one objective share a cross-session
+//! [`EvalCache`](crate::objective::evalcache::EvalCache) keyed by
+//! (objective id, config index) — table-backed objectives are evaluated
+//! once per sweep rather than once per session.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::gpusim::device::Device;
+use crate::gpusim::kernels::kernel_by_name;
+use crate::harness::figures::objective_for;
+use crate::harness::runner::{
+    aggregate_outcome, cell_rng, cell_stream, fallback_value, objective_id, repeats_for,
+    StrategyOutcome,
+};
+use crate::objective::evalcache::{CachedObjective, EvalCache};
+use crate::objective::{Objective, TableObjective};
+use crate::strategies::registry::by_name;
+use crate::util::json::Json;
+use crate::util::jsonparse;
+use crate::util::pool::{enter_harness_workers, ShardPool};
+
+/// Coordinates of one session in the evaluation matrix.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CellKey {
+    pub kernel: String,
+    /// Canonical device name (`Device::name`), not a CLI alias.
+    pub gpu: String,
+    pub strategy: String,
+    pub rep: usize,
+}
+
+/// What a sweep executes and where it records itself.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub kernels: Vec<String>,
+    /// Device names or aliases (resolved through [`Device::by_name`]).
+    pub gpus: Vec<String>,
+    pub strategies: Vec<String>,
+    pub budget: usize,
+    pub repeat_scale: f64,
+    pub seed: u64,
+    pub threads: usize,
+    pub out_dir: String,
+    /// Names the JSONL files: `SWEEP_<tag>.jsonl` (progress) and
+    /// `SWEEP_<tag>.results.jsonl` (aggregates).
+    pub tag: String,
+    /// Share one cross-session evaluation cache across all sessions.
+    pub cache: bool,
+    /// Discard an existing progress file instead of resuming from it.
+    pub fresh: bool,
+}
+
+impl SweepSpec {
+    pub fn progress_path(&self) -> PathBuf {
+        Path::new(&self.out_dir).join(format!("SWEEP_{}.jsonl", self.tag))
+    }
+
+    pub fn results_path(&self) -> PathBuf {
+        Path::new(&self.out_dir).join(format!("SWEEP_{}.results.jsonl", self.tag))
+    }
+
+    /// The CI tier: a seconds-scale matrix that still exercises multiple
+    /// cells, the BO engine, the cache, and the JSONL plumbing.
+    pub fn smoke(out_dir: &str) -> SweepSpec {
+        SweepSpec {
+            kernels: vec!["adding".into()],
+            gpus: vec!["a100".into()],
+            strategies: vec!["random".into(), "mls".into(), "ei".into()],
+            budget: 60,
+            repeat_scale: 0.02,
+            seed: 20210601,
+            threads: crate::util::pool::default_threads(),
+            out_dir: out_dir.into(),
+            tag: "smoke".into(),
+            cache: true,
+            fresh: false,
+        }
+    }
+}
+
+/// Everything a finished sweep reports back.
+pub struct SweepReport {
+    /// Aggregates per (kernel, canonical gpu), strategies in spec order —
+    /// the exact [`StrategyOutcome`]s the serial path would produce.
+    pub outcomes: Vec<((String, String), Vec<StrategyOutcome>)>,
+    pub total_cells: usize,
+    /// Cells skipped because the progress file already carried them.
+    pub resumed_cells: usize,
+    pub ran_cells: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub wall_s: f64,
+    /// Human-readable digest (printed by `ktbo sweep`).
+    pub summary: String,
+}
+
+/// One schedulable session: a cell plus the objective it evaluates.
+struct SessionJob {
+    key: CellKey,
+    obj_id: String,
+    eval_obj: Arc<dyn Objective>,
+}
+
+/// Append-only JSONL progress log, shared across pool workers.
+struct SweepLog {
+    file: Mutex<std::fs::File>,
+    /// First write/flush error, if any — workers can't propagate, so the
+    /// sweep checks this after the batch and refuses to report success
+    /// with a silently incomplete resume log.
+    error: Mutex<Option<String>>,
+}
+
+impl SweepLog {
+    /// `torn_tail` says the existing file ends mid-line (the caller has
+    /// already read it for resume): terminate that line so appended
+    /// records stay line-separated — the torn record itself is
+    /// unparseable either way and gets skipped on the next load.
+    fn open(path: &Path, spec: &SweepSpec, torn_tail: bool) -> Result<SweepLog, String> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| format!("create {}: {e}", parent.display()))?;
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        let log = SweepLog { file: Mutex::new(file), error: Mutex::new(None) };
+        if torn_tail {
+            let mut f = log.file.lock().unwrap();
+            if let Err(e) = f.write_all(b"\n").and_then(|()| f.flush()) {
+                // A failed repair would glue the next record onto the torn
+                // fragment, corrupting both — refuse to start.
+                return Err(format!("write {}: {e}", path.display()));
+            }
+        }
+        let empty = log.file.lock().unwrap().metadata().map(|m| m.len() == 0).unwrap_or(false);
+        if empty {
+            log.append(&meta_record(spec));
+        }
+        if let Some(e) = log.take_error() {
+            return Err(format!("write {}: {e}", path.display()));
+        }
+        Ok(log)
+    }
+
+    /// One record per line, flushed immediately so an interrupted sweep
+    /// loses at most the cell being written.
+    fn append(&self, record: &Json) {
+        let mut f = self.file.lock().unwrap();
+        let result = writeln!(f, "{}", record.render()).and_then(|()| f.flush());
+        if let Err(e) = result {
+            let mut slot = self.error.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e.to_string());
+            }
+        }
+    }
+
+    fn take_error(&self) -> Option<String> {
+        self.error.lock().unwrap().take()
+    }
+}
+
+fn hex_u64(x: u64) -> String {
+    format!("0x{x:016x}")
+}
+
+fn parse_hex_u64(s: &str) -> Option<u64> {
+    u64::from_str_radix(s.strip_prefix("0x")?, 16).ok()
+}
+
+fn meta_record(spec: &SweepSpec) -> Json {
+    Json::obj()
+        .set("type", "meta")
+        .set("tag", spec.tag.as_str())
+        .set("seed", hex_u64(spec.seed))
+        .set("budget", spec.budget)
+        .set("repeat_scale", spec.repeat_scale)
+}
+
+fn cell_record(key: &CellKey, obj_id: &str, base_seed: u64, budget: usize, curve: &[f64]) -> Json {
+    Json::obj()
+        .set("type", "cell")
+        .set("kernel", key.kernel.as_str())
+        .set("gpu", key.gpu.as_str())
+        .set("strategy", key.strategy.as_str())
+        .set("rep", key.rep)
+        .set("objective", obj_id)
+        .set("seed", hex_u64(base_seed))
+        .set("stream", hex_u64(cell_stream(obj_id, &key.strategy, key.rep)))
+        .set("budget", budget)
+        .set("curve", Json::Arr(curve.iter().map(|&v| Json::Num(v)).collect()))
+}
+
+/// Read completed cells back from a progress file's text (`path` is for
+/// error messages only — the caller reads the file once). Torn lines from
+/// an interrupted writer are skipped (a truncated JSON record cannot
+/// parse as a complete one); every intact record is kept. Errors if the
+/// file's meta line is incompatible with `spec` — resuming under
+/// different seeds/budgets would silently mix incomparable curves.
+fn load_progress(text: &str, path: &Path, spec: &SweepSpec) -> Result<HashMap<CellKey, Vec<f64>>, String> {
+    let mut completed = HashMap::new();
+    let mut meta_seen = false;
+    let mut saw_content = false;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        saw_content = true;
+        let Ok(record) = jsonparse::parse(line) else {
+            continue; // torn record from an interrupted run
+        };
+        match record.get("type").and_then(Json::as_str) {
+            Some("meta") => {
+                let seed = record.get("seed").and_then(Json::as_str).and_then(parse_hex_u64);
+                let budget = record.get("budget").and_then(Json::as_f64);
+                let scale = record.get("repeat_scale").and_then(Json::as_f64);
+                if seed != Some(spec.seed)
+                    || budget != Some(spec.budget as f64)
+                    || scale != Some(spec.repeat_scale)
+                {
+                    return Err(format!(
+                        "{} was written by an incompatible sweep (seed/budget/repeat-scale differ); \
+                         pass --fresh to discard it",
+                        path.display()
+                    ));
+                }
+                meta_seen = true;
+            }
+            Some("cell") => {
+                let (Some(kernel), Some(gpu), Some(strategy), Some(rep)) = (
+                    record.get("kernel").and_then(Json::as_str),
+                    record.get("gpu").and_then(Json::as_str),
+                    record.get("strategy").and_then(Json::as_str),
+                    record.get("rep").and_then(Json::as_f64),
+                ) else {
+                    continue;
+                };
+                let Some(curve_json) = record.get("curve").and_then(Json::as_arr) else {
+                    continue;
+                };
+                let mut curve = Vec::with_capacity(curve_json.len());
+                let mut ok = true;
+                for v in curve_json {
+                    match v {
+                        Json::Num(x) => curve.push(*x),
+                        // +∞ (pre-first-valid-observation prefix) has no
+                        // JSON number form; the writer emits null.
+                        Json::Null => curve.push(f64::INFINITY),
+                        _ => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if !ok {
+                    continue;
+                }
+                completed.insert(
+                    CellKey {
+                        kernel: kernel.to_string(),
+                        gpu: gpu.to_string(),
+                        strategy: strategy.to_string(),
+                        rep: rep as usize,
+                    },
+                    curve,
+                );
+            }
+            _ => {}
+        }
+    }
+    // A non-empty file with no intact meta record has lost the seed/
+    // budget guard (e.g. killed while writing the very first line) —
+    // resuming its cells could silently mix incomparable sweeps.
+    if saw_content && !meta_seen {
+        return Err(format!(
+            "{} has no intact meta record, so its cells cannot be validated for \
+             compatibility; pass --fresh to discard it",
+            path.display()
+        ));
+    }
+    Ok(completed)
+}
+
+/// Execute sessions on the shared pool. Cells present in `completed` are
+/// skipped (their stored curves are reused verbatim); every freshly run
+/// cell appends a progress record. Returns curves in `jobs` order — the
+/// deterministic aggregation order — regardless of which worker finished
+/// which cell when.
+fn run_sessions(
+    jobs: &[SessionJob],
+    budget: usize,
+    base_seed: u64,
+    pool: &ShardPool,
+    completed: &HashMap<CellKey, Vec<f64>>,
+    log: Option<&SweepLog>,
+) -> Vec<Vec<f64>> {
+    // Nested consumers (the BO engine's auto thread mode) divide the
+    // machine by the session workers running above them.
+    let _scope = enter_harness_workers(pool.threads());
+    let mut slots: Vec<Option<Vec<f64>>> =
+        jobs.iter().map(|j| completed.get(&j.key).cloned()).collect();
+    let batch: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+        .iter_mut()
+        .zip(jobs)
+        .filter(|(slot, _)| slot.is_none())
+        .map(|(slot, job)| {
+            Box::new(move || {
+                let s = by_name(&job.key.strategy)
+                    .unwrap_or_else(|| panic!("unknown strategy {}", job.key.strategy));
+                let mut rng = cell_rng(base_seed, &job.obj_id, &job.key.strategy, job.key.rep);
+                let trace = s.run(job.eval_obj.as_ref(), budget, &mut rng);
+                let curve = trace.best_curve();
+                if let Some(log) = log {
+                    log.append(&cell_record(&job.key, &job.obj_id, base_seed, budget, &curve));
+                }
+                *slot = Some(curve);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(batch);
+    slots.into_iter().map(|s| s.expect("session produced no curve")).collect()
+}
+
+/// One schedulable objective: the cell-key coordinates plus what sessions
+/// actually evaluate (the table itself, or its cache-wrapped view).
+struct ObjEntry {
+    kernel: String,
+    gpu: String,
+    obj_id: String,
+    eval: Arc<dyn Objective>,
+}
+
+/// Build the repeat-major session list for `objectives × strategies`:
+/// repeat 0 of every cell first, then repeat 1, … — expensive strategies'
+/// cells spread across the whole batch instead of clustering at the tail.
+/// Returns the jobs plus each job's (objective, strategy) indices, in the
+/// deterministic order aggregation regroups by.
+fn build_session_jobs(
+    objectives: &[ObjEntry],
+    strategies: &[&str],
+    repeat_scale: f64,
+) -> (Vec<SessionJob>, Vec<(usize, usize)>) {
+    let reps: Vec<usize> = strategies.iter().map(|s| repeats_for(s, repeat_scale)).collect();
+    let max_reps = reps.iter().copied().max().unwrap_or(0);
+    let mut jobs = Vec::new();
+    let mut coords = Vec::new();
+    for rep in 0..max_reps {
+        for (oi, entry) in objectives.iter().enumerate() {
+            for (si, strategy) in strategies.iter().enumerate() {
+                if rep < reps[si] {
+                    jobs.push(SessionJob {
+                        key: CellKey {
+                            kernel: entry.kernel.clone(),
+                            gpu: entry.gpu.clone(),
+                            strategy: strategy.to_string(),
+                            rep,
+                        },
+                        obj_id: entry.obj_id.clone(),
+                        eval_obj: Arc::clone(&entry.eval),
+                    });
+                    coords.push((oi, si));
+                }
+            }
+        }
+    }
+    (jobs, coords)
+}
+
+/// Orchestrated replacement for the serial strategy-by-strategy
+/// comparison: all (strategy, repeat) cells of one objective interleave on
+/// the shared pool. Backs [`runner::run_comparison`](crate::harness::runner::run_comparison).
+pub fn orchestrate_comparison(
+    obj: &Arc<TableObjective>,
+    obj_id: &str,
+    strategies: &[&str],
+    budget: usize,
+    repeat_scale: f64,
+    base_seed: u64,
+    pool: &ShardPool,
+) -> Vec<StrategyOutcome> {
+    // A bare comparison has no (kernel, gpu) axis; its cell keys reuse the
+    // objective id as the kernel coordinate (nothing resumes through them
+    // — progress logging is sweep-only).
+    let entries = [ObjEntry {
+        kernel: obj_id.to_string(),
+        gpu: String::new(),
+        obj_id: obj_id.to_string(),
+        eval: Arc::clone(obj) as Arc<dyn Objective>,
+    }];
+    let (jobs, coords) = build_session_jobs(&entries, strategies, repeat_scale);
+    let curves = run_sessions(&jobs, budget, base_seed, pool, &HashMap::new(), None);
+
+    let global_min = obj.known_minimum().expect("table objective knows its minimum");
+    let fallback = fallback_value(obj);
+    let mut grouped: Vec<Vec<Vec<f64>>> = strategies.iter().map(|_| Vec::new()).collect();
+    for ((_oi, si), curve) in coords.into_iter().zip(curves) {
+        grouped[si].push(curve); // job order is rep-ascending per strategy
+    }
+    strategies
+        .iter()
+        .zip(&grouped)
+        .map(|(s, curves)| aggregate_outcome(s, curves, budget, global_min, fallback))
+        .collect()
+}
+
+/// Run the full (kernels × gpus × strategies × repeats) matrix: build the
+/// objectives, schedule every cell on one shared pool, persist/resume
+/// through `SWEEP_<tag>.jsonl`, and aggregate per (kernel, gpu) exactly as
+/// the serial path would.
+pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
+    // Validate the whole matrix before doing any work. Kernel and GPU
+    // names are canonicalized through their registries and the axes
+    // deduplicated: seeds, cell keys, and JSONL records must not depend
+    // on which alias the CLI used, and a repeated entry must not run (or
+    // be reported) twice.
+    let mut kernels: Vec<&'static str> = Vec::new();
+    for k in &spec.kernels {
+        let canon = kernel_by_name(k).map(|m| m.name()).ok_or_else(|| format!("unknown kernel '{k}'"))?;
+        if !kernels.contains(&canon) {
+            kernels.push(canon); // aliases dedup to one cell set
+        }
+    }
+    let mut devices: Vec<Device> = Vec::new();
+    for g in &spec.gpus {
+        let dev = Device::by_name(g).ok_or_else(|| format!("unknown GPU '{g}'"))?;
+        if !devices.iter().any(|d| d.name == dev.name) {
+            devices.push(dev);
+        }
+    }
+    let mut strategies: Vec<String> = Vec::new();
+    for s in &spec.strategies {
+        // Strategy::name() maps alias spellings (sa, ga, skopt, de) to
+        // the canonical registry name, like the kernel/GPU axes above.
+        let canon = by_name(s).ok_or_else(|| format!("unknown strategy '{s}'"))?.name();
+        if !strategies.contains(&canon) {
+            strategies.push(canon);
+        }
+    }
+    if kernels.is_empty() || devices.is_empty() || strategies.is_empty() {
+        return Err("empty sweep matrix (no kernels, gpus, or strategies)".into());
+    }
+    std::fs::create_dir_all(&spec.out_dir).map_err(|e| format!("create {}: {e}", spec.out_dir))?;
+
+    let t0 = Instant::now();
+
+    // One objective per (kernel, gpu); sessions share it through an Arc,
+    // optionally behind the cross-session eval cache. `tables` keeps the
+    // unwrapped objectives for aggregation metadata (minimum, fallback).
+    let cache = Arc::new(EvalCache::new());
+    let mut objectives: Vec<ObjEntry> = Vec::new();
+    let mut tables: Vec<Arc<TableObjective>> = Vec::new();
+    for dev in &devices {
+        for kernel in &kernels {
+            let table = objective_for(kernel, dev);
+            let obj_id = objective_id(kernel, dev.name);
+            let eval: Arc<dyn Objective> = if spec.cache {
+                Arc::new(CachedObjective::new(
+                    Arc::clone(&table) as Arc<dyn Objective>,
+                    Arc::clone(&cache),
+                    &obj_id,
+                ))
+            } else {
+                Arc::clone(&table) as Arc<dyn Objective>
+            };
+            objectives.push(ObjEntry {
+                kernel: kernel.to_string(),
+                gpu: dev.name.to_string(),
+                obj_id,
+                eval,
+            });
+            tables.push(table);
+        }
+    }
+
+    // Flatten the matrix, repeat-major, so the pool interleaves cells of
+    // every objective and strategy from the start.
+    let strategy_refs: Vec<&str> = strategies.iter().map(String::as_str).collect();
+    let (jobs, coords) = build_session_jobs(&objectives, &strategy_refs, spec.repeat_scale);
+
+    // Resume: reuse completed cells from an existing progress file (read
+    // once; its trailing-newline state feeds the log's torn-tail repair).
+    let progress_path = spec.progress_path();
+    if spec.fresh && progress_path.exists() {
+        std::fs::remove_file(&progress_path)
+            .map_err(|e| format!("remove {}: {e}", progress_path.display()))?;
+    }
+    let (completed, torn_tail) = if progress_path.exists() {
+        let text = std::fs::read_to_string(&progress_path)
+            .map_err(|e| format!("read {}: {e}", progress_path.display()))?;
+        let torn = !text.is_empty() && !text.ends_with('\n');
+        (load_progress(&text, &progress_path, spec)?, torn)
+    } else {
+        (HashMap::new(), false)
+    };
+    let log = SweepLog::open(&progress_path, spec, torn_tail)?;
+
+    let resumed_cells = jobs.iter().filter(|j| completed.contains_key(&j.key)).count();
+    let total_cells = jobs.len();
+
+    let pool = ShardPool::new(spec.threads);
+    let curves = run_sessions(&jobs, spec.budget, spec.seed, &pool, &completed, Some(&log));
+    if let Some(e) = log.take_error() {
+        // The cells ran, but the resume log lost records (disk full,
+        // unwritable dir): reporting success would let a later resume
+        // silently re-run or mix cells. Intact records remain usable.
+        return Err(format!(
+            "progress log {} lost records mid-sweep ({e}); rerun to resume from the intact prefix",
+            progress_path.display()
+        ));
+    }
+
+    // Aggregate in fixed (objective, strategy, repeat) order.
+    let mut grouped: Vec<Vec<Vec<Vec<f64>>>> = objectives
+        .iter()
+        .map(|_| strategies.iter().map(|_| Vec::new()).collect())
+        .collect();
+    for ((oi, si), curve) in coords.into_iter().zip(curves) {
+        grouped[oi][si].push(curve);
+    }
+    let outcomes: Vec<((String, String), Vec<StrategyOutcome>)> = objectives
+        .iter()
+        .enumerate()
+        .map(|(oi, entry)| {
+            let global_min = tables[oi].known_minimum().expect("table objective knows its minimum");
+            let fallback = fallback_value(&tables[oi]);
+            let per_strategy: Vec<StrategyOutcome> = strategies
+                .iter()
+                .enumerate()
+                .map(|(si, s)| {
+                    aggregate_outcome(s, &grouped[oi][si], spec.budget, global_min, fallback)
+                })
+                .collect();
+            ((entry.kernel.clone(), entry.gpu.clone()), per_strategy)
+        })
+        .collect();
+
+    let (cache_hits, cache_misses) = cache.stats();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Machine-readable aggregates (rewritten whole each run).
+    let results_path = spec.results_path();
+    let mut results = meta_record(spec).render();
+    results.push('\n');
+    for ((kernel, gpu), outs) in &outcomes {
+        for o in outs {
+            let record = Json::obj()
+                .set("type", "outcome")
+                .set("kernel", kernel.as_str())
+                .set("gpu", gpu.as_str())
+                .set("strategy", o.name.as_str())
+                .set("repeats", o.maes.len())
+                .set("mae_mean", o.mae.mean)
+                .set("mae_std", o.mae.std)
+                .set(
+                    "final_best_mean",
+                    crate::util::linalg::mean(&o.finals),
+                )
+                .set("mean_curve", Json::Arr(o.mean_curve.iter().map(|&v| Json::Num(v)).collect()));
+            results.push_str(&record.render());
+            results.push('\n');
+        }
+    }
+    std::fs::write(&results_path, &results)
+        .map_err(|e| format!("write {}: {e}", results_path.display()))?;
+
+    // Human-readable digest.
+    let mut summary = format!(
+        "### sweep '{}': {} kernel(s) × {} GPU(s) × {} strategie(s), budget {}, repeat-scale {}\n",
+        spec.tag,
+        kernels.len(),
+        devices.len(),
+        strategies.len(),
+        spec.budget,
+        spec.repeat_scale
+    );
+    let _ = writeln!(
+        summary,
+        "cells: {total_cells} total, {resumed_cells} resumed, {} ran | threads {} | wall {wall_s:.2}s",
+        total_cells - resumed_cells,
+        spec.threads
+    );
+    let _ = writeln!(
+        summary,
+        "eval cache: {}",
+        if spec.cache {
+            format!("{cache_hits} hits / {cache_misses} misses")
+        } else {
+            "disabled".to_string()
+        }
+    );
+    for ((kernel, gpu), outs) in &outcomes {
+        let _ = writeln!(summary, "{kernel} @ {gpu}:");
+        for o in outs {
+            let _ = writeln!(
+                summary,
+                "  {:<22} reps {:>3}  MAE {:.4} ±{:.4}  final {:.4}",
+                o.name,
+                o.maes.len(),
+                o.mae.mean,
+                o.mae.std,
+                crate::util::linalg::mean(&o.finals)
+            );
+        }
+    }
+    let _ = writeln!(summary, "progress: {}", progress_path.display());
+    let _ = writeln!(summary, "results:  {}", results_path.display());
+
+    Ok(SweepReport {
+        outcomes,
+        total_cells,
+        resumed_cells,
+        ran_cells: total_cells - resumed_cells,
+        cache_hits,
+        cache_misses,
+        wall_s,
+        summary,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::runner::run_strategy;
+
+    fn temp_out(dir: &str) -> String {
+        std::env::temp_dir().join(dir).to_string_lossy().into_owned()
+    }
+
+    /// 2 strategies × 3 repeats on the cheapest (kernel, GPU) pair.
+    fn small_spec(dir: &str, tag: &str) -> SweepSpec {
+        SweepSpec {
+            kernels: vec!["adding".into()],
+            gpus: vec!["a100".into()],
+            strategies: vec!["random".into(), "mls".into()],
+            budget: 40,
+            repeat_scale: 0.03,
+            seed: 11,
+            threads: 2,
+            out_dir: temp_out(dir),
+            tag: tag.into(),
+            cache: true,
+            fresh: true,
+        }
+    }
+
+    #[test]
+    fn sweep_matches_serial_reference_across_worker_counts() {
+        // The acceptance invariant: orchestrated curves are bit-identical
+        // to the serial reference path at every thread count, with the
+        // cache on or off.
+        let dev = Device::a100();
+        let obj = objective_for("adding", &dev);
+        let oid = objective_id("adding", dev.name);
+        let serial: Vec<StrategyOutcome> = ["random", "mls"]
+            .iter()
+            .map(|s| run_strategy(&obj, &oid, s, 40, 3, 11, 1))
+            .collect();
+
+        for (threads, cache) in [(1, true), (2, true), (8, true), (2, false)] {
+            let mut spec = small_spec("ktbo-orch-eq", &format!("eq-{threads}-{cache}"));
+            spec.threads = threads;
+            spec.cache = cache;
+            let report = sweep(&spec).unwrap();
+            assert_eq!(report.total_cells, 6);
+            assert_eq!(report.ran_cells, 6);
+            let outs = &report.outcomes[0].1;
+            for (o, s) in outs.iter().zip(&serial) {
+                assert_eq!(o.name, s.name);
+                assert_eq!(
+                    o.mean_curve, s.mean_curve,
+                    "threads={threads} cache={cache}: curves must be bit-identical"
+                );
+                assert_eq!(o.maes, s.maes, "threads={threads} cache={cache}");
+                assert_eq!(o.finals, s.finals, "threads={threads} cache={cache}");
+            }
+        }
+    }
+
+    #[test]
+    fn orchestrated_comparison_equals_per_strategy_runs() {
+        let dev = Device::a100();
+        let obj = objective_for("adding", &dev);
+        let oid = objective_id("adding", dev.name);
+        let pool = ShardPool::new(4);
+        let outs = orchestrate_comparison(&obj, &oid, &["random", "mls"], 40, 0.03, 5, &pool);
+        for o in &outs {
+            let reference = run_strategy(&obj, &oid, &o.name, 40, o.maes.len(), 5, 1);
+            assert_eq!(o.mean_curve, reference.mean_curve, "{}", o.name);
+            assert_eq!(o.maes, reference.maes, "{}", o.name);
+        }
+    }
+
+    #[test]
+    fn resume_skips_exactly_the_completed_cells() {
+        let spec = small_spec("ktbo-orch-resume", "resume");
+        let first = sweep(&spec).unwrap();
+        assert_eq!((first.total_cells, first.resumed_cells, first.ran_cells), (6, 0, 6));
+
+        // Keep the meta line and the first two completed cells, then add a
+        // torn partial record as an interrupted writer would leave behind.
+        let path = spec.progress_path();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 7, "meta + 6 cells");
+        let mut kept = lines[..3].join("\n");
+        kept.push_str("\n{\"type\":\"cel");
+        std::fs::write(&path, kept).unwrap();
+
+        let mut resumed_spec = spec.clone();
+        resumed_spec.fresh = false;
+        let second = sweep(&resumed_spec).unwrap();
+        assert_eq!(second.resumed_cells, 2, "exactly the two intact records resume");
+        assert_eq!(second.ran_cells, 4);
+        for (a, b) in first.outcomes[0].1.iter().zip(&second.outcomes[0].1) {
+            assert_eq!(a.mean_curve, b.mean_curve, "resume must not change aggregates");
+            assert_eq!(a.maes, b.maes);
+        }
+        // A third run resumes everything.
+        let third = sweep(&resumed_spec).unwrap();
+        assert_eq!((third.resumed_cells, third.ran_cells), (6, 0));
+        assert_eq!(third.outcomes[0].1[0].mean_curve, first.outcomes[0].1[0].mean_curve);
+    }
+
+    #[test]
+    fn incompatible_progress_file_is_rejected() {
+        let spec = small_spec("ktbo-orch-meta", "meta");
+        sweep(&spec).unwrap();
+        let mut other = spec.clone();
+        other.fresh = false;
+        other.seed = 12;
+        let err = sweep(&other).unwrap_err();
+        assert!(err.contains("--fresh"), "unexpected error: {err}");
+        // --fresh discards and reruns.
+        other.fresh = true;
+        assert_eq!(sweep(&other).unwrap().ran_cells, 6);
+
+        // A file whose meta record was torn away entirely cannot be
+        // validated — resuming it must be refused, not silently accepted.
+        std::fs::write(spec.progress_path(), "{\"type\":\"cel").unwrap();
+        let mut no_meta = spec.clone();
+        no_meta.fresh = false;
+        let err = sweep(&no_meta).unwrap_err();
+        assert!(err.contains("meta"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn kernel_aliases_canonicalize_in_keys_and_seeds() {
+        // `conv` and `convolution` must be the same cell: same canonical
+        // key in records, same seeds, bit-identical curves.
+        let mut spec = small_spec("ktbo-orch-alias", "alias");
+        spec.kernels = vec!["conv".into()];
+        spec.strategies = vec!["random".into()];
+        spec.budget = 20;
+        let report = sweep(&spec).unwrap();
+        let (kernel, _gpu) = &report.outcomes[0].0;
+        assert_eq!(kernel, "convolution");
+
+        let mut canon = spec.clone();
+        canon.kernels = vec!["convolution".into()];
+        canon.tag = "alias-canon".into();
+        let canon_report = sweep(&canon).unwrap();
+        assert_eq!(
+            report.outcomes[0].1[0].mean_curve, canon_report.outcomes[0].1[0].mean_curve,
+            "alias spelling must not change cell seeds"
+        );
+
+        // Alias + canonical spellings collapse to one cell set on every
+        // axis instead of running and reporting twice; strategy aliases
+        // canonicalize through Strategy::name().
+        let mut dup = spec.clone();
+        dup.kernels = vec!["conv".into(), "convolution".into()];
+        dup.strategies = vec!["sa".into(), "simulated_annealing".into()];
+        dup.tag = "alias-dup".into();
+        let dup_report = sweep(&dup).unwrap();
+        assert_eq!(dup_report.outcomes.len(), 1, "duplicate kernels must not double-report");
+        assert_eq!(dup_report.outcomes[0].1.len(), 1, "duplicate strategies must not double-run");
+        assert_eq!(dup_report.outcomes[0].1[0].name, "simulated_annealing");
+        assert_eq!(dup_report.total_cells, report.total_cells);
+    }
+
+    #[test]
+    fn unknown_matrix_entries_error_before_running() {
+        let mut spec = small_spec("ktbo-orch-bad", "bad");
+        spec.strategies = vec!["warp_drive".into()];
+        assert!(sweep(&spec).unwrap_err().contains("warp_drive"));
+        let mut spec = small_spec("ktbo-orch-bad", "bad2");
+        spec.gpus = vec!["h100".into()];
+        assert!(sweep(&spec).unwrap_err().contains("h100"));
+    }
+
+    #[test]
+    fn infinity_round_trips_through_progress_records() {
+        let key = CellKey {
+            kernel: "k".into(),
+            gpu: "g".into(),
+            strategy: "s".into(),
+            rep: 0,
+        };
+        let curve = vec![f64::INFINITY, f64::INFINITY, 3.25, 1.0 / 3.0];
+        let line = cell_record(&key, "k@g", 7, 4, &curve).render();
+        let parsed = jsonparse::parse(&line).unwrap();
+        let back: Vec<f64> = parsed
+            .get("curve")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|v| match v {
+                Json::Null => f64::INFINITY,
+                other => other.as_f64().unwrap(),
+            })
+            .collect();
+        assert_eq!(back.len(), 4);
+        assert!(back[0].is_infinite() && back[1].is_infinite());
+        assert_eq!(back[2].to_bits(), curve[2].to_bits());
+        assert_eq!(back[3].to_bits(), curve[3].to_bits(), "shortest-repr floats round-trip exactly");
+    }
+}

@@ -1,7 +1,14 @@
 //! Experiment runner: executes (strategy × repeat) jobs across threads
-//! with deterministic per-job seeding and aggregates best-found curves and
+//! with deterministic per-cell seeding and aggregates best-found curves and
 //! MAE statistics (§IV-A protocol: 220 evaluations, 35 repeats, 100 for
 //! random search).
+//!
+//! Seeding contract (shared with `harness::orchestrator`): every
+//! (objective, strategy, repeat) cell owns one RNG stream derived by
+//! [`cell_rng`] from the experiment's base seed. The serial reference path
+//! ([`run_strategy`]) and the concurrent sweep orchestrator draw from the
+//! *same* streams, so a cell's evaluation sequence is bit-identical no
+//! matter which path — or how many workers — executes it.
 
 use std::sync::Arc;
 
@@ -9,7 +16,7 @@ use crate::harness::metrics::{mae_stats, run_mae, MaeStats};
 use crate::objective::{Objective, TableObjective};
 use crate::strategies::registry::by_name;
 use crate::util::pool::run_parallel;
-use crate::util::rng::Rng;
+use crate::util::rng::{fnv1a, Rng};
 
 /// §IV-A defaults.
 pub const BUDGET: usize = 220;
@@ -20,6 +27,37 @@ pub const REPEATS_RANDOM: usize = 100;
 pub fn repeats_for(strategy: &str, scale: f64) -> usize {
     let base = if strategy == "random" { REPEATS_RANDOM } else { REPEATS };
     ((base as f64 * scale).round() as usize).max(3)
+}
+
+/// Canonical objective id for a (kernel, device) pair — the string every
+/// seeding and caching layer keys on. Figures, the sweep orchestrator, and
+/// the CLI must all build ids through this function or cells would seed
+/// differently between the serial and orchestrated paths.
+pub fn objective_id(kernel: &str, device: &str) -> String {
+    format!("{kernel}@{device}")
+}
+
+/// Deterministic RNG stream id for one (objective, strategy, repeat) cell.
+/// Depends on all three coordinates: two cells sharing a strategy but not
+/// an objective (or vice versa) get independent streams.
+pub fn cell_stream(objective_id: &str, strategy: &str, rep: usize) -> u64 {
+    fnv1a(objective_id).rotate_left(23)
+        ^ fnv1a(strategy)
+        ^ (rep as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+/// The RNG a session uses for its whole tuning run: base seed selects the
+/// experiment, the cell stream selects the orbit.
+pub fn cell_rng(base_seed: u64, objective_id: &str, strategy: &str, rep: usize) -> Rng {
+    let mut seeder = Rng::with_stream(base_seed, cell_stream(objective_id, strategy, rep));
+    seeder.split(rep as u64 + 1)
+}
+
+/// Mean valid value of a table objective — the uninformative fallback used
+/// for curve points before the first valid observation.
+pub fn fallback_value(obj: &TableObjective) -> f64 {
+    let vals: Vec<f64> = obj.table().iter().filter_map(|e| e.value()).collect();
+    crate::util::linalg::mean(&vals)
 }
 
 /// Aggregated outcome of one strategy on one objective.
@@ -36,40 +74,19 @@ pub struct StrategyOutcome {
     pub finals: Vec<f64>,
 }
 
-/// Run one strategy `repeats` times on a shared objective.
-pub fn run_strategy(
-    obj: &Arc<TableObjective>,
-    strategy: &str,
+/// Fold per-repeat best-found curves into a [`StrategyOutcome`]: mean
+/// curve (finite-ified), per-repeat MAE, finals. The single aggregation
+/// used by both the serial runner and the sweep orchestrator — keeping it
+/// in one place is what makes their outcomes comparable bit-for-bit.
+pub fn aggregate_outcome(
+    name: &str,
+    curves: &[Vec<f64>],
     budget: usize,
-    repeats: usize,
-    base_seed: u64,
-    threads: usize,
+    global_min: f64,
+    fallback: f64,
 ) -> StrategyOutcome {
-    let global_min = obj.known_minimum().expect("table objective knows its minimum");
-    let fallback = {
-        let vals: Vec<f64> = obj.table().iter().filter_map(|e| e.value()).collect();
-        crate::util::linalg::mean(&vals)
-    };
-
-    let jobs: Vec<_> = (0..repeats)
-        .map(|rep| {
-            let obj = Arc::clone(obj);
-            let name = strategy.to_string();
-            move || {
-                let s = by_name(&name).unwrap_or_else(|| panic!("unknown strategy {name}"));
-                // Deterministic independent stream per (strategy, repeat).
-                let mut seeder = Rng::with_stream(base_seed, fxhash(&name));
-                let mut rng = seeder.split(rep as u64 + 1);
-                let trace = s.run(obj.as_ref(), budget, &mut rng);
-                trace.best_curve()
-            }
-        })
-        .collect();
-    let curves = run_parallel(jobs, threads);
-
-    // Aggregate: mean curve (finite-ified), per-repeat MAE, finals.
     let mut mean_curve = vec![0.0; budget];
-    for c in &curves {
+    for c in curves {
         for i in 0..budget {
             let v = if c.is_empty() {
                 fallback
@@ -92,31 +109,69 @@ pub fn run_strategy(
         .iter()
         .map(|c| c.last().copied().filter(|v| v.is_finite()).unwrap_or(fallback))
         .collect();
-    StrategyOutcome { name: strategy.to_string(), mean_curve, mae: mae_stats(&maes), maes, finals }
+    StrategyOutcome { name: name.to_string(), mean_curve, mae: mae_stats(&maes), maes, finals }
+}
+
+/// Run one strategy `repeats` times on a shared objective — the serial
+/// reference path (per-repeat jobs on a fresh `run_parallel` pool).
+/// `obj_id` feeds the per-cell seeding; use [`objective_id`] for
+/// (kernel, device) objectives so results line up with sweep records.
+pub fn run_strategy(
+    obj: &Arc<TableObjective>,
+    obj_id: &str,
+    strategy: &str,
+    budget: usize,
+    repeats: usize,
+    base_seed: u64,
+    threads: usize,
+) -> StrategyOutcome {
+    let global_min = obj.known_minimum().expect("table objective knows its minimum");
+    let fallback = fallback_value(obj);
+
+    let jobs: Vec<_> = (0..repeats)
+        .map(|rep| {
+            let obj = Arc::clone(obj);
+            let name = strategy.to_string();
+            let oid = obj_id.to_string();
+            move || {
+                let s = by_name(&name).unwrap_or_else(|| panic!("unknown strategy {name}"));
+                // Deterministic independent stream per (objective, strategy, repeat).
+                let mut rng = cell_rng(base_seed, &oid, &name, rep);
+                let trace = s.run(obj.as_ref(), budget, &mut rng);
+                trace.best_curve()
+            }
+        })
+        .collect();
+    let curves = run_parallel(jobs, threads);
+    aggregate_outcome(strategy, &curves, budget, global_min, fallback)
 }
 
 /// Run a whole comparison (several strategies on one objective).
+///
+/// Since the sweep-orchestrator refactor this interleaves all
+/// (strategy, repeat) cells on one shared [`ShardPool`](crate::util::pool::ShardPool)
+/// instead of finishing each strategy before starting the next — the tail
+/// repeats of a slow strategy no longer serialize the whole comparison.
+/// Results are bit-identical to running [`run_strategy`] per strategy.
 pub fn run_comparison(
     obj: &Arc<TableObjective>,
+    obj_id: &str,
     strategies: &[&str],
     budget: usize,
     repeat_scale: f64,
     base_seed: u64,
     threads: usize,
 ) -> Vec<StrategyOutcome> {
-    strategies
-        .iter()
-        .map(|s| run_strategy(obj, s, budget, repeats_for(s, repeat_scale), base_seed, threads))
-        .collect()
-}
-
-fn fxhash(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in s.bytes() {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x1000_0000_01b3);
-    }
-    h
+    let pool = crate::util::pool::ShardPool::new(threads);
+    crate::harness::orchestrator::orchestrate_comparison(
+        obj,
+        obj_id,
+        strategies,
+        budget,
+        repeat_scale,
+        base_seed,
+        &pool,
+    )
 }
 
 #[cfg(test)]
@@ -144,8 +199,8 @@ mod tests {
         // parallelism.
         let obj = toy_obj();
         for strategy in ["random", "ei"] {
-            let a = run_strategy(&obj, strategy, 60, 5, 99, 1);
-            let b = run_strategy(&obj, strategy, 60, 5, 99, 4);
+            let a = run_strategy(&obj, "toy", strategy, 60, 5, 99, 1);
+            let b = run_strategy(&obj, "toy", strategy, 60, 5, 99, 4);
             assert_eq!(a.mean_curve, b.mean_curve, "{strategy}: parallelism must not change results");
             assert_eq!(a.maes, b.maes, "{strategy}: parallelism must not change MAEs");
         }
@@ -154,7 +209,7 @@ mod tests {
     #[test]
     fn outcomes_have_expected_shapes() {
         let obj = toy_obj();
-        let out = run_comparison(&obj, &["random", "mls"], 60, 0.1, 1, 2);
+        let out = run_comparison(&obj, "toy", &["random", "mls"], 60, 0.1, 1, 2);
         assert_eq!(out.len(), 2);
         for o in &out {
             assert_eq!(o.mean_curve.len(), 60);
@@ -173,5 +228,41 @@ mod tests {
         assert_eq!(repeats_for("ei", 1.0), 35);
         assert_eq!(repeats_for("ei", 0.1), 4);
         assert_eq!(repeats_for("ei", 0.01), 3); // floor
+    }
+
+    #[test]
+    fn cell_streams_depend_on_every_coordinate() {
+        let base = cell_stream("gemm@GTX Titan X", "ei", 0);
+        assert_ne!(cell_stream("gemm@A100", "ei", 0), base, "objective must matter");
+        assert_ne!(cell_stream("gemm@GTX Titan X", "random", 0), base, "strategy must matter");
+        assert_ne!(cell_stream("gemm@GTX Titan X", "ei", 1), base, "repeat must matter");
+        assert_eq!(cell_stream("gemm@GTX Titan X", "ei", 0), base, "but streams are stable");
+    }
+
+    #[test]
+    fn seeding_separates_objectives() {
+        // The pre-orchestrator seeding hashed only the strategy name, so
+        // two different objectives replayed identical evaluation index
+        // sequences. Cell seeding must break that correlation.
+        let mut a = cell_rng(7, "gemm@GTX Titan X", "random", 0);
+        let mut b = cell_rng(7, "convolution@GTX Titan X", "random", 0);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "objective-distinct cells must draw independent streams");
+    }
+
+    #[test]
+    fn aggregate_handles_short_empty_and_infinite_curves() {
+        // Short curves extend with their final value; empty and infinite
+        // entries fall back to the mean valid value.
+        let out = aggregate_outcome(
+            "x",
+            &[vec![4.0, 2.0], vec![], vec![f64::INFINITY, 6.0]],
+            3,
+            1.0,
+            10.0,
+        );
+        assert_eq!(out.mean_curve, vec![(4.0 + 10.0 + 10.0) / 3.0, 6.0, 6.0]);
+        assert_eq!(out.finals, vec![2.0, 10.0, 6.0]);
+        assert_eq!(out.maes.len(), 3);
     }
 }

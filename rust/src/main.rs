@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   spaces                         print Table II/III-style space stats
 //!   tune <kernel> <gpu>            tune one kernel (simulation mode)
+//!   sweep                          run the (kernel × gpu × strategy × repeat)
+//!                                  matrix concurrently, with JSONL progress
+//!                                  records and resume (see harness::orchestrator)
 //!   experiment <id>                regenerate a paper table/figure
 //!                                  (fig1..fig7, table1..table3, headline, all)
 //!
@@ -24,6 +27,7 @@ fn main() {
     match cmd {
         "spaces" => cmd_spaces(&args),
         "tune" => cmd_tune(&args),
+        "sweep" => cmd_sweep(&args),
         "experiment" => cmd_experiment(&args),
         "hypertune" => cmd_hypertune(&args),
         _ => usage(),
@@ -36,6 +40,9 @@ fn usage() {
     println!("USAGE:");
     println!("  ktbo spaces");
     println!("  ktbo tune <kernel> <gpu> [--strategy NAME] [--budget N] [--seed N] [--backend native|xla]");
+    println!("  ktbo sweep [--kernels a,b] [--gpus a,b] [--strategies a,b] [--smoke]");
+    println!("             [--budget N] [--repeat-scale F] [--seed N] [--threads N]");
+    println!("             [--out DIR] [--tag NAME] [--no-cache] [--fresh]");
     println!("  ktbo experiment <fig1..fig7|table1..table3|headline|ablation|extended|noise|all>");
     println!("  ktbo hypertune [--repeat-scale F] [--top N]");
     println!("                  [--repeat-scale F] [--seed N] [--threads N] [--out DIR]");
@@ -56,6 +63,68 @@ fn cmd_hypertune(args: &Args) {
     let report = ktbo::harness::hypertune::hypertune(&opts, args.usize_or("top", 15));
     println!("{report}");
     let _ = std::fs::write(std::path::Path::new(&opts.out_dir).join("hypertune.txt"), &report);
+}
+
+/// `ktbo sweep`: the concurrent evaluation-matrix orchestrator. Defaults
+/// to the paper's full matrix; `--smoke` selects the seconds-scale CI
+/// tier. Matrix filters (`--kernels/--gpus/--strategies`) take
+/// comma-separated lists; an existing `SWEEP_<tag>.jsonl` resumes the
+/// sweep from its completed cells unless `--fresh` discards it.
+fn cmd_sweep(args: &Args) {
+    use ktbo::harness::orchestrator::{sweep, SweepSpec};
+
+    let smoke = args.flag("smoke");
+    let base = if smoke {
+        SweepSpec::smoke(&args.str_or("out", "results"))
+    } else {
+        // Full tier: the registries define the paper-scale matrix, so a
+        // kernel or device added there is swept without touching this.
+        SweepSpec {
+            kernels: ktbo::gpusim::kernels::all_kernels().iter().map(|k| k.name().to_string()).collect(),
+            gpus: Device::all().iter().map(|d| d.name.to_string()).collect(),
+            strategies: ktbo::harness::figures::default_strategies().iter().map(|s| s.to_string()).collect(),
+            budget: ktbo::harness::BUDGET,
+            repeat_scale: 1.0,
+            seed: 20210601,
+            threads: ktbo::util::pool::default_threads(),
+            out_dir: args.str_or("out", "results"),
+            tag: "full".into(),
+            cache: true,
+            fresh: false,
+        }
+    };
+    let list = |key: &str, default: &[String]| -> Vec<String> {
+        match args.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.to_vec(),
+        }
+    };
+    let spec = SweepSpec {
+        kernels: list("kernels", &base.kernels),
+        gpus: list("gpus", &base.gpus),
+        strategies: list("strategies", &base.strategies),
+        budget: args.usize_or("budget", base.budget),
+        repeat_scale: args.f64_or("repeat-scale", base.repeat_scale),
+        seed: args.u64_or("seed", base.seed),
+        threads: args.usize_or("threads", base.threads),
+        out_dir: base.out_dir.clone(),
+        tag: args.str_or("tag", &base.tag),
+        cache: !args.flag("no-cache"),
+        fresh: args.flag("fresh"),
+    };
+    match sweep(&spec) {
+        Ok(report) => {
+            println!("{}", report.summary);
+            if report.outcomes.is_empty() {
+                eprintln!("sweep produced no outcomes");
+                std::process::exit(2);
+            }
+        }
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 fn cmd_spaces(args: &Args) {

@@ -7,6 +7,7 @@
 //! and — in `runtime::pjrt_objective` — a real PJRT-executed kernel grid.
 
 pub mod cache;
+pub mod evalcache;
 
 use crate::space::SearchSpace;
 use crate::util::rng::Rng;

@@ -30,19 +30,24 @@ use std::sync::{Arc, Condvar, Mutex};
 /// harness pool.
 static ACTIVE_HARNESS_WORKERS: AtomicUsize = AtomicUsize::new(0);
 
-struct HarnessWorkersGuard(usize);
-
-impl HarnessWorkersGuard {
-    fn enter(workers: usize) -> HarnessWorkersGuard {
-        ACTIVE_HARNESS_WORKERS.fetch_add(workers, Ordering::Relaxed);
-        HarnessWorkersGuard(workers)
-    }
-}
+/// RAII registration of `n` harness-level workers. Held internally by
+/// `run_parallel` and by the sweep orchestrator while its sessions run on
+/// a [`ShardPool`], so nested consumers (the BO engine's auto thread
+/// mode) see the outer parallelism through [`nested_threads`] either way.
+pub struct HarnessWorkersGuard(usize);
 
 impl Drop for HarnessWorkersGuard {
     fn drop(&mut self) {
         ACTIVE_HARNESS_WORKERS.fetch_sub(self.0, Ordering::Relaxed);
     }
+}
+
+/// Register `workers` harness-level workers for the guard's lifetime.
+/// Registering 0 is a no-op guard (serial callers may pass their worker
+/// count straight through).
+pub fn enter_harness_workers(workers: usize) -> HarnessWorkersGuard {
+    ACTIVE_HARNESS_WORKERS.fetch_add(workers, Ordering::Relaxed);
+    HarnessWorkersGuard(workers)
 }
 
 /// Threads a nested parallel stage should use so the whole process stays
@@ -65,7 +70,7 @@ where
     if threads <= 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
-    let _nesting = HarnessWorkersGuard::enter(threads);
+    let _nesting = enter_harness_workers(threads);
     let n = jobs.len();
     let queue: Arc<Mutex<Vec<(usize, F)>>> =
         Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));

@@ -3,7 +3,7 @@
 //! greedy input shrinking for integer-vector cases — enough to express the
 //! coordinator invariants (routing, batching, state) as properties.
 
-use crate::util::rng::Rng;
+use crate::util::rng::{fnv1a, Rng};
 
 /// Configuration for a property run.
 pub struct Config {
@@ -29,7 +29,7 @@ where
     P: FnMut(&T) -> Result<(), String>,
     S: Fn(&T) -> String,
 {
-    let mut rng = Rng::new(cfg.seed ^ fxhash(name));
+    let mut rng = Rng::new(cfg.seed ^ fnv1a(name));
     for case in 0..cfg.cases {
         let value = gen(&mut rng);
         if let Err(msg) = prop(&value) {
@@ -51,7 +51,7 @@ where
     S: Fn(&T) -> String,
     T: Clone,
 {
-    let mut rng = Rng::new(cfg.seed ^ fxhash(name));
+    let mut rng = Rng::new(cfg.seed ^ fnv1a(name));
     for case in 0..cfg.cases {
         let value = gen(&mut rng);
         if let Err(first_msg) = prop(&value) {
@@ -99,15 +99,6 @@ pub fn shrink_vec_usize(v: &Vec<usize>) -> Vec<Vec<usize>> {
         }
     }
     out
-}
-
-fn fxhash(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in s.bytes() {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x1000_0000_01b3);
-    }
-    h
 }
 
 #[cfg(test)]

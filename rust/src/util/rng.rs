@@ -153,6 +153,20 @@ impl Rng {
     }
 }
 
+/// FNV-1a over a string: stable 64-bit name hashing for stream-id
+/// derivation (per-cell RNG streams in the harness, property-test seeds).
+/// Deterministic across processes and platforms — never use a
+/// `RandomState`-seeded hasher for anything that feeds an RNG stream.
+#[inline]
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
 /// Stateless 64-bit mix (splitmix64 finalizer). Used by the GPU simulator
 /// to derive deterministic per-configuration "roughness" so the simulated
 /// search space is identical across processes and runs.

@@ -9,7 +9,7 @@ use ktbo::gpusim::kernels::{all_kernels, kernel_by_name};
 use ktbo::gpusim::SimulatedSpace;
 use ktbo::harness::figures::objective_for;
 use ktbo::harness::metrics::mean_deviation_factor;
-use ktbo::harness::runner::{run_comparison, run_strategy};
+use ktbo::harness::runner::{objective_id, repeats_for, run_comparison, run_strategy};
 use ktbo::objective::{Objective, TableObjective};
 use ktbo::strategies::registry::{all_names, by_name};
 use ktbo::util::rng::Rng;
@@ -58,8 +58,9 @@ fn bo_beats_random_on_gemm() {
     // The paper's core claim at minimum viable scale: on GEMM/Titan X the
     // BO methods' MAE must beat random search decisively.
     let obj = objective_for("gemm", &Device::gtx_titan_x());
-    let bo = run_strategy(&obj, "ei", 220, 5, 7, 0);
-    let rnd = run_strategy(&obj, "random", 220, 10, 7, 0);
+    let oid = objective_id("gemm", Device::gtx_titan_x().name);
+    let bo = run_strategy(&obj, &oid, "ei", 220, 5, 7, 0);
+    let rnd = run_strategy(&obj, &oid, "random", 220, 10, 7, 0);
     assert!(
         bo.mae.mean < rnd.mae.mean * 0.7,
         "EI MAE {} not clearly better than random {}",
@@ -74,7 +75,8 @@ fn advanced_multi_beats_random_across_kernels() {
     let mut mae = Vec::new();
     for kernel in ["gemm", "convolution"] {
         let obj = objective_for(kernel, &dev);
-        let out = run_comparison(&obj, &["advanced_multi", "random"], 220, 0.1, 3, 0);
+        let out =
+            run_comparison(&obj, &objective_id(kernel, dev.name), &["advanced_multi", "random"], 220, 0.1, 3, 0);
         mae.push(out.iter().map(|o| o.mae.mean).collect::<Vec<_>>());
     }
     let mdf = mean_deviation_factor(&mae);
@@ -158,9 +160,68 @@ fn bo_sequence_survives_thread_and_shard_sweep_on_simulated_space() {
 #[test]
 fn comparison_runner_is_seed_stable() {
     let obj: Arc<TableObjective> = objective_for("adding", &Device::a100());
-    let a = run_strategy(&obj, "multi", 100, 3, 42, 2);
-    let b = run_strategy(&obj, "multi", 100, 3, 42, 4);
+    let oid = objective_id("adding", Device::a100().name);
+    let a = run_strategy(&obj, &oid, "multi", 100, 3, 42, 2);
+    let b = run_strategy(&obj, &oid, "multi", 100, 3, 42, 4);
     assert_eq!(a.maes, b.maes, "results must not depend on thread count");
-    let c = run_strategy(&obj, "multi", 100, 3, 43, 2);
+    let c = run_strategy(&obj, &oid, "multi", 100, 3, 43, 2);
     assert_ne!(a.maes, c.maes, "different seeds must differ");
+    let d = run_strategy(&obj, "adding@somewhere-else", "multi", 100, 3, 42, 2);
+    assert_ne!(a.maes, d.maes, "the objective id is part of the cell seed");
+}
+
+#[test]
+fn smoke_sweep_is_bit_identical_to_serial_and_resumes() {
+    // The `ktbo sweep --smoke` tier end to end: orchestrated cells must
+    // reproduce the serial reference path bit-for-bit at several worker
+    // counts, persist JSONL artifacts, and resume without re-running.
+    use ktbo::harness::orchestrator::{sweep, SweepSpec};
+
+    let out = std::env::temp_dir().join("ktbo-int-sweep").to_string_lossy().into_owned();
+    let mut spec = SweepSpec::smoke(&out);
+    spec.fresh = true;
+    let dev = Device::a100();
+    let obj = objective_for("adding", &dev);
+    let oid = objective_id("adding", dev.name);
+
+    let mut reports = Vec::new();
+    for threads in [1usize, 4] {
+        let mut s = spec.clone();
+        s.threads = threads;
+        s.tag = format!("smoke-int-{threads}");
+        reports.push(sweep(&s).unwrap());
+    }
+    for report in &reports {
+        assert_eq!(report.outcomes.len(), 1);
+        let outs = &report.outcomes[0].1;
+        assert_eq!(outs.len(), spec.strategies.len());
+        for o in outs {
+            let reference = run_strategy(
+                &obj,
+                &oid,
+                &o.name,
+                spec.budget,
+                repeats_for(&o.name, spec.repeat_scale),
+                spec.seed,
+                1,
+            );
+            assert_eq!(o.mean_curve, reference.mean_curve, "{} diverged from serial path", o.name);
+            assert_eq!(o.maes, reference.maes, "{} MAEs diverged", o.name);
+        }
+    }
+
+    // JSONL artifacts exist and are non-empty (what CI asserts).
+    let progress = std::path::Path::new(&out).join("SWEEP_smoke-int-1.jsonl");
+    let results = std::path::Path::new(&out).join("SWEEP_smoke-int-1.results.jsonl");
+    assert!(std::fs::metadata(&progress).unwrap().len() > 0);
+    assert!(std::fs::metadata(&results).unwrap().len() > 0);
+
+    // Rerun under the same tag: every cell resumes, aggregates unchanged.
+    let mut s = spec.clone();
+    s.tag = "smoke-int-1".into();
+    s.fresh = false;
+    let resumed = sweep(&s).unwrap();
+    assert_eq!(resumed.ran_cells, 0, "a completed sweep must resume fully");
+    assert_eq!(resumed.resumed_cells, resumed.total_cells);
+    assert_eq!(resumed.outcomes[0].1[0].mean_curve, reports[0].outcomes[0].1[0].mean_curve);
 }

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Local mirror of .github/workflows/ci.yml — run before pushing to
+# reproduce a red pipeline with one command:
+#
+#   scripts/ci-check.sh          # everything the two CI jobs run
+#   scripts/ci-check.sh --fast   # skip the smoke bench + sweep tier
+#
+# Steps (same order as CI): fmt, clippy, release build, tests, then the
+# smoke bench and smoke sweep with the artifact sanity checks the CI
+# `smoke` job gates on.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+FAST=0
+for arg in "$@"; do
+  [ "$arg" = "--fast" ] && FAST=1
+done
+
+step() { printf '\n== %s ==\n' "$*"; }
+
+step "cargo fmt --check"
+cargo fmt --all --check
+
+step "cargo clippy -D warnings"
+cargo clippy --workspace --all-targets -- -D warnings
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q"
+cargo test -q
+
+if [ "$FAST" = "1" ]; then
+  printf '\nci-check: core checks green (smoke tier skipped via --fast)\n'
+  exit 0
+fi
+
+step "smoke bench (gp_hotpath)"
+scripts/bench.sh --smoke
+
+step "smoke sweep (orchestrator)"
+cargo run --release -p ktbo -- sweep --smoke --fresh --out results
+
+step "artifact sanity"
+test -s BENCH_gp_hotpath.smoke.json
+test -s results/SWEEP_smoke.jsonl
+test -s results/SWEEP_smoke.results.jsonl
+grep -q '"type":"outcome"' results/SWEEP_smoke.results.jsonl
+
+printf '\nci-check: all green\n'
