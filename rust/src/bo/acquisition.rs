@@ -86,7 +86,7 @@ pub fn argmin_score(acq: Acq, mu: &[f64], var: &[f64], f_best: f64, lambda: f64,
 /// One fused shard sweep: for each acquisition function in `afs`, the
 /// running (global index, score) argmin over this chunk, skipping masked
 /// candidates. `offset` is the chunk's first global candidate index.
-/// Ascending scan with the shared [`better`] rule keeps the lowest index
+/// Ascending scan with the shared `better` rule keeps the lowest index
 /// on ties and rejects NaN scores; composed with
 /// [`reduce_shard_argmins`] this reproduces [`argmin_score`] exactly for
 /// any chunk partition.
@@ -116,7 +116,7 @@ pub fn score_chunk(
 }
 
 /// Reduce per-shard fused argmins (in ascending shard order) into one
-/// global argmin per acquisition function. The shared [`better`] rule ⇒
+/// global argmin per acquisition function. The shared `better` rule ⇒
 /// lowest-index tie-breaking and NaN-as-+∞, independent of the shard
 /// partition and thread count.
 pub fn reduce_shard_argmins(shards: &[Vec<Option<(usize, f64)>>], n_afs: usize) -> Vec<Option<usize>> {

@@ -82,6 +82,14 @@ pub struct BoConfig {
     /// Candidates per GP shard tile (0 = auto: `gp::DEFAULT_SHARD_LEN`).
     /// Like `threads`, affects performance only, never results.
     pub shard_len: usize,
+    /// Batch ask/tell mode: each driver step proposes *every* distinct
+    /// per-acquisition argmin from the fused `predict_scored` sweep
+    /// (instead of only the policy's pick), letting the drive loop
+    /// evaluate a whole batch — in parallel on a `ShardPool` if it has
+    /// one. Off by default: batch runs trade per-step surrogate updates
+    /// for throughput, so their traces differ from the paper's
+    /// sequential protocol.
+    pub batch_ask: bool,
 }
 
 impl BoConfig {
@@ -103,6 +111,7 @@ impl BoConfig {
             pruning: true,
             threads: 0,
             shard_len: 0,
+            batch_ask: false,
         }
     }
 

@@ -16,11 +16,20 @@
 //!   configurations — resource-limit invalidity is locally correlated on
 //!   GPUs (our reading of Table I's "Pruning: yes").
 //!
+//! Since the ask/tell redesign the strategy is a stepwise [`BoDriver`]:
+//! `ask` runs the surrogate update and the fused acquisition sweep, and
+//! `tell` registers the observation (visited mask, surrogate feed queue,
+//! pruning model, policy bookkeeping). The generic drive loop owns
+//! evaluation, budgeting, and the trace. With `BoConfig::batch_ask` set,
+//! `ask` returns *every* distinct per-acquisition argmin the fused sweep
+//! already computed — the per-step batch that parallel evaluation and the
+//! step-level orchestrator consume.
+//!
 //! Hot-path organization (the per-iteration O(m) work over the whole
 //! candidate set): one long-lived [`ShardPool`] serves the entire run, and
 //! each iteration makes exactly two sharded sweeps —
 //!
-//! 1. **mask+λ fold** ([`mask_var_fold`]): candidate mask, posterior
+//! 1. **mask+λ fold** (`mask_var_fold`): candidate mask, posterior
 //!    variance (from the GP's running Σ V², no posterior solve needed)
 //!    and the Σvar/count reduction that feeds the contextual-variance λ,
 //!    all in one O(m) pass with fixed-point partial sums;
@@ -34,7 +43,9 @@
 //! thread count), per-shard accumulation order is scheduling-independent,
 //! argmin reductions tie-break on the lowest index, and the λ reduction
 //! sums integers — so a run's evaluation sequence is bit-identical for
-//! every `threads`/`shard_len` (enforced by the tests below).
+//! every `threads`/`shard_len` (enforced by the tests below), and the
+//! ask/tell port replays the pre-redesign loop bit for bit (enforced by
+//! the `strategies::legacy` equivalence suite).
 
 use std::sync::Arc;
 
@@ -43,12 +54,11 @@ use crate::bo::config::{Acq, BoConfig, Exploration, InitialSampling};
 use crate::bo::multi::{make_policy, AcqPolicy};
 use crate::bo::sampling::{lhs_points, maximin_lhs_points, random_untaken, snap_to_configs};
 use crate::gp::{IncrementalGp, Surrogate, DEFAULT_SHARD_LEN};
-use crate::objective::{Eval, Objective};
 use crate::space::{neighbors, Neighborhood, SearchSpace};
-use crate::strategies::{Strategy, Trace};
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 use crate::util::linalg::{mean, std_dev};
 use crate::util::pool::{nested_threads, ShardPool};
-use crate::util::rng::Rng;
 
 /// Surrogate backend selection.
 #[derive(Clone)]
@@ -61,7 +71,7 @@ pub enum Backend {
     OneShot(Arc<dyn Fn(&BoConfig) -> Box<dyn Surrogate> + Send + Sync>),
 }
 
-/// The BO strategy.
+/// The BO strategy (a factory for [`BoDriver`]s).
 pub struct BoStrategy {
     pub config: BoConfig,
     pub backend: Backend,
@@ -78,113 +88,15 @@ impl BoStrategy {
     }
 }
 
-struct RunState<'a> {
-    obj: &'a dyn Objective,
-    rng: &'a mut Rng,
-    trace: Trace,
-    visited: Vec<bool>,
-    /// Scratch mask reused by every snap/random-replacement draw: the
-    /// samplers mark tentative picks in it, so it must start each draw as
-    /// a copy of `visited` — a copy into this buffer instead of a fresh
-    /// O(m) allocation per draw.
-    taken: Vec<bool>,
-    obs_idx: Vec<usize>,
-    obs_y: Vec<f64>,
-    max_fevals: usize,
-}
-
-impl<'a> RunState<'a> {
-    fn budget_left(&self) -> bool {
-        self.trace.len() < self.max_fevals
-    }
-
-    /// A uniformly random not-yet-visited configuration.
-    fn random_unvisited(&mut self, space: &SearchSpace) -> Option<usize> {
-        self.taken.copy_from_slice(&self.visited);
-        random_untaken(space, &mut self.taken, self.rng)
-    }
-
-    /// Evaluate a configuration, consuming budget. Returns the raw valid
-    /// value if any.
-    fn evaluate(&mut self, idx: usize) -> Option<f64> {
-        debug_assert!(!self.visited[idx], "re-evaluating config {idx}");
-        let e = self.obj.evaluate(idx, self.rng);
-        self.trace.push(idx, e);
-        self.visited[idx] = true;
-        if let Eval::Valid(v) = e {
-            self.obs_idx.push(idx);
-            self.obs_y.push(v);
-            Some(v)
-        } else {
-            None
-        }
-    }
-
-    fn f_best(&self) -> f64 {
-        self.obs_y.iter().cloned().fold(f64::INFINITY, f64::min)
-    }
-}
-
 impl Strategy for BoStrategy {
     fn name(&self) -> String {
         self.label.clone()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let cfg = &self.config;
-        let space = obj.space();
+    fn driver(&self, space: &SearchSpace) -> Box<dyn SearchDriver> {
+        let cfg = self.config.clone();
         let m = space.len();
         let dims = space.dims();
-
-        let mut st = RunState {
-            obj,
-            rng,
-            trace: Trace::new(),
-            visited: vec![false; m],
-            taken: vec![false; m],
-            obs_idx: Vec::new(),
-            obs_y: Vec::new(),
-            max_fevals,
-        };
-
-        // ---- Initial sampling (§III-E) ----
-        let init_n = cfg.init_samples.min(max_fevals).min(m);
-        let pts = match cfg.init_sampling {
-            InitialSampling::Lhs => Some(lhs_points(init_n, dims, st.rng)),
-            InitialSampling::Maximin => Some(maximin_lhs_points(init_n, dims, 16, st.rng)),
-            InitialSampling::Random => None,
-        };
-        let mut newly_invalid: Vec<usize> = Vec::new();
-        if let Some(pts) = pts {
-            st.taken.copy_from_slice(&st.visited);
-            let idxs = snap_to_configs(&pts, space, &mut st.taken);
-            for idx in idxs {
-                if !st.budget_left() {
-                    break;
-                }
-                if st.evaluate(idx).is_none() {
-                    newly_invalid.push(idx);
-                }
-            }
-        }
-        // Replace invalid/missing draws with random samples until the
-        // initial sample is complete (or budget/space is exhausted).
-        while st.obs_y.len() < init_n && st.budget_left() {
-            match st.random_unvisited(space) {
-                Some(idx) => {
-                    if st.evaluate(idx).is_none() {
-                        newly_invalid.push(idx);
-                    }
-                }
-                None => break,
-            }
-        }
-        if st.obs_y.is_empty() {
-            return st.trace; // nothing valid found at all
-        }
-        let mu_s = mean(&st.obs_y); // initial-sample mean (raw units)
-
-        // ---- Surrogate state ----
         // Shard boundaries depend only on the config; the worker count
         // caps at the shard count and, in auto mode, divides the machine
         // by any harness-level parallelism already running (35 concurrent
@@ -197,144 +109,361 @@ impl Strategy for BoStrategy {
             t => t.min(n_shards),
         };
         let pool = ShardPool::new(pool_threads);
-        let mut inc = IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.points().to_vec(), dims, shard_len);
-        let mut fed = 0usize; // observations already fed to the GP
-        let mut oneshot = match &self.backend {
+        let inc =
+            IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.points().to_vec(), dims, shard_len);
+        let oneshot = match &self.backend {
             Backend::Incremental => None,
-            Backend::OneShot(f) => Some(f(cfg)),
+            Backend::OneShot(f) => Some(f(&cfg)),
+        };
+        let policy = make_policy(&cfg);
+        Box::new(BoDriver {
+            label: self.label.clone(),
+            cfg,
+            oneshot,
+            started: false,
+            phase: BoPhase::Init,
+            visited: vec![false; m],
+            taken: vec![false; m],
+            obs_idx: Vec::new(),
+            obs_y: Vec::new(),
+            newly_invalid: Vec::new(),
+            init_n: 0,
+            mu_s: 0.0,
+            shard_len,
+            pool,
+            inc,
+            fed: 0,
+            policy,
+            mu: vec![0.0; m],
+            var: vec![0.0; m],
+            masked: vec![false; m],
+            invalid_adj: vec![0u8; m],
+            sigma_s2: None,
+            chosen: None,
+        })
+    }
+}
+
+enum BoPhase {
+    /// Telling back the LHS/maximin initial batch.
+    Init,
+    /// Telling back a random replacement draw.
+    TopUp,
+    /// Telling back acquisition-chosen evaluations.
+    Step,
+}
+
+/// The stepwise BO engine. All per-run state lives here; the drive loop
+/// owns evaluation, budget, and trace.
+pub struct BoDriver {
+    label: String,
+    cfg: BoConfig,
+    oneshot: Option<Box<dyn Surrogate>>,
+    started: bool,
+    phase: BoPhase,
+    visited: Vec<bool>,
+    /// Scratch mask reused by every snap/random-replacement draw: the
+    /// samplers mark tentative picks in it, so it must start each draw as
+    /// a copy of `visited` — a copy into this buffer instead of a fresh
+    /// O(m) allocation per draw.
+    taken: Vec<bool>,
+    obs_idx: Vec<usize>,
+    obs_y: Vec<f64>,
+    /// Invalids observed since the last pruning-model update.
+    newly_invalid: Vec<usize>,
+    init_n: usize,
+    /// Initial-sample mean (raw units), for the contextual-variance λ.
+    mu_s: f64,
+    shard_len: usize,
+    pool: ShardPool,
+    inc: IncrementalGp,
+    /// Observations already fed to the incremental GP.
+    fed: usize,
+    policy: Box<dyn AcqPolicy>,
+    mu: Vec<f64>,
+    var: Vec<f64>,
+    masked: Vec<bool>,
+    /// Pruning state: count of observed-invalid adjacent neighbors.
+    invalid_adj: Vec<u8>,
+    sigma_s2: Option<f64>,
+    /// The policy's pick of the in-flight step (its tell feeds
+    /// `AcqPolicy::observe`; batch-mode extras update only the run state).
+    chosen: Option<usize>,
+}
+
+impl BoDriver {
+    /// A uniformly random not-yet-visited configuration.
+    fn random_unvisited(&mut self, ctx: &mut DriveCtx) -> Option<usize> {
+        self.taken.copy_from_slice(&self.visited);
+        random_untaken(ctx.space, &mut self.taken, ctx.rng)
+    }
+
+    /// Replace invalid/missing initial draws with random samples until
+    /// the initial sample is complete (or budget/space is exhausted),
+    /// then hand over to the optimization loop.
+    fn top_up(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if self.obs_y.len() < self.init_n && ctx.budget_left() {
+            if let Some(idx) = self.random_unvisited(ctx) {
+                self.phase = BoPhase::TopUp;
+                return Ask::Suggest(vec![idx]);
+            }
+        }
+        if self.obs_y.is_empty() {
+            return Ask::Finished; // nothing valid found at all
+        }
+        self.mu_s = mean(&self.obs_y);
+        self.phase = BoPhase::Step;
+        self.step(ctx)
+    }
+
+    /// One optimization-loop iteration (§III): register invalids with the
+    /// pruning model, update the surrogate, fold mask+λ, run the fused
+    /// acquisition sweep, and propose the policy's pick (or, in batch
+    /// mode, every distinct argmin).
+    fn step(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !ctx.budget_left() {
+            return Ask::Finished;
+        }
+        let space = ctx.space;
+        let m = space.len();
+        let dims = space.dims();
+
+        // Register invalids observed since the last iteration with the
+        // pruning model (never with the surrogate).
+        if self.cfg.pruning {
+            for idx in self.newly_invalid.drain(..) {
+                for nb in neighbors(space, idx, Neighborhood::Adjacent) {
+                    self.invalid_adj[nb] = self.invalid_adj[nb].saturating_add(1);
+                }
+            }
+        } else {
+            self.newly_invalid.clear();
+        }
+
+        // z-normalize observations so AF scores and λ are scale-free.
+        let y_mean = mean(&self.obs_y);
+        let y_std = {
+            let s = std_dev(&self.obs_y);
+            if s > 1e-12 {
+                s
+            } else {
+                1.0
+            }
+        };
+        let y_z: Vec<f64> = self.obs_y.iter().map(|v| (v - y_mean) / y_std).collect();
+
+        // Feed new observations to the surrogate. The incremental
+        // backend defers its posterior sweep to the fused pass below;
+        // the one-shot backend must produce mu/var up front.
+        match &mut self.oneshot {
+            None => {
+                while self.fed < self.obs_idx.len() {
+                    self.inc.add_par(space.point(self.obs_idx[self.fed]), &self.pool);
+                    self.fed += 1;
+                }
+            }
+            Some(s) => {
+                // One-shot backend: fit on observations, predict over
+                // non-visited candidates, scatter back.
+                let x: Vec<f64> =
+                    self.obs_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
+                let cand_idx: Vec<usize> = (0..m).filter(|&i| !self.visited[i]).collect();
+                let cand: Vec<f64> = cand_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
+                let mut cmu = vec![0.0; cand_idx.len()];
+                let mut cvar = vec![0.0; cand_idx.len()];
+                if s.fit_predict(&x, &y_z, dims, &cand, &mut cmu, &mut cvar).is_err() {
+                    return Ask::Finished;
+                }
+                self.mu.fill(f64::INFINITY);
+                self.var.fill(1e-12);
+                for (p, &i) in cand_idx.iter().enumerate() {
+                    self.mu[i] = cmu[p];
+                    self.var[i] = cvar[p];
+                }
+            }
+        }
+
+        // Candidate mask (§III-D: evaluated configs are out; pruned
+        // configs — ≥2 invalid adjacent neighbors — are out while
+        // other candidates remain) folded with the Σvar/count
+        // reduction for λ into one sharded O(m) pass. The incremental
+        // backend also materializes `var` here, straight from the
+        // GP's running Σ V² — no posterior solve needed yet.
+        let sq_chunks: Option<Vec<&[f64]>> =
+            if self.oneshot.is_none() { Some(self.inc.sq_chunks().collect()) } else { None };
+        let adj = if self.cfg.pruning { Some(&self.invalid_adj[..]) } else { None };
+        let (mut var_fp, mut n_cand) = mask_var_fold(
+            &self.pool,
+            self.shard_len,
+            &mut self.masked,
+            &mut self.var,
+            sq_chunks.as_deref(),
+            &self.visited,
+            adj,
+        );
+        if n_cand == 0 && self.cfg.pruning {
+            // Pruning ate everything: relax it to visited-only.
+            let relaxed = mask_var_fold(
+                &self.pool,
+                self.shard_len,
+                &mut self.masked,
+                &mut self.var,
+                sq_chunks.as_deref(),
+                &self.visited,
+                None,
+            );
+            var_fp = relaxed.0;
+            n_cand = relaxed.1;
+        }
+        if n_cand == 0 {
+            return Ask::Finished; // space exhausted
+        }
+        let sigma_bar2 = var_from_fp(var_fp) / n_cand as f64;
+        let s_s2 = *self.sigma_s2.get_or_insert(sigma_bar2);
+
+        // Exploration factor (§III-F).
+        let f_best = self.obs_y.iter().cloned().fold(f64::INFINITY, f64::min);
+        let lambda = match self.cfg.exploration {
+            Exploration::Constant(l) => l,
+            Exploration::ContextualVariance => {
+                // λ = (σ̄² / (μ_s / f(x⁺))) / σ̄_s², clamped to [0, ∞).
+                let improvement = (self.mu_s / f_best).max(1e-12);
+                ((sigma_bar2 / improvement) / s_s2.max(1e-12)).max(0.0)
+            }
+        };
+        let f_best_z = (f_best - y_mean) / y_std;
+
+        // Fused acquisition pass: one sweep computes every wanted AF's
+        // exhaustive argmin (plus, for the incremental backend, the
+        // posterior itself).
+        let wanted = self.policy.wanted();
+        let suggestions: Vec<Option<usize>> = if wanted.is_empty() {
+            Vec::new()
+        } else if self.oneshot.is_none() {
+            let masked = &self.masked;
+            let parts =
+                self.inc.predict_scored(&y_z, &self.pool, &mut self.mu, &mut self.var, |start, mu_c, var_c| {
+                    score_chunk(
+                        &wanted,
+                        mu_c,
+                        var_c,
+                        &masked[start..start + mu_c.len()],
+                        start,
+                        f_best_z,
+                        lambda,
+                    )
+                });
+            reduce_shard_argmins(&parts, wanted.len())
+        } else {
+            let parts = score_pass(
+                &self.pool,
+                self.shard_len,
+                &wanted,
+                &self.mu,
+                &self.var,
+                &self.masked,
+                f_best_z,
+                lambda,
+            );
+            reduce_shard_argmins(&parts, wanted.len())
         };
 
-        let mut policy: Box<dyn AcqPolicy> = make_policy(cfg);
-        let mut mu = vec![0.0; m];
-        let mut var = vec![0.0; m];
-        let mut masked = vec![false; m];
-        // Pruning state: count of observed-invalid adjacent neighbors.
-        let mut invalid_adj = vec![0u8; m];
-        let mut sigma_s2: Option<f64> = None;
+        let pick = self.policy.choose(&suggestions);
 
-        // ---- Optimization loop ----
-        while st.budget_left() {
-            // Register invalids observed since the last iteration with the
-            // pruning model (never with the surrogate).
-            if cfg.pruning {
-                for idx in newly_invalid.drain(..) {
-                    for nb in neighbors(space, idx, Neighborhood::Adjacent) {
-                        invalid_adj[nb] = invalid_adj[nb].saturating_add(1);
+        if self.cfg.batch_ask {
+            // Batch mode: the fused sweep already produced one argmin per
+            // wanted acquisition function — propose all distinct ones.
+            // The policy's bookkeeping advanced once (the `choose` above)
+            // and its observe() will be routed to the chosen index only;
+            // the extra evaluations enrich the surrogate via `tell`.
+            if let Some(chosen) = pick {
+                let mut batch: Vec<usize> = Vec::new();
+                for s in suggestions.iter().flatten() {
+                    if !batch.contains(s) {
+                        batch.push(*s);
                     }
                 }
-            } else {
-                newly_invalid.clear();
-            }
-
-            // z-normalize observations so AF scores and λ are scale-free.
-            let y_mean = mean(&st.obs_y);
-            let y_std = {
-                let s = std_dev(&st.obs_y);
-                if s > 1e-12 {
-                    s
-                } else {
-                    1.0
+                if !batch.contains(&chosen) {
+                    batch.push(chosen);
                 }
-            };
-            let y_z: Vec<f64> = st.obs_y.iter().map(|v| (v - y_mean) / y_std).collect();
-
-            // Feed new observations to the surrogate. The incremental
-            // backend defers its posterior sweep to the fused pass below;
-            // the one-shot backend must produce mu/var up front.
-            match &mut oneshot {
-                None => {
-                    while fed < st.obs_idx.len() {
-                        inc.add_par(space.point(st.obs_idx[fed]), &pool);
-                        fed += 1;
-                    }
+                self.chosen = Some(chosen);
+                return Ask::Suggest(batch);
+            }
+            // Every AF fully masked: random fallback, as sequentially.
+            return match self.random_unvisited(ctx) {
+                Some(i) => {
+                    self.chosen = Some(i);
+                    Ask::Suggest(vec![i])
                 }
-                Some(s) => {
-                    // One-shot backend: fit on observations, predict over
-                    // non-visited candidates, scatter back.
-                    let x: Vec<f64> = st.obs_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
-                    let cand_idx: Vec<usize> = (0..m).filter(|&i| !st.visited[i]).collect();
-                    let cand: Vec<f64> = cand_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
-                    let mut cmu = vec![0.0; cand_idx.len()];
-                    let mut cvar = vec![0.0; cand_idx.len()];
-                    if s.fit_predict(&x, &y_z, dims, &cand, &mut cmu, &mut cvar).is_err() {
-                        break;
-                    }
-                    mu.fill(f64::INFINITY);
-                    var.fill(1e-12);
-                    for (p, &i) in cand_idx.iter().enumerate() {
-                        mu[i] = cmu[p];
-                        var[i] = cvar[p];
-                    }
-                }
-            }
-
-            // Candidate mask (§III-D: evaluated configs are out; pruned
-            // configs — ≥2 invalid adjacent neighbors — are out while
-            // other candidates remain) folded with the Σvar/count
-            // reduction for λ into one sharded O(m) pass. The incremental
-            // backend also materializes `var` here, straight from the
-            // GP's running Σ V² — no posterior solve needed yet.
-            let sq_chunks: Option<Vec<&[f64]>> =
-                if oneshot.is_none() { Some(inc.sq_chunks().collect()) } else { None };
-            let adj = if cfg.pruning { Some(&invalid_adj[..]) } else { None };
-            let (mut var_fp, mut n_cand) =
-                mask_var_fold(&pool, shard_len, &mut masked, &mut var, sq_chunks.as_deref(), &st.visited, adj);
-            if n_cand == 0 && cfg.pruning {
-                // Pruning ate everything: relax it to visited-only.
-                let relaxed =
-                    mask_var_fold(&pool, shard_len, &mut masked, &mut var, sq_chunks.as_deref(), &st.visited, None);
-                var_fp = relaxed.0;
-                n_cand = relaxed.1;
-            }
-            if n_cand == 0 {
-                break; // space exhausted
-            }
-            let sigma_bar2 = var_from_fp(var_fp) / n_cand as f64;
-            let s_s2 = *sigma_s2.get_or_insert(sigma_bar2);
-
-            // Exploration factor (§III-F).
-            let f_best = st.f_best();
-            let lambda = match cfg.exploration {
-                Exploration::Constant(l) => l,
-                Exploration::ContextualVariance => {
-                    // λ = (σ̄² / (μ_s / f(x⁺))) / σ̄_s², clamped to [0, ∞).
-                    let improvement = (mu_s / f_best).max(1e-12);
-                    ((sigma_bar2 / improvement) / s_s2.max(1e-12)).max(0.0)
-                }
+                None => Ask::Finished,
             };
-            let f_best_z = (f_best - y_mean) / y_std;
-
-            // Fused acquisition pass: one sweep computes every wanted AF's
-            // exhaustive argmin (plus, for the incremental backend, the
-            // posterior itself).
-            let wanted = policy.wanted();
-            let suggestions: Vec<Option<usize>> = if wanted.is_empty() {
-                Vec::new()
-            } else if oneshot.is_none() {
-                let parts = inc.predict_scored(&y_z, &pool, &mut mu, &mut var, |start, mu_c, var_c| {
-                    score_chunk(&wanted, mu_c, var_c, &masked[start..start + mu_c.len()], start, f_best_z, lambda)
-                });
-                reduce_shard_argmins(&parts, wanted.len())
-            } else {
-                let parts = score_pass(&pool, shard_len, &wanted, &mu, &var, &masked, f_best_z, lambda);
-                reduce_shard_argmins(&parts, wanted.len())
-            };
-
-            let pick = policy.choose(&suggestions);
-            let idx = match pick {
-                Some(i) => i,
-                None => match st.random_unvisited(space) {
-                    Some(i) => i,
-                    None => break,
-                },
-            };
-            let value = st.evaluate(idx);
-            if value.is_none() {
-                newly_invalid.push(idx);
-            }
-            policy.observe(value, &st.obs_y);
         }
-        st.trace
+
+        let idx = match pick {
+            Some(i) => i,
+            None => match self.random_unvisited(ctx) {
+                Some(i) => i,
+                None => return Ask::Finished,
+            },
+        };
+        self.chosen = Some(idx);
+        Ask::Suggest(vec![idx])
+    }
+}
+
+impl SearchDriver for BoDriver {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !self.started {
+            // ---- Initial sampling (§III-E) ----
+            self.started = true;
+            let space = ctx.space;
+            let m = space.len();
+            let dims = space.dims();
+            self.init_n = match ctx.max_fevals() {
+                Some(b) => self.cfg.init_samples.min(b),
+                None => self.cfg.init_samples,
+            }
+            .min(m);
+            let pts = match self.cfg.init_sampling {
+                InitialSampling::Lhs => Some(lhs_points(self.init_n, dims, ctx.rng)),
+                InitialSampling::Maximin => Some(maximin_lhs_points(self.init_n, dims, 16, ctx.rng)),
+                InitialSampling::Random => None,
+            };
+            if let Some(pts) = pts {
+                self.taken.copy_from_slice(&self.visited);
+                let idxs = snap_to_configs(&pts, space, &mut self.taken);
+                self.phase = BoPhase::Init;
+                if !idxs.is_empty() {
+                    return Ask::Suggest(idxs);
+                }
+            }
+            return self.top_up(ctx);
+        }
+        match self.phase {
+            BoPhase::Init | BoPhase::TopUp => self.top_up(ctx),
+            BoPhase::Step => self.step(ctx),
+        }
+    }
+
+    fn tell(&mut self, obs: Observation) {
+        debug_assert!(!obs.cached, "BO never re-proposes an evaluated config");
+        self.visited[obs.idx] = true;
+        let value = obs.eval.value();
+        if let Some(v) = value {
+            self.obs_idx.push(obs.idx);
+            self.obs_y.push(v);
+        } else {
+            self.newly_invalid.push(obs.idx);
+        }
+        if let BoPhase::Step = self.phase {
+            if self.chosen == Some(obs.idx) {
+                self.policy.observe(value, &self.obs_y);
+            }
+        }
     }
 }
 
@@ -431,12 +560,245 @@ pub(crate) fn score_pass(
     parts
 }
 
+/// The pre-redesign whole-loop implementation, kept verbatim as the
+/// reference for the ask/tell equivalence suite (`strategies::legacy`).
+#[cfg(test)]
+pub(crate) mod legacy_engine {
+    use super::*;
+    use crate::objective::{Eval, Objective};
+    use crate::strategies::Trace;
+    use crate::util::rng::Rng;
+
+    struct RunState<'a> {
+        obj: &'a dyn Objective,
+        rng: &'a mut Rng,
+        trace: Trace,
+        visited: Vec<bool>,
+        taken: Vec<bool>,
+        obs_idx: Vec<usize>,
+        obs_y: Vec<f64>,
+        max_fevals: usize,
+    }
+
+    impl<'a> RunState<'a> {
+        fn budget_left(&self) -> bool {
+            self.trace.len() < self.max_fevals
+        }
+
+        fn random_unvisited(&mut self, space: &SearchSpace) -> Option<usize> {
+            self.taken.copy_from_slice(&self.visited);
+            random_untaken(space, &mut self.taken, self.rng)
+        }
+
+        fn evaluate(&mut self, idx: usize) -> Option<f64> {
+            debug_assert!(!self.visited[idx], "re-evaluating config {idx}");
+            let e = self.obj.evaluate(idx, self.rng);
+            self.trace.push(idx, e);
+            self.visited[idx] = true;
+            if let Eval::Valid(v) = e {
+                self.obs_idx.push(idx);
+                self.obs_y.push(v);
+                Some(v)
+            } else {
+                None
+            }
+        }
+
+        fn f_best(&self) -> f64 {
+            self.obs_y.iter().cloned().fold(f64::INFINITY, f64::min)
+        }
+    }
+
+    /// The original `BoStrategy::run` body, pre-ask/tell.
+    pub fn run(strategy: &BoStrategy, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let cfg = &strategy.config;
+        let space = obj.space();
+        let m = space.len();
+        let dims = space.dims();
+
+        let mut st = RunState {
+            obj,
+            rng,
+            trace: Trace::new(),
+            visited: vec![false; m],
+            taken: vec![false; m],
+            obs_idx: Vec::new(),
+            obs_y: Vec::new(),
+            max_fevals,
+        };
+
+        let init_n = cfg.init_samples.min(max_fevals).min(m);
+        let pts = match cfg.init_sampling {
+            InitialSampling::Lhs => Some(lhs_points(init_n, dims, st.rng)),
+            InitialSampling::Maximin => Some(maximin_lhs_points(init_n, dims, 16, st.rng)),
+            InitialSampling::Random => None,
+        };
+        let mut newly_invalid: Vec<usize> = Vec::new();
+        if let Some(pts) = pts {
+            st.taken.copy_from_slice(&st.visited);
+            let idxs = snap_to_configs(&pts, space, &mut st.taken);
+            for idx in idxs {
+                if !st.budget_left() {
+                    break;
+                }
+                if st.evaluate(idx).is_none() {
+                    newly_invalid.push(idx);
+                }
+            }
+        }
+        while st.obs_y.len() < init_n && st.budget_left() {
+            match st.random_unvisited(space) {
+                Some(idx) => {
+                    if st.evaluate(idx).is_none() {
+                        newly_invalid.push(idx);
+                    }
+                }
+                None => break,
+            }
+        }
+        if st.obs_y.is_empty() {
+            return st.trace;
+        }
+        let mu_s = mean(&st.obs_y);
+
+        let shard_len = if cfg.shard_len == 0 { DEFAULT_SHARD_LEN } else { cfg.shard_len };
+        let n_shards = (m + shard_len - 1) / shard_len;
+        let pool_threads = match cfg.threads {
+            0 => nested_threads().min(n_shards),
+            t => t.min(n_shards),
+        };
+        let pool = ShardPool::new(pool_threads);
+        let mut inc =
+            IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.points().to_vec(), dims, shard_len);
+        let mut fed = 0usize;
+        let mut oneshot = match &strategy.backend {
+            Backend::Incremental => None,
+            Backend::OneShot(f) => Some(f(cfg)),
+        };
+
+        let mut policy: Box<dyn AcqPolicy> = make_policy(cfg);
+        let mut mu = vec![0.0; m];
+        let mut var = vec![0.0; m];
+        let mut masked = vec![false; m];
+        let mut invalid_adj = vec![0u8; m];
+        let mut sigma_s2: Option<f64> = None;
+
+        while st.budget_left() {
+            if cfg.pruning {
+                for idx in newly_invalid.drain(..) {
+                    for nb in neighbors(space, idx, Neighborhood::Adjacent) {
+                        invalid_adj[nb] = invalid_adj[nb].saturating_add(1);
+                    }
+                }
+            } else {
+                newly_invalid.clear();
+            }
+
+            let y_mean = mean(&st.obs_y);
+            let y_std = {
+                let s = std_dev(&st.obs_y);
+                if s > 1e-12 {
+                    s
+                } else {
+                    1.0
+                }
+            };
+            let y_z: Vec<f64> = st.obs_y.iter().map(|v| (v - y_mean) / y_std).collect();
+
+            match &mut oneshot {
+                None => {
+                    while fed < st.obs_idx.len() {
+                        inc.add_par(space.point(st.obs_idx[fed]), &pool);
+                        fed += 1;
+                    }
+                }
+                Some(s) => {
+                    let x: Vec<f64> =
+                        st.obs_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
+                    let cand_idx: Vec<usize> = (0..m).filter(|&i| !st.visited[i]).collect();
+                    let cand: Vec<f64> =
+                        cand_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
+                    let mut cmu = vec![0.0; cand_idx.len()];
+                    let mut cvar = vec![0.0; cand_idx.len()];
+                    if s.fit_predict(&x, &y_z, dims, &cand, &mut cmu, &mut cvar).is_err() {
+                        break;
+                    }
+                    mu.fill(f64::INFINITY);
+                    var.fill(1e-12);
+                    for (p, &i) in cand_idx.iter().enumerate() {
+                        mu[i] = cmu[p];
+                        var[i] = cvar[p];
+                    }
+                }
+            }
+
+            let sq_chunks: Option<Vec<&[f64]>> =
+                if oneshot.is_none() { Some(inc.sq_chunks().collect()) } else { None };
+            let adj = if cfg.pruning { Some(&invalid_adj[..]) } else { None };
+            let (mut var_fp, mut n_cand) =
+                mask_var_fold(&pool, shard_len, &mut masked, &mut var, sq_chunks.as_deref(), &st.visited, adj);
+            if n_cand == 0 && cfg.pruning {
+                let relaxed =
+                    mask_var_fold(&pool, shard_len, &mut masked, &mut var, sq_chunks.as_deref(), &st.visited, None);
+                var_fp = relaxed.0;
+                n_cand = relaxed.1;
+            }
+            if n_cand == 0 {
+                break;
+            }
+            let sigma_bar2 = var_from_fp(var_fp) / n_cand as f64;
+            let s_s2 = *sigma_s2.get_or_insert(sigma_bar2);
+
+            let f_best = st.f_best();
+            let lambda = match cfg.exploration {
+                Exploration::Constant(l) => l,
+                Exploration::ContextualVariance => {
+                    let improvement = (mu_s / f_best).max(1e-12);
+                    ((sigma_bar2 / improvement) / s_s2.max(1e-12)).max(0.0)
+                }
+            };
+            let f_best_z = (f_best - y_mean) / y_std;
+
+            let wanted = policy.wanted();
+            let suggestions: Vec<Option<usize>> = if wanted.is_empty() {
+                Vec::new()
+            } else if oneshot.is_none() {
+                let parts = inc.predict_scored(&y_z, &pool, &mut mu, &mut var, |start, mu_c, var_c| {
+                    score_chunk(&wanted, mu_c, var_c, &masked[start..start + mu_c.len()], start, f_best_z, lambda)
+                });
+                reduce_shard_argmins(&parts, wanted.len())
+            } else {
+                let parts = score_pass(&pool, shard_len, &wanted, &mu, &var, &masked, f_best_z, lambda);
+                reduce_shard_argmins(&parts, wanted.len())
+            };
+
+            let pick = policy.choose(&suggestions);
+            let idx = match pick {
+                Some(i) => i,
+                None => match st.random_unvisited(space) {
+                    Some(i) => i,
+                    None => break,
+                },
+            };
+            let value = st.evaluate(idx);
+            if value.is_none() {
+                newly_invalid.push(idx);
+            }
+            policy.observe(value, &st.obs_y);
+        }
+        st.trace
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bo::config::{Acq, AcqPolicyKind};
-    use crate::objective::TableObjective;
+    use crate::objective::{Eval, Objective, TableObjective};
     use crate::space::{Param, SearchSpace};
+    use crate::strategies::driver::{drive, FevalBudget};
+    use crate::strategies::Trace;
+    use crate::util::rng::Rng;
 
     /// A smooth 2D bowl over a 30×30 grid with a known minimum.
     fn bowl() -> TableObjective {
@@ -571,9 +933,10 @@ mod tests {
         assert_eq!(a, b, "one-shot backend must reproduce the incremental path");
     }
 
-    /// The PR's determinism criterion: the sharded hot path must
-    /// reproduce the serial single-tile (seed-equivalent) evaluation
-    /// sequence bit for bit, at every shard partition and thread count.
+    /// The PR-1 determinism criterion, now exercised through the ask/tell
+    /// driver: the sharded hot path must reproduce the serial single-tile
+    /// (seed-equivalent) evaluation sequence bit for bit, at every shard
+    /// partition and thread count.
     #[test]
     fn evaluation_sequence_identical_across_shards_and_threads() {
         let obj = bowl_with_invalid(); // exercises pruning + invalid paths too
@@ -608,5 +971,67 @@ mod tests {
         let t = run_bo(BoConfig::single(Acq::Poi), &obj, 21, 100);
         let curve = t.best_curve();
         assert!(curve[99] <= curve[20]);
+    }
+
+    /// Batch ask mode: each step proposes every distinct per-AF argmin
+    /// from the fused sweep — a real >1 batch under the `multi` policy.
+    #[test]
+    fn batch_ask_proposes_multiple_suggestions_per_step() {
+        use crate::strategies::driver::{Ask, DriveCtx, SearchDriver};
+        let obj = bowl();
+        let mut cfg = BoConfig::multi();
+        cfg.batch_ask = true;
+        let s = BoStrategy::new("multi-batch", cfg);
+        let mut d = s.driver(obj.space());
+        let budget = FevalBudget::new(80);
+        let mut rng = Rng::new(13);
+
+        // Hand-drive the loop so batch sizes are observable.
+        let mut trace = Trace::new();
+        let mut memo = crate::objective::evalcache::RunMemo::private();
+        let mut saw_multi = false;
+        let mut steps = 0;
+        while trace.len() < 80 && steps < 200 {
+            steps += 1;
+            let batch = {
+                let mut ctx = DriveCtx::probe(obj.space(), &mut rng, &trace, &memo, &budget);
+                match d.ask(&mut ctx) {
+                    Ask::Suggest(b) => b,
+                    Ask::Finished => break,
+                }
+            };
+            saw_multi |= batch.len() > 1;
+            for idx in batch {
+                if trace.len() >= 80 {
+                    break;
+                }
+                let eval = obj.evaluate(idx, &mut rng);
+                memo.record(idx, eval);
+                trace.push(idx, eval);
+                d.tell(crate::strategies::driver::Observation { idx, eval, cached: false });
+            }
+        }
+        assert!(saw_multi, "multi policy in batch mode must batch >1 suggestion");
+        // Batch mode still never re-evaluates and still optimizes.
+        let idxs: std::collections::HashSet<usize> = trace.records.iter().map(|(i, _)| *i).collect();
+        assert_eq!(idxs.len(), trace.len());
+        let global = obj.known_minimum().unwrap();
+        assert!(trace.best().unwrap().1 < global * 1.1);
+    }
+
+    /// Sequential (batch_ask=false) driver runs replay the legacy loop —
+    /// spot check here; the full zoo suite lives in strategies::legacy.
+    #[test]
+    fn driver_path_replays_legacy_engine() {
+        let obj = bowl_with_invalid();
+        for cfg in [BoConfig::single(Acq::Ei), BoConfig::multi(), BoConfig::advanced_multi()] {
+            let s = BoStrategy::new("bo", cfg);
+            let mut r1 = Rng::new(23);
+            let legacy = legacy_engine::run(&s, &obj, 70, &mut r1);
+            let mut r2 = Rng::new(23);
+            let mut d = s.driver(obj.space());
+            let new = drive(d.as_mut(), &obj, &FevalBudget::new(70), &mut r2);
+            assert_eq!(legacy.records, new.records, "{:?}", s.config.acq);
+        }
     }
 }

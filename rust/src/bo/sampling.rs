@@ -52,6 +52,24 @@ pub fn maximin_lhs_points(n: usize, dims: usize, k: usize, rng: &mut Rng) -> Vec
     best.unwrap().1
 }
 
+/// Nearest configuration (normalized coords) to one continuous point —
+/// the snap used by the continuous-relaxation strategies (PSO, DE).
+/// Linear scan: spaces are tens of thousands of points; candidate for
+/// k-d acceleration if snapping ever became a hot path.
+pub fn nearest_config(space: &SearchSpace, p: &[f64]) -> usize {
+    let dims = space.dims();
+    let pts = space.points();
+    let mut best = (0usize, f64::INFINITY);
+    for i in 0..space.len() {
+        let q = &pts[i * dims..(i + 1) * dims];
+        let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best.0
+}
+
 /// Snap continuous points to distinct configurations: for each point, the
 /// nearest configuration (normalized coords) not yet taken.
 pub fn snap_to_configs(points: &[f64], space: &SearchSpace, taken: &mut Vec<bool>) -> Vec<usize> {

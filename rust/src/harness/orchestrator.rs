@@ -439,6 +439,69 @@ pub fn orchestrate_comparison(
         .collect()
 }
 
+/// Step-level orchestration of one objective's comparison matrix: every
+/// (strategy, repeat) cell is an ask/tell
+/// [`StepSession`](crate::strategies::driver::StepSession) and all cells
+/// advance in lockstep, one drive-loop step per scheduling round — the
+/// finest interleaving the stepwise Strategy API allows (whole-run
+/// interleaving is [`orchestrate_comparison`]). Because each session owns
+/// its driver, budget, and RNG stream, the interleaving cannot perturb
+/// any cell's trace: outcomes are bit-identical to the whole-run path
+/// (asserted below), while a scheduler gains per-step control — progress
+/// reporting, fair sharing, and mid-cell checkpoint/resume via
+/// [`checkpoint`](crate::strategies::driver::StepSession::checkpoint) /
+/// [`resume`](crate::strategies::driver::StepSession::resume).
+pub fn orchestrate_comparison_stepwise(
+    obj: &Arc<TableObjective>,
+    obj_id: &str,
+    strategies: &[&str],
+    budget: usize,
+    repeat_scale: f64,
+    base_seed: u64,
+) -> Vec<StrategyOutcome> {
+    use crate::strategies::driver::{interleave, FevalBudget, StepSession};
+
+    let reps: Vec<usize> = strategies.iter().map(|s| repeats_for(s, repeat_scale)).collect();
+    let max_reps = reps.iter().copied().max().unwrap_or(0);
+    let objective: &dyn Objective = obj.as_ref();
+    // Every cell's driver is built (and held) up front — a BO cell owns
+    // its surrogate state for the whole interleave. Register
+    // full-machine harness workers so auto-threaded drivers size their
+    // nested shard pools to ~1 thread instead of each spawning a
+    // core-count pool (results are thread-count-independent either way).
+    let _nested = enter_harness_workers(crate::util::pool::default_threads());
+    let mut sessions: Vec<StepSession> = Vec::new();
+    let mut coords: Vec<usize> = Vec::new();
+    // Repeat-major, mirroring build_session_jobs' deterministic order.
+    for rep in 0..max_reps {
+        for (si, strategy) in strategies.iter().enumerate() {
+            if rep < reps[si] {
+                let s = by_name(strategy).unwrap_or_else(|| panic!("unknown strategy {strategy}"));
+                sessions.push(StepSession::new(
+                    s.driver(obj.space()),
+                    objective,
+                    Box::new(FevalBudget::new(budget)),
+                    cell_rng(base_seed, obj_id, strategy, rep),
+                ));
+                coords.push(si);
+            }
+        }
+    }
+    let traces = interleave(&mut sessions);
+
+    let global_min = obj.known_minimum().expect("table objective knows its minimum");
+    let fallback = fallback_value(obj);
+    let mut grouped: Vec<Vec<Vec<f64>>> = strategies.iter().map(|_| Vec::new()).collect();
+    for (si, trace) in coords.into_iter().zip(traces) {
+        grouped[si].push(trace.best_curve());
+    }
+    strategies
+        .iter()
+        .zip(&grouped)
+        .map(|(s, curves)| aggregate_outcome(s, curves, budget, global_min, fallback))
+        .collect()
+}
+
 /// Run the full (kernels × gpus × strategies × repeats) matrix: build the
 /// objectives, schedule every cell on one shared pool, persist/resume
 /// through `SWEEP_<tag>.jsonl`, and aggregate per (kernel, gpu) exactly as
@@ -723,6 +786,81 @@ mod tests {
             let reference = run_strategy(&obj, &oid, &o.name, 40, o.maes.len(), 5, 1);
             assert_eq!(o.mean_curve, reference.mean_curve, "{}", o.name);
             assert_eq!(o.maes, reference.maes, "{}", o.name);
+        }
+    }
+
+    #[test]
+    fn stepwise_interleaving_is_bit_identical_to_whole_run_cells() {
+        // Step-level interleaving (the finest the ask/tell API allows)
+        // must reproduce the whole-run reference path exactly — including
+        // a BO strategy whose driver holds GP/pool state across steps.
+        let dev = Device::a100();
+        let obj = objective_for("adding", &dev);
+        let oid = objective_id("adding", dev.name);
+        let strategies = ["random", "mls", "ei"];
+        let stepwise = orchestrate_comparison_stepwise(&obj, &oid, &strategies, 40, 0.03, 11);
+        for o in &stepwise {
+            let reference = run_strategy(&obj, &oid, &o.name, 40, o.maes.len(), 11, 1);
+            assert_eq!(o.mean_curve, reference.mean_curve, "{}", o.name);
+            assert_eq!(o.maes, reference.maes, "{}", o.name);
+            assert_eq!(o.finals, reference.finals, "{}", o.name);
+        }
+    }
+
+    #[test]
+    fn mid_cell_checkpoint_resume_is_bit_identical() {
+        // Interrupt a cell mid-run, snapshot its trace, rebuild the
+        // session from the snapshot, finish it — the final trace must be
+        // bit-identical to the uninterrupted run. Covers a batch driver
+        // (mls) and the stateful BO driver (ei).
+        use crate::strategies::driver::{FevalBudget, StepSession};
+        let dev = Device::a100();
+        let obj = objective_for("adding", &dev);
+        let oid = objective_id("adding", dev.name);
+        for strategy in ["mls", "ei"] {
+            let s = by_name(strategy).unwrap();
+            let budget = 45usize;
+            let make_rng = || cell_rng(7, &oid, strategy, 0);
+
+            let full = {
+                let mut sess = StepSession::new(
+                    s.driver(obj.space()),
+                    obj.as_ref() as &dyn Objective,
+                    Box::new(FevalBudget::new(budget)),
+                    make_rng(),
+                );
+                while sess.step() {}
+                sess.into_trace()
+            };
+
+            for interrupt_after in [9usize, 30] {
+                let mut first = StepSession::new(
+                    s.driver(obj.space()),
+                    obj.as_ref() as &dyn Objective,
+                    Box::new(FevalBudget::new(budget)),
+                    make_rng(),
+                );
+                for _ in 0..interrupt_after {
+                    if !first.step() {
+                        break;
+                    }
+                }
+                let ckpt = first.checkpoint();
+                assert!(ckpt.len() < full.len(), "{strategy}: interrupt landed past the end");
+                let mut resumed = StepSession::resume(
+                    s.driver(obj.space()),
+                    obj.as_ref() as &dyn Objective,
+                    Box::new(FevalBudget::new(budget)),
+                    make_rng(),
+                    ckpt,
+                );
+                while resumed.step() {}
+                assert_eq!(
+                    resumed.trace().records,
+                    full.records,
+                    "{strategy}: resume after {interrupt_after} steps diverged"
+                );
+            }
         }
     }
 

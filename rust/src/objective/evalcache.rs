@@ -90,6 +90,23 @@ impl EvalCache {
         self.shards[self.shard(key, idx)].lock().unwrap().insert((key, idx), eval);
     }
 
+    /// Statless lookup: used by [`RunMemo`] for in-run recalls, which are
+    /// unique-feval bookkeeping rather than cross-session cache traffic.
+    fn peek(&self, key: u64, idx: usize) -> Option<Eval> {
+        self.shards[self.shard(key, idx)].lock().unwrap().get(&(key, idx)).copied()
+    }
+
+    /// Insert only if absent, counting a miss only when actually
+    /// inserting (a [`RunMemo`] recording a value another session already
+    /// stored is neither a hit nor a miss).
+    fn put_if_absent(&self, key: u64, idx: usize, eval: Eval) {
+        let mut shard = self.shards[self.shard(key, idx)].lock().unwrap();
+        if let std::collections::hash_map::Entry::Vacant(slot) = shard.entry((key, idx)) {
+            slot.insert(eval);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Cached entries across all objectives.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
@@ -143,6 +160,129 @@ impl Objective for CachedObjective {
 
     fn known_minimum(&self) -> Option<f64> {
         self.inner.known_minimum()
+    }
+}
+
+/// Per-run memoization view over an [`EvalCache`]: the store every in-run
+/// cache (the ask/tell drive loop's memo, `CachedEvaluator`) delegates to,
+/// so in-run memoization and cross-session sweep caching share one keyed
+/// store instead of maintaining parallel private `HashMap`s.
+///
+/// Two layers of state with different scopes:
+///
+/// - **seen-set (run-local)** — which configurations *this run* has
+///   evaluated. Unique-feval budget semantics key off this: the first
+///   in-run touch of a configuration costs budget even when another
+///   session already stored its value.
+/// - **value store (shareable)** — a plain run-local map by default
+///   ([`RunMemo::private`], zero locking); a [`RunMemo::shared`] view
+///   over an [`EvalCache`] lets all sessions of one objective evaluate
+///   each configuration once per sweep. Sharing has the same soundness
+///   caveat as [`CachedObjective`]: a cross-session hit consumes no RNG,
+///   so it is only correct for objectives whose `evaluate` ignores its
+///   RNG.
+pub struct RunMemo {
+    store: MemoStore,
+}
+
+/// Backing storage of a [`RunMemo`]. The private variant is a plain
+/// run-local map (it doubles as the seen-set), so the common
+/// single-session case pays no sharding, locking, or stats traffic; only
+/// the shared variant touches an [`EvalCache`].
+enum MemoStore {
+    Private(HashMap<usize, Eval>),
+    Shared {
+        cache: Arc<EvalCache>,
+        key: u64,
+        /// Which configurations *this run* evaluated (budget semantics
+        /// are per run; the shared store spans runs).
+        seen: std::collections::HashSet<usize>,
+    },
+}
+
+impl RunMemo {
+    /// A fresh private store: in-run memoization only, exactly the
+    /// semantics of the old per-strategy `HashMap`.
+    pub fn private() -> RunMemo {
+        RunMemo { store: MemoStore::Private(HashMap::new()) }
+    }
+
+    /// A view over a store shared across sessions (see the type docs for
+    /// the RNG caveat). `objective_id` keys this run's entries.
+    pub fn shared(cache: Arc<EvalCache>, objective_id: &str) -> RunMemo {
+        let key = cache.key_for(objective_id);
+        RunMemo {
+            store: MemoStore::Shared { cache, key, seen: std::collections::HashSet::new() },
+        }
+    }
+
+    /// Has this run evaluated `idx`?
+    pub fn seen(&self, idx: usize) -> bool {
+        match &self.store {
+            MemoStore::Private(map) => map.contains_key(&idx),
+            MemoStore::Shared { seen, .. } => seen.contains(&idx),
+        }
+    }
+
+    /// Distinct configurations this run has evaluated.
+    pub fn n_seen(&self) -> usize {
+        match &self.store {
+            MemoStore::Private(map) => map.len(),
+            MemoStore::Shared { seen, .. } => seen.len(),
+        }
+    }
+
+    /// In-run revisit: the stored value if *this run* already evaluated
+    /// `idx` (a free lookup under unique-feval budget semantics).
+    pub fn recall(&self, idx: usize) -> Option<Eval> {
+        match &self.store {
+            MemoStore::Private(map) => map.get(&idx).copied(),
+            MemoStore::Shared { cache, key, seen } => {
+                if !seen.contains(&idx) {
+                    return None;
+                }
+                let e = cache.peek(*key, idx);
+                debug_assert!(e.is_some(), "seen-set and store out of sync for config {idx}");
+                e
+            }
+        }
+    }
+
+    /// First-touch lookup against the shared store: a hit means another
+    /// session already evaluated `idx`, so the objective need not run —
+    /// but the caller still owes budget and a trace record. Always
+    /// `None` for a private store or an in-run revisit (use
+    /// [`RunMemo::recall`] for those).
+    pub fn fetch_store(&self, idx: usize) -> Option<Eval> {
+        match &self.store {
+            MemoStore::Private(_) => None,
+            MemoStore::Shared { cache, key, seen } => {
+                if seen.contains(&idx) {
+                    return None;
+                }
+                cache.lookup(*key, idx)
+            }
+        }
+    }
+
+    /// Record an evaluation this run performed (or adopted from the
+    /// shared store).
+    pub fn record(&mut self, idx: usize, eval: Eval) {
+        match &mut self.store {
+            MemoStore::Private(map) => {
+                map.insert(idx, eval);
+            }
+            MemoStore::Shared { cache, key, seen } => {
+                seen.insert(idx);
+                cache.put_if_absent(*key, idx, eval);
+            }
+        }
+    }
+}
+
+impl Default for RunMemo {
+    fn default() -> RunMemo {
+        RunMemo::private()
     }
 }
 
@@ -219,5 +359,40 @@ mod tests {
         // races may re-evaluate (benign: the table is deterministic), so
         // only the lower bound is exact.
         assert!(misses >= 4, "misses {misses}");
+    }
+
+    #[test]
+    fn run_memo_tracks_in_run_seen_set() {
+        let mut m = RunMemo::private();
+        assert!(!m.seen(1) && m.n_seen() == 0);
+        assert_eq!(m.recall(1), None);
+        assert_eq!(m.fetch_store(1), None, "private store has no foreign entries");
+        m.record(1, Eval::Valid(2.5));
+        assert!(m.seen(1));
+        assert_eq!(m.n_seen(), 1);
+        assert_eq!(m.recall(1), Some(Eval::Valid(2.5)));
+        assert_eq!(m.fetch_store(1), None, "recall, not fetch_store, serves revisits");
+    }
+
+    #[test]
+    fn run_memo_shared_store_crosses_sessions_but_not_seen_sets() {
+        let cache = Arc::new(EvalCache::new());
+        let mut a = RunMemo::shared(Arc::clone(&cache), "obj");
+        let mut b = RunMemo::shared(Arc::clone(&cache), "obj");
+        a.record(3, Eval::CompileError);
+        // Session b has not seen 3 in-run, but the store hands it the
+        // value so the objective need not re-run.
+        assert!(!b.seen(3));
+        assert_eq!(b.recall(3), None);
+        assert_eq!(b.fetch_store(3), Some(Eval::CompileError));
+        b.record(3, Eval::CompileError);
+        assert!(b.seen(3));
+        // One store entry, not two; adopting a stored value is no miss.
+        assert_eq!(cache.len(), 1);
+        let (_, misses) = cache.stats();
+        assert_eq!(misses, 1);
+        // Different objective ids stay disjoint.
+        let c = RunMemo::shared(Arc::clone(&cache), "other");
+        assert_eq!(c.fetch_store(3), None);
     }
 }

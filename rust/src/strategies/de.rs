@@ -2,10 +2,17 @@
 //! space — another Kernel Tuner strategy for the extended comparison.
 //! Trial vectors are built in the continuous cube and snapped to the
 //! nearest restricted configuration; unique-evaluation budget semantics.
+//!
+//! Ask/tell port: the initial population's agents are all drawn before
+//! any evaluation (one batch ask), but each generation interleaves trial
+//! construction with evaluation (trial i+1's RNG draws come after trial
+//! i's result), so trials are single-suggestion asks to keep the RNG
+//! stream — and therefore the trace — bit-identical to the legacy loop.
 
-use crate::objective::Objective;
-use crate::strategies::{CachedEvaluator, Strategy, Trace};
-use crate::util::rng::Rng;
+use crate::bo::sampling::nearest_config as snap;
+use crate::space::SearchSpace;
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 
 pub struct DifferentialEvolution {
     pub pop_size: usize,
@@ -21,91 +28,154 @@ impl Default for DifferentialEvolution {
     }
 }
 
-fn snap(space: &crate::space::SearchSpace, p: &[f64]) -> usize {
-    let dims = space.dims();
-    let pts = space.points();
-    let mut best = (0usize, f64::INFINITY);
-    for i in 0..space.len() {
-        let q = &pts[i * dims..(i + 1) * dims];
-        let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
-        if d < best.1 {
-            best = (i, d);
-        }
-    }
-    best.0
-}
-
 impl Strategy for DifferentialEvolution {
     fn name(&self) -> String {
         "differential_evolution".into()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
-        let dims = space.dims();
-        let mut ev = CachedEvaluator::new(obj, max_fevals);
+    fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
+        Box::new(DeDriver {
+            pop_size: self.pop_size,
+            f: self.f,
+            cr: self.cr,
+            started: false,
+            in_init: true,
+            pop: Vec::new(),
+            fit: Vec::new(),
+            i: 0,
+            trial: Vec::new(),
+            improved: false,
+            stale: 0,
+            pending: None,
+        })
+    }
+}
 
-        // Population of continuous agents with their evaluated fitness.
-        let mut pop: Vec<Vec<f64>> =
-            (0..self.pop_size).map(|_| (0..dims).map(|_| rng.f64()).collect()).collect();
-        let mut fit: Vec<f64> = Vec::with_capacity(self.pop_size);
-        for agent in &pop {
-            let Some(e) = ev.eval(snap(space, agent), rng) else { break };
-            fit.push(e.value().unwrap_or(f64::INFINITY));
+pub struct DeDriver {
+    pop_size: usize,
+    f: f64,
+    cr: f64,
+    started: bool,
+    /// Telling back the initial-population batch (vs a generation trial).
+    in_init: bool,
+    /// Continuous agents.
+    pop: Vec<Vec<f64>>,
+    fit: Vec<f64>,
+    /// Current trial index within the generation.
+    i: usize,
+    /// The in-flight trial vector.
+    trial: Vec<f64>,
+    improved: bool,
+    stale: usize,
+    pending: Option<Observation>,
+}
+
+impl DeDriver {
+    /// Generation loop top: stop conditions, then the first trial.
+    fn begin_generation(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !ctx.budget_left() || ctx.n_seen() >= ctx.space.len() {
+            return Ask::Finished;
         }
-        fit.resize(self.pop_size, f64::INFINITY);
+        self.improved = false;
+        self.next_trial(ctx)
+    }
 
-        let mut stale = 0usize;
-        while ev.budget_left() && ev.n_seen() < space.len() {
-            let mut improved = false;
-            for i in 0..self.pop_size {
-                // Three distinct agents a, b, c ≠ i.
-                let mut picks = [0usize; 3];
-                for slot in 0..3 {
-                    loop {
-                        let c = rng.below(self.pop_size);
-                        if c != i && !picks[..slot].contains(&c) {
-                            picks[slot] = c;
-                            break;
-                        }
-                    }
-                }
-                let (a, b, c) = (picks[0], picks[1], picks[2]);
-                // Binomial crossover of the mutant v = a + F (b − c).
-                let jrand = rng.below(dims);
-                let mut trial = pop[i].clone();
-                for d in 0..dims {
-                    if d == jrand || rng.chance(self.cr) {
-                        trial[d] = (pop[a][d] + self.f * (pop[b][d] - pop[c][d])).clamp(0.0, 1.0);
-                    }
-                }
-                let before = ev.n_seen();
-                let Some(e) = ev.eval(snap(space, &trial), rng) else { return ev.into_trace() };
-                let tv = e.value().unwrap_or(f64::INFINITY);
-                if tv < fit[i] {
-                    pop[i] = trial;
-                    fit[i] = tv;
-                    improved = true;
-                }
-                if ev.n_seen() > before {
-                    stale = 0;
-                } else {
-                    stale += 1;
+    /// Build trial `self.i` (DE/rand/1/bin) and propose its snap.
+    fn next_trial(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let dims = ctx.space.dims();
+        let i = self.i;
+        // Three distinct agents a, b, c ≠ i.
+        let mut picks = [0usize; 3];
+        for slot in 0..3 {
+            loop {
+                let c = ctx.rng.below(self.pop_size);
+                if c != i && !picks[..slot].contains(&c) {
+                    picks[slot] = c;
+                    break;
                 }
             }
-            if !improved && stale > 2 * self.pop_size {
-                // Converged population re-proposing cached configs: restart
-                // the worst half to keep the search alive.
-                let mut order: Vec<usize> = (0..self.pop_size).collect();
-                order.sort_by(|&x, &y| fit[y].partial_cmp(&fit[x]).unwrap());
-                for &k in order.iter().take(self.pop_size / 2) {
-                    pop[k] = (0..dims).map(|_| rng.f64()).collect();
-                    fit[k] = f64::INFINITY;
-                }
-                stale = 0;
+        }
+        let (a, b, c) = (picks[0], picks[1], picks[2]);
+        // Binomial crossover of the mutant v = a + F (b − c).
+        let jrand = ctx.rng.below(dims);
+        let mut trial = self.pop[i].clone();
+        for d in 0..dims {
+            if d == jrand || ctx.rng.chance(self.cr) {
+                trial[d] =
+                    (self.pop[a][d] + self.f * (self.pop[b][d] - self.pop[c][d])).clamp(0.0, 1.0);
             }
         }
-        ev.into_trace()
+        let idx = snap(ctx.space, &trial);
+        self.trial = trial;
+        Ask::Suggest(vec![idx])
+    }
+}
+
+impl SearchDriver for DeDriver {
+    fn name(&self) -> String {
+        "differential_evolution".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let dims = ctx.space.dims();
+        if !self.started {
+            // Population of continuous agents, all drawn up front; their
+            // snapped indices form the initial batch.
+            self.started = true;
+            self.pop = (0..self.pop_size)
+                .map(|_| (0..dims).map(|_| ctx.rng.f64()).collect())
+                .collect();
+            let idxs: Vec<usize> = self.pop.iter().map(|a| snap(ctx.space, a)).collect();
+            return Ask::Suggest(idxs);
+        }
+        if self.in_init {
+            // Initial batch fully told back.
+            self.in_init = false;
+            self.fit.resize(self.pop_size, f64::INFINITY);
+            self.i = 0;
+            return self.begin_generation(ctx);
+        }
+        let Some(obs) = self.pending.take() else {
+            return Ask::Finished;
+        };
+        // Selection for trial i.
+        let tv = obs.eval.value().unwrap_or(f64::INFINITY);
+        if tv < self.fit[self.i] {
+            self.pop[self.i] = self.trial.clone();
+            self.fit[self.i] = tv;
+            self.improved = true;
+        }
+        if !obs.cached {
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+        }
+        self.i += 1;
+        if self.i < self.pop_size {
+            return self.next_trial(ctx);
+        }
+        // Generation done.
+        if !self.improved && self.stale > 2 * self.pop_size {
+            // Converged population re-proposing memoized configs: restart
+            // the worst half to keep the search alive.
+            let mut order: Vec<usize> = (0..self.pop_size).collect();
+            order.sort_by(|&x, &y| self.fit[y].partial_cmp(&self.fit[x]).unwrap());
+            for &k in order.iter().take(self.pop_size / 2) {
+                self.pop[k] = (0..dims).map(|_| ctx.rng.f64()).collect();
+                self.fit[k] = f64::INFINITY;
+            }
+            self.stale = 0;
+        }
+        self.i = 0;
+        self.begin_generation(ctx)
+    }
+
+    fn tell(&mut self, obs: Observation) {
+        if self.in_init {
+            self.fit.push(obs.eval.value().unwrap_or(f64::INFINITY));
+        } else {
+            self.pending = Some(obs);
+        }
     }
 }
 
@@ -113,7 +183,8 @@ impl Strategy for DifferentialEvolution {
 mod tests {
     use super::*;
     use crate::objective::{Eval, TableObjective};
-    use crate::space::{Param, SearchSpace};
+    use crate::space::Param;
+    use crate::util::rng::Rng;
 
     fn rastrigin_like() -> TableObjective {
         // Mildly multimodal 2D surface.

@@ -1,0 +1,920 @@
+//! Ask/tell stepwise search drivers — the control-flow inversion of the
+//! strategy layer.
+//!
+//! The paper's BO loop (§III) is inherently stepwise: propose a
+//! configuration, observe it, update the surrogate. The original
+//! `Strategy::run(obj, max_fevals, rng) -> Trace` interface hid that
+//! structure inside each strategy, so the harness could only interleave
+//! work at whole-run granularity and the budget policy was hard-wired to
+//! unique-evaluation counts. This module inverts the control flow:
+//!
+//! - a strategy implements [`SearchDriver`] — `ask` proposes one *or a
+//!   batch of* configurations, `tell` receives each observation;
+//! - the generic [`drive`] loop owns evaluation, in-run memoization,
+//!   budgeting, and the [`Trace`];
+//! - [`Budget`] is a pluggable stop policy (unique fevals, wall clock,
+//!   target value) owned by the loop, not the strategy — the axis that
+//!   arXiv:2210.01465 argues must live in the driver for fair
+//!   cross-strategy comparison;
+//! - [`StepSession`] exposes the same loop one step at a time, which is
+//!   what gives the orchestrator step-level interleaving and within-cell
+//!   checkpoint/resume (a checkpoint is just the trace so far; resume
+//!   replays it through a fresh driver).
+//!
+//! # The drive loop contract
+//!
+//! Per suggestion, in batch order:
+//!
+//! 1. `OUT_OF_SPACE` suggestions (constraint-blind emulations) are
+//!    recorded as `(OUT_OF_SPACE, CompileError)` and consume budget.
+//! 2. If the driver memoizes (the default), a configuration this run has
+//!    already evaluated is served from the memo: it is told back with
+//!    `cached: true`, costs no budget, and adds no trace record — the
+//!    paper's unique-feval semantics (revisits are free).
+//! 3. Otherwise the loop asks the budget for one fresh evaluation. If the
+//!    budget refuses, the run ends immediately (the exact analogue of the
+//!    legacy `CachedEvaluator::eval` returning `None`).
+//! 4. The objective is evaluated with the run's RNG, the result is
+//!    recorded and told back.
+//!
+//! Between batches the loop checks `Budget::proceed`; a driver returning
+//! [`Ask::Finished`] (or an empty batch) ends the run.
+//!
+//! # Determinism
+//!
+//! The loop threads one RNG through asks and evaluations in suggestion
+//! order, so a ported strategy that makes the same draws in the same
+//! places as its legacy loop replays a bit-identical trace — asserted for
+//! every registry strategy by the equivalence suite in
+//! `strategies::legacy`. Batch evaluation on a [`ShardPool`]
+//! (`DriveOpts::pool`) derives one child RNG stream per fresh suggestion
+//! from a snapshot of the main RNG, so the main stream is untouched:
+//! table-backed objectives (which ignore the evaluation RNG) produce the
+//! same trace with and without a pool, at every worker count.
+//!
+//! # Resume caveat
+//!
+//! Replaying a trace prefix serves recorded evaluations without calling
+//! the objective, so — like the cross-session
+//! [`EvalCache`](crate::objective::evalcache::EvalCache) — it is only
+//! sound for objectives whose `evaluate` ignores its RNG (tables,
+//! fixed-seed replays). An RNG-consuming objective would see a shifted
+//! noise stream after resume.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::objective::evalcache::RunMemo;
+use crate::objective::{Eval, Objective};
+use crate::space::SearchSpace;
+use crate::strategies::{Trace, OUT_OF_SPACE};
+use crate::util::pool::ShardPool;
+use crate::util::rng::Rng;
+
+/// What a driver proposes when asked.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Ask {
+    /// Evaluate these configurations, in order. A batch of one is the
+    /// classic sequential step; population/neighborhood strategies and
+    /// batch-mode BO return many. An empty batch is treated as
+    /// `Finished`.
+    Suggest(Vec<usize>),
+    /// The driver has nothing left to propose.
+    Finished,
+}
+
+/// One evaluation reported back to the driver.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Observation {
+    pub idx: usize,
+    pub eval: Eval,
+    /// Served from the in-run memo: no budget was spent and no trace
+    /// record was added (a revisit under unique-feval semantics).
+    pub cached: bool,
+}
+
+/// Read-only run context handed to `ask`: the space, the run RNG, and the
+/// budget/memo views the legacy loops used to read off `CachedEvaluator`.
+pub struct DriveCtx<'a> {
+    pub space: &'a SearchSpace,
+    pub rng: &'a mut Rng,
+    trace: &'a Trace,
+    memo: &'a RunMemo,
+    budget: &'a dyn Budget,
+}
+
+impl<'a> DriveCtx<'a> {
+    /// Assemble a context directly — for driver unit tests and custom
+    /// harnesses; production drivers receive contexts from the drive
+    /// loop.
+    #[doc(hidden)]
+    pub fn probe(
+        space: &'a SearchSpace,
+        rng: &'a mut Rng,
+        trace: &'a Trace,
+        memo: &'a RunMemo,
+        budget: &'a dyn Budget,
+    ) -> DriveCtx<'a> {
+        DriveCtx { space, rng, trace, memo, budget }
+    }
+}
+
+impl DriveCtx<'_> {
+    /// Has this run already evaluated `idx`?
+    pub fn seen(&self, idx: usize) -> bool {
+        self.memo.seen(idx)
+    }
+
+    /// Distinct configurations evaluated so far this run.
+    pub fn n_seen(&self) -> usize {
+        self.memo.n_seen()
+    }
+
+    /// Budget-consuming evaluations recorded so far (trace length).
+    pub fn fevals_used(&self) -> usize {
+        self.trace.len()
+    }
+
+    /// Would the budget pay for one more fresh evaluation right now?
+    pub fn budget_left(&self) -> bool {
+        self.budget.allows_eval(self.trace)
+    }
+
+    /// The unique-feval ceiling, when the budget policy has one;
+    /// strategies use it to size initial samples and batches.
+    pub fn max_fevals(&self) -> Option<usize> {
+        self.budget.max_fevals()
+    }
+
+    /// Best valid (index, value) observed so far.
+    pub fn best(&self) -> Option<(usize, f64)> {
+        self.trace.best()
+    }
+}
+
+/// A stepwise search strategy: proposes configurations, observes results.
+/// The driver never evaluates, budgets, or records anything itself.
+pub trait SearchDriver: Send {
+    fn name(&self) -> String;
+
+    /// In-run memoization policy. The default (`true`) gives the paper's
+    /// unique-feval semantics: revisits are served from the memo for
+    /// free. Constraint-blind framework emulations return `false` — their
+    /// duplicate proposals re-evaluate and waste budget, as in the real
+    /// packages (§IV-D).
+    fn memoize(&self) -> bool {
+        true
+    }
+
+    /// Propose the next configuration(s) to evaluate.
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask;
+
+    /// Receive one evaluation. Called once per suggestion, in batch
+    /// order, before the next `ask`. Must not need randomness — drivers
+    /// defer RNG-consuming reactions to the next `ask`.
+    fn tell(&mut self, obs: Observation);
+}
+
+/// A stop policy owned by the drive loop. Implementations must be cheap:
+/// `proceed` runs once per ask and `allows_eval` once per suggestion.
+pub trait Budget: Send {
+    /// May the loop keep asking the driver for work?
+    fn proceed(&self, trace: &Trace) -> bool;
+
+    /// May one more fresh (budget-consuming) evaluation be spent? The
+    /// run ends at the first refused fresh suggestion.
+    fn allows_eval(&self, trace: &Trace) -> bool {
+        self.proceed(trace)
+    }
+
+    /// Unique-evaluation ceiling, if this policy has one.
+    fn max_fevals(&self) -> Option<usize> {
+        None
+    }
+
+    /// Human-readable description for logs.
+    fn describe(&self) -> String;
+}
+
+/// The classic budget: at most `max_fevals` unique evaluations
+/// (§IV-A uses 220).
+#[derive(Clone, Copy, Debug)]
+pub struct FevalBudget {
+    pub max_fevals: usize,
+}
+
+impl FevalBudget {
+    pub fn new(max_fevals: usize) -> FevalBudget {
+        FevalBudget { max_fevals }
+    }
+}
+
+impl Budget for FevalBudget {
+    fn proceed(&self, trace: &Trace) -> bool {
+        trace.len() < self.max_fevals
+    }
+
+    fn max_fevals(&self) -> Option<usize> {
+        Some(self.max_fevals)
+    }
+
+    fn describe(&self) -> String {
+        format!("{} unique evaluations", self.max_fevals)
+    }
+}
+
+/// Time-to-solution budget: the run stops at a wall-clock deadline —
+/// the comparison axis arXiv:2210.01465 adds beyond raw feval counts.
+#[derive(Clone, Copy, Debug)]
+pub struct WallClockBudget {
+    deadline: Instant,
+}
+
+impl WallClockBudget {
+    pub fn until(deadline: Instant) -> WallClockBudget {
+        WallClockBudget { deadline }
+    }
+
+    pub fn for_duration(d: Duration) -> WallClockBudget {
+        WallClockBudget { deadline: Instant::now() + d }
+    }
+}
+
+impl Budget for WallClockBudget {
+    fn proceed(&self, _trace: &Trace) -> bool {
+        Instant::now() < self.deadline
+    }
+
+    fn describe(&self) -> String {
+        "wall-clock deadline".into()
+    }
+}
+
+/// Early stop once the best observed value reaches `target`, layered over
+/// an inner budget (typically [`FevalBudget`]) that still caps the run.
+/// `max_fevals` passes through, so strategies size batches as usual.
+pub struct TargetBudget {
+    target: f64,
+    inner: Box<dyn Budget>,
+}
+
+impl TargetBudget {
+    pub fn new(target: f64, inner: Box<dyn Budget>) -> TargetBudget {
+        TargetBudget { target, inner }
+    }
+
+    fn reached(&self, trace: &Trace) -> bool {
+        trace.best().map_or(false, |(_, v)| v <= self.target)
+    }
+}
+
+impl Budget for TargetBudget {
+    fn proceed(&self, trace: &Trace) -> bool {
+        self.inner.proceed(trace) && !self.reached(trace)
+    }
+
+    fn allows_eval(&self, trace: &Trace) -> bool {
+        self.inner.allows_eval(trace) && !self.reached(trace)
+    }
+
+    fn max_fevals(&self) -> Option<usize> {
+        self.inner.max_fevals()
+    }
+
+    fn describe(&self) -> String {
+        format!("target {} or {}", self.target, self.inner.describe())
+    }
+}
+
+/// Options for [`drive_with`].
+#[derive(Default)]
+pub struct DriveOpts<'p> {
+    /// Backing store for in-run memoization. `None` = a fresh private
+    /// store; pass a [`RunMemo::shared`] view to let sessions of one
+    /// objective share evaluations (same RNG caveat as the cross-session
+    /// eval cache).
+    pub memo: Option<RunMemo>,
+    /// Trace prefix to replay for within-cell resume (see module docs).
+    pub resume_from: Option<Trace>,
+    /// Evaluate the fresh suggestions of a multi-suggestion batch
+    /// concurrently on this pool (see module docs for RNG semantics).
+    pub pool: Option<&'p ShardPool>,
+}
+
+/// The engine behind [`drive`] and [`StepSession`]: owns the trace, the
+/// memo, the pending-suggestion queue, and the replay prefix.
+struct DriveCore<'a> {
+    obj: &'a dyn Objective,
+    space: &'a SearchSpace,
+    memoize: bool,
+    memo: RunMemo,
+    trace: Trace,
+    pending: VecDeque<usize>,
+    replay: VecDeque<(usize, Eval)>,
+    /// Batch evaluations prefetched on a pool, consumed by `deliver`.
+    prefetched: std::collections::HashMap<usize, Eval>,
+    done: bool,
+}
+
+impl<'a> DriveCore<'a> {
+    fn new(obj: &'a dyn Objective, memoize: bool, opts: DriveOpts<'_>) -> DriveCore<'a> {
+        let memo = opts.memo.unwrap_or_default();
+        let replay = opts
+            .resume_from
+            .map(|t| t.records.into_iter().collect())
+            .unwrap_or_default();
+        DriveCore {
+            obj,
+            space: obj.space(),
+            memoize,
+            memo,
+            trace: Trace::new(),
+            pending: VecDeque::new(),
+            replay,
+            prefetched: std::collections::HashMap::new(),
+            done: false,
+        }
+    }
+
+    /// Advance by one unit of work: deliver one pending suggestion, or
+    /// ask the driver for the next batch. Returns `false` once the run
+    /// is over.
+    fn step(
+        &mut self,
+        driver: &mut dyn SearchDriver,
+        budget: &dyn Budget,
+        rng: &mut Rng,
+        pool: Option<&ShardPool>,
+    ) -> bool {
+        if self.done {
+            return false;
+        }
+        if let Some(idx) = self.pending.pop_front() {
+            self.deliver(idx, driver, budget, rng);
+            return !self.done;
+        }
+        if !budget.proceed(&self.trace) {
+            self.done = true;
+            return false;
+        }
+        let ask = {
+            let mut ctx = DriveCtx {
+                space: self.space,
+                rng,
+                trace: &self.trace,
+                memo: &self.memo,
+                budget,
+            };
+            driver.ask(&mut ctx)
+        };
+        match ask {
+            Ask::Finished => {
+                self.done = true;
+                false
+            }
+            Ask::Suggest(batch) => {
+                if batch.is_empty() {
+                    self.done = true;
+                    return false;
+                }
+                if let Some(pool) = pool {
+                    if batch.len() > 1 && self.replay.is_empty() {
+                        self.prefetch(&batch, pool, budget, rng);
+                    }
+                }
+                self.pending.extend(batch);
+                true
+            }
+        }
+    }
+
+    /// Evaluate (or recall) one suggestion and tell the driver.
+    fn deliver(
+        &mut self,
+        idx: usize,
+        driver: &mut dyn SearchDriver,
+        budget: &dyn Budget,
+        rng: &mut Rng,
+    ) {
+        if idx == OUT_OF_SPACE {
+            // Constraint violation in a constraint-blind emulation: fails
+            // before producing a measurement but still costs budget.
+            if !budget.allows_eval(&self.trace) {
+                self.end_run();
+                return;
+            }
+            self.check_replay(idx);
+            self.trace.push(OUT_OF_SPACE, Eval::CompileError);
+            driver.tell(Observation { idx, eval: Eval::CompileError, cached: false });
+            return;
+        }
+        debug_assert!(idx < self.space.len(), "driver proposed index {idx} out of range");
+        if self.memoize {
+            if let Some(eval) = self.memo.recall(idx) {
+                driver.tell(Observation { idx, eval, cached: true });
+                return;
+            }
+        }
+        if !budget.allows_eval(&self.trace) {
+            // The legacy `CachedEvaluator::eval -> None` path: every
+            // strategy ended its run here, so the loop does too.
+            self.end_run();
+            return;
+        }
+        let eval = if let Some(recorded) = self.take_replay(idx) {
+            recorded
+        } else if let Some(e) = self.prefetched.remove(&idx) {
+            e
+        } else if let Some(e) = self.memo.fetch_store(idx) {
+            // Cross-session hit in a shared store: first in-run touch
+            // still costs budget and is recorded (unique-feval semantics
+            // are per run), but the objective is not re-executed.
+            e
+        } else {
+            self.obj.evaluate(idx, rng)
+        };
+        if self.memoize {
+            self.memo.record(idx, eval);
+        }
+        self.trace.push(idx, eval);
+        driver.tell(Observation { idx, eval, cached: false });
+    }
+
+    fn end_run(&mut self) {
+        self.done = true;
+        self.pending.clear();
+        self.prefetched.clear();
+    }
+
+    /// Pop the next replay record for a fresh evaluation of `idx`,
+    /// panicking if the recorded run diverges from this one.
+    fn take_replay(&mut self, idx: usize) -> Option<Eval> {
+        let (ridx, reval) = self.replay.pop_front()?;
+        assert_eq!(
+            ridx, idx,
+            "resume replay diverged: record holds config {ridx}, driver asked for {idx} \
+             (was the checkpoint taken under a different seed or strategy?)"
+        );
+        Some(reval)
+    }
+
+    fn check_replay(&mut self, idx: usize) {
+        let _ = self.take_replay(idx);
+    }
+
+    /// Concurrently evaluate the fresh, in-space, within-budget
+    /// suggestions of a batch. Each gets a child RNG stream derived from
+    /// a *snapshot* of the run RNG, so the main stream is untouched and
+    /// results are identical at every worker count.
+    ///
+    /// Only feval-bounded budgets prefetch: a policy that can stop the
+    /// run mid-batch for reasons other than the feval count (deadline,
+    /// target) must observe each fresh evaluation before paying for the
+    /// next, so those batches evaluate sequentially. (A `TargetBudget`
+    /// layered over a feval cap still prefetches — it may speculatively
+    /// evaluate past the target within one batch, bounded by the
+    /// remaining feval room.)
+    fn prefetch(&mut self, batch: &[usize], pool: &ShardPool, budget: &dyn Budget, rng: &Rng) {
+        let Some(max) = budget.max_fevals() else { return };
+        if !budget.allows_eval(&self.trace) {
+            return;
+        }
+        let mut room = max.saturating_sub(self.trace.len());
+        let mut to_eval: Vec<usize> = Vec::new();
+        for &idx in batch {
+            if room == 0 {
+                break;
+            }
+            if idx == OUT_OF_SPACE {
+                room -= 1;
+                continue;
+            }
+            let revisit = self.memoize && self.memo.seen(idx);
+            if revisit || to_eval.contains(&idx) {
+                continue;
+            }
+            room -= 1;
+            // A cross-session store hit costs budget but not an objective
+            // run — deliver() resolves it via fetch_store, not the pool.
+            if self.memoize && self.memo.fetch_store(idx).is_some() {
+                continue;
+            }
+            to_eval.push(idx);
+        }
+        if to_eval.len() < 2 {
+            return;
+        }
+        let mut seeder = rng.clone();
+        let mut rngs: Vec<Rng> = (0..to_eval.len()).map(|i| seeder.split(i as u64 + 1)).collect();
+        let mut results: Vec<Option<Eval>> = vec![None; to_eval.len()];
+        let obj = self.obj;
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = to_eval
+                .iter()
+                .zip(rngs.iter_mut())
+                .zip(results.iter_mut())
+                .map(|((&idx, r), slot)| {
+                    Box::new(move || {
+                        *slot = Some(obj.evaluate(idx, r));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        for (idx, e) in to_eval.into_iter().zip(results) {
+            self.prefetched.insert(idx, e.expect("prefetch job did not run"));
+        }
+    }
+}
+
+/// Run a driver to completion under a budget — the generic loop every
+/// `Strategy::run` shim delegates to.
+pub fn drive(
+    driver: &mut dyn SearchDriver,
+    obj: &dyn Objective,
+    budget: &dyn Budget,
+    rng: &mut Rng,
+) -> Trace {
+    drive_with(driver, obj, budget, rng, DriveOpts::default())
+}
+
+/// [`drive`] with explicit memo/resume/pool options.
+pub fn drive_with(
+    driver: &mut dyn SearchDriver,
+    obj: &dyn Objective,
+    budget: &dyn Budget,
+    rng: &mut Rng,
+    opts: DriveOpts<'_>,
+) -> Trace {
+    let pool = opts.pool;
+    let mut core = DriveCore::new(obj, driver.memoize(), opts);
+    while core.step(driver, budget, rng, pool) {}
+    core.trace
+}
+
+/// One tuning run held open between steps: the unit of step-level
+/// orchestration. The orchestrator advances many sessions in lockstep;
+/// `checkpoint` between steps snapshots the run (the trace is the whole
+/// externally visible state), and [`StepSession::resume`] rebuilds a
+/// session from such a snapshot by replaying it through a fresh driver.
+pub struct StepSession<'a> {
+    driver: Box<dyn SearchDriver>,
+    budget: Box<dyn Budget>,
+    rng: Rng,
+    core: DriveCore<'a>,
+}
+
+impl<'a> StepSession<'a> {
+    pub fn new(
+        driver: Box<dyn SearchDriver>,
+        obj: &'a dyn Objective,
+        budget: Box<dyn Budget>,
+        rng: Rng,
+    ) -> StepSession<'a> {
+        let memoize = driver.memoize();
+        StepSession { driver, budget, rng, core: DriveCore::new(obj, memoize, DriveOpts::default()) }
+    }
+
+    /// Rebuild a session from a checkpoint: `prefix` (a trace snapshot
+    /// taken between steps) is replayed through the fresh `driver`
+    /// without re-executing the objective, then the run continues live.
+    /// `rng` must be the same stream the original run started with.
+    pub fn resume(
+        driver: Box<dyn SearchDriver>,
+        obj: &'a dyn Objective,
+        budget: Box<dyn Budget>,
+        rng: Rng,
+        prefix: Trace,
+    ) -> StepSession<'a> {
+        let memoize = driver.memoize();
+        let opts = DriveOpts { resume_from: Some(prefix), ..DriveOpts::default() };
+        StepSession { driver, budget, rng, core: DriveCore::new(obj, memoize, opts) }
+    }
+
+    /// Advance one step (one delivery or one ask). Returns `false` once
+    /// the run is over.
+    pub fn step(&mut self) -> bool {
+        self.core.step(self.driver.as_mut(), self.budget.as_ref(), &mut self.rng, None)
+    }
+
+    /// Replayed records still pending (a resumed session reports `true`
+    /// until it has caught up to its checkpoint).
+    pub fn replaying(&self) -> bool {
+        !self.core.replay.is_empty()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.core.done
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.core.trace
+    }
+
+    /// Snapshot the run between steps. With any pending batch delivered,
+    /// the trace is sufficient state to resume from.
+    pub fn checkpoint(&self) -> Trace {
+        self.core.trace.clone()
+    }
+
+    /// True when a checkpoint taken now captures the full run state
+    /// (no partially delivered batch in flight).
+    pub fn at_step_boundary(&self) -> bool {
+        self.core.pending.is_empty()
+    }
+
+    pub fn into_trace(self) -> Trace {
+        self.core.trace
+    }
+
+    pub fn strategy_name(&self) -> String {
+        self.driver.name()
+    }
+}
+
+/// Round-robin a set of sessions to completion, one step each per
+/// scheduling round, and return their traces in input order. Sessions are
+/// fully independent (own driver, RNG, budget), so any interleaving —
+/// including this one — produces each session's serial trace bit for bit.
+pub fn interleave(sessions: &mut [StepSession]) -> Vec<Trace> {
+    loop {
+        let mut live = false;
+        for s in sessions.iter_mut() {
+            if !s.is_done() {
+                live |= s.step();
+            }
+        }
+        if !live {
+            break;
+        }
+    }
+    sessions.iter().map(|s| s.trace().clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::TableObjective;
+    use crate::space::{Param, SearchSpace};
+
+    fn ladder(n: usize) -> TableObjective {
+        let vals: Vec<i64> = (0..n as i64).collect();
+        let space = SearchSpace::build("ladder", vec![Param::ints("a", &vals)], &[]);
+        let table = (0..n).map(|i| Eval::Valid((n - i) as f64)).collect();
+        TableObjective::new(space, table)
+    }
+
+    /// Proposes 0, 1, 2, … one at a time, forever.
+    struct Counter {
+        next: usize,
+    }
+
+    impl SearchDriver for Counter {
+        fn name(&self) -> String {
+            "counter".into()
+        }
+
+        fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+            if self.next >= ctx.space.len() {
+                return Ask::Finished;
+            }
+            let i = self.next;
+            self.next += 1;
+            Ask::Suggest(vec![i])
+        }
+
+        fn tell(&mut self, _obs: Observation) {}
+    }
+
+    /// Proposes the whole space as one batch.
+    struct BatchAll {
+        asked: bool,
+    }
+
+    impl SearchDriver for BatchAll {
+        fn name(&self) -> String {
+            "batch-all".into()
+        }
+
+        fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+            if self.asked {
+                return Ask::Finished;
+            }
+            self.asked = true;
+            Ask::Suggest((0..ctx.space.len()).collect())
+        }
+
+        fn tell(&mut self, _obs: Observation) {}
+    }
+
+    #[test]
+    fn feval_budget_caps_fresh_evaluations() {
+        let obj = ladder(10);
+        let mut rng = Rng::new(1);
+        let t = drive(&mut Counter { next: 0 }, &obj, &FevalBudget::new(4), &mut rng);
+        assert_eq!(t.len(), 4);
+        let idxs: Vec<usize> = t.records.iter().map(|(i, _)| *i).collect();
+        assert_eq!(idxs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn revisits_are_served_from_the_memo_for_free() {
+        struct Revisiter {
+            step: usize,
+            cached_tells: usize,
+        }
+        impl SearchDriver for Revisiter {
+            fn name(&self) -> String {
+                "revisiter".into()
+            }
+            fn ask(&mut self, _ctx: &mut DriveCtx) -> Ask {
+                self.step += 1;
+                match self.step {
+                    1..=5 => Ask::Suggest(vec![self.step % 2]), // 1,0,1,0,1
+                    _ => Ask::Finished,
+                }
+            }
+            fn tell(&mut self, obs: Observation) {
+                if obs.cached {
+                    self.cached_tells += 1;
+                }
+            }
+        }
+        let obj = ladder(6);
+        let mut rng = Rng::new(2);
+        let mut d = Revisiter { step: 0, cached_tells: 0 };
+        let t = drive(&mut d, &obj, &FevalBudget::new(10), &mut rng);
+        assert_eq!(t.len(), 2, "only the two distinct configs cost budget");
+        assert_eq!(d.cached_tells, 3, "three revisits served from the memo");
+    }
+
+    #[test]
+    fn run_ends_at_first_unaffordable_fresh_suggestion_mid_batch() {
+        let obj = ladder(8);
+        let mut rng = Rng::new(3);
+        let t = drive(&mut BatchAll { asked: false }, &obj, &FevalBudget::new(3), &mut rng);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn target_budget_stops_early_and_mid_batch() {
+        // Ladder values are n-i: config 5 of ladder(8) has value 3.0.
+        let obj = ladder(8);
+        let budget = TargetBudget::new(3.0, Box::new(FevalBudget::new(8)));
+        let mut rng = Rng::new(4);
+        let t = drive(&mut BatchAll { asked: false }, &obj, &budget, &mut rng);
+        assert_eq!(t.len(), 6, "stops right after the target value appears");
+        assert_eq!(t.best().unwrap().1, 3.0);
+        assert_eq!(budget.max_fevals(), Some(8), "feval ceiling passes through");
+    }
+
+    #[test]
+    fn wall_clock_budget_expires() {
+        let obj = ladder(4);
+        let mut rng = Rng::new(5);
+        let past = WallClockBudget::until(Instant::now() - Duration::from_millis(1));
+        let t = drive(&mut Counter { next: 0 }, &obj, &past, &mut rng);
+        assert!(t.is_empty(), "expired deadline runs nothing");
+        let generous = WallClockBudget::for_duration(Duration::from_secs(60));
+        let t = drive(&mut Counter { next: 0 }, &obj, &generous, &mut rng);
+        assert_eq!(t.len(), 4, "generous deadline lets the driver finish");
+        assert!(generous.max_fevals().is_none());
+    }
+
+    #[test]
+    fn out_of_space_suggestions_cost_budget() {
+        struct Blind {
+            step: usize,
+        }
+        impl SearchDriver for Blind {
+            fn name(&self) -> String {
+                "blind".into()
+            }
+            fn memoize(&self) -> bool {
+                false
+            }
+            fn ask(&mut self, _ctx: &mut DriveCtx) -> Ask {
+                self.step += 1;
+                match self.step {
+                    1 => Ask::Suggest(vec![OUT_OF_SPACE]),
+                    2 => Ask::Suggest(vec![0, 0]), // duplicates re-evaluate
+                    _ => Ask::Finished,
+                }
+            }
+            fn tell(&mut self, _obs: Observation) {}
+        }
+        let obj = ladder(4);
+        let mut rng = Rng::new(6);
+        let t = drive(&mut Blind { step: 0 }, &obj, &FevalBudget::new(10), &mut rng);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.records[0], (OUT_OF_SPACE, Eval::CompileError));
+        assert_eq!(t.records[1].0, 0);
+        assert_eq!(t.records[2].0, 0, "memoize=false duplicates consume budget");
+    }
+
+    #[test]
+    fn batch_prefetch_on_a_pool_matches_sequential() {
+        let obj = ladder(16);
+        let reference = {
+            let mut rng = Rng::new(7);
+            drive(&mut BatchAll { asked: false }, &obj, &FevalBudget::new(12), &mut rng)
+        };
+        for threads in [1, 2, 4] {
+            let pool = ShardPool::new(threads);
+            let mut rng = Rng::new(7);
+            let opts = DriveOpts { pool: Some(&pool), ..DriveOpts::default() };
+            let t = drive_with(
+                &mut BatchAll { asked: false },
+                &obj,
+                &FevalBudget::new(12),
+                &mut rng,
+                opts,
+            );
+            assert_eq!(t.records, reference.records, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn step_session_checkpoint_resume_is_bit_identical() {
+        let obj = ladder(12);
+        let budget = || Box::new(FevalBudget::new(9)) as Box<dyn Budget>;
+        let full = {
+            let mut s = StepSession::new(Box::new(Counter { next: 0 }), &obj, budget(), Rng::new(8));
+            while s.step() {}
+            s.into_trace()
+        };
+        // Interrupt after a few steps, checkpoint, resume from scratch.
+        let mut first = StepSession::new(Box::new(Counter { next: 0 }), &obj, budget(), Rng::new(8));
+        for _ in 0..7 {
+            first.step();
+        }
+        assert!(first.at_step_boundary() || !first.trace().is_empty());
+        let ckpt = first.checkpoint();
+        assert!(!ckpt.is_empty() && ckpt.len() < full.len(), "mid-run checkpoint");
+        let mut resumed =
+            StepSession::resume(Box::new(Counter { next: 0 }), &obj, budget(), Rng::new(8), ckpt);
+        assert!(resumed.replaying());
+        while resumed.step() {}
+        assert!(!resumed.replaying());
+        assert_eq!(resumed.trace().records, full.records);
+    }
+
+    #[test]
+    fn interleaved_sessions_match_serial_runs() {
+        let obj = ladder(20);
+        let serial: Vec<Trace> = (0..3)
+            .map(|k| {
+                let mut rng = Rng::new(100 + k);
+                drive(&mut Counter { next: k as usize }, &obj, &FevalBudget::new(6), &mut rng)
+            })
+            .collect();
+        let mut sessions: Vec<StepSession> = (0..3)
+            .map(|k| {
+                StepSession::new(
+                    Box::new(Counter { next: k as usize }),
+                    &obj,
+                    Box::new(FevalBudget::new(6)),
+                    Rng::new(100 + k),
+                )
+            })
+            .collect();
+        let traces = interleave(&mut sessions);
+        for (a, b) in traces.iter().zip(&serial) {
+            assert_eq!(a.records, b.records);
+        }
+    }
+
+    #[test]
+    fn empty_suggestion_ends_the_run() {
+        struct Empty;
+        impl SearchDriver for Empty {
+            fn name(&self) -> String {
+                "empty".into()
+            }
+            fn ask(&mut self, _ctx: &mut DriveCtx) -> Ask {
+                Ask::Suggest(Vec::new())
+            }
+            fn tell(&mut self, _obs: Observation) {}
+        }
+        let obj = ladder(3);
+        let mut rng = Rng::new(9);
+        let t = drive(&mut Empty, &obj, &FevalBudget::new(5), &mut rng);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "resume replay diverged")]
+    fn divergent_resume_is_refused() {
+        let obj = ladder(6);
+        let mut prefix = Trace::new();
+        prefix.push(5, Eval::Valid(1.0)); // Counter would ask 0 first
+        let mut s = StepSession::resume(
+            Box::new(Counter { next: 0 }),
+            &obj,
+            Box::new(FevalBudget::new(4)),
+            Rng::new(10),
+            prefix,
+        );
+        while s.step() {}
+    }
+}

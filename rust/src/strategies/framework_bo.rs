@@ -15,13 +15,20 @@
 //! value (distorting the surrogate — §III-D2 explains why that hurts), and
 //! snapping can re-propose already-evaluated configurations (duplicates
 //! also waste budget).
+//!
+//! Ask/tell port: the driver opts out of memoization
+//! (`memoize() == false`) so duplicate proposals re-evaluate and consume
+//! budget, and proposes `OUT_OF_SPACE` for restriction violations — the
+//! drive loop records those as failed evaluations, exactly like the
+//! legacy `register` closure did.
 
 use crate::bo::acquisition::score;
 use crate::bo::config::Acq;
 use crate::gp::{CovFn, Gpr};
-use crate::objective::{Eval, Objective};
+use crate::objective::Eval;
 use crate::space::{Config, SearchSpace};
-use crate::strategies::{Strategy, Trace, OUT_OF_SPACE};
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::{Strategy, OUT_OF_SPACE};
 use crate::util::linalg::{mean, std_dev};
 use crate::util::rng::Rng;
 
@@ -48,136 +55,187 @@ impl FrameworkBo {
     }
 
     /// Random configuration of the *unrestricted* Cartesian product.
-    fn random_cartesian(space: &SearchSpace, rng: &mut Rng) -> Config {
+    pub(crate) fn random_cartesian(space: &SearchSpace, rng: &mut Rng) -> Config {
         space.params.iter().map(|p| rng.below(p.len()) as u16).collect()
     }
 
     /// Normalized coordinates of a Cartesian config.
-    fn coords(space: &SearchSpace, cfg: &Config) -> Vec<f64> {
+    pub(crate) fn coords(space: &SearchSpace, cfg: &Config) -> Vec<f64> {
         cfg.iter().zip(&space.params).map(|(&vi, p)| p.norm(vi as usize)).collect()
+    }
+
+    fn strategy_name(framework: Framework) -> String {
+        match framework {
+            Framework::BayesianOptimization => "bayesianoptimization".into(),
+            Framework::ScikitOptimize => "scikit-optimize".into(),
+        }
     }
 }
 
 impl Strategy for FrameworkBo {
     fn name(&self) -> String {
-        match self.framework {
-            Framework::BayesianOptimization => "bayesianoptimization".into(),
-            Framework::ScikitOptimize => "scikit-optimize".into(),
+        Self::strategy_name(self.framework)
+    }
+
+    fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
+        Box::new(FrameworkBoDriver {
+            framework: self.framework,
+            init_samples: self.init_samples,
+            acq_candidates: self.acq_candidates,
+            started: false,
+            init_left: 0,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            worst_valid: 1.0,
+            gains: [0.0; 3],
+            hedge_eta: 1.0,
+            pending_coords: Vec::new(),
+        })
+    }
+}
+
+pub struct FrameworkBoDriver {
+    framework: Framework,
+    init_samples: usize,
+    acq_candidates: usize,
+    started: bool,
+    /// Initial random-design proposals still to make.
+    init_left: usize,
+    /// Observation store: coordinates + (possibly penalized) values.
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+    worst_valid: f64,
+    gains: [f64; 3],
+    hedge_eta: f64,
+    /// Coordinates of the in-flight proposal (registered at tell time,
+    /// whether or not it landed inside the restricted space).
+    pending_coords: Vec<f64>,
+}
+
+impl FrameworkBoDriver {
+    /// Propose `cfg`: its in-space index, or `OUT_OF_SPACE` when the
+    /// restriction-blind draw violates the space.
+    fn propose(&mut self, space: &SearchSpace, cfg: &Config) -> Ask {
+        self.pending_coords = FrameworkBo::coords(space, cfg);
+        match space.index_of(cfg) {
+            Some(idx) => Ask::Suggest(vec![idx]),
+            None => Ask::Suggest(vec![OUT_OF_SPACE]),
         }
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
+    /// One surrogate-guided iteration.
+    fn step(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !ctx.budget_left() {
+            return Ask::Finished;
+        }
+        let space = ctx.space;
         let dims = space.dims();
-        let mut trace = Trace::new();
-        // Observation store: coordinates + (possibly penalized) values.
-        let mut xs: Vec<f64> = Vec::new();
-        let mut ys: Vec<f64> = Vec::new();
-        let mut worst_valid = 1.0f64;
+        // z-score observations (both packages normalize y).
+        let y_mean = mean(&self.ys);
+        let y_std = {
+            let s = std_dev(&self.ys);
+            if s > 1e-12 {
+                s
+            } else {
+                1.0
+            }
+        };
+        let yz: Vec<f64> = self.ys.iter().map(|v| (v - y_mean) / y_std).collect();
+        let f_best = yz.iter().cloned().fold(f64::INFINITY, f64::min);
 
-        let register = |cfg: &Config,
-                            trace: &mut Trace,
-                            xs: &mut Vec<f64>,
-                            ys: &mut Vec<f64>,
-                            worst_valid: &mut f64,
-                            rng: &mut Rng| {
-            let coords = Self::coords(space, cfg);
-            let y = match space.index_of(cfg) {
-                Some(idx) => {
-                    let e = obj.evaluate(idx, rng);
-                    trace.push(idx, e);
-                    match e {
-                        Eval::Valid(v) => {
-                            *worst_valid = worst_valid.max(v);
-                            v
-                        }
-                        // The packages have no invalid concept: users
-                        // register a penalty observation.
-                        _ => *worst_valid,
-                    }
-                }
-                None => {
-                    // Restriction violation: the attempt fails before
-                    // producing a measurement but still costs an evaluation.
-                    trace.push(OUT_OF_SPACE, Eval::CompileError);
-                    *worst_valid
-                }
-            };
-            xs.extend_from_slice(&coords);
-            ys.push(y);
+        let cov = CovFn::Matern52 { lengthscale: 1.0 };
+        let Ok(gp) = Gpr::fit(cov, 1e-6, &self.xs, dims, &yz) else {
+            return Ask::Finished;
         };
 
-        // Initial random design over the Cartesian product.
-        for _ in 0..self.init_samples.min(max_fevals) {
-            let cfg = Self::random_cartesian(space, rng);
-            register(&cfg, &mut trace, &mut xs, &mut ys, &mut worst_valid, rng);
+        // Candidate pool from the Cartesian product (the continuous
+        // optimizer explores the box; snapping happens at evaluation).
+        let cands: Vec<Config> =
+            (0..self.acq_candidates).map(|_| FrameworkBo::random_cartesian(space, ctx.rng)).collect();
+        let coords: Vec<f64> = cands.iter().flat_map(|c| FrameworkBo::coords(space, c)).collect();
+        let (mu, var) = gp.predict(&coords);
+
+        let argmin_for = |acq: Acq, lambda: f64| -> usize {
+            let mut best = (0usize, f64::INFINITY);
+            for i in 0..cands.len() {
+                let s = score(acq, mu[i], var[i], f_best, lambda);
+                if s < best.1 {
+                    best = (i, s);
+                }
+            }
+            best.0
+        };
+
+        let chosen = match self.framework {
+            Framework::BayesianOptimization => argmin_for(Acq::Lcb, 2.576),
+            Framework::ScikitOptimize => {
+                // GP-Hedge: propose with each AF, draw by softmax(η·g).
+                let props =
+                    [argmin_for(Acq::Ei, 0.01), argmin_for(Acq::Poi, 0.01), argmin_for(Acq::Lcb, 1.96)];
+                let mx = self.gains.iter().cloned().fold(f64::MIN, f64::max);
+                let ws: Vec<f64> =
+                    self.gains.iter().map(|g| ((g - mx) * self.hedge_eta).exp()).collect();
+                let total: f64 = ws.iter().sum();
+                let mut ticket = ctx.rng.f64() * total;
+                let mut pick = 2;
+                for (i, w) in ws.iter().enumerate() {
+                    if ticket < *w {
+                        pick = i;
+                        break;
+                    }
+                    ticket -= w;
+                }
+                // Hedge reward: negative posterior mean at each proposal.
+                for i in 0..3 {
+                    self.gains[i] += -mu[props[i]];
+                }
+                props[pick]
+            }
+        };
+        let cfg = cands[chosen].clone();
+        self.propose(space, &cfg)
+    }
+}
+
+impl SearchDriver for FrameworkBoDriver {
+    fn name(&self) -> String {
+        FrameworkBo::strategy_name(self.framework)
+    }
+
+    /// The real packages do not dedupe: snapped duplicates re-evaluate
+    /// and consume budget.
+    fn memoize(&self) -> bool {
+        false
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !self.started {
+            // Initial random design over the Cartesian product.
+            self.started = true;
+            self.init_left = self.init_samples.min(ctx.max_fevals().unwrap_or(self.init_samples));
         }
-
-        // GP-Hedge state.
-        let mut gains = [0.0f64; 3];
-        let hedge_eta = 1.0;
-
-        while trace.len() < max_fevals {
-            // z-score observations (both packages normalize y).
-            let y_mean = mean(&ys);
-            let y_std = {
-                let s = std_dev(&ys);
-                if s > 1e-12 {
-                    s
-                } else {
-                    1.0
-                }
-            };
-            let yz: Vec<f64> = ys.iter().map(|v| (v - y_mean) / y_std).collect();
-            let f_best = yz.iter().cloned().fold(f64::INFINITY, f64::min);
-
-            let cov = CovFn::Matern52 { lengthscale: 1.0 };
-            let Ok(gp) = Gpr::fit(cov, 1e-6, &xs, dims, &yz) else { break };
-
-            // Candidate pool from the Cartesian product (the continuous
-            // optimizer explores the box; snapping happens at evaluation).
-            let cands: Vec<Config> = (0..self.acq_candidates).map(|_| Self::random_cartesian(space, rng)).collect();
-            let coords: Vec<f64> = cands.iter().flat_map(|c| Self::coords(space, c)).collect();
-            let (mu, var) = gp.predict(&coords);
-
-            let argmin_for = |acq: Acq, lambda: f64| -> usize {
-                let mut best = (0usize, f64::INFINITY);
-                for i in 0..cands.len() {
-                    let s = score(acq, mu[i], var[i], f_best, lambda);
-                    if s < best.1 {
-                        best = (i, s);
-                    }
-                }
-                best.0
-            };
-
-            let chosen = match self.framework {
-                Framework::BayesianOptimization => argmin_for(Acq::Lcb, 2.576),
-                Framework::ScikitOptimize => {
-                    // GP-Hedge: propose with each AF, draw by softmax(η·g).
-                    let props = [argmin_for(Acq::Ei, 0.01), argmin_for(Acq::Poi, 0.01), argmin_for(Acq::Lcb, 1.96)];
-                    let mx = gains.iter().cloned().fold(f64::MIN, f64::max);
-                    let ws: Vec<f64> = gains.iter().map(|g| ((g - mx) * hedge_eta).exp()).collect();
-                    let total: f64 = ws.iter().sum();
-                    let mut ticket = rng.f64() * total;
-                    let mut pick = 2;
-                    for (i, w) in ws.iter().enumerate() {
-                        if ticket < *w {
-                            pick = i;
-                            break;
-                        }
-                        ticket -= w;
-                    }
-                    // Hedge reward: negative posterior mean at each proposal.
-                    for i in 0..3 {
-                        gains[i] += -mu[props[i]];
-                    }
-                    props[pick]
-                }
-            };
-            register(&cands[chosen], &mut trace, &mut xs, &mut ys, &mut worst_valid, rng);
+        if self.init_left > 0 {
+            self.init_left -= 1;
+            let cfg = FrameworkBo::random_cartesian(ctx.space, ctx.rng);
+            return self.propose(ctx.space, &cfg);
         }
-        trace
+        self.step(ctx)
+    }
+
+    fn tell(&mut self, obs: Observation) {
+        // The legacy `register` closure: valid values observed as-is,
+        // invalid and out-of-space attempts as the worst-valid penalty
+        // (the packages have no invalid concept; users register a
+        // penalty observation).
+        let y = match obs.eval {
+            Eval::Valid(v) => {
+                self.worst_valid = self.worst_valid.max(v);
+                v
+            }
+            _ => self.worst_valid,
+        };
+        self.xs.extend_from_slice(&self.pending_coords);
+        self.ys.push(y);
     }
 }
 
@@ -186,6 +244,7 @@ mod tests {
     use super::*;
     use crate::objective::TableObjective;
     use crate::space::{Param, Restriction};
+    use crate::util::rng::Rng;
 
     fn restricted_obj() -> TableObjective {
         // Heavy restriction: only x+y ≤ 10 survives → many proposals land

@@ -3,10 +3,16 @@
 //! Offspring violating the space restrictions are repaired by mutation or
 //! replaced by random configurations; invalid (compile/runtime) members
 //! get infinite fitness but their evaluation costs budget.
+//!
+//! Ask/tell port: a generation is built entirely (selection, crossover,
+//! mutation, legalization — all the RNG work) before any member is
+//! evaluated, exactly as the legacy loop did — so each generation is one
+//! batch `ask`, with `tell` filling the fitness vector in member order.
 
-use crate::objective::{Eval, Objective};
+use crate::objective::Eval;
 use crate::space::{Config, SearchSpace};
-use crate::strategies::{CachedEvaluator, Strategy, Trace};
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 use crate::util::rng::Rng;
 
 pub struct GeneticAlgorithm {
@@ -21,13 +27,13 @@ impl Default for GeneticAlgorithm {
 }
 
 impl GeneticAlgorithm {
-    fn random_config(space: &SearchSpace, rng: &mut Rng) -> usize {
+    pub(crate) fn random_config(space: &SearchSpace, rng: &mut Rng) -> usize {
         rng.below(space.len())
     }
 
     /// Two-point crossover in parameter space; returns the child's value
     /// indices (may violate restrictions).
-    fn crossover(a: &Config, b: &Config, rng: &mut Rng) -> Config {
+    pub(crate) fn crossover(a: &Config, b: &Config, rng: &mut Rng) -> Config {
         let d = a.len();
         if d < 2 {
             return a.clone();
@@ -42,7 +48,7 @@ impl GeneticAlgorithm {
         child
     }
 
-    fn mutate(space: &SearchSpace, cfg: &mut Config, rate: f64, rng: &mut Rng) {
+    pub(crate) fn mutate(space: &SearchSpace, cfg: &mut Config, rate: f64, rng: &mut Rng) {
         for (d, v) in cfg.iter_mut().enumerate() {
             if rng.chance(rate) {
                 *v = rng.below(space.params[d].len()) as u16;
@@ -52,7 +58,7 @@ impl GeneticAlgorithm {
 
     /// Map a (possibly restriction-violating) genome to a space index:
     /// try as-is, then a few mutation repairs, then give up to random.
-    fn legalize(space: &SearchSpace, mut cfg: Config, rng: &mut Rng) -> usize {
+    pub(crate) fn legalize(space: &SearchSpace, mut cfg: Config, rng: &mut Rng) -> usize {
         for _ in 0..10 {
             if let Some(idx) = space.index_of(&cfg) {
                 return idx;
@@ -68,73 +74,96 @@ impl Strategy for GeneticAlgorithm {
         "genetic_algorithm".into()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
-        let mut ev = CachedEvaluator::new(obj, max_fevals);
+    fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
+        Box::new(GaDriver {
+            pop_size: self.pop_size,
+            mutation_rate: self.mutation_rate,
+            started: false,
+            pop: Vec::new(),
+            fitness: Vec::new(),
+        })
+    }
+}
 
-        // Initial population.
-        let mut pop: Vec<usize> = (0..self.pop_size).map(|_| Self::random_config(space, rng)).collect();
-        let mut fitness: Vec<f64> = Vec::with_capacity(pop.len());
-        for &idx in &pop {
-            match ev.eval(idx, rng) {
-                Some(Eval::Valid(v)) => fitness.push(v),
-                Some(_) => fitness.push(f64::INFINITY),
-                None => break,
-            }
+pub struct GaDriver {
+    pop_size: usize,
+    mutation_rate: f64,
+    started: bool,
+    pop: Vec<usize>,
+    fitness: Vec<f64>,
+}
+
+impl SearchDriver for GaDriver {
+    fn name(&self) -> String {
+        "genetic_algorithm".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let space = ctx.space;
+        let n = space.len();
+        if !self.started {
+            // Initial population: all draws up front, then one batch.
+            self.started = true;
+            self.pop =
+                (0..self.pop_size).map(|_| GeneticAlgorithm::random_config(space, ctx.rng)).collect();
+            self.fitness.clear();
+            return Ask::Suggest(self.pop.clone());
         }
-        fitness.resize(pop.len(), f64::INFINITY);
+        // The previous generation's batch has been told back in order.
+        self.fitness.resize(self.pop.len(), f64::INFINITY);
 
-        while ev.budget_left() && ev.n_seen() < space.len() {
-            // Rank-weighted parent selection (lower objective = fitter).
-            let mut order: Vec<usize> = (0..pop.len()).collect();
-            order.sort_by(|&a, &b| fitness[a].partial_cmp(&fitness[b]).unwrap());
-            let pick_parent = |rng: &mut Rng| -> usize {
-                // Linear rank weights: rank 0 (best) weight n, rank n−1 weight 1.
-                let n = order.len();
-                let total = n * (n + 1) / 2;
-                let mut ticket = rng.below(total);
-                for (rank, &i) in order.iter().enumerate() {
-                    let w = n - rank;
-                    if ticket < w {
-                        return pop[i];
-                    }
-                    ticket -= w;
-                }
-                pop[order[0]]
-            };
-
-            // Next generation (elitism: keep the best).
-            let elite = pop[order[0]];
-            let mut next: Vec<usize> = vec![elite];
-            while next.len() < self.pop_size {
-                let pa = space.config(pick_parent(rng)).clone();
-                let pb = space.config(pick_parent(rng)).clone();
-                let mut child = Self::crossover(&pa, &pb, rng);
-                Self::mutate(space, &mut child, self.mutation_rate, rng);
-                next.push(Self::legalize(space, child, rng));
-            }
-            pop = next;
-            fitness.clear();
-            for &idx in &pop {
-                match ev.eval(idx, rng) {
-                    Some(Eval::Valid(v)) => fitness.push(v),
-                    Some(_) => fitness.push(f64::INFINITY),
-                    None => {
-                        fitness.resize(pop.len(), f64::INFINITY);
-                        return ev.into_trace();
-                    }
-                }
-            }
+        if !ctx.budget_left() || ctx.n_seen() >= n {
+            return Ask::Finished;
         }
-        ev.into_trace()
+
+        // Rank-weighted parent selection (lower objective = fitter).
+        let mut order: Vec<usize> = (0..self.pop.len()).collect();
+        order.sort_by(|&a, &b| self.fitness[a].partial_cmp(&self.fitness[b]).unwrap());
+        let pop = &self.pop;
+        let pick_parent = |rng: &mut Rng| -> usize {
+            // Linear rank weights: rank 0 (best) weight n, rank n−1 weight 1.
+            let n = order.len();
+            let total = n * (n + 1) / 2;
+            let mut ticket = rng.below(total);
+            for (rank, &i) in order.iter().enumerate() {
+                let w = n - rank;
+                if ticket < w {
+                    return pop[i];
+                }
+                ticket -= w;
+            }
+            pop[order[0]]
+        };
+
+        // Next generation (elitism: keep the best).
+        let elite = pop[order[0]];
+        let mut next: Vec<usize> = vec![elite];
+        while next.len() < self.pop_size {
+            let pa = space.config(pick_parent(ctx.rng)).clone();
+            let pb = space.config(pick_parent(ctx.rng)).clone();
+            let mut child = GeneticAlgorithm::crossover(&pa, &pb, ctx.rng);
+            GeneticAlgorithm::mutate(space, &mut child, self.mutation_rate, ctx.rng);
+            next.push(GeneticAlgorithm::legalize(space, child, ctx.rng));
+        }
+        self.pop = next;
+        self.fitness.clear();
+        Ask::Suggest(self.pop.clone())
+    }
+
+    fn tell(&mut self, obs: Observation) {
+        match obs.eval {
+            Eval::Valid(v) => self.fitness.push(v),
+            _ => self.fitness.push(f64::INFINITY),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::objective::TableObjective;
+    use crate::objective::{Objective, TableObjective};
     use crate::space::{Param, Restriction};
+    use crate::util::rng::Rng;
 
     fn constrained_bowl() -> TableObjective {
         let vals: Vec<i64> = (0..16).collect();

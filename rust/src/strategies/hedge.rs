@@ -6,15 +6,22 @@
 //! in-house strategy (unlike `framework_bo`, this one *is*
 //! constraint-aware and shares the paper's discrete representation), so
 //! the ablation can isolate the portfolio mechanism itself.
+//!
+//! Ask/tell port: hedge is the natural *meta*-driver — every `ask`
+//! optimizes each portfolio arm and softmax-draws the proposer, and the
+//! matching `tell` routes the observation back into every arm's gain
+//! (each arm is rewarded by the posterior mean at *its own* proposal,
+//! captured at ask time). The LHS initial design is one batch ask.
 
 use crate::bo::acquisition::argmin_score;
 use crate::bo::config::Acq;
 use crate::bo::sampling::{maximin_lhs_points, random_untaken, snap_to_configs};
 use crate::gp::{CovFn, IncrementalGp};
-use crate::objective::{Eval, Objective};
-use crate::strategies::{Strategy, Trace};
+use crate::objective::Eval;
+use crate::space::SearchSpace;
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 use crate::util::linalg::{mean, std_dev};
-use crate::util::rng::Rng;
 
 pub struct GpHedge {
     pub cov: CovFn,
@@ -42,117 +49,190 @@ impl Strategy for GpHedge {
         "gp_hedge".into()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
+    fn driver(&self, space: &SearchSpace) -> Box<dyn SearchDriver> {
         let m = space.len();
-        let dims = space.dims();
-        let mut trace = Trace::new();
-        let mut visited = vec![false; m];
-        let mut obs_idx: Vec<usize> = Vec::new();
-        let mut obs_y: Vec<f64> = Vec::new();
+        Box::new(GpHedgeDriver {
+            cov: self.cov,
+            noise: self.noise,
+            init_samples: self.init_samples,
+            eta: self.eta,
+            started: false,
+            phase: HedgePhase::InitBatch,
+            init_n: 0,
+            visited: vec![false; m],
+            obs_idx: Vec::new(),
+            obs_y: Vec::new(),
+            gp: None,
+            fed: 0,
+            gains: [0.0; 3],
+            mu: vec![0.0; m],
+            var: vec![0.0; m],
+            masked: vec![false; m],
+            arm_proposals: [None; 3],
+        })
+    }
+}
 
-        // Maximin-LHS initial sample with random replacement (same §III-E
-        // protocol as the paper's BO, for a like-for-like portfolio test).
-        let init_n = self.init_samples.min(max_fevals).min(m);
-        let pts = maximin_lhs_points(init_n, dims, 16, rng);
-        let mut taken = visited.clone();
-        for idx in snap_to_configs(&pts, space, &mut taken) {
-            if trace.len() >= max_fevals {
+enum HedgePhase {
+    /// Telling back the LHS initial batch.
+    InitBatch,
+    /// Telling back a random top-up draw.
+    TopUp,
+    /// Telling back a portfolio-chosen evaluation.
+    Step,
+}
+
+pub struct GpHedgeDriver {
+    cov: CovFn,
+    noise: f64,
+    init_samples: usize,
+    eta: f64,
+    started: bool,
+    phase: HedgePhase,
+    init_n: usize,
+    visited: Vec<bool>,
+    obs_idx: Vec<usize>,
+    obs_y: Vec<f64>,
+    gp: Option<IncrementalGp>,
+    fed: usize,
+    gains: [f64; 3],
+    mu: Vec<f64>,
+    var: Vec<f64>,
+    masked: Vec<bool>,
+    /// Each arm's proposal and its posterior mean, captured at ask time
+    /// so `tell` can route the hedge reward to every arm.
+    arm_proposals: [Option<(usize, f64)>; 3],
+}
+
+impl GpHedgeDriver {
+    /// Replace invalid/missing initial draws with random samples until
+    /// the initial sample is complete (or budget/space is exhausted).
+    fn top_up(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if self.obs_y.len() < self.init_n && ctx.budget_left() {
+            let mut taken = self.visited.clone();
+            if let Some(idx) = random_untaken(ctx.space, &mut taken, ctx.rng) {
+                self.phase = HedgePhase::TopUp;
+                return Ask::Suggest(vec![idx]);
+            }
+            // Space exhausted: fall through to the main loop checks.
+        }
+        if self.obs_y.is_empty() {
+            return Ask::Finished;
+        }
+        self.step(ctx)
+    }
+
+    /// One main-loop iteration: fit, optimize every portfolio member,
+    /// softmax-draw the proposer.
+    fn step(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !ctx.budget_left() {
+            return Ask::Finished;
+        }
+        let space = ctx.space;
+        let m = space.len();
+        if self.gp.is_none() {
+            self.gp =
+                Some(IncrementalGp::new(self.cov, self.noise, space.points().to_vec(), space.dims()));
+        }
+        let gp = self.gp.as_mut().expect("just initialized");
+        while self.fed < self.obs_idx.len() {
+            gp.add(space.point(self.obs_idx[self.fed]));
+            self.fed += 1;
+        }
+        let y_mean = mean(&self.obs_y);
+        let y_std = std_dev(&self.obs_y).max(1e-12);
+        let y_z: Vec<f64> = self.obs_y.iter().map(|v| (v - y_mean) / y_std).collect();
+        gp.predict_into(&y_z, &mut self.mu, &mut self.var);
+        for i in 0..m {
+            self.masked[i] = self.visited[i];
+        }
+        let f_best = self.obs_y.iter().cloned().fold(f64::INFINITY, f64::min);
+        let f_best_z = (f_best - y_mean) / y_std;
+
+        // The defining GP-Hedge cost: optimize EVERY portfolio member at
+        // every iteration.
+        let props: Vec<Option<usize>> = PORTFOLIO
+            .iter()
+            .map(|&a| argmin_score(a, &self.mu, &self.var, f_best_z, 0.01, &self.masked))
+            .collect();
+        if props.iter().all(Option::is_none) {
+            return Ask::Finished;
+        }
+        // Softmax draw over gains.
+        let mx = self.gains.iter().cloned().fold(f64::MIN, f64::max);
+        let ws: Vec<f64> = self.gains.iter().map(|g| ((g - mx) * self.eta).exp()).collect();
+        let total: f64 = ws.iter().sum();
+        let mut ticket = ctx.rng.f64() * total;
+        let mut pick = 2;
+        for (i, w) in ws.iter().enumerate() {
+            if ticket < *w {
+                pick = i;
                 break;
             }
-            let e = obj.evaluate(idx, rng);
-            trace.push(idx, e);
-            visited[idx] = true;
-            if let Eval::Valid(v) = e {
-                obs_idx.push(idx);
-                obs_y.push(v);
-            }
+            ticket -= w;
         }
-        while obs_y.len() < init_n && trace.len() < max_fevals {
-            let mut taken = visited.clone();
-            let Some(idx) = random_untaken(space, &mut taken, rng) else { break };
-            let e = obj.evaluate(idx, rng);
-            trace.push(idx, e);
-            visited[idx] = true;
-            if let Eval::Valid(v) = e {
-                obs_idx.push(idx);
-                obs_y.push(v);
-            }
+        let idx = props[pick].or_else(|| props.iter().flatten().next().copied()).unwrap();
+        for (slot, p) in self.arm_proposals.iter_mut().zip(&props) {
+            *slot = p.map(|pi| (pi, self.mu[pi]));
         }
-        if obs_y.is_empty() {
-            return trace;
+        self.phase = HedgePhase::Step;
+        Ask::Suggest(vec![idx])
+    }
+}
+
+impl SearchDriver for GpHedgeDriver {
+    fn name(&self) -> String {
+        "gp_hedge".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !self.started {
+            // Maximin-LHS initial sample with random replacement (same
+            // §III-E protocol as the paper's BO, for a like-for-like
+            // portfolio test).
+            self.started = true;
+            let space = ctx.space;
+            let m = space.len();
+            self.init_n = self.init_samples.min(ctx.max_fevals().unwrap_or(m)).min(m);
+            let pts = maximin_lhs_points(self.init_n, space.dims(), 16, ctx.rng);
+            let mut taken = self.visited.clone();
+            let idxs = snap_to_configs(&pts, space, &mut taken);
+            self.phase = HedgePhase::InitBatch;
+            if idxs.is_empty() {
+                return self.top_up(ctx);
+            }
+            return Ask::Suggest(idxs);
         }
+        match self.phase {
+            HedgePhase::InitBatch | HedgePhase::TopUp => self.top_up(ctx),
+            HedgePhase::Step => self.step(ctx),
+        }
+    }
 
-        let mut gp = IncrementalGp::new(self.cov, self.noise, space.points().to_vec(), dims);
-        let mut fed = 0usize;
-        let mut gains = [0.0f64; 3];
-        let mut mu = vec![0.0; m];
-        let mut var = vec![0.0; m];
-        let mut masked = vec![false; m];
-
-        while trace.len() < max_fevals {
-            while fed < obs_idx.len() {
-                gp.add(space.point(obs_idx[fed]));
-                fed += 1;
-            }
-            let y_mean = mean(&obs_y);
-            let y_std = std_dev(&obs_y).max(1e-12);
-            let y_z: Vec<f64> = obs_y.iter().map(|v| (v - y_mean) / y_std).collect();
-            gp.predict_into(&y_z, &mut mu, &mut var);
-            for i in 0..m {
-                masked[i] = visited[i];
-            }
-            let f_best = obs_y.iter().cloned().fold(f64::INFINITY, f64::min);
-            let f_best_z = (f_best - y_mean) / y_std;
-
-            // The defining GP-Hedge cost: optimize EVERY portfolio member
-            // at every iteration.
-            let props: Vec<Option<usize>> = PORTFOLIO
-                .iter()
-                .map(|&a| argmin_score(a, &mu, &var, f_best_z, 0.01, &masked))
-                .collect();
-            if props.iter().all(Option::is_none) {
-                break;
-            }
-            // Softmax draw over gains.
-            let mx = gains.iter().cloned().fold(f64::MIN, f64::max);
-            let ws: Vec<f64> = gains.iter().map(|g| ((g - mx) * self.eta).exp()).collect();
-            let total: f64 = ws.iter().sum();
-            let mut ticket = rng.f64() * total;
-            let mut pick = 2;
-            for (i, w) in ws.iter().enumerate() {
-                if ticket < *w {
-                    pick = i;
-                    break;
-                }
-                ticket -= w;
-            }
-            let idx = props[pick].or_else(|| props.iter().flatten().next().copied()).unwrap();
-
-            let e = obj.evaluate(idx, rng);
-            trace.push(idx, e);
-            visited[idx] = true;
-            if let Eval::Valid(v) = e {
-                obs_idx.push(idx);
-                obs_y.push(v);
-            }
-            // Reward update: each member's proposal judged by the current
-            // posterior mean (negated — we minimize).
-            for (i, p) in props.iter().enumerate() {
-                if let Some(pi) = p {
-                    gains[i] += -mu[*pi];
+    fn tell(&mut self, obs: Observation) {
+        self.visited[obs.idx] = true;
+        if let Eval::Valid(v) = obs.eval {
+            self.obs_idx.push(obs.idx);
+            self.obs_y.push(v);
+        }
+        if let HedgePhase::Step = self.phase {
+            // Reward update: each arm judged by the current posterior
+            // mean at its own proposal (negated — we minimize).
+            for (gain, p) in self.gains.iter_mut().zip(&self.arm_proposals) {
+                if let Some((_, mu_pi)) = p {
+                    *gain += -mu_pi;
                 }
             }
         }
-        trace
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::objective::TableObjective;
-    use crate::space::{Param, SearchSpace};
+    use crate::objective::{Objective, TableObjective};
+    use crate::space::Param;
+    use crate::util::rng::Rng;
 
     fn bowl() -> TableObjective {
         let vals: Vec<i64> = (0..25).collect();

@@ -1,10 +1,16 @@
 //! Iterated Local Search: hill-climb to a local optimum, then *perturb*
 //! the incumbent (random multi-parameter kick) instead of restarting from
 //! scratch — Kernel Tuner's ILS strategy, part of the extended comparison.
+//!
+//! Ask/tell port: like MLS, each best-improvement descent iteration
+//! proposes its whole (unshuffled) Hamming neighborhood as one batch; the
+//! start draw and each kick are single-suggestion asks. RNG draws happen
+//! in exactly the legacy order, so traces replay bit-identically.
 
-use crate::objective::{Eval, Objective};
-use crate::space::{neighbors, Neighborhood};
-use crate::strategies::{CachedEvaluator, Strategy, Trace};
+use crate::objective::Eval;
+use crate::space::{neighbors, Neighborhood, SearchSpace};
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 use crate::util::rng::Rng;
 
 pub struct IteratedLocalSearch {
@@ -18,24 +24,29 @@ impl Default for IteratedLocalSearch {
     }
 }
 
-impl IteratedLocalSearch {
-    /// Kick: re-randomize `kick_strength` parameters of the incumbent,
-    /// legalized against the restricted space by retry.
-    fn kick(&self, space: &crate::space::SearchSpace, cur: usize, rng: &mut Rng) -> usize {
-        let dims = space.dims();
-        for _ in 0..20 {
-            let mut cfg = space.config(cur).clone();
-            for _ in 0..self.kick_strength.min(dims) {
-                let d = rng.below(dims);
-                cfg[d] = rng.below(space.params[d].len()) as u16;
-            }
-            if let Some(idx) = space.index_of(&cfg) {
-                if idx != cur {
-                    return idx;
-                }
+/// Kick: re-randomize `strength` parameters of the incumbent, legalized
+/// against the restricted space by retry.
+pub(crate) fn kick(space: &SearchSpace, cur: usize, strength: usize, rng: &mut Rng) -> usize {
+    let dims = space.dims();
+    for _ in 0..20 {
+        let mut cfg = space.config(cur).clone();
+        for _ in 0..strength.min(dims) {
+            let d = rng.below(dims);
+            cfg[d] = rng.below(space.params[d].len()) as u16;
+        }
+        if let Some(idx) = space.index_of(&cfg) {
+            if idx != cur {
+                return idx;
             }
         }
-        rng.below(space.len())
+    }
+    rng.below(space.len())
+}
+
+impl IteratedLocalSearch {
+    /// Kick from `cur` (kept for API compatibility and direct tests).
+    pub fn kick(&self, space: &SearchSpace, cur: usize, rng: &mut Rng) -> usize {
+        kick(space, cur, self.kick_strength, rng)
     }
 }
 
@@ -44,82 +55,162 @@ impl Strategy for IteratedLocalSearch {
         "ils".into()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
-        let mut ev = CachedEvaluator::new(obj, max_fevals);
+    fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
+        Box::new(IlsDriver {
+            kick_strength: self.kick_strength,
+            started: false,
+            phase: IlsPhase::StartAsked,
+            attempts: 0,
+            cur: 0,
+            cur_val: f64::INFINITY,
+            home: 0,
+            home_val: f64::INFINITY,
+            best: None,
+            pending: None,
+        })
+    }
+}
 
-        // Valid starting point.
-        let mut cur = rng.below(space.len());
-        let mut cur_val;
-        let mut attempts = 0;
-        loop {
-            attempts += 1;
-            if attempts > 4 * space.len() {
-                return ev.into_trace();
-            }
-            match ev.eval(cur, rng) {
-                Some(Eval::Valid(v)) => {
-                    cur_val = v;
-                    break;
-                }
-                Some(_) => cur = rng.below(space.len()),
-                None => return ev.into_trace(),
-            }
+enum IlsPhase {
+    StartAsked,
+    /// Awaiting a full descent-neighborhood batch.
+    ClimbAsked,
+    KickAsked,
+}
+
+pub struct IlsDriver {
+    kick_strength: usize,
+    started: bool,
+    phase: IlsPhase,
+    attempts: usize,
+    cur: usize,
+    cur_val: f64,
+    /// Best local optimum so far.
+    home: usize,
+    home_val: f64,
+    best: Option<(usize, f64)>,
+    pending: Option<Observation>,
+}
+
+impl IlsDriver {
+    /// The `'outer` loop top: stop conditions, then a descent iteration.
+    fn outer_top(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !ctx.budget_left() || ctx.n_seen() >= ctx.space.len() {
+            return Ask::Finished;
         }
-        let mut home = cur; // best local optimum so far
-        let mut home_val = cur_val;
+        self.descend(ctx)
+    }
 
-        'outer: while ev.budget_left() && ev.n_seen() < space.len() {
-            // Best-improvement descent.
-            loop {
-                let mut best: Option<(usize, f64)> = None;
-                for nb in neighbors(space, cur, Neighborhood::Hamming) {
-                    match ev.eval(nb, rng) {
-                        Some(Eval::Valid(v)) if v < cur_val => {
-                            if best.map_or(true, |(_, b)| v < b) {
-                                best = Some((nb, v));
-                            }
+    /// One best-improvement descent iteration over the Hamming
+    /// neighborhood, proposed as a batch.
+    fn descend(&mut self, ctx: &mut DriveCtx) -> Ask {
+        self.best = None;
+        let ns = neighbors(ctx.space, self.cur, Neighborhood::Hamming);
+        if ns.is_empty() {
+            return self.accept_and_kick(ctx);
+        }
+        self.phase = IlsPhase::ClimbAsked;
+        Ask::Suggest(ns)
+    }
+
+    /// Descent done: keep the better basin as home, then kick from it.
+    fn accept_and_kick(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if self.cur_val <= self.home_val {
+            self.home = self.cur;
+            self.home_val = self.cur_val;
+        }
+        let kicked = kick(ctx.space, self.home, self.kick_strength, ctx.rng);
+        self.phase = IlsPhase::KickAsked;
+        Ask::Suggest(vec![kicked])
+    }
+}
+
+impl SearchDriver for IlsDriver {
+    fn name(&self) -> String {
+        "ils".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let n = ctx.space.len();
+        if !self.started {
+            // Valid starting point.
+            self.started = true;
+            self.cur = ctx.rng.below(n);
+            self.attempts = 1;
+            if self.attempts > 4 * n {
+                return Ask::Finished;
+            }
+            self.phase = IlsPhase::StartAsked;
+            return Ask::Suggest(vec![self.cur]);
+        }
+        match self.phase {
+            IlsPhase::StartAsked => {
+                let Some(obs) = self.pending.take() else {
+                    return Ask::Finished;
+                };
+                match obs.eval {
+                    Eval::Valid(v) => {
+                        self.cur_val = v;
+                        self.home = self.cur;
+                        self.home_val = v;
+                        self.outer_top(ctx)
+                    }
+                    _ => {
+                        self.cur = ctx.rng.below(n);
+                        self.attempts += 1;
+                        if self.attempts > 4 * n {
+                            return Ask::Finished;
                         }
-                        Some(_) => {}
-                        None => break 'outer,
+                        Ask::Suggest(vec![self.cur])
                     }
                 }
-                match best {
-                    Some((nb, v)) => {
-                        cur = nb;
-                        cur_val = v;
+            }
+            IlsPhase::ClimbAsked => match self.best.take() {
+                Some((nb, v)) => {
+                    self.cur = nb;
+                    self.cur_val = v;
+                    self.descend(ctx)
+                }
+                None => self.accept_and_kick(ctx),
+            },
+            IlsPhase::KickAsked => {
+                let Some(obs) = self.pending.take() else {
+                    return Ask::Finished;
+                };
+                match obs.eval {
+                    Eval::Valid(v) => {
+                        self.cur = obs.idx;
+                        self.cur_val = v;
                     }
-                    None => break,
+                    _ => {
+                        self.cur = self.home;
+                        self.cur_val = self.home_val;
+                    }
                 }
-            }
-            // Acceptance: keep the better basin as home.
-            if cur_val <= home_val {
-                home = cur;
-                home_val = cur_val;
-            }
-            // Kick from home.
-            let kicked = self.kick(space, home, rng);
-            match ev.eval(kicked, rng) {
-                Some(Eval::Valid(v)) => {
-                    cur = kicked;
-                    cur_val = v;
-                }
-                Some(_) => {
-                    cur = home;
-                    cur_val = home_val;
-                }
-                None => break,
+                self.outer_top(ctx)
             }
         }
-        ev.into_trace()
+    }
+
+    fn tell(&mut self, obs: Observation) {
+        match self.phase {
+            IlsPhase::StartAsked | IlsPhase::KickAsked => self.pending = Some(obs),
+            IlsPhase::ClimbAsked => {
+                if let Eval::Valid(v) = obs.eval {
+                    if v < self.cur_val && self.best.map_or(true, |(_, b)| v < b) {
+                        self.best = Some((obs.idx, v));
+                    }
+                }
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::objective::TableObjective;
-    use crate::space::{Param, SearchSpace};
+    use crate::objective::{Objective, TableObjective};
+    use crate::space::Param;
 
     fn two_basin() -> TableObjective {
         let vals: Vec<i64> = (0..20).collect();

@@ -2,11 +2,18 @@
 //! hill climbing over Hamming neighborhoods; on a local optimum, restart
 //! from a fresh random configuration. Invalid neighbors are skipped (but
 //! their unique evaluation costs budget, as on a real tuner).
+//!
+//! Ask/tell port: best-improvement climbing evaluates the *whole*
+//! shuffled neighborhood before moving, and the legacy loop made no RNG
+//! draw between those evaluations — so each climb iteration becomes one
+//! batch `ask`, and `tell` accumulates the best improving neighbor. The
+//! batch shape lets the drive loop evaluate a neighborhood in parallel
+//! without changing the trace.
 
-use crate::objective::{Eval, Objective};
-use crate::space::{neighbors, Neighborhood};
-use crate::strategies::{CachedEvaluator, Strategy, Trace};
-use crate::util::rng::Rng;
+use crate::objective::Eval;
+use crate::space::{neighbors, Neighborhood, SearchSpace};
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 
 #[derive(Default)]
 pub struct MultiStartLocalSearch;
@@ -16,58 +23,122 @@ impl Strategy for MultiStartLocalSearch {
         "mls".into()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
-        let mut ev = CachedEvaluator::new(obj, max_fevals);
+    fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
+        Box::new(MlsDriver {
+            started: false,
+            phase: MlsPhase::StartAsked,
+            attempts: 0,
+            cur: 0,
+            cur_val: f64::INFINITY,
+            best: None,
+            pending: None,
+        })
+    }
+}
 
-        'restarts: while ev.budget_left() && ev.n_seen() < space.len() {
-            // Random (valid) start; bail out if the space appears to hold
-            // no (remaining) valid configuration.
-            let mut cur;
-            let mut cur_val;
-            let mut attempts = 0usize;
-            loop {
-                attempts += 1;
-                if attempts > 4 * space.len() {
-                    break 'restarts;
-                }
-                let start = rng.below(space.len());
-                match ev.eval(start, rng) {
-                    Some(Eval::Valid(v)) => {
-                        cur = start;
-                        cur_val = v;
-                        break;
+enum MlsPhase {
+    /// Awaiting a candidate starting point.
+    StartAsked,
+    /// Awaiting a full neighborhood batch.
+    ClimbAsked,
+}
+
+pub struct MlsDriver {
+    started: bool,
+    phase: MlsPhase,
+    attempts: usize,
+    cur: usize,
+    cur_val: f64,
+    /// Best improving neighbor of the in-flight climb batch.
+    best: Option<(usize, f64)>,
+    pending: Option<Observation>,
+}
+
+impl MlsDriver {
+    /// The `'restarts` loop top: stop conditions, then a fresh start.
+    fn restart(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !ctx.budget_left() || ctx.n_seen() >= ctx.space.len() {
+            return Ask::Finished;
+        }
+        self.attempts = 0;
+        self.next_start(ctx)
+    }
+
+    fn next_start(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let n = ctx.space.len();
+        self.attempts += 1;
+        if self.attempts > 4 * n {
+            return Ask::Finished;
+        }
+        let start = ctx.rng.below(n);
+        self.phase = MlsPhase::StartAsked;
+        Ask::Suggest(vec![start])
+    }
+
+    /// One best-improvement climb iteration: propose the whole shuffled
+    /// Hamming neighborhood as a batch.
+    fn climb(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let mut ns = neighbors(ctx.space, self.cur, Neighborhood::Hamming);
+        ctx.rng.shuffle(&mut ns);
+        self.best = None;
+        if ns.is_empty() {
+            // No neighbors ⇒ immediate local optimum ⇒ restart.
+            return self.restart(ctx);
+        }
+        self.phase = MlsPhase::ClimbAsked;
+        Ask::Suggest(ns)
+    }
+}
+
+impl SearchDriver for MlsDriver {
+    fn name(&self) -> String {
+        "mls".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !self.started {
+            self.started = true;
+            return self.restart(ctx);
+        }
+        match self.phase {
+            MlsPhase::StartAsked => {
+                let Some(obs) = self.pending.take() else {
+                    return Ask::Finished;
+                };
+                match obs.eval {
+                    Eval::Valid(v) => {
+                        self.cur = obs.idx;
+                        self.cur_val = v;
+                        self.climb(ctx)
                     }
-                    Some(_) => continue,
-                    None => break 'restarts,
+                    _ => self.next_start(ctx),
                 }
             }
-            // Best-improvement hill climbing.
-            loop {
-                let mut best: Option<(usize, f64)> = None;
-                let mut ns = neighbors(space, cur, Neighborhood::Hamming);
-                rng.shuffle(&mut ns);
-                for nb in ns {
-                    match ev.eval(nb, rng) {
-                        Some(Eval::Valid(v)) if v < cur_val => {
-                            if best.map_or(true, |(_, b)| v < b) {
-                                best = Some((nb, v));
-                            }
-                        }
-                        Some(_) => {}
-                        None => break 'restarts,
-                    }
-                }
-                match best {
+            MlsPhase::ClimbAsked => {
+                // The whole batch has been told back by now.
+                match self.best.take() {
                     Some((nb, v)) => {
-                        cur = nb;
-                        cur_val = v;
+                        self.cur = nb;
+                        self.cur_val = v;
+                        self.climb(ctx)
                     }
-                    None => break, // local optimum → restart
+                    None => self.restart(ctx), // local optimum → restart
                 }
             }
         }
-        ev.into_trace()
+    }
+
+    fn tell(&mut self, obs: Observation) {
+        match self.phase {
+            MlsPhase::StartAsked => self.pending = Some(obs),
+            MlsPhase::ClimbAsked => {
+                if let Eval::Valid(v) = obs.eval {
+                    if v < self.cur_val && self.best.map_or(true, |(_, b)| v < b) {
+                        self.best = Some((obs.idx, v));
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -75,7 +146,8 @@ impl Strategy for MultiStartLocalSearch {
 mod tests {
     use super::*;
     use crate::objective::TableObjective;
-    use crate::space::{Param, SearchSpace};
+    use crate::space::Param;
+    use crate::util::rng::Rng;
 
     fn multimodal() -> TableObjective {
         // Two basins; global at (0.2, 0.2), local at (0.8, 0.8).

@@ -4,19 +4,39 @@
 //! (configuration index, evaluation result). All metrics (best-found
 //! curves, MAE, MDF) derive from traces, matching how the paper's plots
 //! set performance off against the number of function evaluations.
+//!
+//! Since the ask/tell redesign, a [`Strategy`] is a *factory* for
+//! stepwise [`SearchDriver`]s (see [`driver`]): the generic
+//! [`driver::drive`] loop owns evaluation, memoization, budgeting, and
+//! the trace, while each strategy only proposes configurations and
+//! observes results. [`Strategy::run`] remains as a thin shim over
+//! `drive` under a [`driver::FevalBudget`], so existing harness code and
+//! the sweep JSONL format are untouched — and the `legacy` equivalence
+//! suite proves every registry strategy replays a bit-identical trace
+//! through the new path.
 
 pub mod de;
+pub mod driver;
 pub mod framework_bo;
 pub mod ga;
 pub mod hedge;
 pub mod ils;
+#[cfg(test)]
+pub mod legacy;
 pub mod mls;
 pub mod pso;
 pub mod random;
 pub mod registry;
 pub mod sa;
 
+pub use driver::{
+    drive, Ask, Budget, DriveCtx, FevalBudget, Observation, SearchDriver, StepSession,
+    TargetBudget, WallClockBudget,
+};
+
+use crate::objective::evalcache::RunMemo;
 use crate::objective::{Eval, Objective};
+use crate::space::SearchSpace;
 use crate::util::rng::Rng;
 
 /// Record of one tuning run.
@@ -80,50 +100,79 @@ pub const OUT_OF_SPACE: usize = usize::MAX;
 
 /// Budgeted evaluator with memoization. Kernel Tuner counts *unique*
 /// function evaluations (Fig. 4's x-axis): local-search strategies may
-/// revisit configurations freely — revisits hit the cache and cost no
+/// revisit configurations freely — revisits hit the memo and cost no
 /// budget.
+///
+/// Backed by [`objective::evalcache::RunMemo`](crate::objective::evalcache::RunMemo)
+/// rather than a private `HashMap`, so in-run memoization and the sweep
+/// orchestrator's cross-session cache share one keyed store
+/// implementation; [`CachedEvaluator::with_memo`] accepts a shared view.
 pub struct CachedEvaluator<'a> {
     obj: &'a dyn Objective,
     pub trace: Trace,
-    cache: std::collections::HashMap<usize, Eval>,
+    memo: RunMemo,
     max_fevals: usize,
 }
 
 impl<'a> CachedEvaluator<'a> {
     pub fn new(obj: &'a dyn Objective, max_fevals: usize) -> Self {
-        CachedEvaluator { obj, trace: Trace::new(), cache: std::collections::HashMap::new(), max_fevals }
+        CachedEvaluator::with_memo(obj, max_fevals, RunMemo::private())
+    }
+
+    /// Evaluator over an explicit memo store (e.g. a
+    /// [`RunMemo::shared`] view for cross-session reuse).
+    pub fn with_memo(obj: &'a dyn Objective, max_fevals: usize, memo: RunMemo) -> Self {
+        CachedEvaluator { obj, trace: Trace::new(), memo, max_fevals }
+    }
+
+    /// Resume from a replayed trace prefix (e.g. a sweep record): the
+    /// prefix's evaluations seed the memo and count against the budget.
+    /// The prefix may be *longer* than `max_fevals` when a recorded run
+    /// used a larger budget — the evaluator is then simply exhausted.
+    pub fn with_trace(obj: &'a dyn Objective, max_fevals: usize, trace: Trace) -> Self {
+        let mut memo = RunMemo::private();
+        for (idx, e) in &trace.records {
+            if *idx != OUT_OF_SPACE {
+                memo.record(*idx, *e);
+            }
+        }
+        CachedEvaluator { obj, trace, memo, max_fevals }
     }
 
     pub fn budget_left(&self) -> bool {
         self.trace.len() < self.max_fevals
     }
 
-    /// Remaining unique evaluations.
+    /// Remaining unique evaluations (0 when a replayed trace already
+    /// meets or exceeds the budget).
     pub fn remaining(&self) -> usize {
-        self.max_fevals - self.trace.len()
+        self.max_fevals.saturating_sub(self.trace.len())
     }
 
     /// Evaluate (or recall) a configuration. Returns `None` when the
-    /// budget is exhausted and the value is not cached.
+    /// budget is exhausted and the value is not memoized.
     pub fn eval(&mut self, idx: usize, rng: &mut Rng) -> Option<Eval> {
-        if let Some(e) = self.cache.get(&idx) {
-            return Some(*e);
+        if let Some(e) = self.memo.recall(idx) {
+            return Some(e);
         }
         if !self.budget_left() {
             return None;
         }
-        let e = self.obj.evaluate(idx, rng);
-        self.cache.insert(idx, e);
+        let e = match self.memo.fetch_store(idx) {
+            Some(e) => e, // another session of a shared store already measured it
+            None => self.obj.evaluate(idx, rng),
+        };
+        self.memo.record(idx, e);
         self.trace.push(idx, e);
         Some(e)
     }
 
     pub fn seen(&self, idx: usize) -> bool {
-        self.cache.contains_key(&idx)
+        self.memo.seen(idx)
     }
 
     pub fn n_seen(&self) -> usize {
-        self.cache.len()
+        self.memo.n_seen()
     }
 
     pub fn into_trace(self) -> Trace {
@@ -131,14 +180,27 @@ impl<'a> CachedEvaluator<'a> {
     }
 }
 
-/// A search strategy: consumes an evaluation budget on an objective.
+/// A search strategy: a named factory for stepwise ask/tell drivers.
+///
+/// Implementations provide [`Strategy::driver`]; the whole-run
+/// [`Strategy::run`] entry is a provided shim over [`driver::drive`]
+/// with a unique-feval budget, kept so the runner, hypertuner, figures,
+/// and sweep records are untouched by the control-flow inversion.
 pub trait Strategy: Send + Sync {
     fn name(&self) -> String;
+
+    /// A fresh stepwise driver for one run over `space`. Drivers own all
+    /// per-run state; evaluation, budgeting, memoization, and the trace
+    /// belong to the drive loop.
+    fn driver(&self, space: &SearchSpace) -> Box<dyn SearchDriver>;
 
     /// Run with a total budget of `max_fevals` objective evaluations
     /// (invalid evaluations consume budget too — they cost real time on a
     /// real tuner and Kernel Tuner counts them).
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace;
+    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
+        let mut d = self.driver(obj.space());
+        drive(d.as_mut(), obj, &FevalBudget::new(max_fevals), rng)
+    }
 }
 
 #[cfg(test)]
@@ -165,5 +227,51 @@ mod tests {
         assert!(t.is_empty());
         assert!(t.best().is_none());
         assert!(t.best_curve().is_empty());
+    }
+
+    fn toy_obj() -> crate::objective::TableObjective {
+        let space = crate::space::SearchSpace::build(
+            "toy",
+            vec![crate::space::Param::ints("a", &[1, 2, 3, 4])],
+            &[],
+        );
+        let table = vec![Eval::Valid(3.0), Eval::Valid(1.5), Eval::CompileError, Eval::Valid(2.0)];
+        crate::objective::TableObjective::new(space, table)
+    }
+
+    #[test]
+    fn cached_evaluator_budget_and_memo_semantics() {
+        let obj = toy_obj();
+        let mut ev = CachedEvaluator::new(&obj, 2);
+        let mut rng = Rng::new(1);
+        assert_eq!(ev.remaining(), 2);
+        assert_eq!(ev.eval(0, &mut rng), Some(Eval::Valid(3.0)));
+        assert_eq!(ev.eval(0, &mut rng), Some(Eval::Valid(3.0)), "revisit is free");
+        assert_eq!(ev.remaining(), 1);
+        assert_eq!(ev.eval(2, &mut rng), Some(Eval::CompileError));
+        assert_eq!(ev.remaining(), 0);
+        assert!(!ev.budget_left());
+        assert_eq!(ev.eval(1, &mut rng), None, "fresh eval refused at zero budget");
+        assert_eq!(ev.eval(2, &mut rng), Some(Eval::CompileError), "memo still serves");
+        assert_eq!(ev.n_seen(), 2);
+        assert_eq!(ev.into_trace().len(), 2);
+    }
+
+    #[test]
+    fn remaining_saturates_when_replayed_trace_exceeds_budget() {
+        // Regression: a cached-replay trace longer than max_fevals used to
+        // underflow `remaining()` (panic in debug, wrap in release).
+        let obj = toy_obj();
+        let mut replayed = Trace::new();
+        replayed.push(0, Eval::Valid(3.0));
+        replayed.push(1, Eval::Valid(1.5));
+        replayed.push(3, Eval::Valid(2.0));
+        let mut ev = CachedEvaluator::with_trace(&obj, 2, replayed);
+        assert_eq!(ev.remaining(), 0, "must saturate, not underflow");
+        assert!(!ev.budget_left());
+        let mut rng = Rng::new(2);
+        assert_eq!(ev.eval(1, &mut rng), Some(Eval::Valid(1.5)), "replayed evals are memoized");
+        assert_eq!(ev.eval(2, &mut rng), None, "no budget for fresh work");
+        assert_eq!(ev.n_seen(), 3);
     }
 }

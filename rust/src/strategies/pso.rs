@@ -6,10 +6,17 @@
 //! Particles move in the continuous normalized cube and snap to the
 //! nearest restricted configuration for evaluation (Kernel Tuner's PSO
 //! does the same), with unique-evaluation budget semantics.
+//!
+//! Ask/tell port: each particle's velocity update draws RNG *after* its
+//! evaluation and before the next particle's, so particles are
+//! single-suggestion asks (batching would shift the RNG stream); the
+//! swarm initialization is all up-front draws, made in the first ask.
 
-use crate::objective::{Eval, Objective};
-use crate::strategies::{CachedEvaluator, Strategy, Trace};
-use crate::util::rng::Rng;
+use crate::bo::sampling::nearest_config as snap;
+use crate::objective::Eval;
+use crate::space::SearchSpace;
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 
 pub struct ParticleSwarm {
     pub particles: usize,
@@ -32,82 +39,126 @@ struct Particle {
     best_val: f64,
 }
 
-/// Nearest space index to a continuous point (linear scan — spaces are
-/// tens of thousands of points; candidate for k-d acceleration if PSO ever
-/// became a hot path).
-fn snap(space: &crate::space::SearchSpace, p: &[f64]) -> usize {
-    let dims = space.dims();
-    let pts = space.points();
-    let mut best = (0usize, f64::INFINITY);
-    for i in 0..space.len() {
-        let q = &pts[i * dims..(i + 1) * dims];
-        let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
-        if d < best.1 {
-            best = (i, d);
-        }
-    }
-    best.0
-}
-
 impl Strategy for ParticleSwarm {
     fn name(&self) -> String {
         "pso".into()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
-        let dims = space.dims();
-        let mut ev = CachedEvaluator::new(obj, max_fevals);
+    fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
+        Box::new(PsoDriver {
+            particles: self.particles,
+            inertia: self.inertia,
+            cognitive: self.cognitive,
+            social: self.social,
+            started: false,
+            swarm: Vec::new(),
+            gbest_pos: Vec::new(),
+            gbest_val: f64::INFINITY,
+            k: 0,
+            progressed: false,
+            pending: None,
+        })
+    }
+}
 
-        let mut swarm: Vec<Particle> = (0..self.particles)
-            .map(|_| {
-                let pos: Vec<f64> = (0..dims).map(|_| rng.f64()).collect();
-                let vel: Vec<f64> = (0..dims).map(|_| (rng.f64() - 0.5) * 0.2).collect();
-                Particle { best_pos: pos.clone(), pos, vel, best_val: f64::INFINITY }
-            })
-            .collect();
-        let mut gbest_pos: Vec<f64> = swarm[0].pos.clone();
-        let mut gbest_val = f64::INFINITY;
+pub struct PsoDriver {
+    particles: usize,
+    inertia: f64,
+    cognitive: f64,
+    social: f64,
+    started: bool,
+    swarm: Vec<Particle>,
+    gbest_pos: Vec<f64>,
+    gbest_val: f64,
+    /// Current particle index within the sweep.
+    k: usize,
+    progressed: bool,
+    pending: Option<Observation>,
+}
 
-        while ev.budget_left() && ev.n_seen() < space.len() {
-            let mut progressed = false;
-            for p in swarm.iter_mut() {
-                let idx = snap(space, &p.pos);
-                let before = ev.n_seen();
-                let Some(e) = ev.eval(idx, rng) else { return ev.into_trace() };
-                progressed |= ev.n_seen() > before;
-                if let Eval::Valid(v) = e {
-                    if v < p.best_val {
-                        p.best_val = v;
-                        p.best_pos = p.pos.clone();
-                    }
-                    if v < gbest_val {
-                        gbest_val = v;
-                        gbest_pos = p.pos.clone();
-                    }
-                }
-                // Velocity/position update (clamped to the unit cube).
-                for d in 0..dims {
-                    let r1 = rng.f64();
-                    let r2 = rng.f64();
-                    p.vel[d] = self.inertia * p.vel[d]
-                        + self.cognitive * r1 * (p.best_pos[d] - p.pos[d])
-                        + self.social * r2 * (gbest_pos[d] - p.pos[d]);
-                    p.vel[d] = p.vel[d].clamp(-0.5, 0.5);
-                    p.pos[d] = (p.pos[d] + p.vel[d]).clamp(0.0, 1.0);
-                }
+impl PsoDriver {
+    /// Swarm-sweep loop top: stop conditions, then particle 0.
+    fn sweep_top(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !ctx.budget_left() || ctx.n_seen() >= ctx.space.len() {
+            return Ask::Finished;
+        }
+        self.progressed = false;
+        self.propose_current(ctx)
+    }
+
+    fn propose_current(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let idx = snap(ctx.space, &self.swarm[self.k].pos);
+        Ask::Suggest(vec![idx])
+    }
+}
+
+impl SearchDriver for PsoDriver {
+    fn name(&self) -> String {
+        "pso".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let dims = ctx.space.dims();
+        if !self.started {
+            self.started = true;
+            self.swarm = (0..self.particles)
+                .map(|_| {
+                    let pos: Vec<f64> = (0..dims).map(|_| ctx.rng.f64()).collect();
+                    let vel: Vec<f64> = (0..dims).map(|_| (ctx.rng.f64() - 0.5) * 0.2).collect();
+                    Particle { best_pos: pos.clone(), pos, vel, best_val: f64::INFINITY }
+                })
+                .collect();
+            self.gbest_pos = self.swarm[0].pos.clone();
+            self.gbest_val = f64::INFINITY;
+            self.k = 0;
+            return self.sweep_top(ctx);
+        }
+        let Some(obs) = self.pending.take() else {
+            return Ask::Finished;
+        };
+        // Process particle k's result.
+        self.progressed |= !obs.cached;
+        let p = &mut self.swarm[self.k];
+        if let Eval::Valid(v) = obs.eval {
+            if v < p.best_val {
+                p.best_val = v;
+                p.best_pos = p.pos.clone();
             }
-            if !progressed {
-                // Swarm has converged onto already-seen configs: scatter a
-                // random particle to keep consuming budget meaningfully.
-                let k = rng.below(swarm.len());
-                for d in 0..dims {
-                    swarm[k].pos[d] = rng.f64();
-                    swarm[k].vel[d] = (rng.f64() - 0.5) * 0.4;
-                }
+            if v < self.gbest_val {
+                self.gbest_val = v;
+                self.gbest_pos = p.pos.clone();
             }
         }
-        ev.into_trace()
+        // Velocity/position update (clamped to the unit cube).
+        for d in 0..dims {
+            let r1 = ctx.rng.f64();
+            let r2 = ctx.rng.f64();
+            p.vel[d] = self.inertia * p.vel[d]
+                + self.cognitive * r1 * (p.best_pos[d] - p.pos[d])
+                + self.social * r2 * (self.gbest_pos[d] - p.pos[d]);
+            p.vel[d] = p.vel[d].clamp(-0.5, 0.5);
+            p.pos[d] = (p.pos[d] + p.vel[d]).clamp(0.0, 1.0);
+        }
+        self.k += 1;
+        if self.k < self.particles {
+            return self.propose_current(ctx);
+        }
+        // Sweep done.
+        if !self.progressed {
+            // Swarm has converged onto already-seen configs: scatter a
+            // random particle to keep consuming budget meaningfully.
+            let k = ctx.rng.below(self.swarm.len());
+            for d in 0..dims {
+                self.swarm[k].pos[d] = ctx.rng.f64();
+                self.swarm[k].vel[d] = (ctx.rng.f64() - 0.5) * 0.4;
+            }
+        }
+        self.k = 0;
+        self.sweep_top(ctx)
+    }
+
+    fn tell(&mut self, obs: Observation) {
+        self.pending = Some(obs);
     }
 }
 
@@ -115,7 +166,8 @@ impl Strategy for ParticleSwarm {
 mod tests {
     use super::*;
     use crate::objective::TableObjective;
-    use crate::space::{Param, SearchSpace};
+    use crate::space::Param;
+    use crate::util::rng::Rng;
 
     fn bowl() -> TableObjective {
         let vals: Vec<i64> = (0..20).collect();

@@ -1,9 +1,14 @@
 //! Random-sample baseline: uniform draws without replacement, as in
 //! Kernel Tuner. The paper repeats it 100× (vs 35×) due to its variance.
+//!
+//! The ask/tell port is the simplest batch driver in the zoo: the whole
+//! without-replacement order is drawn up front (exactly as the legacy
+//! loop did) and proposed as one batch, so the drive loop can evaluate it
+//! in parallel or stop it early under a non-feval budget.
 
-use crate::objective::Objective;
-use crate::strategies::{Strategy, Trace};
-use crate::util::rng::Rng;
+use crate::space::SearchSpace;
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 
 pub struct RandomSearch;
 
@@ -12,23 +17,40 @@ impl Strategy for RandomSearch {
         "random".into()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
-        let n = space.len();
-        let mut trace = Trace::new();
-        let order = rng.sample_indices(n, max_fevals.min(n));
-        for idx in order {
-            trace.push(idx, obj.evaluate(idx, rng));
-        }
-        trace
+    fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
+        Box::new(RandomDriver { proposed: false })
     }
+}
+
+/// One-shot batch proposer: the full sample order in a single ask.
+pub struct RandomDriver {
+    proposed: bool,
+}
+
+impl SearchDriver for RandomDriver {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if self.proposed {
+            return Ask::Finished;
+        }
+        self.proposed = true;
+        let n = ctx.space.len();
+        let k = ctx.max_fevals().unwrap_or(n).min(n);
+        Ask::Suggest(ctx.rng.sample_indices(n, k))
+    }
+
+    fn tell(&mut self, _obs: Observation) {}
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::objective::{Eval, TableObjective};
-    use crate::space::{Param, SearchSpace};
+    use crate::objective::{Eval, Objective, TableObjective};
+    use crate::space::Param;
+    use crate::util::rng::Rng;
 
     fn obj() -> TableObjective {
         let space = SearchSpace::build("t", vec![Param::ints("a", &(0..50).collect::<Vec<_>>())], &[]);
@@ -53,5 +75,23 @@ mod tests {
         let t = RandomSearch.run(&o, 500, &mut rng);
         assert_eq!(t.len(), 50);
         assert_eq!(t.best().unwrap().1, 0.0);
+    }
+
+    #[test]
+    fn asks_one_whole_batch() {
+        // The driver proposes everything in one suggestion list — the
+        // batch shape parallel evaluation and early stop rely on.
+        let o = obj();
+        let mut rng = Rng::new(3);
+        let mut d = RandomDriver { proposed: false };
+        let budget = crate::strategies::FevalBudget::new(10);
+        let trace = crate::strategies::Trace::new();
+        let memo = crate::objective::evalcache::RunMemo::private();
+        let mut ctx = DriveCtx::probe(o.space(), &mut rng, &trace, &memo, &budget);
+        match d.ask(&mut ctx) {
+            Ask::Suggest(batch) => assert_eq!(batch.len(), 10),
+            Ask::Finished => panic!("fresh driver must propose"),
+        }
+        assert_eq!(d.ask(&mut ctx), Ask::Finished);
     }
 }

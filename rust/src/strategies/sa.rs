@@ -2,11 +2,17 @@
 //! start, exponential cooling, random adjacent-neighbor proposals,
 //! Metropolis acceptance on the (minimized) objective. Invalid proposals
 //! are always rejected but still consume (unique-)evaluation budget.
+//!
+//! Ask/tell port: the legacy loop's evaluation call sites become yield
+//! points — the start draw, each neighbor proposal, and the
+//! invalid-escape teleport each map to one `ask`, with every RNG draw
+//! made in the same order as the original loop so traces replay
+//! bit-identically (asserted by `strategies::legacy`).
 
-use crate::objective::{Eval, Objective};
-use crate::space::{neighbors, Neighborhood};
-use crate::strategies::{CachedEvaluator, Strategy, Trace};
-use crate::util::rng::Rng;
+use crate::objective::Eval;
+use crate::space::{neighbors, Neighborhood, SearchSpace};
+use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
+use crate::strategies::Strategy;
 
 pub struct SimulatedAnnealing {
     pub t_max: f64,
@@ -24,84 +30,165 @@ impl Strategy for SimulatedAnnealing {
         "simulated_annealing".into()
     }
 
-    fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
-        let space = obj.space();
-        let mut ev = CachedEvaluator::new(obj, max_fevals);
+    fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
+        Box::new(SaDriver {
+            t_max: self.t_max,
+            t_min: self.t_min,
+            started: false,
+            phase: SaPhase::StartAsked,
+            attempts: 0,
+            cur: 0,
+            cur_val: f64::INFINITY,
+            temp: 0.0,
+            cool: 1.0,
+            delta_scale: 0.0,
+            stale: 0,
+            pending: None,
+        })
+    }
+}
 
-        // Random valid-ish starting point.
-        let mut cur = rng.below(space.len());
-        let mut attempts = 0usize;
-        let mut cur_val = loop {
-            attempts += 1;
-            if attempts > 4 * space.len() {
-                return ev.into_trace();
-            }
-            match ev.eval(cur, rng) {
-                Some(Eval::Valid(v)) => break v,
-                Some(_) => {
-                    if !ev.budget_left() {
-                        return ev.into_trace();
+/// Which evaluation the driver is waiting on.
+enum SaPhase {
+    /// A candidate starting point.
+    StartAsked,
+    /// A neighbor (or stale-escape) proposal from the main loop.
+    StepAsked,
+    /// A teleport away from an invalid region.
+    TeleportAsked,
+}
+
+pub struct SaDriver {
+    t_max: f64,
+    t_min: f64,
+    started: bool,
+    phase: SaPhase,
+    attempts: usize,
+    cur: usize,
+    cur_val: f64,
+    temp: f64,
+    cool: f64,
+    delta_scale: f64,
+    stale: usize,
+    pending: Option<Observation>,
+}
+
+impl SaDriver {
+    /// The main loop's top: cool, propose an adjacent neighbor (with the
+    /// stale-escape draw), matching the legacy iteration order exactly.
+    fn propose_step(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let n = ctx.space.len();
+        if !ctx.budget_left() || ctx.n_seen() >= n {
+            return Ask::Finished;
+        }
+        self.temp *= self.cool;
+        let ns = neighbors(ctx.space, self.cur, Neighborhood::Adjacent);
+        let mut proposal = if ns.is_empty() { ctx.rng.below(n) } else { *ctx.rng.choose(&ns) };
+        // A fully memoized neighborhood burns no budget: after enough
+        // stale iterations, teleport (Kernel Tuner restarts likewise).
+        if ctx.seen(proposal) {
+            self.stale += 1;
+            if self.stale > 50 {
+                self.stale = 0;
+                for _ in 0..4 * n {
+                    let c = ctx.rng.below(n);
+                    if !ctx.seen(c) {
+                        proposal = c;
+                        break;
                     }
-                    cur = rng.below(space.len());
                 }
-                None => return ev.into_trace(),
             }
+        } else {
+            self.stale = 0;
+        }
+        self.phase = SaPhase::StepAsked;
+        Ask::Suggest(vec![proposal])
+    }
+}
+
+impl SearchDriver for SaDriver {
+    fn name(&self) -> String {
+        "simulated_annealing".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        let n = ctx.space.len();
+        if !self.started {
+            // Random valid-ish starting point.
+            self.started = true;
+            self.cur = ctx.rng.below(n);
+            self.attempts = 1;
+            if self.attempts > 4 * n {
+                return Ask::Finished;
+            }
+            self.phase = SaPhase::StartAsked;
+            return Ask::Suggest(vec![self.cur]);
+        }
+        let Some(obs) = self.pending.take() else {
+            return Ask::Finished;
         };
-
-        // Exponential cooling over the expected number of steps. The
-        // objective scale is normalized by a running mean of |Δ|, so the
-        // temperature schedule is scale-free.
-        let steps = max_fevals.max(2) as f64;
-        let cool = (self.t_min / self.t_max).powf(1.0 / steps);
-        let mut temp = self.t_max;
-        let mut delta_scale = cur_val.abs().max(1e-9) * 0.1;
-
-        let mut stale = 0usize;
-        while ev.budget_left() && ev.n_seen() < space.len() {
-            temp *= cool;
-            let ns = neighbors(space, cur, Neighborhood::Adjacent);
-            let mut proposal = if ns.is_empty() { rng.below(space.len()) } else { *rng.choose(&ns) };
-            // A fully cached neighborhood burns no budget: after enough
-            // stale iterations, teleport (Kernel Tuner restarts likewise).
-            if ev.seen(proposal) {
-                stale += 1;
-                if stale > 50 {
-                    stale = 0;
-                    for _ in 0..4 * space.len() {
-                        let c = rng.below(space.len());
-                        if !ev.seen(c) {
-                            proposal = c;
-                            break;
-                        }
-                    }
-                }
-            } else {
-                stale = 0;
-            }
-            let Some(e) = ev.eval(proposal, rng) else { break };
-            match e {
+        match self.phase {
+            SaPhase::StartAsked => match obs.eval {
                 Eval::Valid(v) => {
-                    let delta = v - cur_val;
-                    delta_scale = 0.9 * delta_scale + 0.1 * delta.abs().max(1e-12);
-                    let accept = delta <= 0.0 || rng.chance((-delta / (delta_scale * temp.max(1e-12))).exp());
-                    if accept {
-                        cur = proposal;
-                        cur_val = v;
+                    self.cur_val = v;
+                    // Exponential cooling over the expected number of
+                    // steps; |Δ| scale keeps the schedule scale-free.
+                    let steps = ctx.max_fevals().unwrap_or(n).max(2) as f64;
+                    self.cool = (self.t_min / self.t_max).powf(1.0 / steps);
+                    self.temp = self.t_max;
+                    self.delta_scale = v.abs().max(1e-9) * 0.1;
+                    self.stale = 0;
+                    self.propose_step(ctx)
+                }
+                _ => {
+                    if !ctx.budget_left() {
+                        return Ask::Finished;
                     }
+                    self.cur = ctx.rng.below(n);
+                    self.attempts += 1;
+                    if self.attempts > 4 * n {
+                        return Ask::Finished;
+                    }
+                    Ask::Suggest(vec![self.cur])
+                }
+            },
+            SaPhase::StepAsked => match obs.eval {
+                Eval::Valid(v) => {
+                    let delta = v - self.cur_val;
+                    self.delta_scale = 0.9 * self.delta_scale + 0.1 * delta.abs().max(1e-12);
+                    let accept = delta <= 0.0
+                        || ctx
+                            .rng
+                            .chance((-delta / (self.delta_scale * self.temp.max(1e-12))).exp());
+                    if accept {
+                        self.cur = obs.idx;
+                        self.cur_val = v;
+                    }
+                    self.propose_step(ctx)
                 }
                 _ => {
                     // Invalid neighbor: occasionally teleport to escape
                     // invalid regions (Kernel Tuner restarts on stuck).
-                    if rng.chance(0.2) {
-                        cur = rng.below(space.len());
-                        if let Some(Eval::Valid(v)) = ev.eval(cur, rng) {
-                            cur_val = v;
-                        }
+                    if ctx.rng.chance(0.2) {
+                        self.cur = ctx.rng.below(n);
+                        self.phase = SaPhase::TeleportAsked;
+                        Ask::Suggest(vec![self.cur])
+                    } else {
+                        self.propose_step(ctx)
                     }
                 }
+            },
+            SaPhase::TeleportAsked => {
+                if let Eval::Valid(v) = obs.eval {
+                    self.cur_val = v;
+                }
+                self.propose_step(ctx)
             }
         }
-        ev.into_trace()
+    }
+
+    fn tell(&mut self, obs: Observation) {
+        self.pending = Some(obs);
     }
 }
 
@@ -109,7 +196,8 @@ impl Strategy for SimulatedAnnealing {
 mod tests {
     use super::*;
     use crate::objective::TableObjective;
-    use crate::space::{Param, SearchSpace};
+    use crate::space::Param;
+    use crate::util::rng::Rng;
 
     fn bowl() -> TableObjective {
         let vals: Vec<i64> = (0..25).collect();

@@ -171,6 +171,90 @@ fn comparison_runner_is_seed_stable() {
 }
 
 #[test]
+fn batch_ask_with_target_budget_early_stops_on_simulated_kernel() {
+    // End-to-end over the public ask/tell API: BO in batch mode (`multi`
+    // proposes every per-AF argmin from the fused sweep — >1 suggestion
+    // per step) driven under a non-feval budget (early stop on target
+    // value) on a real simulated kernel space.
+    use ktbo::bo::{BoConfig, BoStrategy};
+    use ktbo::strategies::driver::{
+        drive, Ask, Budget, DriveCtx, FevalBudget, Observation, SearchDriver, TargetBudget,
+    };
+    use ktbo::strategies::Strategy;
+    use std::sync::{Arc as StdArc, Mutex};
+
+    /// Wraps a driver to record every batch size it proposes.
+    struct Spy {
+        inner: Box<dyn SearchDriver>,
+        batch_sizes: StdArc<Mutex<Vec<usize>>>,
+    }
+    impl SearchDriver for Spy {
+        fn name(&self) -> String {
+            self.inner.name()
+        }
+        fn memoize(&self) -> bool {
+            self.inner.memoize()
+        }
+        fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+            let ask = self.inner.ask(ctx);
+            if let Ask::Suggest(batch) = &ask {
+                self.batch_sizes.lock().unwrap().push(batch.len());
+            }
+            ask
+        }
+        fn tell(&mut self, obs: Observation) {
+            self.inner.tell(obs);
+        }
+    }
+
+    let obj = objective_for("adding", &Device::a100());
+    let global = obj.known_minimum().unwrap();
+    let target = global * 1.5; // reachable well before 220 fevals
+
+    let mut cfg = BoConfig::multi();
+    cfg.batch_ask = true;
+    let s = BoStrategy::new("multi-batch", cfg);
+    let sizes = StdArc::new(Mutex::new(Vec::new()));
+    let mut spy = Spy { inner: s.driver(obj.space()), batch_sizes: StdArc::clone(&sizes) };
+
+    let budget = TargetBudget::new(target, Box::new(FevalBudget::new(220)));
+    let mut rng = Rng::new(20210601);
+    let trace = drive(&mut spy, obj.as_ref(), &budget, &mut rng);
+
+    assert!(trace.best().unwrap().1 <= target, "target not reached");
+    assert!(
+        trace.len() < 220,
+        "target budget must stop early, used all {} evaluations",
+        trace.len()
+    );
+    // The first ask is the 20-point LHS batch; acquisition steps propose
+    // one argmin per active AF — a real >1-suggestion step must appear
+    // (2 or 3 distinct argmins under the `multi` portfolio).
+    let sizes = sizes.lock().unwrap();
+    assert!(
+        sizes.iter().any(|&b| (2..=3).contains(&b)),
+        "multi batch mode must propose >1 acquisition argmin per step at least once: {sizes:?}"
+    );
+    assert!(!budget.proceed(&trace), "budget must report the stop");
+}
+
+#[test]
+fn stepwise_orchestration_matches_whole_run_comparison() {
+    // The orchestrator's step-level interleaving on a simulated kernel
+    // must agree with the classic whole-run comparison path exactly.
+    use ktbo::harness::orchestrator::orchestrate_comparison_stepwise;
+    let dev = Device::gtx_titan_x();
+    let obj = objective_for("pnpoly", &dev);
+    let oid = objective_id("pnpoly", dev.name);
+    let stepwise = orchestrate_comparison_stepwise(&obj, &oid, &["random", "ei"], 50, 0.03, 9);
+    for o in &stepwise {
+        let reference = run_strategy(&obj, &oid, &o.name, 50, o.maes.len(), 9, 1);
+        assert_eq!(o.mean_curve, reference.mean_curve, "{}", o.name);
+        assert_eq!(o.maes, reference.maes, "{}", o.name);
+    }
+}
+
+#[test]
 fn smoke_sweep_is_bit_identical_to_serial_and_resumes() {
     // The `ktbo sweep --smoke` tier end to end: orchestrated cells must
     // reproduce the serial reference path bit-for-bit at several worker

@@ -31,6 +31,9 @@ cargo build --release
 step "cargo test -q"
 cargo test -q
 
+step "cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --workspace --no-deps
+
 if [ "$FAST" = "1" ]; then
   printf '\nci-check: core checks green (smoke tier skipped via --fast)\n'
   exit 0
