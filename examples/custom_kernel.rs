@@ -1,9 +1,15 @@
 //! Bring your own kernel: the paper's "unseen kernels" scenario (§IV-E)
 //! from the user's side. Defines a brand-new tunable kernel — a fused
-//! softmax-attention row kernel — against the `KernelModel` trait,
-//! simulates its search space on the A100, and tunes it with the full
-//! strategy zoo. Nothing in the library knows this kernel; everything
-//! (restrictions, invalidity staging, roofline timing, BO) composes.
+//! softmax-attention row kernel — against the `KernelModel` trait with a
+//! declarative `SpaceSpec` (builder API + restriction DSL), then loads
+//! the *same* space from a JSON file (`examples/spaces/
+//! softmax_attention_row.json`) and tunes on the file-defined twin:
+//! new scenarios need zero Rust code once a model exists, and value sets
+//! or restrictions can be varied from a file alone
+//! (`ktbo tune <kernel> <gpu> --space file.json` does the same for the
+//! built-in kernels). Nothing in the library knows this kernel;
+//! everything (restrictions, invalidity staging, roofline timing, BO)
+//! composes.
 //!
 //!     cargo run --release --example custom_kernel
 
@@ -13,7 +19,7 @@ use ktbo::gpusim::occupancy::Resources;
 use ktbo::gpusim::timing::WorkEstimate;
 use ktbo::gpusim::SimulatedSpace;
 use ktbo::objective::{Objective, TableObjective};
-use ktbo::space::{Assignment, Param, Restriction};
+use ktbo::space::{Assignment, Expr, SpaceSpec};
 use ktbo::strategies::registry::by_name;
 use ktbo::util::rng::Rng;
 
@@ -32,20 +38,17 @@ impl KernelModel for SoftmaxAttentionRow {
         0x50f7
     }
 
-    fn params(&self) -> Vec<Param> {
-        vec![
-            Param::ints("block_size_x", &[32, 64, 128, 256, 512, 1024]),
-            Param::ints("rows_per_block", &[1, 2, 4, 8, 16]),
-            Param::ints("vector_width", &[1, 2, 4]),
-            Param::bools("use_online_softmax"),
-            Param::bools("stage_kv_in_smem"),
-        ]
-    }
-
-    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
-        vec![Restriction::new("one warp per row minimum", |a| {
-            a.i("block_size_x") / a.i("rows_per_block") >= 32
-        })]
+    fn spec(&self, _dev: &Device) -> SpaceSpec {
+        SpaceSpec::new("softmax_attention_row")
+            .ints("block_size_x", &[32, 64, 128, 256, 512, 1024])
+            .ints("rows_per_block", &[1, 2, 4, 8, 16])
+            .ints("vector_width", &[1, 2, 4])
+            .bools("use_online_softmax")
+            .bools("stage_kv_in_smem")
+            .restrict_named(
+                "one warp per row minimum",
+                Expr::var("block_size_x").div(Expr::var("rows_per_block")).ge(Expr::lit(32)),
+            )
     }
 
     fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {
@@ -82,7 +85,32 @@ impl KernelModel for SoftmaxAttentionRow {
 
 fn main() {
     let device = Device::a100();
-    let sim = SimulatedSpace::build(&SoftmaxAttentionRow, &device);
+
+    // The builder-defined space (what `KernelModel::spec` declares)…
+    let built_in = SoftmaxAttentionRow.spec(&device).build();
+
+    // …and its file-defined twin, parsed from JSON at run time. The two
+    // must agree exactly: spaces are data now.
+    let spec = SpaceSpec::parse(include_str!("spaces/softmax_attention_row.json"))
+        .expect("parse space file");
+    let from_file = spec.build();
+    assert_eq!(
+        from_file.len(),
+        built_in.len(),
+        "file-defined space must restrict to the builder-defined size"
+    );
+    println!(
+        "space '{}' from examples/spaces/softmax_attention_row.json: \
+         {} params, Cartesian {}, restricted {} (matches builder: yes)",
+        from_file.name,
+        from_file.dims(),
+        from_file.cartesian_size,
+        from_file.len(),
+    );
+
+    // Simulate the file-defined space through the kernel's analytical
+    // model and tune it with the strategy zoo — end to end from a file.
+    let sim = SimulatedSpace::build_with_space(&SoftmaxAttentionRow, &device, from_file);
     println!(
         "custom kernel '{}' on {}: {} configs, {} invalid, min {:.4} ms",
         sim.kernel_name,

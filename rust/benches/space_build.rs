@@ -1,0 +1,75 @@
+//! Micro-benchmark of restricted-space enumeration (custom harness — no
+//! criterion in the offline vendor set).
+//!
+//! Scenarios: the GEMM space (82944-point Cartesian → ~18k restricted via
+//! the CLBlast divisibility DSL) and a ~200k synthetic grid, each built
+//! serially and shard-parallel at 2/4/8 threads through the declarative
+//! `SpaceSpec` path. Results are written to `BENCH_space_build.json` at
+//! the repo root so the perf trajectory is tracked across PRs (see
+//! EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench space_build` (or `scripts/bench.sh`).
+//! Flags: `--smoke` (tiny grid), `--out PATH` (JSON destination).
+//!
+//! The build logic lives in `ktbo::harness::space_bench`, which the test
+//! suite also exercises — this binary cannot silently rot.
+
+use ktbo::harness::space_bench::{run_scenario, scenario_grid, to_json};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    // Smoke runs must never clobber the tracked full-grid trajectory file.
+    let default_name = if smoke { "BENCH_space_build.smoke.json" } else { "BENCH_space_build.json" };
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| format!("{}/../{default_name}", env!("CARGO_MANIFEST_DIR")));
+
+    println!("== space_build: constraint-propagating columnar enumeration (SpaceSpec) ==");
+    println!(
+        "{:<16} {:>8} {:>10} {:>10} {:>14} {:>18}",
+        "space", "threads", "configs", "cartesian", "ms/build", "keys_digest"
+    );
+    let mut records = Vec::new();
+    for sc in scenario_grid(smoke) {
+        let r = run_scenario(&sc);
+        println!(
+            "{:<16} {:>8} {:>10} {:>10} {:>14.3} {:>18}",
+            sc.space,
+            sc.threads,
+            r.configs,
+            r.cartesian,
+            r.ms_per_build,
+            format!("{:016x}", r.keys_digest)
+        );
+        records.push(r);
+    }
+
+    // Speedup summary per space: best parallel vs the serial baseline.
+    for base in records.iter().filter(|r| r.scenario.threads <= 1) {
+        if let Some(best) = records
+            .iter()
+            .filter(|r| r.scenario.space == base.scenario.space && r.scenario.threads > 1)
+            .min_by(|a, b| a.ms_per_build.partial_cmp(&b.ms_per_build).unwrap())
+        {
+            assert_eq!(
+                base.keys_digest, best.keys_digest,
+                "parallel build must enumerate the identical space"
+            );
+            println!(
+                "speedup {:<14}: {:.2}x (serial {:.3} -> {} threads {:.3} ms/build)",
+                base.scenario.space,
+                base.ms_per_build / best.ms_per_build.max(1e-12),
+                base.ms_per_build,
+                best.scenario.threads,
+                best.ms_per_build
+            );
+        }
+    }
+
+    let doc = to_json(&records).render_pretty();
+    std::fs::write(&out, &doc).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -109,8 +109,10 @@ impl Strategy for BoStrategy {
             t => t.min(n_shards),
         };
         let pool = ShardPool::new(pool_threads);
+        // Zero-copy: the GP borrows the space's shard-aligned f32 tiles —
+        // a refcount bump per run, no re-normalization.
         let inc =
-            IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.points().to_vec(), dims, shard_len);
+            IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.norm_tiles(), dims, shard_len);
         let oneshot = match &self.backend {
             Backend::Incremental => None,
             Backend::OneShot(f) => Some(f(&cfg)),
@@ -264,11 +266,12 @@ impl BoDriver {
             }
             Some(s) => {
                 // One-shot backend: fit on observations, predict over
-                // non-visited candidates, scatter back.
-                let x: Vec<f64> =
-                    self.obs_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
+                // non-visited candidates, scatter back. The Surrogate ABI
+                // is f64; widen the f32 tiles (exact conversion).
+                let widen = |i: usize| space.point(i).iter().map(|&v| f64::from(v)).collect::<Vec<f64>>();
+                let x: Vec<f64> = self.obs_idx.iter().flat_map(|&i| widen(i)).collect();
                 let cand_idx: Vec<usize> = (0..m).filter(|&i| !self.visited[i]).collect();
-                let cand: Vec<f64> = cand_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
+                let cand: Vec<f64> = cand_idx.iter().flat_map(|&i| widen(i)).collect();
                 let mut cmu = vec![0.0; cand_idx.len()];
                 let mut cvar = vec![0.0; cand_idx.len()];
                 if s.fit_predict(&x, &y_z, dims, &cand, &mut cmu, &mut cvar).is_err() {
@@ -669,7 +672,7 @@ pub(crate) mod legacy_engine {
         };
         let pool = ShardPool::new(pool_threads);
         let mut inc =
-            IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.points().to_vec(), dims, shard_len);
+            IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.norm_tiles(), dims, shard_len);
         let mut fed = 0usize;
         let mut oneshot = match &strategy.backend {
             Backend::Incremental => None,
@@ -713,11 +716,11 @@ pub(crate) mod legacy_engine {
                     }
                 }
                 Some(s) => {
-                    let x: Vec<f64> =
-                        st.obs_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
+                    let widen =
+                        |i: usize| space.point(i).iter().map(|&v| f64::from(v)).collect::<Vec<f64>>();
+                    let x: Vec<f64> = st.obs_idx.iter().flat_map(|&i| widen(i)).collect();
                     let cand_idx: Vec<usize> = (0..m).filter(|&i| !st.visited[i]).collect();
-                    let cand: Vec<f64> =
-                        cand_idx.iter().flat_map(|&i| space.point(i).to_vec()).collect();
+                    let cand: Vec<f64> = cand_idx.iter().flat_map(|&i| widen(i)).collect();
                     let mut cmu = vec![0.0; cand_idx.len()];
                     let mut cvar = vec![0.0; cand_idx.len()];
                     if s.fit_predict(&x, &y_z, dims, &cand, &mut cmu, &mut cvar).is_err() {
@@ -807,7 +810,7 @@ mod tests {
         let table: Vec<Eval> = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                let (dx, dy) = (p[0] - 0.7, p[1] - 0.3);
+                let (dx, dy) = (f64::from(p[0]) - 0.7, f64::from(p[1]) - 0.3);
                 Eval::Valid(10.0 + 100.0 * (dx * dx + dy * dy))
             })
             .collect();
@@ -824,7 +827,7 @@ mod tests {
                 if p[0] > 0.8 && p[1] > 0.8 {
                     Eval::CompileError
                 } else {
-                    let (dx, dy) = (p[0] - 0.7, p[1] - 0.3);
+                    let (dx, dy) = (f64::from(p[0]) - 0.7, f64::from(p[1]) - 0.3);
                     Eval::Valid(10.0 + 100.0 * (dx * dx + dy * dy))
                 }
             })

@@ -58,11 +58,18 @@ pub fn maximin_lhs_points(n: usize, dims: usize, k: usize, rng: &mut Rng) -> Vec
 /// k-d acceleration if snapping ever became a hot path.
 pub fn nearest_config(space: &SearchSpace, p: &[f64]) -> usize {
     let dims = space.dims();
-    let pts = space.points();
+    let pts = space.points(); // the space's f32 tiles, borrowed in place
     let mut best = (0usize, f64::INFINITY);
     for i in 0..space.len() {
         let q = &pts[i * dims..(i + 1) * dims];
-        let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+        let d: f64 = p
+            .iter()
+            .zip(q)
+            .map(|(a, &b)| {
+                let d = a - f64::from(b);
+                d * d
+            })
+            .sum();
         if d < best.1 {
             best = (i, d);
         }
@@ -84,7 +91,14 @@ pub fn snap_to_configs(points: &[f64], space: &SearchSpace, taken: &mut Vec<bool
                 continue;
             }
             let q = &all[idx * dims..(idx + 1) * dims];
-            let d: f64 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+            let d: f64 = p
+                .iter()
+                .zip(q)
+                .map(|(a, &b)| {
+                    let d = a - f64::from(b);
+                    d * d
+                })
+                .sum();
             if best.map_or(true, |(_, bd)| d < bd) {
                 best = Some((idx, d));
             }
@@ -185,7 +199,7 @@ mod tests {
         let mut taken = vec![false; s.len()];
         // A point at the origin snaps to config (0,0).
         let idxs = snap_to_configs(&[0.0, 0.0], &s, &mut taken);
-        assert_eq!(s.config(idxs[0]), &vec![0u16, 0]);
+        assert_eq!(s.config(idxs[0]), vec![0u16, 0]);
     }
 
     #[test]

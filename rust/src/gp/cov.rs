@@ -82,6 +82,23 @@ pub fn dist(a: &[f64], b: &[f64]) -> f64 {
         .sqrt()
 }
 
+/// Euclidean distance between two f32-stored points, accumulated in f64 —
+/// bit-identical to [`dist`] over the f64 images of the same coordinates
+/// (f32 → f64 conversion is exact), which is what lets the GP consume the
+/// search space's f32 normalized tiles directly.
+#[inline]
+pub fn dist32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = f64::from(x) - f64::from(y);
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +166,14 @@ mod tests {
     fn dist_euclidean() {
         assert!((dist(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
         assert_eq!(dist(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn dist32_matches_f64_image() {
+        let a32 = [0.1f32, 0.7, 1.0 / 3.0];
+        let b32 = [0.9f32, 0.2, 0.25];
+        let a64: Vec<f64> = a32.iter().map(|&v| f64::from(v)).collect();
+        let b64: Vec<f64> = b32.iter().map(|&v| f64::from(v)).collect();
+        assert_eq!(dist32(&a32, &b32), dist(&a64, &b64));
     }
 }

@@ -27,12 +27,19 @@
 //!
 //! V is f32: the sweeps are memory-bandwidth-bound over n·m elements, and
 //! halving the traffic buys ~1.7× (EXPERIMENTS.md §Perf); the ~1e-7
-//! relative rounding is far below the GP's own noise floor.
+//! relative rounding is far below the GP's own noise floor. The candidate
+//! matrix is f32 too — an `Arc<[f32]>` borrowed zero-copy from the
+//! search space's shard-aligned normalized tiles
+//! ([`SearchSpace::norm_tiles`](crate::space::SearchSpace::norm_tiles)),
+//! so constructing a GP per run is a refcount bump, not an O(m·dims)
+//! re-normalization; covariances still accumulate in f64 (`dist32`).
 //!
 //! Same math as `Gpr`, ~n× faster per BO iteration; `Gpr` remains the
 //! reference implementation and the tests cross-check the two.
 
-use crate::gp::cov::{dist, CovFn};
+use std::sync::Arc;
+
+use crate::gp::cov::{dist32, CovFn};
 use crate::util::pool::ShardPool;
 
 /// Default candidates per shard tile. A full-budget tile (220 rows × 1024
@@ -61,14 +68,14 @@ impl Shard {
     /// existing rows. Identical per-element operation order to the
     /// unsharded implementation, so the result does not depend on the
     /// partition.
-    fn add_row(&mut self, cov: CovFn, point: &[f64], cand: &[f64], dims: usize, lrow: &[f64], inv_diag: f32) {
+    fn add_row(&mut self, cov: CovFn, point: &[f32], cand: &[f32], dims: usize, lrow: &[f64], inv_diag: f32) {
         let n = lrow.len() - 1;
         let len = self.len;
         debug_assert_eq!(self.tile.len(), n * len);
         self.tile.reserve(len);
         for j in 0..len {
             let c = &cand[(self.start + j) * dims..(self.start + j + 1) * dims];
-            self.tile.push(cov.eval(dist(point, c)) as f32);
+            self.tile.push(cov.eval(dist32(point, c)) as f32);
         }
         let (prev, row) = self.tile.split_at_mut(n * len);
         for (r, lr) in lrow[..n].iter().enumerate() {
@@ -117,12 +124,15 @@ pub struct IncrementalGp {
     cov: CovFn,
     noise: f64,
     dims: usize,
-    /// Candidate matrix (row-major m×dims) — typically the whole space.
-    cand: Vec<f64>,
+    /// Candidate matrix (row-major m×dims f32) — typically the search
+    /// space's normalized tiles, borrowed zero-copy via
+    /// [`SearchSpace::norm_tiles`](crate::space::SearchSpace::norm_tiles)
+    /// (a refcount bump per run, no per-run re-normalization or copy).
+    cand: Arc<[f32]>,
     m: usize,
     shard_len: usize,
     /// Training points appended so far (row-major n×dims).
-    x: Vec<f64>,
+    x: Vec<f32>,
     /// Rows of the lower-triangular Cholesky factor (row i has i+1 entries).
     l: Vec<Vec<f64>>,
     /// Candidate shards of V (fixed boundaries, ascending `start`).
@@ -130,14 +140,14 @@ pub struct IncrementalGp {
 }
 
 impl IncrementalGp {
-    pub fn new(cov: CovFn, noise: f64, cand: Vec<f64>, dims: usize) -> IncrementalGp {
+    pub fn new(cov: CovFn, noise: f64, cand: Arc<[f32]>, dims: usize) -> IncrementalGp {
         IncrementalGp::with_shard_len(cov, noise, cand, dims, DEFAULT_SHARD_LEN)
     }
 
     /// Explicit shard sizing — the engine passes its configured value,
     /// tests exercise degenerate partitions. Results are bit-identical for
     /// every `shard_len`; only performance changes.
-    pub fn with_shard_len(cov: CovFn, noise: f64, cand: Vec<f64>, dims: usize, shard_len: usize) -> IncrementalGp {
+    pub fn with_shard_len(cov: CovFn, noise: f64, cand: Arc<[f32]>, dims: usize, shard_len: usize) -> IncrementalGp {
         assert!(dims > 0 && cand.len() % dims == 0);
         assert!(shard_len > 0);
         let m = cand.len() / dims;
@@ -176,24 +186,25 @@ impl IncrementalGp {
         self.shards.iter().map(|s| s.sq.as_slice())
     }
 
-    /// Append one training point (length = dims), serially.
-    pub fn add(&mut self, point: &[f64]) {
+    /// Append one training point (length = dims, f32 normalized
+    /// coordinates — e.g. a row of the space's tiles), serially.
+    pub fn add(&mut self, point: &[f32]) {
         self.add_with(point, None);
     }
 
     /// Append one training point, fanning the per-shard row append across
     /// the pool.
-    pub fn add_par(&mut self, point: &[f64], pool: &ShardPool) {
+    pub fn add_par(&mut self, point: &[f32], pool: &ShardPool) {
         self.add_with(point, Some(pool));
     }
 
-    fn add_with(&mut self, point: &[f64], pool: Option<&ShardPool>) {
+    fn add_with(&mut self, point: &[f32], pool: Option<&ShardPool>) {
         assert_eq!(point.len(), self.dims);
         let n = self.l.len();
         // New row of L: forward-substitute k(x_new, x_i) through existing rows.
         let mut lrow = Vec::with_capacity(n + 1);
         for i in 0..n {
-            let k = self.cov.eval(dist(point, &self.x[i * self.dims..(i + 1) * self.dims]));
+            let k = self.cov.eval(dist32(point, &self.x[i * self.dims..(i + 1) * self.dims]));
             let s: f64 = (0..i).map(|r| lrow[r] * self.l[i][r]).sum();
             lrow.push((k - s) / self.l[i][i]);
         }
@@ -203,7 +214,7 @@ impl IncrementalGp {
 
         let cov = self.cov;
         let dims = self.dims;
-        let cand: &[f64] = &self.cand;
+        let cand: &[f32] = &self.cand;
         let lrow_ref: &[f64] = &lrow;
         match pool {
             Some(pool) if pool.threads() > 0 && self.shards.len() > 1 => {
@@ -305,18 +316,24 @@ mod tests {
     use crate::gp::gpr::Gpr;
     use crate::util::rng::Rng;
 
+    /// f64 image of an f32 point set (exact conversion) — the reference
+    /// Gpr consumes the same coordinate values the tiles hold.
+    fn to64(v: &[f32]) -> Vec<f64> {
+        v.iter().map(|&x| f64::from(x)).collect()
+    }
+
     #[test]
     fn matches_batch_gpr() {
         let mut rng = Rng::new(7);
         let dims = 3;
         let m = 50;
-        let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
+        let cand: Vec<f32> = (0..m * dims).map(|_| rng.f64() as f32).collect();
         let cov = CovFn::Matern32 { lengthscale: 1.5 };
         let noise = 1e-6;
-        let mut inc = IncrementalGp::new(cov, noise, cand.clone(), dims);
+        let mut inc = IncrementalGp::new(cov, noise, cand.clone().into(), dims);
 
         let n = 25;
-        let x: Vec<f64> = (0..n * dims).map(|_| rng.f64()).collect();
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f64() as f32).collect();
         let y: Vec<f64> = (0..n).map(|_| rng.normal() + 3.0).collect();
         for i in 0..n {
             inc.add(&x[i * dims..(i + 1) * dims]);
@@ -325,8 +342,8 @@ mod tests {
         let mut var_i = vec![0.0; m];
         inc.predict_into(&y, &mut mu_i, &mut var_i);
 
-        let gpr = Gpr::fit(cov, noise, &x, dims, &y).unwrap();
-        let (mu_b, var_b) = gpr.predict(&cand);
+        let gpr = Gpr::fit(cov, noise, &to64(&x), dims, &y).unwrap();
+        let (mu_b, var_b) = gpr.predict(&to64(&cand));
         for j in 0..m {
             assert!((mu_i[j] - mu_b[j]).abs() < 5e-4, "mu mismatch at {j}: {} vs {}", mu_i[j], mu_b[j]); // f32 V storage
             assert!((var_i[j] - var_b[j]).abs() < 5e-4, "var mismatch at {j}");
@@ -337,23 +354,23 @@ mod tests {
     fn matches_batch_after_every_append() {
         let mut rng = Rng::new(8);
         let dims = 2;
-        let cand: Vec<f64> = (0..20 * dims).map(|_| rng.f64()).collect();
+        let cand: Vec<f32> = (0..20 * dims).map(|_| rng.f64() as f32).collect();
         // Noise 1e-4 keeps K well-conditioned so the two algebraically
         // identical paths stay within float round-off of each other.
         let cov = CovFn::Matern52 { lengthscale: 0.8 };
-        let mut inc = IncrementalGp::new(cov, 1e-4, cand.clone(), dims);
-        let mut xs: Vec<f64> = Vec::new();
+        let mut inc = IncrementalGp::new(cov, 1e-4, cand.clone().into(), dims);
+        let mut xs: Vec<f32> = Vec::new();
         let mut ys: Vec<f64> = Vec::new();
         for step in 0..12 {
-            let p = [rng.f64(), rng.f64()];
+            let p = [rng.f64() as f32, rng.f64() as f32];
             inc.add(&p);
             xs.extend_from_slice(&p);
             ys.push(rng.normal());
             let mut mu = vec![0.0; 20];
             let mut var = vec![0.0; 20];
             inc.predict_into(&ys, &mut mu, &mut var);
-            let gpr = Gpr::fit(cov, 1e-4, &xs, dims, &ys).unwrap();
-            let (mu_b, var_b) = gpr.predict(&cand);
+            let gpr = Gpr::fit(cov, 1e-4, &to64(&xs), dims, &ys).unwrap();
+            let (mu_b, var_b) = gpr.predict(&to64(&cand));
             for j in 0..20 {
                 assert!(
                     (mu[j] - mu_b[j]).abs() < 5e-4,
@@ -369,7 +386,7 @@ mod tests {
     #[test]
     fn survives_duplicate_points() {
         let cov = CovFn::Matern32 { lengthscale: 1.0 };
-        let mut inc = IncrementalGp::new(cov, 1e-8, vec![0.1, 0.9], 1);
+        let mut inc = IncrementalGp::new(cov, 1e-8, vec![0.1f32, 0.9].into(), 1);
         inc.add(&[0.5]);
         inc.add(&[0.5]); // duplicate → clamped diagonal, no NaN
         let mut mu = vec![0.0; 2];
@@ -382,7 +399,7 @@ mod tests {
     #[test]
     fn prior_before_observations() {
         let cov = CovFn::Rbf { lengthscale: 1.0 };
-        let inc = IncrementalGp::new(cov, 1e-6, vec![0.0, 0.5, 1.0], 1);
+        let inc = IncrementalGp::new(cov, 1e-6, vec![0.0f32, 0.5, 1.0].into(), 1);
         let mut mu = vec![9.0; 3];
         let mut var = vec![9.0; 3];
         inc.predict_into(&[], &mut mu, &mut var);
@@ -398,14 +415,14 @@ mod tests {
         let dims = 4;
         let m = 103;
         let n = 17;
-        let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
-        let x: Vec<f64> = (0..n * dims).map(|_| rng.f64()).collect();
+        let cand: Vec<f32> = (0..m * dims).map(|_| rng.f64() as f32).collect();
+        let x: Vec<f32> = (0..n * dims).map(|_| rng.f64() as f32).collect();
         let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let cov = CovFn::Matern32 { lengthscale: 1.2 };
 
         let run = |shard_len: usize, threads: usize| -> (Vec<f64>, Vec<f64>) {
             let pool = ShardPool::new(threads);
-            let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand.clone(), dims, shard_len);
+            let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand.clone().into(), dims, shard_len);
             for i in 0..n {
                 inc.add_par(&x[i * dims..(i + 1) * dims], &pool);
             }
@@ -431,13 +448,13 @@ mod tests {
         let dims = 3;
         let m = 41;
         let n = 9;
-        let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
+        let cand: Vec<f32> = (0..m * dims).map(|_| rng.f64() as f32).collect();
         let cov = CovFn::Matern52 { lengthscale: 1.0 };
         let pool = ShardPool::new(4);
-        let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand, dims, 7);
+        let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand.into(), dims, 7);
         let mut y = Vec::new();
         for _ in 0..n {
-            let p: Vec<f64> = (0..dims).map(|_| rng.f64()).collect();
+            let p: Vec<f32> = (0..dims).map(|_| rng.f64() as f32).collect();
             inc.add_par(&p, &pool);
             y.push(rng.normal());
         }
@@ -471,10 +488,10 @@ mod tests {
         let mut rng = Rng::new(55);
         let dims = 2;
         let m = 23;
-        let cand: Vec<f64> = (0..m * dims).map(|_| rng.f64()).collect();
-        let mut inc = IncrementalGp::with_shard_len(CovFn::Rbf { lengthscale: 0.7 }, 1e-6, cand, dims, 6);
+        let cand: Vec<f32> = (0..m * dims).map(|_| rng.f64() as f32).collect();
+        let mut inc = IncrementalGp::with_shard_len(CovFn::Rbf { lengthscale: 0.7 }, 1e-6, cand.into(), dims, 6);
         for _ in 0..5 {
-            let p = [rng.f64(), rng.f64()];
+            let p = [rng.f64() as f32, rng.f64() as f32];
             inc.add(&p);
         }
         let y = vec![0.3, -0.1, 0.8, 0.0, 0.2];

@@ -11,7 +11,7 @@ use crate::gpusim::device::Device;
 use crate::gpusim::kernels::KernelModel;
 use crate::gpusim::occupancy::Resources;
 use crate::gpusim::timing::WorkEstimate;
-use crate::space::{Assignment, Param, Restriction};
+use crate::space::{Assignment, Expr, SpaceSpec};
 
 /// Columns × gpoints of the atmosphere problem; 140 vertical layers.
 pub const COLS: usize = 2048;
@@ -30,22 +30,19 @@ impl KernelModel for Adding {
         0xadd1_4c
     }
 
-    fn params(&self) -> Vec<Param> {
+    fn spec(&self, _dev: &Device) -> SpaceSpec {
+        let v = Expr::var;
+        let l = Expr::lit;
+        let threads = || v("block_size_x").mul(v("block_size_y"));
         // Divisors of 140 as unroll factors (0 = let the compiler choose),
         // matching the kernel's 140-iteration second loop.
-        vec![
-            Param::ints("block_size_x", &(2..=128).map(|i| i * 8).collect::<Vec<_>>()),
-            Param::ints("block_size_y", &[1, 2, 4, 7, 14, 28]),
-            Param::ints("loop_unroll_factor", &[0, 1, 2, 4, 5, 7, 10, 14, 20, 28, 35, 70, 140]),
-            Param::bools("recompute_denom"),
-        ]
-    }
-
-    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
-        vec![
-            Restriction::new("threads <= 1024", |a| a.i("block_size_x") * a.i("block_size_y") <= 1024),
-            Restriction::new("threads >= 32", |a| a.i("block_size_x") * a.i("block_size_y") >= 32),
-        ]
+        SpaceSpec::new("adding")
+            .ints("block_size_x", &(2..=128).map(|i| i * 8).collect::<Vec<_>>())
+            .ints("block_size_y", &[1, 2, 4, 7, 14, 28])
+            .ints("loop_unroll_factor", &[0, 1, 2, 4, 5, 7, 10, 14, 20, 28, 35, 70, 140])
+            .bools("recompute_denom")
+            .restrict_named("threads <= 1024", threads().le(l(1024)))
+            .restrict_named("threads >= 32", threads().ge(l(32)))
     }
 
     fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {

@@ -12,7 +12,7 @@ use crate::gpusim::device::{Arch, Device};
 use crate::gpusim::kernels::KernelModel;
 use crate::gpusim::occupancy::Resources;
 use crate::gpusim::timing::WorkEstimate;
-use crate::space::{Assignment, Param, Restriction};
+use crate::space::{Assignment, Expr, SpaceSpec};
 
 /// Image and filter dimensions (fp32).
 pub const IMAGE_W: usize = 4096;
@@ -39,37 +39,46 @@ impl KernelModel for Convolution {
         0xc0_7f01
     }
 
-    fn params(&self) -> Vec<Param> {
-        vec![
-            Param::ints("filter_width", &[FILTER_W as i64]),
-            Param::ints("filter_height", &[FILTER_H as i64]),
-            Param::ints("block_size_x", &[1, 2, 4, 8, 16, 32, 48, 64, 80, 96, 112, 128]),
-            Param::ints("block_size_y", &[1, 2, 4, 8, 16, 32]),
-            Param::ints("tile_size_x", &[1, 2, 3, 4, 5, 6, 7, 8]),
-            Param::ints("tile_size_y", &[1, 2, 3, 4, 5, 6, 7, 8]),
-            Param::bools("use_padding"),
-            Param::bools("read_only"),
-        ]
-    }
-
-    fn restrictions(&self, dev: &Device) -> Vec<Restriction> {
+    fn spec(&self, dev: &Device) -> SpaceSpec {
+        let v = Expr::var;
+        let l = Expr::lit;
         // Spec-stage checks. Kernel Tuner restrictions may consult device
         // properties, which is how the same kernel yields different space
-        // sizes per GPU (Table II vs Table III): post-Maxwell devices also
-        // reject configurations whose *occupancy-relevant* tile exceeds the
-        // unified L1/shared capacity at spec time.
+        // sizes per GPU (Table II vs Table III): device numbers are
+        // inlined into the expressions as literals, so the per-device
+        // spec stays serializable.
         let max_threads = dev.max_threads_per_block as i64;
-        let mut r = vec![Restriction::new("32 <= threads <= max", move |a| {
-            let t = a.i("block_size_x") * a.i("block_size_y");
-            (32..=max_threads).contains(&t)
-        })];
+        let threads = || v("block_size_x").mul(v("block_size_y"));
+        let mut spec = SpaceSpec::new("convolution")
+            .ints("filter_width", &[FILTER_W as i64])
+            .ints("filter_height", &[FILTER_H as i64])
+            .ints("block_size_x", &[1, 2, 4, 8, 16, 32, 48, 64, 80, 96, 112, 128])
+            .ints("block_size_y", &[1, 2, 4, 8, 16, 32])
+            .ints("tile_size_x", &[1, 2, 3, 4, 5, 6, 7, 8])
+            .ints("tile_size_y", &[1, 2, 3, 4, 5, 6, 7, 8])
+            .bools("use_padding")
+            .bools("read_only")
+            .restrict_named(
+                "32 <= threads <= max",
+                threads().ge(l(32)).and(threads().le(l(max_threads))),
+            );
         if dev.arch != Arch::Maxwell {
             // Post-Maxwell toolchains reject tiles beyond the unified
             // L1/shared capacity already at spec time (a device-property
-            // restriction, hence the smaller space in Table III).
-            r.push(Restriction::new("tile fits unified smem/L1", |a| smem_tile_bytes(a) <= 112 * 1024));
+            // restriction, hence the smaller space in Table III). The
+            // expression mirrors `smem_tile_bytes` with the padding bool
+            // read as 0/1.
+            let tile_w = v("block_size_x")
+                .mul(v("tile_size_x"))
+                .add(l(FILTER_W as i64 - 1))
+                .add(v("use_padding"));
+            let tile_h = v("block_size_y").mul(v("tile_size_y")).add(l(FILTER_H as i64 - 1));
+            spec = spec.restrict_named(
+                "tile fits unified smem/L1",
+                tile_w.mul(tile_h).mul(l(4)).le(l(112 * 1024)),
+            );
         }
-        r
+        spec
     }
 
     fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {

@@ -14,7 +14,7 @@ use crate::gpusim::device::Device;
 use crate::gpusim::kernels::KernelModel;
 use crate::gpusim::occupancy::Resources;
 use crate::gpusim::timing::WorkEstimate;
-use crate::space::{Assignment, Param, Restriction};
+use crate::space::{Assignment, Expr, SpaceSpec};
 
 /// Localization point-set sizes (model and template).
 pub const N_A: usize = 2048;
@@ -43,26 +43,27 @@ impl KernelModel for ExpDist {
         0xe84d
     }
 
-    fn params(&self) -> Vec<Param> {
-        vec![
-            Param::ints("block_size_x", &[32, 64, 128, 256, 512, 1024]),
-            Param::ints("block_size_y", &[1, 2, 4, 8]),
-            Param::ints("tile_size_x", &[1, 2, 3, 4, 5, 6, 7, 8]),
-            Param::ints("tile_size_y", &[1, 2, 3, 4, 6, 8]),
-            Param::ints("loop_unroll_factor_x", &[0, 1, 2, 4]),
-            Param::ints("use_shared_mem", &[0, 1]),
-            Param::ints("n_y_blocks", &[1, 2, 4]),
-        ]
-    }
-
-    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
-        vec![
-            Restriction::new("threads <= 1024", |a| a.i("block_size_x") * a.i("block_size_y") <= 1024),
-            Restriction::new("unroll divides tile", |a| {
-                let u = a.i("loop_unroll_factor_x");
-                u == 0 || a.i("tile_size_x") % u == 0
-            }),
-        ]
+    fn spec(&self, _dev: &Device) -> SpaceSpec {
+        let v = Expr::var;
+        let l = Expr::lit;
+        // `unroll == 0` means "compiler default" and must short-circuit
+        // the divisibility check (`% 0` is unknown and would reject).
+        let unroll_divides = v("loop_unroll_factor_x")
+            .eq(l(0))
+            .or(v("tile_size_x").rem(v("loop_unroll_factor_x")).eq(l(0)));
+        SpaceSpec::new("expdist")
+            .ints("block_size_x", &[32, 64, 128, 256, 512, 1024])
+            .ints("block_size_y", &[1, 2, 4, 8])
+            .ints("tile_size_x", &[1, 2, 3, 4, 5, 6, 7, 8])
+            .ints("tile_size_y", &[1, 2, 3, 4, 6, 8])
+            .ints("loop_unroll_factor_x", &[0, 1, 2, 4])
+            .ints("use_shared_mem", &[0, 1])
+            .ints("n_y_blocks", &[1, 2, 4])
+            .restrict_named(
+                "threads <= 1024",
+                v("block_size_x").mul(v("block_size_y")).le(l(1024)),
+            )
+            .restrict_named("unroll divides tile", unroll_divides)
     }
 
     fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {

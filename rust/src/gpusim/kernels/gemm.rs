@@ -14,7 +14,7 @@ use crate::gpusim::device::Device;
 use crate::gpusim::kernels::KernelModel;
 use crate::gpusim::occupancy::Resources;
 use crate::gpusim::timing::WorkEstimate;
-use crate::space::{Assignment, Param, Restriction};
+use crate::space::{Assignment, Expr, SpaceSpec};
 
 /// Problem size: C[M,N] = A[M,K] · B[K,N], single precision.
 pub const M: usize = 4096;
@@ -33,45 +33,45 @@ impl KernelModel for Gemm {
         0x6e33 // arbitrary stable tag
     }
 
-    fn params(&self) -> Vec<Param> {
-        vec![
-            Param::ints("MWG", &[16, 32, 64, 128]),
-            Param::ints("NWG", &[16, 32, 64, 128]),
-            Param::ints("KWG", &[32]),
-            Param::ints("MDIMC", &[8, 16, 32]),
-            Param::ints("NDIMC", &[8, 16, 32]),
-            Param::ints("MDIMA", &[8, 16, 32]),
-            Param::ints("NDIMB", &[8, 16, 32]),
-            Param::ints("KWI", &[2]),
-            Param::ints("VWM", &[1, 2, 4, 8]),
-            Param::ints("VWN", &[1, 2, 4, 8]),
-            Param::ints("STRM", &[0]),
-            Param::ints("STRN", &[0]),
-            Param::ints("SA", &[0, 1]),
-            Param::ints("SB", &[0, 1]),
-            Param::ints("PRECISION", &[32]),
-        ]
-    }
-
-    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
+    fn spec(&self, _dev: &Device) -> SpaceSpec {
+        let v = Expr::var;
+        let l = Expr::lit;
+        // Divisibility of a work-group axis by a (grid × vector-width)
+        // product: `axis % (grid * vw) == 0`.
+        let tiles_exactly = |axis: &str, grid: &str, vw: &str| v(axis).rem(v(grid).mul(v(vw))).eq(l(0));
+        // Loads-per-thread guard: `lpt = MDIMC*NDIMC / stage_grid` must be
+        // positive and divide KWG. The `> 0` guard short-circuits exactly
+        // like the seed closure's `lpta > 0 &&` did.
+        let stages_exactly = |stage_grid: &str| {
+            let lpt = || v("MDIMC").mul(v("NDIMC")).div(v(stage_grid));
+            lpt().gt(l(0)).and(v("KWG").rem(lpt()).eq(l(0)))
+        };
         // The CLBlast validity conditions (same as the Kernel Tuner GEMM
         // benchmark). Divisibility guarantees every thread has work and
         // the staging loads tile exactly.
-        vec![
-            Restriction::new("KWG % KWI == 0", |a| a.i("KWG") % a.i("KWI") == 0),
-            Restriction::new("MWG % (MDIMC * VWM) == 0", |a| a.i("MWG") % (a.i("MDIMC") * a.i("VWM")) == 0),
-            Restriction::new("NWG % (NDIMC * VWN) == 0", |a| a.i("NWG") % (a.i("NDIMC") * a.i("VWN")) == 0),
-            Restriction::new("MWG % (MDIMA * VWM) == 0", |a| a.i("MWG") % (a.i("MDIMA") * a.i("VWM")) == 0),
-            Restriction::new("NWG % (NDIMB * VWN) == 0", |a| a.i("NWG") % (a.i("NDIMB") * a.i("VWN")) == 0),
-            Restriction::new("KWG % (MDIMC*NDIMC/MDIMA) == 0", |a| {
-                let lpta = (a.i("MDIMC") * a.i("NDIMC")) / a.i("MDIMA");
-                lpta > 0 && a.i("KWG") % lpta == 0
-            }),
-            Restriction::new("KWG % (MDIMC*NDIMC/NDIMB) == 0", |a| {
-                let lptb = (a.i("MDIMC") * a.i("NDIMC")) / a.i("NDIMB");
-                lptb > 0 && a.i("KWG") % lptb == 0
-            }),
-        ]
+        SpaceSpec::new("gemm")
+            .ints("MWG", &[16, 32, 64, 128])
+            .ints("NWG", &[16, 32, 64, 128])
+            .ints("KWG", &[32])
+            .ints("MDIMC", &[8, 16, 32])
+            .ints("NDIMC", &[8, 16, 32])
+            .ints("MDIMA", &[8, 16, 32])
+            .ints("NDIMB", &[8, 16, 32])
+            .ints("KWI", &[2])
+            .ints("VWM", &[1, 2, 4, 8])
+            .ints("VWN", &[1, 2, 4, 8])
+            .ints("STRM", &[0])
+            .ints("STRN", &[0])
+            .ints("SA", &[0, 1])
+            .ints("SB", &[0, 1])
+            .ints("PRECISION", &[32])
+            .restrict_named("KWG % KWI == 0", v("KWG").rem(v("KWI")).eq(l(0)))
+            .restrict_named("MWG % (MDIMC * VWM) == 0", tiles_exactly("MWG", "MDIMC", "VWM"))
+            .restrict_named("NWG % (NDIMC * VWN) == 0", tiles_exactly("NWG", "NDIMC", "VWN"))
+            .restrict_named("MWG % (MDIMA * VWM) == 0", tiles_exactly("MWG", "MDIMA", "VWM"))
+            .restrict_named("NWG % (NDIMB * VWN) == 0", tiles_exactly("NWG", "NDIMB", "VWN"))
+            .restrict_named("KWG % (MDIMC*NDIMC/MDIMA) == 0", stages_exactly("MDIMA"))
+            .restrict_named("KWG % (MDIMC*NDIMC/NDIMB) == 0", stages_exactly("NDIMB"))
     }
 
     fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {

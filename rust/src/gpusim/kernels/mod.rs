@@ -1,13 +1,15 @@
 //! Analytical models of the paper's five tunable GPU kernels.
 //!
-//! Each model declares its tunable parameters and spec-stage restrictions
-//! (these define the search space, Table II/III "Configurations"), maps a
-//! configuration to launch resources (driving compile-/run-time invalidity
-//! and occupancy) and to a `WorkEstimate` (driving the roofline time).
-//! The parameter sets mirror the Kernel Tuner benchmark kernels the paper
-//! uses; constants are calibrated so space sizes, invalid fractions, and
-//! minima land near Table II/III (exact values reported in
-//! EXPERIMENTS.md).
+//! Each model declares its search space as a declarative
+//! [`SpaceSpec`](crate::space::SpaceSpec) — typed params plus
+//! restriction-DSL expressions, the single source of truth that also
+//! serializes to JSON (`examples/spaces/*.json` are these specs as
+//! files) — and maps a configuration to launch resources (driving
+//! compile-/run-time invalidity and occupancy) and to a `WorkEstimate`
+//! (driving the roofline time). The parameter sets mirror the Kernel
+//! Tuner benchmark kernels the paper uses; constants are calibrated so
+//! space sizes, invalid fractions, and minima land near Table II/III
+//! (exact values reported in EXPERIMENTS.md).
 
 pub mod adding;
 pub mod conv;
@@ -18,7 +20,7 @@ pub mod pnpoly;
 use crate::gpusim::device::Device;
 use crate::gpusim::occupancy::Resources;
 use crate::gpusim::timing::WorkEstimate;
-use crate::space::{Assignment, Param, Restriction};
+use crate::space::{Assignment, Param, Restriction, SpaceSpec};
 
 /// An analytically modeled tunable GPU kernel.
 pub trait KernelModel: Send + Sync {
@@ -28,12 +30,22 @@ pub trait KernelModel: Send + Sync {
     /// Stable id mixed into the roughness hash.
     fn id(&self) -> u64;
 
-    /// Tunable parameters (device-independent, as in Kernel Tuner).
-    fn params(&self) -> Vec<Param>;
+    /// Declarative space spec: typed parameters plus restriction
+    /// expressions. May depend on the device (Kernel Tuner restrictions
+    /// can reference device properties — the device's numbers are inlined
+    /// as literals, so the spec stays serializable).
+    fn spec(&self, dev: &Device) -> SpaceSpec;
 
-    /// Spec-stage restrictions; may depend on the device (Kernel Tuner
-    /// restrictions can reference device properties).
-    fn restrictions(&self, dev: &Device) -> Vec<Restriction>;
+    /// Tunable parameters (device-independent, as in Kernel Tuner) —
+    /// derived from the spec on a reference device.
+    fn params(&self) -> Vec<Param> {
+        self.spec(&Device::gtx_titan_x()).params()
+    }
+
+    /// Spec-stage restrictions for `dev`, derived from the spec.
+    fn restrictions(&self, dev: &Device) -> Vec<Restriction> {
+        self.spec(dev).restrictions()
+    }
 
     /// Launch resources of a configuration.
     fn resources(&self, a: &Assignment, dev: &Device) -> Resources;
@@ -52,22 +64,181 @@ pub trait KernelModel: Send + Sync {
 /// All five kernels, in the paper's order.
 pub fn all_kernels() -> Vec<Box<dyn KernelModel>> {
     vec![
-        Box::new(gemm::Gemm::default()),
-        Box::new(conv::Convolution::default()),
-        Box::new(pnpoly::PnPoly::default()),
-        Box::new(expdist::ExpDist::default()),
-        Box::new(adding::Adding::default()),
+        Box::new(gemm::Gemm),
+        Box::new(conv::Convolution),
+        Box::new(pnpoly::PnPoly),
+        Box::new(expdist::ExpDist),
+        Box::new(adding::Adding),
     ]
 }
 
 /// Look a kernel up by CLI name.
 pub fn kernel_by_name(name: &str) -> Option<Box<dyn KernelModel>> {
     match name.to_ascii_lowercase().as_str() {
-        "gemm" => Some(Box::new(gemm::Gemm::default())),
-        "convolution" | "conv" => Some(Box::new(conv::Convolution::default())),
-        "pnpoly" => Some(Box::new(pnpoly::PnPoly::default())),
-        "expdist" => Some(Box::new(expdist::ExpDist::default())),
-        "adding" => Some(Box::new(adding::Adding::default())),
+        "gemm" => Some(Box::new(gemm::Gemm)),
+        "convolution" | "conv" => Some(Box::new(conv::Convolution)),
+        "pnpoly" => Some(Box::new(pnpoly::PnPoly)),
+        "expdist" => Some(Box::new(expdist::ExpDist)),
+        "adding" => Some(Box::new(adding::Adding)),
         _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::testref::odometer_reference;
+    use crate::space::SearchSpace;
+
+    /// Hand-written closure twins of every kernel's DSL restrictions —
+    /// the seed-era predicates, verbatim.
+    fn closure_restrictions(kernel: &str, dev: &Device) -> Vec<Restriction> {
+        use crate::gpusim::device::Arch;
+        match kernel {
+            "gemm" => vec![
+                Restriction::new("KWG % KWI == 0", |a| a.i("KWG") % a.i("KWI") == 0),
+                Restriction::new("MWG % (MDIMC * VWM) == 0", |a| {
+                    a.i("MWG") % (a.i("MDIMC") * a.i("VWM")) == 0
+                }),
+                Restriction::new("NWG % (NDIMC * VWN) == 0", |a| {
+                    a.i("NWG") % (a.i("NDIMC") * a.i("VWN")) == 0
+                }),
+                Restriction::new("MWG % (MDIMA * VWM) == 0", |a| {
+                    a.i("MWG") % (a.i("MDIMA") * a.i("VWM")) == 0
+                }),
+                Restriction::new("NWG % (NDIMB * VWN) == 0", |a| {
+                    a.i("NWG") % (a.i("NDIMB") * a.i("VWN")) == 0
+                }),
+                Restriction::new("KWG % (MDIMC*NDIMC/MDIMA) == 0", |a| {
+                    let lpta = (a.i("MDIMC") * a.i("NDIMC")) / a.i("MDIMA");
+                    lpta > 0 && a.i("KWG") % lpta == 0
+                }),
+                Restriction::new("KWG % (MDIMC*NDIMC/NDIMB) == 0", |a| {
+                    let lptb = (a.i("MDIMC") * a.i("NDIMC")) / a.i("NDIMB");
+                    lptb > 0 && a.i("KWG") % lptb == 0
+                }),
+            ],
+            "convolution" => {
+                let max_threads = dev.max_threads_per_block as i64;
+                let mut r = vec![Restriction::new("32 <= threads <= max", move |a| {
+                    let t = a.i("block_size_x") * a.i("block_size_y");
+                    (32..=max_threads).contains(&t)
+                })];
+                if dev.arch != Arch::Maxwell {
+                    r.push(Restriction::new("tile fits unified smem/L1", |a| {
+                        let tile_w = a.i("block_size_x") as usize * a.i("tile_size_x") as usize
+                            + conv::FILTER_W
+                            - 1;
+                        let tile_h = a.i("block_size_y") as usize * a.i("tile_size_y") as usize
+                            + conv::FILTER_H
+                            - 1;
+                        let pad = if a.b("use_padding") { 1 } else { 0 };
+                        (tile_w + pad) * tile_h * 4 <= 112 * 1024
+                    }));
+                }
+                r
+            }
+            "pnpoly" => Vec::new(),
+            "expdist" => vec![
+                Restriction::new("threads <= 1024", |a| {
+                    a.i("block_size_x") * a.i("block_size_y") <= 1024
+                }),
+                Restriction::new("unroll divides tile", |a| {
+                    let u = a.i("loop_unroll_factor_x");
+                    u == 0 || a.i("tile_size_x") % u == 0
+                }),
+            ],
+            "adding" => vec![
+                Restriction::new("threads <= 1024", |a| {
+                    a.i("block_size_x") * a.i("block_size_y") <= 1024
+                }),
+                Restriction::new("threads >= 32", |a| {
+                    a.i("block_size_x") * a.i("block_size_y") >= 32
+                }),
+            ],
+            other => panic!("no closure twin for kernel '{other}'"),
+        }
+    }
+
+    /// Acceptance: the DSL restrictions keep every kernel's space — size
+    /// *and* membership — identical to the seed-era closures, on a
+    /// Maxwell and a post-Maxwell device (conv's restrictions differ).
+    #[test]
+    fn dsl_restrictions_match_closures_on_all_kernels() {
+        for dev in [Device::gtx_titan_x(), Device::a100()] {
+            for k in all_kernels() {
+                let via_spec = k.spec(&dev).build();
+                let via_closures = SearchSpace::build(
+                    k.name(),
+                    k.params(),
+                    &closure_restrictions(k.name(), &dev),
+                );
+                assert_eq!(
+                    via_spec.len(),
+                    via_closures.len(),
+                    "{} on {}: restricted sizes differ",
+                    k.name(),
+                    dev.name
+                );
+                for i in 0..via_spec.len() {
+                    assert_eq!(
+                        via_spec.key(i),
+                        via_closures.key(i),
+                        "{} on {}: config {i} differs",
+                        k.name(),
+                        dev.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// Acceptance: the constraint-propagating columnar enumerator yields
+    /// byte-identical config ordering to the seed odometer, on all five
+    /// kernels.
+    #[test]
+    fn enumeration_matches_seed_odometer_on_all_kernels() {
+        let dev = Device::gtx_titan_x();
+        for k in all_kernels() {
+            let expected = odometer_reference(&k.params(), &k.restrictions(&dev));
+            let s = k.spec(&dev).build();
+            assert_eq!(s.len(), expected.len(), "{}: size differs", k.name());
+            for (i, cfg) in expected.iter().enumerate() {
+                assert_eq!(&s.config(i), cfg, "{}: order diverged at {i}", k.name());
+            }
+        }
+    }
+
+    /// Parallel spec builds must reproduce the serial enumeration bit for
+    /// bit on a real kernel space.
+    #[test]
+    fn parallel_kernel_space_build_is_bit_identical() {
+        use crate::util::pool::ShardPool;
+        let dev = Device::a100();
+        let k = kernel_by_name("expdist").unwrap();
+        let serial = k.spec(&dev).build();
+        for threads in [2, 8] {
+            let pool = ShardPool::new(threads);
+            let par = k.spec(&dev).build_par(&pool);
+            assert_eq!(par.len(), serial.len());
+            for i in 0..serial.len() {
+                assert_eq!(par.key(i), serial.key(i), "threads={threads} config {i}");
+            }
+        }
+    }
+
+    /// Every kernel's spec round-trips losslessly through JSON and the
+    /// parsed twin builds the same restricted space.
+    #[test]
+    fn kernel_specs_roundtrip_through_json() {
+        use crate::space::SpaceSpec;
+        let dev = Device::gtx_titan_x();
+        for k in all_kernels() {
+            let spec = k.spec(&dev);
+            let parsed = SpaceSpec::parse(&spec.to_json().render_pretty())
+                .unwrap_or_else(|e| panic!("{}: {e}", k.name()));
+            assert_eq!(parsed, spec, "{}: spec changed across JSON", k.name());
+            assert_eq!(parsed.build().len(), spec.build().len(), "{}", k.name());
+        }
     }
 }

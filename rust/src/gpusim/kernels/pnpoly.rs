@@ -14,7 +14,7 @@ use crate::gpusim::device::Device;
 use crate::gpusim::kernels::KernelModel;
 use crate::gpusim::occupancy::Resources;
 use crate::gpusim::timing::WorkEstimate;
-use crate::space::{Assignment, Param, Restriction};
+use crate::space::{Assignment, SpaceSpec};
 
 pub const POINTS: usize = 20_000_000;
 pub const VERTICES: usize = 600;
@@ -31,20 +31,16 @@ impl KernelModel for PnPoly {
         0x9019
     }
 
-    fn params(&self) -> Vec<Param> {
-        // 31 × 11 × 4 × 2 × 3 = 8184 configurations (Table II).
+    fn spec(&self, _dev: &Device) -> SpaceSpec {
+        // 31 × 11 × 4 × 2 × 3 = 8184 configurations (Table II); no
+        // restrictions (the paper: "PnPoly has no restrictions applied").
         let block_sizes: Vec<i64> = (1..=31).map(|i| i * 32).collect();
-        vec![
-            Param::ints("block_size_x", &block_sizes),
-            Param::ints("tile_size", &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]),
-            Param::ints("between_method", &[0, 1, 2, 3]),
-            Param::ints("use_precomputed_slopes", &[0, 1]),
-            Param::ints("use_method", &[0, 1, 2]),
-        ]
-    }
-
-    fn restrictions(&self, _dev: &Device) -> Vec<Restriction> {
-        Vec::new()
+        SpaceSpec::new("pnpoly")
+            .ints("block_size_x", &block_sizes)
+            .ints("tile_size", &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11])
+            .ints("between_method", &[0, 1, 2, 3])
+            .ints("use_precomputed_slopes", &[0, 1])
+            .ints("use_method", &[0, 1, 2])
     }
 
     fn resources(&self, a: &Assignment, _dev: &Device) -> Resources {

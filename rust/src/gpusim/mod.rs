@@ -25,10 +25,23 @@ pub struct SimulatedSpace {
 }
 
 impl SimulatedSpace {
-    /// Build the space for a kernel on a device and evaluate every
-    /// configuration through the analytical model.
+    /// Build the space for a kernel on a device (through the kernel's
+    /// declarative [`SpaceSpec`](crate::space::SpaceSpec)) and evaluate
+    /// every configuration through the analytical model.
     pub fn build(kernel: &dyn KernelModel, dev: &Device) -> SimulatedSpace {
-        let space = SearchSpace::build(kernel.name(), kernel.params(), &kernel.restrictions(dev));
+        Self::build_with_space(kernel, dev, kernel.spec(dev).build())
+    }
+
+    /// Evaluate an externally supplied space — e.g. one loaded from a
+    /// `--space <file.json>` spec — through the kernel's analytical
+    /// model. The space's parameters must carry the names the model
+    /// reads (value sets and restrictions are free to differ from the
+    /// kernel's built-in spec; that is the point).
+    pub fn build_with_space(
+        kernel: &dyn KernelModel,
+        dev: &Device,
+        space: SearchSpace,
+    ) -> SimulatedSpace {
         let mut table = Vec::with_capacity(space.len());
         for i in 0..space.len() {
             let a = space.assignment(i);
@@ -38,7 +51,7 @@ impl SimulatedSpace {
                 Validity::RuntimeError => Eval::RuntimeError,
                 Validity::Ok => {
                     let w = kernel.work(&a, dev);
-                    let key = noise_key(kernel.id(), dev.name, config_key(space.config(i)));
+                    let key = noise_key(kernel.id(), dev.name, config_key(&space.config(i)));
                     let t = execution_time_ms(&w, &res, dev, key);
                     Eval::Valid(kernel.objective(t, &a, dev))
                 }

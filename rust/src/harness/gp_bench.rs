@@ -65,14 +65,14 @@ pub struct Record {
 /// engine's per-iteration O(m)/O(n·m) workload, without objective noise.
 pub fn run_scenario(sc: &Scenario) -> Record {
     let mut rng = Rng::new(0x9e37_79b9);
-    let cand: Vec<f64> = (0..sc.m * sc.dims).map(|_| rng.f64()).collect();
-    let x: Vec<f64> = (0..sc.n * sc.dims).map(|_| rng.f64()).collect();
+    let cand: Vec<f32> = (0..sc.m * sc.dims).map(|_| rng.f64() as f32).collect();
+    let x: Vec<f32> = (0..sc.n * sc.dims).map(|_| rng.f64() as f32).collect();
     let y: Vec<f64> = (0..sc.n).map(|_| rng.normal()).collect();
     let cov = CovFn::Matern32 { lengthscale: 1.5 };
 
     let pool = ShardPool::new(if sc.fused { sc.threads } else { 1 });
     let shard_len = if sc.fused { sc.shard_len.max(1) } else { sc.m.max(1) };
-    let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand, sc.dims, shard_len);
+    let mut inc = IncrementalGp::with_shard_len(cov, 1e-6, cand.into(), sc.dims, shard_len);
     let mut mu = vec![0.0; sc.m];
     let mut var = vec![0.0; sc.m];
     let mut masked = vec![false; sc.m];

@@ -8,6 +8,7 @@ pub mod hypertune;
 pub mod metrics;
 pub mod orchestrator;
 pub mod runner;
+pub mod space_bench;
 
 pub use figures::Options;
 pub use orchestrator::{sweep, SweepReport, SweepSpec};

@@ -82,6 +82,11 @@ pub struct SweepSpec {
     pub cache: bool,
     /// Discard an existing progress file instead of resuming from it.
     pub fresh: bool,
+    /// Path to a declarative `SpaceSpec` JSON file replacing the kernel's
+    /// built-in space (`ktbo sweep --space file.json`). Requires a
+    /// single-kernel matrix — the spec's parameter names must match what
+    /// that kernel's analytical model reads.
+    pub space: Option<String>,
 }
 
 impl SweepSpec {
@@ -108,6 +113,7 @@ impl SweepSpec {
             tag: "smoke".into(),
             cache: true,
             fresh: false,
+            space: None,
         }
     }
 }
@@ -210,6 +216,13 @@ fn meta_record(spec: &SweepSpec) -> Json {
         .set("seed", hex_u64(spec.seed))
         .set("budget", spec.budget)
         .set("repeat_scale", spec.repeat_scale)
+        .set(
+            "space",
+            match &spec.space {
+                Some(s) => Json::Str(s.clone()),
+                None => Json::Null,
+            },
+        )
 }
 
 fn cell_record(key: &CellKey, obj_id: &str, base_seed: u64, budget: usize, curve: &[f64]) -> Json {
@@ -250,13 +263,15 @@ fn load_progress(text: &str, path: &Path, spec: &SweepSpec) -> Result<HashMap<Ce
                 let seed = record.get("seed").and_then(Json::as_str).and_then(parse_hex_u64);
                 let budget = record.get("budget").and_then(Json::as_f64);
                 let scale = record.get("repeat_scale").and_then(Json::as_f64);
+                let space = record.get("space").and_then(Json::as_str).map(str::to_string);
                 if seed != Some(spec.seed)
                     || budget != Some(spec.budget as f64)
                     || scale != Some(spec.repeat_scale)
+                    || space != spec.space
                 {
                     return Err(format!(
-                        "{} was written by an incompatible sweep (seed/budget/repeat-scale differ); \
-                         pass --fresh to discard it",
+                        "{} was written by an incompatible sweep (seed/budget/repeat-scale/space \
+                         differ); pass --fresh to discard it",
                         path.display()
                     ));
                 }
@@ -538,6 +553,23 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     if kernels.is_empty() || devices.is_empty() || strategies.is_empty() {
         return Err("empty sweep matrix (no kernels, gpus, or strategies)".into());
     }
+    // A space file replaces exactly one kernel's built-in space: its
+    // parameter names are the contract with that kernel's model.
+    let space_spec = match &spec.space {
+        Some(path) => {
+            if kernels.len() != 1 {
+                return Err(format!(
+                    "--space requires exactly one kernel in the matrix, got {:?}",
+                    kernels
+                ));
+            }
+            Some(
+                crate::space::SpaceSpec::load(Path::new(path))
+                    .map_err(|e| format!("space file {path}: {e}"))?,
+            )
+        }
+        None => None,
+    };
     std::fs::create_dir_all(&spec.out_dir).map_err(|e| format!("create {}: {e}", spec.out_dir))?;
 
     let t0 = Instant::now();
@@ -550,8 +582,19 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     let mut tables: Vec<Arc<TableObjective>> = Vec::new();
     for dev in &devices {
         for kernel in &kernels {
-            let table = objective_for(kernel, dev);
-            let obj_id = objective_id(kernel, dev.name);
+            let (table, obj_id) = match &space_spec {
+                Some(sp) => {
+                    let k = kernel_by_name(kernel).expect("validated above");
+                    let sim =
+                        crate::gpusim::SimulatedSpace::build_with_space(k.as_ref(), dev, sp.build());
+                    // The file-defined space is a different objective:
+                    // its id carries the space name so seeds, cache keys,
+                    // and sweep records never mix with the built-in space.
+                    let obj_id = format!("{}#space:{}", objective_id(kernel, dev.name), sp.name);
+                    (Arc::new(TableObjective::from_sim(sim)), obj_id)
+                }
+                None => (objective_for(kernel, dev), objective_id(kernel, dev.name)),
+            };
             let eval: Arc<dyn Objective> = if spec.cache {
                 Arc::new(CachedObjective::new(
                     Arc::clone(&table) as Arc<dyn Objective>,
@@ -739,7 +782,49 @@ mod tests {
             tag: tag.into(),
             cache: true,
             fresh: true,
+            space: None,
         }
+    }
+
+    /// Acceptance: `sweep --space examples/spaces/<kernel>.json` runs end
+    /// to end, and the file-defined twin restricts to the same size as
+    /// the hand-coded space.
+    #[test]
+    fn sweep_runs_on_a_json_space_file() {
+        let path = format!("{}/../examples/spaces/adding.json", env!("CARGO_MANIFEST_DIR"));
+        let spec_json = crate::space::SpaceSpec::load(std::path::Path::new(&path)).unwrap();
+        let dev = Device::a100();
+        let hand_coded = kernel_by_name("adding").unwrap().spec(&dev).build();
+        assert_eq!(
+            spec_json.build().len(),
+            hand_coded.len(),
+            "JSON twin must restrict to the hand-coded size"
+        );
+
+        let mut spec = small_spec("ktbo-orch-space", "space-file");
+        spec.strategies = vec!["random".into()];
+        spec.budget = 20;
+        spec.space = Some(path);
+        let report = sweep(&spec).unwrap();
+        assert!(report.ran_cells > 0);
+        assert_eq!(report.outcomes.len(), 1);
+        for o in &report.outcomes[0].1 {
+            assert_eq!(o.mean_curve.len(), 20);
+            assert!(o.mean_curve.iter().all(|v| v.is_finite()));
+        }
+
+        // Resume guard: the same tag without --space must be refused.
+        let mut mixed = spec.clone();
+        mixed.fresh = false;
+        mixed.space = None;
+        let err = sweep(&mixed).unwrap_err();
+        assert!(err.contains("--fresh"), "unexpected error: {err}");
+
+        // Multi-kernel matrices cannot take a single space file.
+        let mut multi = spec.clone();
+        multi.kernels = vec!["adding".into(), "gemm".into()];
+        multi.tag = "space-multi".into();
+        assert!(sweep(&multi).unwrap_err().contains("exactly one kernel"));
     }
 
     #[test]

@@ -186,7 +186,8 @@ mod tests {
         let table: Vec<Eval> = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                Eval::Valid(2.0 + (p[0] - 0.3).powi(2) + (p[1] - 0.6).powi(2))
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                Eval::Valid(2.0 + (x - 0.3).powi(2) + (y - 0.6).powi(2))
             })
             .collect();
         Arc::new(TableObjective::new(space, table))

@@ -1,0 +1,169 @@
+//! Reusable core of the `space_build` bench: timed enumeration of
+//! restricted search spaces through the declarative [`SpaceSpec`] path,
+//! serial vs shard-parallel, with machine-readable output
+//! (`BENCH_space_build.json` at the repo root).
+//!
+//! The bench binary (`benches/space_build.rs`) is a thin CLI over these
+//! functions, and the test suite runs a tiny smoke grid through the same
+//! code (`space_build_bench_smoke` in `tests/integration.rs`) — so the
+//! bench logic compiles and runs on every `cargo test` and can never
+//! silently rot. Two scenarios:
+//!
+//! - **gemm** — the paper's heaviest space: 82944-point Cartesian product
+//!   restricted to ~18k by the seven CLBlast divisibility conditions;
+//! - **synthetic** — a 241920-point Cartesian grid whose modular-sum
+//!   restriction keeps ~207k configs, the 200k-candidate scale the
+//!   gp_hotpath bench and the ROADMAP's sweep scenarios target.
+
+use std::time::Instant;
+
+use crate::gpusim::device::Device;
+use crate::gpusim::kernels::kernel_by_name;
+use crate::space::{Expr, SpaceSpec};
+use crate::util::json::Json;
+use crate::util::pool::ShardPool;
+
+/// One space-build scenario: a named spec built with `threads` workers
+/// (0/1 = the serial path).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub space: &'static str,
+    pub threads: usize,
+    pub iters: usize,
+}
+
+/// Timing outcome of one scenario.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub scenario: Scenario,
+    /// Restricted size of the built space.
+    pub configs: usize,
+    pub cartesian: usize,
+    pub ms_per_build: f64,
+    /// Order-sensitive digest of the packed keys — equal digests across
+    /// thread counts ⇒ identical spaces in identical order (the
+    /// determinism hook for tests; also lands in the JSON).
+    pub keys_digest: u64,
+}
+
+fn spec_for(space: &str) -> SpaceSpec {
+    match space {
+        "gemm" => kernel_by_name("gemm").expect("gemm registered").spec(&Device::gtx_titan_x()),
+        // 18 × 14 × 12 × 10 × 8 = 241920 Cartesian; the mod-7 restriction
+        // keeps ~6/7 of it → ~207k restricted (the "200k grid" scale the
+        // gp_hotpath bench also targets).
+        "synthetic200k" => SpaceSpec::new("synthetic200k")
+            .ints("a", &(1..=18).collect::<Vec<_>>())
+            .ints("b", &(1..=14).collect::<Vec<_>>())
+            .ints("c", &(1..=12).collect::<Vec<_>>())
+            .ints("d", &(1..=10).collect::<Vec<_>>())
+            .ints("e", &(1..=8).collect::<Vec<_>>())
+            .restrict(
+                Expr::var("a")
+                    .add(Expr::var("b"))
+                    .add(Expr::var("c"))
+                    .rem(Expr::lit(7))
+                    .ne(Expr::lit(0)),
+            ),
+        // Smoke tier: seconds-scale, still restricted.
+        "smoke" => SpaceSpec::new("smoke")
+            .ints("a", &(1..=12).collect::<Vec<_>>())
+            .ints("b", &(1..=10).collect::<Vec<_>>())
+            .ints("c", &(1..=8).collect::<Vec<_>>())
+            .restrict(Expr::var("a").mul(Expr::var("b")).le(Expr::lit(60))),
+        other => panic!("unknown bench space '{other}'"),
+    }
+}
+
+/// Build the scenario's space `iters` times and report the mean.
+pub fn run_scenario(sc: &Scenario) -> Record {
+    let spec = spec_for(sc.space);
+    let pool = ShardPool::new(sc.threads);
+    let build = || if pool.threads() > 0 { spec.build_par(&pool) } else { spec.build() };
+    let warm = build(); // warm-up + metadata
+    let t0 = Instant::now();
+    for _ in 0..sc.iters {
+        std::hint::black_box(build());
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    for i in 0..warm.len() {
+        digest = (digest ^ warm.key(i)).wrapping_mul(0x1000_0000_01b3);
+    }
+    Record {
+        scenario: sc.clone(),
+        configs: warm.len(),
+        cartesian: warm.cartesian_size,
+        ms_per_build: total_s * 1e3 / sc.iters.max(1) as f64,
+        keys_digest: digest,
+    }
+}
+
+/// The bench grid: both spaces, serial baseline plus a thread sweep.
+pub fn scenario_grid(smoke: bool) -> Vec<Scenario> {
+    if smoke {
+        return vec![
+            Scenario { space: "smoke", threads: 1, iters: 2 },
+            Scenario { space: "smoke", threads: 4, iters: 2 },
+        ];
+    }
+    let mut grid = Vec::new();
+    for space in ["gemm", "synthetic200k"] {
+        for threads in [1usize, 2, 4, 8] {
+            grid.push(Scenario { space, threads, iters: 5 });
+        }
+    }
+    grid
+}
+
+/// Render records as the `BENCH_space_build.json` document (diffable:
+/// insertion-ordered keys, one record per scenario).
+pub fn to_json(records: &[Record]) -> Json {
+    let rows: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("space", r.scenario.space)
+                .set("threads", r.scenario.threads)
+                .set("configs", r.configs)
+                .set("cartesian", r.cartesian)
+                .set("ms_per_build", r.ms_per_build)
+                .set("keys_digest", format!("{:016x}", r.keys_digest))
+        })
+        .collect();
+    Json::obj()
+        .set("bench", "space_build")
+        .set("unit", "ms_per_build")
+        .set(
+            "description",
+            "constraint-propagating columnar enumeration via SpaceSpec, serial vs ShardPool-parallel",
+        )
+        .set("records", Json::Arr(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The end-to-end smoke of the grid + JSON serialization lives in
+    // tests/integration.rs (space_build_bench_smoke) — one copy only.
+
+    /// Builds must be partition-independent: every thread count digests
+    /// to the serial keys.
+    #[test]
+    fn build_digest_is_thread_count_independent() {
+        let digest = |threads: usize| {
+            run_scenario(&Scenario { space: "smoke", threads, iters: 1 }).keys_digest
+        };
+        let reference = digest(1);
+        assert_eq!(digest(2), reference);
+        assert_eq!(digest(8), reference);
+    }
+
+    #[test]
+    fn gemm_scenario_matches_paper_scale() {
+        let r = run_scenario(&Scenario { space: "gemm", threads: 2, iters: 1 });
+        assert_eq!(r.cartesian, 82944, "paper: GEMM Cartesian 82944");
+        assert!(r.configs > 10_000 && r.configs < 30_000, "restricted {}", r.configs);
+    }
+}

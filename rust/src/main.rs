@@ -40,9 +40,10 @@ fn usage() {
     println!("USAGE:");
     println!("  ktbo spaces");
     println!("  ktbo tune <kernel> <gpu> [--strategy NAME] [--budget N] [--seed N] [--backend native|xla]");
+    println!("             [--space FILE.json]   declarative SpaceSpec replacing the kernel's built-in space");
     println!("  ktbo sweep [--kernels a,b] [--gpus a,b] [--strategies a,b] [--smoke]");
     println!("             [--budget N] [--repeat-scale F] [--seed N] [--threads N]");
-    println!("             [--out DIR] [--tag NAME] [--no-cache] [--fresh]");
+    println!("             [--out DIR] [--tag NAME] [--no-cache] [--fresh] [--space FILE.json]");
     println!("  ktbo experiment <fig1..fig7|table1..table3|headline|ablation|extended|noise|all>");
     println!("  ktbo hypertune [--repeat-scale F] [--top N]");
     println!("                  [--repeat-scale F] [--seed N] [--threads N] [--out DIR]");
@@ -91,6 +92,7 @@ fn cmd_sweep(args: &Args) {
             tag: "full".into(),
             cache: true,
             fresh: false,
+            space: None,
         }
     };
     let list = |key: &str, default: &[String]| -> Vec<String> {
@@ -111,6 +113,7 @@ fn cmd_sweep(args: &Args) {
         tag: args.str_or("tag", &base.tag),
         cache: !args.flag("no-cache"),
         fresh: args.flag("fresh"),
+        space: args.get("space").map(str::to_string),
     };
     match sweep(&spec) {
         Ok(report) => {
@@ -158,9 +161,15 @@ fn cmd_tune(args: &Args) {
     let seed = args.u64_or("seed", 42);
 
     // Simulation-mode cache file takes precedence over the built-in
-    // simulator (Kernel Tuner cache interchange).
-    let obj: std::sync::Arc<ktbo::objective::TableObjective> = match args.get("cache") {
-        Some(path) => {
+    // simulator (Kernel Tuner cache interchange); `--space` replaces the
+    // kernel's built-in space with a declarative SpaceSpec JSON file and
+    // evaluates it through the same analytical model.
+    let obj: std::sync::Arc<ktbo::objective::TableObjective> = match (args.get("cache"), args.get("space")) {
+        (Some(_), Some(_)) => {
+            eprintln!("--cache and --space conflict: a cache file already fixes the space");
+            std::process::exit(2);
+        }
+        (Some(path), None) => {
             let (o, k, d) = ktbo::objective::cache::load_cache(std::path::Path::new(path))
                 .unwrap_or_else(|e| {
                     eprintln!("failed to load cache: {e}");
@@ -169,7 +178,28 @@ fn cmd_tune(args: &Args) {
             println!("loaded cache: kernel={k} device={d} ({} configs)", o.space().len());
             std::sync::Arc::new(o)
         }
-        None => figs::objective_for(kernel, &dev),
+        (None, Some(path)) => {
+            let spec = ktbo::space::SpaceSpec::load(std::path::Path::new(path)).unwrap_or_else(|e| {
+                eprintln!("failed to load space spec: {e}");
+                std::process::exit(2);
+            });
+            let Some(k) = ktbo::gpusim::kernels::kernel_by_name(kernel) else {
+                eprintln!("unknown kernel '{kernel}'");
+                std::process::exit(2);
+            };
+            let space = spec.build();
+            println!(
+                "loaded space '{}' from {path}: {} params, {} restricted configs (Cartesian {})",
+                space.name,
+                space.dims(),
+                space.len(),
+                space.cartesian_size
+            );
+            std::sync::Arc::new(ktbo::objective::TableObjective::from_sim(
+                ktbo::gpusim::SimulatedSpace::build_with_space(k.as_ref(), &dev, space),
+            ))
+        }
+        (None, None) => figs::objective_for(kernel, &dev),
     };
     let strategy: Box<dyn Strategy> = if args.str_or("backend", "native") == "xla" {
         build_xla_strategy(args, &strategy_name)

@@ -7,19 +7,88 @@
 //! Configurations failing a restriction are excluded from the search space
 //! entirely (they are not "invalid configs" in the Table II sense — those
 //! are discovered at compile/run time by the objective).
+//!
+//! Two predicate representations coexist:
+//!
+//! - [`Expr`] — a small serializable expression DSL (integer arithmetic,
+//!   comparisons, short-circuit boolean operators) over parameter values by
+//!   name. Expression restrictions declare which parameters they touch
+//!   ([`Restriction::touched_dims`]), which is what lets the enumerator
+//!   prune partial assignments at the deepest bound prefix, and they
+//!   round-trip through JSON ([`Expr::to_json`]/[`Expr::from_json`]) so a
+//!   whole space can be defined as data (see
+//!   [`SpaceSpec`](crate::space::SpaceSpec)).
+//! - bare closures ([`Restriction::new`]) — arbitrary Rust predicates,
+//!   kept for tests and ad-hoc spaces. They cannot be serialized or pruned
+//!   early; the enumerator checks them only on full assignments.
 
 use crate::space::param::{PValue, Param};
+use crate::util::json::Json;
+
+/// Value lookup during expression evaluation: a full [`Assignment`], or
+/// the enumerator's bound prefix of one.
+pub trait VarScope {
+    /// Integer view of the named parameter's current value (bools map to
+    /// 0/1, floats truncate). `None` when the parameter is unbound in
+    /// this scope or categorical.
+    fn int(&self, name: &str) -> Option<i64>;
+
+    /// Categorical view. `None` when unbound or not categorical.
+    fn str_val(&self, name: &str) -> Option<&str>;
+}
+
+/// The one integer coercion every evaluation scope shares (bools 0/1,
+/// floats truncate, categoricals unknown) — `pub(crate)` so the
+/// enumerator's prefix scope cannot drift from full-assignment checks.
+pub(crate) fn pvalue_int(v: &PValue) -> Option<i64> {
+    match v {
+        PValue::Int(x) => Some(*x),
+        PValue::Bool(b) => Some(i64::from(*b)),
+        PValue::Float(x) => Some(*x as i64),
+        PValue::Str(_) => None,
+    }
+}
+
+/// Largest integer magnitude that survives the f64-backed JSON layer
+/// exactly (2^53). Serialization asserts and parsing rejects anything
+/// beyond it, so precision loss is loud instead of silent.
+pub(crate) const MAX_JSON_INT: i64 = 1 << 53;
+
+/// How two configuration views can back an [`Assignment`]: a contiguous
+/// row of value indices, or one row of a columnar [`SearchSpace`]
+/// (struct-of-arrays storage has no contiguous row to borrow).
+#[derive(Clone, Copy)]
+enum IndexView<'a> {
+    Row(&'a [u16]),
+    Columns { columns: &'a [Vec<u16>], row: usize },
+}
+
+impl IndexView<'_> {
+    #[inline]
+    fn get(&self, d: usize) -> u16 {
+        match self {
+            IndexView::Row(r) => r[d],
+            IndexView::Columns { columns, row } => columns[d][*row],
+        }
+    }
+}
 
 /// A typed view of one concrete parameter assignment, by name.
 pub struct Assignment<'a> {
     params: &'a [Param],
-    indices: &'a [u16],
+    view: IndexView<'a>,
 }
 
 impl<'a> Assignment<'a> {
     pub fn new(params: &'a [Param], indices: &'a [u16]) -> Self {
         debug_assert_eq!(params.len(), indices.len());
-        Assignment { params, indices }
+        Assignment { params, view: IndexView::Row(indices) }
+    }
+
+    /// View of row `row` of columnar per-dimension index storage.
+    pub fn from_columns(params: &'a [Param], columns: &'a [Vec<u16>], row: usize) -> Self {
+        debug_assert_eq!(params.len(), columns.len());
+        Assignment { params, view: IndexView::Columns { columns, row } }
     }
 
     fn pos(&self, name: &str) -> usize {
@@ -31,7 +100,7 @@ impl<'a> Assignment<'a> {
 
     pub fn value(&self, name: &str) -> &PValue {
         let i = self.pos(name);
-        &self.params[i].values[self.indices[i] as usize]
+        &self.params[i].values[self.view.get(i) as usize]
     }
 
     /// Integer view (panics for categoricals).
@@ -52,19 +121,486 @@ impl<'a> Assignment<'a> {
     }
 }
 
-/// A named restriction predicate.
+impl VarScope for Assignment<'_> {
+    fn int(&self, name: &str) -> Option<i64> {
+        let i = self.params.iter().position(|p| p.name == name)?;
+        pvalue_int(&self.params[i].values[self.view.get(i) as usize])
+    }
+
+    fn str_val(&self, name: &str) -> Option<&str> {
+        let i = self.params.iter().position(|p| p.name == name)?;
+        match &self.params[i].values[self.view.get(i) as usize] {
+            PValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Serializable restriction expression. Everything evaluates to an `i64`
+/// (comparisons and boolean operators yield 0/1); a restriction holds iff
+/// the expression evaluates to a non-zero value. Division/remainder by
+/// zero, arithmetic overflow, and unbound or categorical `Var` reads
+/// evaluate to "unknown", which fails the restriction — `And`/`Or`
+/// short-circuit left to right, so guards like
+/// `u == 0 || tile % u == 0` behave as written.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Lit(i64),
+    /// Current value of a parameter, by name (bools read as 0/1).
+    Var(String),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+    /// Integer (truncating) division.
+    Div(Box<Expr>, Box<Expr>),
+    Rem(Box<Expr>, Box<Expr>),
+    Eq(Box<Expr>, Box<Expr>),
+    Ne(Box<Expr>, Box<Expr>),
+    Lt(Box<Expr>, Box<Expr>),
+    Le(Box<Expr>, Box<Expr>),
+    Gt(Box<Expr>, Box<Expr>),
+    Ge(Box<Expr>, Box<Expr>),
+    And(Vec<Expr>),
+    Or(Vec<Expr>),
+    Not(Box<Expr>),
+    /// Categorical equality: parameter `.0`'s value equals string `.1`.
+    StrEq(String, String),
+}
+
+impl Expr {
+    pub fn lit(x: i64) -> Expr {
+        Expr::Lit(x)
+    }
+
+    pub fn var(name: &str) -> Expr {
+        Expr::Var(name.to_string())
+    }
+
+    pub fn streq(param: &str, value: &str) -> Expr {
+        Expr::StrEq(param.to_string(), value.to_string())
+    }
+
+    /// Inherent arithmetic builders (callable without importing the ops
+    /// traits; the `std::ops` impls below delegate here so `a * b` works
+    /// too). Clippy's should_implement_trait is satisfied by those impls.
+    #[allow(clippy::should_implement_trait)]
+    pub fn add(self, o: Expr) -> Expr {
+        Expr::Add(Box::new(self), Box::new(o))
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn sub(self, o: Expr) -> Expr {
+        Expr::Sub(Box::new(self), Box::new(o))
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn mul(self, o: Expr) -> Expr {
+        Expr::Mul(Box::new(self), Box::new(o))
+    }
+
+    /// Integer (truncating) division.
+    #[allow(clippy::should_implement_trait)]
+    pub fn div(self, o: Expr) -> Expr {
+        Expr::Div(Box::new(self), Box::new(o))
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn rem(self, o: Expr) -> Expr {
+        Expr::Rem(Box::new(self), Box::new(o))
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn not(self) -> Expr {
+        Expr::Not(Box::new(self))
+    }
+
+    pub fn eq(self, o: Expr) -> Expr {
+        Expr::Eq(Box::new(self), Box::new(o))
+    }
+
+    pub fn ne(self, o: Expr) -> Expr {
+        Expr::Ne(Box::new(self), Box::new(o))
+    }
+
+    pub fn lt(self, o: Expr) -> Expr {
+        Expr::Lt(Box::new(self), Box::new(o))
+    }
+
+    pub fn le(self, o: Expr) -> Expr {
+        Expr::Le(Box::new(self), Box::new(o))
+    }
+
+    pub fn gt(self, o: Expr) -> Expr {
+        Expr::Gt(Box::new(self), Box::new(o))
+    }
+
+    pub fn ge(self, o: Expr) -> Expr {
+        Expr::Ge(Box::new(self), Box::new(o))
+    }
+
+    pub fn and(self, o: Expr) -> Expr {
+        match self {
+            Expr::And(mut xs) => {
+                xs.push(o);
+                Expr::And(xs)
+            }
+            s => Expr::And(vec![s, o]),
+        }
+    }
+
+    pub fn or(self, o: Expr) -> Expr {
+        match self {
+            Expr::Or(mut xs) => {
+                xs.push(o);
+                Expr::Or(xs)
+            }
+            s => Expr::Or(vec![s, o]),
+        }
+    }
+
+    /// Evaluate under `scope`; `None` means "unknown" (unbound variable,
+    /// categorical integer read, division by zero, overflow) and fails
+    /// the enclosing restriction.
+    pub fn eval(&self, scope: &dyn VarScope) -> Option<i64> {
+        match self {
+            Expr::Lit(x) => Some(*x),
+            Expr::Var(name) => scope.int(name),
+            Expr::Add(a, b) => a.eval(scope)?.checked_add(b.eval(scope)?),
+            Expr::Sub(a, b) => a.eval(scope)?.checked_sub(b.eval(scope)?),
+            Expr::Mul(a, b) => a.eval(scope)?.checked_mul(b.eval(scope)?),
+            Expr::Div(a, b) => a.eval(scope)?.checked_div(b.eval(scope)?),
+            Expr::Rem(a, b) => a.eval(scope)?.checked_rem(b.eval(scope)?),
+            Expr::Eq(a, b) => Some(i64::from(a.eval(scope)? == b.eval(scope)?)),
+            Expr::Ne(a, b) => Some(i64::from(a.eval(scope)? != b.eval(scope)?)),
+            Expr::Lt(a, b) => Some(i64::from(a.eval(scope)? < b.eval(scope)?)),
+            Expr::Le(a, b) => Some(i64::from(a.eval(scope)? <= b.eval(scope)?)),
+            Expr::Gt(a, b) => Some(i64::from(a.eval(scope)? > b.eval(scope)?)),
+            Expr::Ge(a, b) => Some(i64::from(a.eval(scope)? >= b.eval(scope)?)),
+            Expr::And(xs) => {
+                for x in xs {
+                    if x.eval(scope)? == 0 {
+                        return Some(0);
+                    }
+                }
+                Some(1)
+            }
+            Expr::Or(xs) => {
+                for x in xs {
+                    if x.eval(scope)? != 0 {
+                        return Some(1);
+                    }
+                }
+                Some(0)
+            }
+            Expr::Not(a) => Some(i64::from(a.eval(scope)? == 0)),
+            Expr::StrEq(param, value) => Some(i64::from(scope.str_val(param)? == value)),
+        }
+    }
+
+    /// Truthiness under `scope`; unknown counts as violated.
+    pub fn holds(&self, scope: &dyn VarScope) -> bool {
+        self.eval(scope).map_or(false, |v| v != 0)
+    }
+
+    /// Append every referenced parameter name (with duplicates) to `out`.
+    pub fn collect_vars(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Lit(_) => {}
+            Expr::Var(name) => out.push(name.clone()),
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::Div(a, b)
+            | Expr::Rem(a, b)
+            | Expr::Eq(a, b)
+            | Expr::Ne(a, b)
+            | Expr::Lt(a, b)
+            | Expr::Le(a, b)
+            | Expr::Gt(a, b)
+            | Expr::Ge(a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+            Expr::And(xs) | Expr::Or(xs) => xs.iter().for_each(|x| x.collect_vars(out)),
+            Expr::Not(a) => a.collect_vars(out),
+            Expr::StrEq(param, _) => out.push(param.clone()),
+        }
+    }
+
+    fn op_name(&self) -> &'static str {
+        match self {
+            Expr::Add(..) => "add",
+            Expr::Sub(..) => "sub",
+            Expr::Mul(..) => "mul",
+            Expr::Div(..) => "div",
+            Expr::Rem(..) => "rem",
+            Expr::Eq(..) => "eq",
+            Expr::Ne(..) => "ne",
+            Expr::Lt(..) => "lt",
+            Expr::Le(..) => "le",
+            Expr::Gt(..) => "gt",
+            Expr::Ge(..) => "ge",
+            Expr::And(..) => "and",
+            Expr::Or(..) => "or",
+            Expr::Not(..) => "not",
+            _ => unreachable!("op_name on a leaf"),
+        }
+    }
+
+    /// JSON form: `{"lit": n}`, `{"var": "NAME"}`,
+    /// `{"op": "<name>", "args": [...]}`, and
+    /// `{"op": "streq", "param": "...", "value": "..."}`.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Expr::Lit(x) => {
+                assert!(
+                    x.abs() <= MAX_JSON_INT,
+                    "literal {x} exceeds the JSON-exact integer range (±2^53)"
+                );
+                Json::obj().set("lit", *x)
+            }
+            Expr::Var(name) => Json::obj().set("var", name.as_str()),
+            Expr::StrEq(param, value) => Json::obj()
+                .set("op", "streq")
+                .set("param", param.as_str())
+                .set("value", value.as_str()),
+            Expr::Add(a, b)
+            | Expr::Sub(a, b)
+            | Expr::Mul(a, b)
+            | Expr::Div(a, b)
+            | Expr::Rem(a, b)
+            | Expr::Eq(a, b)
+            | Expr::Ne(a, b)
+            | Expr::Lt(a, b)
+            | Expr::Le(a, b)
+            | Expr::Gt(a, b)
+            | Expr::Ge(a, b) => Json::obj()
+                .set("op", self.op_name())
+                .set("args", Json::Arr(vec![a.to_json(), b.to_json()])),
+            Expr::And(xs) | Expr::Or(xs) => Json::obj()
+                .set("op", self.op_name())
+                .set("args", Json::Arr(xs.iter().map(Expr::to_json).collect())),
+            Expr::Not(a) => {
+                Json::obj().set("op", "not").set("args", Json::Arr(vec![a.to_json()]))
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Expr, String> {
+        if let Some(lit) = j.get("lit") {
+            let x = lit.as_f64().ok_or("'lit' must be a number")?;
+            if x != x.trunc() {
+                return Err(format!("'lit' must be an integer, got {x}"));
+            }
+            if x.abs() > MAX_JSON_INT as f64 {
+                return Err(format!("'lit' {x} exceeds the JSON-exact integer range (±2^53)"));
+            }
+            return Ok(Expr::Lit(x as i64));
+        }
+        if let Some(var) = j.get("var") {
+            return Ok(Expr::var(var.as_str().ok_or("'var' must be a string")?));
+        }
+        let op = j.get("op").and_then(Json::as_str).ok_or("expression needs 'lit', 'var', or 'op'")?;
+        if op == "streq" {
+            let param = j.get("param").and_then(Json::as_str).ok_or("streq needs 'param'")?;
+            let value = j.get("value").and_then(Json::as_str).ok_or("streq needs 'value'")?;
+            return Ok(Expr::streq(param, value));
+        }
+        let args: Vec<Expr> = j
+            .get("args")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("op '{op}' needs 'args'"))?
+            .iter()
+            .map(Expr::from_json)
+            .collect::<Result<_, _>>()?;
+        let binary = |op: &str, mut args: Vec<Expr>| -> Result<(Box<Expr>, Box<Expr>), String> {
+            if args.len() != 2 {
+                return Err(format!("op '{op}' takes exactly 2 args, got {}", args.len()));
+            }
+            let b = Box::new(args.pop().expect("len checked"));
+            let a = Box::new(args.pop().expect("len checked"));
+            Ok((a, b))
+        };
+        Ok(match op {
+            "add" => binary(op, args).map(|(a, b)| Expr::Add(a, b))?,
+            "sub" => binary(op, args).map(|(a, b)| Expr::Sub(a, b))?,
+            "mul" => binary(op, args).map(|(a, b)| Expr::Mul(a, b))?,
+            "div" => binary(op, args).map(|(a, b)| Expr::Div(a, b))?,
+            "rem" | "mod" => binary(op, args).map(|(a, b)| Expr::Rem(a, b))?,
+            "eq" => binary(op, args).map(|(a, b)| Expr::Eq(a, b))?,
+            "ne" => binary(op, args).map(|(a, b)| Expr::Ne(a, b))?,
+            "lt" => binary(op, args).map(|(a, b)| Expr::Lt(a, b))?,
+            "le" => binary(op, args).map(|(a, b)| Expr::Le(a, b))?,
+            "gt" => binary(op, args).map(|(a, b)| Expr::Gt(a, b))?,
+            "ge" => binary(op, args).map(|(a, b)| Expr::Ge(a, b))?,
+            "and" => {
+                if args.len() < 2 {
+                    return Err("'and' takes at least 2 args".into());
+                }
+                Expr::And(args)
+            }
+            "or" => {
+                if args.len() < 2 {
+                    return Err("'or' takes at least 2 args".into());
+                }
+                Expr::Or(args)
+            }
+            "not" => {
+                if args.len() != 1 {
+                    return Err("'not' takes exactly 1 arg".into());
+                }
+                Expr::Not(Box::new(args.into_iter().next().expect("len checked")))
+            }
+            other => return Err(format!("unknown expression op '{other}'")),
+        })
+    }
+}
+
+// Operator sugar (`a * b`, `!a`, …) delegating to the inherent builders.
+impl std::ops::Add for Expr {
+    type Output = Expr;
+    fn add(self, o: Expr) -> Expr {
+        Expr::add(self, o)
+    }
+}
+
+impl std::ops::Sub for Expr {
+    type Output = Expr;
+    fn sub(self, o: Expr) -> Expr {
+        Expr::sub(self, o)
+    }
+}
+
+impl std::ops::Mul for Expr {
+    type Output = Expr;
+    fn mul(self, o: Expr) -> Expr {
+        Expr::mul(self, o)
+    }
+}
+
+impl std::ops::Div for Expr {
+    type Output = Expr;
+    fn div(self, o: Expr) -> Expr {
+        Expr::div(self, o)
+    }
+}
+
+impl std::ops::Rem for Expr {
+    type Output = Expr;
+    fn rem(self, o: Expr) -> Expr {
+        Expr::rem(self, o)
+    }
+}
+
+impl std::ops::Not for Expr {
+    type Output = Expr;
+    fn not(self) -> Expr {
+        Expr::not(self)
+    }
+}
+
+impl std::fmt::Display for Expr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Expr::Lit(x) => write!(f, "{x}"),
+            Expr::Var(name) => write!(f, "{name}"),
+            Expr::Add(a, b) => write!(f, "({a} + {b})"),
+            Expr::Sub(a, b) => write!(f, "({a} - {b})"),
+            Expr::Mul(a, b) => write!(f, "({a} * {b})"),
+            Expr::Div(a, b) => write!(f, "({a} / {b})"),
+            Expr::Rem(a, b) => write!(f, "({a} % {b})"),
+            Expr::Eq(a, b) => write!(f, "({a} == {b})"),
+            Expr::Ne(a, b) => write!(f, "({a} != {b})"),
+            Expr::Lt(a, b) => write!(f, "({a} < {b})"),
+            Expr::Le(a, b) => write!(f, "({a} <= {b})"),
+            Expr::Gt(a, b) => write!(f, "({a} > {b})"),
+            Expr::Ge(a, b) => write!(f, "({a} >= {b})"),
+            Expr::And(xs) => {
+                write!(f, "(")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " && ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, ")")
+            }
+            Expr::Or(xs) => {
+                write!(f, "(")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " || ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, ")")
+            }
+            Expr::Not(a) => write!(f, "!{a}"),
+            Expr::StrEq(p, v) => write!(f, "({p} == \"{v}\")"),
+        }
+    }
+}
+
+enum RestrictionKind {
+    Pred(Box<dyn Fn(&Assignment) -> bool + Send + Sync>),
+    Expr(Expr),
+}
+
+/// A named restriction predicate: a serializable [`Expr`] or a bare
+/// closure (see the module docs for the trade-off).
 pub struct Restriction {
     pub name: String,
-    pub pred: Box<dyn Fn(&Assignment) -> bool + Send + Sync>,
+    kind: RestrictionKind,
 }
 
 impl Restriction {
     pub fn new(name: &str, pred: impl Fn(&Assignment) -> bool + Send + Sync + 'static) -> Self {
-        Restriction { name: name.into(), pred: Box::new(pred) }
+        Restriction { name: name.into(), kind: RestrictionKind::Pred(Box::new(pred)) }
+    }
+
+    /// DSL-backed restriction, named by the expression's rendering.
+    pub fn expr(e: Expr) -> Self {
+        Restriction { name: e.to_string(), kind: RestrictionKind::Expr(e) }
+    }
+
+    pub fn named_expr(name: &str, e: Expr) -> Self {
+        Restriction { name: name.into(), kind: RestrictionKind::Expr(e) }
     }
 
     pub fn check(&self, a: &Assignment) -> bool {
-        (self.pred)(a)
+        match &self.kind {
+            RestrictionKind::Pred(p) => p(a),
+            RestrictionKind::Expr(e) => e.holds(a),
+        }
+    }
+
+    /// The underlying expression, when this restriction is DSL-backed.
+    pub fn as_expr(&self) -> Option<&Expr> {
+        match &self.kind {
+            RestrictionKind::Expr(e) => Some(e),
+            RestrictionKind::Pred(_) => None,
+        }
+    }
+
+    /// Dimension indices this restriction reads, when statically known
+    /// (expression restrictions only — closures are opaque). Panics on a
+    /// reference to a parameter that does not exist, surfacing typos at
+    /// space-build time instead of silently never pruning.
+    pub fn touched_dims(&self, params: &[Param]) -> Option<Vec<usize>> {
+        let e = self.as_expr()?;
+        let mut names = Vec::new();
+        e.collect_vars(&mut names);
+        let mut dims: Vec<usize> = names
+            .iter()
+            .map(|n| {
+                params.iter().position(|p| &p.name == n).unwrap_or_else(|| {
+                    panic!("restriction '{}' references unknown parameter '{n}'", self.name)
+                })
+            })
+            .collect();
+        dims.sort_unstable();
+        dims.dedup();
+        Some(dims)
     }
 }
 
@@ -92,6 +628,19 @@ mod tests {
     }
 
     #[test]
+    fn assignment_from_columns_matches_row_view() {
+        let ps = params();
+        let columns = vec![vec![0u16, 2], vec![1u16, 0], vec![1u16, 0]];
+        let a = Assignment::from_columns(&ps, &columns, 0);
+        assert_eq!(a.i("bx"), 16);
+        assert_eq!(a.i("by"), 2);
+        assert!(a.b("pad"));
+        let b = Assignment::from_columns(&ps, &columns, 1);
+        assert_eq!(b.i("bx"), 64);
+        assert!(!b.b("pad"));
+    }
+
+    #[test]
     #[should_panic(expected = "unknown parameter")]
     fn unknown_param_panics() {
         let ps = params();
@@ -107,5 +656,124 @@ mod tests {
         let bad = [2u16, 2, 0]; // 64*4 = 256
         assert!(r.check(&Assignment::new(&ps, &ok)));
         assert!(!r.check(&Assignment::new(&ps, &bad)));
+    }
+
+    #[test]
+    fn expr_restriction_matches_closure() {
+        let ps = params();
+        let closure = Restriction::new("t<=128", |a| a.i("bx") * a.i("by") <= 128);
+        let dsl = Restriction::expr(Expr::var("bx").mul(Expr::var("by")).le(Expr::lit(128)));
+        for bx in 0..3u16 {
+            for by in 0..3u16 {
+                for pad in 0..2u16 {
+                    let idx = [bx, by, pad];
+                    let a = Assignment::new(&ps, &idx);
+                    assert_eq!(closure.check(&a), dsl.check(&a), "at {idx:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expr_booleans_read_as_01() {
+        let ps = params();
+        let padded = [0u16, 0, 1];
+        let bare = [0u16, 0, 0];
+        let e = Expr::var("pad").eq(Expr::lit(1));
+        assert!(e.holds(&Assignment::new(&ps, &padded)));
+        assert!(!e.holds(&Assignment::new(&ps, &bare)));
+    }
+
+    #[test]
+    fn division_by_zero_fails_but_guards_short_circuit() {
+        let ps = vec![Param::ints("u", &[0, 2]), Param::ints("t", &[4])];
+        let bare_rem = Expr::var("t").rem(Expr::var("u")).eq(Expr::lit(0));
+        let guarded = Expr::var("u").eq(Expr::lit(0)).or(bare_rem.clone());
+        let zero = [0u16, 0];
+        let two = [1u16, 0];
+        assert!(!bare_rem.holds(&Assignment::new(&ps, &zero)), "t % 0 is unknown => violated");
+        assert!(guarded.holds(&Assignment::new(&ps, &zero)), "guard short-circuits");
+        assert!(guarded.holds(&Assignment::new(&ps, &two)), "4 % 2 == 0");
+    }
+
+    #[test]
+    fn and_short_circuits_on_false() {
+        let ps = vec![Param::ints("a", &[0, 1]), Param::ints("b", &[1])];
+        // (a > 0) && (b % a == 0): with a == 0 the right side would be
+        // unknown, but the left side already decides.
+        let e = Expr::var("a")
+            .gt(Expr::lit(0))
+            .and(Expr::var("b").rem(Expr::var("a")).eq(Expr::lit(0)));
+        assert_eq!(e.eval(&Assignment::new(&ps, &[0u16, 0])), Some(0));
+        assert_eq!(e.eval(&Assignment::new(&ps, &[1u16, 0])), Some(1));
+    }
+
+    #[test]
+    fn streq_matches_categoricals() {
+        let ps = vec![Param::cats("method", &["scan", "tree"])];
+        let e = Expr::streq("method", "tree");
+        assert!(!e.holds(&Assignment::new(&ps, &[0u16])));
+        assert!(e.holds(&Assignment::new(&ps, &[1u16])));
+        // Integer reads of categoricals are unknown, not a panic.
+        assert_eq!(Expr::var("method").eval(&Assignment::new(&ps, &[0u16])), None);
+    }
+
+    #[test]
+    fn touched_dims_reported_for_exprs_only() {
+        let ps = params();
+        let dsl = Restriction::expr(Expr::var("pad").eq(Expr::lit(0)).or(Expr::var("bx").ge(Expr::lit(32))));
+        assert_eq!(dsl.touched_dims(&ps), Some(vec![0, 2]));
+        let closure = Restriction::new("opaque", |_| true);
+        assert_eq!(closure.touched_dims(&ps), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown parameter 'typo'")]
+    fn touched_dims_rejects_unknown_names() {
+        let ps = params();
+        let r = Restriction::expr(Expr::var("typo").gt(Expr::lit(0)));
+        let _ = r.touched_dims(&ps);
+    }
+
+    #[test]
+    fn expr_json_roundtrip() {
+        let exprs = [
+            Expr::var("KWG").rem(Expr::var("KWI")).eq(Expr::lit(0)),
+            Expr::var("a")
+                .mul(Expr::var("b"))
+                .div(Expr::var("c"))
+                .gt(Expr::lit(0))
+                .and(Expr::var("d").le(Expr::lit(1024)))
+                .or(Expr::lit(1).ne(Expr::lit(2))),
+            Expr::var("x").add(Expr::lit(-3)).sub(Expr::var("y")).lt(Expr::lit(7)),
+            Expr::var("p").ge(Expr::lit(2)).not(),
+            Expr::streq("method", "bit-trick"),
+        ];
+        for e in exprs {
+            let text = e.to_json().render();
+            let parsed = Expr::from_json(&crate::util::jsonparse::parse(&text).unwrap()).unwrap();
+            assert_eq!(parsed, e, "round-trip failed for {e}");
+        }
+    }
+
+    #[test]
+    fn expr_json_rejects_malformed() {
+        for bad in [
+            r#"{"op":"mul","args":[{"lit":1}]}"#,
+            r#"{"op":"warp","args":[{"lit":1},{"lit":2}]}"#,
+            r#"{"lit":1.5}"#,
+            r#"{"op":"not","args":[]}"#,
+            r#"{"args":[]}"#,
+            r#"{"lit":9007199254740994}"#, // past 2^53: not f64-exact
+        ] {
+            let j = crate::util::jsonparse::parse(bad).unwrap();
+            assert!(Expr::from_json(&j).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn display_renders_infix() {
+        let e = Expr::var("MWG").rem(Expr::var("MDIMC").mul(Expr::var("VWM"))).eq(Expr::lit(0));
+        assert_eq!(e.to_string(), "((MWG % (MDIMC * VWM)) == 0)");
     }
 }

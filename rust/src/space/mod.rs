@@ -1,14 +1,57 @@
-//! Search-space engine: tunable parameters, restrictions, enumeration,
-//! normalization (§III-D), and neighborhood operators for the
-//! local-search baselines.
+//! Search-space engine: tunable parameters, a declarative serializable
+//! space specification ([`SpaceSpec`]), restrictions (closures or the
+//! [`Expr`] DSL), constraint-propagating enumeration (§III-D, serial or
+//! shard-parallel), a columnar zero-copy [`SearchSpace`] core (packed
+//! mixed-radix keys, alloc-free index, shard-aligned `f32` normalized
+//! tiles), and key-probe neighborhood operators for the local-search
+//! baselines.
 
 pub mod constraint;
 pub mod neighbors;
 pub mod param;
 #[allow(clippy::module_inception)]
 pub mod space;
+pub mod spec;
 
-pub use constraint::{Assignment, Restriction};
+pub use constraint::{Assignment, Expr, Restriction, VarScope};
 pub use neighbors::{neighbors, Neighborhood};
 pub use param::{PValue, Param};
 pub use space::{Config, SearchSpace};
+pub use spec::{ParamSpec, RestrictionSpec, SpaceSpec};
+
+/// Test support: the seed-era serial odometer enumerator, kept verbatim
+/// as the single ordering/membership reference that both the space
+/// tests and the kernel tests assert the columnar enumerator against.
+#[cfg(test)]
+pub(crate) mod testref {
+    use crate::space::constraint::{Assignment, Restriction};
+    use crate::space::param::Param;
+    use crate::space::space::Config;
+
+    pub(crate) fn odometer_reference(
+        params: &[Param],
+        restrictions: &[Restriction],
+    ) -> Vec<Config> {
+        let dims = params.len();
+        let mut configs = Vec::new();
+        let mut cursor: Config = vec![0; dims];
+        loop {
+            let a = Assignment::new(params, &cursor);
+            if restrictions.iter().all(|r| r.check(&a)) {
+                configs.push(cursor.clone());
+            }
+            let mut d = dims;
+            loop {
+                if d == 0 {
+                    return configs;
+                }
+                d -= 1;
+                cursor[d] += 1;
+                if (cursor[d] as usize) < params[d].len() {
+                    break;
+                }
+                cursor[d] = 0;
+            }
+        }
+    }
+}

@@ -8,11 +8,18 @@
 //! - *Adjacent*: configs where every parameter index moved by at most 1,
 //!   and at least one moved.
 //!
+//! Probes run on packed mixed-radix keys: a one-dimension move from key
+//! `k` is `k ± delta · stride[d]`, answered by the space's alloc-free key
+//! index — no per-probe `Vec` clone or re-hash of a whole config (the
+//! seed-era operators cloned and hashed a `Vec<u16>` per candidate).
+//!
 //! Restricted spaces make neighborhoods irregular — a Hamming move can
-//! land outside the space — so all operators filter through the space
-//! index and can therefore return fewer (or zero) neighbors.
+//! land outside the space — so all operators filter through the key index
+//! and can therefore return fewer (or **zero**) neighbors; SA/MLS/ILS are
+//! tested against fully isolated configs (see their `empty neighborhood`
+//! tests and `isolated_configs_have_no_neighbors` below).
 
-use crate::space::space::{Config, SearchSpace};
+use crate::space::space::SearchSpace;
 
 /// Neighborhood flavor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,18 +36,26 @@ pub fn neighbors(space: &SearchSpace, idx: usize, kind: Neighborhood) -> Vec<usi
     }
 }
 
+/// Key after moving dimension `d` from value index `from` to `to`.
+/// Exact for every valid pair: the subtraction cannot underflow the true
+/// (mathematical) key, only the intermediate, so wrapping ops are used.
+#[inline]
+fn rekey(key: u64, stride: u64, from: u16, to: u16) -> u64 {
+    key.wrapping_add(u64::from(to).wrapping_mul(stride))
+        .wrapping_sub(u64::from(from).wrapping_mul(stride))
+}
+
 fn hamming(space: &SearchSpace, idx: usize) -> Vec<usize> {
-    let base = space.config(idx).clone();
+    let base_key = space.key(idx);
     let mut out = Vec::new();
     for d in 0..space.dims() {
-        let orig = base[d];
-        let mut cand: Config = base.clone();
+        let orig = space.value_index(idx, d);
+        let stride = space.strides()[d];
         for v in 0..space.params[d].len() as u16 {
             if v == orig {
                 continue;
             }
-            cand[d] = v;
-            if let Some(j) = space.index_of(&cand) {
+            if let Some(j) = space.index_of_key(rekey(base_key, stride, orig, v)) {
                 out.push(j);
             }
         }
@@ -48,8 +63,20 @@ fn hamming(space: &SearchSpace, idx: usize) -> Vec<usize> {
     out
 }
 
+/// Key and new value index after a ±1 step in dimension `d`, or `None`
+/// at the domain boundary.
+#[inline]
+fn step_key(space: &SearchSpace, key: u64, d: usize, cur: u16, delta: i32) -> Option<(u64, u16)> {
+    let next = cur as i32 + delta;
+    if next < 0 || next as usize >= space.params[d].len() {
+        return None;
+    }
+    let next = next as u16;
+    Some((rekey(key, space.strides()[d], cur, next), next))
+}
+
 fn adjacent(space: &SearchSpace, idx: usize) -> Vec<usize> {
-    let base = space.config(idx).clone();
+    let base_key = space.key(idx);
     let dims = space.dims();
     let mut out = Vec::new();
     // Enumerate {-1, 0, +1}^dims deltas, skipping the zero delta. dims ≤ 15
@@ -57,15 +84,17 @@ fn adjacent(space: &SearchSpace, idx: usize) -> Vec<usize> {
     // matches Kernel Tuner's practical behaviour of small adjacent moves
     // while keeping enumeration cheap.
     for d1 in 0..dims {
+        let cur1 = space.value_index(idx, d1);
         for s1 in [-1i32, 1] {
-            let Some(c1) = step(&base, d1, s1, space) else { continue };
-            if let Some(j) = space.index_of(&c1) {
+            let Some((k1, _)) = step_key(space, base_key, d1, cur1, s1) else { continue };
+            if let Some(j) = space.index_of_key(k1) {
                 out.push(j);
             }
             for d2 in d1 + 1..dims {
+                let cur2 = space.value_index(idx, d2);
                 for s2 in [-1i32, 1] {
-                    if let Some(c2) = step(&c1, d2, s2, space) {
-                        if let Some(j) = space.index_of(&c2) {
+                    if let Some((k2, _)) = step_key(space, k1, d2, cur2, s2) {
+                        if let Some(j) = space.index_of_key(k2) {
                             out.push(j);
                         }
                     }
@@ -78,21 +107,10 @@ fn adjacent(space: &SearchSpace, idx: usize) -> Vec<usize> {
     out
 }
 
-fn step(cfg: &Config, d: usize, delta: i32, space: &SearchSpace) -> Option<Config> {
-    let cur = cfg[d] as i32;
-    let next = cur + delta;
-    if next < 0 || next as usize >= space.params[d].len() {
-        return None;
-    }
-    let mut out = cfg.clone();
-    out[d] = next as u16;
-    Some(out)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::space::constraint::Restriction;
+    use crate::space::constraint::{Expr, Restriction};
     use crate::space::param::Param;
 
     fn space() -> SearchSpace {
@@ -106,10 +124,21 @@ mod tests {
         SearchSpace::build("toy-r", params, &r)
     }
 
+    /// Every config isolated: y == 2x leaves no one-parameter move and no
+    /// ±1 adjacent move inside the space.
+    fn isolated() -> SearchSpace {
+        let params = vec![
+            Param::ints("x", &(0..5).collect::<Vec<_>>()),
+            Param::ints("y", &(0..9).collect::<Vec<_>>()),
+        ];
+        let r = vec![Restriction::expr(Expr::var("y").eq(Expr::var("x").mul(Expr::lit(2))))];
+        SearchSpace::build("iso", params, &r)
+    }
+
     #[test]
     fn hamming_counts_in_free_space() {
         let s = space();
-        let idx = s.index_of(&vec![0, 0]).unwrap();
+        let idx = s.index_of(&[0, 0]).unwrap();
         // (4-1) + (3-1) = 5 Hamming neighbors.
         assert_eq!(neighbors(&s, idx, Neighborhood::Hamming).len(), 5);
     }
@@ -123,7 +152,7 @@ mod tests {
                     .config(i)
                     .iter()
                     .zip(s.config(j))
-                    .filter(|(x, y)| x != y)
+                    .filter(|(x, y)| *x != y)
                     .count();
                 assert_eq!(diff, 1);
             }
@@ -137,7 +166,7 @@ mod tests {
             for j in neighbors(&s, i, Neighborhood::Adjacent) {
                 assert_ne!(i, j);
                 for (x, y) in s.config(i).iter().zip(s.config(j)) {
-                    assert!((*x as i32 - *y as i32).abs() <= 1);
+                    assert!((*x as i32 - y as i32).abs() <= 1);
                 }
             }
         }
@@ -169,6 +198,51 @@ mod tests {
                 sorted.dedup();
                 assert_eq!(sorted.len(), ns.len());
             }
+        }
+    }
+
+    /// Key-probe results must equal what the seed-era clone-and-hash
+    /// operators produced: brute-force over all config pairs.
+    #[test]
+    fn key_probes_match_brute_force() {
+        for s in [space(), restricted()] {
+            for i in 0..s.len() {
+                let ci = s.config(i);
+                let mut ham: Vec<usize> = Vec::new();
+                let mut adj: Vec<usize> = Vec::new();
+                for j in 0..s.len() {
+                    if i == j {
+                        continue;
+                    }
+                    let cj = s.config(j);
+                    let diffs = ci.iter().zip(&cj).filter(|(a, b)| a != b).count();
+                    if diffs == 1 {
+                        ham.push(j);
+                    }
+                    if diffs >= 1
+                        && diffs <= 2
+                        && ci.iter().zip(&cj).all(|(a, b)| (*a as i32 - *b as i32).abs() <= 1)
+                    {
+                        adj.push(j);
+                    }
+                }
+                let mut got_ham = neighbors(&s, i, Neighborhood::Hamming);
+                got_ham.sort_unstable();
+                assert_eq!(got_ham, ham, "{}: hamming mismatch at {i}", s.name);
+                assert_eq!(neighbors(&s, i, Neighborhood::Adjacent), adj, "{}: adjacent mismatch at {i}", s.name);
+            }
+        }
+    }
+
+    /// Heavily restricted spaces can isolate configs entirely — the
+    /// operators must report empty neighborhoods, not panic.
+    #[test]
+    fn isolated_configs_have_no_neighbors() {
+        let s = isolated();
+        assert_eq!(s.len(), 5, "one config per x value");
+        for i in 0..s.len() {
+            assert!(neighbors(&s, i, Neighborhood::Hamming).is_empty());
+            assert!(neighbors(&s, i, Neighborhood::Adjacent).is_empty());
         }
     }
 }

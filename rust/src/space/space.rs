@@ -1,158 +1,531 @@
-//! The enumerated, restricted, normalized search space (§III-D).
+//! The enumerated, restricted, normalized search space (§III-D), stored
+//! columnar.
 //!
 //! The paper's core representational choice: a *discrete* search space
 //! where every parameter configuration is known up front, values are
 //! normalized linearly per parameter, and the acquisition function is
 //! optimized *exhaustively over the non-evaluated configurations only*.
-//! This module materializes that representation: the restricted Cartesian
-//! product, the normalized coordinate matrix, and an index for O(1)
-//! membership tests (needed by the neighbor operators of SA/MLS/GA).
+//!
+//! This module materializes that representation with a cache-friendly,
+//! zero-copy layout:
+//!
+//! - **struct-of-arrays value indices** — one contiguous `Vec<u16>` column
+//!   per dimension instead of row-wise `Vec<Vec<u16>>` configs (16× less
+//!   pointer chasing, no per-config allocation);
+//! - **packed mixed-radix keys** — each config folds into one `u64`
+//!   (`key = Σ value_index[d] · stride[d]`, least-significant stride on
+//!   the *last* dimension, so enumeration order is ascending-key order and
+//!   a neighbor probe is one add/subtract away), with an alloc-free
+//!   open-addressing [`index`](SearchSpace::index_of) replacing the old
+//!   `HashMap<Vec<u16>, usize>` that cloned a `Vec` per lookup;
+//! - **shard-aligned `f32` normalized tiles** — the normalized coordinate
+//!   matrix is one `Arc<[f32]>` (row-major `len × dims`), so any
+//!   contiguous candidate range is a contiguous tile slice; the GP hot
+//!   path ([`IncrementalGp`](crate::gp::IncrementalGp)) and the samplers
+//!   borrow it via [`norm_tiles`](SearchSpace::norm_tiles) without
+//!   per-run re-normalization or copies;
+//! - **constraint-propagating enumeration** — expression restrictions
+//!   ([`Expr`](crate::space::constraint::Expr)) declare the dimensions
+//!   they touch, so partial assignments are rejected at the deepest bound
+//!   prefix instead of at the leaves, and the first dimension's value
+//!   range fans out across a [`ShardPool`] ([`SearchSpace::build_par`]).
+//!   Both paths visit values in odometer order, so the config ordering is
+//!   identical to the seed-era serial odometer bit for bit (asserted by
+//!   `gpusim::kernels` tests on all five paper kernels).
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::space::constraint::{Assignment, Restriction};
+use crate::space::constraint::{Assignment, Restriction, VarScope};
 use crate::space::param::{PValue, Param};
+use crate::util::pool::ShardPool;
 
 /// A parameter configuration, as per-parameter value indices.
 pub type Config = Vec<u16>;
 
+/// Alloc-free open-addressing map from packed config key to position.
+/// Linear probing over a power-of-two table at ≤ 50% load; lookups do no
+/// hashing of heap data and no allocation (the old index hashed a
+/// `Vec<u16>` clone per probe).
+struct KeyIndex {
+    /// (key, position) slots; `u32::MAX` position marks an empty slot.
+    slots: Vec<(u64, u32)>,
+    mask: usize,
+}
+
+const EMPTY_SLOT: u32 = u32::MAX;
+
+#[inline]
+fn key_hash(key: u64) -> usize {
+    // Fibonacci multiplicative hash; high bits feed the mask.
+    (key.wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 29) as usize
+}
+
+impl KeyIndex {
+    fn build(keys: &[u64]) -> KeyIndex {
+        assert!(keys.len() < EMPTY_SLOT as usize, "space too large for a u32-position index");
+        let cap = (keys.len().max(1) * 2).next_power_of_two();
+        let mut idx = KeyIndex { slots: vec![(0, EMPTY_SLOT); cap], mask: cap - 1 };
+        for (pos, &k) in keys.iter().enumerate() {
+            idx.insert(k, pos as u32);
+        }
+        idx
+    }
+
+    fn insert(&mut self, key: u64, pos: u32) {
+        let mut i = key_hash(key) & self.mask;
+        loop {
+            let (k, p) = self.slots[i];
+            if p == EMPTY_SLOT || k == key {
+                // Duplicate keys keep the last position (the old
+                // HashMap-based index behaved the same on duplicate
+                // configs from cache imports).
+                self.slots[i] = (key, pos);
+                return;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    #[inline]
+    fn get(&self, key: u64) -> Option<usize> {
+        let mut i = key_hash(key) & self.mask;
+        loop {
+            let (k, p) = self.slots[i];
+            if p == EMPTY_SLOT {
+                return None;
+            }
+            if k == key {
+                return Some(p as usize);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+}
+
 pub struct SearchSpace {
     pub name: String,
     pub params: Vec<Param>,
-    /// All configurations that satisfy the restrictions.
-    configs: Vec<Config>,
-    /// Flattened row-major normalized coordinates: `configs.len() × dims`.
-    norm: Vec<f64>,
-    /// Config -> position in `configs`.
-    index: HashMap<Config, usize>,
+    /// Struct-of-arrays value indices: `columns[d][i]` is config `i`'s
+    /// value index in dimension `d`.
+    columns: Vec<Vec<u16>>,
+    len: usize,
+    /// Mixed-radix strides: `strides[dims-1] == 1`, ascending towards
+    /// dimension 0 (the odometer's most significant digit).
+    strides: Vec<u64>,
+    /// Packed key per config, in config order.
+    keys: Vec<u64>,
+    index: KeyIndex,
+    /// Row-major `len × dims` normalized coordinates (the shard-aligned
+    /// f32 tiles the GP borrows).
+    norm: Arc<[f32]>,
     /// Size of the unrestricted Cartesian product.
     pub cartesian_size: usize,
 }
 
+/// Prefix view for constraint propagation: dimensions `>= bound` read as
+/// unbound (`None`), failing any expression that touches them — which the
+/// enumerator never asks, because restrictions are bucketed by their
+/// deepest touched dimension.
+struct PrefixScope<'a> {
+    params: &'a [Param],
+    cursor: &'a [u16],
+    bound: usize,
+}
+
+impl VarScope for PrefixScope<'_> {
+    fn int(&self, name: &str) -> Option<i64> {
+        let d = self.params.iter().position(|p| p.name == name)?;
+        if d >= self.bound {
+            return None;
+        }
+        // Shared coercion: prefix pruning must agree with leaf checks.
+        crate::space::constraint::pvalue_int(&self.params[d].values[self.cursor[d] as usize])
+    }
+
+    fn str_val(&self, name: &str) -> Option<&str> {
+        let d = self.params.iter().position(|p| p.name == name)?;
+        if d >= self.bound {
+            return None;
+        }
+        match &self.params[d].values[self.cursor[d] as usize] {
+            PValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Restrictions bucketed by check depth: entry `d` lists the restrictions
+/// decidable once dimensions `0..=d` are bound. Expression restrictions
+/// land at their deepest touched dimension (constraint propagation);
+/// closures are opaque and land at the leaf.
+fn restriction_depths(params: &[Param], restrictions: &[Restriction]) -> Vec<Vec<usize>> {
+    let dims = params.len();
+    let mut at: Vec<Vec<usize>> = vec![Vec::new(); dims];
+    for (ri, r) in restrictions.iter().enumerate() {
+        let depth = match r.touched_dims(params) {
+            Some(touched) => touched.last().copied().unwrap_or(0),
+            None => dims - 1,
+        };
+        at[depth].push(ri);
+    }
+    at
+}
+
+/// Check every restriction bucketed at depth `bound - 1` against the
+/// cursor prefix `cursor[..bound]`.
+fn prefix_passes(
+    params: &[Param],
+    restrictions: &[Restriction],
+    checks: &[usize],
+    cursor: &[u16],
+    bound: usize,
+) -> bool {
+    if checks.is_empty() {
+        return true;
+    }
+    let scope = PrefixScope { params, cursor, bound };
+    for &ri in checks {
+        let r = &restrictions[ri];
+        let ok = match r.as_expr() {
+            Some(e) => e.holds(&scope),
+            None => {
+                debug_assert_eq!(bound, params.len(), "closure restrictions check at the leaf");
+                r.check(&Assignment::new(params, cursor))
+            }
+        };
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+/// Depth-first enumeration over dimensions `depth..dims` (values ascend,
+/// i.e. odometer order), appending surviving configs to `columns`.
+fn dfs(
+    params: &[Param],
+    restrictions: &[Restriction],
+    at: &[Vec<usize>],
+    cursor: &mut [u16],
+    depth: usize,
+    columns: &mut [Vec<u16>],
+) {
+    let dims = params.len();
+    for v in 0..params[depth].len() as u16 {
+        cursor[depth] = v;
+        if !prefix_passes(params, restrictions, &at[depth], cursor, depth + 1) {
+            continue;
+        }
+        if depth + 1 == dims {
+            for (d, col) in columns.iter_mut().enumerate() {
+                col.push(cursor[d]);
+            }
+        } else {
+            dfs(params, restrictions, at, cursor, depth + 1, columns);
+        }
+    }
+}
+
+/// Enumerate the restricted product into columns, optionally fanning the
+/// first dimension's value range out across `pool`. Job boundaries follow
+/// ascending dim-0 values and each job enumerates its subtree in odometer
+/// order, so concatenation reproduces the serial order exactly.
+fn enumerate_columns(
+    params: &[Param],
+    restrictions: &[Restriction],
+    pool: Option<&ShardPool>,
+) -> Vec<Vec<u16>> {
+    let dims = params.len();
+    let at = restriction_depths(params, restrictions);
+    let radix0 = params[0].len();
+    let workers = pool.map_or(0, ShardPool::threads);
+    if workers == 0 || radix0 < 2 {
+        let mut columns: Vec<Vec<u16>> = vec![Vec::new(); dims];
+        let mut cursor = vec![0u16; dims];
+        dfs(params, restrictions, &at, &mut cursor, 0, &mut columns);
+        return columns;
+    }
+
+    // One job per dim-0 value chunk; ~4 chunks per worker keeps the pool
+    // busy when restrictions make subtrees uneven.
+    let n_jobs = (workers * 4).min(radix0);
+    let mut parts: Vec<Vec<Vec<u16>>> = Vec::with_capacity(n_jobs);
+    parts.resize_with(n_jobs, || vec![Vec::new(); dims]);
+    {
+        let at = &at;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = parts
+            .iter_mut()
+            .enumerate()
+            .map(|(ji, slot)| {
+                let lo = ji * radix0 / n_jobs;
+                let hi = (ji + 1) * radix0 / n_jobs;
+                Box::new(move || {
+                    let mut cursor = vec![0u16; dims];
+                    for v0 in lo..hi {
+                        cursor[0] = v0 as u16;
+                        if !prefix_passes(params, restrictions, &at[0], &cursor, 1) {
+                            continue;
+                        }
+                        if dims == 1 {
+                            slot[0].push(v0 as u16);
+                        } else {
+                            dfs(params, restrictions, at, &mut cursor, 1, slot);
+                        }
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.expect("workers > 0").run(jobs);
+    }
+    let mut columns: Vec<Vec<u16>> =
+        (0..dims).map(|d| Vec::with_capacity(parts.iter().map(|p| p[d].len()).sum())).collect();
+    for part in parts {
+        for (d, col) in part.into_iter().enumerate() {
+            columns[d].extend(col);
+        }
+    }
+    columns
+}
+
 impl SearchSpace {
-    /// Enumerate the restricted Cartesian product.
+    /// Enumerate the restricted Cartesian product serially.
     pub fn build(name: &str, params: Vec<Param>, restrictions: &[Restriction]) -> SearchSpace {
-        assert!(!params.is_empty());
-        for p in &params {
-            assert!(!p.is_empty(), "parameter {} has empty domain", p.name);
-            assert!(p.len() < u16::MAX as usize);
-        }
-        let dims = params.len();
-        let cartesian_size = params.iter().map(|p| p.len()).product();
-        let mut configs = Vec::new();
-        let mut cursor: Config = vec![0; dims];
-        loop {
-            let a = Assignment::new(&params, &cursor);
-            if restrictions.iter().all(|r| r.check(&a)) {
-                configs.push(cursor.clone());
-            }
-            // Odometer increment.
-            let mut d = dims;
-            loop {
-                if d == 0 {
-                    // Wrapped past the most significant digit: done.
-                    let norm = Self::normalize(&params, &configs);
-                    let index = configs.iter().cloned().zip(0..).collect();
-                    return SearchSpace { name: name.into(), params, configs, norm, index, cartesian_size };
-                }
-                d -= 1;
-                cursor[d] += 1;
-                if (cursor[d] as usize) < params[d].len() {
-                    break;
-                }
-                cursor[d] = 0;
-            }
-        }
+        Self::build_with(name, params, restrictions, None)
+    }
+
+    /// Enumerate the restricted Cartesian product shard-parallel on
+    /// `pool`. Config order is bit-identical to [`build`](Self::build).
+    pub fn build_par(
+        name: &str,
+        params: Vec<Param>,
+        restrictions: &[Restriction],
+        pool: &ShardPool,
+    ) -> SearchSpace {
+        Self::build_with(name, params, restrictions, Some(pool))
+    }
+
+    fn build_with(
+        name: &str,
+        params: Vec<Param>,
+        restrictions: &[Restriction],
+        pool: Option<&ShardPool>,
+    ) -> SearchSpace {
+        // The overflow check runs *before* enumeration: a wrapped product
+        // would otherwise be noticed only after an unenumerable walk.
+        let cartesian_size = Self::validate(name, &params);
+        let columns = enumerate_columns(&params, restrictions, pool);
+        Self::assemble(name, params, columns, cartesian_size)
     }
 
     /// Build from an explicit configuration list (simulation-mode cache
     /// import: the restrictions that produced the list are not replayed).
     pub fn from_configs(name: &str, params: Vec<Param>, configs: Vec<Config>) -> SearchSpace {
+        let cartesian_size = Self::validate(name, &params);
         let dims = params.len();
+        let mut columns: Vec<Vec<u16>> = (0..dims).map(|_| Vec::with_capacity(configs.len())).collect();
         for cfg in &configs {
             assert_eq!(cfg.len(), dims, "config arity mismatch");
             for (d, &vi) in cfg.iter().enumerate() {
                 assert!((vi as usize) < params[d].len(), "value index out of range");
+                columns[d].push(vi);
             }
         }
-        let cartesian_size = params.iter().map(|p| p.len()).product();
-        let norm = Self::normalize(&params, &configs);
-        let index = configs.iter().cloned().zip(0..).collect();
-        SearchSpace { name: name.into(), params, configs, norm, index, cartesian_size }
+        Self::assemble(name, params, columns, cartesian_size)
     }
 
-    fn normalize(params: &[Param], configs: &[Config]) -> Vec<f64> {
+    /// Validate the parameter set and return the checked Cartesian size.
+    /// Satellite fix: the seed-era `product()` silently wrapped on
+    /// overflow; a spec large enough to wrap cannot be enumerated (or
+    /// packed into u64 keys) anyway, so fail loudly and early.
+    fn validate(name: &str, params: &[Param]) -> usize {
+        assert!(!params.is_empty(), "space '{name}' has no parameters");
+        let mut cartesian_size: usize = 1;
+        for p in params {
+            assert!(!p.is_empty(), "parameter {} has empty domain", p.name);
+            assert!(p.len() < u16::MAX as usize);
+            cartesian_size = cartesian_size.checked_mul(p.len()).unwrap_or_else(|| {
+                panic!(
+                    "space '{name}': Cartesian product overflows usize \
+                     ({} parameters; restrict the domains before building)",
+                    params.len()
+                )
+            });
+        }
+        cartesian_size
+    }
+
+    fn assemble(
+        name: &str,
+        params: Vec<Param>,
+        columns: Vec<Vec<u16>>,
+        cartesian_size: usize,
+    ) -> SearchSpace {
         let dims = params.len();
-        let mut norm = Vec::with_capacity(configs.len() * dims);
-        for cfg in configs {
-            for (d, &vi) in cfg.iter().enumerate() {
-                norm.push(params[d].norm(vi as usize));
+        let len = columns[0].len();
+        debug_assert!(columns.iter().all(|c| c.len() == len));
+
+        // Mixed-radix strides (last dimension fastest — the odometer's
+        // least significant digit — so enumeration order == key order).
+        let mut strides = vec![1u64; dims];
+        for d in (0..dims.saturating_sub(1)).rev() {
+            strides[d] = strides[d + 1]
+                .checked_mul(params[d + 1].len() as u64)
+                .expect("stride fits u64: cartesian_size fits usize");
+        }
+
+        let keys: Vec<u64> = (0..len)
+            .map(|i| {
+                columns
+                    .iter()
+                    .zip(&strides)
+                    .map(|(col, &s)| u64::from(col[i]) * s)
+                    .sum()
+            })
+            .collect();
+        let index = KeyIndex::build(&keys);
+
+        let mut norm = Vec::with_capacity(len * dims);
+        for i in 0..len {
+            for (d, p) in params.iter().enumerate() {
+                norm.push(p.norm(columns[d][i] as usize) as f32);
             }
         }
-        norm
+
+        SearchSpace {
+            name: name.into(),
+            params,
+            columns,
+            len,
+            strides,
+            keys,
+            index,
+            norm: norm.into(),
+            cartesian_size,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.configs.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.configs.is_empty()
+        self.len == 0
     }
 
     pub fn dims(&self) -> usize {
         self.params.len()
     }
 
-    pub fn config(&self, i: usize) -> &Config {
-        &self.configs[i]
+    /// Config `i` as owned value indices (materialized from the columns).
+    pub fn config(&self, i: usize) -> Config {
+        self.columns.iter().map(|c| c[i]).collect()
+    }
+
+    /// Value index of config `i` in dimension `d` — the columnar
+    /// fast path (no materialization).
+    #[inline]
+    pub fn value_index(&self, i: usize, d: usize) -> u16 {
+        self.columns[d][i]
+    }
+
+    /// Packed mixed-radix key of config `i`.
+    #[inline]
+    pub fn key(&self, i: usize) -> u64 {
+        self.keys[i]
+    }
+
+    /// Mixed-radix strides (`strides[dims-1] == 1`); a single-dimension
+    /// move from key `k` is `k ± delta · strides[d]`.
+    pub fn strides(&self) -> &[u64] {
+        &self.strides
+    }
+
+    /// Pack explicit value indices into a key; `None` when any index is
+    /// out of its dimension's radix.
+    pub fn pack(&self, cfg: &[u16]) -> Option<u64> {
+        if cfg.len() != self.dims() {
+            return None;
+        }
+        let mut key = 0u64;
+        for ((&vi, p), &s) in cfg.iter().zip(&self.params).zip(&self.strides) {
+            if (vi as usize) >= p.len() {
+                return None;
+            }
+            key += u64::from(vi) * s;
+        }
+        Some(key)
     }
 
     /// Normalized coordinates of config `i` (length = dims).
-    pub fn point(&self, i: usize) -> &[f64] {
+    pub fn point(&self, i: usize) -> &[f32] {
         let d = self.dims();
         &self.norm[i * d..(i + 1) * d]
     }
 
     /// The full normalized matrix, row-major `len × dims`.
-    pub fn points(&self) -> &[f64] {
+    pub fn points(&self) -> &[f32] {
         &self.norm
     }
 
-    pub fn index_of(&self, cfg: &Config) -> Option<usize> {
-        self.index.get(cfg).copied()
+    /// Zero-copy handle to the normalized tiles: a refcount bump, not a
+    /// matrix copy. Row-major layout means any contiguous candidate range
+    /// `[start, end)` is the contiguous slice
+    /// `tiles[start*dims .. end*dims]` — exactly the per-shard tile the
+    /// sharded GP sweeps.
+    pub fn norm_tiles(&self) -> Arc<[f32]> {
+        Arc::clone(&self.norm)
     }
 
-    /// Typed assignment view of config `i`.
+    pub fn index_of(&self, cfg: &[u16]) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        self.index.get(self.pack(cfg)?)
+    }
+
+    /// Position of the config with packed key `key`, if it survived the
+    /// restrictions — the alloc-free probe the neighbor operators use.
+    #[inline]
+    pub fn index_of_key(&self, key: u64) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        self.index.get(key)
+    }
+
+    /// Typed assignment view of config `i` (borrows the columns — no
+    /// materialization).
     pub fn assignment(&self, i: usize) -> Assignment<'_> {
-        Assignment::new(&self.params, &self.configs[i])
+        assert!(i < self.len);
+        Assignment::from_columns(&self.params, &self.columns, i)
     }
 
     /// Value of parameter `d` in config `i`.
     pub fn value(&self, i: usize, d: usize) -> &PValue {
-        &self.params[d].values[self.configs[i][d] as usize]
+        &self.params[d].values[self.columns[d][i] as usize]
     }
 
     /// Human-readable rendering of config `i`.
     pub fn describe(&self, i: usize) -> String {
         self.params
             .iter()
-            .zip(self.configs[i].iter())
-            .map(|(p, &vi)| format!("{}={}", p.name, p.values[vi as usize]))
+            .enumerate()
+            .map(|(d, p)| format!("{}={}", p.name, p.values[self.columns[d][i] as usize]))
             .collect::<Vec<_>>()
             .join(", ")
     }
 
     /// Fraction of the Cartesian product that survives the restrictions.
     pub fn restriction_survival(&self) -> f64 {
-        self.configs.len() as f64 / self.cartesian_size as f64
+        self.len as f64 / self.cartesian_size as f64
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::space::constraint::Restriction;
+    use crate::space::constraint::{Expr, Restriction};
+    use crate::space::testref::odometer_reference;
 
     fn small_space() -> SearchSpace {
         let params = vec![
@@ -161,6 +534,17 @@ mod tests {
             Param::bools("pad"),
         ];
         let restr = vec![Restriction::new("bx*tile<=128", |a| a.i("bx") * a.i("tile") <= 128)];
+        SearchSpace::build("toy", params, &restr)
+    }
+
+    fn small_space_dsl() -> SearchSpace {
+        let params = vec![
+            Param::ints("bx", &[16, 32, 64]),
+            Param::ints("tile", &[1, 2, 4, 8]),
+            Param::bools("pad"),
+        ];
+        let restr =
+            vec![Restriction::expr(Expr::var("bx").mul(Expr::var("tile")).le(Expr::lit(128)))];
         SearchSpace::build("toy", params, &restr)
     }
 
@@ -191,12 +575,112 @@ mod tests {
     }
 
     #[test]
+    fn enumeration_matches_the_seed_odometer() {
+        let params = vec![
+            Param::ints("bx", &[16, 32, 64]),
+            Param::ints("tile", &[1, 2, 4, 8]),
+            Param::bools("pad"),
+        ];
+        let restr = vec![Restriction::new("bx*tile<=128", |a| a.i("bx") * a.i("tile") <= 128)];
+        let expected = odometer_reference(&params, &restr);
+        let s = small_space();
+        assert_eq!(s.len(), expected.len());
+        for (i, cfg) in expected.iter().enumerate() {
+            assert_eq!(&s.config(i), cfg, "order diverged at {i}");
+        }
+        // Keys ascend exactly when enumeration is odometer-ordered.
+        for i in 1..s.len() {
+            assert!(s.key(i - 1) < s.key(i), "keys must ascend");
+        }
+    }
+
+    #[test]
+    fn dsl_restrictions_prune_to_the_same_space() {
+        let a = small_space();
+        let b = small_space_dsl();
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert_eq!(a.config(i), b.config(i));
+        }
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_serial() {
+        let params = || {
+            vec![
+                Param::ints("a", &(0..13).collect::<Vec<_>>()),
+                Param::ints("b", &(0..11).collect::<Vec<_>>()),
+                Param::ints("c", &(0..7).collect::<Vec<_>>()),
+            ]
+        };
+        let restr = || {
+            vec![
+                Restriction::expr(
+                    Expr::var("a").add(Expr::var("b")).rem(Expr::lit(3)).ne(Expr::lit(0)),
+                ),
+                Restriction::new("closure: a*c<=40", |x| x.i("a") * x.i("c") <= 40),
+            ]
+        };
+        let serial = SearchSpace::build("par", params(), &restr());
+        for threads in [2, 4, 8] {
+            let pool = ShardPool::new(threads);
+            let par = SearchSpace::build_par("par", params(), &restr(), &pool);
+            assert_eq!(par.len(), serial.len(), "threads={threads}");
+            for i in 0..serial.len() {
+                assert_eq!(par.key(i), serial.key(i), "threads={threads} config {i}");
+            }
+            assert_eq!(par.points(), serial.points(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn prefix_pruning_matches_leaf_checking() {
+        // The same predicate as expression (pruned at depth of its deepest
+        // var) and as closure (checked at the leaf) must yield the same
+        // space — constraint propagation only skips work, never configs.
+        let params = || {
+            vec![
+                Param::ints("x", &(1..=9).collect::<Vec<_>>()),
+                Param::ints("y", &(1..=8).collect::<Vec<_>>()),
+                Param::ints("z", &(1..=5).collect::<Vec<_>>()),
+            ]
+        };
+        // Touches x,y only -> checked at depth 1, pruning z's subtree.
+        let dsl = vec![Restriction::expr(Expr::var("x").mul(Expr::var("y")).le(Expr::lit(20)))];
+        let closure = vec![Restriction::new("xy<=20", |a| a.i("x") * a.i("y") <= 20)];
+        let a = SearchSpace::build("p", params(), &dsl);
+        let b = SearchSpace::build("p", params(), &closure);
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert_eq!(a.config(i), b.config(i));
+        }
+    }
+
+    #[test]
     fn index_roundtrips() {
         let s = small_space();
         for i in 0..s.len() {
-            assert_eq!(s.index_of(s.config(i)), Some(i));
+            assert_eq!(s.index_of(&s.config(i)), Some(i));
+            assert_eq!(s.index_of_key(s.key(i)), Some(i));
         }
-        assert_eq!(s.index_of(&vec![2, 3, 0]), None); // 64*8 violates
+        assert_eq!(s.index_of(&[2, 3, 0]), None); // 64*8 violates
+        assert_eq!(s.index_of(&[0, 0, 7]), None, "out-of-radix index");
+        assert_eq!(s.index_of(&[0, 0]), None, "arity mismatch");
+    }
+
+    #[test]
+    fn packed_keys_are_mixed_radix() {
+        let s = small_space();
+        // strides: dims (3,4,2) -> [8, 2, 1].
+        assert_eq!(s.strides(), &[8, 2, 1]);
+        for i in 0..s.len() {
+            let cfg = s.config(i);
+            let expect =
+                u64::from(cfg[0]) * 8 + u64::from(cfg[1]) * 2 + u64::from(cfg[2]);
+            assert_eq!(s.key(i), expect);
+            assert_eq!(s.pack(&cfg), Some(expect));
+        }
+        assert_eq!(s.pack(&[0, 9, 0]), None);
     }
 
     #[test]
@@ -208,6 +692,15 @@ mod tests {
                 assert!((0.0..=1.0).contains(&x));
             }
         }
+    }
+
+    #[test]
+    fn norm_tiles_are_zero_copy() {
+        let s = small_space();
+        let a = s.norm_tiles();
+        let b = s.norm_tiles();
+        assert!(Arc::ptr_eq(&a, &b), "tiles must share one allocation");
+        assert_eq!(&a[..], s.points());
     }
 
     #[test]
@@ -225,5 +718,41 @@ mod tests {
         let s = small_space();
         let d = s.describe(0);
         assert!(d.contains("bx=") && d.contains("tile=") && d.contains("pad="));
+    }
+
+    #[test]
+    fn empty_restricted_space_is_legal() {
+        let params = vec![Param::ints("a", &[1, 2])];
+        let r = vec![Restriction::expr(Expr::var("a").gt(Expr::lit(10)))];
+        let s = SearchSpace::build("void", params, &r);
+        assert!(s.is_empty());
+        assert_eq!(s.index_of(&[0]), None);
+        assert_eq!(s.index_of_key(0), None);
+    }
+
+    /// Satellite regression: the seed-era `product()` wrapped silently on
+    /// large specs; the checked build must fail with a clear message
+    /// before attempting enumeration.
+    #[test]
+    #[should_panic(expected = "Cartesian product overflows usize")]
+    fn cartesian_overflow_is_a_clear_error() {
+        let vals: Vec<i64> = (0..8192).collect();
+        let params: Vec<Param> =
+            (0..5).map(|d| Param::ints(&format!("p{d}"), &vals)).collect();
+        // 8192^5 = 2^65 — past usize on every supported target.
+        let _ = SearchSpace::build("huge", params, &[]);
+    }
+
+    #[test]
+    fn from_configs_preserves_order_and_index() {
+        let params = vec![Param::ints("a", &[1, 2, 3]), Param::ints("b", &[1, 2])];
+        let configs: Vec<Config> = vec![vec![2, 1], vec![0, 0], vec![1, 1]];
+        let s = SearchSpace::from_configs("import", params, configs.clone());
+        assert_eq!(s.len(), 3);
+        for (i, cfg) in configs.iter().enumerate() {
+            assert_eq!(&s.config(i), cfg);
+            assert_eq!(s.index_of(cfg), Some(i));
+        }
+        assert_eq!(s.cartesian_size, 6);
     }
 }

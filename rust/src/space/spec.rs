@@ -1,0 +1,427 @@
+//! Declarative search-space specification: typed parameters plus
+//! [`Expr`]-DSL restrictions, as *data*.
+//!
+//! A [`SpaceSpec`] is the serializable twin of a hand-coded
+//! `(params, restrictions)` pair: it builds through a fluent builder API,
+//! round-trips losslessly through JSON (`util::json` / `util::jsonparse`
+//! — no serde in the vendor set), and materializes into a columnar
+//! [`SearchSpace`] serially ([`SpaceSpec::build`]) or shard-parallel on a
+//! [`ShardPool`] ([`SpaceSpec::build_par`]). Benchmark-suite practice
+//! (arXiv:2210.01465, arXiv:2203.13577) runs many kernels × devices ×
+//! spaces defined as files; this is the type those files parse into, and
+//! what `ktbo sweep/tune --space <file.json>` consumes.
+//!
+//! # JSON schema
+//!
+//! ```json
+//! {
+//!   "name": "gemm",
+//!   "params": [
+//!     {"name": "MWG", "values": [16, 32, 64, 128]},
+//!     {"name": "SA", "values": [false, true]},
+//!     {"name": "method", "values": ["scan", "tree"]}
+//!   ],
+//!   "restrictions": [
+//!     {"expr": {"op": "eq", "args": [
+//!       {"op": "rem", "args": [{"var": "KWG"}, {"var": "KWI"}]},
+//!       {"lit": 0}]}},
+//!     {"name": "optional label", "expr": {"...": "..."}}
+//!   ]
+//! }
+//! ```
+//!
+//! Values are numbers (integers stay integers, others parse as floats),
+//! booleans, or strings (categoricals); value *order* is meaningful
+//! (§III-D1 — normalization is linear in the index). See
+//! [`Expr::to_json`] for the expression grammar.
+
+use std::path::Path;
+
+use crate::space::constraint::{Expr, Restriction};
+use crate::space::param::{PValue, Param};
+use crate::space::space::SearchSpace;
+use crate::util::json::Json;
+use crate::util::jsonparse;
+use crate::util::pool::ShardPool;
+
+/// One declared parameter: a name plus its ordered value domain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub values: Vec<PValue>,
+}
+
+/// A named restriction: an optional label plus the predicate expression.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RestrictionSpec {
+    /// Display name; defaults to the expression's rendering.
+    pub name: String,
+    pub expr: Expr,
+}
+
+/// Declarative search-space specification (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpaceSpec {
+    pub name: String,
+    params: Vec<ParamSpec>,
+    restrictions: Vec<RestrictionSpec>,
+}
+
+impl SpaceSpec {
+    pub fn new(name: &str) -> SpaceSpec {
+        SpaceSpec { name: name.to_string(), params: Vec::new(), restrictions: Vec::new() }
+    }
+
+    fn param(mut self, name: &str, values: Vec<PValue>) -> SpaceSpec {
+        assert!(
+            !self.params.iter().any(|p| p.name == name),
+            "space '{}' declares parameter '{name}' twice",
+            self.name
+        );
+        self.params.push(ParamSpec { name: name.to_string(), values });
+        self
+    }
+
+    /// Integer parameter with the given ordered domain.
+    pub fn ints(self, name: &str, values: &[i64]) -> SpaceSpec {
+        self.param(name, values.iter().map(|&v| PValue::Int(v)).collect())
+    }
+
+    pub fn floats(self, name: &str, values: &[f64]) -> SpaceSpec {
+        self.param(name, values.iter().map(|&v| PValue::Float(v)).collect())
+    }
+
+    /// Boolean parameter with domain `[false, true]`.
+    pub fn bools(self, name: &str) -> SpaceSpec {
+        self.param(name, vec![PValue::Bool(false), PValue::Bool(true)])
+    }
+
+    pub fn cats(self, name: &str, values: &[&'static str]) -> SpaceSpec {
+        self.param(name, values.iter().map(|&v| PValue::Str(v)).collect())
+    }
+
+    /// Add a restriction named by the expression's rendering.
+    pub fn restrict(mut self, e: Expr) -> SpaceSpec {
+        self.restrictions.push(RestrictionSpec { name: e.to_string(), expr: e });
+        self
+    }
+
+    /// Add a restriction with an explicit display name.
+    pub fn restrict_named(mut self, name: &str, e: Expr) -> SpaceSpec {
+        self.restrictions.push(RestrictionSpec { name: name.to_string(), expr: e });
+        self
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_restrictions(&self) -> usize {
+        self.restrictions.len()
+    }
+
+    /// Materialize the declared parameters.
+    pub fn params(&self) -> Vec<Param> {
+        self.params
+            .iter()
+            .map(|p| Param { name: p.name.clone(), values: p.values.clone() })
+            .collect()
+    }
+
+    /// Materialize the declared restrictions (all expression-backed, so
+    /// the enumerator can prune at the deepest bound prefix).
+    pub fn restrictions(&self) -> Vec<Restriction> {
+        self.restrictions
+            .iter()
+            .map(|r| Restriction::named_expr(&r.name, r.expr.clone()))
+            .collect()
+    }
+
+    /// Enumerate the restricted space serially.
+    pub fn build(&self) -> SearchSpace {
+        SearchSpace::build(&self.name, self.params(), &self.restrictions())
+    }
+
+    /// Enumerate the restricted space shard-parallel on `pool`. The
+    /// result — including config order — is bit-identical to [`build`](Self::build).
+    pub fn build_par(&self, pool: &ShardPool) -> SearchSpace {
+        SearchSpace::build_par(&self.name, self.params(), &self.restrictions(), pool)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let params: Vec<Json> = self
+            .params
+            .iter()
+            .map(|p| {
+                let values: Vec<Json> = p
+                    .values
+                    .iter()
+                    .map(|v| match v {
+                        PValue::Int(x) => {
+                            assert!(
+                                x.abs() <= crate::space::constraint::MAX_JSON_INT,
+                                "parameter '{}': value {x} exceeds the JSON-exact integer range (±2^53)",
+                                p.name
+                            );
+                            Json::Num(*x as f64)
+                        }
+                        PValue::Float(x) => Json::Num(*x),
+                        PValue::Bool(b) => Json::Bool(*b),
+                        PValue::Str(s) => Json::Str((*s).to_string()),
+                    })
+                    .collect();
+                Json::obj().set("name", p.name.as_str()).set("values", Json::Arr(values))
+            })
+            .collect();
+        let restrictions: Vec<Json> = self
+            .restrictions
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                // The default name is derived from the expression; only a
+                // custom label needs to be carried.
+                if r.name != r.expr.to_string() {
+                    o = o.set("name", r.name.as_str());
+                }
+                o.set("expr", r.expr.to_json())
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("params", Json::Arr(params))
+            .set("restrictions", Json::Arr(restrictions))
+    }
+
+    pub fn from_json(j: &Json) -> Result<SpaceSpec, String> {
+        let name = j.get("name").and_then(Json::as_str).ok_or("space spec missing 'name'")?;
+        let params_json = j.get("params").and_then(Json::as_arr).ok_or("space spec missing 'params'")?;
+        if params_json.is_empty() {
+            return Err("space spec declares no parameters".into());
+        }
+        let mut spec = SpaceSpec::new(name);
+        for pj in params_json {
+            let pname = pj.get("name").and_then(Json::as_str).ok_or("param missing 'name'")?;
+            let values_json =
+                pj.get("values").and_then(Json::as_arr).ok_or("param missing 'values'")?;
+            if values_json.is_empty() {
+                return Err(format!("parameter '{pname}' has an empty domain"));
+            }
+            let values: Vec<PValue> = values_json
+                .iter()
+                .map(|v| match v {
+                    Json::Num(x) if *x == x.trunc() => {
+                        if x.abs() > crate::space::constraint::MAX_JSON_INT as f64 {
+                            return Err(format!(
+                                "parameter '{pname}': value {x} exceeds the JSON-exact \
+                                 integer range (±2^53)"
+                            ));
+                        }
+                        Ok(PValue::Int(*x as i64))
+                    }
+                    Json::Num(x) => Ok(PValue::Float(*x)),
+                    Json::Bool(b) => Ok(PValue::Bool(*b)),
+                    // PValue::Str holds &'static str; spec strings get
+                    // leaked once per load (bounded, same policy as the
+                    // simulation-mode cache importer).
+                    Json::Str(s) => Ok(PValue::Str(Box::leak(s.clone().into_boxed_str()))),
+                    _ => Err(format!("parameter '{pname}' has an unsupported value")),
+                })
+                .collect::<Result<_, _>>()?;
+            if spec.params.iter().any(|p| p.name == pname) {
+                return Err(format!("parameter '{pname}' declared twice"));
+            }
+            spec.params.push(ParamSpec { name: pname.to_string(), values });
+        }
+        if let Some(rs) = j.get("restrictions") {
+            let rs = rs.as_arr().ok_or("'restrictions' must be an array")?;
+            for rj in rs {
+                let expr_json = rj.get("expr").ok_or("restriction missing 'expr'")?;
+                let expr = Expr::from_json(expr_json)?;
+                let name = rj
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .unwrap_or_else(|| expr.to_string());
+                // Surface unknown-parameter typos at parse time, not
+                // deep inside enumeration.
+                let mut vars = Vec::new();
+                expr.collect_vars(&mut vars);
+                for v in &vars {
+                    if !spec.params.iter().any(|p| &p.name == v) {
+                        return Err(format!(
+                            "restriction '{name}' references unknown parameter '{v}'"
+                        ));
+                    }
+                }
+                spec.restrictions.push(RestrictionSpec { name, expr });
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<SpaceSpec, String> {
+        SpaceSpec::from_json(&jsonparse::parse(text)?)
+    }
+
+    /// Load from a `.json` file.
+    pub fn load(path: &Path) -> Result<SpaceSpec, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        SpaceSpec::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::constraint::Expr;
+    use crate::util::proptest::{check, Config};
+    use crate::util::rng::Rng;
+
+    fn toy_spec() -> SpaceSpec {
+        SpaceSpec::new("toy")
+            .ints("bx", &[16, 32, 64])
+            .ints("tile", &[1, 2, 4, 8])
+            .bools("pad")
+            .restrict_named(
+                "bx*tile<=128",
+                Expr::var("bx").mul(Expr::var("tile")).le(Expr::lit(128)),
+            )
+    }
+
+    #[test]
+    fn builder_builds_the_hand_coded_space() {
+        // Same space as space::tests::small_space: 18 of 24 survive.
+        let s = toy_spec().build();
+        assert_eq!(s.name, "toy");
+        assert_eq!(s.cartesian_size, 24);
+        assert_eq!(s.len(), 18);
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let spec = toy_spec();
+        let text = spec.to_json().render_pretty();
+        let parsed = SpaceSpec::parse(&text).unwrap();
+        assert_eq!(parsed, spec);
+        // And the parsed spec builds the identical space.
+        let a = spec.build();
+        let b = parsed.build();
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert_eq!(a.config(i), b.config(i));
+        }
+    }
+
+    #[test]
+    fn custom_restriction_names_survive_roundtrip() {
+        let spec = toy_spec();
+        let parsed = SpaceSpec::parse(&spec.to_json().render()).unwrap();
+        assert_eq!(parsed.restrictions()[0].name, "bx*tile<=128");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            r#"{"params": [{"name": "a", "values": [1]}]}"#,
+            r#"{"name": "x", "params": []}"#,
+            r#"{"name": "x", "params": [{"name": "a", "values": []}]}"#,
+            r#"{"name": "x", "params": [{"name": "a", "values": [1]}, {"name": "a", "values": [2]}]}"#,
+            r#"{"name": "x", "params": [{"name": "a", "values": [1]}], "restrictions": [{}]}"#,
+            r#"{"name": "x", "params": [{"name": "a", "values": [1]}],
+                "restrictions": [{"expr": {"op": "gt", "args": [{"var": "typo"}, {"lit": 0}]}}]}"#,
+        ] {
+            assert!(SpaceSpec::parse(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "twice")]
+    fn builder_rejects_duplicate_params() {
+        let _ = SpaceSpec::new("dup").ints("a", &[1]).ints("a", &[2]);
+    }
+
+    #[test]
+    fn mixed_value_types_roundtrip() {
+        let spec = SpaceSpec::new("mixed")
+            .ints("n", &[1, 2])
+            .floats("scale", &[0.5, 1.25])
+            .bools("flag")
+            .cats("method", &["scan", "tree"])
+            .restrict(Expr::streq("method", "tree").or(Expr::var("flag").eq(Expr::lit(0))));
+        let parsed = SpaceSpec::parse(&spec.to_json().render()).unwrap();
+        assert_eq!(parsed, spec);
+        assert_eq!(parsed.build().len(), spec.build().len());
+    }
+
+    /// Random spec generator for the round-trip property.
+    fn random_spec(rng: &mut Rng) -> SpaceSpec {
+        let n_params = 1 + rng.below(4);
+        let mut spec = SpaceSpec::new(&format!("prop-{}", rng.below(1000)));
+        let mut int_params = Vec::new();
+        for d in 0..n_params {
+            let name = format!("p{d}");
+            match rng.below(3) {
+                0 => {
+                    let k = 2 + rng.below(5) as i64;
+                    spec = spec.ints(&name, &(1..=k).map(|v| v * (1 + rng.below(4) as i64)).collect::<Vec<_>>());
+                    int_params.push(name);
+                }
+                1 => {
+                    spec = spec.bools(&name);
+                    int_params.push(name);
+                }
+                _ => {
+                    // Non-integral values only: an integral float (1.0)
+                    // renders as "1" and would parse back as an Int — the
+                    // documented JSON coercion, not a round-trip defect.
+                    spec = spec.floats(&name, &[0.25, 0.5, 2.75][..1 + rng.below(2)]);
+                    int_params.push(name);
+                }
+            }
+        }
+        let n_restr = rng.below(3);
+        for _ in 0..n_restr {
+            let pick = |rng: &mut Rng, names: &[String]| Expr::var(&names[rng.below(names.len())]);
+            let a = pick(rng, &int_params);
+            let b = if rng.chance(0.5) { pick(rng, &int_params) } else { Expr::lit(rng.below(7) as i64) };
+            let cmp = match rng.below(4) {
+                0 => a.clone().mul(b.clone()).le(Expr::lit(64)),
+                1 => a.clone().add(b.clone()).ne(Expr::lit(3)),
+                2 => a.clone().rem(b.clone().add(Expr::lit(1))).eq(Expr::lit(0)),
+                _ => a.clone().ge(b.clone()),
+            };
+            let e = if rng.chance(0.3) { cmp.or(pick(rng, &int_params).gt(Expr::lit(0))) } else { cmp };
+            spec = if rng.chance(0.5) {
+                spec.restrict(e)
+            } else {
+                spec.restrict_named(&format!("r{}", rng.below(100)), e)
+            };
+        }
+        spec
+    }
+
+    #[test]
+    fn prop_spec_json_roundtrips_losslessly() {
+        check(
+            "spec-json-roundtrip",
+            &Config { cases: 60, ..Config::default() },
+            random_spec,
+            |spec| {
+                let compact = SpaceSpec::parse(&spec.to_json().render())
+                    .map_err(|e| format!("compact parse: {e}"))?;
+                if &compact != spec {
+                    return Err("compact render round-trip changed the spec".into());
+                }
+                let pretty = SpaceSpec::parse(&spec.to_json().render_pretty())
+                    .map_err(|e| format!("pretty parse: {e}"))?;
+                if &pretty != spec {
+                    return Err("pretty render round-trip changed the spec".into());
+                }
+                Ok(())
+            },
+            |spec| format!("{} params, {} restrictions", spec.n_params(), spec.n_restrictions()),
+        );
+    }
+}

@@ -193,8 +193,9 @@ mod tests {
         let table = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                let base = (p[0] - 0.25).powi(2) + (p[1] - 0.75).powi(2);
-                let ripple = 0.02 * ((p[0] * 20.0).sin() + (p[1] * 20.0).cos());
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                let base = (x - 0.25).powi(2) + (y - 0.75).powi(2);
+                let ripple = 0.02 * ((x * 20.0).sin() + (y * 20.0).cos());
                 Eval::Valid(1.0 + base + ripple + 0.04)
             })
             .collect();

@@ -258,7 +258,7 @@ mod tests {
         let table = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                Eval::Valid(1.0 + p[0] + p[1])
+                Eval::Valid(1.0 + f64::from(p[0]) + f64::from(p[1]))
             })
             .collect();
         TableObjective::new(space, table)

@@ -139,8 +139,8 @@ impl SearchDriver for GaDriver {
         let elite = pop[order[0]];
         let mut next: Vec<usize> = vec![elite];
         while next.len() < self.pop_size {
-            let pa = space.config(pick_parent(ctx.rng)).clone();
-            let pb = space.config(pick_parent(ctx.rng)).clone();
+            let pa = space.config(pick_parent(ctx.rng));
+            let pb = space.config(pick_parent(ctx.rng));
             let mut child = GeneticAlgorithm::crossover(&pa, &pb, ctx.rng);
             GeneticAlgorithm::mutate(space, &mut child, self.mutation_rate, ctx.rng);
             next.push(GeneticAlgorithm::legalize(space, child, ctx.rng));
@@ -175,7 +175,8 @@ mod tests {
         let table = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                Eval::Valid(1.0 + (p[0] - 0.4).powi(2) + (p[1] - 0.6).powi(2))
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                Eval::Valid(1.0 + (x - 0.4).powi(2) + (y - 0.6).powi(2))
             })
             .collect();
         TableObjective::new(space, table)

@@ -132,7 +132,7 @@ impl GpHedgeDriver {
         let m = space.len();
         if self.gp.is_none() {
             self.gp =
-                Some(IncrementalGp::new(self.cov, self.noise, space.points().to_vec(), space.dims()));
+                Some(IncrementalGp::new(self.cov, self.noise, space.norm_tiles(), space.dims()));
         }
         let gp = self.gp.as_mut().expect("just initialized");
         while self.fed < self.obs_idx.len() {
@@ -240,7 +240,8 @@ mod tests {
         let table = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                Eval::Valid(5.0 + 40.0 * ((p[0] - 0.4).powi(2) + (p[1] - 0.6).powi(2)))
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                Eval::Valid(5.0 + 40.0 * ((x - 0.4).powi(2) + (y - 0.6).powi(2)))
             })
             .collect();
         TableObjective::new(space, table)

@@ -29,7 +29,7 @@ impl Default for IteratedLocalSearch {
 pub(crate) fn kick(space: &SearchSpace, cur: usize, strength: usize, rng: &mut Rng) -> usize {
     let dims = space.dims();
     for _ in 0..20 {
-        let mut cfg = space.config(cur).clone();
+        let mut cfg = space.config(cur);
         for _ in 0..strength.min(dims) {
             let d = rng.below(dims);
             cfg[d] = rng.below(space.params[d].len()) as u16;
@@ -218,8 +218,9 @@ mod tests {
         let table = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                let g = (p[0] - 0.15).powi(2) + (p[1] - 0.15).powi(2);
-                let l = (p[0] - 0.85).powi(2) + (p[1] - 0.85).powi(2) + 0.08;
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                let g = (x - 0.15).powi(2) + (y - 0.15).powi(2);
+                let l = (x - 0.85).powi(2) + (y - 0.85).powi(2) + 0.08;
                 Eval::Valid(1.0 + g.min(l))
             })
             .collect();
@@ -242,6 +243,30 @@ mod tests {
         assert!(t.len() <= 70);
         let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
         assert_eq!(set.len(), t.len());
+    }
+
+    /// Satellite regression: isolated configs (restriction y == 2x kills
+    /// every Hamming neighbor) — each descent ends immediately and the
+    /// kick keeps the walk moving; no panic, no stall, space covered.
+    #[test]
+    fn empty_neighborhoods_kick_instead_of_stalling() {
+        use crate::space::{Expr, Restriction};
+        use crate::util::rng::Rng;
+        let space = SearchSpace::build(
+            "iso",
+            vec![
+                Param::ints("x", &(0..5).collect::<Vec<_>>()),
+                Param::ints("y", &(0..9).collect::<Vec<_>>()),
+            ],
+            &[Restriction::expr(Expr::var("y").eq(Expr::var("x").mul(Expr::lit(2))))],
+        );
+        let n = space.len();
+        let table = (0..n).map(|i| Eval::Valid((n - i) as f64)).collect();
+        let o = TableObjective::new(space, table);
+        let mut rng = Rng::new(15);
+        let t = IteratedLocalSearch::default().run(&o, 25, &mut rng);
+        assert!(t.len() <= n);
+        assert_eq!(t.best().unwrap().1, 1.0, "kicks must still cover the space");
     }
 
     #[test]

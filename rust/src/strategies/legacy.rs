@@ -261,8 +261,8 @@ pub fn run_ga(obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
         let elite = pop[order[0]];
         let mut next: Vec<usize> = vec![elite];
         while next.len() < pop_size {
-            let pa = space.config(pick_parent(rng)).clone();
-            let pb = space.config(pick_parent(rng)).clone();
+            let pa = space.config(pick_parent(rng));
+            let pb = space.config(pick_parent(rng));
             let mut child = GeneticAlgorithm::crossover(&pa, &pb, rng);
             GeneticAlgorithm::mutate(space, &mut child, mutation_rate, rng);
             next.push(GeneticAlgorithm::legalize(space, child, rng));
@@ -463,7 +463,7 @@ pub fn run_hedge(obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace
         return trace;
     }
 
-    let mut gp = IncrementalGp::new(cov, noise, space.points().to_vec(), dims);
+    let mut gp = IncrementalGp::new(cov, noise, space.norm_tiles(), dims);
     let mut fed = 0usize;
     let mut gains = [0.0f64; 3];
     let mut mu = vec![0.0; m];
@@ -673,7 +673,36 @@ mod tests {
         let table: Vec<Eval> = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                Eval::Valid(4.0 + 25.0 * ((p[0] - 0.6).powi(2) + (p[1] - 0.35).powi(2)))
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                Eval::Valid(4.0 + 25.0 * ((x - 0.6).powi(2) + (y - 0.35).powi(2)))
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    /// The same bowl over a *restricted* space that is declared through
+    /// [`SpaceSpec`](crate::space::SpaceSpec) — DSL restriction, JSON
+    /// round-trip and all — so the equivalence suite also covers the new
+    /// declarative build path.
+    fn spec_built_bowl() -> TableObjective {
+        use crate::space::{Expr, SpaceSpec};
+        let vals: Vec<i64> = (0..15).collect();
+        let spec = SpaceSpec::new("eq-spec")
+            .ints("x", &vals)
+            .ints("y", &vals)
+            .restrict(Expr::var("x").add(Expr::var("y")).rem(Expr::lit(3)).ne(Expr::lit(0)));
+        // Build through the serialized form: the space strategies see is
+        // exactly what a `--space file.json` scenario would load.
+        let space = SpaceSpec::parse(&spec.to_json().render()).expect("spec round-trip").build();
+        let table: Vec<Eval> = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                if (x - 0.8).abs() < 0.1 {
+                    Eval::RuntimeError
+                } else {
+                    Eval::Valid(3.0 + 20.0 * ((x - 0.4).powi(2) + (y - 0.5).powi(2)))
+                }
             })
             .collect();
         TableObjective::new(space, table)
@@ -688,15 +717,16 @@ mod tests {
         let table: Vec<Eval> = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
                 let (xi, yi) = (i / 15, i % 15);
                 if xi % 3 == 1 {
                     Eval::CompileError
-                } else if p[0] > 0.7 && p[1] > 0.5 {
+                } else if x > 0.7 && y > 0.5 {
                     Eval::RuntimeError
                 } else if yi % 4 == 3 {
                     Eval::RuntimeError
                 } else {
-                    Eval::Valid(2.0 + 30.0 * ((p[0] - 0.2).powi(2) + (p[1] - 0.3).powi(2)))
+                    Eval::Valid(2.0 + 30.0 * ((x - 0.2).powi(2) + (y - 0.3).powi(2)))
                 }
             })
             .collect();
@@ -705,10 +735,13 @@ mod tests {
 
     /// THE redesign acceptance test: every registry strategy, driven
     /// through the new ask/tell path, replays its legacy whole-loop trace
-    /// bit for bit — 2 seeds × 2 budgets × 2 tables (one invalid-heavy).
+    /// bit for bit — 2 seeds × 2 budgets × 3 tables (one invalid-heavy,
+    /// one on a restricted space built through the declarative
+    /// `SpaceSpec` JSON path).
     #[test]
     fn every_registry_strategy_replays_its_legacy_trace_bit_identically() {
-        let objs = [("bowl", bowl()), ("invalid-heavy", invalid_heavy())];
+        let objs =
+            [("bowl", bowl()), ("invalid-heavy", invalid_heavy()), ("spec-built", spec_built_bowl())];
         for name in registry::all_names() {
             for (tag, obj) in &objs {
                 for seed in [3u64, 1717] {

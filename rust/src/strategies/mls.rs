@@ -156,8 +156,9 @@ mod tests {
         let table = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                let g = (p[0] - 0.2).powi(2) + (p[1] - 0.2).powi(2);
-                let l = (p[0] - 0.8).powi(2) + (p[1] - 0.8).powi(2) + 0.05;
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                let g = (x - 0.2).powi(2) + (y - 0.2).powi(2);
+                let l = (x - 0.8).powi(2) + (y - 0.8).powi(2) + 0.05;
                 Eval::Valid(g.min(l) + 1.0)
             })
             .collect();
@@ -182,6 +183,30 @@ mod tests {
         // With most of the space evaluated across restarts, the global
         // basin must be found.
         assert!((t.best().unwrap().1 - 1.0).abs() < 0.01);
+    }
+
+    /// Satellite regression: a space whose restriction (y == 2x) isolates
+    /// every config yields empty Hamming neighborhoods — MLS must treat
+    /// each start as an immediate local optimum and keep restarting, not
+    /// panic or stall.
+    #[test]
+    fn empty_neighborhoods_restart_instead_of_stalling() {
+        use crate::space::{Expr, Restriction};
+        let space = SearchSpace::build(
+            "iso",
+            vec![
+                Param::ints("x", &(0..5).collect::<Vec<_>>()),
+                Param::ints("y", &(0..9).collect::<Vec<_>>()),
+            ],
+            &[Restriction::expr(Expr::var("y").eq(Expr::var("x").mul(Expr::lit(2))))],
+        );
+        let n = space.len();
+        let table = (0..n).map(|i| Eval::Valid((n - i) as f64)).collect();
+        let o = TableObjective::new(space, table);
+        let mut rng = Rng::new(4);
+        let t = MultiStartLocalSearch.run(&o, 25, &mut rng);
+        assert!(t.len() <= n, "unique-feval semantics on an isolated space");
+        assert_eq!(t.best().unwrap().1, 1.0, "restarts must still cover the space");
     }
 
     #[test]

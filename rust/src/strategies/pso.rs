@@ -175,7 +175,8 @@ mod tests {
         let table = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                Eval::Valid(1.0 + (p[0] - 0.7).powi(2) + (p[1] - 0.3).powi(2))
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                Eval::Valid(1.0 + (x - 0.7).powi(2) + (y - 0.3).powi(2))
             })
             .collect();
         TableObjective::new(space, table)

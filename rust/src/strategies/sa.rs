@@ -205,7 +205,8 @@ mod tests {
         let table = (0..space.len())
             .map(|i| {
                 let p = space.point(i);
-                Eval::Valid(1.0 + (p[0] - 0.5).powi(2) + (p[1] - 0.5).powi(2))
+                let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+                Eval::Valid(1.0 + (x - 0.5).powi(2) + (y - 0.5).powi(2))
             })
             .collect();
         TableObjective::new(space, table)
@@ -228,6 +229,36 @@ mod tests {
         let t = SimulatedAnnealing::default().run(&o, 80, &mut rng);
         let set: std::collections::HashSet<_> = t.records.iter().map(|(i, _)| i).collect();
         assert_eq!(set.len(), t.len());
+    }
+
+    /// Space whose restriction isolates every config (no Adjacent or
+    /// Hamming neighbor survives): y == 2x.
+    fn isolated_objective() -> TableObjective {
+        use crate::space::Expr;
+        let space = SearchSpace::build(
+            "iso",
+            vec![
+                Param::ints("x", &(0..5).collect::<Vec<_>>()),
+                Param::ints("y", &(0..9).collect::<Vec<_>>()),
+            ],
+            &[crate::space::Restriction::expr(
+                Expr::var("y").eq(Expr::var("x").mul(Expr::lit(2))),
+            )],
+        );
+        let table = (0..space.len()).map(|i| Eval::Valid(10.0 - i as f64)).collect();
+        TableObjective::new(space, table)
+    }
+
+    /// Satellite regression: empty neighborhoods must not panic or stall
+    /// the driver — SA falls back to random proposals and still finds the
+    /// optimum of a fully isolated space.
+    #[test]
+    fn empty_neighborhoods_do_not_stall() {
+        let o = isolated_objective();
+        let mut rng = Rng::new(6);
+        let t = SimulatedAnnealing::default().run(&o, 30, &mut rng);
+        assert!(t.len() <= o.space().len());
+        assert_eq!(t.best().unwrap().1, 10.0 - (o.space().len() - 1) as f64);
     }
 
     #[test]

@@ -135,6 +135,47 @@ fn gp_hotpath_bench_smoke() {
 }
 
 #[test]
+fn space_build_bench_smoke() {
+    // The space_build bench binary is a thin CLI over
+    // harness::space_bench; running the smoke grid here keeps the bench
+    // from silently rotting.
+    use ktbo::harness::space_bench::{run_scenario, scenario_grid, to_json};
+    let records: Vec<_> = scenario_grid(true).iter().map(run_scenario).collect();
+    assert!(!records.is_empty());
+    let first_digest = records[0].keys_digest;
+    for r in &records {
+        assert!(r.ms_per_build.is_finite() && r.ms_per_build >= 0.0, "bad timing in {:?}", r.scenario);
+        assert!(r.configs > 0 && r.configs <= r.cartesian);
+        assert_eq!(r.keys_digest, first_digest, "smoke scenarios build one identical space");
+    }
+    let doc = to_json(&records).render_pretty();
+    assert!(doc.contains("\"bench\": \"space_build\""));
+    assert!(doc.contains("keys_digest"));
+}
+
+#[test]
+fn json_space_files_match_their_hand_coded_twins() {
+    // Acceptance: every shipped examples/spaces/<kernel>.json builds the
+    // same restricted space (size and membership) as the kernel's
+    // builder-defined spec. convolution.json encodes the GTX Titan X
+    // flavour (its restrictions are device-dependent).
+    use ktbo::space::SpaceSpec;
+    let dev = Device::gtx_titan_x();
+    for kernel in ["gemm", "convolution", "pnpoly", "expdist", "adding"] {
+        let path = format!("{}/../examples/spaces/{kernel}.json", env!("CARGO_MANIFEST_DIR"));
+        let spec = SpaceSpec::load(std::path::Path::new(&path))
+            .unwrap_or_else(|e| panic!("{kernel}: {e}"));
+        let from_file = spec.build();
+        let hand_coded = kernel_by_name(kernel).unwrap().spec(&dev).build();
+        assert_eq!(from_file.len(), hand_coded.len(), "{kernel}: restricted sizes differ");
+        assert_eq!(from_file.cartesian_size, hand_coded.cartesian_size, "{kernel}");
+        for i in (0..from_file.len()).step_by(199) {
+            assert_eq!(from_file.config(i), hand_coded.config(i), "{kernel}: config {i} differs");
+        }
+    }
+}
+
+#[test]
 fn bo_sequence_survives_thread_and_shard_sweep_on_simulated_space() {
     // Engine-level determinism on a real simulated kernel space (adding on
     // the A100): the full §III pipeline — pruning, contextual variance,

@@ -42,8 +42,14 @@ fn random_case(rng: &mut Rng) -> (TableObjective, u64) {
                 }
             } else {
                 let p = space.point(i);
-                let v: f64 =
-                    1.0 + p.iter().map(|x| (x - 0.5) * (x - 0.5)).sum::<f64>() + rng.f64() * 0.1;
+                let v: f64 = 1.0
+                    + p.iter()
+                        .map(|&x| {
+                            let d = f64::from(x) - 0.5;
+                            d * d
+                        })
+                        .sum::<f64>()
+                    + rng.f64() * 0.1;
                 Eval::Valid(v)
             }
         })
@@ -64,8 +70,11 @@ fn prop_space_enumeration_is_sound() {
                 return Ok(()); // empty restricted spaces are legal
             }
             for i in 0..s.len() {
-                if s.index_of(s.config(i)) != Some(i) {
+                if s.index_of(&s.config(i)) != Some(i) {
                     return Err(format!("index_of roundtrip failed at {i}"));
+                }
+                if s.index_of_key(s.key(i)) != Some(i) {
+                    return Err(format!("key index roundtrip failed at {i}"));
                 }
                 for &x in s.point(i) {
                     if !(0.0..=1.0).contains(&x) {

@@ -78,7 +78,8 @@ fn xla_backend_drives_bo_to_optimum() {
     let table: Vec<Eval> = (0..space.len())
         .map(|i| {
             let p = space.point(i);
-            Eval::Valid(10.0 + 100.0 * ((p[0] - 0.6).powi(2) + (p[1] - 0.4).powi(2)))
+            let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+            Eval::Valid(10.0 + 100.0 * ((x - 0.6).powi(2) + (y - 0.4).powi(2)))
         })
         .collect();
     let obj = TableObjective::new(space, table);
@@ -103,7 +104,8 @@ fn xla_and_native_backends_agree_on_trajectory() {
     let table: Vec<Eval> = (0..space.len())
         .map(|i| {
             let p = space.point(i);
-            Eval::Valid(1.0 + (p[0] - 0.2).powi(2) + (p[1] - 0.8).powi(2))
+            let (x, y) = (f64::from(p[0]), f64::from(p[1]));
+            Eval::Valid(1.0 + (x - 0.2).powi(2) + (y - 0.8).powi(2))
         })
         .collect();
     let obj = TableObjective::new(space, table);

@@ -1,25 +1,33 @@
 #!/usr/bin/env bash
-# Kick-the-tires perf runner: release build, gp_hotpath bench, and
-# BENCH_gp_hotpath.json refreshed at the repo root.
+# Kick-the-tires perf runner: release build, the gp_hotpath and
+# space_build benches, and their BENCH_*.json files refreshed at the repo
+# root.
 #
-#   scripts/bench.sh            # full grid (17956 & 200k candidates)
-#   scripts/bench.sh --smoke    # tiny grid, seconds — sanity check only
+#   scripts/bench.sh            # full grids (17956 & 200k candidates)
+#   scripts/bench.sh --smoke    # tiny grids, seconds — sanity check only
 #
-# After a full run, copy the ms/iter numbers into EXPERIMENTS.md §Perf.
+# After a full run, copy the ms/iter and ms/build numbers into
+# EXPERIMENTS.md §Perf.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 ROOT="$(pwd)"
 
-OUT="$ROOT/BENCH_gp_hotpath.json"
+GP_OUT="$ROOT/BENCH_gp_hotpath.json"
+SPACE_OUT="$ROOT/BENCH_space_build.json"
 for arg in "$@"; do
-  # A smoke run must not overwrite the tracked full-grid trajectory file.
-  [ "$arg" = "--smoke" ] && OUT="$ROOT/BENCH_gp_hotpath.smoke.json"
+  # A smoke run must not overwrite the tracked full-grid trajectory files.
+  if [ "$arg" = "--smoke" ]; then
+    GP_OUT="$ROOT/BENCH_gp_hotpath.smoke.json"
+    SPACE_OUT="$ROOT/BENCH_space_build.smoke.json"
+  fi
 done
 
 cd rust
 cargo build --release
-cargo bench --bench gp_hotpath -- --out "$OUT" "$@"
+cargo bench --bench gp_hotpath -- --out "$GP_OUT" "$@"
+cargo bench --bench space_build -- --out "$SPACE_OUT" "$@"
 
 echo
-echo "perf records: $OUT (update EXPERIMENTS.md §Perf after full runs)"
+echo "perf records: $GP_OUT"
+echo "              $SPACE_OUT (update EXPERIMENTS.md §Perf after full runs)"

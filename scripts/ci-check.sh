@@ -45,10 +45,16 @@ scripts/bench.sh --smoke
 step "smoke sweep (orchestrator)"
 cargo run --release -p ktbo -- sweep --smoke --fresh --out results
 
+step "smoke sweep on a JSON-defined space"
+cargo run --release -p ktbo -- sweep --smoke --fresh --out results \
+  --tag smoke-space --strategies random --budget 20 --space examples/spaces/adding.json
+
 step "artifact sanity"
 test -s BENCH_gp_hotpath.smoke.json
+test -s BENCH_space_build.smoke.json
 test -s results/SWEEP_smoke.jsonl
 test -s results/SWEEP_smoke.results.jsonl
 grep -q '"type":"outcome"' results/SWEEP_smoke.results.jsonl
+test -s results/SWEEP_smoke-space.results.jsonl
 
 printf '\nci-check: all green\n'
