@@ -1,0 +1,75 @@
+//! Micro-benchmark of the surrogate subsystem: full fit from the run's
+//! observations + one sharded (mu, var) sweep over every candidate — the
+//! per-iteration workload each [`ktbo::surrogate::Model`] adds to a BO
+//! run (custom harness — no criterion in the offline vendor set).
+//!
+//! Scenarios: the GEMM restricted space (~18k candidates) and the ~200k
+//! synthetic grid, at 50 and 220 observations, for the GP adapter, random
+//! forest, extra trees, and TPE, serial and 8-thread. Results are written
+//! to `BENCH_surrogate_fit.json` at the repo root so the perf trajectory
+//! is tracked across PRs (see EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench surrogate_fit` (or `scripts/bench.sh`).
+//! Flags: `--smoke` (tiny grid), `--out PATH` (JSON destination).
+//!
+//! The fit/predict logic lives in `ktbo::harness::surrogate_bench`, which
+//! the test suite also exercises — this binary cannot silently rot.
+
+use ktbo::harness::surrogate_bench::{run_scenario, scenario_grid, to_json};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    // Smoke runs must never clobber the tracked full-grid trajectory file.
+    let default_name =
+        if smoke { "BENCH_surrogate_fit.smoke.json" } else { "BENCH_surrogate_fit.json" };
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| format!("{}/../{default_name}", env!("CARGO_MANIFEST_DIR")));
+
+    println!("== surrogate_fit: per-iteration fit + sharded (mu, var) sweep per Model ==");
+    println!(
+        "{:<16} {:>6} {:>7} {:>8} {:>10} {:>12} {:>12} {:>18}",
+        "space", "model", "n_obs", "threads", "configs", "ms_fit", "ms_predict", "mu_digest"
+    );
+    let mut records = Vec::new();
+    for sc in scenario_grid(smoke) {
+        let r = run_scenario(&sc);
+        println!(
+            "{:<16} {:>6} {:>7} {:>8} {:>10} {:>12.3} {:>12.3} {:>18}",
+            sc.space,
+            sc.model,
+            sc.n_obs,
+            sc.threads,
+            r.configs,
+            r.ms_fit,
+            r.ms_predict,
+            format!("{:016x}", r.mu_digest)
+        );
+        records.push(r);
+    }
+
+    // Cross-check: within one (space, model, n_obs), every thread count
+    // must predict identical mean bits — the subsystem's determinism
+    // contract, asserted on the full grid too, not just the unit tests.
+    for r in &records {
+        if let Some(other) = records.iter().find(|o| {
+            o.scenario.space == r.scenario.space
+                && o.scenario.model == r.scenario.model
+                && o.scenario.n_obs == r.scenario.n_obs
+                && o.scenario.threads != r.scenario.threads
+        }) {
+            assert_eq!(
+                r.mu_digest, other.mu_digest,
+                "{}/{} prediction bits depend on the thread count",
+                r.scenario.space, r.scenario.model
+            );
+        }
+    }
+
+    let doc = to_json(&records).render_pretty();
+    std::fs::write(&out, &doc).expect("write bench json");
+    println!("wrote {out}");
+}

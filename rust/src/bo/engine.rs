@@ -25,6 +25,13 @@
 //! already computed — the per-step batch that parallel evaluation and the
 //! step-level orchestrator consume.
 //!
+//! Since the surrogate subsystem ([`crate::surrogate`]), the GP is one of
+//! several surrogates: [`Backend::Model`] plugs any batch
+//! [`Model`](crate::surrogate::Model) (tree ensembles, TPE, the GP
+//! adapter) into the same loop — refit per iteration, swept
+//! shard-parallel over the space's tiles, composed with every acquisition
+//! policy, pruning, and batch ask unchanged.
+//!
 //! Hot-path organization (the per-iteration O(m) work over the whole
 //! candidate set): one long-lived [`ShardPool`] serves the entire run, and
 //! each iteration makes exactly two sharded sweeps —
@@ -57,6 +64,7 @@ use crate::gp::{IncrementalGp, Surrogate, DEFAULT_SHARD_LEN};
 use crate::space::{neighbors, Neighborhood, SearchSpace};
 use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
 use crate::strategies::Strategy;
+use crate::surrogate::{predict_pass, FitCtx, Model};
 use crate::util::linalg::{mean, std_dev};
 use crate::util::pool::{nested_threads, ShardPool};
 
@@ -69,6 +77,14 @@ pub enum Backend {
     /// the XLA artifact (`runtime::XlaSurrogate`) and the reference
     /// `NativeSurrogate`.
     OneShot(Arc<dyn Fn(&BoConfig) -> Box<dyn Surrogate> + Send + Sync>),
+    /// A pluggable batch surrogate from the [`surrogate`](crate::surrogate)
+    /// subsystem: refit from the run's observations each iteration, then
+    /// swept shard-parallel over the space's normalized tiles into the
+    /// same fused mask+λ fold and acquisition argmin as the GP hot path.
+    /// Backs the registry's `bo_rf` / `bo_et` / `tpe` strategies; a
+    /// [`GpModel`](crate::surrogate::GpModel) factory replays
+    /// [`Backend::Incremental`] bit for bit.
+    Model(Arc<dyn Fn(&BoConfig) -> Box<dyn Model> + Send + Sync>),
 }
 
 /// The BO strategy (a factory for [`BoDriver`]s).
@@ -109,19 +125,27 @@ impl Strategy for BoStrategy {
             t => t.min(n_shards),
         };
         let pool = ShardPool::new(pool_threads);
+        let (oneshot, model) = match &self.backend {
+            Backend::Incremental => (None, None),
+            Backend::OneShot(f) => (Some(f(&cfg)), None),
+            Backend::Model(f) => (None, Some(f(&cfg))),
+        };
         // Zero-copy: the GP borrows the space's shard-aligned f32 tiles —
-        // a refcount bump per run, no re-normalization.
-        let inc =
-            IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.norm_tiles(), dims, shard_len);
-        let oneshot = match &self.backend {
-            Backend::Incremental => None,
-            Backend::OneShot(f) => Some(f(&cfg)),
+        // a refcount bump per run, no re-normalization. Only the
+        // incremental backend owns one; one-shot/Model runs must not pay
+        // its O(m) per-shard accumulators.
+        let inc = if oneshot.is_none() && model.is_none() {
+            Some(IncrementalGp::with_shard_len(cfg.cov, cfg.noise, space.norm_tiles(), dims, shard_len))
+        } else {
+            None
         };
         let policy = make_policy(&cfg);
         Box::new(BoDriver {
             label: self.label.clone(),
             cfg,
             oneshot,
+            model,
+            model_seeded: false,
             started: false,
             phase: BoPhase::Init,
             visited: vec![false; m],
@@ -161,6 +185,11 @@ pub struct BoDriver {
     label: String,
     cfg: BoConfig,
     oneshot: Option<Box<dyn Surrogate>>,
+    /// Pluggable batch surrogate (`Backend::Model`); refit per iteration
+    /// and swept shard-parallel, replacing the incremental GP entirely.
+    model: Option<Box<dyn Model>>,
+    /// The model's private RNG stream has been derived from the run RNG.
+    model_seeded: bool,
     started: bool,
     phase: BoPhase,
     visited: Vec<bool>,
@@ -178,7 +207,9 @@ pub struct BoDriver {
     mu_s: f64,
     shard_len: usize,
     pool: ShardPool,
-    inc: IncrementalGp,
+    /// The fused-sweep GP — present exactly for `Backend::Incremental`
+    /// (one-shot and Model backends bring their own surrogate state).
+    inc: Option<IncrementalGp>,
     /// Observations already fed to the incremental GP.
     fed: usize,
     policy: Box<dyn AcqPolicy>,
@@ -255,33 +286,55 @@ impl BoDriver {
         let y_z: Vec<f64> = self.obs_y.iter().map(|v| (v - y_mean) / y_std).collect();
 
         // Feed new observations to the surrogate. The incremental
-        // backend defers its posterior sweep to the fused pass below;
+        // backend defers its posterior sweep to the fused pass below; a
+        // pluggable batch model refits and is swept shard-parallel here;
         // the one-shot backend must produce mu/var up front.
-        match &mut self.oneshot {
-            None => {
-                while self.fed < self.obs_idx.len() {
-                    self.inc.add_par(space.point(self.obs_idx[self.fed]), &self.pool);
-                    self.fed += 1;
-                }
+        if let Some(model) = &mut self.model {
+            if !self.model_seeded {
+                // One deterministic split of the run stream, at a fixed
+                // point of the run (the first surrogate fit): models that
+                // need randomness (forest bootstraps) get a private child
+                // stream; deterministic models leave the run RNG alone.
+                model.seed(ctx.rng);
+                self.model_seeded = true;
             }
-            Some(s) => {
-                // One-shot backend: fit on observations, predict over
-                // non-visited candidates, scatter back. The Surrogate ABI
-                // is f64; widen the f32 tiles (exact conversion).
-                let widen = |i: usize| space.point(i).iter().map(|&v| f64::from(v)).collect::<Vec<f64>>();
-                let x: Vec<f64> = self.obs_idx.iter().flat_map(|&i| widen(i)).collect();
-                let cand_idx: Vec<usize> = (0..m).filter(|&i| !self.visited[i]).collect();
-                let cand: Vec<f64> = cand_idx.iter().flat_map(|&i| widen(i)).collect();
-                let mut cmu = vec![0.0; cand_idx.len()];
-                let mut cvar = vec![0.0; cand_idx.len()];
-                if s.fit_predict(&x, &y_z, dims, &cand, &mut cmu, &mut cvar).is_err() {
-                    return Ask::Finished;
+            model.fit(&FitCtx {
+                space,
+                obs_idx: &self.obs_idx,
+                y_z: &y_z,
+                shard_len: self.shard_len,
+                pool: &self.pool,
+            });
+            predict_pass(&**model, space, &self.pool, self.shard_len, &mut self.mu, &mut self.var);
+        } else {
+            match &mut self.oneshot {
+                None => {
+                    let inc = self.inc.as_mut().expect("incremental backend owns a GP");
+                    while self.fed < self.obs_idx.len() {
+                        inc.add_par(space.point(self.obs_idx[self.fed]), &self.pool);
+                        self.fed += 1;
+                    }
                 }
-                self.mu.fill(f64::INFINITY);
-                self.var.fill(1e-12);
-                for (p, &i) in cand_idx.iter().enumerate() {
-                    self.mu[i] = cmu[p];
-                    self.var[i] = cvar[p];
+                Some(s) => {
+                    // One-shot backend: fit on observations, predict over
+                    // non-visited candidates, scatter back. The Surrogate
+                    // ABI is f64; widen the f32 tiles (exact conversion).
+                    let widen =
+                        |i: usize| space.point(i).iter().map(|&v| f64::from(v)).collect::<Vec<f64>>();
+                    let x: Vec<f64> = self.obs_idx.iter().flat_map(|&i| widen(i)).collect();
+                    let cand_idx: Vec<usize> = (0..m).filter(|&i| !self.visited[i]).collect();
+                    let cand: Vec<f64> = cand_idx.iter().flat_map(|&i| widen(i)).collect();
+                    let mut cmu = vec![0.0; cand_idx.len()];
+                    let mut cvar = vec![0.0; cand_idx.len()];
+                    if s.fit_predict(&x, &y_z, dims, &cand, &mut cmu, &mut cvar).is_err() {
+                        return Ask::Finished;
+                    }
+                    self.mu.fill(f64::INFINITY);
+                    self.var.fill(1e-12);
+                    for (p, &i) in cand_idx.iter().enumerate() {
+                        self.mu[i] = cmu[p];
+                        self.var[i] = cvar[p];
+                    }
                 }
             }
         }
@@ -291,9 +344,10 @@ impl BoDriver {
         // other candidates remain) folded with the Σvar/count
         // reduction for λ into one sharded O(m) pass. The incremental
         // backend also materializes `var` here, straight from the
-        // GP's running Σ V² — no posterior solve needed yet.
+        // GP's running Σ V²; the one-shot and Model backends filled
+        // `var` above, so the fold only masks and reduces it.
         let sq_chunks: Option<Vec<&[f64]>> =
-            if self.oneshot.is_none() { Some(self.inc.sq_chunks().collect()) } else { None };
+            self.inc.as_ref().map(|inc| inc.sq_chunks().collect());
         let adj = if self.cfg.pruning { Some(&self.invalid_adj[..]) } else { None };
         let (mut var_fp, mut n_cand) = mask_var_fold(
             &self.pool,
@@ -338,14 +392,15 @@ impl BoDriver {
 
         // Fused acquisition pass: one sweep computes every wanted AF's
         // exhaustive argmin (plus, for the incremental backend, the
-        // posterior itself).
+        // posterior itself; one-shot/Model posteriors are already in
+        // `mu`/`var`, so their sweep is the sharded score pass alone).
         let wanted = self.policy.wanted();
         let suggestions: Vec<Option<usize>> = if wanted.is_empty() {
             Vec::new()
-        } else if self.oneshot.is_none() {
+        } else if let Some(inc) = &self.inc {
             let masked = &self.masked;
             let parts =
-                self.inc.predict_scored(&y_z, &self.pool, &mut self.mu, &mut self.var, |start, mu_c, var_c| {
+                inc.predict_scored(&y_z, &self.pool, &mut self.mu, &mut self.var, |start, mu_c, var_c| {
                     score_chunk(
                         &wanted,
                         mu_c,
@@ -677,6 +732,11 @@ pub(crate) mod legacy_engine {
         let mut oneshot = match &strategy.backend {
             Backend::Incremental => None,
             Backend::OneShot(f) => Some(f(cfg)),
+            // Model backends postdate the redesign: they were born on the
+            // ask/tell API and have no pre-redesign loop to replay (their
+            // GP flavor is pinned to this path via Backend::Incremental
+            // in surrogate::tests instead).
+            Backend::Model(_) => panic!("no legacy reference path for Model backends"),
         };
 
         let mut policy: Box<dyn AcqPolicy> = make_policy(cfg);

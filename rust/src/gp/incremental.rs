@@ -252,6 +252,30 @@ impl IncrementalGp {
         w
     }
 
+    /// The per-query solve shared by chunked prediction: mean weights
+    /// `w = L⁻¹(y − ȳ)` and `ȳ`. Pair with
+    /// [`predict_shard_into`](Self::predict_shard_into) to predict shard
+    /// by shard — what the [`Model`](crate::surrogate::Model) adapter
+    /// ([`GpModel`](crate::surrogate::GpModel)) uses to slot the GP into
+    /// the engine's generic sharded sweep.
+    pub fn mean_weights(&self, y: &[f64]) -> (Vec<f64>, f64) {
+        (self.solve_w(y), crate::util::linalg::mean(y))
+    }
+
+    /// Predict the single shard whose first candidate is `start` (which
+    /// must be a shard boundary; `mu`/`var` must be exactly the shard's
+    /// length), given weights from [`mean_weights`](Self::mean_weights).
+    /// Runs the same per-shard `predict_rows` as every other sweep, so
+    /// the chunk is bit-identical
+    /// to the matching slice of [`predict_into`](Self::predict_into).
+    pub fn predict_shard_into(&self, start: usize, w: &[f64], y_mean: f64, mu: &mut [f64], var: &mut [f64]) {
+        let si = start / self.shard_len;
+        let shard = &self.shards[si];
+        assert_eq!(shard.start, start, "start {start} is not a shard boundary");
+        assert!(mu.len() == shard.len && var.len() == shard.len);
+        shard.predict_rows(w, y_mean, mu, var);
+    }
+
     /// Posterior mean and variance over all candidates given the raw
     /// observations `y` (same order as `add` calls). Observations are
     /// centered internally; outputs are in the units of `y`.
@@ -479,6 +503,40 @@ mod tests {
             covered += mu_c.len();
         }
         assert_eq!(covered, m);
+    }
+
+    /// Shard-by-shard prediction through cached mean weights must equal
+    /// `predict_into` bit for bit — the contract the surrogate-subsystem
+    /// GP adapter relies on.
+    #[test]
+    fn shard_chunked_prediction_matches_full_sweep() {
+        let mut rng = Rng::new(77);
+        let dims = 3;
+        let m = 59;
+        let cand: Vec<f32> = (0..m * dims).map(|_| rng.f64() as f32).collect();
+        let mut inc =
+            IncrementalGp::with_shard_len(CovFn::Matern32 { lengthscale: 1.1 }, 1e-6, cand.into(), dims, 8);
+        let mut y = Vec::new();
+        for _ in 0..7 {
+            let p: Vec<f32> = (0..dims).map(|_| rng.f64() as f32).collect();
+            inc.add(&p);
+            y.push(rng.normal());
+        }
+        let mut mu_a = vec![0.0; m];
+        let mut var_a = vec![0.0; m];
+        inc.predict_into(&y, &mut mu_a, &mut var_a);
+
+        let (w, y_mean) = inc.mean_weights(&y);
+        let mut mu_b = vec![0.0; m];
+        let mut var_b = vec![0.0; m];
+        let mut start = 0;
+        while start < m {
+            let end = (start + 8).min(m);
+            inc.predict_shard_into(start, &w, y_mean, &mut mu_b[start..end], &mut var_b[start..end]);
+            start = end;
+        }
+        assert_eq!(mu_a, mu_b);
+        assert_eq!(var_a, var_b);
     }
 
     /// sq_chunks must expose the same variances predict_into reports,

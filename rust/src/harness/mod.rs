@@ -9,6 +9,7 @@ pub mod metrics;
 pub mod orchestrator;
 pub mod runner;
 pub mod space_bench;
+pub mod surrogate_bench;
 
 pub use figures::Options;
 pub use orchestrator::{sweep, SweepReport, SweepSpec};

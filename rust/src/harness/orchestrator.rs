@@ -48,7 +48,7 @@ use crate::harness::runner::{
 };
 use crate::objective::evalcache::{CachedObjective, EvalCache};
 use crate::objective::{Objective, TableObjective};
-use crate::strategies::registry::by_name;
+use crate::strategies::registry::{by_name, unknown_strategy_message};
 use crate::util::json::Json;
 use crate::util::jsonparse;
 use crate::util::pool::{enter_harness_workers, ShardPool};
@@ -99,12 +99,14 @@ impl SweepSpec {
     }
 
     /// The CI tier: a seconds-scale matrix that still exercises multiple
-    /// cells, the BO engine, the cache, and the JSONL plumbing.
+    /// cells, the BO engine, a non-GP surrogate (`bo_rf` — so the
+    /// pluggable-Model path is exercised on every push), the cache, and
+    /// the JSONL plumbing.
     pub fn smoke(out_dir: &str) -> SweepSpec {
         SweepSpec {
             kernels: vec!["adding".into()],
             gpus: vec!["a100".into()],
-            strategies: vec!["random".into(), "mls".into(), "ei".into()],
+            strategies: vec!["random".into(), "mls".into(), "ei".into(), "bo_rf".into()],
             budget: 60,
             repeat_scale: 0.02,
             seed: 20210601,
@@ -545,7 +547,9 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     for s in &spec.strategies {
         // Strategy::name() maps alias spellings (sa, ga, skopt, de) to
         // the canonical registry name, like the kernel/GPU axes above.
-        let canon = by_name(s).ok_or_else(|| format!("unknown strategy '{s}'"))?.name();
+        // Fail fast with the full registry listing — an unknown
+        // `--strategies` entry must not require a source dig to resolve.
+        let canon = by_name(s).ok_or_else(|| unknown_strategy_message(s))?.name();
         if !strategies.contains(&canon) {
             strategies.push(canon);
         }
@@ -1041,10 +1045,49 @@ mod tests {
     fn unknown_matrix_entries_error_before_running() {
         let mut spec = small_spec("ktbo-orch-bad", "bad");
         spec.strategies = vec!["warp_drive".into()];
-        assert!(sweep(&spec).unwrap_err().contains("warp_drive"));
+        let err = sweep(&spec).unwrap_err();
+        assert!(err.contains("warp_drive"));
+        // The fail-fast satellite: the error lists the registry, so the
+        // CLI user never needs a source dig (covers `ktbo sweep
+        // --strategies` end to end; `ktbo tune` shares the same message).
+        for known in ["advanced_multi", "bo_rf", "tpe", "random"] {
+            assert!(err.contains(known), "error must list '{known}': {err}");
+        }
         let mut spec = small_spec("ktbo-orch-bad", "bad2");
         spec.gpus = vec!["h100".into()];
         assert!(sweep(&spec).unwrap_err().contains("h100"));
+    }
+
+    /// Determinism of the surrogate zoo through the *orchestrated* path:
+    /// bo_rf/bo_et/tpe cells swept on 1/2/8 workers must be bit-identical
+    /// to the serial per-strategy reference (the satellite acceptance
+    /// criterion at the sweep level; engine-level shard/thread sweeps
+    /// live in surrogate::tests).
+    #[test]
+    fn surrogate_sweep_cells_bit_identical_across_worker_counts() {
+        let dev = Device::a100();
+        let obj = objective_for("adding", &dev);
+        let oid = objective_id("adding", dev.name);
+        let strategies = ["bo_rf", "bo_et", "tpe"];
+        let serial: Vec<StrategyOutcome> =
+            strategies.iter().map(|s| run_strategy(&obj, &oid, s, 30, 3, 11, 1)).collect();
+        for threads in [1usize, 2, 8] {
+            let mut spec = small_spec("ktbo-orch-sur", &format!("sur-{threads}"));
+            spec.strategies = strategies.iter().map(|s| s.to_string()).collect();
+            spec.budget = 30;
+            spec.threads = threads;
+            let report = sweep(&spec).unwrap();
+            assert_eq!(report.total_cells, 9);
+            for (o, s) in report.outcomes[0].1.iter().zip(&serial) {
+                assert_eq!(o.name, s.name);
+                assert_eq!(
+                    o.mean_curve, s.mean_curve,
+                    "{} diverged at {threads} workers",
+                    o.name
+                );
+                assert_eq!(o.maes, s.maes, "{} MAEs diverged at {threads} workers", o.name);
+            }
+        }
     }
 
     #[test]

@@ -46,7 +46,10 @@ pub struct Record {
     pub keys_digest: u64,
 }
 
-fn spec_for(space: &str) -> SpaceSpec {
+/// The named bench spaces shared by the `space_build` and `surrogate_fit`
+/// benches: `"gemm"` (the paper's heaviest restricted space),
+/// `"synthetic200k"` (the ~200k-candidate grid), `"smoke"` (seconds-scale).
+pub fn spec_for(space: &str) -> SpaceSpec {
     match space {
         "gemm" => kernel_by_name("gemm").expect("gemm registered").spec(&Device::gtx_titan_x()),
         // 18 × 14 × 12 × 10 × 8 = 241920 Cartesian; the mod-7 restriction

@@ -1,0 +1,213 @@
+//! Reusable core of the `surrogate_fit` bench: fit+predict wall time per
+//! surrogate [`Model`] over paper-scale candidate sets, with
+//! machine-readable output (`BENCH_surrogate_fit.json` at the repo root).
+//!
+//! The bench binary (`benches/surrogate_fit.rs`) is a thin CLI over these
+//! functions, and the test suite runs a tiny smoke grid through the same
+//! code (`surrogate_fit_bench_smoke` in `tests/integration.rs`) — so the
+//! bench logic compiles and runs on every `cargo test` and can never
+//! silently rot.
+//!
+//! Scenarios: the GEMM restricted space (~18k candidates) and the ~200k
+//! synthetic grid from the `space_build` bench, each fit at the paper's
+//! observation counts (50 and the full 220 budget) and predicted over the
+//! whole candidate set through the engine's sharded
+//! [`predict_pass`](crate::surrogate::predict_pass) — the exact
+//! per-iteration workload each surrogate adds to a BO run. Models: the
+//! incremental GP adapter, random forest, extra trees, and TPE.
+
+use std::time::Instant;
+
+use crate::gp::DEFAULT_SHARD_LEN;
+use crate::harness::space_bench::spec_for;
+use crate::space::SearchSpace;
+use crate::surrogate::{
+    predict_pass, FitCtx, ForestConfig, ForestModel, GpModel, Model, TpeConfig, TpeModel,
+};
+use crate::util::json::Json;
+use crate::util::pool::ShardPool;
+use crate::util::rng::{hash_normal, Rng};
+
+/// One fit+predict scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// A `space_bench::spec_for` name (`gemm`, `synthetic200k`, `smoke`).
+    pub space: &'static str,
+    /// A surrogate name (`gp`, `rf`, `et`, `tpe`).
+    pub model: &'static str,
+    /// Observations fit (sampled deterministically from the space).
+    pub n_obs: usize,
+    /// Worker threads for the sharded predict pass.
+    pub threads: usize,
+    /// Fit+predict repetitions timed.
+    pub iters: usize,
+}
+
+/// Timing outcome of one scenario.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub scenario: Scenario,
+    /// Candidates predicted per iteration.
+    pub configs: usize,
+    pub ms_fit: f64,
+    pub ms_predict: f64,
+    /// Order-sensitive digest of the predicted mean bits — equal digests
+    /// across thread counts ⇒ bit-identical predictions (the determinism
+    /// hook for tests; also lands in the JSON).
+    pub mu_digest: u64,
+}
+
+/// Instantiate a bench surrogate by name, matching the registry's
+/// configurations (the GP derives its covariance/noise from the same
+/// Table-I `BoConfig` the registry strategies run).
+pub fn model_by_name(name: &str) -> Box<dyn Model> {
+    match name {
+        "gp" => Box::new(GpModel::from_config(&crate::bo::BoConfig::single(crate::bo::Acq::Ei))),
+        "rf" => Box::new(ForestModel::new(ForestConfig::random_forest())),
+        "et" => Box::new(ForestModel::new(ForestConfig::extra_trees())),
+        "tpe" => Box::new(TpeModel::new(TpeConfig::default())),
+        other => panic!("unknown bench surrogate '{other}'"),
+    }
+}
+
+/// Deterministic synthetic observations: `n` distinct configurations with
+/// a smooth-plus-rough target derived from hashed coordinates (no
+/// objective evaluation — this bench times the surrogate alone).
+fn observations(space: &SearchSpace, n: usize) -> (Vec<usize>, Vec<f64>) {
+    let m = space.len();
+    let mut rng = Rng::new(0x5355_5252); // fixed: scenarios must be comparable
+    let obs_idx = rng.sample_indices(m, n.min(m));
+    let y: Vec<f64> = obs_idx
+        .iter()
+        .map(|&i| {
+            let p = space.point(i);
+            let smooth: f64 = p.iter().map(|&v| (f64::from(v) - 0.4).powi(2)).sum();
+            smooth + 0.1 * hash_normal(i as u64)
+        })
+        .collect();
+    (obs_idx, y)
+}
+
+/// Time `iters` fit+predict rounds of one scenario.
+pub fn run_scenario(sc: &Scenario) -> Record {
+    let space = spec_for(sc.space).build();
+    let m = space.len();
+    let pool = ShardPool::new(sc.threads);
+    let (obs_idx, y_z) = observations(&space, sc.n_obs);
+    let shard_len = DEFAULT_SHARD_LEN;
+    let mut mu = vec![0.0; m];
+    let mut var = vec![0.0; m];
+
+    let mut fit_s = 0.0;
+    let mut predict_s = 0.0;
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    for _ in 0..sc.iters.max(1) {
+        // Fresh model per iteration: the bench measures a *full* fit, the
+        // worst case of a refit-per-step surrogate (the GP adapter's
+        // incremental appends make its repeat fits cheaper in-run).
+        let mut model = model_by_name(sc.model);
+        let mut seed_rng = Rng::new(7);
+        model.seed(&mut seed_rng);
+        let t0 = Instant::now();
+        model.fit(&FitCtx { space: &space, obs_idx: &obs_idx, y_z: &y_z, shard_len, pool: &pool });
+        fit_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        predict_pass(model.as_ref(), &space, &pool, shard_len, &mut mu, &mut var);
+        predict_s += t1.elapsed().as_secs_f64();
+        digest = 0xcbf2_9ce4_8422_2325u64;
+        for v in &mu {
+            digest = (digest ^ v.to_bits()).wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    std::hint::black_box((&mu, &var));
+    let iters = sc.iters.max(1) as f64;
+    Record {
+        scenario: sc.clone(),
+        configs: m,
+        ms_fit: fit_s * 1e3 / iters,
+        ms_predict: predict_s * 1e3 / iters,
+        mu_digest: digest,
+    }
+}
+
+/// The bench grid. `smoke` shrinks it to sub-second sizes for the test
+/// suite; the full grid covers GEMM (~18k) and the ~200k synthetic grid
+/// at n ∈ {50, 220} observations, serial and 8-thread predict passes.
+pub fn scenario_grid(smoke: bool) -> Vec<Scenario> {
+    let models = ["gp", "rf", "et", "tpe"];
+    if smoke {
+        return models
+            .iter()
+            .flat_map(|&model| {
+                [1usize, 4].into_iter().map(move |threads| Scenario {
+                    space: "smoke",
+                    model,
+                    n_obs: 25,
+                    threads,
+                    iters: 1,
+                })
+            })
+            .collect();
+    }
+    let mut grid = Vec::new();
+    for space in ["gemm", "synthetic200k"] {
+        for &model in &models {
+            for n_obs in [50usize, 220] {
+                for threads in [1usize, 8] {
+                    grid.push(Scenario { space, model, n_obs, threads, iters: 3 });
+                }
+            }
+        }
+    }
+    grid
+}
+
+/// Render records as the `BENCH_surrogate_fit.json` document (diffable:
+/// insertion-ordered keys, one record per scenario).
+pub fn to_json(records: &[Record]) -> Json {
+    let rows: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("space", r.scenario.space)
+                .set("model", r.scenario.model)
+                .set("n_obs", r.scenario.n_obs)
+                .set("threads", r.scenario.threads)
+                .set("configs", r.configs)
+                .set("ms_fit", r.ms_fit)
+                .set("ms_predict", r.ms_predict)
+                .set("mu_digest", format!("{:016x}", r.mu_digest))
+        })
+        .collect();
+    Json::obj()
+        .set("bench", "surrogate_fit")
+        .set("unit", "ms_fit + ms_predict")
+        .set(
+            "description",
+            "per-iteration surrogate workload: full fit from n_obs observations + sharded (mu, var) sweep over every candidate",
+        )
+        .set("records", Json::Arr(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The end-to-end smoke of the grid + JSON serialization lives in
+    // tests/integration.rs (surrogate_fit_bench_smoke) — one copy only.
+
+    /// Predictions must be partition-independent: every thread count
+    /// digests to the serial mean bits, for every model.
+    #[test]
+    fn predictions_are_thread_count_independent() {
+        for model in ["gp", "rf", "et", "tpe"] {
+            let digest = |threads: usize| {
+                run_scenario(&Scenario { space: "smoke", model, n_obs: 20, threads, iters: 1 })
+                    .mu_digest
+            };
+            let reference = digest(1);
+            assert_eq!(digest(2), reference, "{model} diverged at 2 threads");
+            assert_eq!(digest(8), reference, "{model} diverged at 8 threads");
+        }
+    }
+}

@@ -29,4 +29,7 @@ pub mod objective;
 pub mod runtime;
 pub mod space;
 pub mod strategies;
+/// Pluggable surrogate-model subsystem: the batch `Model` trait with GP,
+/// tree-ensemble (random forest / extra trees), and TPE implementations.
+pub mod surrogate;
 pub mod util;

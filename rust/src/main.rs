@@ -207,7 +207,7 @@ fn cmd_tune(args: &Args) {
         match by_name(&strategy_name) {
             Some(s) => s,
             None => {
-                eprintln!("unknown strategy '{strategy_name}'");
+                eprintln!("{}", ktbo::strategies::registry::unknown_strategy_message(&strategy_name));
                 std::process::exit(2);
             }
         }

@@ -743,6 +743,14 @@ mod tests {
         let objs =
             [("bowl", bowl()), ("invalid-heavy", invalid_heavy()), ("spec-built", spec_built_bowl())];
         for name in registry::all_names() {
+            if registry::surrogate_methods().contains(&name) {
+                // The surrogate-zoo strategies were born on the ask/tell
+                // API — there is no pre-redesign loop to replay. Their
+                // plumbing is pinned instead by surrogate::tests::
+                // gp_model_backend_replays_incremental (Model-path GP ≡
+                // the fused incremental hot path, which this suite covers).
+                continue;
+            }
             for (tag, obj) in &objs {
                 for seed in [3u64, 1717] {
                     for budget in [23usize, 48] {

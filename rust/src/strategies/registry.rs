@@ -3,9 +3,15 @@
 //! "Our methods" (diamonds in the figures): `ei`, `multi`,
 //! `advanced_multi`. Kernel Tuner competitors (dots): `random`,
 //! `simulated_annealing`, `mls`, `genetic_algorithm`. External frameworks
-//! (§IV-D): `bayesianoptimization`, `scikit-optimize`.
+//! (§IV-D): `bayesianoptimization`, `scikit-optimize`. Surrogate-zoo BO
+//! variants (the [`surrogate`](crate::surrogate) subsystem, after
+//! arXiv:2210.01465's non-GP model-based baselines): `bo_rf`, `bo_et`,
+//! `tpe`.
 
-use crate::bo::{Acq, BoConfig, BoStrategy};
+use std::sync::Arc;
+
+use crate::bo::{Acq, Backend, BoConfig, BoStrategy};
+use crate::surrogate::{ForestConfig, ForestModel, Model, TpeConfig, TpeModel};
 use crate::strategies::de::DifferentialEvolution;
 use crate::strategies::framework_bo::{Framework, FrameworkBo};
 use crate::strategies::hedge::GpHedge;
@@ -35,6 +41,31 @@ pub fn by_name(name: &str) -> Option<Box<dyn Strategy>> {
         "gp_hedge" => Some(Box::new(GpHedge::default())),
         "bayesianoptimization" => Some(Box::new(FrameworkBo::new(Framework::BayesianOptimization))),
         "scikit-optimize" | "skopt" => Some(Box::new(FrameworkBo::new(Framework::ScikitOptimize))),
+        // Surrogate zoo: the full BO loop (initial sampling, pruning,
+        // contextual variance, EI) with the GP swapped for a pluggable
+        // batch model. RF/ET bootstraps draw from a per-run child stream,
+        // so every name stays bit-deterministic per (seed, objective).
+        "bo_rf" => Some(Box::new(BoStrategy::with_backend(
+            "bo_rf",
+            BoConfig::single(Acq::Ei),
+            Backend::Model(Arc::new(|_c: &BoConfig| {
+                Box::new(ForestModel::new(ForestConfig::random_forest())) as Box<dyn Model>
+            })),
+        ))),
+        "bo_et" => Some(Box::new(BoStrategy::with_backend(
+            "bo_et",
+            BoConfig::single(Acq::Ei),
+            Backend::Model(Arc::new(|_c: &BoConfig| {
+                Box::new(ForestModel::new(ForestConfig::extra_trees())) as Box<dyn Model>
+            })),
+        ))),
+        "tpe" => Some(Box::new(BoStrategy::with_backend(
+            "tpe",
+            BoConfig::single(Acq::Ei),
+            Backend::Model(Arc::new(|_c: &BoConfig| {
+                Box::new(TpeModel::new(TpeConfig::default())) as Box<dyn Model>
+            })),
+        ))),
         _ => None,
     }
 }
@@ -60,15 +91,29 @@ pub fn extended_methods() -> Vec<&'static str> {
     vec!["pso", "differential_evolution", "ils", "gp_hedge"]
 }
 
+/// The surrogate-zoo BO variants: the paper's BO loop with the GP swapped
+/// for a pluggable batch model (`crate::surrogate`). Born on the ask/tell
+/// API — they have no pre-redesign legacy loop.
+pub fn surrogate_methods() -> Vec<&'static str> {
+    vec!["bo_rf", "bo_et", "tpe"]
+}
+
 /// Everything, for exhaustive CLI listings.
 pub fn all_names() -> Vec<&'static str> {
     let mut v = our_methods();
     v.extend(kernel_tuner_methods());
     v.extend(extended_methods());
     v.extend(framework_methods());
+    v.extend(surrogate_methods());
     v.push("poi");
     v.push("lcb");
     v
+}
+
+/// The error every CLI surface reports for an unresolvable strategy name:
+/// fail fast, and list the registry so the fix needs no source dig.
+pub fn unknown_strategy_message(name: &str) -> String {
+    format!("unknown strategy '{name}' (known strategies: {})", all_names().join(", "))
 }
 
 #[cfg(test)]
@@ -91,6 +136,21 @@ mod tests {
             if !matches!(n, "sa" | "ga" | "skopt" | "de") {
                 assert_eq!(s.name(), n);
             }
+        }
+        // The surrogate-zoo entries are registry members with stable
+        // canonical names (the sweep records and seeds key on them).
+        for n in surrogate_methods() {
+            assert!(all_names().contains(&n), "{n} missing from all_names");
+            assert_eq!(by_name(n).unwrap().name(), n);
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_message_lists_the_registry() {
+        let msg = unknown_strategy_message("warp_drive");
+        assert!(msg.contains("warp_drive"));
+        for n in ["advanced_multi", "bo_rf", "bo_et", "tpe", "random"] {
+            assert!(msg.contains(n), "message must list '{n}': {msg}");
         }
     }
 }

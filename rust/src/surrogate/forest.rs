@@ -1,0 +1,405 @@
+//! [`ForestModel`] — random-forest / extra-trees regression surrogate.
+//!
+//! Tree ensembles are the strongest non-GP surrogate family on rough,
+//! discrete kernel spaces (SMAC's choice; see Schoonhoven et al.,
+//! arXiv:2210.01465): they are scale-free, handle the step-function
+//! structure of tuning parameters natively, and fit in O(T·n log n) —
+//! independent of the candidate count. This implementation regresses over
+//! the space's *normalized* coordinates (the same f32 tiles the GP
+//! sweeps), so one fitted forest predicts any shard of the candidate
+//! tiles without touching the raw parameter values.
+//!
+//! Two classic flavors behind one config:
+//!
+//! - **random forest** ([`ForestConfig::random_forest`]): bootstrap
+//!   resampling per tree, best-of-k feature subsets, exhaustive midpoint
+//!   split search per chosen feature;
+//! - **extra trees** ([`ForestConfig::extra_trees`]): the full sample per
+//!   tree, every feature considered, one *uniformly random* threshold per
+//!   feature (Geurts et al. 2006) — cheaper fits, smoother variance.
+//!
+//! The predictive mean is the average over trees; the uncertainty is the
+//! **per-tree variance** (the spread of the ensemble's individual
+//! predictions), which plays the role of the GP's posterior variance in
+//! EI/POI/LCB and the contextual-variance λ.
+//!
+//! # Determinism
+//!
+//! All randomness (bootstraps, feature subsets, thresholds) comes from a
+//! private child RNG stream split once per run from the run RNG
+//! ([`Model::seed`]) — never from the run stream mid-flight and never
+//! from global state. Fits run on the driver thread; prediction is a pure
+//! per-candidate tree walk. Traces are therefore bit-identical across
+//! every worker count and shard partition (asserted in
+//! `surrogate::tests`).
+
+use crate::space::SearchSpace;
+use crate::surrogate::{FitCtx, Model};
+use crate::util::rng::Rng;
+
+/// Tuning knobs of the ensemble.
+#[derive(Clone, Copy, Debug)]
+pub struct ForestConfig {
+    /// Trees in the ensemble.
+    pub n_trees: usize,
+    /// Minimum samples on each side of a split.
+    pub min_leaf: usize,
+    /// Maximum tree depth (root = depth 0).
+    pub max_depth: usize,
+    /// Resample the training set with replacement per tree (RF) or give
+    /// every tree the full sample (ET).
+    pub bootstrap: bool,
+    /// Draw one uniform threshold per candidate feature (ET) instead of
+    /// scanning every midpoint (RF).
+    pub random_thresholds: bool,
+    /// Fraction of dimensions considered per split (≥ 1 dimension).
+    pub feature_frac: f64,
+}
+
+impl ForestConfig {
+    /// Breiman-style random forest (the `bo_rf` strategy).
+    pub fn random_forest() -> ForestConfig {
+        ForestConfig {
+            n_trees: 24,
+            min_leaf: 2,
+            max_depth: 12,
+            bootstrap: true,
+            random_thresholds: false,
+            feature_frac: 0.4,
+        }
+    }
+
+    /// Extremely-randomized trees (the `bo_et` strategy).
+    pub fn extra_trees() -> ForestConfig {
+        ForestConfig {
+            n_trees: 24,
+            min_leaf: 2,
+            max_depth: 12,
+            bootstrap: false,
+            random_thresholds: true,
+            feature_frac: 1.0,
+        }
+    }
+}
+
+/// One regression-tree node. The left child of a split is the next node
+/// in the flat vector (depth-first layout); only the right child needs an
+/// explicit index.
+#[derive(Clone, Copy, Debug)]
+enum Node {
+    Leaf { value: f64 },
+    Split { dim: u32, thr: f32, right: u32 },
+}
+
+/// One fitted regression tree over normalized coordinates.
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// Predict one candidate row (length = dims).
+    #[inline]
+    fn eval(&self, row: &[f32]) -> f64 {
+        let mut at = 0usize;
+        loop {
+            match self.nodes[at] {
+                Node::Leaf { value } => return value,
+                Node::Split { dim, thr, right } => {
+                    at = if row[dim as usize] <= thr { at + 1 } else { right as usize };
+                }
+            }
+        }
+    }
+}
+
+pub struct ForestModel {
+    cfg: ForestConfig,
+    label: &'static str,
+    /// Private child stream; split from the run RNG by `seed`, with a
+    /// fixed fallback for direct (bench/test) use.
+    rng: Option<Rng>,
+    trees: Vec<Tree>,
+    dims: usize,
+}
+
+impl ForestModel {
+    pub fn new(cfg: ForestConfig) -> ForestModel {
+        let label = if cfg.random_thresholds { "et" } else { "rf" };
+        ForestModel { cfg, label, rng: None, trees: Vec::new(), dims: 0 }
+    }
+
+    /// Mean and per-tree variance for one candidate row.
+    fn predict_row(&self, row: &[f32]) -> (f64, f64) {
+        let k = self.trees.len();
+        debug_assert!(k > 0, "fit before predict");
+        let mut sum = 0.0;
+        let mut sum_sq = 0.0;
+        for t in &self.trees {
+            let v = t.eval(row);
+            sum += v;
+            sum_sq += v * v;
+        }
+        let kf = k as f64;
+        let mu = sum / kf;
+        // Ensemble spread as the uncertainty; floored so a unanimous
+        // forest still yields a usable σ in the acquisition functions.
+        let var = (sum_sq / kf - mu * mu).max(1e-12);
+        (mu, var)
+    }
+}
+
+/// Sum and sum-of-squares of `y` over `idx`.
+fn moments(y: &[f64], idx: &[usize]) -> (f64, f64) {
+    let mut s = 0.0;
+    let mut s2 = 0.0;
+    for &i in idx {
+        s += y[i];
+        s2 += y[i] * y[i];
+    }
+    (s, s2)
+}
+
+/// Pooled SSE of a split: Σy² − (Σy)²/n on each side. Lower is better.
+#[inline]
+fn split_sse(sl: f64, sl2: f64, nl: usize, sr: f64, sr2: f64, nr: usize) -> f64 {
+    (sl2 - sl * sl / nl as f64) + (sr2 - sr * sr / nr as f64)
+}
+
+/// Recursively grow a tree over `idx` (sample indices into `x`/`y`),
+/// appending nodes depth-first so each split's left child is the next
+/// node. All tie-breaking is first-candidate-wins over a deterministic
+/// candidate order, so the tree is a pure function of (data, RNG state).
+#[allow(clippy::too_many_arguments)]
+fn grow(
+    nodes: &mut Vec<Node>,
+    x: &[f32],
+    dims: usize,
+    y: &[f64],
+    idx: &[usize],
+    depth: usize,
+    cfg: &ForestConfig,
+    rng: &mut Rng,
+) {
+    let n = idx.len();
+    let (s, s2) = moments(y, idx);
+    let mean = s / n as f64;
+    let leaf = |nodes: &mut Vec<Node>| nodes.push(Node::Leaf { value: mean });
+    if n < 2 * cfg.min_leaf || depth >= cfg.max_depth || (s2 - s * mean).abs() < 1e-15 {
+        return leaf(nodes);
+    }
+
+    let k = ((cfg.feature_frac * dims as f64).ceil() as usize).clamp(1, dims);
+    let feats = if k == dims { (0..dims).collect() } else { rng.sample_indices(dims, k) };
+
+    let mut best: Option<(usize, f32, f64)> = None; // (dim, thr, sse)
+    let mut col: Vec<(f32, f64)> = Vec::with_capacity(n);
+    for &d in &feats {
+        col.clear();
+        col.extend(idx.iter().map(|&i| (x[i * dims + d], y[i])));
+        if cfg.random_thresholds {
+            let lo = col.iter().map(|&(v, _)| v).fold(f32::INFINITY, f32::min);
+            let hi = col.iter().map(|&(v, _)| v).fold(f32::NEG_INFINITY, f32::max);
+            if lo >= hi {
+                continue; // constant feature on this sample
+            }
+            let thr = (f64::from(lo) + rng.f64() * f64::from(hi - lo)) as f32;
+            let (mut sl, mut sl2, mut nl) = (0.0, 0.0, 0usize);
+            for &(v, yv) in &col {
+                if v <= thr {
+                    sl += yv;
+                    sl2 += yv * yv;
+                    nl += 1;
+                }
+            }
+            let nr = n - nl;
+            if nl < cfg.min_leaf || nr < cfg.min_leaf {
+                continue;
+            }
+            let sse = split_sse(sl, sl2, nl, s - sl, s2 - sl2, nr);
+            if best.map_or(true, |(_, _, b)| sse < b) {
+                best = Some((d, thr, sse));
+            }
+        } else {
+            // Exhaustive midpoint scan: sort by the feature value, then
+            // sweep every boundary between distinct values via running
+            // prefix sums. Ties in the sort are broken by value only —
+            // equal values merge into one boundary, so sort stability
+            // cannot affect the result.
+            col.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).expect("normalized coords are finite"));
+            let (mut sl, mut sl2) = (0.0, 0.0);
+            for (j, pair) in col.windows(2).enumerate() {
+                let (v, yv) = pair[0];
+                sl += yv;
+                sl2 += yv * yv;
+                let nl = j + 1;
+                let next = pair[1].0;
+                if next <= v || nl < cfg.min_leaf || n - nl < cfg.min_leaf {
+                    continue;
+                }
+                let sse = split_sse(sl, sl2, nl, s - sl, s2 - sl2, n - nl);
+                if best.map_or(true, |(_, _, b)| sse < b) {
+                    // Midpoint keeps the threshold strictly between the
+                    // two observed values.
+                    best = Some((d, (v + next) * 0.5, sse));
+                }
+            }
+        }
+    }
+
+    let Some((dim, thr, _)) = best else { return leaf(nodes) };
+    let left: Vec<usize> = idx.iter().copied().filter(|&i| x[i * dims + dim] <= thr).collect();
+    let right: Vec<usize> = idx.iter().copied().filter(|&i| x[i * dims + dim] > thr).collect();
+    if left.is_empty() || right.is_empty() {
+        // An f32 midpoint can round onto a boundary value when the two
+        // split values are adjacent floats — degrade to a leaf rather
+        // than recurse on an empty side.
+        return leaf(nodes);
+    }
+
+    let at = nodes.len();
+    nodes.push(Node::Split { dim: dim as u32, thr, right: 0 });
+    grow(nodes, x, dims, y, &left, depth + 1, cfg, rng);
+    let right_at = nodes.len() as u32;
+    if let Node::Split { right, .. } = &mut nodes[at] {
+        *right = right_at;
+    }
+    grow(nodes, x, dims, y, &right, depth + 1, cfg, rng);
+}
+
+impl Model for ForestModel {
+    fn name(&self) -> &'static str {
+        self.label
+    }
+
+    fn seed(&mut self, rng: &mut Rng) {
+        // One child stream per run; refits keep drawing from it, so the
+        // draw sequence depends only on the observation sequence.
+        self.rng = Some(rng.split(0x464f_5245_5354)); // "FOREST"
+    }
+
+    fn fit(&mut self, ctx: &FitCtx<'_>) {
+        let dims = ctx.space.dims();
+        let n = ctx.obs_idx.len();
+        assert!(n > 0, "forest fit needs at least one observation");
+        self.dims = dims;
+        // Materialize the training rows once per fit (n ≤ a few hundred).
+        let mut x = Vec::with_capacity(n * dims);
+        for &i in ctx.obs_idx {
+            x.extend_from_slice(ctx.space.point(i));
+        }
+        let rng = self
+            .rng
+            .get_or_insert_with(|| Rng::with_stream(0x9e37_79b9_7f4a_7c15, 0x464f_5245_5354));
+        self.trees.clear();
+        let cfg = self.cfg;
+        for _ in 0..cfg.n_trees {
+            let sample: Vec<usize> = if cfg.bootstrap {
+                (0..n).map(|_| rng.below(n)).collect()
+            } else {
+                (0..n).collect()
+            };
+            let mut nodes = Vec::new();
+            grow(&mut nodes, &x, dims, ctx.y_z, &sample, 0, &cfg, rng);
+            self.trees.push(Tree { nodes });
+        }
+    }
+
+    fn predict_tiles(&self, space: &SearchSpace, start: usize, mu: &mut [f64], var: &mut [f64]) {
+        let dims = self.dims;
+        let tiles = space.points();
+        for (j, (mj, vj)) in mu.iter_mut().zip(var.iter_mut()).enumerate() {
+            let i = start + j;
+            let (m, v) = self.predict_row(&tiles[i * dims..(i + 1) * dims]);
+            *mj = m;
+            *vj = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Param;
+    use crate::util::pool::ShardPool;
+
+    fn grid_space() -> SearchSpace {
+        let vals: Vec<i64> = (0..20).collect();
+        SearchSpace::build("forest", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[])
+    }
+
+    fn fit_on_bowl(cfg: ForestConfig, n_obs: usize) -> (ForestModel, SearchSpace) {
+        let space = grid_space();
+        let pool = ShardPool::new(1);
+        let obs_idx: Vec<usize> = (0..n_obs).map(|i| (i * 37) % space.len()).collect();
+        let y: Vec<f64> = obs_idx
+            .iter()
+            .map(|&i| {
+                let p = space.point(i);
+                let (dx, dy) = (f64::from(p[0]) - 0.5, f64::from(p[1]) - 0.5);
+                dx * dx + dy * dy
+            })
+            .collect();
+        let mut model = ForestModel::new(cfg);
+        let mut rng = Rng::new(7);
+        model.seed(&mut rng);
+        model.fit(&FitCtx { space: &space, obs_idx: &obs_idx, y_z: &y, shard_len: 64, pool: &pool });
+        (model, space)
+    }
+
+    /// Both flavors learn the bowl well enough to rank its center far
+    /// below its corners.
+    #[test]
+    fn forest_learns_the_bowl_ordering() {
+        for cfg in [ForestConfig::random_forest(), ForestConfig::extra_trees()] {
+            let (model, space) = fit_on_bowl(cfg, 120);
+            let center = space.index_of(&[10, 10]).unwrap();
+            let corner = space.index_of(&[0, 0]).unwrap();
+            let (mu_center, _) = model.predict_row(space.point(center));
+            let (mu_corner, _) = model.predict_row(space.point(corner));
+            assert!(
+                mu_center < mu_corner,
+                "{}: center {mu_center} must predict below corner {mu_corner}",
+                model.name()
+            );
+        }
+    }
+
+    /// The ensemble variance is finite and positive everywhere, and the
+    /// bootstrapped trees actually disagree somewhere (it is an
+    /// uncertainty estimate, not a constant).
+    #[test]
+    fn variance_is_positive_and_trees_disagree() {
+        let (model, space) = fit_on_bowl(ForestConfig::random_forest(), 40);
+        let mut vmax: f64 = 0.0;
+        for i in 0..space.len() {
+            let (_, v) = model.predict_row(space.point(i));
+            assert!(v >= 1e-12 && v.is_finite());
+            vmax = vmax.max(v);
+        }
+        assert!(vmax > 1e-12, "bootstrapped trees must disagree somewhere (vmax={vmax})");
+    }
+
+    /// Refitting with the same private stream state is deterministic, and
+    /// two identically seeded models agree bit for bit.
+    #[test]
+    fn fits_are_deterministic_under_the_seeded_stream() {
+        let (a, space) = fit_on_bowl(ForestConfig::extra_trees(), 60);
+        let (b, _) = fit_on_bowl(ForestConfig::extra_trees(), 60);
+        for i in (0..space.len()).step_by(17) {
+            assert_eq!(a.predict_row(space.point(i)), b.predict_row(space.point(i)), "config {i}");
+        }
+    }
+
+    /// Degenerate fits (one observation, constant targets) stay finite.
+    #[test]
+    fn degenerate_fits_are_safe() {
+        let space = grid_space();
+        let pool = ShardPool::new(1);
+        for (obs, y) in [(vec![5usize], vec![0.3]), (vec![1, 2, 3], vec![1.0, 1.0, 1.0])] {
+            let mut model = ForestModel::new(ForestConfig::random_forest());
+            model.fit(&FitCtx { space: &space, obs_idx: &obs, y_z: &y, shard_len: 64, pool: &pool });
+            let (mu, var) = model.predict_row(space.point(0));
+            assert!(mu.is_finite() && var >= 1e-12, "mu={mu} var={var}");
+        }
+    }
+}

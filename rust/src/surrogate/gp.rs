@@ -1,0 +1,134 @@
+//! [`GpModel`] — the incremental GP behind the batch [`Model`] trait.
+//!
+//! An adapter over [`IncrementalGp`]: `fit` feeds only the observations
+//! appended since the last iteration (the GP is the one surrogate here
+//! that is *incrementally* refit) and caches the per-iteration mean
+//! weights `w = L⁻¹(y − ȳ)`; `predict_tiles` then runs the exact
+//! per-shard posterior sweep of the fused hot path. Every floating-point
+//! operation is shared with the `Backend::Incremental` engine path, so a
+//! `Backend::Model(GpModel)` run replays the hot path **bit for bit** —
+//! the legacy equivalence suite and
+//! `surrogate::tests::gp_model_backend_replays_incremental` pin this.
+
+use crate::bo::BoConfig;
+use crate::gp::cov::CovFn;
+use crate::gp::IncrementalGp;
+use crate::space::SearchSpace;
+use crate::surrogate::{FitCtx, Model};
+
+pub struct GpModel {
+    cov: CovFn,
+    noise: f64,
+    /// Built lazily on first fit (the space and shard sizing arrive with
+    /// the fit context).
+    inner: Option<IncrementalGp>,
+    /// Observations already appended to `inner`.
+    fed: usize,
+    /// Cached mean weights of the current iteration's z-scored targets.
+    w: Vec<f64>,
+    y_mean: f64,
+}
+
+impl GpModel {
+    pub fn new(cov: CovFn, noise: f64) -> GpModel {
+        GpModel { cov, noise, inner: None, fed: 0, w: Vec::new(), y_mean: 0.0 }
+    }
+
+    /// The engine's convention: covariance and noise come straight from
+    /// the BO configuration (Table I defaults).
+    pub fn from_config(cfg: &BoConfig) -> GpModel {
+        GpModel::new(cfg.cov, cfg.noise)
+    }
+}
+
+impl Model for GpModel {
+    fn name(&self) -> &'static str {
+        "gp"
+    }
+
+    fn fit(&mut self, ctx: &FitCtx<'_>) {
+        let inner = self.inner.get_or_insert_with(|| {
+            // Zero-copy: borrow the space's shard-aligned tiles, on the
+            // engine's own partition so predict_tiles chunks align.
+            IncrementalGp::with_shard_len(
+                self.cov,
+                self.noise,
+                ctx.space.norm_tiles(),
+                ctx.space.dims(),
+                ctx.shard_len,
+            )
+        });
+        while self.fed < ctx.obs_idx.len() {
+            inner.add_par(ctx.space.point(ctx.obs_idx[self.fed]), ctx.pool);
+            self.fed += 1;
+        }
+        let (w, y_mean) = inner.mean_weights(ctx.y_z);
+        self.w = w;
+        self.y_mean = y_mean;
+    }
+
+    fn predict_tiles(&self, _space: &SearchSpace, start: usize, mu: &mut [f64], var: &mut [f64]) {
+        let inner = self.inner.as_ref().expect("GpModel::fit must run before predict_tiles");
+        inner.predict_shard_into(start, &self.w, self.y_mean, mu, var);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Param;
+    use crate::util::pool::ShardPool;
+
+    /// The adapter must reproduce `predict_into` exactly, chunk by chunk.
+    #[test]
+    fn adapter_matches_direct_incremental_predictions() {
+        let vals: Vec<i64> = (0..13).collect();
+        let space = SearchSpace::build(
+            "gpm",
+            vec![Param::ints("a", &vals), Param::ints("b", &vals[..7])],
+            &[],
+        );
+        let m = space.len();
+        let shard_len = 17;
+        let pool = ShardPool::new(3);
+        let obs_idx: Vec<usize> = vec![3, 40, 77, 12, 61];
+        let y_z = vec![0.4, -1.1, 0.2, 0.9, -0.4];
+
+        let cov = CovFn::Matern32 { lengthscale: 1.5 };
+        let mut model = GpModel::new(cov, 1e-6);
+        model.fit(&FitCtx { space: &space, obs_idx: &obs_idx, y_z: &y_z, shard_len, pool: &pool });
+        let mut mu_a = vec![0.0; m];
+        let mut var_a = vec![0.0; m];
+        crate::surrogate::predict_pass(&model, &space, &pool, shard_len, &mut mu_a, &mut var_a);
+
+        let mut direct = IncrementalGp::with_shard_len(cov, 1e-6, space.norm_tiles(), space.dims(), shard_len);
+        for &i in &obs_idx {
+            direct.add(space.point(i));
+        }
+        let mut mu_b = vec![0.0; m];
+        let mut var_b = vec![0.0; m];
+        direct.predict_into(&y_z, &mut mu_b, &mut var_b);
+
+        assert_eq!(mu_a, mu_b, "adapter mean must be bit-identical");
+        assert_eq!(var_a, var_b, "adapter variance must be bit-identical");
+    }
+
+    /// Incremental refits feed only the new observations.
+    #[test]
+    fn refit_is_incremental() {
+        let vals: Vec<i64> = (0..9).collect();
+        let space = SearchSpace::build("gpm2", vec![Param::ints("a", &vals)], &[]);
+        let pool = ShardPool::new(1);
+        let mut model = GpModel::new(CovFn::Rbf { lengthscale: 1.0 }, 1e-6);
+        model.fit(&FitCtx { space: &space, obs_idx: &[0, 4], y_z: &[0.1, -0.1], shard_len: 4, pool: &pool });
+        assert_eq!(model.inner.as_ref().unwrap().n_obs(), 2);
+        model.fit(&FitCtx {
+            space: &space,
+            obs_idx: &[0, 4, 7],
+            y_z: &[0.2, -0.2, 0.0],
+            shard_len: 4,
+            pool: &pool,
+        });
+        assert_eq!(model.inner.as_ref().unwrap().n_obs(), 3, "only the new point is appended");
+    }
+}

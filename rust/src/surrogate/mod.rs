@@ -1,0 +1,353 @@
+//! Pluggable surrogate-model subsystem: the batch [`Model`] trait and its
+//! implementations, fused into the BO sweep.
+//!
+//! The paper's §IV-D comparison — and the broader benchmarking literature
+//! (Schoonhoven et al., arXiv:2210.01465; Tørring & Elster,
+//! arXiv:2203.13577) — pits GP-based BO against other model-based tuners,
+//! where tree ensembles and density-ratio (TPE) surrogates are the
+//! strongest non-GP baselines on rough, discrete kernel spaces. This
+//! module generalizes the engine's surrogate slot from a hardwired
+//! [`IncrementalGp`](crate::gp::IncrementalGp) to a batch-oriented trait,
+//! so any surrogate composes with the existing acquisition policies
+//! (single, `multi`, `advanced multi`), batch ask, pruning, and the
+//! contextual-variance exploration schedule.
+//!
+//! # The batch contract
+//!
+//! A [`Model`] is refit from the run's observations once per BO iteration
+//! ([`Model::fit`]) and then predicts `(mu, var)` over the *whole*
+//! candidate set, one shard-aligned chunk of the space's columnar
+//! normalized tiles at a time ([`Model::predict_tiles`]). The engine
+//! drives those chunk predictions in parallel on its run-long
+//! [`ShardPool`] ([`predict_pass`]) and feeds the resulting `(mu, var)`
+//! arrays straight into its existing fused mask+λ fold and sharded
+//! acquisition argmin — the same O(m) machinery the GP hot path uses.
+//!
+//! # Determinism
+//!
+//! The same guarantees as the GP hot path, enforced by the tests below:
+//!
+//! - `predict_tiles` is pure and per-candidate independent — chunk
+//!   boundaries are fixed by the configured shard length, never by the
+//!   thread count, so predictions are bit-identical for every worker
+//!   count and shard partition;
+//! - `fit` runs on the driver thread; a model that needs randomness
+//!   (bootstrap resampling) draws from a *private* child stream derived
+//!   once per run from the run RNG ([`Model::seed`]), so its draw
+//!   sequence depends only on the observation sequence — which is itself
+//!   partition-independent;
+//! - [`GpModel`] routes through the identical `IncrementalGp` math, and
+//!   the `gp_model_backend_replays_incremental` test pins the whole
+//!   `Backend::Model` plumbing to the `Backend::Incremental` hot path
+//!   bit for bit.
+
+pub mod forest;
+pub mod gp;
+pub mod tpe;
+
+pub use forest::{ForestConfig, ForestModel};
+pub use gp::GpModel;
+pub use tpe::{TpeConfig, TpeModel};
+
+use crate::space::SearchSpace;
+use crate::util::pool::ShardPool;
+use crate::util::rng::Rng;
+
+/// Everything a surrogate may read while fitting: the space (columnar
+/// `u16` value columns and the normalized f32 tiles), the run's
+/// observations so far (z-scored), and the engine's shard sizing/pool so
+/// incremental models can mirror the engine's partition.
+pub struct FitCtx<'a> {
+    pub space: &'a SearchSpace,
+    /// Configuration index of each observation, in evaluation order.
+    pub obs_idx: &'a [usize],
+    /// z-normalized observation values (same order as `obs_idx`). The
+    /// engine re-centers every iteration, so models must treat each fit
+    /// as a fresh view of the targets.
+    pub y_z: &'a [f64],
+    /// The engine's candidate chunk length — `predict_tiles` will be
+    /// called on exactly these boundaries.
+    pub shard_len: usize,
+    /// The run's shard pool, for models that parallelize their own fit.
+    pub pool: &'a ShardPool,
+}
+
+/// A batch surrogate model: refit from the run's observations, then
+/// predict `(mu, var)` over shard-aligned chunks of the candidate tiles.
+///
+/// `predict_tiles` must be pure (it runs concurrently across shards) and
+/// per-candidate independent, so results cannot depend on the partition.
+pub trait Model: Send + Sync {
+    /// Short stable identifier (used by benches and logs).
+    fn name(&self) -> &'static str;
+
+    /// Derive the model's private randomness from the run RNG — called
+    /// exactly once per run, before the first `fit`. Deterministic models
+    /// keep the default no-op, leaving the run stream untouched (which is
+    /// what lets [`GpModel`] replay the GP hot path bit for bit).
+    fn seed(&mut self, _rng: &mut Rng) {}
+
+    /// Refit from the run's observations. Called once per BO iteration,
+    /// on the driver thread, before any `predict_tiles` of that
+    /// iteration.
+    fn fit(&mut self, ctx: &FitCtx<'_>);
+
+    /// Predict posterior mean and variance for the candidate range
+    /// `[start, start + mu.len())` of `space`'s normalized tiles.
+    /// `start` is always a multiple of the fit's `shard_len`.
+    fn predict_tiles(&self, space: &SearchSpace, start: usize, mu: &mut [f64], var: &mut [f64]);
+}
+
+/// One sharded batch-prediction sweep: fill `mu`/`var` over all of
+/// `space`'s candidates by calling [`Model::predict_tiles`] per
+/// `chunk`-aligned range, in parallel on `pool`. Chunk boundaries depend
+/// only on `chunk`, and predictions are per-candidate independent, so the
+/// result is bit-identical for every thread count.
+pub fn predict_pass(
+    model: &dyn Model,
+    space: &SearchSpace,
+    pool: &ShardPool,
+    chunk: usize,
+    mu: &mut [f64],
+    var: &mut [f64],
+) {
+    assert!(chunk > 0);
+    let m = space.len();
+    assert!(mu.len() >= m && var.len() >= m);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = mu[..m]
+        .chunks_mut(chunk)
+        .zip(var[..m].chunks_mut(chunk))
+        .enumerate()
+        .map(|(ci, (mu_c, var_c))| {
+            let start = ci * chunk;
+            Box::new(move || model.predict_tiles(space, start, mu_c, var_c))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::bo::{Acq, Backend, BoConfig, BoStrategy};
+    use crate::objective::{Eval, Objective, TableObjective};
+    use crate::space::{Param, SearchSpace};
+    use crate::strategies::Strategy;
+    use crate::util::rng::Rng;
+
+    /// A smooth 2D bowl over a 30×30 grid with a known minimum.
+    fn bowl() -> TableObjective {
+        let vals: Vec<i64> = (0..30).collect();
+        let space =
+            SearchSpace::build("sur-bowl", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+        let table: Vec<Eval> = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                let (dx, dy) = (f64::from(p[0]) - 0.7, f64::from(p[1]) - 0.3);
+                Eval::Valid(10.0 + 100.0 * (dx * dx + dy * dy))
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    /// The bowl with an invalid quadrant — exercises pruning and the
+    /// invalid-handling paths under every surrogate.
+    fn bowl_with_invalid() -> TableObjective {
+        let vals: Vec<i64> = (0..30).collect();
+        let space =
+            SearchSpace::build("sur-inv", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+        let table: Vec<Eval> = (0..space.len())
+            .map(|i| {
+                let p = space.point(i);
+                if p[0] > 0.8 && p[1] > 0.8 {
+                    Eval::CompileError
+                } else {
+                    let (dx, dy) = (f64::from(p[0]) - 0.7, f64::from(p[1]) - 0.3);
+                    Eval::Valid(10.0 + 100.0 * (dx * dx + dy * dy))
+                }
+            })
+            .collect();
+        TableObjective::new(space, table)
+    }
+
+    fn model_strategy(label: &str, mut cfg: BoConfig, shard_len: usize, threads: usize) -> BoStrategy {
+        cfg.shard_len = shard_len;
+        cfg.threads = threads;
+        let backend: Backend = match label {
+            "bo_rf" => Backend::Model(Arc::new(|_c: &BoConfig| {
+                Box::new(ForestModel::new(ForestConfig::random_forest())) as Box<dyn Model>
+            })),
+            "bo_et" => Backend::Model(Arc::new(|_c: &BoConfig| {
+                Box::new(ForestModel::new(ForestConfig::extra_trees())) as Box<dyn Model>
+            })),
+            "tpe" => Backend::Model(Arc::new(|_c: &BoConfig| {
+                Box::new(TpeModel::new(TpeConfig::default())) as Box<dyn Model>
+            })),
+            "gp" => Backend::Model(Arc::new(|c: &BoConfig| {
+                Box::new(GpModel::from_config(c)) as Box<dyn Model>
+            })),
+            other => panic!("unknown test surrogate {other}"),
+        };
+        BoStrategy::with_backend(label, cfg, backend)
+    }
+
+    fn seq(label: &str, obj: &TableObjective, shard_len: usize, threads: usize, budget: usize) -> Vec<usize> {
+        let s = model_strategy(label, BoConfig::single(Acq::Ei), shard_len, threads);
+        let mut rng = Rng::new(17);
+        s.run(obj, budget, &mut rng).records.iter().map(|(i, _)| *i).collect()
+    }
+
+    /// The Model-plumbing acceptance test: routing the GP through the
+    /// generic `Backend::Model` path (fit → sharded predict_pass → folded
+    /// mask+λ → sharded score pass) must replay the fused incremental hot
+    /// path bit for bit — same math, different sweep composition.
+    #[test]
+    fn gp_model_backend_replays_incremental() {
+        for obj in [bowl(), bowl_with_invalid()] {
+            for cfg in [BoConfig::single(Acq::Ei), BoConfig::multi(), BoConfig::advanced_multi()] {
+                let reference = {
+                    let s = BoStrategy::new("bo", cfg.clone());
+                    let mut rng = Rng::new(23);
+                    s.run(&obj, 70, &mut rng)
+                };
+                let via_model = {
+                    let s = BoStrategy::with_backend(
+                        "bo-model",
+                        cfg.clone(),
+                        Backend::Model(Arc::new(|c: &BoConfig| {
+                            Box::new(GpModel::from_config(c)) as Box<dyn Model>
+                        })),
+                    );
+                    let mut rng = Rng::new(23);
+                    s.run(&obj, 70, &mut rng)
+                };
+                assert_eq!(
+                    reference.records, via_model.records,
+                    "{:?}: Model-trait GP diverged from the incremental hot path",
+                    cfg.acq
+                );
+            }
+        }
+    }
+
+    /// The determinism suite for the new surrogates: every model's
+    /// evaluation sequence must be bit-identical across 1/2/8 workers and
+    /// every shard partition (the satellite acceptance criterion).
+    #[test]
+    fn surrogate_traces_identical_across_shards_and_threads() {
+        let obj = bowl_with_invalid(); // pruning + invalid paths too
+        for label in ["bo_rf", "bo_et", "tpe"] {
+            // 900 candidates in one chunk on one worker: the serial
+            // reference partition.
+            let reference = seq(label, &obj, 900, 1, 60);
+            assert_eq!(reference.len(), 60, "{label} must spend the whole budget");
+            for &(sl, th) in &[(450, 2), (113, 8), (64, 3), (0, 8), (900, 4)] {
+                assert_eq!(
+                    seq(label, &obj, sl, th),
+                    reference,
+                    "{label}: sequence diverged at shard_len={sl} threads={th}"
+                );
+            }
+        }
+    }
+
+    /// Fresh-driver runs with the same seed replay the same trace (the
+    /// model RNG is derived from the run stream, not global state).
+    #[test]
+    fn surrogate_runs_are_seed_reproducible() {
+        let obj = bowl();
+        for label in ["bo_rf", "bo_et", "tpe"] {
+            let a = seq(label, &obj, 0, 0, 50);
+            let b = seq(label, &obj, 0, 0, 50);
+            assert_eq!(a, b, "{label} must be a pure function of the seed");
+            // Never re-evaluates.
+            let set: std::collections::HashSet<_> = a.iter().collect();
+            assert_eq!(set.len(), a.len(), "{label} re-evaluated a configuration");
+        }
+    }
+
+    /// Smoke-quality check: every surrogate actually optimizes the smooth
+    /// bowl (well under the table's valid mean, near the global minimum).
+    /// The bound is deliberately loose — quality comparisons live in the
+    /// EXPERIMENTS §Surrogate-zoo sweep, not the unit suite.
+    #[test]
+    fn surrogates_optimize_the_bowl() {
+        let obj = bowl();
+        let global = obj.known_minimum().unwrap();
+        let mean = {
+            let vals: Vec<f64> = obj.table().iter().filter_map(|e| e.value()).collect();
+            crate::util::linalg::mean(&vals)
+        };
+        for label in ["bo_rf", "bo_et", "tpe"] {
+            let s = model_strategy(label, BoConfig::single(Acq::Ei), 0, 0);
+            let mut rng = Rng::new(5);
+            let t = s.run(&obj, 80, &mut rng);
+            let best = t.best().unwrap().1;
+            assert!(best < mean, "{label}: best {best} no better than the table mean {mean}");
+            assert!(best < global * 3.0, "{label}: best {best} vs global {global}");
+        }
+    }
+
+    /// Batch ask composes with Model backends: the `multi` policy in
+    /// batch mode still proposes >1 distinct argmin per step and never
+    /// re-evaluates.
+    #[test]
+    fn batch_ask_composes_with_model_backends() {
+        use crate::strategies::driver::{drive, FevalBudget};
+        let obj = bowl();
+        let mut cfg = BoConfig::multi();
+        cfg.batch_ask = true;
+        let s = model_strategy("bo_rf", cfg, 0, 0);
+        let mut d = s.driver(obj.space());
+        let mut rng = Rng::new(13);
+        let t = drive(d.as_mut(), &obj, &FevalBudget::new(60), &mut rng);
+        assert_eq!(t.len(), 60);
+        let idxs: std::collections::HashSet<usize> = t.records.iter().map(|(i, _)| *i).collect();
+        assert_eq!(idxs.len(), t.len(), "batch mode must not re-evaluate");
+    }
+
+    /// predict_pass fills exactly the chunks the models were fit for, at
+    /// every thread count, bit-identically.
+    #[test]
+    fn predict_pass_is_thread_count_invariant() {
+        let obj = bowl();
+        let space = obj.space();
+        let m = space.len();
+        let shard_len = 113;
+        let obs_idx: Vec<usize> = (0..25).map(|i| i * 31 % m).collect();
+        let y_z: Vec<f64> = obs_idx
+            .iter()
+            .map(|&i| obj.table()[i].value().unwrap() / 50.0 - 1.0)
+            .collect();
+        let makes: [fn() -> Box<dyn Model>; 3] = [
+            || Box::new(ForestModel::new(ForestConfig::random_forest())),
+            || Box::new(ForestModel::new(ForestConfig::extra_trees())),
+            || Box::new(TpeModel::new(TpeConfig::default())),
+        ];
+        for make in makes {
+            let mut reference: Option<(Vec<f64>, Vec<f64>)> = None;
+            for threads in [1usize, 2, 8] {
+                let pool = ShardPool::new(threads);
+                let mut model = make();
+                let mut rng = Rng::new(99);
+                model.seed(&mut rng);
+                model.fit(&FitCtx { space, obs_idx: &obs_idx, y_z: &y_z, shard_len, pool: &pool });
+                let mut mu = vec![0.0; m];
+                let mut var = vec![0.0; m];
+                predict_pass(model.as_ref(), space, &pool, shard_len, &mut mu, &mut var);
+                assert!(mu.iter().all(|v| v.is_finite()), "{} mu not finite", model.name());
+                assert!(var.iter().all(|v| v.is_finite() && *v > 0.0), "{}", model.name());
+                match &reference {
+                    None => reference = Some((mu, var)),
+                    Some((mu_r, var_r)) => {
+                        assert_eq!(&mu, mu_r, "{}: mu bits differ at threads={threads}", model.name());
+                        assert_eq!(&var, var_r, "{}: var bits differ at threads={threads}", model.name());
+                    }
+                }
+            }
+        }
+    }
+}

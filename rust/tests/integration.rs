@@ -154,6 +154,87 @@ fn space_build_bench_smoke() {
 }
 
 #[test]
+fn surrogate_fit_bench_smoke() {
+    // The surrogate_fit bench binary is a thin CLI over
+    // harness::surrogate_bench; running the smoke grid here keeps the
+    // bench from silently rotting.
+    use ktbo::harness::surrogate_bench::{run_scenario, scenario_grid, to_json};
+    let records: Vec<_> = scenario_grid(true).iter().map(run_scenario).collect();
+    assert!(!records.is_empty());
+    for r in &records {
+        assert!(
+            r.ms_fit.is_finite() && r.ms_fit >= 0.0 && r.ms_predict.is_finite() && r.ms_predict >= 0.0,
+            "bad timing in {:?}",
+            r.scenario
+        );
+        assert!(r.configs > 0);
+        // Determinism hook: the 1- and 4-thread runs of one model must
+        // predict identical mean bits.
+        let twin = records
+            .iter()
+            .find(|o| o.scenario.model == r.scenario.model && o.scenario.threads != r.scenario.threads)
+            .expect("smoke grid pairs every model across thread counts");
+        assert_eq!(r.mu_digest, twin.mu_digest, "{} prediction depends on threads", r.scenario.model);
+    }
+    let doc = to_json(&records).render_pretty();
+    assert!(doc.contains("\"bench\": \"surrogate_fit\""));
+    for model in ["gp", "rf", "et", "tpe"] {
+        assert!(doc.contains(&format!("\"model\": \"{model}\"")), "{model} missing from the doc");
+    }
+}
+
+#[test]
+fn surrogate_zoo_sweeps_all_kernels() {
+    // Acceptance: bo_rf, bo_et, and tpe run end-to-end on all five
+    // kernels via the orchestrated sweep, producing valid JSONL records
+    // and MAE/MDF aggregates — the non-GP surrogates flow through
+    // drive(), the sweep, and the metrics untouched.
+    use ktbo::harness::orchestrator::{sweep, SweepSpec};
+    let out = std::env::temp_dir().join("ktbo-int-surrogate-zoo").to_string_lossy().into_owned();
+    let spec = SweepSpec {
+        kernels: vec!["gemm".into(), "convolution".into(), "pnpoly".into(), "expdist".into(), "adding".into()],
+        gpus: vec!["titanx".into()],
+        strategies: vec!["bo_rf".into(), "bo_et".into(), "tpe".into()],
+        budget: 25,
+        repeat_scale: 0.02, // 3 repeats per cell
+        seed: 13,
+        threads: 2,
+        out_dir: out.clone(),
+        tag: "surrogate-zoo".into(),
+        cache: true,
+        fresh: true,
+        space: None,
+    };
+    let report = sweep(&spec).unwrap();
+    assert_eq!(report.outcomes.len(), 5, "one outcome set per kernel");
+    let mut mae_matrix: Vec<Vec<f64>> = Vec::new(); // kernel-major, strategy columns
+    for ((kernel, _gpu), outs) in &report.outcomes {
+        assert_eq!(outs.len(), 3, "{kernel}: all three surrogates must report");
+        for o in outs {
+            assert_eq!(o.mean_curve.len(), 25, "{kernel}/{}", o.name);
+            assert!(o.mean_curve.iter().all(|v| v.is_finite()), "{kernel}/{}", o.name);
+            assert!(o.mae.mean.is_finite() && o.mae.mean >= 0.0, "{kernel}/{} MAE", o.name);
+            assert!(o.finals.iter().all(|v| v.is_finite()), "{kernel}/{}", o.name);
+        }
+        mae_matrix.push(outs.iter().map(|o| o.mae.mean).collect());
+    }
+    // MDF flows over the surrogate zoo exactly as over the paper zoo.
+    let mdf = mean_deviation_factor(&mae_matrix);
+    assert_eq!(mdf.len(), 3);
+    // MDF normalizes by the per-kernel mean over strategies, so the
+    // factors are positive and average to ~1 across the zoo.
+    assert!(mdf.iter().all(|(v, _)| v.is_finite() && *v > 0.0), "bad MDF: {mdf:?}");
+    let mdf_mean: f64 = mdf.iter().map(|(v, _)| v).sum::<f64>() / mdf.len() as f64;
+    assert!((mdf_mean - 1.0).abs() < 1e-9, "MDF factors must average to 1: {mdf:?}");
+    // The JSONL progress log carries every surrogate cell.
+    let progress =
+        std::fs::read_to_string(std::path::Path::new(&out).join("SWEEP_surrogate-zoo.jsonl")).unwrap();
+    for s in ["bo_rf", "bo_et", "tpe"] {
+        assert!(progress.contains(&format!("\"strategy\":\"{s}\"")), "{s} missing from JSONL");
+    }
+}
+
+#[test]
 fn json_space_files_match_their_hand_coded_twins() {
     // Acceptance: every shipped examples/spaces/<kernel>.json builds the
     // same restricted space (size and membership) as the kernel's

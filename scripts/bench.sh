@@ -15,11 +15,13 @@ ROOT="$(pwd)"
 
 GP_OUT="$ROOT/BENCH_gp_hotpath.json"
 SPACE_OUT="$ROOT/BENCH_space_build.json"
+SURR_OUT="$ROOT/BENCH_surrogate_fit.json"
 for arg in "$@"; do
   # A smoke run must not overwrite the tracked full-grid trajectory files.
   if [ "$arg" = "--smoke" ]; then
     GP_OUT="$ROOT/BENCH_gp_hotpath.smoke.json"
     SPACE_OUT="$ROOT/BENCH_space_build.smoke.json"
+    SURR_OUT="$ROOT/BENCH_surrogate_fit.smoke.json"
   fi
 done
 
@@ -27,7 +29,9 @@ cd rust
 cargo build --release
 cargo bench --bench gp_hotpath -- --out "$GP_OUT" "$@"
 cargo bench --bench space_build -- --out "$SPACE_OUT" "$@"
+cargo bench --bench surrogate_fit -- --out "$SURR_OUT" "$@"
 
 echo
 echo "perf records: $GP_OUT"
-echo "              $SPACE_OUT (update EXPERIMENTS.md §Perf after full runs)"
+echo "              $SPACE_OUT"
+echo "              $SURR_OUT (update EXPERIMENTS.md §Perf after full runs)"

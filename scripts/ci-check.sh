@@ -39,10 +39,10 @@ if [ "$FAST" = "1" ]; then
   exit 0
 fi
 
-step "smoke bench (gp_hotpath)"
+step "smoke bench (gp_hotpath + space_build + surrogate_fit)"
 scripts/bench.sh --smoke
 
-step "smoke sweep (orchestrator)"
+step "smoke sweep (orchestrator; includes the bo_rf surrogate cell)"
 cargo run --release -p ktbo -- sweep --smoke --fresh --out results
 
 step "smoke sweep on a JSON-defined space"
@@ -52,9 +52,12 @@ cargo run --release -p ktbo -- sweep --smoke --fresh --out results \
 step "artifact sanity"
 test -s BENCH_gp_hotpath.smoke.json
 test -s BENCH_space_build.smoke.json
+test -s BENCH_surrogate_fit.smoke.json
 test -s results/SWEEP_smoke.jsonl
 test -s results/SWEEP_smoke.results.jsonl
 grep -q '"type":"outcome"' results/SWEEP_smoke.results.jsonl
+# The non-GP surrogate path must be exercised on every push.
+grep -q '"strategy":"bo_rf"' results/SWEEP_smoke.results.jsonl
 test -s results/SWEEP_smoke-space.results.jsonl
 
 printf '\nci-check: all green\n'
