@@ -514,7 +514,10 @@ impl SearchDriver for BoDriver {
         if let Some(v) = value {
             self.obs_idx.push(obs.idx);
             self.obs_y.push(v);
-        } else {
+        } else if !obs.eval.is_transient() {
+            // Persistent invalids feed the pruning model; transient faults
+            // say nothing about the config or its neighborhood, so
+            // learning them as invalid regions would poison pruning.
             self.newly_invalid.push(obs.idx);
         }
         if let BoPhase::Step = self.phase {

@@ -35,9 +35,10 @@
 use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::io::Write as _;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::gpusim::device::Device;
 use crate::gpusim::kernels::kernel_by_name;
@@ -47,8 +48,11 @@ use crate::harness::runner::{
     StrategyOutcome,
 };
 use crate::objective::evalcache::{CachedObjective, EvalCache};
+use crate::objective::faulty::{FaultPlan, FaultyObjective};
+use crate::objective::resilient::{ResilienceConfig, ResilientEvaluator};
 use crate::objective::{Objective, TableObjective};
 use crate::strategies::registry::{by_name, unknown_strategy_message};
+use crate::strategies::Strategy;
 use crate::util::json::Json;
 use crate::util::jsonparse;
 use crate::util::pool::{enter_harness_workers, ShardPool};
@@ -87,6 +91,22 @@ pub struct SweepSpec {
     /// single-kernel matrix — the spec's parameter names must match what
     /// that kernel's analytical model reads.
     pub space: Option<String>,
+    /// Path to a [`FaultPlan`] JSON file (`ktbo sweep --fault-plan`).
+    /// Cells of the strategies in `fault_strategies` evaluate through a
+    /// [`FaultyObjective`] seeded per cell (plan seed ⊕ cell stream), so
+    /// injected faults are deterministic at every thread count. `None` =
+    /// no injection.
+    pub fault_plan: Option<String>,
+    /// Which strategies run faulted when `fault_plan` is set (canonical
+    /// names or aliases). Empty = every strategy in the matrix.
+    pub fault_strategies: Vec<String>,
+    /// Per-evaluation deadline for every cell, in milliseconds
+    /// (`--eval-timeout-ms`). `None` = no watchdog. Note the watchdog
+    /// splits a child RNG per attempt, so timed cells trace differently
+    /// from unwatched ones — the meta record guards resume mixing.
+    pub eval_timeout_ms: Option<u64>,
+    /// Transient-failure retries per evaluation (`--max-retries`).
+    pub max_retries: u32,
 }
 
 impl SweepSpec {
@@ -100,13 +120,21 @@ impl SweepSpec {
 
     /// The CI tier: a seconds-scale matrix that still exercises multiple
     /// cells, the BO engine, a non-GP surrogate (`bo_rf` — so the
-    /// pluggable-Model path is exercised on every push), the cache, and
-    /// the JSONL plumbing.
+    /// pluggable-Model path is exercised on every push), the cache, the
+    /// JSONL plumbing, and — via the `simulated_annealing` cells run under
+    /// the committed `examples/faults/smoke.json` plan — the fault
+    /// injection and resilience layers with isolated-failure accounting.
     pub fn smoke(out_dir: &str) -> SweepSpec {
         SweepSpec {
             kernels: vec!["adding".into()],
             gpus: vec!["a100".into()],
-            strategies: vec!["random".into(), "mls".into(), "ei".into(), "bo_rf".into()],
+            strategies: vec![
+                "random".into(),
+                "mls".into(),
+                "ei".into(),
+                "bo_rf".into(),
+                "sa".into(),
+            ],
             budget: 60,
             repeat_scale: 0.02,
             seed: 20210601,
@@ -116,6 +144,10 @@ impl SweepSpec {
             cache: true,
             fresh: false,
             space: None,
+            fault_plan: Some("examples/faults/smoke.json".into()),
+            fault_strategies: vec!["simulated_annealing".into()],
+            eval_timeout_ms: None,
+            max_retries: 2,
         }
     }
 }
@@ -132,6 +164,11 @@ pub struct SweepReport {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub wall_s: f64,
+    /// Cells that panicked (or were otherwise crash-isolated), with the
+    /// panic message. Recorded as `"outcome":"failed"` in the progress
+    /// JSONL — curve-less, so a `--fresh`-less resume re-attempts exactly
+    /// these cells. Failed cells are excluded from aggregates.
+    pub failed_cells: Vec<(CellKey, String)>,
     /// Human-readable digest (printed by `ktbo sweep`).
     pub summary: String,
 }
@@ -140,7 +177,21 @@ pub struct SweepReport {
 struct SessionJob {
     key: CellKey,
     obj_id: String,
+    /// Resolved once before any worker runs — a bad name fails in the
+    /// caller, never as a panic inside the pool mid-batch.
+    strategy_impl: Arc<dyn Strategy>,
     eval_obj: Arc<dyn Objective>,
+    /// Fault-injection handle for a faulted cell, kept for accounting.
+    faulty: Option<Arc<FaultyObjective>>,
+    /// Resilience-layer handle, kept for accounting.
+    resilient: Option<Arc<ResilientEvaluator>>,
+}
+
+/// How one session ended.
+enum CellResult {
+    Done(Vec<f64>),
+    /// The cell panicked; the sweep goes on without it.
+    Failed(String),
 }
 
 /// Append-only JSONL progress log, shared across pool workers.
@@ -212,19 +263,26 @@ fn parse_hex_u64(s: &str) -> Option<u64> {
 }
 
 fn meta_record(spec: &SweepSpec) -> Json {
+    let opt_str = |o: &Option<String>| match o {
+        Some(s) => Json::Str(s.clone()),
+        None => Json::Null,
+    };
     Json::obj()
         .set("type", "meta")
         .set("tag", spec.tag.as_str())
         .set("seed", hex_u64(spec.seed))
         .set("budget", spec.budget)
         .set("repeat_scale", spec.repeat_scale)
+        .set("space", opt_str(&spec.space))
+        .set("fault_plan", opt_str(&spec.fault_plan))
         .set(
-            "space",
-            match &spec.space {
-                Some(s) => Json::Str(s.clone()),
+            "eval_timeout_ms",
+            match spec.eval_timeout_ms {
+                Some(ms) => Json::Num(ms as f64),
                 None => Json::Null,
             },
         )
+        .set("max_retries", spec.max_retries as usize)
 }
 
 fn cell_record(key: &CellKey, obj_id: &str, base_seed: u64, budget: usize, curve: &[f64]) -> Json {
@@ -239,6 +297,30 @@ fn cell_record(key: &CellKey, obj_id: &str, base_seed: u64, budget: usize, curve
         .set("stream", hex_u64(cell_stream(obj_id, &key.strategy, key.rep)))
         .set("budget", budget)
         .set("curve", Json::Arr(curve.iter().map(|&v| Json::Num(v)).collect()))
+}
+
+/// Record for a crash-isolated cell: same coordinates, no `"curve"` —
+/// `load_progress` only resumes records with a parseable curve, so a
+/// failed cell is re-attempted by the next `--fresh`-less run.
+fn failed_cell_record(
+    key: &CellKey,
+    obj_id: &str,
+    base_seed: u64,
+    budget: usize,
+    error: &str,
+) -> Json {
+    Json::obj()
+        .set("type", "cell")
+        .set("kernel", key.kernel.as_str())
+        .set("gpu", key.gpu.as_str())
+        .set("strategy", key.strategy.as_str())
+        .set("rep", key.rep)
+        .set("objective", obj_id)
+        .set("seed", hex_u64(base_seed))
+        .set("stream", hex_u64(cell_stream(obj_id, &key.strategy, key.rep)))
+        .set("budget", budget)
+        .set("outcome", "failed")
+        .set("error", error)
 }
 
 /// Read completed cells back from a progress file's text (`path` is for
@@ -266,14 +348,31 @@ fn load_progress(text: &str, path: &Path, spec: &SweepSpec) -> Result<HashMap<Ce
                 let budget = record.get("budget").and_then(Json::as_f64);
                 let scale = record.get("repeat_scale").and_then(Json::as_f64);
                 let space = record.get("space").and_then(Json::as_str).map(str::to_string);
+                // Fault/resilience keys are absent from pre-fault-layer
+                // files; absent parses as the disabled default, so those
+                // files stay resumable by a sweep that injects nothing.
+                let fault_plan =
+                    record.get("fault_plan").and_then(Json::as_str).map(str::to_string);
+                let timeout = record
+                    .get("eval_timeout_ms")
+                    .and_then(Json::as_f64)
+                    .map(|ms| ms as u64);
+                let retries = record
+                    .get("max_retries")
+                    .and_then(Json::as_f64)
+                    .map(|r| r as u32)
+                    .unwrap_or(0);
                 if seed != Some(spec.seed)
                     || budget != Some(spec.budget as f64)
                     || scale != Some(spec.repeat_scale)
                     || space != spec.space
+                    || fault_plan != spec.fault_plan
+                    || timeout != spec.eval_timeout_ms
+                    || retries != spec.max_retries
                 {
                     return Err(format!(
-                        "{} was written by an incompatible sweep (seed/budget/repeat-scale/space \
-                         differ); pass --fresh to discard it",
+                        "{} was written by an incompatible sweep (seed/budget/repeat-scale/space/\
+                         fault-plan/timeout/retries differ); pass --fresh to discard it",
                         path.display()
                     ));
                 }
@@ -334,11 +433,23 @@ fn load_progress(text: &str, path: &Path, spec: &SweepSpec) -> Result<HashMap<Ce
     Ok(completed)
 }
 
+/// Render a caught panic payload (the two shapes `panic!` produces).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into())
+}
+
 /// Execute sessions on the shared pool. Cells present in `completed` are
 /// skipped (their stored curves are reused verbatim); every freshly run
-/// cell appends a progress record. Returns curves in `jobs` order — the
-/// deterministic aggregation order — regardless of which worker finished
-/// which cell when.
+/// cell appends a progress record. Each cell body runs under
+/// `catch_unwind`: a panicking cell becomes [`CellResult::Failed`] (and a
+/// curve-less `"outcome":"failed"` progress record) while every other cell
+/// keeps running — the crash stays inside its cell. Returns results in
+/// `jobs` order — the deterministic aggregation order — regardless of
+/// which worker finished which cell when.
 fn run_sessions(
     jobs: &[SessionJob],
     budget: usize,
@@ -346,32 +457,56 @@ fn run_sessions(
     pool: &ShardPool,
     completed: &HashMap<CellKey, Vec<f64>>,
     log: Option<&SweepLog>,
-) -> Vec<Vec<f64>> {
+) -> Vec<CellResult> {
     // Nested consumers (the BO engine's auto thread mode) divide the
     // machine by the session workers running above them.
     let _scope = enter_harness_workers(pool.threads());
-    let mut slots: Vec<Option<Vec<f64>>> =
-        jobs.iter().map(|j| completed.get(&j.key).cloned()).collect();
+    let mut slots: Vec<Option<CellResult>> =
+        jobs.iter().map(|j| completed.get(&j.key).cloned().map(CellResult::Done)).collect();
     let batch: Vec<Box<dyn FnOnce() + Send + '_>> = slots
         .iter_mut()
         .zip(jobs)
         .filter(|(slot, _)| slot.is_none())
         .map(|(slot, job)| {
             Box::new(move || {
-                let s = by_name(&job.key.strategy)
-                    .unwrap_or_else(|| panic!("unknown strategy {}", job.key.strategy));
-                let mut rng = cell_rng(base_seed, &job.obj_id, &job.key.strategy, job.key.rep);
-                let trace = s.run(job.eval_obj.as_ref(), budget, &mut rng);
-                let curve = trace.best_curve();
-                if let Some(log) = log {
-                    log.append(&cell_record(&job.key, &job.obj_id, base_seed, budget, &curve));
-                }
-                *slot = Some(curve);
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    let mut rng =
+                        cell_rng(base_seed, &job.obj_id, &job.key.strategy, job.key.rep);
+                    let trace = job.strategy_impl.run(job.eval_obj.as_ref(), budget, &mut rng);
+                    trace.best_curve()
+                }));
+                *slot = Some(match run {
+                    Ok(curve) => {
+                        if let Some(log) = log {
+                            let mut rec =
+                                cell_record(&job.key, &job.obj_id, base_seed, budget, &curve);
+                            if let (Some(f), Some(r)) = (&job.faulty, &job.resilient) {
+                                rec = rec.set(
+                                    "faults",
+                                    Json::obj()
+                                        .set("injected", f.stats().to_json())
+                                        .set("resilience", r.stats().to_json()),
+                                );
+                            }
+                            log.append(&rec);
+                        }
+                        CellResult::Done(curve)
+                    }
+                    Err(payload) => {
+                        let msg = panic_message(payload.as_ref());
+                        if let Some(log) = log {
+                            log.append(&failed_cell_record(
+                                &job.key, &job.obj_id, base_seed, budget, &msg,
+                            ));
+                        }
+                        CellResult::Failed(msg)
+                    }
+                });
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
     pool.run(batch);
-    slots.into_iter().map(|s| s.expect("session produced no curve")).collect()
+    slots.into_iter().map(|s| s.expect("session produced no result")).collect()
 }
 
 /// One schedulable objective: the cell-key coordinates plus what sessions
@@ -393,6 +528,15 @@ fn build_session_jobs(
     strategies: &[&str],
     repeat_scale: f64,
 ) -> (Vec<SessionJob>, Vec<(usize, usize)>) {
+    // One resolved implementation per strategy, shared by its cells.
+    // Callers validate names first; an unresolved name fails here, on the
+    // caller's thread, before any cell has burned compute.
+    let impls: Vec<Arc<dyn Strategy>> = strategies
+        .iter()
+        .map(|s| {
+            Arc::from(by_name(s).unwrap_or_else(|| panic!("{}", unknown_strategy_message(s))))
+        })
+        .collect();
     let reps: Vec<usize> = strategies.iter().map(|s| repeats_for(s, repeat_scale)).collect();
     let max_reps = reps.iter().copied().max().unwrap_or(0);
     let mut jobs = Vec::new();
@@ -409,7 +553,10 @@ fn build_session_jobs(
                             rep,
                         },
                         obj_id: entry.obj_id.clone(),
+                        strategy_impl: Arc::clone(&impls[si]),
                         eval_obj: Arc::clone(&entry.eval),
+                        faulty: None,
+                        resilient: None,
                     });
                     coords.push((oi, si));
                 }
@@ -441,13 +588,20 @@ pub fn orchestrate_comparison(
         eval: Arc::clone(obj) as Arc<dyn Objective>,
     }];
     let (jobs, coords) = build_session_jobs(&entries, strategies, repeat_scale);
-    let curves = run_sessions(&jobs, budget, base_seed, pool, &HashMap::new(), None);
+    let results = run_sessions(&jobs, budget, base_seed, pool, &HashMap::new(), None);
 
     let global_min = obj.known_minimum().expect("table objective knows its minimum");
     let fallback = fallback_value(obj);
     let mut grouped: Vec<Vec<Vec<f64>>> = strategies.iter().map(|_| Vec::new()).collect();
-    for ((_oi, si), curve) in coords.into_iter().zip(curves) {
-        grouped[si].push(curve); // job order is rep-ascending per strategy
+    for ((_oi, si), result) in coords.into_iter().zip(results) {
+        match result {
+            // Job order is rep-ascending per strategy.
+            CellResult::Done(curve) => grouped[si].push(curve),
+            // A bare comparison has no sweep log to isolate failures
+            // into — surface the cell's panic as the call's panic, as the
+            // pre-isolation path did.
+            CellResult::Failed(msg) => panic!("comparison cell failed: {msg}"),
+        }
     }
     strategies
         .iter()
@@ -487,13 +641,18 @@ pub fn orchestrate_comparison_stepwise(
     // nested shard pools to ~1 thread instead of each spawning a
     // core-count pool (results are thread-count-independent either way).
     let _nested = enter_harness_workers(crate::util::pool::default_threads());
+    // Resolve every strategy before building any session state.
+    let impls: Vec<Box<dyn Strategy>> = strategies
+        .iter()
+        .map(|s| by_name(s).unwrap_or_else(|| panic!("{}", unknown_strategy_message(s))))
+        .collect();
     let mut sessions: Vec<StepSession> = Vec::new();
     let mut coords: Vec<usize> = Vec::new();
     // Repeat-major, mirroring build_session_jobs' deterministic order.
     for rep in 0..max_reps {
         for (si, strategy) in strategies.iter().enumerate() {
             if rep < reps[si] {
-                let s = by_name(strategy).unwrap_or_else(|| panic!("unknown strategy {strategy}"));
+                let s = &impls[si];
                 sessions.push(StepSession::new(
                     s.driver(obj.space()),
                     objective,
@@ -574,6 +733,36 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         }
         None => None,
     };
+    // Fault injection: load the committed plan and canonicalize the
+    // faulted-strategy subset before any cell runs, so a typo fails the
+    // sweep up front instead of mid-matrix.
+    let fault_plan = match &spec.fault_plan {
+        Some(path) => {
+            // Plans are committed repo-root-relative; fall back to the
+            // parent directory so `cargo test` (cwd rust/) finds them too.
+            let p = Path::new(path);
+            let resolved = if p.exists() { p.to_path_buf() } else { Path::new("..").join(p) };
+            Some(FaultPlan::load(&resolved).map_err(|e| format!("fault plan {path}: {e}"))?)
+        }
+        None => None,
+    };
+    if fault_plan.is_none() && !spec.fault_strategies.is_empty() {
+        return Err("fault_strategies set without a fault_plan".into());
+    }
+    let mut fault_strategies: Vec<String> = Vec::new();
+    for s in &spec.fault_strategies {
+        let canon = by_name(s).ok_or_else(|| unknown_strategy_message(s))?.name();
+        if !strategies.contains(&canon) {
+            return Err(format!("fault strategy '{canon}' is not in the sweep matrix"));
+        }
+        if !fault_strategies.contains(&canon) {
+            fault_strategies.push(canon);
+        }
+    }
+    if fault_plan.is_some() && fault_strategies.is_empty() {
+        // An empty subset under a plan faults the whole matrix.
+        fault_strategies = strategies.clone();
+    }
     std::fs::create_dir_all(&spec.out_dir).map_err(|e| format!("create {}: {e}", spec.out_dir))?;
 
     let t0 = Instant::now();
@@ -621,7 +810,53 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     // Flatten the matrix, repeat-major, so the pool interleaves cells of
     // every objective and strategy from the start.
     let strategy_refs: Vec<&str> = strategies.iter().map(String::as_str).collect();
-    let (jobs, coords) = build_session_jobs(&objectives, &strategy_refs, spec.repeat_scale);
+    let (mut jobs, coords) = build_session_jobs(&objectives, &strategy_refs, spec.repeat_scale);
+
+    // Resilience applies to every cell; faulted cells add quarantine so
+    // injected persistent offenders stop burning retries. `sleep: false`
+    // keeps backoff accounting deterministic without stalling the pool.
+    let base_cfg = ResilienceConfig {
+        deadline: spec.eval_timeout_ms.map(Duration::from_millis),
+        max_retries: spec.max_retries,
+        sleep: false,
+        ..ResilienceConfig::default()
+    };
+    if let Some(plan) = &fault_plan {
+        let faulted_cfg = ResilienceConfig { quarantine_after: 3, ..base_cfg.clone() };
+        for (job, (oi, _si)) in jobs.iter_mut().zip(&coords) {
+            if !fault_strategies.contains(&job.key.strategy) {
+                continue;
+            }
+            // Each cell re-seeds the plan with its own stream so fault
+            // patterns are independent per cell yet invariant to thread
+            // count and resume order.
+            let cell_plan = plan
+                .with_seed(plan.seed ^ cell_stream(&job.obj_id, &job.key.strategy, job.key.rep));
+            // Faults wrap the raw table — outside the shared eval cache —
+            // so injected failures never leak into other cells.
+            let faulty = Arc::new(FaultyObjective::new(
+                Arc::clone(&tables[*oi]) as Arc<dyn Objective>,
+                cell_plan,
+            ));
+            let resilient = Arc::new(ResilientEvaluator::new(
+                Arc::clone(&faulty) as Arc<dyn Objective>,
+                faulted_cfg.clone(),
+            ));
+            job.eval_obj = Arc::clone(&resilient) as Arc<dyn Objective>;
+            job.faulty = Some(faulty);
+            job.resilient = Some(resilient);
+        }
+    }
+    if !base_cfg.is_passthrough() {
+        for job in jobs.iter_mut() {
+            if job.resilient.is_some() {
+                continue; // faulted cells already carry their wrapper
+            }
+            let resilient =
+                Arc::new(ResilientEvaluator::new(Arc::clone(&job.eval_obj), base_cfg.clone()));
+            job.eval_obj = Arc::clone(&resilient) as Arc<dyn Objective>;
+        }
+    }
 
     // Resume: reuse completed cells from an existing progress file (read
     // once; its trailing-newline state feeds the log's torn-tail repair).
@@ -644,7 +879,7 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     let total_cells = jobs.len();
 
     let pool = ShardPool::new(spec.threads);
-    let curves = run_sessions(&jobs, spec.budget, spec.seed, &pool, &completed, Some(&log));
+    let results = run_sessions(&jobs, spec.budget, spec.seed, &pool, &completed, Some(&log));
     if let Some(e) = log.take_error() {
         // The cells ran, but the resume log lost records (disk full,
         // unwritable dir): reporting success would let a later resume
@@ -655,13 +890,19 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         ));
     }
 
-    // Aggregate in fixed (objective, strategy, repeat) order.
+    // Aggregate in fixed (objective, strategy, repeat) order. Failed
+    // cells (crash-isolated panics) are listed, not aggregated — their
+    // records carry no curve, so a later resume re-attempts exactly them.
     let mut grouped: Vec<Vec<Vec<Vec<f64>>>> = objectives
         .iter()
         .map(|_| strategies.iter().map(|_| Vec::new()).collect())
         .collect();
-    for ((oi, si), curve) in coords.into_iter().zip(curves) {
-        grouped[oi][si].push(curve);
+    let mut failed_cells: Vec<(CellKey, String)> = Vec::new();
+    for (((oi, si), result), job) in coords.into_iter().zip(results).zip(&jobs) {
+        match result {
+            CellResult::Done(curve) => grouped[oi][si].push(curve),
+            CellResult::Failed(msg) => failed_cells.push((job.key.clone(), msg)),
+        }
     }
     let outcomes: Vec<((String, String), Vec<StrategyOutcome>)> = objectives
         .iter()
@@ -725,6 +966,25 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         total_cells - resumed_cells,
         spec.threads
     );
+    if let Some(path) = &spec.fault_plan {
+        let _ = writeln!(
+            summary,
+            "fault injection: plan {path} on [{}] | timeout {:?} | retries {}",
+            fault_strategies.join(", "),
+            spec.eval_timeout_ms,
+            spec.max_retries
+        );
+    }
+    if !failed_cells.is_empty() {
+        let _ = writeln!(summary, "failed cells ({}): will re-run on resume", failed_cells.len());
+        for (key, msg) in &failed_cells {
+            let _ = writeln!(
+                summary,
+                "  {}/{}/{} rep {}: {msg}",
+                key.kernel, key.gpu, key.strategy, key.rep
+            );
+        }
+    }
     let _ = writeln!(
         summary,
         "eval cache: {}",
@@ -756,6 +1016,7 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         total_cells,
         resumed_cells,
         ran_cells: total_cells - resumed_cells,
+        failed_cells,
         cache_hits,
         cache_misses,
         wall_s,
@@ -787,7 +1048,20 @@ mod tests {
             cache: true,
             fresh: true,
             space: None,
+            fault_plan: None,
+            fault_strategies: vec![],
+            eval_timeout_ms: None,
+            max_retries: 0,
         }
+    }
+
+    /// Write a fault plan to a temp file and return its path.
+    fn write_plan(dir: &str, name: &str, plan: &FaultPlan) -> String {
+        let d = temp_out(dir);
+        std::fs::create_dir_all(&d).unwrap();
+        let path = format!("{d}/{name}");
+        std::fs::write(&path, format!("{}\n", plan.to_json().render())).unwrap();
+        path
     }
 
     /// Acceptance: `sweep --space examples/spaces/<kernel>.json` runs end
@@ -1115,5 +1389,203 @@ mod tests {
         assert!(back[0].is_infinite() && back[1].is_infinite());
         assert_eq!(back[2].to_bits(), curve[2].to_bits());
         assert_eq!(back[3].to_bits(), curve[3].to_bits(), "shortest-repr floats round-trip exactly");
+    }
+
+    /// Tentpole acceptance: a crashing cell is isolated — listed in the
+    /// report and recorded curve-less — and a `--fresh`-less resume
+    /// re-attempts exactly the failed cells while reusing the rest.
+    #[test]
+    fn crashed_cells_are_isolated_recorded_and_rerun_on_resume() {
+        let plan = FaultPlan { crash_after: Some(0), ..FaultPlan::quiet(0xC4A5) };
+        let mut spec = small_spec("ktbo-orch-crash", "crash");
+        spec.fault_plan = Some(write_plan("ktbo-orch-crash", "crash.json", &plan));
+        spec.fault_strategies = vec!["mls".into()];
+
+        let report = sweep(&spec).expect("a crashing cell must not fail the sweep");
+        assert_eq!(report.total_cells, 6);
+        assert_eq!(report.failed_cells.len(), 3, "every mls repeat crashes");
+        for (key, msg) in &report.failed_cells {
+            assert_eq!(key.strategy, "mls");
+            assert!(msg.contains("injected crash"), "unexpected panic message: {msg}");
+        }
+        assert!(report.summary.contains("failed cells (3)"));
+
+        // The crash never leaks into the non-faulted strategy's cells.
+        let dev = Device::a100();
+        let obj = objective_for("adding", &dev);
+        let oid = objective_id("adding", dev.name);
+        let reference = run_strategy(&obj, &oid, "random", 40, 3, 11, 1);
+        assert_eq!(report.outcomes[0].1[0].mean_curve, reference.mean_curve);
+
+        // Failed cells are recorded, but without a curve.
+        let text = std::fs::read_to_string(spec.progress_path()).unwrap();
+        let failed_lines: Vec<&str> =
+            text.lines().filter(|l| l.contains("\"outcome\":\"failed\"")).collect();
+        assert_eq!(failed_lines.len(), 3);
+        for line in &failed_lines {
+            assert!(line.contains("\"strategy\":\"mls\""));
+            assert!(!line.contains("\"curve\""), "failed records must stay curve-less");
+        }
+
+        // Resume: the 3 completed random cells are reused, the 3 failed
+        // mls cells are re-attempted (and, same plan, fail again).
+        let mut resumed = spec.clone();
+        resumed.fresh = false;
+        let second = sweep(&resumed).unwrap();
+        assert_eq!((second.resumed_cells, second.ran_cells), (3, 3));
+        assert_eq!(second.failed_cells.len(), 3);
+        assert_eq!(second.outcomes[0].1[0].mean_curve, reference.mean_curve);
+    }
+
+    /// Fault injection is part of the cell's deterministic identity: a
+    /// fixed plan yields bit-identical faulted curves at every worker
+    /// count, non-faulted cells stay bit-identical to the serial
+    /// reference, and faulted records carry the accounting block.
+    #[test]
+    fn faulted_cells_are_bit_identical_across_worker_counts() {
+        let plan = FaultPlan {
+            transient_rate: 0.3,
+            hang_rate: 0.1,
+            flaky_rate: 0.2,
+            flaky_sigma: 0.4,
+            ..FaultPlan::quiet(0x5EED)
+        };
+        let path = write_plan("ktbo-orch-det", "det.json", &plan);
+        let dev = Device::a100();
+        let obj = objective_for("adding", &dev);
+        let oid = objective_id("adding", dev.name);
+        let clean_mls = run_strategy(&obj, &oid, "mls", 40, 3, 11, 1);
+        let clean_random = run_strategy(&obj, &oid, "random", 40, 3, 11, 1);
+
+        let mut baseline: Option<Vec<StrategyOutcome>> = None;
+        for threads in [1usize, 4] {
+            let mut spec = small_spec("ktbo-orch-det", &format!("det-{threads}"));
+            spec.threads = threads;
+            spec.fault_plan = Some(path.clone());
+            spec.fault_strategies = vec!["mls".into()];
+            spec.max_retries = 2;
+            let report = sweep(&spec).unwrap();
+            assert!(report.failed_cells.is_empty(), "this plan never crashes");
+            let outs = &report.outcomes[0].1;
+            // Non-faulted cells are untouched by the injection layer.
+            assert_eq!(outs[0].mean_curve, clean_random.mean_curve, "threads={threads}");
+            // Faulted cells actually diverge from the clean run...
+            assert_ne!(outs[1].mean_curve, clean_mls.mean_curve, "injection must bite");
+            // ...but are identical at every worker count.
+            match &baseline {
+                None => baseline = Some(outs.clone()),
+                Some(b) => {
+                    assert_eq!(outs[1].mean_curve, b[1].mean_curve, "fault injection must be thread-invariant");
+                    assert_eq!(outs[1].maes, b[1].maes);
+                }
+            }
+            let text = std::fs::read_to_string(spec.progress_path()).unwrap();
+            for line in text.lines().filter(|l| l.contains("\"type\":\"cell\"")) {
+                let faulted = line.contains("\"strategy\":\"mls\"");
+                assert_eq!(
+                    line.contains("\"faults\""),
+                    faulted,
+                    "exactly the faulted cells carry accounting: {line}"
+                );
+                if faulted {
+                    assert!(line.contains("\"injected\"") && line.contains("\"resilience\""));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fault_spec_validation_fails_fast() {
+        // Subset without a plan.
+        let mut spec = small_spec("ktbo-orch-fval", "fval");
+        spec.fault_strategies = vec!["mls".into()];
+        assert!(sweep(&spec).unwrap_err().contains("without a fault_plan"));
+
+        let plan = FaultPlan::quiet(1);
+        let path = write_plan("ktbo-orch-fval", "quiet.json", &plan);
+        // Faulted strategy not in the matrix.
+        let mut spec = small_spec("ktbo-orch-fval", "fval2");
+        spec.fault_plan = Some(path.clone());
+        spec.fault_strategies = vec!["ei".into()];
+        assert!(sweep(&spec).unwrap_err().contains("not in the sweep matrix"));
+        // Unknown faulted strategy lists the registry.
+        let mut spec = small_spec("ktbo-orch-fval", "fval3");
+        spec.fault_plan = Some(path);
+        spec.fault_strategies = vec!["warp_drive".into()];
+        assert!(sweep(&spec).unwrap_err().contains("warp_drive"));
+        // Missing plan file.
+        let mut spec = small_spec("ktbo-orch-fval", "fval4");
+        spec.fault_plan = Some("/nonexistent/plan.json".into());
+        assert!(sweep(&spec).unwrap_err().contains("fault plan"));
+    }
+
+    /// Satellite: mid-cell checkpoint/resume stays bit-identical when the
+    /// objective injects hangs (recorded as `Timeout` evaluations). Each
+    /// session gets a fresh `FaultyObjective` under the same plan, so the
+    /// injected schedule — a pure function of (plan seed, index, attempt)
+    /// — replays identically through the resume.
+    #[test]
+    fn mid_cell_checkpoint_resume_survives_injected_hangs() {
+        use crate::strategies::driver::{FevalBudget, StepSession};
+        let dev = Device::a100();
+        let table = objective_for("adding", &dev);
+        let oid = objective_id("adding", dev.name);
+        let plan = FaultPlan { hang_rate: 0.25, transient_rate: 0.15, ..FaultPlan::quiet(0xAB1E) };
+        let faulted = || {
+            FaultyObjective::new(Arc::clone(&table) as Arc<dyn Objective>, plan.clone())
+        };
+        for strategy in ["mls", "ei"] {
+            let s = by_name(strategy).unwrap();
+            let budget = 45usize;
+            let make_rng = || cell_rng(7, &oid, strategy, 0);
+
+            let full = {
+                let obj = faulted();
+                let mut sess = StepSession::new(
+                    s.driver(table.space()),
+                    &obj as &dyn Objective,
+                    Box::new(FevalBudget::new(budget)),
+                    make_rng(),
+                );
+                while sess.step() {}
+                sess.into_trace()
+            };
+            assert!(
+                full.records.iter().any(|r| r.1 == crate::objective::Eval::Timeout),
+                "{strategy}: the hang lane must have fired for this test to mean anything"
+            );
+
+            let ckpt = {
+                let obj = faulted();
+                let mut first = StepSession::new(
+                    s.driver(table.space()),
+                    &obj as &dyn Objective,
+                    Box::new(FevalBudget::new(budget)),
+                    make_rng(),
+                );
+                for _ in 0..12 {
+                    if !first.step() {
+                        break;
+                    }
+                }
+                first.checkpoint()
+            };
+            assert!(ckpt.len() < full.len(), "{strategy}: interrupt landed past the end");
+
+            let obj = faulted();
+            let mut resumed = StepSession::resume(
+                s.driver(table.space()),
+                &obj as &dyn Objective,
+                Box::new(FevalBudget::new(budget)),
+                make_rng(),
+                ckpt,
+            );
+            while resumed.step() {}
+            assert_eq!(
+                resumed.trace().records,
+                full.records,
+                "{strategy}: resume under injected hangs diverged"
+            );
+        }
     }
 }

@@ -128,13 +128,18 @@ pub fn run_strategy(
     let global_min = obj.known_minimum().expect("table objective knows its minimum");
     let fallback = fallback_value(obj);
 
+    // Resolve the strategy once, before any job runs: an unknown name
+    // fails here instead of panicking inside a worker mid-batch.
+    let resolved: Arc<dyn crate::strategies::Strategy> = Arc::from(
+        by_name(strategy).unwrap_or_else(|| panic!("unknown strategy {strategy}")),
+    );
     let jobs: Vec<_> = (0..repeats)
         .map(|rep| {
             let obj = Arc::clone(obj);
+            let s = Arc::clone(&resolved);
             let name = strategy.to_string();
             let oid = obj_id.to_string();
             move || {
-                let s = by_name(&name).unwrap_or_else(|| panic!("unknown strategy {name}"));
                 // Deterministic independent stream per (objective, strategy, repeat).
                 let mut rng = cell_rng(base_seed, &oid, &name, rep);
                 let trace = s.run(obj.as_ref(), budget, &mut rng);

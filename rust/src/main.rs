@@ -41,9 +41,12 @@ fn usage() {
     println!("  ktbo spaces");
     println!("  ktbo tune <kernel> <gpu> [--strategy NAME] [--budget N] [--seed N] [--backend native|xla]");
     println!("             [--space FILE.json]   declarative SpaceSpec replacing the kernel's built-in space");
+    println!("             [--eval-timeout-ms N] [--max-retries N] [--fault-plan FILE.json]");
     println!("  ktbo sweep [--kernels a,b] [--gpus a,b] [--strategies a,b] [--smoke]");
     println!("             [--budget N] [--repeat-scale F] [--seed N] [--threads N]");
     println!("             [--out DIR] [--tag NAME] [--no-cache] [--fresh] [--space FILE.json]");
+    println!("             [--eval-timeout-ms N] [--max-retries N]");
+    println!("             [--fault-plan FILE.json] [--fault-strategies a,b]   deterministic fault injection");
     println!("  ktbo experiment <fig1..fig7|table1..table3|headline|ablation|extended|noise|all>");
     println!("  ktbo hypertune [--repeat-scale F] [--top N]");
     println!("                  [--repeat-scale F] [--seed N] [--threads N] [--out DIR]");
@@ -93,6 +96,10 @@ fn cmd_sweep(args: &Args) {
             cache: true,
             fresh: false,
             space: None,
+            fault_plan: None,
+            fault_strategies: vec![],
+            eval_timeout_ms: None,
+            max_retries: 0,
         }
     };
     let list = |key: &str, default: &[String]| -> Vec<String> {
@@ -101,10 +108,41 @@ fn cmd_sweep(args: &Args) {
             None => default.to_vec(),
         }
     };
+    let strategies = list("strategies", &base.strategies);
+    // Fault settings inherited from the tier (the smoke tier commits a
+    // plan targeting simulated_annealing) follow the strategy filter:
+    // `--strategies random` narrows the matrix, so inherited fault
+    // targets outside it are dropped — and with them the plan, if none
+    // survive — instead of failing validation. Explicit --fault-plan /
+    // --fault-strategies flags keep the fail-fast behavior.
+    let (fault_plan, fault_strategies) = {
+        let cli_plan = args.get("fault-plan").map(str::to_string);
+        if cli_plan.is_some() || args.get("fault-strategies").is_some() {
+            (
+                cli_plan.or_else(|| base.fault_plan.clone()),
+                list("fault-strategies", &base.fault_strategies),
+            )
+        } else {
+            let canon =
+                |s: &str| ktbo::strategies::registry::by_name(s).map(|b| b.name());
+            let matrix: Vec<String> = strategies.iter().filter_map(|s| canon(s)).collect();
+            let kept: Vec<String> = base
+                .fault_strategies
+                .iter()
+                .filter(|s| canon(s).is_some_and(|c| matrix.contains(&c)))
+                .cloned()
+                .collect();
+            if kept.is_empty() && !base.fault_strategies.is_empty() {
+                (None, kept)
+            } else {
+                (base.fault_plan.clone(), kept)
+            }
+        }
+    };
     let spec = SweepSpec {
         kernels: list("kernels", &base.kernels),
         gpus: list("gpus", &base.gpus),
-        strategies: list("strategies", &base.strategies),
+        strategies,
         budget: args.usize_or("budget", base.budget),
         repeat_scale: args.f64_or("repeat-scale", base.repeat_scale),
         seed: args.u64_or("seed", base.seed),
@@ -114,6 +152,19 @@ fn cmd_sweep(args: &Args) {
         cache: !args.flag("no-cache"),
         fresh: args.flag("fresh"),
         space: args.get("space").map(str::to_string),
+        fault_plan,
+        fault_strategies,
+        eval_timeout_ms: match args.get("eval-timeout-ms") {
+            Some(v) => match v.parse::<u64>() {
+                Ok(ms) => Some(ms),
+                Err(_) => {
+                    eprintln!("--eval-timeout-ms must be an integer, got '{v}'");
+                    std::process::exit(2);
+                }
+            },
+            None => base.eval_timeout_ms,
+        },
+        max_retries: args.usize_or("max-retries", base.max_retries as usize) as u32,
     };
     match sweep(&spec) {
         Ok(report) => {
@@ -213,10 +264,59 @@ fn cmd_tune(args: &Args) {
         }
     };
 
+    // Robustness layer: optional deterministic fault injection
+    // (`--fault-plan`) under the resilient evaluator (`--eval-timeout-ms`,
+    // `--max-retries`). With none of the flags set, the objective is
+    // evaluated directly and results are bit-identical to older builds.
+    use ktbo::objective::faulty::{FaultPlan, FaultyObjective};
+    use ktbo::objective::resilient::{ResilienceConfig, ResilientEvaluator};
+    let faulty = args.get("fault-plan").map(|path| {
+        let plan = FaultPlan::load(std::path::Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("failed to load fault plan: {e}");
+            std::process::exit(2);
+        });
+        std::sync::Arc::new(FaultyObjective::new(
+            std::sync::Arc::clone(&obj) as std::sync::Arc<dyn Objective>,
+            plan,
+        ))
+    });
+    let eval_obj: std::sync::Arc<dyn Objective> = match &faulty {
+        Some(f) => std::sync::Arc::clone(f) as std::sync::Arc<dyn Objective>,
+        None => std::sync::Arc::clone(&obj) as std::sync::Arc<dyn Objective>,
+    };
+    let res_cfg = ResilienceConfig {
+        deadline: args.get("eval-timeout-ms").map(|v| {
+            std::time::Duration::from_millis(v.parse::<u64>().unwrap_or_else(|_| {
+                eprintln!("--eval-timeout-ms must be an integer, got '{v}'");
+                std::process::exit(2);
+            }))
+        }),
+        max_retries: args.usize_or("max-retries", 0) as u32,
+        ..ResilienceConfig::default()
+    };
+    let resilient = if res_cfg.is_passthrough() {
+        None
+    } else {
+        Some(std::sync::Arc::new(ResilientEvaluator::new(
+            std::sync::Arc::clone(&eval_obj),
+            res_cfg,
+        )))
+    };
+    let run_obj: std::sync::Arc<dyn Objective> = match &resilient {
+        Some(r) => std::sync::Arc::clone(r) as std::sync::Arc<dyn Objective>,
+        None => eval_obj,
+    };
+
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(seed);
-    let trace = strategy.run(obj.as_ref(), budget, &mut rng);
+    let trace = strategy.run(run_obj.as_ref(), budget, &mut rng);
     let elapsed = t0.elapsed();
+    if let Some(f) = &faulty {
+        println!("faults injected: {}", f.stats().to_json().render());
+    }
+    if let Some(r) = &resilient {
+        println!("resilience: {}", r.stats().to_json().render());
+    }
     match trace.best() {
         Some((idx, val)) => {
             println!("kernel={kernel} gpu={} strategy={strategy_name}", dev.name);

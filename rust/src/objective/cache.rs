@@ -54,8 +54,13 @@ pub fn to_json(sim: &SimulatedSpace) -> Json {
             let e = Json::obj().set("config", Json::Arr(cfg));
             match sim.table[i] {
                 Eval::Valid(t) => e.set("time", t),
-                Eval::CompileError => e.set("invalid", "compile"),
-                Eval::RuntimeError => e.set("invalid", "runtime"),
+                // Every non-valid kind (compile/runtime/timeout/transient,
+                // plus preserved unknown kinds) serializes through its
+                // stable label.
+                other => e.set(
+                    "invalid",
+                    other.invalid_label().expect("non-valid eval has a label"),
+                ),
             }
         })
         .collect();
@@ -113,9 +118,11 @@ pub fn from_json(j: &Json) -> Result<(TableObjective, String, String), String> {
             Eval::Valid(t)
         } else {
             match e.get("invalid").and_then(Json::as_str) {
-                Some("compile") => Eval::CompileError,
-                Some("runtime") => Eval::RuntimeError,
-                _ => return Err("entry has neither 'time' nor a known 'invalid'".into()),
+                // Any invalid label is accepted: known kinds map to their
+                // variants, unknown kinds are preserved verbatim so a
+                // cache written by a newer build round-trips losslessly.
+                Some(label) => Eval::from_invalid_label(label),
+                None => return Err("entry has neither 'time' nor an 'invalid' kind".into()),
             }
         };
         table.push(eval);
@@ -176,6 +183,37 @@ mod tests {
         let mut rng = Rng::new(3);
         let t = s.run(&obj, 60, &mut rng);
         assert!(t.best().is_some());
+    }
+
+    #[test]
+    fn all_invalid_kinds_round_trip() {
+        use crate::objective::FaultKind;
+        // Start from a real space and plant one entry of every non-valid
+        // kind — including one this build "doesn't know" — then round-trip.
+        let k = kernel_by_name("adding").unwrap();
+        let mut sim = SimulatedSpace::build(k.as_ref(), &Device::a100());
+        assert!(sim.table.len() >= 6, "adding space too small for the test");
+        sim.table[0] = Eval::CompileError;
+        sim.table[1] = Eval::RuntimeError;
+        sim.table[2] = Eval::Timeout;
+        sim.table[3] = Eval::Transient(FaultKind::DeviceError);
+        sim.table[4] = Eval::Transient(FaultKind::FlakyMeasurement);
+        sim.table[5] = Eval::from_invalid_label("oom:host");
+
+        let j = to_json(&sim);
+        let (obj, _, _) = from_json(&jsonparse::parse(&j.render()).unwrap()).unwrap();
+        assert_eq!(obj.table()[0], Eval::CompileError);
+        assert_eq!(obj.table()[1], Eval::RuntimeError);
+        assert_eq!(obj.table()[2], Eval::Timeout);
+        assert_eq!(obj.table()[3], Eval::Transient(FaultKind::DeviceError));
+        assert_eq!(obj.table()[4], Eval::Transient(FaultKind::FlakyMeasurement));
+        // Unknown kinds survive verbatim instead of erroring the load.
+        assert_eq!(obj.table()[5].invalid_label(), Some("oom:host"));
+        assert!(!obj.table()[5].is_valid());
+        // And the rest of the table is untouched.
+        for i in 6..sim.table.len() {
+            assert_eq!(obj.table()[i], sim.table[i], "entry {i}");
+        }
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Deterministic fault injection for soak-testing search strategies.
+//!
+//! [`FaultyObjective`] wraps any [`Objective`] and injects failures drawn
+//! from a serializable, seeded [`FaultPlan`]: transient device errors,
+//! hangs (surfaced as [`Eval::Timeout`] — the simulated-clock analogue of
+//! a watchdog firing), flaky-measurement noise bursts, and a crash after N
+//! evaluations (a real `panic!`, for exercising the orchestrator's cell
+//! isolation).
+//!
+//! Fault decisions are *stateless*: each is a pure hash of
+//! `(plan.seed, config index, attempt number)`, so the injected fault
+//! pattern is independent of thread scheduling, shard count, and
+//! checkpoint/resume replay — the same discipline as the GPU simulator's
+//! per-configuration roughness. The only mutable state is the per-index
+//! attempt counter (so a retry of the same config re-rolls the dice) and
+//! the global evaluation counter behind `crash_after`, which is
+//! documented as scheduling-dependent under concurrency.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::objective::{Eval, FaultKind, Objective};
+use crate::space::SearchSpace;
+use crate::util::json::Json;
+use crate::util::jsonparse;
+use crate::util::rng::{hash64, hash_normal, hash_unit, Rng};
+
+// Distinct salts keep the per-(idx, attempt) fault lanes independent:
+// whether an eval hangs says nothing about whether it would have been
+// transient, and so on.
+const HANG_LANE: u64 = 0x68616e_675f6c61;
+const TRANSIENT_LANE: u64 = 0x7472_616e_7369_656e;
+const KIND_LANE: u64 = 0x6b69_6e64_5f6c_616e;
+const FLAKY_LANE: u64 = 0x666c_616b_795f_6c61;
+const NOISE_LANE: u64 = 0x6e6f_6973_655f_6c61;
+
+/// A serializable description of which faults to inject, at what rates.
+///
+/// JSON form (all fields optional except `seed`; omitted rates are 0):
+///
+/// ```json
+/// {
+///   "seed": "0x6b74626f",
+///   "transient_rate": 0.15,
+///   "hang_rate": 0.05,
+///   "crash_after": null,
+///   "flaky_rate": 0.1,
+///   "flaky_sigma": 0.5
+/// }
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the stateless fault hashes. Two plans differing only in
+    /// seed inject statistically identical but uncorrelated fault patterns.
+    pub seed: u64,
+    /// Probability an attempt fails with a transient fault.
+    pub transient_rate: f64,
+    /// Probability an attempt hangs (returns [`Eval::Timeout`]).
+    pub hang_rate: f64,
+    /// Panic after this many evaluations (`None` = never). Counts calls on
+    /// this wrapper instance; under concurrent evaluation the *which* call
+    /// trips it is scheduling-dependent, so deterministic tests use
+    /// `Some(0)` (crash on first call).
+    pub crash_after: Option<usize>,
+    /// Probability a *valid* measurement is hit by a noise burst.
+    pub flaky_rate: f64,
+    /// Lognormal sigma of the noise burst multiplier.
+    pub flaky_sigma: f64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (useful as a base for struct update).
+    pub fn quiet(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            transient_rate: 0.0,
+            hang_rate: 0.0,
+            crash_after: None,
+            flaky_rate: 0.0,
+            flaky_sigma: 0.0,
+        }
+    }
+
+    /// The same plan with a different seed — used to derive an independent
+    /// per-cell fault pattern from one committed plan file.
+    pub fn with_seed(&self, seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..self.clone() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("seed", format!("{:#x}", self.seed))
+            .set("transient_rate", self.transient_rate)
+            .set("hang_rate", self.hang_rate)
+            .set(
+                "crash_after",
+                match self.crash_after {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            )
+            .set("flaky_rate", self.flaky_rate)
+            .set("flaky_sigma", self.flaky_sigma)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let seed = match j.get("seed") {
+            // Accept both the hex-string form we emit and a plain number
+            // in hand-written plans.
+            Some(Json::Str(s)) => {
+                let t = s.trim_start_matches("0x");
+                u64::from_str_radix(t, 16).map_err(|e| format!("bad seed '{s}': {e}"))?
+            }
+            Some(Json::Num(x)) if *x >= 0.0 && *x == x.trunc() => *x as u64,
+            Some(_) => return Err("fault plan 'seed' must be a hex string or integer".into()),
+            None => return Err("fault plan missing 'seed'".into()),
+        };
+        let rate = |key: &str| -> Result<f64, String> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(0.0),
+                Some(v) => v.as_f64().ok_or_else(|| format!("fault plan '{key}' must be a number")),
+            }
+        };
+        let crash_after = match j.get("crash_after") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .filter(|x| *x >= 0.0 && *x == x.trunc())
+                    .ok_or("fault plan 'crash_after' must be a non-negative integer or null")?
+                    as usize,
+            ),
+        };
+        Ok(FaultPlan {
+            seed,
+            transient_rate: rate("transient_rate")?,
+            hang_rate: rate("hang_rate")?,
+            crash_after,
+            flaky_rate: rate("flaky_rate")?,
+            flaky_sigma: rate("flaky_sigma")?,
+        })
+    }
+
+    /// Load a plan from a JSON file.
+    pub fn load(path: &Path) -> Result<FaultPlan, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        FaultPlan::from_json(&jsonparse::parse(&text)?)
+    }
+}
+
+/// Running totals of what a [`FaultyObjective`] actually injected.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub evals: usize,
+    pub hangs: usize,
+    pub transients: usize,
+    pub flaky: usize,
+}
+
+impl FaultStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("evals", self.evals)
+            .set("hangs", self.hangs)
+            .set("transients", self.transients)
+            .set("flaky", self.flaky)
+    }
+}
+
+/// An [`Objective`] wrapper that injects faults per a [`FaultPlan`].
+pub struct FaultyObjective {
+    inner: Arc<dyn Objective>,
+    plan: FaultPlan,
+    /// Per-config attempt counters: retrying idx re-rolls its fault lanes.
+    attempts: Mutex<HashMap<usize, u64>>,
+    evals: AtomicUsize,
+    hangs: AtomicUsize,
+    transients: AtomicUsize,
+    flaky: AtomicUsize,
+}
+
+impl FaultyObjective {
+    pub fn new(inner: Arc<dyn Objective>, plan: FaultPlan) -> FaultyObjective {
+        FaultyObjective {
+            inner,
+            plan,
+            attempts: Mutex::new(HashMap::new()),
+            evals: AtomicUsize::new(0),
+            hangs: AtomicUsize::new(0),
+            transients: AtomicUsize::new(0),
+            flaky: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            evals: self.evals.load(Ordering::Relaxed),
+            hangs: self.hangs.load(Ordering::Relaxed),
+            transients: self.transients.load(Ordering::Relaxed),
+            flaky: self.flaky.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One lane's hash for (idx, attempt): stateless, schedule-independent.
+    fn lane(&self, idx: usize, attempt: u64, salt: u64) -> u64 {
+        hash64(hash64(self.plan.seed ^ salt) ^ hash64(idx as u64).rotate_left(17) ^ hash64(attempt))
+    }
+}
+
+impl Objective for FaultyObjective {
+    fn space(&self) -> &SearchSpace {
+        self.inner.space()
+    }
+
+    fn evaluate(&self, idx: usize, rng: &mut Rng) -> Eval {
+        let count = self.evals.fetch_add(1, Ordering::Relaxed);
+        if let Some(limit) = self.plan.crash_after {
+            if count >= limit {
+                panic!("injected crash after {limit} evaluations");
+            }
+        }
+        let attempt = {
+            let mut map = self.attempts.lock().unwrap();
+            let a = map.entry(idx).or_insert(0);
+            let cur = *a;
+            *a += 1;
+            cur
+        };
+        if hash_unit(self.lane(idx, attempt, HANG_LANE)) < self.plan.hang_rate {
+            self.hangs.fetch_add(1, Ordering::Relaxed);
+            return Eval::Timeout;
+        }
+        if hash_unit(self.lane(idx, attempt, TRANSIENT_LANE)) < self.plan.transient_rate {
+            self.transients.fetch_add(1, Ordering::Relaxed);
+            let kind = if self.lane(idx, attempt, KIND_LANE) & 1 == 0 {
+                FaultKind::DeviceError
+            } else {
+                FaultKind::FlakyMeasurement
+            };
+            return Eval::Transient(kind);
+        }
+        match self.inner.evaluate(idx, rng) {
+            Eval::Valid(v)
+                if hash_unit(self.lane(idx, attempt, FLAKY_LANE)) < self.plan.flaky_rate =>
+            {
+                self.flaky.fetch_add(1, Ordering::Relaxed);
+                let burst =
+                    (self.plan.flaky_sigma * hash_normal(self.lane(idx, attempt, NOISE_LANE))).exp();
+                Eval::Valid(v * burst)
+            }
+            e => e,
+        }
+    }
+
+    fn known_minimum(&self) -> Option<f64> {
+        self.inner.known_minimum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::TableObjective;
+    use crate::space::Param;
+
+    fn table(n: usize) -> Arc<dyn Objective> {
+        let vals: Vec<i64> = (0..n as i64).collect();
+        let space = SearchSpace::build("soak", vec![Param::ints("i", &vals)], &[]);
+        let table = (0..n).map(|i| Eval::Valid(1.0 + i as f64)).collect();
+        Arc::new(TableObjective::new(space, table))
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = FaultPlan {
+            seed: 0xdead_beef_cafe_f00d,
+            transient_rate: 0.25,
+            hang_rate: 0.1,
+            crash_after: Some(7),
+            flaky_rate: 0.05,
+            flaky_sigma: 0.4,
+        };
+        let j = plan.to_json();
+        assert_eq!(FaultPlan::from_json(&jsonparse::parse(&j.render()).unwrap()).unwrap(), plan);
+        // crash_after: null round-trips to None; omitted rates default to 0.
+        let quiet = FaultPlan::quiet(3);
+        let back = FaultPlan::from_json(&quiet.to_json()).unwrap();
+        assert_eq!(back, quiet);
+        let sparse = jsonparse::parse(r#"{"seed": 42, "transient_rate": 1.0}"#).unwrap();
+        let p = FaultPlan::from_json(&sparse).unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.transient_rate, 1.0);
+        assert_eq!(p.hang_rate, 0.0);
+        assert_eq!(p.crash_after, None);
+        assert!(FaultPlan::from_json(&jsonparse::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn plan_file_round_trips() {
+        let plan = FaultPlan { hang_rate: 0.2, ..FaultPlan::quiet(99) };
+        let path = std::env::temp_dir().join("ktbo-fault-test/plan.json");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, plan.to_json().render_pretty()).unwrap();
+        assert_eq!(FaultPlan::load(&path).unwrap(), plan);
+    }
+
+    #[test]
+    fn injection_is_deterministic_and_instance_independent() {
+        let plan = FaultPlan {
+            transient_rate: 0.3,
+            hang_rate: 0.1,
+            flaky_rate: 0.2,
+            flaky_sigma: 0.5,
+            ..FaultPlan::quiet(0x5eed)
+        };
+        let a = FaultyObjective::new(table(64), plan.clone());
+        let b = FaultyObjective::new(table(64), plan);
+        let mut rng_a = Rng::new(1);
+        let mut rng_b = Rng::new(1);
+        // Same per-idx attempt sequence → identical injected outcomes,
+        // regardless of which wrapper instance serves it.
+        for pass in 0..3 {
+            for idx in 0..64 {
+                let ea = a.evaluate(idx, &mut rng_a);
+                let eb = b.evaluate(idx, &mut rng_b);
+                assert_eq!(ea, eb, "idx {idx} pass {pass}");
+            }
+        }
+        let stats = a.stats();
+        assert_eq!(stats, b.stats());
+        assert_eq!(stats.evals, 192);
+        assert!(stats.transients > 0 && stats.hangs > 0 && stats.flaky > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn retries_re_roll_the_fault_lanes() {
+        // With a 50% transient rate, repeated attempts on one idx must not
+        // all share a fate: the attempt counter feeds the hash.
+        let plan = FaultPlan { transient_rate: 0.5, ..FaultPlan::quiet(7) };
+        let f = FaultyObjective::new(table(4), plan);
+        let mut rng = Rng::new(1);
+        let outcomes: Vec<bool> =
+            (0..64).map(|_| f.evaluate(0, &mut rng).is_transient()).collect();
+        assert!(outcomes.iter().any(|&t| t) && outcomes.iter().any(|&t| !t));
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let plan = FaultPlan { transient_rate: 0.25, ..FaultPlan::quiet(11) };
+        let f = FaultyObjective::new(table(2000), plan);
+        let mut rng = Rng::new(1);
+        let hits = (0..2000).filter(|&i| f.evaluate(i, &mut rng).is_transient()).count();
+        assert!((400..=600).contains(&hits), "transient hits {hits} of 2000 at rate 0.25");
+    }
+
+    #[test]
+    fn zero_rate_plan_is_transparent() {
+        let inner = table(32);
+        let f = FaultyObjective::new(Arc::clone(&inner), FaultPlan::quiet(5));
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        for idx in 0..32 {
+            assert_eq!(f.evaluate(idx, &mut r1), inner.evaluate(idx, &mut r2));
+        }
+        assert_eq!(f.stats(), FaultStats { evals: 32, ..FaultStats::default() });
+    }
+
+    #[test]
+    fn crash_after_panics_at_the_limit() {
+        let plan = FaultPlan { crash_after: Some(2), ..FaultPlan::quiet(1) };
+        let f = FaultyObjective::new(table(8), plan);
+        let mut rng = Rng::new(1);
+        assert!(f.evaluate(0, &mut rng).is_valid());
+        assert!(f.evaluate(1, &mut rng).is_valid());
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(1);
+            f.evaluate(2, &mut rng)
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("injected crash"), "panic message: {msg}");
+    }
+}

@@ -8,9 +8,25 @@
 
 pub mod cache;
 pub mod evalcache;
+pub mod faulty;
+pub mod resilient;
 
 use crate::space::SearchSpace;
 use crate::util::rng::Rng;
+
+/// What kind of transient fault interrupted an evaluation. Transient
+/// faults are retry-worthy: the configuration itself may be fine, the
+/// *measurement* failed (a device hiccup, a flaky timing run). Contrast
+/// the persistent invalids ([`Eval::CompileError`]/[`Eval::RuntimeError`]),
+/// where the configuration is the problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The device or driver errored transiently (ECC event, context loss).
+    DeviceError,
+    /// The measurement completed but is untrustworthy (noise burst,
+    /// clock-throttle spike) and was discarded.
+    FlakyMeasurement,
+}
 
 /// Result of evaluating one configuration.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -21,6 +37,13 @@ pub enum Eval {
     CompileError,
     /// Launch/execution failed on the device (stage 3).
     RuntimeError,
+    /// The evaluation exceeded its deadline and was abandoned.
+    Timeout,
+    /// A transient, retry-worthy failure — the config may still be good.
+    Transient(FaultKind),
+    /// An invalid kind this build does not recognize, preserved verbatim
+    /// so cache files written by newer builds round-trip losslessly.
+    UnknownInvalid(&'static str),
 }
 
 impl Eval {
@@ -34,6 +57,58 @@ impl Eval {
     pub fn is_valid(&self) -> bool {
         matches!(self, Eval::Valid(_))
     }
+
+    /// Transient (retry-worthy) failure? Persistent invalids and timeouts
+    /// return `false` — retrying them repeats the same outcome (or burns
+    /// another full deadline).
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Eval::Transient(_))
+    }
+
+    /// The stable string label of a non-valid result, as written to cache
+    /// files and sweep records. `None` for [`Eval::Valid`].
+    pub fn invalid_label(&self) -> Option<&'static str> {
+        match self {
+            Eval::Valid(_) => None,
+            Eval::CompileError => Some("compile"),
+            Eval::RuntimeError => Some("runtime"),
+            Eval::Timeout => Some("timeout"),
+            Eval::Transient(FaultKind::DeviceError) => Some("transient:device"),
+            Eval::Transient(FaultKind::FlakyMeasurement) => Some("transient:flaky"),
+            Eval::UnknownInvalid(s) => Some(s),
+        }
+    }
+
+    /// Parse an invalid label back into an `Eval`. Unrecognized labels map
+    /// to [`Eval::UnknownInvalid`] (interned, so repeated loads of one
+    /// label allocate once) instead of erroring — forward compatibility
+    /// for cache files written by builds with more failure kinds.
+    pub fn from_invalid_label(label: &str) -> Eval {
+        match label {
+            "compile" => Eval::CompileError,
+            "runtime" => Eval::RuntimeError,
+            "timeout" => Eval::Timeout,
+            "transient:device" => Eval::Transient(FaultKind::DeviceError),
+            "transient:flaky" => Eval::Transient(FaultKind::FlakyMeasurement),
+            other => Eval::UnknownInvalid(intern_label(other)),
+        }
+    }
+}
+
+/// Intern an unknown invalid label: `Eval` is `Copy`, so the variant holds
+/// a `&'static str`; each distinct label leaks exactly once per process
+/// (the same bounded-leak policy as cache `PValue::Str` loading).
+fn intern_label(label: &str) -> &'static str {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    static INTERNED: OnceLock<Mutex<HashMap<String, &'static str>>> = OnceLock::new();
+    let mut map = INTERNED.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    if let Some(s) = map.get(label) {
+        return s;
+    }
+    let leaked: &'static str = Box::leak(label.to_string().into_boxed_str());
+    map.insert(label.to_string(), leaked);
+    leaked
 }
 
 /// A tunable objective over an enumerated search space.
@@ -170,5 +245,40 @@ mod tests {
         assert!(Eval::Valid(1.0).is_valid());
         assert!(!Eval::RuntimeError.is_valid());
         assert_eq!(Eval::CompileError.value(), None);
+        assert!(Eval::Transient(FaultKind::DeviceError).is_transient());
+        assert!(!Eval::Timeout.is_transient(), "timeouts are not retry-worthy");
+        assert!(!Eval::CompileError.is_transient());
+        assert_eq!(Eval::Timeout.value(), None);
+        assert!(!Eval::Timeout.is_valid());
+    }
+
+    #[test]
+    fn invalid_labels_round_trip_every_kind() {
+        for e in [
+            Eval::CompileError,
+            Eval::RuntimeError,
+            Eval::Timeout,
+            Eval::Transient(FaultKind::DeviceError),
+            Eval::Transient(FaultKind::FlakyMeasurement),
+        ] {
+            let label = e.invalid_label().unwrap();
+            assert_eq!(Eval::from_invalid_label(label), e, "{label}");
+        }
+        assert_eq!(Eval::Valid(1.0).invalid_label(), None);
+    }
+
+    #[test]
+    fn unknown_labels_are_preserved_and_interned() {
+        let a = Eval::from_invalid_label("oom:device");
+        let b = Eval::from_invalid_label("oom:device");
+        assert_eq!(a, b);
+        let Eval::UnknownInvalid(s) = a else { panic!("expected UnknownInvalid, got {a:?}") };
+        assert_eq!(s, "oom:device");
+        // Round-trips verbatim through the label surface.
+        assert_eq!(a.invalid_label(), Some("oom:device"));
+        assert!(!a.is_valid() && !a.is_transient());
+        // Interning: both parses share one leaked allocation.
+        let Eval::UnknownInvalid(t) = b else { unreachable!() };
+        assert!(std::ptr::eq(s, t), "same label must intern to one allocation");
     }
 }

@@ -1,0 +1,453 @@
+//! Fault-tolerant evaluation: a wrapper that gives any [`Objective`]
+//! per-eval deadlines, bounded retry with backoff, config quarantine, and
+//! a circuit breaker — so a strategy keeps making progress when the
+//! evaluation substrate misbehaves.
+//!
+//! Semantics, by failure kind:
+//!
+//! * [`Eval::Transient`] — retried up to `max_retries` times with
+//!   exponential backoff and seeded jitter. The jitter comes from a
+//!   *private child RNG stream* (derived once from a snapshot of the run
+//!   RNG), so retrying never perturbs the run stream and runs stay
+//!   bit-identical whether or not retries happened.
+//! * [`Eval::Timeout`] — counted as a failure but never retried: another
+//!   attempt just burns another full deadline.
+//! * [`Eval::CompileError`]/[`Eval::RuntimeError`]/[`Eval::UnknownInvalid`]
+//!   — the configuration's own fault; returned as-is, no retry, and they
+//!   do not feed the quarantine or breaker counters.
+//!
+//! A config that exhausts its failure budget `quarantine_after` times is
+//! quarantined: later asks return [`Eval::RuntimeError`] without touching
+//! the objective (a persistent invalid the pruning model may learn from).
+//! After `breaker_threshold` *consecutive* failures across configs, the
+//! circuit breaker trips: the next `breaker_cooldown` evaluations are
+//! skipped, recorded as transient invalids (which the BO engine excludes
+//! from its invalidity model), then one half-open probe reaches the
+//! objective again. Breaker and quarantine counters are best-effort under
+//! concurrent prefetch — the order failures land is scheduling-dependent —
+//! so determinism suites keep the breaker off.
+//!
+//! With everything disabled (the [`ResilienceConfig::default`]), the
+//! wrapper is a zero-cost passthrough: one virtual call, no locks.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::objective::{Eval, FaultKind, Objective};
+use crate::space::SearchSpace;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Stream tag for the private jitter RNG (never overlaps harness tags).
+const JITTER_TAG: u64 = 0x6a69_7474_6572_0001;
+/// Stream tag base for per-eval watchdog worker RNGs.
+const WATCHDOG_TAG: u64 = 0x7761_7463_6864_6f67;
+
+/// Knobs for [`ResilientEvaluator`]. The default disables every feature
+/// (passthrough); set only what a deployment needs.
+#[derive(Clone, Debug)]
+pub struct ResilienceConfig {
+    /// Per-evaluation wall-clock deadline. `None` = no watchdog. When set,
+    /// each evaluation runs on a worker thread holding a child RNG split
+    /// from the run stream (two draws per attempt, outcome-independent);
+    /// an overrun returns [`Eval::Timeout`] and abandons the worker.
+    pub deadline: Option<Duration>,
+    /// Extra attempts after a transient failure (0 = no retry).
+    pub max_retries: u32,
+    /// First backoff delay; attempt `k` waits `base * factor^k`, jittered.
+    pub backoff_base: Duration,
+    pub backoff_factor: f64,
+    /// Relative jitter on each backoff delay, in `[0, 1]`.
+    pub backoff_jitter: f64,
+    /// Quarantine a config after this many failed `evaluate()` calls
+    /// (0 = never quarantine).
+    pub quarantine_after: u32,
+    /// Trip the breaker after this many consecutive failed calls
+    /// (0 = breaker disabled).
+    pub breaker_threshold: u32,
+    /// How many calls the tripped breaker skips before half-opening.
+    pub breaker_cooldown: u32,
+    /// Actually sleep during backoff. Tests set `false`: retry accounting
+    /// and jitter draws are identical, without the wall-clock cost.
+    pub sleep: bool,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> ResilienceConfig {
+        ResilienceConfig {
+            deadline: None,
+            max_retries: 0,
+            backoff_base: Duration::from_millis(25),
+            backoff_factor: 2.0,
+            backoff_jitter: 0.25,
+            quarantine_after: 0,
+            breaker_threshold: 0,
+            breaker_cooldown: 8,
+            sleep: true,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// True when every feature is off and `evaluate()` forwards directly.
+    pub fn is_passthrough(&self) -> bool {
+        self.deadline.is_none()
+            && self.max_retries == 0
+            && self.quarantine_after == 0
+            && self.breaker_threshold == 0
+    }
+}
+
+/// Counters for what the resilience layer actually did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResilienceStats {
+    /// Attempts that reached the inner objective (or its watchdog).
+    pub attempts: usize,
+    /// Attempts that were retries of a transient failure.
+    pub retries: usize,
+    pub timeouts: usize,
+    pub transients: usize,
+    /// Configs moved into the quarantine set.
+    pub quarantined: usize,
+    pub breaker_trips: usize,
+    /// Evaluations skipped while the breaker was open.
+    pub breaker_skips: usize,
+}
+
+impl ResilienceStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("attempts", self.attempts)
+            .set("retries", self.retries)
+            .set("timeouts", self.timeouts)
+            .set("transients", self.transients)
+            .set("quarantined", self.quarantined)
+            .set("breaker_trips", self.breaker_trips)
+            .set("breaker_skips", self.breaker_skips)
+    }
+}
+
+#[derive(Default)]
+struct ResilientState {
+    /// Failed-call counts per config (final failures, not per-attempt).
+    failures: HashMap<usize, u32>,
+    quarantined: HashSet<usize>,
+    /// Consecutive failed calls feeding the breaker.
+    consecutive: u32,
+    /// Remaining calls the open breaker will skip.
+    breaker_open_for: u32,
+    /// Private jitter stream, created lazily from a run-RNG snapshot.
+    jitter: Option<Rng>,
+    stats: ResilienceStats,
+}
+
+/// The fault-tolerant [`Objective`] wrapper. See the module docs for the
+/// retry/quarantine/breaker semantics.
+pub struct ResilientEvaluator {
+    inner: Arc<dyn Objective>,
+    cfg: ResilienceConfig,
+    state: Mutex<ResilientState>,
+}
+
+impl ResilientEvaluator {
+    pub fn new(inner: Arc<dyn Objective>, cfg: ResilienceConfig) -> ResilientEvaluator {
+        ResilientEvaluator { inner, cfg, state: Mutex::new(ResilientState::default()) }
+    }
+
+    pub fn config(&self) -> &ResilienceConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> ResilienceStats {
+        self.state.lock().unwrap().stats
+    }
+
+    /// Is this config currently quarantined?
+    pub fn is_quarantined(&self, idx: usize) -> bool {
+        self.state.lock().unwrap().quarantined.contains(&idx)
+    }
+
+    /// One attempt, under the watchdog when a deadline is set. The lock is
+    /// never held here — the inner objective may take arbitrarily long.
+    fn attempt(&self, idx: usize, rng: &mut Rng) -> Eval {
+        match self.cfg.deadline {
+            None => self.inner.evaluate(idx, rng),
+            Some(deadline) => {
+                let inner = Arc::clone(&self.inner);
+                let mut child = rng.split(WATCHDOG_TAG ^ idx as u64);
+                let (tx, rx) = mpsc::channel();
+                std::thread::spawn(move || {
+                    let _ = tx.send(inner.evaluate(idx, &mut child));
+                });
+                match rx.recv_timeout(deadline) {
+                    Ok(e) => e,
+                    // The worker is abandoned, not killed: it finishes (or
+                    // hangs) in the background and its send goes nowhere.
+                    // A bounded leak, the standard watchdog trade-off
+                    // without process isolation.
+                    Err(_) => Eval::Timeout,
+                }
+            }
+        }
+    }
+
+    /// Jittered exponential-backoff delay for retry number `attempt`.
+    fn backoff_delay(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let mut st = self.state.lock().unwrap();
+        let jrng = st.jitter.get_or_insert_with(|| rng.clone().split(JITTER_TAG));
+        let jfac = 1.0 + self.cfg.backoff_jitter * (jrng.f64() * 2.0 - 1.0);
+        self.cfg.backoff_base.mul_f64(self.cfg.backoff_factor.powi(attempt as i32) * jfac.max(0.0))
+    }
+
+    /// Record a final (post-retry) failure of `idx`; maybe quarantine it,
+    /// maybe trip the breaker.
+    fn record_failure(&self, idx: usize) {
+        let mut st = self.state.lock().unwrap();
+        let count = {
+            let f = st.failures.entry(idx).or_insert(0);
+            *f += 1;
+            *f
+        };
+        if self.cfg.quarantine_after > 0
+            && count >= self.cfg.quarantine_after
+            && st.quarantined.insert(idx)
+        {
+            st.stats.quarantined += 1;
+        }
+        st.consecutive += 1;
+        if self.cfg.breaker_threshold > 0 && st.consecutive >= self.cfg.breaker_threshold {
+            st.breaker_open_for = self.cfg.breaker_cooldown;
+            st.consecutive = 0;
+            st.stats.breaker_trips += 1;
+        }
+    }
+}
+
+impl Objective for ResilientEvaluator {
+    fn space(&self) -> &SearchSpace {
+        self.inner.space()
+    }
+
+    fn evaluate(&self, idx: usize, rng: &mut Rng) -> Eval {
+        if self.cfg.is_passthrough() {
+            return self.inner.evaluate(idx, rng);
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.quarantined.contains(&idx) {
+                // Quarantined: a persistent invalid from here on, without
+                // touching the objective again.
+                return Eval::RuntimeError;
+            }
+            if st.breaker_open_for > 0 {
+                st.breaker_open_for -= 1;
+                st.stats.breaker_skips += 1;
+                // A recording-invalid: costs budget like any eval, but the
+                // engine's pruning model ignores transients, so skipped
+                // configs are not learned as bad.
+                return Eval::Transient(FaultKind::DeviceError);
+            }
+        }
+        let max_attempts = self.cfg.max_retries + 1;
+        let mut last = Eval::Transient(FaultKind::DeviceError);
+        for attempt in 0..max_attempts {
+            let e = self.attempt(idx, rng);
+            self.state.lock().unwrap().stats.attempts += 1;
+            match e {
+                Eval::Valid(_) => {
+                    self.state.lock().unwrap().consecutive = 0;
+                    return e;
+                }
+                Eval::Transient(_) => {
+                    self.state.lock().unwrap().stats.transients += 1;
+                    last = e;
+                    if attempt + 1 < max_attempts {
+                        self.state.lock().unwrap().stats.retries += 1;
+                        let delay = self.backoff_delay(attempt, rng);
+                        if self.cfg.sleep && delay > Duration::ZERO {
+                            std::thread::sleep(delay);
+                        }
+                    }
+                }
+                Eval::Timeout => {
+                    self.state.lock().unwrap().stats.timeouts += 1;
+                    last = e;
+                    break;
+                }
+                // The config's own fault (compile/runtime/unknown kinds):
+                // no retry, and not an infrastructure failure — the
+                // breaker and quarantine counters stay untouched.
+                other => return other,
+            }
+        }
+        self.record_failure(idx);
+        last
+    }
+
+    fn known_minimum(&self) -> Option<f64> {
+        self.inner.known_minimum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::faulty::{FaultPlan, FaultyObjective};
+    use crate::objective::TableObjective;
+    use crate::space::Param;
+
+    fn table(n: usize) -> Arc<dyn Objective> {
+        let vals: Vec<i64> = (0..n as i64).collect();
+        let space = SearchSpace::build("res", vec![Param::ints("i", &vals)], &[]);
+        let table = (0..n).map(|i| Eval::Valid(1.0 + i as f64)).collect();
+        Arc::new(TableObjective::new(space, table))
+    }
+
+    fn no_sleep(cfg: ResilienceConfig) -> ResilienceConfig {
+        ResilienceConfig { sleep: false, ..cfg }
+    }
+
+    #[test]
+    fn default_config_is_passthrough_and_bit_identical() {
+        assert!(ResilienceConfig::default().is_passthrough());
+        let inner = table(32);
+        let res = ResilientEvaluator::new(Arc::clone(&inner), ResilienceConfig::default());
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for idx in 0..32 {
+            assert_eq!(res.evaluate(idx, &mut r1), inner.evaluate(idx, &mut r2));
+        }
+        // The run stream is untouched by the wrapper: both RNGs agree on
+        // what comes next.
+        assert_eq!(r1.next_u64(), r2.next_u64());
+        assert_eq!(res.stats(), ResilienceStats::default());
+    }
+
+    #[test]
+    fn retries_recover_most_transients_without_touching_the_run_stream() {
+        let plan = FaultPlan { transient_rate: 0.5, ..FaultPlan::quiet(0xfa) };
+        let faulty = Arc::new(FaultyObjective::new(table(256), plan.clone()));
+        let cfg = no_sleep(ResilienceConfig { max_retries: 4, ..ResilienceConfig::default() });
+        let res = ResilientEvaluator::new(faulty, cfg);
+        let mut rng = Rng::new(1);
+        let mut rng_ref = Rng::new(1);
+        let transients =
+            (0..256).filter(|&i| res.evaluate(i, &mut rng).is_transient()).count();
+        // Unretried, ~128 of 256 fail; with 4 retries only ~(0.5)^5 ≈ 3%
+        // survive. Allow generous slack.
+        assert!(transients < 30, "{transients} of 256 still transient after retries");
+        assert!(res.stats().retries > 0);
+        // The run stream never moved (table objectives ignore the RNG and
+        // jitter comes from a private snapshot-derived child).
+        assert_eq!(rng.next_u64(), rng_ref.next_u64());
+    }
+
+    #[test]
+    fn quarantine_converts_repeat_offenders_to_persistent_invalids() {
+        let plan = FaultPlan { transient_rate: 1.0, ..FaultPlan::quiet(2) };
+        let faulty = Arc::new(FaultyObjective::new(table(8), plan));
+        let probe = Arc::clone(&faulty);
+        let cfg =
+            no_sleep(ResilienceConfig { quarantine_after: 2, ..ResilienceConfig::default() });
+        let res = ResilientEvaluator::new(faulty, cfg);
+        let mut rng = Rng::new(1);
+        assert!(res.evaluate(3, &mut rng).is_transient());
+        assert!(res.evaluate(3, &mut rng).is_transient());
+        assert!(res.is_quarantined(3));
+        let evals_before = probe.stats().evals;
+        // Quarantined: persistent invalid, inner objective not called.
+        assert_eq!(res.evaluate(3, &mut rng), Eval::RuntimeError);
+        assert_eq!(probe.stats().evals, evals_before);
+        assert_eq!(res.stats().quarantined, 1);
+        // Other configs still reach the objective.
+        assert!(res.evaluate(4, &mut rng).is_transient());
+    }
+
+    #[test]
+    fn breaker_trips_cools_down_and_half_opens() {
+        let plan = FaultPlan { transient_rate: 1.0, ..FaultPlan::quiet(5) };
+        let faulty = Arc::new(FaultyObjective::new(table(64), plan));
+        let probe = Arc::clone(&faulty);
+        let cfg = no_sleep(ResilienceConfig {
+            breaker_threshold: 3,
+            breaker_cooldown: 2,
+            ..ResilienceConfig::default()
+        });
+        let res = ResilientEvaluator::new(faulty, cfg);
+        let mut rng = Rng::new(1);
+        for idx in 0..3 {
+            assert!(res.evaluate(idx, &mut rng).is_transient());
+        }
+        assert_eq!(res.stats().breaker_trips, 1);
+        let evals_before = probe.stats().evals;
+        // Two skipped calls while open: transient invalids, inner untouched.
+        assert!(res.evaluate(10, &mut rng).is_transient());
+        assert!(res.evaluate(11, &mut rng).is_transient());
+        assert_eq!(probe.stats().evals, evals_before);
+        assert_eq!(res.stats().breaker_skips, 2);
+        // Half-open probe reaches the objective again.
+        res.evaluate(12, &mut rng);
+        assert_eq!(probe.stats().evals, evals_before + 1);
+    }
+
+    #[test]
+    fn persistent_invalids_bypass_retry_and_breaker() {
+        let space = SearchSpace::build("inv", vec![Param::ints("i", &[0, 1])], &[]);
+        let inner: Arc<dyn Objective> = Arc::new(TableObjective::new(
+            space,
+            vec![Eval::CompileError, Eval::RuntimeError],
+        ));
+        let cfg = no_sleep(ResilienceConfig {
+            max_retries: 5,
+            breaker_threshold: 1,
+            ..ResilienceConfig::default()
+        });
+        let res = ResilientEvaluator::new(inner, cfg);
+        let mut rng = Rng::new(1);
+        assert_eq!(res.evaluate(0, &mut rng), Eval::CompileError);
+        assert_eq!(res.evaluate(1, &mut rng), Eval::RuntimeError);
+        let s = res.stats();
+        assert_eq!((s.retries, s.breaker_trips), (0, 0));
+    }
+
+    /// Hangs forever on idx 0, instant everywhere else.
+    struct SlowObjective {
+        space: SearchSpace,
+    }
+
+    impl Objective for SlowObjective {
+        fn space(&self) -> &SearchSpace {
+            &self.space
+        }
+
+        fn evaluate(&self, idx: usize, _rng: &mut Rng) -> Eval {
+            if idx == 0 {
+                std::thread::sleep(Duration::from_secs(2));
+            }
+            Eval::Valid(1.0 + idx as f64)
+        }
+    }
+
+    #[test]
+    fn watchdog_converts_hangs_to_timeouts() {
+        let space = SearchSpace::build("slow", vec![Param::ints("i", &[0, 1, 2])], &[]);
+        let inner: Arc<dyn Objective> = Arc::new(SlowObjective { space });
+        let cfg = no_sleep(ResilienceConfig {
+            deadline: Some(Duration::from_millis(40)),
+            max_retries: 3,
+            ..ResilienceConfig::default()
+        });
+        let res = ResilientEvaluator::new(inner, cfg);
+        let mut rng = Rng::new(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(res.evaluate(0, &mut rng), Eval::Timeout);
+        // Timeouts are not retried: well under 2× the deadline + slack,
+        // not 4 stacked deadlines (and never the 2 s hang).
+        assert!(t0.elapsed() < Duration::from_millis(1500), "took {:?}", t0.elapsed());
+        assert_eq!(res.evaluate(1, &mut rng), Eval::Valid(2.0));
+        let s = res.stats();
+        assert_eq!((s.timeouts, s.retries), (1, 0));
+    }
+}

@@ -40,6 +40,19 @@
 //! Between batches the loop checks `Budget::proceed`; a driver returning
 //! [`Ask::Finished`] (or an empty batch) ends the run.
 //!
+//! # Failure accounting
+//!
+//! Every fresh evaluation is recorded and costs budget *whatever its
+//! outcome* — timed-out and transiently failed evals
+//! ([`Eval::Timeout`]/[`Eval::Transient`]) consume [`FevalBudget`] exactly
+//! like valid measurements, mirroring a live tuner where a hung or errored
+//! kernel launch still spends the time. An all-invalid run therefore
+//! terminates at its budget with `trace.best() == None` (the
+//! `fallback_value` outcome downstream). As a backstop against drivers
+//! that spin on free memo revisits when nothing is evaluable, the loop
+//! also ends the run after a generous bounded number of consecutive
+//! no-progress steps (the stall guard), rather than hanging.
+//!
 //! # Determinism
 //!
 //! The loop threads one RNG through asks and evaluations in suggestion
@@ -313,6 +326,10 @@ struct DriveCore<'a> {
     replay: VecDeque<(usize, Eval)>,
     /// Batch evaluations prefetched on a pool, consumed by `deliver`.
     prefetched: std::collections::HashMap<usize, Eval>,
+    /// Trace length when progress was last observed, and the number of
+    /// steps taken since — the stall guard's state.
+    last_len: usize,
+    stalls: usize,
     done: bool,
 }
 
@@ -332,14 +349,45 @@ impl<'a> DriveCore<'a> {
             pending: VecDeque::new(),
             replay,
             prefetched: std::collections::HashMap::new(),
+            last_len: 0,
+            stalls: 0,
             done: false,
         }
+    }
+
+    /// How many consecutive steps without a new trace record the loop
+    /// tolerates. Generous — asks and memo revisits legitimately add no
+    /// record — but finite, so a driver spinning on revisits against an
+    /// all-invalid objective ends the run instead of hanging it.
+    fn stall_limit(&self) -> usize {
+        4096 + 4 * self.space.len()
     }
 
     /// Advance by one unit of work: deliver one pending suggestion, or
     /// ask the driver for the next batch. Returns `false` once the run
     /// is over.
     fn step(
+        &mut self,
+        driver: &mut dyn SearchDriver,
+        budget: &dyn Budget,
+        rng: &mut Rng,
+        pool: Option<&ShardPool>,
+    ) -> bool {
+        let live = self.advance(driver, budget, rng, pool);
+        if self.trace.len() > self.last_len {
+            self.last_len = self.trace.len();
+            self.stalls = 0;
+        } else if live {
+            self.stalls += 1;
+            if self.stalls > self.stall_limit() {
+                self.end_run();
+                return false;
+            }
+        }
+        live
+    }
+
+    fn advance(
         &mut self,
         driver: &mut dyn SearchDriver,
         budget: &dyn Budget,
@@ -900,6 +948,51 @@ mod tests {
         let mut rng = Rng::new(9);
         let t = drive(&mut Empty, &obj, &FevalBudget::new(5), &mut rng);
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn failed_and_timed_out_evals_consume_budget() {
+        use crate::objective::FaultKind;
+        let vals: Vec<i64> = (0..8).collect();
+        let space = SearchSpace::build("faulty", vec![Param::ints("a", &vals)], &[]);
+        let table = vec![
+            Eval::Transient(FaultKind::DeviceError),
+            Eval::Timeout,
+            Eval::Transient(FaultKind::FlakyMeasurement),
+            Eval::Timeout,
+            Eval::Transient(FaultKind::DeviceError),
+            Eval::Timeout,
+            Eval::Transient(FaultKind::DeviceError),
+            Eval::Timeout,
+        ];
+        let obj = TableObjective::new(space, table);
+        let mut rng = Rng::new(21);
+        let t = drive(&mut Counter { next: 0 }, &obj, &FevalBudget::new(5), &mut rng);
+        // Five failed evaluations exhaust a budget of 5: failures are not
+        // free, and the run ends with no best rather than spinning.
+        assert_eq!(t.len(), 5);
+        assert!(t.best().is_none());
+        assert!(t.records.iter().all(|(_, e)| !e.is_valid()));
+    }
+
+    #[test]
+    fn stall_guard_ends_a_revisit_spinning_run() {
+        /// Proposes config 0 forever: after the first eval every ask is a
+        /// free memo revisit, so without the guard the loop never ends.
+        struct Spinner;
+        impl SearchDriver for Spinner {
+            fn name(&self) -> String {
+                "spinner".into()
+            }
+            fn ask(&mut self, _ctx: &mut DriveCtx) -> Ask {
+                Ask::Suggest(vec![0])
+            }
+            fn tell(&mut self, _obs: Observation) {}
+        }
+        let obj = ladder(4);
+        let mut rng = Rng::new(22);
+        let t = drive(&mut Spinner, &obj, &FevalBudget::new(10), &mut rng);
+        assert_eq!(t.len(), 1, "one fresh eval, then endless free revisits");
     }
 
     #[test]

@@ -204,6 +204,10 @@ fn surrogate_zoo_sweeps_all_kernels() {
         cache: true,
         fresh: true,
         space: None,
+        fault_plan: None,
+        fault_strategies: vec![],
+        eval_timeout_ms: None,
+        max_retries: 0,
     };
     let report = sweep(&spec).unwrap();
     assert_eq!(report.outcomes.len(), 5, "one outcome set per kernel");
@@ -399,6 +403,7 @@ fn smoke_sweep_is_bit_identical_to_serial_and_resumes() {
     }
     for report in &reports {
         assert_eq!(report.outcomes.len(), 1);
+        assert!(report.failed_cells.is_empty(), "the smoke fault plan never crashes");
         let outs = &report.outcomes[0].1;
         assert_eq!(outs.len(), spec.strategies.len());
         for o in outs {
@@ -411,9 +416,36 @@ fn smoke_sweep_is_bit_identical_to_serial_and_resumes() {
                 spec.seed,
                 1,
             );
+            if o.name == "simulated_annealing" {
+                // The smoke tier runs this strategy's cells under the
+                // committed fault plan: they must diverge from the clean
+                // serial path (injection bites) — thread-invariance is
+                // asserted across the two reports below.
+                assert_ne!(o.mean_curve, reference.mean_curve, "fault injection had no effect");
+                continue;
+            }
             assert_eq!(o.mean_curve, reference.mean_curve, "{} diverged from serial path", o.name);
             assert_eq!(o.maes, reference.maes, "{} MAEs diverged", o.name);
         }
+    }
+    // Faulted cells are part of the determinism contract too: identical
+    // at 1 and 4 workers.
+    let sa_1 = reports[0].outcomes[0].1.iter().find(|o| o.name == "simulated_annealing").unwrap();
+    let sa_4 = reports[1].outcomes[0].1.iter().find(|o| o.name == "simulated_annealing").unwrap();
+    assert_eq!(sa_1.mean_curve, sa_4.mean_curve, "faulted cells diverged across worker counts");
+    assert_eq!(sa_1.maes, sa_4.maes);
+
+    // Exactly the faulted cells carry the fault-accounting block.
+    let progress_text = std::fs::read_to_string(
+        std::path::Path::new(&out).join("SWEEP_smoke-int-1.jsonl"),
+    )
+    .unwrap();
+    for line in progress_text.lines().filter(|l| l.contains("\"type\":\"cell\"")) {
+        assert_eq!(
+            line.contains("\"faults\""),
+            line.contains("\"strategy\":\"simulated_annealing\""),
+            "fault accounting on the wrong cells: {line}"
+        );
     }
 
     // JSONL artifacts exist and are non-empty (what CI asserts).
@@ -430,4 +462,93 @@ fn smoke_sweep_is_bit_identical_to_serial_and_resumes() {
     assert_eq!(resumed.ran_cells, 0, "a completed sweep must resume fully");
     assert_eq!(resumed.resumed_cells, resumed.total_cells);
     assert_eq!(resumed.outcomes[0].1[0].mean_curve, reports[0].outcomes[0].1[0].mean_curve);
+}
+
+/// A small valid table to wrap in fault injectors.
+fn soak_table(n: i64) -> Arc<dyn Objective> {
+    use ktbo::space::Param;
+    use ktbo::space::SearchSpace;
+    let vals: Vec<i64> = (0..n).collect();
+    let space = SearchSpace::build("soak", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+    let table = (0..space.len())
+        .map(|i| {
+            let p = space.point(i);
+            ktbo::objective::Eval::Valid(1.0 + f64::from(p[0]) + f64::from(p[1]))
+        })
+        .collect();
+    Arc::new(ktbo::objective::TableObjective::new(space, table))
+}
+
+#[test]
+fn every_strategy_survives_an_all_transient_objective() {
+    // Robustness soak: with a 100% transient fault rate nothing is ever
+    // valid. Every registry strategy must terminate within budget without
+    // panicking or hanging, and report no best.
+    use ktbo::objective::faulty::{FaultPlan, FaultyObjective};
+    let inner = soak_table(12);
+    let plan = FaultPlan { transient_rate: 1.0, ..FaultPlan::quiet(0xA11) };
+    for name in all_names() {
+        let s = by_name(name).unwrap();
+        let obj = FaultyObjective::new(Arc::clone(&inner), plan.clone());
+        let mut rng = Rng::new(3);
+        let trace = s.run(&obj, 15, &mut rng);
+        assert!(trace.len() <= 15, "{name} overran its budget");
+        assert!(trace.best().is_none(), "{name} reported a best with no valid evaluation");
+    }
+}
+
+#[test]
+fn every_strategy_survives_an_all_persistent_invalid_objective() {
+    // Same soak for persistent failures: a table where every config
+    // fails to compile.
+    use ktbo::space::{Param, SearchSpace};
+    let vals: Vec<i64> = (0..12).collect();
+    let space = SearchSpace::build("dead", vec![Param::ints("x", &vals), Param::ints("y", &vals)], &[]);
+    let table = (0..space.len()).map(|_| ktbo::objective::Eval::CompileError).collect();
+    let obj = ktbo::objective::TableObjective::new(space, table);
+    for name in all_names() {
+        let s = by_name(name).unwrap();
+        let mut rng = Rng::new(4);
+        let trace = s.run(&obj, 15, &mut rng);
+        assert!(trace.len() <= 15, "{name} overran its budget");
+        assert!(trace.best().is_none(), "{name} reported a best on an all-invalid table");
+    }
+}
+
+#[test]
+fn bo_under_fault_injection_survives_thread_and_shard_sweep() {
+    // Determinism soak: a fixed fault plan must yield one evaluation
+    // sequence — injected faults included — for every (shard, thread)
+    // configuration of the BO engine, since fault decisions are pure
+    // hashes of (plan seed, index, attempt).
+    use ktbo::bo::{BoConfig, BoStrategy};
+    use ktbo::objective::faulty::{FaultPlan, FaultyObjective};
+    use ktbo::strategies::Strategy;
+    let inner = soak_table(24);
+    let plan = FaultPlan {
+        transient_rate: 0.25,
+        hang_rate: 0.1,
+        flaky_rate: 0.2,
+        flaky_sigma: 0.5,
+        ..FaultPlan::quiet(0xF417)
+    };
+    let seq = |shard_len: usize, threads: usize| -> Vec<(usize, ktbo::objective::Eval)> {
+        let mut cfg = BoConfig::advanced_multi();
+        cfg.shard_len = shard_len;
+        cfg.threads = threads;
+        let s = BoStrategy::new("advanced_multi", cfg);
+        // A fresh injector per run: its only state is per-index attempt
+        // counters, which replay identically for identical runs.
+        let obj = FaultyObjective::new(Arc::clone(&inner), plan.clone());
+        let mut rng = Rng::new(20210601);
+        s.run(&obj, 45, &mut rng).records
+    };
+    let reference = seq(1 << 30, 1);
+    assert!(
+        reference.iter().any(|(_, e)| !e.is_valid()),
+        "the plan must actually inject faults for this test to mean anything"
+    );
+    for &(sl, th) in &[(0, 8), (64, 2)] {
+        assert_eq!(seq(sl, th), reference, "diverged at shard_len={sl} threads={th}");
+    }
 }

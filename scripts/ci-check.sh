@@ -42,7 +42,7 @@ fi
 step "smoke bench (gp_hotpath + space_build + surrogate_fit)"
 scripts/bench.sh --smoke
 
-step "smoke sweep (orchestrator; includes the bo_rf surrogate cell)"
+step "smoke sweep (orchestrator; bo_rf surrogate cell + faulted sa cells)"
 cargo run --release -p ktbo -- sweep --smoke --fresh --out results
 
 step "smoke sweep on a JSON-defined space"
@@ -58,6 +58,11 @@ test -s results/SWEEP_smoke.results.jsonl
 grep -q '"type":"outcome"' results/SWEEP_smoke.results.jsonl
 # The non-GP surrogate path must be exercised on every push.
 grep -q '"strategy":"bo_rf"' results/SWEEP_smoke.results.jsonl
+# The fault-injection + resilience layers must be exercised on every
+# push: sa cells run under examples/faults/smoke.json and carry a
+# fault-accounting block, and still aggregate to an outcome.
+grep -q '"faults"' results/SWEEP_smoke.jsonl
+grep -q '"strategy":"simulated_annealing"' results/SWEEP_smoke.results.jsonl
 test -s results/SWEEP_smoke-space.results.jsonl
 
 printf '\nci-check: all green\n'
