@@ -1,0 +1,67 @@
+//! Micro-benchmark of per-suggestion session latency (custom harness —
+//! no criterion in the offline vendor set).
+//!
+//! Scenarios: random, mls, and the stateful ei driver run to budget over
+//! the cheapest table objective, (a) as an in-process `Session::step`
+//! loop — the pure engine cost — and (b) through the serve daemon's
+//! `ask`/`tell` JSON request path via `TuningServer::handle_line` — the
+//! full per-suggestion daemon overhead without socket noise. Results are
+//! written to `BENCH_session_step.json` at the repo root so the perf
+//! trajectory is tracked across PRs (see EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench session_step` (or `scripts/bench.sh`).
+//! Flags: `--smoke` (tiny grid), `--out PATH` (JSON destination).
+//!
+//! The timing logic lives in `ktbo::harness::session_bench`, which the
+//! test suite also exercises — this binary cannot silently rot.
+
+use ktbo::harness::session_bench::{run_scenario, scenario_grid, to_json};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    // Smoke runs must never clobber the tracked full-grid trajectory file.
+    let default_name =
+        if smoke { "BENCH_session_step.smoke.json" } else { "BENCH_session_step.json" };
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| format!("{}/../{default_name}", env!("CARGO_MANIFEST_DIR")));
+
+    println!("== session_step: owned-Session per-evaluation latency, engine vs daemon ==");
+    println!(
+        "{:<12} {:<10} {:>8} {:>12} {:>14} {:>14}",
+        "mode", "strategy", "budget", "evaluations", "ns/step", "steps/s"
+    );
+    let mut records = Vec::new();
+    for sc in scenario_grid(smoke) {
+        let r = run_scenario(&sc);
+        println!(
+            "{:<12} {:<10} {:>8} {:>12} {:>14.0} {:>14.0}",
+            sc.mode, sc.strategy, sc.budget, r.evaluations, r.ns_per_step, r.steps_per_s
+        );
+        records.push(r);
+    }
+
+    // Overhead summary: served vs in-process per (strategy, budget).
+    for base in records.iter().filter(|r| r.scenario.mode == "inprocess") {
+        if let Some(served) = records.iter().find(|r| {
+            r.scenario.mode == "served"
+                && r.scenario.strategy == base.scenario.strategy
+                && r.scenario.budget == base.scenario.budget
+        }) {
+            println!(
+                "daemon overhead {:<10}: {:.2}x ({:.0} -> {:.0} ns/step)",
+                base.scenario.strategy,
+                served.ns_per_step / base.ns_per_step.max(1e-12),
+                base.ns_per_step,
+                served.ns_per_step
+            );
+        }
+    }
+
+    let doc = to_json(&records).render_pretty();
+    std::fs::write(&out, &doc).expect("write bench json");
+    println!("wrote {out}");
+}

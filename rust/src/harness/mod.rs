@@ -8,6 +8,7 @@ pub mod hypertune;
 pub mod metrics;
 pub mod orchestrator;
 pub mod runner;
+pub mod session_bench;
 pub mod space_bench;
 pub mod surrogate_bench;
 

@@ -254,6 +254,11 @@ impl SweepLog {
     }
 }
 
+/// Progress-file schema version stamped into every meta record. Files
+/// written before versioning (no `schema_version` key) still load; a
+/// file stamped with a *different* version is refused.
+pub const SWEEP_SCHEMA_VERSION: u64 = 1;
+
 fn hex_u64(x: u64) -> String {
     format!("0x{x:016x}")
 }
@@ -269,6 +274,7 @@ fn meta_record(spec: &SweepSpec) -> Json {
     };
     Json::obj()
         .set("type", "meta")
+        .set("schema_version", SWEEP_SCHEMA_VERSION as usize)
         .set("tag", spec.tag.as_str())
         .set("seed", hex_u64(spec.seed))
         .set("budget", spec.budget)
@@ -344,6 +350,18 @@ fn load_progress(text: &str, path: &Path, spec: &SweepSpec) -> Result<HashMap<Ce
         };
         match record.get("type").and_then(Json::as_str) {
             Some("meta") => {
+                // Version-less meta records (pre-versioning sweeps) are
+                // legacy-compatible; an explicit mismatch is refused.
+                if let Some(v) = record.get("schema_version").and_then(Json::as_f64) {
+                    if v as u64 != SWEEP_SCHEMA_VERSION {
+                        return Err(format!(
+                            "{} was written with sweep schema_version {} but this build \
+                             writes {SWEEP_SCHEMA_VERSION}; pass --fresh to discard it",
+                            path.display(),
+                            v as u64
+                        ));
+                    }
+                }
                 let seed = record.get("seed").and_then(Json::as_str).and_then(parse_hex_u64);
                 let budget = record.get("budget").and_then(Json::as_f64);
                 let scale = record.get("repeat_scale").and_then(Json::as_f64);
@@ -611,8 +629,8 @@ pub fn orchestrate_comparison(
 }
 
 /// Step-level orchestration of one objective's comparison matrix: every
-/// (strategy, repeat) cell is an ask/tell
-/// [`StepSession`](crate::strategies::driver::StepSession) and all cells
+/// (strategy, repeat) cell is an owned ask/tell
+/// [`Session`](crate::strategies::driver::Session) and all cells
 /// advance in lockstep, one drive-loop step per scheduling round — the
 /// finest interleaving the stepwise Strategy API allows (whole-run
 /// interleaving is [`orchestrate_comparison`]). Because each session owns
@@ -620,8 +638,10 @@ pub fn orchestrate_comparison(
 /// any cell's trace: outcomes are bit-identical to the whole-run path
 /// (asserted below), while a scheduler gains per-step control — progress
 /// reporting, fair sharing, and mid-cell checkpoint/resume via
-/// [`checkpoint`](crate::strategies::driver::StepSession::checkpoint) /
-/// [`resume`](crate::strategies::driver::StepSession::resume).
+/// [`checkpoint`](crate::strategies::driver::Session::checkpoint) /
+/// [`resume`](crate::strategies::driver::Session::resume). The serve
+/// daemon ([`crate::serve`]) multiplexes the same owned sessions in
+/// external-evaluation mode.
 pub fn orchestrate_comparison_stepwise(
     obj: &Arc<TableObjective>,
     obj_id: &str,
@@ -630,11 +650,11 @@ pub fn orchestrate_comparison_stepwise(
     repeat_scale: f64,
     base_seed: u64,
 ) -> Vec<StrategyOutcome> {
-    use crate::strategies::driver::{interleave, FevalBudget, StepSession};
+    use crate::strategies::driver::{interleave, FevalBudget, Session};
 
     let reps: Vec<usize> = strategies.iter().map(|s| repeats_for(s, repeat_scale)).collect();
     let max_reps = reps.iter().copied().max().unwrap_or(0);
-    let objective: &dyn Objective = obj.as_ref();
+    let objective: Arc<dyn Objective> = Arc::clone(obj) as Arc<dyn Objective>;
     // Every cell's driver is built (and held) up front — a BO cell owns
     // its surrogate state for the whole interleave. Register
     // full-machine harness workers so auto-threaded drivers size their
@@ -646,16 +666,16 @@ pub fn orchestrate_comparison_stepwise(
         .iter()
         .map(|s| by_name(s).unwrap_or_else(|| panic!("{}", unknown_strategy_message(s))))
         .collect();
-    let mut sessions: Vec<StepSession> = Vec::new();
+    let mut sessions: Vec<Session> = Vec::new();
     let mut coords: Vec<usize> = Vec::new();
     // Repeat-major, mirroring build_session_jobs' deterministic order.
     for rep in 0..max_reps {
         for (si, strategy) in strategies.iter().enumerate() {
             if rep < reps[si] {
                 let s = &impls[si];
-                sessions.push(StepSession::new(
+                sessions.push(Session::new(
                     s.driver(obj.space()),
-                    objective,
+                    Arc::clone(&objective),
                     Box::new(FevalBudget::new(budget)),
                     cell_rng(base_seed, obj_id, strategy, rep),
                 ));
@@ -921,7 +941,8 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         })
         .collect();
 
-    let (cache_hits, cache_misses) = cache.stats();
+    let cache_stats = cache.stats();
+    let (cache_hits, cache_misses) = (cache_stats.hits, cache_stats.misses);
     let wall_s = t0.elapsed().as_secs_f64();
 
     // Machine-readable aggregates (rewritten whole each run).
@@ -989,11 +1010,23 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         summary,
         "eval cache: {}",
         if spec.cache {
-            format!("{cache_hits} hits / {cache_misses} misses")
+            format!(
+                "{cache_hits} hits / {cache_misses} misses / {} evictions",
+                cache_stats.evictions
+            )
         } else {
             "disabled".to_string()
         }
     );
+    if spec.cache {
+        for (obj_id, s) in cache.objective_stats() {
+            let _ = writeln!(
+                summary,
+                "  {obj_id}: {} hits / {} misses / {} evictions",
+                s.hits, s.misses, s.evictions
+            );
+        }
+    }
     for ((kernel, gpu), outs) in &outcomes {
         let _ = writeln!(summary, "{kernel} @ {gpu}:");
         for o in outs {
@@ -1176,9 +1209,10 @@ mod tests {
         // session from the snapshot, finish it — the final trace must be
         // bit-identical to the uninterrupted run. Covers a batch driver
         // (mls) and the stateful BO driver (ei).
-        use crate::strategies::driver::{FevalBudget, StepSession};
+        use crate::strategies::driver::{FevalBudget, Session};
         let dev = Device::a100();
         let obj = objective_for("adding", &dev);
+        let objective: Arc<dyn Objective> = Arc::clone(&obj) as Arc<dyn Objective>;
         let oid = objective_id("adding", dev.name);
         for strategy in ["mls", "ei"] {
             let s = by_name(strategy).unwrap();
@@ -1186,9 +1220,9 @@ mod tests {
             let make_rng = || cell_rng(7, &oid, strategy, 0);
 
             let full = {
-                let mut sess = StepSession::new(
+                let mut sess = Session::new(
                     s.driver(obj.space()),
-                    obj.as_ref() as &dyn Objective,
+                    Arc::clone(&objective),
                     Box::new(FevalBudget::new(budget)),
                     make_rng(),
                 );
@@ -1197,9 +1231,9 @@ mod tests {
             };
 
             for interrupt_after in [9usize, 30] {
-                let mut first = StepSession::new(
+                let mut first = Session::new(
                     s.driver(obj.space()),
-                    obj.as_ref() as &dyn Objective,
+                    Arc::clone(&objective),
                     Box::new(FevalBudget::new(budget)),
                     make_rng(),
                 );
@@ -1210,9 +1244,9 @@ mod tests {
                 }
                 let ckpt = first.checkpoint();
                 assert!(ckpt.len() < full.len(), "{strategy}: interrupt landed past the end");
-                let mut resumed = StepSession::resume(
+                let mut resumed = Session::resume(
                     s.driver(obj.space()),
-                    obj.as_ref() as &dyn Objective,
+                    Arc::clone(&objective),
                     Box::new(FevalBudget::new(budget)),
                     make_rng(),
                     ckpt,
@@ -1278,6 +1312,39 @@ mod tests {
         no_meta.fresh = false;
         let err = sweep(&no_meta).unwrap_err();
         assert!(err.contains("meta"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn mismatched_progress_schema_version_is_refused_and_legacy_accepted() {
+        let spec = small_spec("ktbo-orch-schema", "schema");
+        sweep(&spec).unwrap();
+        let path = spec.progress_path();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            text.lines().next().unwrap().contains("\"schema_version\""),
+            "meta record must carry a schema version"
+        );
+
+        // A future schema version must be refused with a clear message.
+        let bumped = text.replacen(
+            &format!("\"schema_version\":{SWEEP_SCHEMA_VERSION}"),
+            "\"schema_version\":99",
+            1,
+        );
+        assert_ne!(bumped, text, "replacen must have found the version field");
+        std::fs::write(&path, &bumped).unwrap();
+        let mut resume = spec.clone();
+        resume.fresh = false;
+        let err = sweep(&resume).unwrap_err();
+        assert!(err.contains("schema_version 99"), "unexpected error: {err}");
+        assert!(err.contains("--fresh"), "must tell the user the way out: {err}");
+
+        // A version-less legacy meta line still resumes cleanly.
+        let legacy = text.replacen(&format!("\"schema_version\":{SWEEP_SCHEMA_VERSION},"), "", 1);
+        assert_ne!(legacy, text);
+        std::fs::write(&path, &legacy).unwrap();
+        let report = sweep(&resume).unwrap();
+        assert_eq!((report.resumed_cells, report.ran_cells), (6, 0));
     }
 
     #[test]
@@ -1526,13 +1593,14 @@ mod tests {
     /// — replays identically through the resume.
     #[test]
     fn mid_cell_checkpoint_resume_survives_injected_hangs() {
-        use crate::strategies::driver::{FevalBudget, StepSession};
+        use crate::strategies::driver::{FevalBudget, Session};
         let dev = Device::a100();
         let table = objective_for("adding", &dev);
         let oid = objective_id("adding", dev.name);
         let plan = FaultPlan { hang_rate: 0.25, transient_rate: 0.15, ..FaultPlan::quiet(0xAB1E) };
         let faulted = || {
-            FaultyObjective::new(Arc::clone(&table) as Arc<dyn Objective>, plan.clone())
+            Arc::new(FaultyObjective::new(Arc::clone(&table) as Arc<dyn Objective>, plan.clone()))
+                as Arc<dyn Objective>
         };
         for strategy in ["mls", "ei"] {
             let s = by_name(strategy).unwrap();
@@ -1540,10 +1608,9 @@ mod tests {
             let make_rng = || cell_rng(7, &oid, strategy, 0);
 
             let full = {
-                let obj = faulted();
-                let mut sess = StepSession::new(
+                let mut sess = Session::new(
                     s.driver(table.space()),
-                    &obj as &dyn Objective,
+                    faulted(),
                     Box::new(FevalBudget::new(budget)),
                     make_rng(),
                 );
@@ -1556,10 +1623,9 @@ mod tests {
             );
 
             let ckpt = {
-                let obj = faulted();
-                let mut first = StepSession::new(
+                let mut first = Session::new(
                     s.driver(table.space()),
-                    &obj as &dyn Objective,
+                    faulted(),
                     Box::new(FevalBudget::new(budget)),
                     make_rng(),
                 );
@@ -1572,10 +1638,9 @@ mod tests {
             };
             assert!(ckpt.len() < full.len(), "{strategy}: interrupt landed past the end");
 
-            let obj = faulted();
-            let mut resumed = StepSession::resume(
+            let mut resumed = Session::resume(
                 s.driver(table.space()),
-                &obj as &dyn Objective,
+                faulted(),
                 Box::new(FevalBudget::new(budget)),
                 make_rng(),
                 ckpt,

@@ -1,0 +1,202 @@
+//! Reusable core of the `session_step` bench: per-step latency of the
+//! owned [`Session`] engine, in-process vs through the serve daemon's
+//! request path, with machine-readable output
+//! (`BENCH_session_step.json` at the repo root).
+//!
+//! The bench binary (`benches/session_step.rs`) is a thin CLI over these
+//! functions, and the test suite runs a tiny smoke grid through the same
+//! code (`session_step_bench_smoke` in `tests/integration.rs`) — so the
+//! bench logic compiles and runs on every `cargo test` and can never
+//! silently rot. Two modes per strategy:
+//!
+//! - **inprocess** — `Session::step` loops over a table objective: the
+//!   pure engine cost (driver ask/tell, memo, budget, trace);
+//! - **served** — the same run driven through
+//!   [`TuningServer::handle_line`] as `ask`/`tell` JSON lines, measuring
+//!   the daemon's full per-suggestion overhead (parse, session lookup,
+//!   response render) without socket noise.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::gpusim::device::Device;
+use crate::harness::figures::objective_for;
+use crate::objective::Objective;
+use crate::serve::{ServeOpts, TuningServer};
+use crate::strategies::registry::by_name;
+use crate::strategies::{FevalBudget, Session};
+use crate::util::json::Json;
+use crate::util::jsonparse;
+use crate::util::rng::Rng;
+
+/// One latency scenario: `strategy` run to a budget of `budget`
+/// evaluations, `iters` times, in `mode` ("inprocess" or "served").
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub mode: &'static str,
+    pub strategy: &'static str,
+    pub budget: usize,
+    pub iters: usize,
+}
+
+/// Timing outcome of one scenario.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub scenario: Scenario,
+    /// Total evaluations timed across all iterations.
+    pub evaluations: usize,
+    pub ns_per_step: f64,
+    pub steps_per_s: f64,
+}
+
+/// All scenarios share the cheapest (kernel, GPU) objective so the table
+/// lookup contributes nothing and the engine/daemon overhead dominates.
+fn bench_objective() -> Arc<dyn Objective> {
+    objective_for("adding", &Device::a100()) as Arc<dyn Objective>
+}
+
+fn run_inprocess(sc: &Scenario) -> (usize, f64) {
+    let obj = bench_objective();
+    let strategy = by_name(sc.strategy).expect("bench strategy registered");
+    let mut evals = 0usize;
+    let t0 = Instant::now();
+    for rep in 0..sc.iters {
+        let mut session = Session::new(
+            strategy.driver(obj.space()),
+            Arc::clone(&obj),
+            Box::new(FevalBudget::new(sc.budget)),
+            Rng::new(0xBE7C + rep as u64),
+        );
+        while session.step() {}
+        evals += session.trace().len();
+    }
+    (evals, t0.elapsed().as_secs_f64())
+}
+
+fn run_served(sc: &Scenario) -> (usize, f64) {
+    let obj = bench_objective();
+    let mut eval_rng = Rng::new(1);
+    let mut evals = 0usize;
+    let t0 = Instant::now();
+    for rep in 0..sc.iters {
+        // Fresh server per repetition: a shared cache would satisfy later
+        // repetitions' suggestions without asking the client, so the
+        // request path under measurement would quietly shrink.
+        let server = TuningServer::new(ServeOpts::default()).expect("in-memory server");
+        let name = format!("bench-{rep}");
+        let create = format!(
+            r#"{{"cmd":"create","session":"{name}","config":{{"kernel":"adding","gpu":"a100","strategy":"{}","budget":{},"seed":"0x{:x}"}}}}"#,
+            sc.strategy,
+            sc.budget,
+            0xBE7C + rep as u64
+        );
+        let resp = jsonparse::parse(&server.handle_line(&create)).expect("valid response");
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "create failed: {resp:?}");
+        let ask = format!(r#"{{"cmd":"ask","session":"{name}"}}"#);
+        loop {
+            let a = jsonparse::parse(&server.handle_line(&ask)).expect("valid response");
+            match a.get("status").and_then(Json::as_str) {
+                Some("eval") => {
+                    let idx =
+                        a.get("config_index").and_then(Json::as_f64).expect("config_index") as usize;
+                    let tell = match obj.evaluate(idx, &mut eval_rng).value() {
+                        Some(t) => format!(
+                            r#"{{"cmd":"tell","session":"{name}","config_index":{idx},"time":{t}}}"#
+                        ),
+                        None => format!(
+                            r#"{{"cmd":"tell","session":"{name}","config_index":{idx},"invalid":"compile"}}"#
+                        ),
+                    };
+                    server.handle_line(&tell);
+                    evals += 1;
+                }
+                _ => break,
+            }
+        }
+        server.handle_line(&format!(r#"{{"cmd":"close","session":"{name}"}}"#));
+    }
+    (evals, t0.elapsed().as_secs_f64())
+}
+
+/// Run one scenario and report per-step latency.
+pub fn run_scenario(sc: &Scenario) -> Record {
+    let (evaluations, total_s) = match sc.mode {
+        "inprocess" => run_inprocess(sc),
+        "served" => run_served(sc),
+        other => panic!("unknown bench mode '{other}'"),
+    };
+    let per = total_s / evaluations.max(1) as f64;
+    Record {
+        scenario: sc.clone(),
+        evaluations,
+        ns_per_step: per * 1e9,
+        steps_per_s: if per > 0.0 { 1.0 / per } else { f64::INFINITY },
+    }
+}
+
+/// The bench grid: cheap random, batch mls, and the stateful BO driver,
+/// each in-process and served.
+pub fn scenario_grid(smoke: bool) -> Vec<Scenario> {
+    if smoke {
+        return vec![
+            Scenario { mode: "inprocess", strategy: "random", budget: 40, iters: 2 },
+            Scenario { mode: "served", strategy: "random", budget: 40, iters: 2 },
+            Scenario { mode: "inprocess", strategy: "ei", budget: 12, iters: 1 },
+        ];
+    }
+    let mut grid = Vec::new();
+    for mode in ["inprocess", "served"] {
+        grid.push(Scenario { mode, strategy: "random", budget: 200, iters: 10 });
+        grid.push(Scenario { mode, strategy: "mls", budget: 200, iters: 10 });
+        grid.push(Scenario { mode, strategy: "ei", budget: 60, iters: 3 });
+    }
+    grid
+}
+
+/// Render records as the `BENCH_session_step.json` document.
+pub fn to_json(records: &[Record]) -> Json {
+    let rows: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("mode", r.scenario.mode)
+                .set("strategy", r.scenario.strategy)
+                .set("budget", r.scenario.budget)
+                .set("evaluations", r.evaluations)
+                .set("ns_per_step", r.ns_per_step)
+                .set("steps_per_s", r.steps_per_s)
+        })
+        .collect();
+    Json::obj()
+        .set("bench", "session_step")
+        .set("unit", "ns_per_step")
+        .set(
+            "description",
+            "owned-Session per-evaluation latency: in-process step loop vs the serve daemon's ask/tell request path",
+        )
+        .set("records", Json::Arr(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The end-to-end smoke of the grid + JSON serialization lives in
+    // tests/integration.rs (session_step_bench_smoke) — one copy only.
+
+    /// The served path must record exactly the budgeted evaluations —
+    /// anything else means the protocol loop dropped or double-counted.
+    #[test]
+    fn served_mode_counts_budgeted_evaluations() {
+        let r = run_scenario(&Scenario { mode: "served", strategy: "random", budget: 7, iters: 2 });
+        assert_eq!(r.evaluations, 14);
+        assert!(r.ns_per_step > 0.0);
+    }
+
+    #[test]
+    fn inprocess_mode_counts_budgeted_evaluations() {
+        let r =
+            run_scenario(&Scenario { mode: "inprocess", strategy: "random", budget: 7, iters: 2 });
+        assert_eq!(r.evaluations, 14);
+    }
+}

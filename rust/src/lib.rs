@@ -27,6 +27,7 @@ pub mod objective;
 /// default build ships without it (see Cargo.toml `xla-runtime`).
 #[cfg(feature = "xla-runtime")]
 pub mod runtime;
+pub mod serve;
 pub mod space;
 pub mod strategies;
 /// Pluggable surrogate-model subsystem: the batch `Model` trait with GP,

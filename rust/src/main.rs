@@ -16,8 +16,9 @@ use ktbo::gpusim::device::Device;
 use ktbo::harness::figures as figs;
 use ktbo::harness::Options;
 use ktbo::objective::Objective;
+use ktbo::serve::SessionConfig;
 use ktbo::strategies::registry::{all_names, by_name};
-use ktbo::strategies::Strategy;
+use ktbo::strategies::{FevalBudget, Session, Strategy};
 use ktbo::util::cli::Args;
 use ktbo::util::rng::Rng;
 
@@ -28,6 +29,8 @@ fn main() {
         "spaces" => cmd_spaces(&args),
         "tune" => cmd_tune(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "experiment" => cmd_experiment(&args),
         "hypertune" => cmd_hypertune(&args),
         _ => usage(),
@@ -47,6 +50,10 @@ fn usage() {
     println!("             [--out DIR] [--tag NAME] [--no-cache] [--fresh] [--space FILE.json]");
     println!("             [--eval-timeout-ms N] [--max-retries N]");
     println!("             [--fault-plan FILE.json] [--fault-strategies a,b]   deterministic fault injection");
+    println!("  ktbo serve [--listen ADDR:PORT] [--cache-file FILE.jsonl] [--cache-capacity N]");
+    println!("             [--checkpoint-dir DIR]   tuning daemon (JSON lines over TCP)");
+    println!("  ktbo client [--addr ADDR:PORT] [--sessions N] [--kernel K] [--gpu G] [--resume]");
+    println!("             [--strategy NAME] [--budget N] [--seed N] [--shutdown]");
     println!("  ktbo experiment <fig1..fig7|table1..table3|headline|ablation|extended|noise|all>");
     println!("  ktbo hypertune [--repeat-scale F] [--top N]");
     println!("                  [--repeat-scale F] [--seed N] [--threads N] [--out DIR]");
@@ -154,16 +161,12 @@ fn cmd_sweep(args: &Args) {
         space: args.get("space").map(str::to_string),
         fault_plan,
         fault_strategies,
-        eval_timeout_ms: match args.get("eval-timeout-ms") {
-            Some(v) => match v.parse::<u64>() {
-                Ok(ms) => Some(ms),
-                Err(_) => {
-                    eprintln!("--eval-timeout-ms must be an integer, got '{v}'");
-                    std::process::exit(2);
-                }
-            },
-            None => base.eval_timeout_ms,
-        },
+        eval_timeout_ms: SessionConfig::parse_eval_timeout(args)
+            .unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2);
+            })
+            .or(base.eval_timeout_ms),
         max_retries: args.usize_or("max-retries", base.max_retries as usize) as u32,
     };
     match sweep(&spec) {
@@ -203,133 +206,172 @@ fn cmd_spaces(args: &Args) {
 fn cmd_tune(args: &Args) {
     let kernel = args.positionals.get(1).map(String::as_str).unwrap_or("gemm");
     let gpu = args.positionals.get(2).map(String::as_str).unwrap_or("titanx");
-    let Some(dev) = Device::by_name(gpu) else {
-        eprintln!("unknown GPU '{gpu}'");
+    // One SessionConfig is the whole run description — the same record
+    // `ktbo client` sends over the wire and checkpoints embed.
+    let cfg = SessionConfig::from_args(args, kernel, gpu).unwrap_or_else(|e| {
+        eprintln!("{e}");
         std::process::exit(2);
-    };
-    let strategy_name = args.str_or("strategy", "advanced_multi");
-    let budget = args.usize_or("budget", 220);
-    let seed = args.u64_or("seed", 42);
+    });
+    let dev = cfg.device();
 
     // Simulation-mode cache file takes precedence over the built-in
     // simulator (Kernel Tuner cache interchange); `--space` replaces the
     // kernel's built-in space with a declarative SpaceSpec JSON file and
     // evaluates it through the same analytical model.
-    let obj: std::sync::Arc<ktbo::objective::TableObjective> = match (args.get("cache"), args.get("space")) {
-        (Some(_), Some(_)) => {
+    let built = match args.get("cache") {
+        Some(_) if cfg.space.is_some() => {
             eprintln!("--cache and --space conflict: a cache file already fixes the space");
             std::process::exit(2);
         }
-        (Some(path), None) => {
+        Some(path) => {
             let (o, k, d) = ktbo::objective::cache::load_cache(std::path::Path::new(path))
                 .unwrap_or_else(|e| {
                     eprintln!("failed to load cache: {e}");
                     std::process::exit(2);
                 });
             println!("loaded cache: kernel={k} device={d} ({} configs)", o.space().len());
-            std::sync::Arc::new(o)
+            cfg.wrap_table(std::sync::Arc::new(o))
         }
-        (None, Some(path)) => {
-            let spec = ktbo::space::SpaceSpec::load(std::path::Path::new(path)).unwrap_or_else(|e| {
-                eprintln!("failed to load space spec: {e}");
-                std::process::exit(2);
-            });
-            let Some(k) = ktbo::gpusim::kernels::kernel_by_name(kernel) else {
-                eprintln!("unknown kernel '{kernel}'");
-                std::process::exit(2);
-            };
-            let space = spec.build();
-            println!(
-                "loaded space '{}' from {path}: {} params, {} restricted configs (Cartesian {})",
-                space.name,
-                space.dims(),
-                space.len(),
-                space.cartesian_size
-            );
-            std::sync::Arc::new(ktbo::objective::TableObjective::from_sim(
-                ktbo::gpusim::SimulatedSpace::build_with_space(k.as_ref(), &dev, space),
-            ))
-        }
-        (None, None) => figs::objective_for(kernel, &dev),
-    };
-    let strategy: Box<dyn Strategy> = if args.str_or("backend", "native") == "xla" {
-        build_xla_strategy(args, &strategy_name)
-    } else {
-        match by_name(&strategy_name) {
-            Some(s) => s,
-            None => {
-                eprintln!("{}", ktbo::strategies::registry::unknown_strategy_message(&strategy_name));
-                std::process::exit(2);
+        None => {
+            if let Some(path) = &cfg.space {
+                // Announce the loaded space as before; build_objective
+                // re-reads the (small) spec file.
+                match ktbo::space::SpaceSpec::load(std::path::Path::new(path)) {
+                    Ok(spec) => {
+                        let space = spec.build();
+                        println!(
+                            "loaded space '{}' from {path}: {} params, {} restricted configs (Cartesian {})",
+                            space.name,
+                            space.dims(),
+                            space.len(),
+                            space.cartesian_size
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!("failed to load space spec: {e}");
+                        std::process::exit(2);
+                    }
+                }
             }
+            cfg.build_objective()
         }
-    };
-
-    // Robustness layer: optional deterministic fault injection
-    // (`--fault-plan`) under the resilient evaluator (`--eval-timeout-ms`,
-    // `--max-retries`). With none of the flags set, the objective is
-    // evaluated directly and results are bit-identical to older builds.
-    use ktbo::objective::faulty::{FaultPlan, FaultyObjective};
-    use ktbo::objective::resilient::{ResilienceConfig, ResilientEvaluator};
-    let faulty = args.get("fault-plan").map(|path| {
-        let plan = FaultPlan::load(std::path::Path::new(path)).unwrap_or_else(|e| {
-            eprintln!("failed to load fault plan: {e}");
-            std::process::exit(2);
-        });
-        std::sync::Arc::new(FaultyObjective::new(
-            std::sync::Arc::clone(&obj) as std::sync::Arc<dyn Objective>,
-            plan,
-        ))
+    }
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
     });
-    let eval_obj: std::sync::Arc<dyn Objective> = match &faulty {
-        Some(f) => std::sync::Arc::clone(f) as std::sync::Arc<dyn Objective>,
-        None => std::sync::Arc::clone(&obj) as std::sync::Arc<dyn Objective>,
-    };
-    let res_cfg = ResilienceConfig {
-        deadline: args.get("eval-timeout-ms").map(|v| {
-            std::time::Duration::from_millis(v.parse::<u64>().unwrap_or_else(|_| {
-                eprintln!("--eval-timeout-ms must be an integer, got '{v}'");
-                std::process::exit(2);
-            }))
-        }),
-        max_retries: args.usize_or("max-retries", 0) as u32,
-        ..ResilienceConfig::default()
-    };
-    let resilient = if res_cfg.is_passthrough() {
-        None
+    let strategy: Box<dyn Strategy> = if args.str_or("backend", "native") == "xla" {
+        build_xla_strategy(args, &cfg.strategy)
     } else {
-        Some(std::sync::Arc::new(ResilientEvaluator::new(
-            std::sync::Arc::clone(&eval_obj),
-            res_cfg,
-        )))
-    };
-    let run_obj: std::sync::Arc<dyn Objective> = match &resilient {
-        Some(r) => std::sync::Arc::clone(r) as std::sync::Arc<dyn Objective>,
-        None => eval_obj,
+        by_name(&cfg.strategy).expect("validated strategy name")
     };
 
     let t0 = std::time::Instant::now();
-    let mut rng = Rng::new(seed);
-    let trace = strategy.run(run_obj.as_ref(), budget, &mut rng);
+    let mut session = Session::new(
+        strategy.driver(built.run.space()),
+        std::sync::Arc::clone(&built.run),
+        Box::new(FevalBudget::new(cfg.budget)),
+        Rng::new(cfg.seed),
+    );
+    while session.step() {}
+    let trace = session.into_trace();
     let elapsed = t0.elapsed();
-    if let Some(f) = &faulty {
+    if let Some(f) = &built.faulty {
         println!("faults injected: {}", f.stats().to_json().render());
     }
-    if let Some(r) = &resilient {
+    if let Some(r) = &built.resilient {
         println!("resilience: {}", r.stats().to_json().render());
     }
     match trace.best() {
         Some((idx, val)) => {
-            println!("kernel={kernel} gpu={} strategy={strategy_name}", dev.name);
+            println!("kernel={} gpu={} strategy={}", cfg.kernel, dev.name, cfg.strategy);
             println!(
                 "evaluations={} best={val:.4} global_min={:.4} ratio={:.3} wall={:.2?}",
                 trace.len(),
-                obj.known_minimum().unwrap(),
-                val / obj.known_minimum().unwrap(),
+                built.table.known_minimum().unwrap(),
+                val / built.table.known_minimum().unwrap(),
                 elapsed
             );
-            println!("best config: {}", obj.space().describe(idx));
+            println!("best config: {}", built.table.space().describe(idx));
         }
         None => println!("no valid configuration found in {} evaluations", trace.len()),
+    }
+}
+
+/// `ktbo serve`: the session daemon. JSON lines over TCP; see
+/// `serve::protocol` for the request grammar and README §Serving for an
+/// `nc`-driven example.
+fn cmd_serve(args: &Args) {
+    use ktbo::serve::{ServeOpts, TuningServer};
+    let listen = args.str_or("listen", "127.0.0.1:4276");
+    let opts = ServeOpts {
+        cache_path: args.get("cache-file").map(std::path::PathBuf::from),
+        cache_capacity: args.get("cache-capacity").map(|v| {
+            v.parse::<usize>().unwrap_or_else(|_| {
+                eprintln!("--cache-capacity must be an integer, got '{v}'");
+                std::process::exit(2);
+            })
+        }),
+        checkpoint_dir: args.get("checkpoint-dir").map(std::path::PathBuf::from),
+    };
+    let server = std::sync::Arc::new(TuningServer::new(opts).unwrap_or_else(|e| {
+        eprintln!("serve failed to start: {e}");
+        std::process::exit(2);
+    }));
+    let listener = std::net::TcpListener::bind(&listen).unwrap_or_else(|e| {
+        eprintln!("cannot listen on {listen}: {e}");
+        std::process::exit(2);
+    });
+    println!("ktbo serve listening on {listen}");
+    if let Err(e) = server.serve_tcp(listener) {
+        eprintln!("serve failed: {e}");
+        std::process::exit(1);
+    }
+    println!("ktbo serve shut down");
+}
+
+/// `ktbo client`: scripted client driving N sessions to completion
+/// against a running daemon, evaluating suggestions locally (simulation
+/// mode). In simulation mode the result is bit-identical to `ktbo tune`
+/// with the same kernel/gpu/strategy/budget/seed.
+fn cmd_client(args: &Args) {
+    use ktbo::serve::client::{run_session, TcpLine};
+    let addr = args.str_or("addr", "127.0.0.1:4276");
+    let kernel = args.str_or("kernel", "gemm");
+    let gpu = args.str_or("gpu", "titanx");
+    let cfg = SessionConfig::from_args(args, &kernel, &gpu).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let mut transport = TcpLine::connect(&addr).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let resume = args.flag("resume");
+    for i in 0..args.usize_or("sessions", 1) {
+        let name = args.str_or("name", "cli");
+        let name = if i == 0 && args.usize_or("sessions", 1) == 1 {
+            name
+        } else {
+            format!("{name}-{i}")
+        };
+        match run_session(&mut transport, &name, &cfg, resume) {
+            Ok(out) => {
+                let best = out.best.map_or("none".to_string(), |v| format!("{v:.4}"));
+                println!(
+                    "session {name}: kernel={} gpu={} strategy={} evaluations={} best={best}",
+                    cfg.kernel, cfg.gpu, cfg.strategy, out.evaluations
+                );
+            }
+            Err(e) => {
+                eprintln!("session {name} failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if args.flag("shutdown") {
+        use ktbo::serve::client::LineTransport;
+        let _ = transport.round_trip(r#"{"cmd":"shutdown"}"#);
     }
 }
 

@@ -1,4 +1,5 @@
-//! Cross-session evaluation cache for the sweep orchestrator.
+//! Cross-session evaluation cache: the sweep orchestrator's and the
+//! serve daemon's shared (objective, config) → evaluation store.
 //!
 //! A sweep runs every (kernel, device, strategy, repeat) cell as its own
 //! session, and many sessions share one backing objective. For objectives
@@ -7,18 +8,42 @@
 //! each configuration once *per objective* instead of once per session is
 //! the difference between an O(cells · budget) and an O(unique configs)
 //! evaluation bill. The cache is keyed by (objective id, config index)
-//! and shared across every session of the sweep.
+//! and shared across every session of a sweep — or, for a `ktbo serve`
+//! daemon, across every session of the daemon's lifetime *and across
+//! daemon restarts* when backed by a journal file.
 //!
-//! Soundness: a cache hit consumes **no randomness**, so wrapping is only
+//! Three promotion layers over the original in-memory map:
+//!
+//! - **Bounded (LRU)** — an optional entry capacity, enforced per shard
+//!   (total occupancy stays within one shard-rounding of the cap:
+//!   `≤ SHARDS · ⌈capacity/SHARDS⌉`). Every lookup refreshes the entry's
+//!   clock stamp; inserting over the cap evicts the stalest entry in the
+//!   shard and counts an eviction.
+//! - **Persistent (JSONL journal)** — [`EvalCache::persistent`] replays
+//!   an append-only journal on open and appends every insert (flushed,
+//!   best-effort: an unwritable journal degrades to in-memory, it never
+//!   fails tuning). The file starts with a versioned meta line; files
+//!   without one (legacy) load fine, a *mismatched* version is refused.
+//!   [`EvalCache::compact`] rewrites the journal from live entries,
+//!   dropping lines evictions made stale.
+//! - **Per-objective stats** — [`EvalCache::stats`] totals plus
+//!   [`EvalCache::objective_stats`] hit/miss/eviction breakdown per
+//!   registered objective id, which is how the serve daemon reports
+//!   cache effectiveness per kernel in its `status` response.
+//!
+//! Soundness: a cache hit consumes **no randomness**, so sharing is only
 //! correct for objectives whose `evaluate` ignores its `Rng` (tables,
 //! fixed-noise-seed replays). An rng-dependent objective behind this
-//! wrapper would observe a different noise stream depending on cache
+//! cache would observe a different noise stream depending on cache
 //! hit/miss order — the orchestrator therefore only wraps
 //! [`TableObjective`](crate::objective::TableObjective)-backed sessions.
 //!
 //! Concurrency: the map is sharded by (objective key, config index) so
-//! concurrent sessions rarely contend on one lock; hit/miss counters are
-//! relaxed atomics (statistics only, never control flow).
+//! concurrent sessions rarely contend on one lock; counters are relaxed
+//! atomics (statistics only, never control flow). When a journal is
+//! attached, writers take the journal lock *before* the shard lock (the
+//! same order `compact` uses), so persistence serializes inserts but can
+//! never deadlock against compaction.
 //!
 //! Cost model: for a plain [`TableObjective`] a lookup (lock + hash probe)
 //! is *more* work than the array read it avoids — the cache earns its keep
@@ -30,33 +55,229 @@
 //! drops it entirely.
 
 use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 
 use crate::objective::{Eval, Objective};
 use crate::space::SearchSpace;
+use crate::util::json::Json;
+use crate::util::jsonparse;
 use crate::util::rng::Rng;
 
 const SHARDS: usize = 64;
 
-/// Shared (objective, config) → evaluation store.
+/// Journal schema version written to (and checked against) the meta line
+/// of a persistent cache file. Version-less files are accepted as legacy.
+pub const CACHE_SCHEMA_VERSION: u64 = 1;
+
+/// Hit/miss/eviction counters, global or per objective id.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+#[derive(Default)]
+struct KeyCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl KeyCounters {
+    fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Registration record for one objective id (index in the registry = its
+/// numeric key).
+struct KeyInfo {
+    id: String,
+    counters: Arc<KeyCounters>,
+}
+
+/// One cached evaluation plus its LRU clock stamp.
+#[derive(Clone, Copy)]
+struct Entry {
+    eval: Eval,
+    stamp: u64,
+}
+
+/// Shared (objective, config) → evaluation store. See the module docs.
 pub struct EvalCache {
     /// Stable objective-id → numeric key registry (collision-free by
     /// construction, unlike hashing the id).
     keys: Mutex<HashMap<String, u64>>,
-    shards: Vec<Mutex<HashMap<(u64, usize), Eval>>>,
+    /// Per-key id + counters, indexed by numeric key; grown under the
+    /// `keys` lock, read lock-free-ish everywhere else.
+    registry: RwLock<Vec<KeyInfo>>,
+    shards: Vec<Mutex<HashMap<(u64, usize), Entry>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    /// LRU clock, bumped on every touch.
+    clock: AtomicU64,
+    /// Per-shard entry cap (`⌈capacity/SHARDS⌉`), `None` = unbounded.
+    shard_cap: Option<usize>,
+    /// Total capacity as requested (for reporting; enforcement is the
+    /// per-shard cap).
+    capacity: Option<usize>,
+    /// Append-only JSONL journal; lock taken *before* any shard lock.
+    journal: Option<Mutex<File>>,
+    path: Option<PathBuf>,
 }
 
 impl EvalCache {
+    /// Unbounded, in-memory only.
     pub fn new() -> EvalCache {
+        EvalCache::bounded(None)
+    }
+
+    /// In-memory cache holding at most ~`capacity` entries under LRU
+    /// eviction (`None` = unbounded). The cap is enforced per shard, so
+    /// total occupancy can exceed it by at most `SHARDS - 1` under
+    /// adversarial key distributions; a capacity that is a multiple of
+    /// the shard count (64) is exact.
+    pub fn bounded(capacity: Option<usize>) -> EvalCache {
         EvalCache {
             keys: Mutex::new(HashMap::new()),
+            registry: RwLock::new(Vec::new()),
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            clock: AtomicU64::new(0),
+            shard_cap: capacity.map(|c| c.div_ceil(SHARDS).max(1)),
+            capacity,
+            journal: None,
+            path: None,
         }
+    }
+
+    /// Open (or create) a journal-backed cache at `path`: existing
+    /// entries are replayed into memory (newest lines win, capacity
+    /// respected), then every subsequent insert is appended and flushed.
+    /// Counters start at zero — replay is free. Refuses a journal whose
+    /// meta line names a different [`CACHE_SCHEMA_VERSION`]; a journal
+    /// with no meta line at all is accepted as legacy.
+    pub fn persistent(path: &Path, capacity: Option<usize>) -> Result<EvalCache, String> {
+        let mut cache = EvalCache::bounded(capacity);
+        let mut fresh = true;
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("eval cache {}: {e}", path.display()))?;
+            fresh = text.trim().is_empty();
+            cache.load_journal(&text).map_err(|e| format!("eval cache {}: {e}", path.display()))?;
+        } else if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("eval cache dir {}: {e}", parent.display()))?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("eval cache {}: {e}", path.display()))?;
+        if fresh {
+            let _ = writeln!(file, "{}", meta_json().render());
+            let _ = file.flush();
+        }
+        cache.journal = Some(Mutex::new(file));
+        cache.path = Some(path.to_path_buf());
+        Ok(cache)
+    }
+
+    /// The journal path, when this cache is persistent.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// The requested entry capacity, when bounded.
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Replay journal lines into the in-memory map. Unparseable lines
+    /// (e.g. a torn tail from a killed daemon) are skipped; a meta line
+    /// with a wrong schema version is a hard error.
+    fn load_journal(&mut self, text: &str) -> Result<(), String> {
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Ok(j) = jsonparse::parse(line) else { continue };
+            if j.get("type").and_then(Json::as_str) == Some("meta") {
+                match j.get("schema_version").and_then(Json::as_f64) {
+                    None => {} // legacy, version-less: accepted
+                    Some(v) if v as u64 == CACHE_SCHEMA_VERSION => {}
+                    Some(v) => {
+                        return Err(format!(
+                            "journal schema_version {} is not supported by this build \
+                             (expected {CACHE_SCHEMA_VERSION}); delete the file or upgrade",
+                            v as u64
+                        ));
+                    }
+                }
+                continue;
+            }
+            let Some((id, idx, eval)) = entry_from_json(&j) else { continue };
+            let key = self.key_for(&id);
+            // Silent store: replay counts no misses and no evictions
+            // (journal order is insertion order, so trimming over-cap
+            // replays keeps the most recent entries).
+            let stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut shard = self.shards[self.shard(key, idx)].lock().unwrap();
+            shard.insert((key, idx), Entry { eval, stamp });
+            self.evict_over_cap(&mut shard);
+        }
+        Ok(())
+    }
+
+    /// Rewrite the journal from live entries (stalest first, so a later
+    /// replay reconstructs the same LRU order), dropping lines that
+    /// evictions or overwrites made stale. No-op for in-memory caches.
+    /// Inserts racing a compaction are serialized behind it by the
+    /// journal lock.
+    pub fn compact(&self) -> Result<(), String> {
+        let (Some(path), Some(journal)) = (self.path.as_ref(), self.journal.as_ref()) else {
+            return Ok(());
+        };
+        let mut guard = journal.lock().unwrap();
+        let mut live: Vec<(u64, usize, Eval, u64)> = Vec::new();
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            live.extend(shard.iter().map(|(&(k, i), e)| (k, i, e.eval, e.stamp)));
+        }
+        live.sort_by_key(|&(_, _, _, stamp)| stamp);
+        let registry = self.registry.read().unwrap();
+        let mut text = String::new();
+        text.push_str(&meta_json().render());
+        text.push('\n');
+        for (key, idx, eval, _) in live {
+            text.push_str(&entry_json(&registry[key as usize].id, idx, eval).render());
+            text.push('\n');
+        }
+        drop(registry);
+        let tmp = path.with_extension("jsonl.tmp");
+        std::fs::write(&tmp, text).map_err(|e| format!("eval cache {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("eval cache {}: {e}", path.display()))?;
+        *guard = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("eval cache {}: {e}", path.display()))?;
+        Ok(())
     }
 
     /// Resolve (registering on first use) the numeric key for an objective
@@ -64,8 +285,20 @@ impl EvalCache {
     /// orchestrator uses `runner::objective_id(kernel, device)`.
     pub fn key_for(&self, objective_id: &str) -> u64 {
         let mut keys = self.keys.lock().unwrap();
+        if let Some(&k) = keys.get(objective_id) {
+            return k;
+        }
         let next = keys.len() as u64;
-        *keys.entry(objective_id.to_string()).or_insert(next)
+        keys.insert(objective_id.to_string(), next);
+        self.registry.write().unwrap().push(KeyInfo {
+            id: objective_id.to_string(),
+            counters: Arc::new(KeyCounters::default()),
+        });
+        next
+    }
+
+    fn key_counters(&self, key: u64) -> Arc<KeyCounters> {
+        Arc::clone(&self.registry.read().unwrap()[key as usize].counters)
     }
 
     /// Shard choice mixes the objective key with the index so the same
@@ -74,36 +307,85 @@ impl EvalCache {
         ((key.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ idx as u64) % SHARDS as u64) as usize
     }
 
-    fn lookup(&self, key: u64, idx: usize) -> Option<Eval> {
-        let got = self.shards[self.shard(key, idx)].lock().unwrap().get(&(key, idx)).copied();
-        match got {
-            Some(e) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(e)
-            }
-            None => None,
+    /// Evict stalest entries until the shard is within its cap; returns
+    /// the evicted keys for counter attribution.
+    fn evict_over_cap(&self, shard: &mut HashMap<(u64, usize), Entry>) -> Vec<(u64, usize)> {
+        let Some(cap) = self.shard_cap else { return Vec::new() };
+        let mut evicted = Vec::new();
+        while shard.len() > cap {
+            let Some((&k, _)) = shard.iter().min_by_key(|(_, e)| e.stamp) else { break };
+            shard.remove(&k);
+            evicted.push(k);
         }
+        evicted
+    }
+
+    /// Store an entry, enforce the cap, count evictions, journal the
+    /// insert. Journal lock (when present) is taken before the shard
+    /// lock — the ordering `compact` shares.
+    fn store(&self, key: u64, idx: usize, eval: Eval) {
+        let jguard: Option<MutexGuard<'_, File>> =
+            self.journal.as_ref().map(|j| j.lock().unwrap());
+        let stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let evicted = {
+            let mut shard = self.shards[self.shard(key, idx)].lock().unwrap();
+            shard.insert((key, idx), Entry { eval, stamp });
+            self.evict_over_cap(&mut shard)
+        };
+        for &(ekey, _) in &evicted {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.key_counters(ekey).evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(mut file) = jguard {
+            // Best-effort persistence: an unwritable journal never fails
+            // the tuning run, it just degrades to in-memory behavior.
+            let id = self.registry.read().unwrap()[key as usize].id.clone();
+            let _ = writeln!(file, "{}", entry_json(&id, idx, eval).render());
+            let _ = file.flush();
+        }
+    }
+
+    fn lookup(&self, key: u64, idx: usize) -> Option<Eval> {
+        let got = {
+            let mut shard = self.shards[self.shard(key, idx)].lock().unwrap();
+            match shard.get_mut(&(key, idx)) {
+                Some(entry) => {
+                    entry.stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+                    Some(entry.eval)
+                }
+                None => None,
+            }
+        };
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.key_counters(key).hits.fetch_add(1, Ordering::Relaxed);
+        }
+        got
     }
 
     fn insert(&self, key: u64, idx: usize, eval: Eval) {
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.shards[self.shard(key, idx)].lock().unwrap().insert((key, idx), eval);
-    }
-
-    /// Statless lookup: used by [`RunMemo`] for in-run recalls, which are
-    /// unique-feval bookkeeping rather than cross-session cache traffic.
-    fn peek(&self, key: u64, idx: usize) -> Option<Eval> {
-        self.shards[self.shard(key, idx)].lock().unwrap().get(&(key, idx)).copied()
+        self.key_counters(key).misses.fetch_add(1, Ordering::Relaxed);
+        self.store(key, idx, eval);
     }
 
     /// Insert only if absent, counting a miss only when actually
     /// inserting (a [`RunMemo`] recording a value another session already
-    /// stored is neither a hit nor a miss).
+    /// stored is neither a hit nor a miss). A present entry just gets its
+    /// LRU stamp refreshed.
     fn put_if_absent(&self, key: u64, idx: usize, eval: Eval) {
-        let mut shard = self.shards[self.shard(key, idx)].lock().unwrap();
-        if let std::collections::hash_map::Entry::Vacant(slot) = shard.entry((key, idx)) {
-            slot.insert(eval);
-            self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = {
+            let mut shard = self.shards[self.shard(key, idx)].lock().unwrap();
+            match shard.get_mut(&(key, idx)) {
+                Some(entry) => {
+                    entry.stamp = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+                    false
+                }
+                None => true,
+            }
+        };
+        if fresh {
+            self.insert(key, idx, eval);
         }
     }
 
@@ -116,9 +398,30 @@ impl EvalCache {
         self.len() == 0
     }
 
-    /// (hits, misses) so far.
-    pub fn stats(&self) -> (u64, u64) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    /// Global counters so far.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Per-objective breakdown, in key-registration order — how the serve
+    /// daemon reports cache effectiveness per kernel.
+    pub fn objective_stats(&self) -> Vec<(String, CacheStats)> {
+        self.registry
+            .read()
+            .unwrap()
+            .iter()
+            .map(|info| (info.id.clone(), info.counters.snapshot()))
+            .collect()
+    }
+
+    /// Counters for one objective id, if it was ever registered.
+    pub fn stats_for(&self, objective_id: &str) -> Option<CacheStats> {
+        let key = *self.keys.lock().unwrap().get(objective_id)?;
+        Some(self.key_counters(key).snapshot())
     }
 }
 
@@ -126,6 +429,40 @@ impl Default for EvalCache {
     fn default() -> EvalCache {
         EvalCache::new()
     }
+}
+
+fn meta_json() -> Json {
+    Json::obj()
+        .set("type", "meta")
+        .set("kind", "evalcache")
+        .set("schema_version", CACHE_SCHEMA_VERSION as usize)
+}
+
+/// One journal line: `{"obj":<id>,"idx":N,"time":t}` for valid
+/// measurements, `{"obj":<id>,"idx":N,"invalid":<label>}` otherwise —
+/// the same eval encoding as `objective/cache.rs` files.
+fn entry_json(id: &str, idx: usize, eval: Eval) -> Json {
+    let rec = Json::obj().set("obj", id).set("idx", idx);
+    match eval {
+        Eval::Valid(t) => rec.set("time", t),
+        other => rec.set(
+            "invalid",
+            other.invalid_label().expect("non-valid eval always has a label"),
+        ),
+    }
+}
+
+fn entry_from_json(j: &Json) -> Option<(String, usize, Eval)> {
+    let id = j.get("obj").and_then(Json::as_str)?.to_string();
+    let idx = j.get("idx").and_then(Json::as_f64)?;
+    if idx < 0.0 {
+        return None;
+    }
+    let eval = match j.get("time").and_then(Json::as_f64) {
+        Some(t) => Eval::Valid(t),
+        None => Eval::from_invalid_label(j.get("invalid").and_then(Json::as_str)?),
+    };
+    Some((id, idx as usize, eval))
 }
 
 /// An objective view that consults the shared cache before the backing
@@ -170,17 +507,20 @@ impl Objective for CachedObjective {
 ///
 /// Two layers of state with different scopes:
 ///
-/// - **seen-set (run-local)** — which configurations *this run* has
-///   evaluated. Unique-feval budget semantics key off this: the first
-///   in-run touch of a configuration costs budget even when another
-///   session already stored its value.
+/// - **run-local overlay** — which configurations *this run* has
+///   evaluated, with their values. Unique-feval budget semantics key off
+///   this: the first in-run touch of a configuration costs budget even
+///   when another session already stored its value. Keeping the values
+///   locally (not just a seen-set) makes in-run revisits immune to the
+///   shared store's LRU eviction — a run's own observations can never be
+///   evicted out from under it.
 /// - **value store (shareable)** — a plain run-local map by default
 ///   ([`RunMemo::private`], zero locking); a [`RunMemo::shared`] view
 ///   over an [`EvalCache`] lets all sessions of one objective evaluate
-///   each configuration once per sweep. Sharing has the same soundness
-///   caveat as [`CachedObjective`]: a cross-session hit consumes no RNG,
-///   so it is only correct for objectives whose `evaluate` ignores its
-///   RNG.
+///   each configuration once per sweep (or per daemon lifetime). Sharing
+///   has the same soundness caveat as [`CachedObjective`]: a
+///   cross-session hit consumes no RNG, so it is only correct for
+///   objectives whose `evaluate` ignores its RNG.
 pub struct RunMemo {
     store: MemoStore,
 }
@@ -194,9 +534,9 @@ enum MemoStore {
     Shared {
         cache: Arc<EvalCache>,
         key: u64,
-        /// Which configurations *this run* evaluated (budget semantics
-        /// are per run; the shared store spans runs).
-        seen: std::collections::HashSet<usize>,
+        /// This run's own observations (budget semantics are per run;
+        /// the shared store spans runs and may evict).
+        seen: HashMap<usize, Eval>,
     },
 }
 
@@ -211,16 +551,14 @@ impl RunMemo {
     /// the RNG caveat). `objective_id` keys this run's entries.
     pub fn shared(cache: Arc<EvalCache>, objective_id: &str) -> RunMemo {
         let key = cache.key_for(objective_id);
-        RunMemo {
-            store: MemoStore::Shared { cache, key, seen: std::collections::HashSet::new() },
-        }
+        RunMemo { store: MemoStore::Shared { cache, key, seen: HashMap::new() } }
     }
 
     /// Has this run evaluated `idx`?
     pub fn seen(&self, idx: usize) -> bool {
         match &self.store {
             MemoStore::Private(map) => map.contains_key(&idx),
-            MemoStore::Shared { seen, .. } => seen.contains(&idx),
+            MemoStore::Shared { seen, .. } => seen.contains_key(&idx),
         }
     }
 
@@ -233,18 +571,13 @@ impl RunMemo {
     }
 
     /// In-run revisit: the stored value if *this run* already evaluated
-    /// `idx` (a free lookup under unique-feval budget semantics).
+    /// `idx` (a free lookup under unique-feval budget semantics). Served
+    /// from the run-local overlay, so shared-store eviction cannot
+    /// invalidate it.
     pub fn recall(&self, idx: usize) -> Option<Eval> {
         match &self.store {
             MemoStore::Private(map) => map.get(&idx).copied(),
-            MemoStore::Shared { cache, key, seen } => {
-                if !seen.contains(&idx) {
-                    return None;
-                }
-                let e = cache.peek(*key, idx);
-                debug_assert!(e.is_some(), "seen-set and store out of sync for config {idx}");
-                e
-            }
+            MemoStore::Shared { seen, .. } => seen.get(&idx).copied(),
         }
     }
 
@@ -257,7 +590,7 @@ impl RunMemo {
         match &self.store {
             MemoStore::Private(_) => None,
             MemoStore::Shared { cache, key, seen } => {
-                if seen.contains(&idx) {
+                if seen.contains_key(&idx) {
                     return None;
                 }
                 cache.lookup(*key, idx)
@@ -273,7 +606,7 @@ impl RunMemo {
                 map.insert(idx, eval);
             }
             MemoStore::Shared { cache, key, seen } => {
-                seen.insert(idx);
+                seen.insert(idx, eval);
                 cache.put_if_absent(*key, idx, eval);
             }
         }
@@ -298,6 +631,12 @@ mod tests {
         Arc::new(TableObjective::new(space, table))
     }
 
+    fn scratch_file(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("ktbo-evalcache-{name}.jsonl"));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
     #[test]
     fn hits_after_first_evaluation() {
         let cache = Arc::new(EvalCache::new());
@@ -306,13 +645,13 @@ mod tests {
         assert_eq!(o.evaluate(1, &mut rng), Eval::Valid(1.5));
         assert_eq!(o.evaluate(1, &mut rng), Eval::Valid(1.5));
         assert_eq!(o.evaluate(2, &mut rng), Eval::CompileError);
-        let (hits, misses) = cache.stats();
-        assert_eq!((hits, misses), (1, 2));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
         assert_eq!(cache.len(), 2);
     }
 
     #[test]
-    fn objectives_do_not_collide() {
+    fn objectives_do_not_collide_and_stats_break_down_per_objective() {
         let cache = Arc::new(EvalCache::new());
         let a = CachedObjective::new(toy(), Arc::clone(&cache), "a");
         let b = CachedObjective::new(toy(), Arc::clone(&cache), "b");
@@ -320,7 +659,16 @@ mod tests {
         a.evaluate(0, &mut rng);
         // Same index, different objective: must miss, not reuse a's entry.
         b.evaluate(0, &mut rng);
-        assert_eq!(cache.stats(), (0, 2));
+        b.evaluate(0, &mut rng);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2, evictions: 0 });
+        // The per-objective breakdown attributes each side correctly.
+        assert_eq!(cache.stats_for("a"), Some(CacheStats { hits: 0, misses: 1, evictions: 0 }));
+        assert_eq!(cache.stats_for("b"), Some(CacheStats { hits: 1, misses: 1, evictions: 0 }));
+        assert_eq!(cache.stats_for("never-registered"), None);
+        let by_obj = cache.objective_stats();
+        assert_eq!(by_obj.len(), 2);
+        assert_eq!(by_obj[0].0, "a");
+        assert_eq!(by_obj[1].0, "b");
         // Same id re-registered resolves to the same key.
         assert_eq!(cache.key_for("a"), cache.key_for("a"));
         assert_ne!(cache.key_for("a"), cache.key_for("b"));
@@ -352,13 +700,110 @@ mod tests {
         for evals in &out {
             assert_eq!(evals, &out[0]);
         }
-        let (hits, misses) = cache.stats();
-        assert_eq!(hits + misses, 32);
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 32);
         assert_eq!(cache.len(), 4);
         // Every config evaluated at least once; concurrent first-touch
         // races may re-evaluate (benign: the table is deterministic), so
         // only the lower bound is exact.
-        assert!(misses >= 4, "misses {misses}");
+        assert!(s.misses >= 4, "misses {}", s.misses);
+    }
+
+    #[test]
+    fn lru_cap_bounds_entries_and_counts_evictions() {
+        // 64 = one entry per shard, so the bound is exact and the
+        // stalest entry of a shard is always the one displaced.
+        let cache = Arc::new(EvalCache::bounded(Some(64)));
+        let mut memo = RunMemo::shared(Arc::clone(&cache), "obj");
+        for idx in 0..200 {
+            memo.record(idx, Eval::Valid(idx as f64));
+        }
+        assert!(cache.len() <= 64, "len {} exceeds cap", cache.len());
+        let s = cache.stats();
+        assert_eq!(s.misses, 200);
+        assert_eq!(s.evictions as usize, 200 - cache.len());
+        assert_eq!(cache.stats_for("obj").unwrap().evictions, s.evictions);
+        // The most recent insert in its shard must have survived.
+        let probe = RunMemo::shared(Arc::clone(&cache), "obj");
+        assert_eq!(probe.fetch_store(199), Some(Eval::Valid(199.0)));
+    }
+
+    #[test]
+    fn eviction_cannot_desync_a_run_memo() {
+        // Overflow the store massively: in-run revisits must still be
+        // served (from the run-local overlay), with budget bookkeeping
+        // intact, even though the shared entries were long evicted.
+        let cache = Arc::new(EvalCache::bounded(Some(64)));
+        let mut memo = RunMemo::shared(Arc::clone(&cache), "obj");
+        for idx in 0..500 {
+            memo.record(idx, Eval::Valid(idx as f64));
+        }
+        assert_eq!(memo.n_seen(), 500);
+        assert!(memo.seen(3));
+        assert_eq!(memo.recall(3), Some(Eval::Valid(3.0)), "revisit survives eviction");
+        assert_eq!(memo.fetch_store(3), None, "first-touch path stays closed for revisits");
+    }
+
+    #[test]
+    fn persistent_journal_survives_reopen_and_respects_cap() {
+        let path = scratch_file("roundtrip");
+        {
+            let cache = Arc::new(EvalCache::persistent(&path, Some(64)).unwrap());
+            let mut memo = RunMemo::shared(Arc::clone(&cache), "adding@A100");
+            memo.record(7, Eval::Valid(1.25));
+            memo.record(9, Eval::CompileError);
+            memo.record(11, Eval::Timeout);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\"type\":\"meta\""), "meta line first: {text}");
+        assert!(text.contains("\"invalid\":\"compile\""));
+        // Reopen: entries replay, counters start fresh.
+        let cache = Arc::new(EvalCache::persistent(&path, Some(64)).unwrap());
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.stats(), CacheStats::default(), "replay is free");
+        let probe = RunMemo::shared(Arc::clone(&cache), "adding@A100");
+        assert_eq!(probe.fetch_store(7), Some(Eval::Valid(1.25)));
+        assert_eq!(probe.fetch_store(9), Some(Eval::CompileError));
+        assert_eq!(probe.fetch_store(11), Some(Eval::Timeout));
+        // Compaction keeps the same live set.
+        cache.compact().unwrap();
+        let cache2 = EvalCache::persistent(&path, Some(64)).unwrap();
+        assert_eq!(cache2.len(), 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_versionless_journal_loads_and_mismatched_version_is_refused() {
+        let path = scratch_file("legacy");
+        // A version-less file (pre-versioning daemon) must load.
+        std::fs::write(&path, "{\"obj\":\"k@g\",\"idx\":4,\"time\":2.5}\n").unwrap();
+        let cache = EvalCache::persistent(&path, None).unwrap();
+        assert_eq!(cache.len(), 1);
+        drop(cache);
+        // A mismatched schema version must be refused with a clear message.
+        std::fs::write(
+            &path,
+            "{\"type\":\"meta\",\"kind\":\"evalcache\",\"schema_version\":99}\n",
+        )
+        .unwrap();
+        let err = EvalCache::persistent(&path, None).unwrap_err();
+        assert!(err.contains("schema_version 99"), "unhelpful error: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_journal_tail_is_skipped() {
+        let path = scratch_file("torn");
+        std::fs::write(
+            &path,
+            "{\"type\":\"meta\",\"kind\":\"evalcache\",\"schema_version\":1}\n\
+             {\"obj\":\"k@g\",\"idx\":1,\"time\":3.0}\n\
+             {\"obj\":\"k@g\",\"idx\":2,\"ti",
+        )
+        .unwrap();
+        let cache = EvalCache::persistent(&path, None).unwrap();
+        assert_eq!(cache.len(), 1, "torn tail line dropped, intact lines kept");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
@@ -389,8 +834,7 @@ mod tests {
         assert!(b.seen(3));
         // One store entry, not two; adopting a stored value is no miss.
         assert_eq!(cache.len(), 1);
-        let (_, misses) = cache.stats();
-        assert_eq!(misses, 1);
+        assert_eq!(cache.stats().misses, 1);
         // Different objective ids stay disjoint.
         let c = RunMemo::shared(Arc::clone(&cache), "other");
         assert_eq!(c.fetch_store(3), None);

@@ -1,0 +1,161 @@
+//! Versioned session checkpoints.
+//!
+//! A checkpoint is the session's trace (the whole externally visible run
+//! state — see `Session::checkpoint`) plus the [`SessionConfig`] that
+//! rebuilds driver, budget, and RNG deterministically. Serialized as one
+//! JSON document with a `schema_version` field: mismatched versions are
+//! refused with a clear message, while version-less documents from
+//! pre-versioning builds still load (see `tests/data/legacy_checkpoint.json`).
+
+use crate::objective::Eval;
+use crate::serve::config::SessionConfig;
+use crate::strategies::{Trace, OUT_OF_SPACE};
+use crate::util::json::Json;
+use crate::util::jsonparse;
+
+/// Version of the checkpoint document layout this build reads and writes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// A resumable snapshot of one tuning session.
+#[derive(Clone, Debug)]
+pub struct SessionCheckpoint {
+    pub config: SessionConfig,
+    pub trace: Trace,
+}
+
+impl SessionCheckpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("type", "session_checkpoint")
+            .set("schema_version", SCHEMA_VERSION as usize)
+            .set("config", self.config.to_json())
+            .set("trace", trace_to_json(&self.trace))
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionCheckpoint, String> {
+        if j.get("type").and_then(Json::as_str) != Some("session_checkpoint") {
+            return Err("not a session checkpoint (missing type field)".into());
+        }
+        // Version-less documents predate versioning and use layout v1.
+        if let Some(v) = j.get("schema_version").and_then(Json::as_f64) {
+            if v as u64 != SCHEMA_VERSION {
+                return Err(format!(
+                    "checkpoint has schema_version {} but this build reads {SCHEMA_VERSION}; \
+                     re-create the session or use a matching build",
+                    v as u64
+                ));
+            }
+        }
+        let config = SessionConfig::from_json(
+            j.get("config").ok_or("checkpoint is missing 'config'")?,
+        )?;
+        let trace =
+            trace_from_json(j.get("trace").ok_or("checkpoint is missing 'trace'")?)?;
+        Ok(SessionCheckpoint { config, trace })
+    }
+
+    pub fn parse(text: &str) -> Result<SessionCheckpoint, String> {
+        SessionCheckpoint::from_json(&jsonparse::parse(text)?)
+    }
+}
+
+/// Trace records as a JSON array. `OUT_OF_SPACE` (a sentinel at
+/// `usize::MAX`) is written as index `-1` so documents stay readable.
+pub fn trace_to_json(trace: &Trace) -> Json {
+    Json::Arr(
+        trace
+            .records
+            .iter()
+            .map(|(idx, e)| {
+                let j = Json::obj().set(
+                    "idx",
+                    if *idx == OUT_OF_SPACE { Json::Num(-1.0) } else { Json::Num(*idx as f64) },
+                );
+                match e.value() {
+                    Some(t) => j.set("time", t),
+                    None => j.set(
+                        "invalid",
+                        e.invalid_label().expect("non-valid evals always carry a label"),
+                    ),
+                }
+            })
+            .collect(),
+    )
+}
+
+pub fn trace_from_json(j: &Json) -> Result<Trace, String> {
+    let arr = j.as_arr().ok_or("trace must be an array")?;
+    let mut trace = Trace::new();
+    for rec in arr {
+        let raw = rec.get("idx").and_then(Json::as_f64).ok_or("trace record missing 'idx'")?;
+        let idx = if raw < 0.0 { OUT_OF_SPACE } else { raw as usize };
+        let eval = match rec.get("time").and_then(Json::as_f64) {
+            Some(t) => Eval::Valid(t),
+            None => {
+                let label = rec
+                    .get("invalid")
+                    .and_then(Json::as_str)
+                    .ok_or("trace record needs 'time' or 'invalid'")?;
+                Eval::from_invalid_label(label)
+            }
+        };
+        trace.push(idx, eval);
+    }
+    Ok(trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::FaultKind;
+
+    fn config() -> SessionConfig {
+        SessionConfig {
+            kernel: "adding".into(),
+            gpu: "a100".into(),
+            strategy: "random".into(),
+            budget: 20,
+            seed: 7,
+            space: None,
+            eval_timeout_ms: None,
+            max_retries: 0,
+            fault_plan: None,
+        }
+        .validate()
+        .unwrap()
+    }
+
+    #[test]
+    fn checkpoint_round_trips_every_eval_kind() {
+        let mut trace = Trace::new();
+        trace.push(3, Eval::Valid(1.25));
+        trace.push(OUT_OF_SPACE, Eval::RuntimeError);
+        trace.push(9, Eval::CompileError);
+        trace.push(4, Eval::Timeout);
+        trace.push(5, Eval::Transient(FaultKind::DeviceError));
+        let ckpt = SessionCheckpoint { config: config(), trace };
+        let back = SessionCheckpoint::parse(&ckpt.to_json().render()).unwrap();
+        assert_eq!(back.config, ckpt.config);
+        assert_eq!(back.trace.records, ckpt.trace.records);
+    }
+
+    #[test]
+    fn mismatched_schema_version_is_refused() {
+        let text = SessionCheckpoint { config: config(), trace: Trace::new() }
+            .to_json()
+            .render()
+            .replace("\"schema_version\":1", "\"schema_version\":99");
+        let err = SessionCheckpoint::parse(&text).unwrap_err();
+        assert!(err.contains("schema_version 99"), "{err}");
+    }
+
+    #[test]
+    fn versionless_legacy_document_loads() {
+        let text = SessionCheckpoint { config: config(), trace: Trace::new() }
+            .to_json()
+            .render()
+            .replace("\"schema_version\":1,", "");
+        let ckpt = SessionCheckpoint::parse(&text).unwrap();
+        assert_eq!(ckpt.config.kernel, "adding");
+    }
+}

@@ -1,0 +1,148 @@
+//! Scripted client for the serve protocol.
+//!
+//! The daemon owns models and suggestions; the client owns measurement.
+//! [`run_session`] drives one session to completion over any
+//! [`LineTransport`]: `create` → (`ask` → evaluate locally → `tell`)* →
+//! `done` → `close`. The evaluation side is built from the same
+//! [`SessionConfig`] the server received, so in simulation mode a served
+//! run reproduces `ktbo tune` bit for bit.
+//!
+//! Two transports: [`TcpLine`] speaks JSON lines over a socket (the
+//! `ktbo client` subcommand); [`InProcess`] calls
+//! [`TuningServer::handle_line`] directly, which is what lets the stress
+//! suite drive thousands of clients on a thread pool without sockets.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use crate::serve::config::SessionConfig;
+use crate::serve::server::TuningServer;
+use crate::util::json::Json;
+use crate::util::jsonparse;
+use crate::util::rng::Rng;
+
+/// One request line in, one response line out.
+pub trait LineTransport {
+    fn round_trip(&mut self, line: &str) -> Result<String, String>;
+}
+
+/// JSON lines over TCP.
+pub struct TcpLine {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpLine {
+    pub fn connect(addr: &str) -> Result<TcpLine, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("cannot connect to {addr}: {e}"))?;
+        let reader = BufReader::new(
+            stream.try_clone().map_err(|e| format!("cannot clone stream: {e}"))?,
+        );
+        Ok(TcpLine { reader, writer: stream })
+    }
+}
+
+impl LineTransport for TcpLine {
+    fn round_trip(&mut self, line: &str) -> Result<String, String> {
+        writeln!(self.writer, "{line}").map_err(|e| format!("send failed: {e}"))?;
+        self.writer.flush().map_err(|e| format!("send failed: {e}"))?;
+        let mut resp = String::new();
+        match self.reader.read_line(&mut resp) {
+            Ok(0) => Err("server closed the connection".into()),
+            Ok(_) => Ok(resp.trim_end().to_string()),
+            Err(e) => Err(format!("receive failed: {e}")),
+        }
+    }
+}
+
+/// Direct calls into an in-process server — the simulated-client path.
+pub struct InProcess(pub Arc<TuningServer>);
+
+impl LineTransport for InProcess {
+    fn round_trip(&mut self, line: &str) -> Result<String, String> {
+        Ok(self.0.handle_line(line))
+    }
+}
+
+/// Result of one completed served session.
+#[derive(Clone, Debug)]
+pub struct ClientOutcome {
+    pub session: String,
+    pub evaluations: usize,
+    pub best: Option<f64>,
+    pub best_index: Option<usize>,
+}
+
+fn expect_ok(t: &mut dyn LineTransport, line: &str) -> Result<Json, String> {
+    let resp = t.round_trip(line)?;
+    let j = jsonparse::parse(&resp)?;
+    if j.get("ok") != Some(&Json::Bool(true)) {
+        return Err(j
+            .get("error")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("request failed: {resp}")));
+    }
+    Ok(j)
+}
+
+/// Drive one session to completion, evaluating suggestions locally
+/// against the config's objective (simulation mode). `resume` continues
+/// an existing server-side checkpoint instead of creating the session.
+pub fn run_session(
+    t: &mut dyn LineTransport,
+    name: &str,
+    cfg: &SessionConfig,
+    resume: bool,
+) -> Result<ClientOutcome, String> {
+    let built = cfg.build_objective()?;
+    // Table objectives ignore the eval RNG, so any stream works; keep it
+    // deterministic anyway for the fault-injection wrappers.
+    let mut rng = Rng::with_stream(cfg.seed, 0x5e55_1014);
+    let open = if resume {
+        Json::obj().set("cmd", "resume").set("session", name)
+    } else {
+        Json::obj().set("cmd", "create").set("session", name).set("config", cfg.to_json())
+    };
+    expect_ok(t, &open.render())?;
+    let ask = Json::obj().set("cmd", "ask").set("session", name).render();
+    loop {
+        let a = expect_ok(t, &ask)?;
+        match a.get("status").and_then(Json::as_str) {
+            Some("eval") => {
+                let idx = a
+                    .get("config_index")
+                    .and_then(Json::as_f64)
+                    .ok_or("'eval' response without config_index")? as usize;
+                let eval = built.run.evaluate(idx, &mut rng);
+                let tell = Json::obj()
+                    .set("cmd", "tell")
+                    .set("session", name)
+                    .set("config_index", idx);
+                let tell = match eval.value() {
+                    Some(v) => tell.set("time", v),
+                    None => tell.set(
+                        "invalid",
+                        eval.invalid_label().expect("non-valid evals carry a label"),
+                    ),
+                };
+                expect_ok(t, &tell.render())?;
+            }
+            Some("done") => {
+                let close =
+                    Json::obj().set("cmd", "close").set("session", name).render();
+                let c = expect_ok(t, &close)?;
+                return Ok(ClientOutcome {
+                    session: name.to_string(),
+                    evaluations: c.get("evaluations").and_then(Json::as_f64).unwrap_or(0.0)
+                        as usize,
+                    best: c.get("best").and_then(Json::as_f64),
+                    best_index: c.get("best_index").and_then(Json::as_f64).map(|v| v as usize),
+                });
+            }
+            other => return Err(format!("unexpected ask status {other:?}")),
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! Serializable per-run tuning configuration.
+//!
+//! One [`SessionConfig`] is the single source of truth for "what run is
+//! this": kernel, device, strategy, budget, seed, optional declarative
+//! space file, and the fault/resilience knobs. `ktbo tune` builds one
+//! from CLI flags, the serve daemon parses one from the wire's `create`
+//! request, and checkpoints embed one so a resumed session rebuilds the
+//! exact run — all three go through [`SessionConfig::validate`], which
+//! canonicalizes names and rejects unknown strategies through the
+//! registry's suggestion path.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::gpusim::device::Device;
+use crate::gpusim::kernels::kernel_by_name;
+use crate::gpusim::SimulatedSpace;
+use crate::harness::runner::objective_id;
+use crate::objective::faulty::{FaultPlan, FaultyObjective};
+use crate::objective::resilient::{ResilienceConfig, ResilientEvaluator};
+use crate::objective::{Objective, TableObjective};
+use crate::space::{SearchSpace, SpaceSpec};
+use crate::strategies::registry::{by_name, unknown_strategy_message};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Everything that defines one tuning run, in wire-serializable form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionConfig {
+    pub kernel: String,
+    pub gpu: String,
+    pub strategy: String,
+    pub budget: usize,
+    pub seed: u64,
+    /// Optional declarative SpaceSpec JSON file replacing the kernel's
+    /// built-in space (server-side path).
+    pub space: Option<String>,
+    pub eval_timeout_ms: Option<u64>,
+    pub max_retries: u32,
+    /// Optional deterministic fault-injection plan file.
+    pub fault_plan: Option<String>,
+}
+
+impl SessionConfig {
+    /// Shared `--eval-timeout-ms` parsing for every CLI entry point.
+    pub fn parse_eval_timeout(args: &Args) -> Result<Option<u64>, String> {
+        match args.get("eval-timeout-ms") {
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("--eval-timeout-ms must be an integer, got '{v}'")),
+            None => Ok(None),
+        }
+    }
+
+    /// Build from CLI flags. The caller resolves where kernel/gpu come
+    /// from (`ktbo tune` takes them as positionals, `ktbo client` as
+    /// flags); the knob flags are shared verbatim.
+    pub fn from_args(args: &Args, kernel: &str, gpu: &str) -> Result<SessionConfig, String> {
+        SessionConfig {
+            kernel: kernel.to_string(),
+            gpu: gpu.to_string(),
+            strategy: args.str_or("strategy", "advanced_multi"),
+            budget: args.usize_or("budget", 220),
+            seed: args.u64_or("seed", 42),
+            space: args.get("space").map(str::to_string),
+            eval_timeout_ms: SessionConfig::parse_eval_timeout(args)?,
+            max_retries: args.usize_or("max-retries", 0) as u32,
+            fault_plan: args.get("fault-plan").map(str::to_string),
+        }
+        .validate()
+    }
+
+    /// Canonicalize names against the registries and reject anything
+    /// unknown. Every construction path funnels through here, so the
+    /// server, the CLI, and checkpoints agree on what is valid.
+    pub fn validate(mut self) -> Result<SessionConfig, String> {
+        self.strategy = by_name(&self.strategy)
+            .ok_or_else(|| unknown_strategy_message(&self.strategy))?
+            .name();
+        self.kernel = kernel_by_name(&self.kernel)
+            .ok_or_else(|| format!("unknown kernel '{}'", self.kernel))?
+            .name()
+            .to_string();
+        self.gpu = Device::by_name(&self.gpu)
+            .ok_or_else(|| format!("unknown GPU '{}'", self.gpu))?
+            .name
+            .to_string();
+        if self.budget == 0 {
+            return Err("budget must be positive".into());
+        }
+        Ok(self)
+    }
+
+    pub fn device(&self) -> Device {
+        Device::by_name(&self.gpu).expect("validated GPU name")
+    }
+
+    /// The search space this run tunes over plus its cache/objective id.
+    /// Table values are not needed — this is the daemon-side half, where
+    /// measurements arrive from clients.
+    pub fn build_space(&self) -> Result<(Arc<SearchSpace>, String), String> {
+        let dev = self.device();
+        let base_id = objective_id(&self.kernel, dev.name);
+        match &self.space {
+            None => {
+                let k = kernel_by_name(&self.kernel).expect("validated kernel name");
+                Ok((Arc::new(k.spec(&dev).build()), base_id))
+            }
+            Some(path) => {
+                let spec = SpaceSpec::load(Path::new(path))?;
+                let id = format!("{base_id}#space:{}", spec.name);
+                Ok((Arc::new(spec.build()), id))
+            }
+        }
+    }
+
+    /// The client-side half: a concrete objective (simulation mode),
+    /// wrapped in the configured fault/resilience layers.
+    pub fn build_objective(&self) -> Result<BuiltObjective, String> {
+        let dev = self.device();
+        let table = match &self.space {
+            None => crate::harness::figures::objective_for(&self.kernel, &dev),
+            Some(path) => {
+                let spec = SpaceSpec::load(Path::new(path))?;
+                let k = kernel_by_name(&self.kernel).expect("validated kernel name");
+                Arc::new(TableObjective::from_sim(SimulatedSpace::build_with_space(
+                    k.as_ref(),
+                    &dev,
+                    spec.build(),
+                )))
+            }
+        };
+        self.wrap_table(table)
+    }
+
+    /// Apply the fault-injection and resilience layers to a table
+    /// objective (shared by `build_objective` and `ktbo tune`'s
+    /// cache-file path, which fixes the table differently).
+    pub fn wrap_table(&self, table: Arc<TableObjective>) -> Result<BuiltObjective, String> {
+        let faulty = match &self.fault_plan {
+            Some(path) => {
+                let plan = FaultPlan::load(Path::new(path))?;
+                Some(Arc::new(FaultyObjective::new(
+                    Arc::clone(&table) as Arc<dyn Objective>,
+                    plan,
+                )))
+            }
+            None => None,
+        };
+        let eval_obj: Arc<dyn Objective> = match &faulty {
+            Some(f) => Arc::clone(f) as Arc<dyn Objective>,
+            None => Arc::clone(&table) as Arc<dyn Objective>,
+        };
+        let res_cfg = ResilienceConfig {
+            deadline: self.eval_timeout_ms.map(Duration::from_millis),
+            max_retries: self.max_retries,
+            ..ResilienceConfig::default()
+        };
+        let resilient = if res_cfg.is_passthrough() {
+            None
+        } else {
+            Some(Arc::new(ResilientEvaluator::new(Arc::clone(&eval_obj), res_cfg)))
+        };
+        let run: Arc<dyn Objective> = match &resilient {
+            Some(r) => Arc::clone(r) as Arc<dyn Objective>,
+            None => eval_obj,
+        };
+        Ok(BuiltObjective { table, run, faulty, resilient })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt_str = |o: &Option<String>| match o {
+            Some(s) => Json::Str(s.clone()),
+            None => Json::Null,
+        };
+        let mut j = Json::obj()
+            .set("kernel", self.kernel.as_str())
+            .set("gpu", self.gpu.as_str())
+            .set("strategy", self.strategy.as_str())
+            .set("budget", self.budget)
+            // Hex string: Json numbers are f64 and would silently round
+            // seeds above 2^53.
+            .set("seed", format!("0x{:016x}", self.seed))
+            .set("space", opt_str(&self.space))
+            .set("max_retries", self.max_retries as usize)
+            .set("fault_plan", opt_str(&self.fault_plan));
+        if let Some(ms) = self.eval_timeout_ms {
+            j = j.set("eval_timeout_ms", ms as usize);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionConfig, String> {
+        let s = |key: &str| -> Result<String, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("config is missing '{key}'"))
+        };
+        let seed_str = s("seed")?;
+        let seed = u64::from_str_radix(seed_str.strip_prefix("0x").unwrap_or(&seed_str), 16)
+            .map_err(|_| format!("config seed '{seed_str}' is not a hex integer"))?;
+        let opt_s = |key: &str| j.get(key).and_then(Json::as_str).map(str::to_string);
+        SessionConfig {
+            kernel: s("kernel")?,
+            gpu: s("gpu")?,
+            strategy: s("strategy")?,
+            budget: j
+                .get("budget")
+                .and_then(Json::as_f64)
+                .ok_or("config is missing 'budget'")? as usize,
+            seed,
+            space: opt_s("space"),
+            eval_timeout_ms: j.get("eval_timeout_ms").and_then(Json::as_f64).map(|v| v as u64),
+            max_retries: j.get("max_retries").and_then(Json::as_f64).unwrap_or(0.0) as u32,
+            fault_plan: opt_s("fault_plan"),
+        }
+        .validate()
+    }
+}
+
+/// The evaluation stack a config builds client-side: the raw table plus
+/// the (optionally) fault-injected, resilience-wrapped objective runs go
+/// through, with handles kept for stats reporting.
+pub struct BuiltObjective {
+    pub table: Arc<TableObjective>,
+    pub run: Arc<dyn Objective>,
+    pub faulty: Option<Arc<FaultyObjective>>,
+    pub resilient: Option<Arc<ResilientEvaluator>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> SessionConfig {
+        SessionConfig {
+            kernel: "adding".into(),
+            gpu: "a100".into(),
+            strategy: "random".into(),
+            budget: 20,
+            seed: 7,
+            space: None,
+            eval_timeout_ms: None,
+            max_retries: 0,
+            fault_plan: None,
+        }
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let cfg = SessionConfig {
+            seed: 0xDEAD_BEEF_0000_0001,
+            eval_timeout_ms: Some(250),
+            max_retries: 2,
+            ..base()
+        }
+        .validate()
+        .unwrap();
+        let back = SessionConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn validate_canonicalizes_aliases() {
+        let cfg = SessionConfig { kernel: "conv".into(), strategy: "ei".into(), ..base() }
+            .validate()
+            .unwrap();
+        assert_eq!(cfg.kernel, "convolution");
+    }
+
+    #[test]
+    fn unknown_names_are_rejected_with_suggestions() {
+        let err = SessionConfig { strategy: "bayesopt".into(), ..base() }.validate().unwrap_err();
+        assert!(err.contains("unknown strategy"), "{err}");
+        let err = SessionConfig { kernel: "nope".into(), ..base() }.validate().unwrap_err();
+        assert!(err.contains("unknown kernel"), "{err}");
+        let err = SessionConfig { gpu: "h100".into(), ..base() }.validate().unwrap_err();
+        assert!(err.contains("unknown GPU"), "{err}");
+        let err = SessionConfig { budget: 0, ..base() }.validate().unwrap_err();
+        assert!(err.contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn build_space_matches_the_objective_side() {
+        let cfg = base().validate().unwrap();
+        let (space, id) = cfg.build_space().unwrap();
+        assert_eq!(id, "adding@A100");
+        let built = cfg.build_objective().unwrap();
+        assert_eq!(space.len(), built.table.space().len());
+        assert!(built.faulty.is_none());
+        assert!(built.resilient.is_none());
+    }
+
+    #[test]
+    fn resilience_knobs_wrap_the_objective() {
+        let cfg =
+            SessionConfig { eval_timeout_ms: Some(100), max_retries: 1, ..base() }.validate().unwrap();
+        let built = cfg.build_objective().unwrap();
+        assert!(built.resilient.is_some());
+    }
+}

@@ -1,0 +1,33 @@
+//! Tuning-as-a-service: the `ktbo serve` daemon and its wire protocol.
+//!
+//! The paper's loop — propose a configuration, measure it on a GPU, feed
+//! the result back — is naturally separable: the optimizer (surrogate
+//! state, budgets, suggestion logic) can live in a long-running daemon
+//! while measurements arrive from clients. This module is that daemon:
+//!
+//! - [`config`] — [`SessionConfig`], the serializable "what run is this"
+//!   record shared by `ktbo tune`, the wire protocol, and checkpoints.
+//! - [`protocol`] — JSON-lines request/response framing
+//!   (`create`/`ask`/`tell`/`checkpoint`/`resume`/`close`/`status`/`shutdown`).
+//! - [`server`] — [`TuningServer`]: thousands of concurrent owned
+//!   [`Session`](crate::strategies::Session)s over one shared, persistent,
+//!   LRU-bounded [`EvalCache`](crate::objective::evalcache::EvalCache).
+//! - [`checkpoint`] — versioned session snapshots (config + trace);
+//!   resume replays the trace through a fresh driver.
+//! - [`client`] — a scripted client that evaluates suggestions locally
+//!   (simulation mode), used by `ktbo client`, the CI smoke, and the
+//!   N-thousand-session stress tests.
+//!
+//! Served runs are bit-identical to offline [`drive`](crate::strategies::drive):
+//! sessions park fresh suggestions without drawing RNG, table objectives
+//! ignore the eval RNG, and budget accounting is shared with the in-process
+//! engine — so the daemon adds distribution, not behavior.
+
+pub mod checkpoint;
+pub mod client;
+pub mod config;
+pub mod protocol;
+pub mod server;
+
+pub use config::SessionConfig;
+pub use server::{ServeOpts, TuningServer};

@@ -1,0 +1,139 @@
+//! The serve daemon's wire protocol: JSON lines over a socket.
+//!
+//! One request per line, one response line per request — trivially
+//! scriptable from `nc`, and framing-free. Every request carries a
+//! `cmd` field; session-scoped commands name their session:
+//!
+//! ```text
+//! {"cmd":"create","session":"s1","config":{"kernel":"adding","gpu":"a100",...}}
+//! {"cmd":"ask","session":"s1"}
+//! {"cmd":"tell","session":"s1","config_index":412,"time":1.532}
+//! {"cmd":"tell","session":"s1","config_index":9,"invalid":"compile"}
+//! {"cmd":"checkpoint","session":"s1"}
+//! {"cmd":"resume","session":"s1","checkpoint":{...}}
+//! {"cmd":"close","session":"s1"}
+//! {"cmd":"status"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! Responses always carry `"ok"`: `{"ok":true,...}` on success,
+//! `{"ok":false,"error":"..."}` on failure. A failed request never kills
+//! the connection — clients read the error and continue.
+
+use crate::objective::Eval;
+use crate::util::json::Json;
+use crate::util::jsonparse;
+
+/// A parsed protocol request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Create { session: String, config: Json },
+    Ask { session: String },
+    Tell { session: String, idx: usize, eval: Eval },
+    Checkpoint { session: String },
+    /// Rebuild a session from a checkpoint document — inline if given,
+    /// otherwise from the server's checkpoint directory.
+    Resume { session: String, checkpoint: Option<Json> },
+    Close { session: String },
+    Status,
+    Shutdown,
+}
+
+/// Parse one request line.
+pub fn parse(line: &str) -> Result<Request, String> {
+    let j = jsonparse::parse(line)?;
+    let cmd = j.get("cmd").and_then(Json::as_str).ok_or("request is missing 'cmd'")?;
+    let session = || -> Result<String, String> {
+        j.get("session")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("'{cmd}' needs a 'session' field"))
+    };
+    match cmd {
+        "create" => Ok(Request::Create {
+            session: session()?,
+            config: j.get("config").cloned().ok_or("'create' needs a 'config' object")?,
+        }),
+        "ask" => Ok(Request::Ask { session: session()? }),
+        "tell" => {
+            let idx = j
+                .get("config_index")
+                .and_then(Json::as_f64)
+                .filter(|v| *v >= 0.0)
+                .ok_or("'tell' needs a non-negative 'config_index'")? as usize;
+            let eval = match j.get("time").and_then(Json::as_f64) {
+                Some(t) => Eval::Valid(t),
+                None => {
+                    let label = j
+                        .get("invalid")
+                        .and_then(Json::as_str)
+                        .ok_or("'tell' needs 'time' (a number) or 'invalid' (a label)")?;
+                    Eval::from_invalid_label(label)
+                }
+            };
+            Ok(Request::Tell { session: session()?, idx, eval })
+        }
+        "checkpoint" => Ok(Request::Checkpoint { session: session()? }),
+        "resume" => {
+            Ok(Request::Resume { session: session()?, checkpoint: j.get("checkpoint").cloned() })
+        }
+        "close" => Ok(Request::Close { session: session()? }),
+        "status" => Ok(Request::Status),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!(
+            "unknown command '{other}' (expected create/ask/tell/checkpoint/resume/close/status/shutdown)"
+        )),
+    }
+}
+
+/// Start a success response.
+pub fn ok() -> Json {
+    Json::obj().set("ok", true)
+}
+
+/// A rendered error response line.
+pub fn err(msg: &str) -> String {
+    Json::obj().set("ok", false).set("error", msg).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_command() {
+        assert!(matches!(
+            parse(r#"{"cmd":"create","session":"s","config":{}}"#).unwrap(),
+            Request::Create { .. }
+        ));
+        assert!(matches!(parse(r#"{"cmd":"ask","session":"s"}"#).unwrap(), Request::Ask { .. }));
+        match parse(r#"{"cmd":"tell","session":"s","config_index":3,"time":2.5}"#).unwrap() {
+            Request::Tell { idx, eval, .. } => {
+                assert_eq!((idx, eval), (3, Eval::Valid(2.5)));
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(r#"{"cmd":"tell","session":"s","config_index":4,"invalid":"timeout"}"#).unwrap()
+        {
+            Request::Tell { eval, .. } => assert_eq!(eval, Eval::Timeout),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(parse(r#"{"cmd":"status"}"#).unwrap(), Request::Status));
+        assert!(matches!(parse(r#"{"cmd":"shutdown"}"#).unwrap(), Request::Shutdown));
+        assert!(matches!(
+            parse(r#"{"cmd":"resume","session":"s"}"#).unwrap(),
+            Request::Resume { checkpoint: None, .. }
+        ));
+    }
+
+    #[test]
+    fn malformed_requests_are_descriptive() {
+        assert!(parse("not json").is_err());
+        assert!(parse(r#"{"cmd":"ask"}"#).unwrap_err().contains("session"));
+        assert!(parse(r#"{"cmd":"tell","session":"s","config_index":-1,"time":1.0}"#)
+            .unwrap_err()
+            .contains("config_index"));
+        assert!(parse(r#"{"cmd":"warp"}"#).unwrap_err().contains("unknown command"));
+        assert!(err("boom").contains("\"ok\":false"));
+    }
+}

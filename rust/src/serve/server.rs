@@ -1,0 +1,477 @@
+//! The tuning daemon: many concurrent sessions, one shared cache.
+//!
+//! [`TuningServer`] is socket-free at its core — [`TuningServer::handle_line`]
+//! maps one request line to one response line, so the whole protocol is
+//! exercisable in-process (the stress tests drive thousands of scripted
+//! clients through it on a [`ShardPool`](crate::util::pool::ShardPool)
+//! without a single socket). [`TuningServer::serve_tcp`] is a thin
+//! thread-per-connection wrapper over the same entry point.
+//!
+//! Concurrency model: the session map is a mutex around `Arc<Mutex<Slot>>`
+//! handles — the map lock is held only to look up or insert a handle, so
+//! requests against different sessions proceed in parallel while two
+//! clients racing the *same* session serialize on its slot lock.
+//!
+//! State across restarts: the shared [`EvalCache`] persists measurements
+//! (JSONL journal, bounded by an LRU cap), and `checkpoint` requests
+//! snapshot sessions to `<dir>/<session>.json`; after a crash, `resume`
+//! rebuilds each session from its checkpoint by trace replay and the
+//! cache warm-starts from its journal.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::objective::evalcache::{EvalCache, RunMemo};
+use crate::serve::checkpoint::SessionCheckpoint;
+use crate::serve::config::SessionConfig;
+use crate::serve::protocol::{self, Request};
+use crate::space::SearchSpace;
+use crate::strategies::registry::by_name;
+use crate::strategies::{FevalBudget, Session, SessionNeed, SessionOpts, SessionTarget, Trace};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Daemon configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOpts {
+    /// JSONL journal backing the shared eval cache; `None` = in-memory.
+    pub cache_path: Option<PathBuf>,
+    /// LRU cap on cached evaluations; `None` = unbounded.
+    pub cache_capacity: Option<usize>,
+    /// Directory for `checkpoint`/`resume` snapshots; `None` disables
+    /// server-side persistence (inline checkpoints still work).
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+/// One live session and the config that rebuilds it.
+struct Slot {
+    config: SessionConfig,
+    obj_id: String,
+    session: Session,
+}
+
+/// A multiplexing tuning server over owned [`Session`]s.
+pub struct TuningServer {
+    opts: ServeOpts,
+    cache: Arc<EvalCache>,
+    sessions: Mutex<HashMap<String, Arc<Mutex<Slot>>>>,
+    /// Built spaces (and their objective ids) keyed by the config's
+    /// (kernel, gpu, space-file) triple — thousands of sessions on one
+    /// kernel share one space instead of re-enumerating it per `create`.
+    spaces: Mutex<HashMap<String, (Arc<SearchSpace>, String)>>,
+    shutdown: AtomicBool,
+}
+
+impl TuningServer {
+    pub fn new(opts: ServeOpts) -> Result<TuningServer, String> {
+        let cache = match &opts.cache_path {
+            Some(path) => EvalCache::persistent(path, opts.cache_capacity)?,
+            None => EvalCache::bounded(opts.cache_capacity),
+        };
+        if let Some(dir) = &opts.checkpoint_dir {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("cannot create checkpoint dir {}: {e}", dir.display()))?;
+        }
+        Ok(TuningServer {
+            opts,
+            cache: Arc::new(cache),
+            sessions: Mutex::new(HashMap::new()),
+            spaces: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Handle one request line, producing one response line (no trailing
+    /// newline). Never panics on malformed input — errors come back as
+    /// `{"ok":false,"error":...}`.
+    pub fn handle_line(&self, line: &str) -> String {
+        match protocol::parse(line) {
+            Ok(req) => match self.handle(req) {
+                Ok(resp) => resp.render(),
+                Err(e) => protocol::err(&e),
+            },
+            Err(e) => protocol::err(&e),
+        }
+    }
+
+    fn handle(&self, req: Request) -> Result<Json, String> {
+        match req {
+            Request::Create { session, config } => {
+                let cfg = SessionConfig::from_json(&config)?;
+                self.create(&session, cfg, None)
+            }
+            Request::Ask { session } => self.with_slot(&session, |slot| {
+                Ok(match slot.session.next_ask() {
+                    SessionNeed::Eval(idx) => protocol::ok()
+                        .set("status", "eval")
+                        .set("config_index", idx)
+                        .set("config", slot.session.space().describe(idx)),
+                    SessionNeed::Done => done_response(slot),
+                })
+            }),
+            Request::Tell { session, idx, eval } => self.with_slot(&session, |slot| {
+                match slot.session.tell(idx, eval) {
+                    Ok(()) => Ok(protocol::ok()
+                        .set("status", "recorded")
+                        .set("evaluations", slot.session.trace().len())),
+                    Err(e) => Err(e.to_string()),
+                }
+            }),
+            Request::Checkpoint { session } => {
+                let doc = self.with_slot(&session, |slot| {
+                    let ckpt = SessionCheckpoint {
+                        config: slot.config.clone(),
+                        trace: slot.session.checkpoint(),
+                    };
+                    Ok(ckpt.to_json())
+                })?;
+                if let Some(dir) = &self.opts.checkpoint_dir {
+                    let path = dir.join(format!("{session}.json"));
+                    std::fs::write(&path, doc.render())
+                        .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+                }
+                Ok(protocol::ok().set("checkpoint", doc))
+            }
+            Request::Resume { session, checkpoint } => {
+                let ckpt = match checkpoint {
+                    Some(j) => SessionCheckpoint::from_json(&j)?,
+                    None => {
+                        let dir = self.opts.checkpoint_dir.as_ref().ok_or(
+                            "no inline checkpoint and the server has no --checkpoint-dir",
+                        )?;
+                        let path = dir.join(format!("{session}.json"));
+                        let text = std::fs::read_to_string(&path)
+                            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+                        SessionCheckpoint::parse(&text)?
+                    }
+                };
+                self.create(&session, ckpt.config, Some(ckpt.trace))
+            }
+            Request::Close { session } => {
+                let slot = self
+                    .sessions
+                    .lock()
+                    .unwrap()
+                    .remove(&session)
+                    .ok_or_else(|| format!("no session named '{session}'"))?;
+                let slot = slot.lock().unwrap();
+                Ok(done_response(&slot).set("closed", true))
+            }
+            Request::Status => Ok(self.status()),
+            Request::Shutdown => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Ok(protocol::ok().set("shutting_down", true))
+            }
+        }
+    }
+
+    /// Build (or rebuild, when `resume_from` is set) a session slot.
+    fn create(
+        &self,
+        name: &str,
+        cfg: SessionConfig,
+        resume_from: Option<Trace>,
+    ) -> Result<Json, String> {
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c))
+            || name.contains("..")
+        {
+            return Err(format!(
+                "session name '{name}' is invalid (use letters, digits, '.', '_', '-')"
+            ));
+        }
+        let (space, obj_id) = {
+            // Building a space enumerates the full restricted Cartesian
+            // product, so it happens once per distinct triple; holding the
+            // lock across the build just serializes the rare cold creates.
+            let key = format!("{}|{}|{}", cfg.kernel, cfg.gpu, cfg.space.as_deref().unwrap_or(""));
+            let mut spaces = self.spaces.lock().unwrap();
+            match spaces.get(&key) {
+                Some((space, obj_id)) => (Arc::clone(space), obj_id.clone()),
+                None => {
+                    let (space, obj_id) = cfg.build_space()?;
+                    spaces.insert(key, (Arc::clone(&space), obj_id.clone()));
+                    (space, obj_id)
+                }
+            }
+        };
+        let driver = by_name(&cfg.strategy).expect("validated strategy name").driver(&space);
+        let resumed = resume_from.as_ref().map(Trace::len);
+        let session = Session::build(
+            driver,
+            SessionTarget::External(Arc::clone(&space)),
+            Box::new(FevalBudget::new(cfg.budget)),
+            Rng::new(cfg.seed),
+            SessionOpts {
+                memo: Some(RunMemo::shared(Arc::clone(&self.cache), &obj_id)),
+                resume_from,
+            },
+        );
+        let slot = Slot { config: cfg, obj_id, session };
+        let mut sessions = self.sessions.lock().unwrap();
+        if sessions.contains_key(name) {
+            return Err(format!("session '{name}' already exists"));
+        }
+        let resp = protocol::ok()
+            .set("session", name)
+            .set("strategy", slot.config.strategy.as_str())
+            .set("objective", slot.obj_id.as_str())
+            .set("space_size", space.len())
+            .set("budget", slot.config.budget);
+        let resp = match resumed {
+            Some(n) => resp.set("resumed_evaluations", n),
+            None => resp,
+        };
+        sessions.insert(name.to_string(), Arc::new(Mutex::new(slot)));
+        Ok(resp)
+    }
+
+    fn with_slot<F>(&self, name: &str, f: F) -> Result<Json, String>
+    where
+        F: FnOnce(&mut Slot) -> Result<Json, String>,
+    {
+        let slot = {
+            let sessions = self.sessions.lock().unwrap();
+            Arc::clone(sessions.get(name).ok_or_else(|| format!("no session named '{name}'"))?)
+        };
+        let mut slot = slot.lock().unwrap();
+        f(&mut slot)
+    }
+
+    /// The `status` response: live-session count plus global and
+    /// per-objective cache effectiveness.
+    fn status(&self) -> Json {
+        let s = self.cache.stats();
+        let mut per_obj = Json::obj();
+        for (id, os) in self.cache.objective_stats() {
+            per_obj = per_obj.set(
+                &id,
+                Json::obj()
+                    .set("hits", os.hits as usize)
+                    .set("misses", os.misses as usize)
+                    .set("evictions", os.evictions as usize),
+            );
+        }
+        protocol::ok()
+            .set("sessions", self.sessions.lock().unwrap().len())
+            .set(
+                "cache",
+                Json::obj()
+                    .set("entries", self.cache.len())
+                    .set("hits", s.hits as usize)
+                    .set("misses", s.misses as usize)
+                    .set("evictions", s.evictions as usize),
+            )
+            .set("objectives", per_obj)
+    }
+
+    /// Accept loop: thread-per-connection, JSON lines in, JSON lines out.
+    /// Returns after a `shutdown` request has been honored (in-flight
+    /// connections are detached; the caller usually exits the process).
+    pub fn serve_tcp(self: Arc<Self>, listener: TcpListener) -> std::io::Result<()> {
+        listener.set_nonblocking(true)?;
+        loop {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    let server = Arc::clone(&self);
+                    std::thread::spawn(move || serve_conn(&server, stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if self.is_shutdown() {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Best-effort journal compaction so a restart replays a minimal
+        // file instead of the full append history.
+        let _ = self.cache.compact();
+        Ok(())
+    }
+}
+
+/// Session summary used by terminal `ask` responses and `close`.
+fn done_response(slot: &Slot) -> Json {
+    let trace = slot.session.trace();
+    let resp = protocol::ok()
+        .set("status", "done")
+        .set("evaluations", trace.len())
+        .set("objective", slot.obj_id.as_str());
+    match trace.best() {
+        Some((idx, val)) => resp
+            .set("best_index", idx)
+            .set("best", val)
+            .set("best_config", slot.session.space().describe(idx)),
+        None => resp.set("best", Json::Null),
+    }
+}
+
+fn serve_conn(server: &Arc<TuningServer>, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut writer = stream;
+    for line in BufReader::new(read_half).lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = server.handle_line(&line);
+        if writeln!(writer, "{resp}").and_then(|_| writer.flush()).is_err() {
+            break;
+        }
+        if server.is_shutdown() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::jsonparse;
+
+    fn server() -> TuningServer {
+        TuningServer::new(ServeOpts::default()).unwrap()
+    }
+
+    fn req(server: &TuningServer, line: &str) -> Json {
+        jsonparse::parse(&server.handle_line(line)).expect("responses are valid JSON")
+    }
+
+    fn ok(j: &Json) -> bool {
+        j.get("ok") == Some(&Json::Bool(true))
+    }
+
+    const CREATE: &str = r#"{"cmd":"create","session":"s1","config":{"kernel":"adding","gpu":"a100","strategy":"random","budget":5,"seed":"0x7"}}"#;
+
+    #[test]
+    fn create_ask_tell_runs_a_session_to_completion() {
+        let srv = server();
+        let r = req(&srv, CREATE);
+        assert!(ok(&r), "{r:?}");
+        assert_eq!(r.get("strategy").and_then(Json::as_str), Some("random"));
+        loop {
+            let a = req(&srv, r#"{"cmd":"ask","session":"s1"}"#);
+            assert!(ok(&a), "{a:?}");
+            match a.get("status").and_then(Json::as_str) {
+                Some("eval") => {
+                    let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+                    let t = req(
+                        &srv,
+                        &format!(
+                            r#"{{"cmd":"tell","session":"s1","config_index":{idx},"time":{}}}"#,
+                            1.0 + idx as f64 * 0.001
+                        ),
+                    );
+                    assert!(ok(&t), "{t:?}");
+                }
+                Some("done") => {
+                    assert_eq!(a.get("evaluations").and_then(Json::as_f64), Some(5.0));
+                    break;
+                }
+                other => panic!("unexpected status {other:?}"),
+            }
+        }
+        let c = req(&srv, r#"{"cmd":"close","session":"s1"}"#);
+        assert!(ok(&c) && c.get("closed") == Some(&Json::Bool(true)), "{c:?}");
+        let gone = req(&srv, r#"{"cmd":"ask","session":"s1"}"#);
+        assert!(!ok(&gone));
+    }
+
+    #[test]
+    fn duplicate_and_invalid_session_names_are_rejected() {
+        let srv = server();
+        assert!(ok(&req(&srv, CREATE)));
+        let dup = req(&srv, CREATE);
+        assert!(!ok(&dup), "{dup:?}");
+        let bad = req(
+            &srv,
+            r#"{"cmd":"create","session":"../etc/passwd","config":{"kernel":"adding","gpu":"a100","strategy":"random","budget":5,"seed":"0x7"}}"#,
+        );
+        assert!(!ok(&bad), "{bad:?}");
+    }
+
+    #[test]
+    fn unknown_strategy_is_rejected_through_the_registry_path() {
+        let srv = server();
+        let r = req(
+            &srv,
+            r#"{"cmd":"create","session":"s1","config":{"kernel":"adding","gpu":"a100","strategy":"bayes","budget":5,"seed":"0x7"}}"#,
+        );
+        assert!(!ok(&r));
+        let msg = r.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.contains("unknown strategy"), "{msg}");
+    }
+
+    #[test]
+    fn status_reports_sessions_and_per_objective_cache_stats() {
+        let srv = server();
+        assert!(ok(&req(&srv, CREATE)));
+        let a = req(&srv, r#"{"cmd":"ask","session":"s1"}"#);
+        let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+        req(&srv, &format!(r#"{{"cmd":"tell","session":"s1","config_index":{idx},"time":2.0}}"#));
+        let s = req(&srv, r#"{"cmd":"status"}"#);
+        assert_eq!(s.get("sessions").and_then(Json::as_f64), Some(1.0));
+        let per_obj = s.get("objectives").unwrap();
+        let adding = per_obj.get("adding@A100").expect("per-objective stats present");
+        assert_eq!(adding.get("misses").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn double_tell_is_rejected_not_rerecorded() {
+        let srv = server();
+        assert!(ok(&req(&srv, CREATE)));
+        let a = req(&srv, r#"{"cmd":"ask","session":"s1"}"#);
+        let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+        let tell = format!(r#"{{"cmd":"tell","session":"s1","config_index":{idx},"time":2.0}}"#);
+        assert!(ok(&req(&srv, &tell)));
+        let second = req(&srv, &tell);
+        assert!(!ok(&second), "{second:?}");
+        let msg = second.get("error").and_then(Json::as_str).unwrap();
+        assert!(msg.contains("no ask is outstanding"), "{msg}");
+        // The trace recorded exactly one evaluation.
+        let s = req(&srv, r#"{"cmd":"checkpoint","session":"s1"}"#);
+        let trace = s.get("checkpoint").unwrap().get("trace").unwrap().as_arr().unwrap();
+        assert_eq!(trace.len(), 1);
+    }
+
+    #[test]
+    fn inline_checkpoint_resume_continues_the_run() {
+        let srv = server();
+        assert!(ok(&req(&srv, CREATE)));
+        // Two evals, checkpoint, close, resume under a new server.
+        for _ in 0..2 {
+            let a = req(&srv, r#"{"cmd":"ask","session":"s1"}"#);
+            let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+            req(
+                &srv,
+                &format!(r#"{{"cmd":"tell","session":"s1","config_index":{idx},"time":2.0}}"#),
+            );
+        }
+        let ck = req(&srv, r#"{"cmd":"checkpoint","session":"s1"}"#);
+        let doc = ck.get("checkpoint").unwrap().clone();
+        let srv2 = server();
+        let resume = Json::obj()
+            .set("cmd", "resume")
+            .set("session", "s1")
+            .set("checkpoint", doc)
+            .render();
+        let r = req(&srv2, &resume);
+        assert!(ok(&r), "{r:?}");
+        assert_eq!(r.get("resumed_evaluations").and_then(Json::as_f64), Some(2.0));
+    }
+}

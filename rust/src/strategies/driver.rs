@@ -16,10 +16,28 @@
 //!   target value) owned by the loop, not the strategy — the axis that
 //!   arXiv:2210.01465 argues must live in the driver for fair
 //!   cross-strategy comparison;
-//! - [`StepSession`] exposes the same loop one step at a time, which is
-//!   what gives the orchestrator step-level interleaving and within-cell
-//!   checkpoint/resume (a checkpoint is just the trace so far; resume
-//!   replays it through a fresh driver).
+//! - [`Session`] is the *owned* form of the same loop: driver + budget +
+//!   RNG + engine state in one movable value, advanced one step at a
+//!   time. It is what gives the orchestrator step-level interleaving,
+//!   within-cell checkpoint/resume (a checkpoint is just the trace so
+//!   far; resume replays it through a fresh driver), and — because it
+//!   borrows nothing — what lets the `ktbo serve` daemon
+//!   ([`crate::serve`]) hold thousands of runs open across wire
+//!   round-trips.
+//!
+//! # One engine, three frontends
+//!
+//! `DriveCore` is the single engine: [`drive`]/[`drive_with`] loop it to
+//! completion against a borrowed objective, [`Session`] owns it and steps
+//! it (with the objective behind an `Arc`, or absent entirely), and the
+//! serve daemon multiplexes many `Session`s. In *external-evaluation*
+//! mode (a session built with [`Session::external`]) the engine has no
+//! objective at all: a fresh suggestion is parked instead of measured,
+//! surfaced through [`Session::next_ask`], and completed by
+//! [`Session::tell`] when the client reports the measurement. Everything
+//! else — budget accounting, memoization, replay, tracing — is the same
+//! code path, which is why a served session's trace is bit-identical to
+//! an offline [`drive`] of the same strategy, seed, and budget.
 //!
 //! # The drive loop contract
 //!
@@ -34,8 +52,9 @@
 //! 3. Otherwise the loop asks the budget for one fresh evaluation. If the
 //!    budget refuses, the run ends immediately (the exact analogue of the
 //!    legacy `CachedEvaluator::eval` returning `None`).
-//! 4. The objective is evaluated with the run's RNG, the result is
-//!    recorded and told back.
+//! 4. The evaluation source supplies the result: the objective is run
+//!    with the session RNG, or (external mode) the suggestion is parked
+//!    for the client.
 //!
 //! Between batches the loop checks `Budget::proceed`; a driver returning
 //! [`Ask::Finished`] (or an empty batch) ends the run.
@@ -63,7 +82,9 @@
 //! (`DriveOpts::pool`) derives one child RNG stream per fresh suggestion
 //! from a snapshot of the main RNG, so the main stream is untouched:
 //! table-backed objectives (which ignore the evaluation RNG) produce the
-//! same trace with and without a pool, at every worker count.
+//! same trace with and without a pool, at every worker count. External
+//! evaluation preserves the same property: the parked suggestion never
+//! draws from the session RNG, so ask streams match the in-process run.
 //!
 //! # Resume caveat
 //!
@@ -75,6 +96,8 @@
 //! noise stream after resume.
 
 use std::collections::VecDeque;
+use std::fmt;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::objective::evalcache::RunMemo;
@@ -314,11 +337,52 @@ pub struct DriveOpts<'p> {
     pub pool: Option<&'p ShardPool>,
 }
 
-/// The engine behind [`drive`] and [`StepSession`]: owns the trace, the
-/// memo, the pending-suggestion queue, and the replay prefix.
-struct DriveCore<'a> {
-    obj: &'a dyn Objective,
+/// Where one step of the engine gets its space and its fresh
+/// measurements. `obj: None` is external-evaluation (serve) mode: the
+/// engine parks fresh suggestions instead of measuring them.
+#[derive(Clone, Copy)]
+struct EvalSrc<'a> {
     space: &'a SearchSpace,
+    obj: Option<&'a dyn Objective>,
+}
+
+/// Why a [`Session::tell`] was rejected. The engine accepts exactly one
+/// measurement per outstanding ask, so a double `tell` (a retrying or
+/// confused client) is refused instead of silently re-recorded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TellError {
+    /// No ask is outstanding: either nothing was asked yet, or the
+    /// previous suggestion was already told back.
+    NotAwaiting { told: usize },
+    /// A measurement for a different configuration than the outstanding
+    /// suggestion.
+    WrongSuggestion { asked: usize, told: usize },
+}
+
+impl fmt::Display for TellError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TellError::NotAwaiting { told } => write!(
+                f,
+                "no ask is outstanding (config {told} was already told back or never asked); \
+                 call ask before tell"
+            ),
+            TellError::WrongSuggestion { asked, told } => write!(
+                f,
+                "tell for config {told} but the outstanding suggestion is config {asked}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TellError {}
+
+/// The engine behind [`drive`] and [`Session`]: owns the trace, the
+/// memo, the pending-suggestion queue, and the replay prefix. Holds no
+/// borrows — objective and space arrive per step through [`EvalSrc`] —
+/// so an owning wrapper can live arbitrarily long (the serve daemon's
+/// requirement).
+struct DriveCore {
     memoize: bool,
     memo: RunMemo,
     trace: Trace,
@@ -326,6 +390,10 @@ struct DriveCore<'a> {
     replay: VecDeque<(usize, Eval)>,
     /// Batch evaluations prefetched on a pool, consumed by `deliver`.
     prefetched: std::collections::HashMap<usize, Eval>,
+    /// External-evaluation mode: the fresh suggestion currently waiting
+    /// for a client-side measurement (surfaced by [`Session::next_ask`],
+    /// cleared by [`Session::tell`]).
+    awaiting: Option<usize>,
     /// Trace length when progress was last observed, and the number of
     /// steps taken since — the stall guard's state.
     last_len: usize,
@@ -333,22 +401,19 @@ struct DriveCore<'a> {
     done: bool,
 }
 
-impl<'a> DriveCore<'a> {
-    fn new(obj: &'a dyn Objective, memoize: bool, opts: DriveOpts<'_>) -> DriveCore<'a> {
-        let memo = opts.memo.unwrap_or_default();
-        let replay = opts
-            .resume_from
-            .map(|t| t.records.into_iter().collect())
-            .unwrap_or_default();
+impl DriveCore {
+    fn new(memoize: bool, memo: Option<RunMemo>, resume_from: Option<Trace>) -> DriveCore {
+        let memo = memo.unwrap_or_default();
+        let replay =
+            resume_from.map(|t| t.records.into_iter().collect()).unwrap_or_default();
         DriveCore {
-            obj,
-            space: obj.space(),
             memoize,
             memo,
             trace: Trace::new(),
             pending: VecDeque::new(),
             replay,
             prefetched: std::collections::HashMap::new(),
+            awaiting: None,
             last_len: 0,
             stalls: 0,
             done: false,
@@ -359,27 +424,29 @@ impl<'a> DriveCore<'a> {
     /// tolerates. Generous — asks and memo revisits legitimately add no
     /// record — but finite, so a driver spinning on revisits against an
     /// all-invalid objective ends the run instead of hanging it.
-    fn stall_limit(&self) -> usize {
-        4096 + 4 * self.space.len()
+    fn stall_limit(space: &SearchSpace) -> usize {
+        4096 + 4 * space.len()
     }
 
     /// Advance by one unit of work: deliver one pending suggestion, or
     /// ask the driver for the next batch. Returns `false` once the run
-    /// is over.
+    /// is over *or* (external mode) a suggestion is parked awaiting its
+    /// client-side measurement.
     fn step(
         &mut self,
         driver: &mut dyn SearchDriver,
         budget: &dyn Budget,
         rng: &mut Rng,
+        src: EvalSrc<'_>,
         pool: Option<&ShardPool>,
     ) -> bool {
-        let live = self.advance(driver, budget, rng, pool);
+        let live = self.advance(driver, budget, rng, src, pool);
         if self.trace.len() > self.last_len {
             self.last_len = self.trace.len();
             self.stalls = 0;
         } else if live {
             self.stalls += 1;
-            if self.stalls > self.stall_limit() {
+            if self.stalls > Self::stall_limit(src.space) {
                 self.end_run();
                 return false;
             }
@@ -392,14 +459,15 @@ impl<'a> DriveCore<'a> {
         driver: &mut dyn SearchDriver,
         budget: &dyn Budget,
         rng: &mut Rng,
+        src: EvalSrc<'_>,
         pool: Option<&ShardPool>,
     ) -> bool {
-        if self.done {
+        if self.done || self.awaiting.is_some() {
             return false;
         }
         if let Some(idx) = self.pending.pop_front() {
-            self.deliver(idx, driver, budget, rng);
-            return !self.done;
+            self.deliver(idx, driver, budget, rng, src);
+            return !self.done && self.awaiting.is_none();
         }
         if !budget.proceed(&self.trace) {
             self.done = true;
@@ -407,7 +475,7 @@ impl<'a> DriveCore<'a> {
         }
         let ask = {
             let mut ctx = DriveCtx {
-                space: self.space,
+                space: src.space,
                 rng,
                 trace: &self.trace,
                 memo: &self.memo,
@@ -425,9 +493,9 @@ impl<'a> DriveCore<'a> {
                     self.done = true;
                     return false;
                 }
-                if let Some(pool) = pool {
+                if let (Some(pool), Some(obj)) = (pool, src.obj) {
                     if batch.len() > 1 && self.replay.is_empty() {
-                        self.prefetch(&batch, pool, budget, rng);
+                        self.prefetch(&batch, pool, budget, rng, obj);
                     }
                 }
                 self.pending.extend(batch);
@@ -436,13 +504,14 @@ impl<'a> DriveCore<'a> {
         }
     }
 
-    /// Evaluate (or recall) one suggestion and tell the driver.
+    /// Evaluate (or recall, replay, or park) one suggestion.
     fn deliver(
         &mut self,
         idx: usize,
         driver: &mut dyn SearchDriver,
         budget: &dyn Budget,
         rng: &mut Rng,
+        src: EvalSrc<'_>,
     ) {
         if idx == OUT_OF_SPACE {
             // Constraint violation in a constraint-blind emulation: fails
@@ -456,7 +525,7 @@ impl<'a> DriveCore<'a> {
             driver.tell(Observation { idx, eval: Eval::CompileError, cached: false });
             return;
         }
-        debug_assert!(idx < self.space.len(), "driver proposed index {idx} out of range");
+        debug_assert!(idx < src.space.len(), "driver proposed index {idx} out of range");
         if self.memoize {
             if let Some(eval) = self.memo.recall(idx) {
                 driver.tell(Observation { idx, eval, cached: true });
@@ -479,8 +548,23 @@ impl<'a> DriveCore<'a> {
             // are per run), but the objective is not re-executed.
             e
         } else {
-            self.obj.evaluate(idx, rng)
+            match src.obj {
+                Some(obj) => obj.evaluate(idx, rng),
+                None => {
+                    // External-evaluation mode: park the suggestion until
+                    // the client reports its measurement via `tell`.
+                    self.awaiting = Some(idx);
+                    return;
+                }
+            }
         };
+        self.finish(idx, eval, driver);
+    }
+
+    /// Record one fresh (budget-consuming) measurement and tell the
+    /// driver — the single commit point shared by in-process evaluation
+    /// and external `tell`.
+    fn finish(&mut self, idx: usize, eval: Eval, driver: &mut dyn SearchDriver) {
         if self.memoize {
             self.memo.record(idx, eval);
         }
@@ -488,10 +572,29 @@ impl<'a> DriveCore<'a> {
         driver.tell(Observation { idx, eval, cached: false });
     }
 
+    /// Complete the outstanding external ask with a client measurement.
+    fn tell_external(
+        &mut self,
+        idx: usize,
+        eval: Eval,
+        driver: &mut dyn SearchDriver,
+    ) -> Result<(), TellError> {
+        match self.awaiting {
+            Some(asked) if asked == idx => {
+                self.awaiting = None;
+                self.finish(idx, eval, driver);
+                Ok(())
+            }
+            Some(asked) => Err(TellError::WrongSuggestion { asked, told: idx }),
+            None => Err(TellError::NotAwaiting { told: idx }),
+        }
+    }
+
     fn end_run(&mut self) {
         self.done = true;
         self.pending.clear();
         self.prefetched.clear();
+        self.awaiting = None;
     }
 
     /// Pop the next replay record for a fresh evaluation of `idx`,
@@ -522,7 +625,14 @@ impl<'a> DriveCore<'a> {
     /// layered over a feval cap still prefetches — it may speculatively
     /// evaluate past the target within one batch, bounded by the
     /// remaining feval room.)
-    fn prefetch(&mut self, batch: &[usize], pool: &ShardPool, budget: &dyn Budget, rng: &Rng) {
+    fn prefetch(
+        &mut self,
+        batch: &[usize],
+        pool: &ShardPool,
+        budget: &dyn Budget,
+        rng: &Rng,
+        obj: &dyn Objective,
+    ) {
         let Some(max) = budget.max_fevals() else { return };
         if !budget.allows_eval(&self.trace) {
             return;
@@ -555,7 +665,6 @@ impl<'a> DriveCore<'a> {
         let mut seeder = rng.clone();
         let mut rngs: Vec<Rng> = (0..to_eval.len()).map(|i| seeder.split(i as u64 + 1)).collect();
         let mut results: Vec<Option<Eval>> = vec![None; to_eval.len()];
-        let obj = self.obj;
         {
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = to_eval
                 .iter()
@@ -595,54 +704,188 @@ pub fn drive_with(
     opts: DriveOpts<'_>,
 ) -> Trace {
     let pool = opts.pool;
-    let mut core = DriveCore::new(obj, driver.memoize(), opts);
-    while core.step(driver, budget, rng, pool) {}
+    let mut core = DriveCore::new(driver.memoize(), opts.memo, opts.resume_from);
+    let src = EvalSrc { space: obj.space(), obj: Some(obj) };
+    while core.step(driver, budget, rng, src, pool) {}
     core.trace
 }
 
-/// One tuning run held open between steps: the unit of step-level
-/// orchestration. The orchestrator advances many sessions in lockstep;
-/// `checkpoint` between steps snapshots the run (the trace is the whole
-/// externally visible state), and [`StepSession::resume`] rebuilds a
-/// session from such a snapshot by replaying it through a fresh driver.
-pub struct StepSession<'a> {
+/// What an external-evaluation session needs next (see
+/// [`Session::next_ask`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionNeed {
+    /// Measure this configuration and report back via [`Session::tell`].
+    Eval(usize),
+    /// The run is complete.
+    Done,
+}
+
+/// Where a [`Session`]'s measurements come from.
+pub enum SessionTarget {
+    /// In-process: the session owns its objective and evaluates fresh
+    /// suggestions itself (the orchestrator's interleaving mode).
+    Objective(Arc<dyn Objective>),
+    /// External: evaluation happens client-side (the serve daemon's
+    /// mode); the session only knows the search space, and fresh
+    /// suggestions surface through [`Session::next_ask`].
+    External(Arc<SearchSpace>),
+}
+
+/// Construction options for [`Session::build`].
+#[derive(Default)]
+pub struct SessionOpts {
+    /// Backing store for in-run memoization; `None` = fresh private
+    /// store. A [`RunMemo::shared`] view lets sessions of one objective
+    /// share evaluations across a daemon's lifetime.
+    pub memo: Option<RunMemo>,
+    /// Trace prefix (a checkpoint) to replay through the fresh driver.
+    pub resume_from: Option<Trace>,
+}
+
+/// One tuning run held open between steps — the owned unit of
+/// step-level orchestration and of the serve daemon's multiplexing.
+///
+/// A `Session` owns its driver, budget, RNG, and engine state, plus
+/// either an `Arc`'d objective (in-process evaluation) or just an
+/// `Arc`'d space (external evaluation); it borrows nothing, so it can be
+/// stored in maps, moved across threads, and held open across wire
+/// round-trips. `checkpoint` between steps snapshots the run (the trace
+/// is the whole externally visible state), and [`Session::resume`] /
+/// [`Session::external_resume`] rebuild a session from such a snapshot
+/// by replaying it through a fresh driver.
+pub struct Session {
     driver: Box<dyn SearchDriver>,
     budget: Box<dyn Budget>,
     rng: Rng,
-    core: DriveCore<'a>,
+    objective: Option<Arc<dyn Objective>>,
+    space: Option<Arc<SearchSpace>>,
+    core: DriveCore,
 }
 
-impl<'a> StepSession<'a> {
+impl Session {
+    /// An in-process session: fresh suggestions are evaluated against
+    /// `objective` as the session steps.
     pub fn new(
         driver: Box<dyn SearchDriver>,
-        obj: &'a dyn Objective,
+        objective: Arc<dyn Objective>,
         budget: Box<dyn Budget>,
         rng: Rng,
-    ) -> StepSession<'a> {
-        let memoize = driver.memoize();
-        StepSession { driver, budget, rng, core: DriveCore::new(obj, memoize, DriveOpts::default()) }
+    ) -> Session {
+        Session::build(driver, SessionTarget::Objective(objective), budget, rng, SessionOpts::default())
     }
 
-    /// Rebuild a session from a checkpoint: `prefix` (a trace snapshot
-    /// taken between steps) is replayed through the fresh `driver`
-    /// without re-executing the objective, then the run continues live.
-    /// `rng` must be the same stream the original run started with.
+    /// Rebuild an in-process session from a checkpoint: `prefix` (a trace
+    /// snapshot) is replayed through the fresh `driver` without
+    /// re-executing the objective, then the run continues live. `rng`
+    /// must be the same stream the original run started with.
     pub fn resume(
         driver: Box<dyn SearchDriver>,
-        obj: &'a dyn Objective,
+        objective: Arc<dyn Objective>,
         budget: Box<dyn Budget>,
         rng: Rng,
         prefix: Trace,
-    ) -> StepSession<'a> {
+    ) -> Session {
+        let opts = SessionOpts { resume_from: Some(prefix), ..SessionOpts::default() };
+        Session::build(driver, SessionTarget::Objective(objective), budget, rng, opts)
+    }
+
+    /// An external-evaluation session: the daemon-side half of a served
+    /// tuning run. Drive it with [`Session::next_ask`] / [`Session::tell`].
+    pub fn external(
+        driver: Box<dyn SearchDriver>,
+        space: Arc<SearchSpace>,
+        budget: Box<dyn Budget>,
+        rng: Rng,
+    ) -> Session {
+        Session::build(driver, SessionTarget::External(space), budget, rng, SessionOpts::default())
+    }
+
+    /// [`Session::resume`] for external-evaluation sessions.
+    pub fn external_resume(
+        driver: Box<dyn SearchDriver>,
+        space: Arc<SearchSpace>,
+        budget: Box<dyn Budget>,
+        rng: Rng,
+        prefix: Trace,
+    ) -> Session {
+        let opts = SessionOpts { resume_from: Some(prefix), ..SessionOpts::default() };
+        Session::build(driver, SessionTarget::External(space), budget, rng, opts)
+    }
+
+    /// The all-options constructor the conveniences above delegate to.
+    pub fn build(
+        driver: Box<dyn SearchDriver>,
+        target: SessionTarget,
+        budget: Box<dyn Budget>,
+        rng: Rng,
+        opts: SessionOpts,
+    ) -> Session {
         let memoize = driver.memoize();
-        let opts = DriveOpts { resume_from: Some(prefix), ..DriveOpts::default() };
-        StepSession { driver, budget, rng, core: DriveCore::new(obj, memoize, opts) }
+        let (objective, space) = match target {
+            SessionTarget::Objective(o) => (Some(o), None),
+            SessionTarget::External(s) => (None, Some(s)),
+        };
+        Session {
+            driver,
+            budget,
+            rng,
+            objective,
+            space,
+            core: DriveCore::new(memoize, opts.memo, opts.resume_from),
+        }
+    }
+
+    /// The session's search space (the objective's, or the owned one in
+    /// external mode).
+    pub fn space(&self) -> &SearchSpace {
+        match (&self.space, &self.objective) {
+            (Some(s), _) => s,
+            (None, Some(o)) => o.space(),
+            (None, None) => unreachable!("a session holds an objective or a space"),
+        }
     }
 
     /// Advance one step (one delivery or one ask). Returns `false` once
-    /// the run is over.
+    /// the run is over or (external mode) a suggestion is parked for the
+    /// client.
     pub fn step(&mut self) -> bool {
-        self.core.step(self.driver.as_mut(), self.budget.as_ref(), &mut self.rng, None)
+        let src = EvalSrc {
+            space: match (&self.space, &self.objective) {
+                (Some(s), _) => s,
+                (None, Some(o)) => o.space(),
+                (None, None) => unreachable!("a session holds an objective or a space"),
+            },
+            obj: self.objective.as_deref(),
+        };
+        self.core.step(self.driver.as_mut(), self.budget.as_ref(), &mut self.rng, src, None)
+    }
+
+    /// Advance an external-evaluation session until it needs a
+    /// measurement or finishes. Idempotent: asking again without an
+    /// intervening [`Session::tell`] returns the same outstanding
+    /// suggestion — a client that reconnects mid-ask just asks again.
+    pub fn next_ask(&mut self) -> SessionNeed {
+        loop {
+            if let Some(idx) = self.core.awaiting {
+                return SessionNeed::Eval(idx);
+            }
+            if self.core.done {
+                return SessionNeed::Done;
+            }
+            self.step();
+        }
+    }
+
+    /// Report the client-side measurement for the outstanding suggestion.
+    /// Exactly one `tell` per ask: a second `tell` (or one for a
+    /// different configuration) is rejected, not re-recorded.
+    pub fn tell(&mut self, idx: usize, eval: Eval) -> Result<(), TellError> {
+        self.core.tell_external(idx, eval, self.driver.as_mut())
+    }
+
+    /// The configuration currently awaiting a client-side measurement.
+    pub fn awaiting(&self) -> Option<usize> {
+        self.core.awaiting
     }
 
     /// Replayed records still pending (a resumed session reports `true`
@@ -659,16 +902,18 @@ impl<'a> StepSession<'a> {
         &self.core.trace
     }
 
-    /// Snapshot the run between steps. With any pending batch delivered,
-    /// the trace is sufficient state to resume from.
+    /// Snapshot the run between steps. The trace is sufficient state to
+    /// resume from: an outstanding (un-told) ask is *not* part of the
+    /// snapshot — after resume the driver deterministically re-proposes
+    /// it, which is what makes a mid-ask client disconnect recoverable.
     pub fn checkpoint(&self) -> Trace {
         self.core.trace.clone()
     }
 
     /// True when a checkpoint taken now captures the full run state
-    /// (no partially delivered batch in flight).
+    /// (no partially delivered batch or outstanding ask in flight).
     pub fn at_step_boundary(&self) -> bool {
-        self.core.pending.is_empty()
+        self.core.pending.is_empty() && self.core.awaiting.is_none()
     }
 
     pub fn into_trace(self) -> Trace {
@@ -680,11 +925,13 @@ impl<'a> StepSession<'a> {
     }
 }
 
-/// Round-robin a set of sessions to completion, one step each per
-/// scheduling round, and return their traces in input order. Sessions are
-/// fully independent (own driver, RNG, budget), so any interleaving —
+/// Round-robin a set of in-process sessions to completion, one step each
+/// per scheduling round, and return their traces in input order. Sessions
+/// are fully independent (own driver, RNG, budget), so any interleaving —
 /// including this one — produces each session's serial trace bit for bit.
-pub fn interleave(sessions: &mut [StepSession]) -> Vec<Trace> {
+/// (External-evaluation sessions don't belong here: they park on their
+/// first fresh suggestion and need a client `tell` to make progress.)
+pub fn interleave(sessions: &mut [Session]) -> Vec<Trace> {
     loop {
         let mut live = false;
         for s in sessions.iter_mut() {
@@ -705,11 +952,18 @@ mod tests {
     use crate::objective::TableObjective;
     use crate::space::{Param, SearchSpace};
 
-    fn ladder(n: usize) -> TableObjective {
+    fn ladder_space(n: usize) -> SearchSpace {
         let vals: Vec<i64> = (0..n as i64).collect();
-        let space = SearchSpace::build("ladder", vec![Param::ints("a", &vals)], &[]);
+        SearchSpace::build("ladder", vec![Param::ints("a", &vals)], &[])
+    }
+
+    fn ladder(n: usize) -> TableObjective {
         let table = (0..n).map(|i| Eval::Valid((n - i) as f64)).collect();
-        TableObjective::new(space, table)
+        TableObjective::new(ladder_space(n), table)
+    }
+
+    fn ladder_arc(n: usize) -> Arc<dyn Objective> {
+        Arc::new(ladder(n))
     }
 
     /// Proposes 0, 1, 2, … one at a time, forever.
@@ -883,24 +1137,35 @@ mod tests {
     }
 
     #[test]
-    fn step_session_checkpoint_resume_is_bit_identical() {
-        let obj = ladder(12);
+    fn session_checkpoint_resume_is_bit_identical() {
+        let obj = ladder_arc(12);
         let budget = || Box::new(FevalBudget::new(9)) as Box<dyn Budget>;
         let full = {
-            let mut s = StepSession::new(Box::new(Counter { next: 0 }), &obj, budget(), Rng::new(8));
+            let mut s = Session::new(
+                Box::new(Counter { next: 0 }),
+                Arc::clone(&obj),
+                budget(),
+                Rng::new(8),
+            );
             while s.step() {}
             s.into_trace()
         };
         // Interrupt after a few steps, checkpoint, resume from scratch.
-        let mut first = StepSession::new(Box::new(Counter { next: 0 }), &obj, budget(), Rng::new(8));
+        let mut first =
+            Session::new(Box::new(Counter { next: 0 }), Arc::clone(&obj), budget(), Rng::new(8));
         for _ in 0..7 {
             first.step();
         }
         assert!(first.at_step_boundary() || !first.trace().is_empty());
         let ckpt = first.checkpoint();
         assert!(!ckpt.is_empty() && ckpt.len() < full.len(), "mid-run checkpoint");
-        let mut resumed =
-            StepSession::resume(Box::new(Counter { next: 0 }), &obj, budget(), Rng::new(8), ckpt);
+        let mut resumed = Session::resume(
+            Box::new(Counter { next: 0 }),
+            Arc::clone(&obj),
+            budget(),
+            Rng::new(8),
+            ckpt,
+        );
         assert!(resumed.replaying());
         while resumed.step() {}
         assert!(!resumed.replaying());
@@ -909,18 +1174,19 @@ mod tests {
 
     #[test]
     fn interleaved_sessions_match_serial_runs() {
-        let obj = ladder(20);
+        let obj = ladder_arc(20);
         let serial: Vec<Trace> = (0..3)
             .map(|k| {
                 let mut rng = Rng::new(100 + k);
-                drive(&mut Counter { next: k as usize }, &obj, &FevalBudget::new(6), &mut rng)
+                let table = ladder(20);
+                drive(&mut Counter { next: k as usize }, &table, &FevalBudget::new(6), &mut rng)
             })
             .collect();
-        let mut sessions: Vec<StepSession> = (0..3)
+        let mut sessions: Vec<Session> = (0..3)
             .map(|k| {
-                StepSession::new(
+                Session::new(
                     Box::new(Counter { next: k as usize }),
-                    &obj,
+                    Arc::clone(&obj),
                     Box::new(FevalBudget::new(6)),
                     Rng::new(100 + k),
                 )
@@ -998,16 +1264,115 @@ mod tests {
     #[test]
     #[should_panic(expected = "resume replay diverged")]
     fn divergent_resume_is_refused() {
-        let obj = ladder(6);
+        let obj = ladder_arc(6);
         let mut prefix = Trace::new();
         prefix.push(5, Eval::Valid(1.0)); // Counter would ask 0 first
-        let mut s = StepSession::resume(
+        let mut s = Session::resume(
             Box::new(Counter { next: 0 }),
-            &obj,
+            obj,
             Box::new(FevalBudget::new(4)),
             Rng::new(10),
             prefix,
         );
         while s.step() {}
+    }
+
+    #[test]
+    fn external_session_matches_in_process_evaluation() {
+        let reference = {
+            let mut s = Session::new(
+                Box::new(Counter { next: 0 }),
+                ladder_arc(10),
+                Box::new(FevalBudget::new(6)),
+                Rng::new(11),
+            );
+            while s.step() {}
+            s.into_trace()
+        };
+        let mut s = Session::external(
+            Box::new(Counter { next: 0 }),
+            Arc::new(ladder_space(10)),
+            Box::new(FevalBudget::new(6)),
+            Rng::new(11),
+        );
+        let mut evals = 0;
+        loop {
+            match s.next_ask() {
+                SessionNeed::Done => break,
+                SessionNeed::Eval(idx) => {
+                    assert_eq!(s.awaiting(), Some(idx));
+                    // Idempotent re-ask: a reconnecting client sees the
+                    // same outstanding suggestion.
+                    assert_eq!(s.next_ask(), SessionNeed::Eval(idx));
+                    s.tell(idx, Eval::Valid((10 - idx) as f64)).unwrap();
+                    evals += 1;
+                }
+            }
+        }
+        assert_eq!(evals, 6);
+        assert!(s.is_done());
+        assert_eq!(s.trace().records, reference.records);
+    }
+
+    #[test]
+    fn double_tell_and_mismatched_tell_are_rejected() {
+        let mut s = Session::external(
+            Box::new(Counter { next: 0 }),
+            Arc::new(ladder_space(6)),
+            Box::new(FevalBudget::new(3)),
+            Rng::new(12),
+        );
+        assert_eq!(s.tell(0, Eval::Valid(1.0)), Err(TellError::NotAwaiting { told: 0 }));
+        let SessionNeed::Eval(idx) = s.next_ask() else { panic!("expected an ask") };
+        assert_eq!(
+            s.tell(idx + 1, Eval::Valid(1.0)),
+            Err(TellError::WrongSuggestion { asked: idx, told: idx + 1 })
+        );
+        s.tell(idx, Eval::Valid(1.0)).unwrap();
+        let len = s.trace().len();
+        assert_eq!(
+            s.tell(idx, Eval::Valid(1.0)),
+            Err(TellError::NotAwaiting { told: idx }),
+            "a double tell is rejected"
+        );
+        assert_eq!(s.trace().len(), len, "and not silently re-recorded");
+    }
+
+    #[test]
+    fn external_session_resumes_from_mid_ask_checkpoint() {
+        // `interrupt == Some(k)`: simulate a client that disconnects at
+        // its (k+1)-th outstanding ask — the measurement is lost, the
+        // last checkpoint is all that survives.
+        let run = |resume: Option<Trace>, interrupt: Option<usize>| -> Trace {
+            let make = |prefix: Option<Trace>| {
+                let driver = Box::new(Counter { next: 0 });
+                let space = Arc::new(ladder_space(12));
+                let budget = Box::new(FevalBudget::new(8));
+                match prefix {
+                    None => Session::external(driver, space, budget, Rng::new(13)),
+                    Some(t) => Session::external_resume(driver, space, budget, Rng::new(13), t),
+                }
+            };
+            let mut s = make(resume);
+            let mut told = 0;
+            loop {
+                match s.next_ask() {
+                    SessionNeed::Done => return s.into_trace(),
+                    SessionNeed::Eval(idx) => {
+                        if interrupt == Some(told) {
+                            assert!(!s.at_step_boundary(), "an ask is outstanding");
+                            return s.checkpoint();
+                        }
+                        s.tell(idx, Eval::Valid((12 - idx) as f64)).unwrap();
+                        told += 1;
+                    }
+                }
+            }
+        };
+        let full = run(None, None);
+        let ckpt = run(None, Some(5));
+        assert!(ckpt.len() < full.len(), "checkpoint is a strict prefix");
+        let resumed = run(Some(ckpt), None);
+        assert_eq!(resumed.records, full.records);
     }
 }

@@ -30,8 +30,8 @@ pub mod registry;
 pub mod sa;
 
 pub use driver::{
-    drive, Ask, Budget, DriveCtx, FevalBudget, Observation, SearchDriver, StepSession,
-    TargetBudget, WallClockBudget,
+    drive, interleave, Ask, Budget, DriveCtx, FevalBudget, Observation, SearchDriver, Session,
+    SessionNeed, SessionOpts, SessionTarget, TargetBudget, TellError, WallClockBudget,
 };
 
 use crate::objective::evalcache::RunMemo;

@@ -184,6 +184,23 @@ fn surrogate_fit_bench_smoke() {
 }
 
 #[test]
+fn session_step_bench_smoke() {
+    // The session_step bench binary is a thin CLI over
+    // harness::session_bench; running the smoke grid here keeps the
+    // bench from silently rotting.
+    use ktbo::harness::session_bench::{run_scenario, scenario_grid, to_json};
+    let records: Vec<_> = scenario_grid(true).iter().map(run_scenario).collect();
+    assert!(!records.is_empty());
+    for r in &records {
+        assert!(r.ns_per_step.is_finite() && r.ns_per_step > 0.0, "bad timing in {:?}", r.scenario);
+        assert!(r.evaluations > 0, "scenario {:?} timed nothing", r.scenario);
+    }
+    let doc = to_json(&records).render_pretty();
+    assert!(doc.contains("\"bench\": \"session_step\""));
+    assert!(doc.contains("\"mode\": \"inprocess\"") && doc.contains("\"mode\": \"served\""));
+}
+
+#[test]
 fn surrogate_zoo_sweeps_all_kernels() {
     // Acceptance: bo_rf, bo_et, and tpe run end-to-end on all five
     // kernels via the orchestrated sweep, producing valid JSONL records

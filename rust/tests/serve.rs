@@ -1,0 +1,385 @@
+//! End-to-end suite for the `ktbo serve` daemon: wire-protocol behavior,
+//! bit-identity of served sessions against offline `drive()`, the
+//! N-thousand interleaved simulated-client stress test, and the
+//! kill-and-restart persistence path (checkpoints + the bounded,
+//! journal-backed EvalCache).
+
+use std::sync::{Arc, Mutex};
+
+use ktbo::gpusim::device::Device;
+use ktbo::harness::figures::objective_for;
+use ktbo::objective::evalcache::CACHE_SCHEMA_VERSION;
+use ktbo::objective::Objective;
+use ktbo::serve::checkpoint::{trace_from_json, SessionCheckpoint};
+use ktbo::serve::{ServeOpts, SessionConfig, TuningServer};
+use ktbo::strategies::registry::{all_names, by_name};
+use ktbo::strategies::{drive, FevalBudget, Trace};
+use ktbo::util::json::Json;
+use ktbo::util::jsonparse;
+use ktbo::util::pool::ShardPool;
+use ktbo::util::rng::Rng;
+
+fn resp(server: &TuningServer, line: &str) -> Json {
+    jsonparse::parse(&server.handle_line(line)).expect("responses are valid JSON")
+}
+
+fn is_ok(j: &Json) -> bool {
+    j.get("ok") == Some(&Json::Bool(true))
+}
+
+fn config_json(strategy: &str, budget: usize, seed: u64) -> String {
+    format!(
+        r#"{{"kernel":"adding","gpu":"a100","strategy":"{strategy}","budget":{budget},"seed":"0x{seed:x}"}}"#
+    )
+}
+
+/// Drive one served session to completion against the shared `adding`
+/// table, telling table values back, and return its final trace (read
+/// from a checkpoint so the comparison covers the wire encoding too).
+fn run_served(
+    server: &TuningServer,
+    name: &str,
+    strategy: &str,
+    budget: usize,
+    seed: u64,
+    obj: &dyn Objective,
+) -> Trace {
+    let create = format!(
+        r#"{{"cmd":"create","session":"{name}","config":{}}}"#,
+        config_json(strategy, budget, seed)
+    );
+    let r = resp(server, &create);
+    assert!(is_ok(&r), "create failed: {r:?}");
+    let ask = format!(r#"{{"cmd":"ask","session":"{name}"}}"#);
+    let mut rng = Rng::new(999); // table objectives ignore the eval rng
+    loop {
+        let a = resp(server, &ask);
+        assert!(is_ok(&a), "ask failed: {a:?}");
+        match a.get("status").and_then(Json::as_str) {
+            Some("eval") => {
+                let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+                let tell = match obj.evaluate(idx, &mut rng).value() {
+                    Some(t) => format!(
+                        r#"{{"cmd":"tell","session":"{name}","config_index":{idx},"time":{t}}}"#
+                    ),
+                    None => {
+                        let label = obj.evaluate(idx, &mut rng).invalid_label().unwrap();
+                        format!(
+                            r#"{{"cmd":"tell","session":"{name}","config_index":{idx},"invalid":"{label}"}}"#
+                        )
+                    }
+                };
+                let t = resp(server, &tell);
+                assert!(is_ok(&t), "tell failed: {t:?}");
+            }
+            Some("done") => break,
+            other => panic!("unexpected ask status {other:?}"),
+        }
+    }
+    let ck = resp(server, &format!(r#"{{"cmd":"checkpoint","session":"{name}"}}"#));
+    assert!(is_ok(&ck), "checkpoint failed: {ck:?}");
+    let trace = trace_from_json(ck.get("checkpoint").unwrap().get("trace").unwrap()).unwrap();
+    let close = resp(server, &format!(r#"{{"cmd":"close","session":"{name}"}}"#));
+    assert!(is_ok(&close), "close failed: {close:?}");
+    trace
+}
+
+fn offline_trace(strategy: &str, budget: usize, seed: u64, obj: &dyn Objective) -> Trace {
+    let mut driver = by_name(strategy).unwrap().driver(obj.space());
+    let mut rng = Rng::new(seed);
+    drive(driver.as_mut(), obj, &FevalBudget::new(budget), &mut rng)
+}
+
+/// Acceptance: every registry strategy, served over the protocol with
+/// client-side evaluation, reproduces its offline `drive()` trace bit
+/// for bit — through one shared server whose cross-session cache is
+/// warm with other strategies' measurements.
+#[test]
+fn served_sessions_are_bit_identical_to_offline_drive_for_every_strategy() {
+    let obj = objective_for("adding", &Device::a100());
+    let server = TuningServer::new(ServeOpts::default()).unwrap();
+    for (i, strategy) in all_names().iter().enumerate() {
+        let (budget, seed) = (18usize, 40 + i as u64);
+        let served =
+            run_served(&server, &format!("s-{strategy}"), strategy, budget, seed, obj.as_ref());
+        let offline = offline_trace(strategy, budget, seed, obj.as_ref());
+        assert_eq!(
+            served.records, offline.records,
+            "{strategy}: served trace diverged from offline drive()"
+        );
+    }
+}
+
+/// Acceptance: thousands of interleaved simulated clients on the
+/// orchestrator's ShardPool, against one server with a deliberately
+/// small LRU cap (evictions while sessions are live), each bit-identical
+/// to its offline run.
+#[test]
+fn thousands_of_interleaved_sessions_match_offline_traces() {
+    const SESSIONS: usize = 2000;
+    let obj = objective_for("adding", &Device::a100());
+    let server = TuningServer::new(ServeOpts {
+        cache_capacity: Some(256), // force evictions mid-run
+        ..ServeOpts::default()
+    })
+    .unwrap();
+    let strategies = ["random", "mls", "simulated_annealing", "ils"];
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let pool = ShardPool::new(4);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..SESSIONS)
+        .map(|i| {
+            let (server, obj, failures) = (&server, &obj, &failures);
+            Box::new(move || {
+                let strategy = strategies[i % strategies.len()];
+                let (budget, seed) = (10usize, 5000 + i as u64);
+                let served = run_served(
+                    server,
+                    &format!("stress-{i}"),
+                    strategy,
+                    budget,
+                    seed,
+                    obj.as_ref(),
+                );
+                let offline = offline_trace(strategy, budget, seed, obj.as_ref());
+                if served.records != offline.records {
+                    failures.lock().unwrap().push(format!("session {i} ({strategy}) diverged"));
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run(jobs);
+    let failures = failures.into_inner().unwrap();
+    assert!(failures.is_empty(), "{} of {SESSIONS} diverged: {:?}", failures.len(), &failures[..failures.len().min(5)]);
+    let stats = server.cache().stats();
+    assert!(stats.evictions > 0, "cap 256 under {SESSIONS} sessions must evict");
+    assert!(server.cache().len() <= 256, "cache exceeded its LRU cap");
+}
+
+/// Acceptance: kill the server mid-run, restart over the same cache file
+/// and checkpoint dir — sessions resume from their checkpoints, finish
+/// bit-identically to uninterrupted offline runs, and the persistent
+/// cache survives within its bound.
+#[test]
+fn restarted_server_resumes_checkpointed_sessions_and_cache_survives() {
+    let dir = std::env::temp_dir().join("ktbo-serve-restart");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let opts = ServeOpts {
+        cache_path: Some(dir.join("cache.jsonl")),
+        cache_capacity: Some(128),
+        checkpoint_dir: Some(dir.join("ckpt")),
+    };
+    let obj = objective_for("adding", &Device::a100());
+    let sessions: &[(&str, &str, u64)] =
+        &[("r1", "random", 71), ("r2", "mls", 72), ("r3", "ei", 73)];
+    let budget = 14usize;
+
+    // Phase 1: run each session partway, checkpoint, then drop the
+    // server without closing anything (the crash). The shared cache can
+    // satisfy some suggestions without a client ask (fetch_store costs
+    // budget and records to the trace), so remember each checkpoint's
+    // actual trace length rather than assuming tells == records.
+    let mut checkpointed_len = std::collections::HashMap::new();
+    {
+        let server = TuningServer::new(opts.clone()).unwrap();
+        let mut rng = Rng::new(999);
+        for (name, strategy, seed) in sessions {
+            let create = format!(
+                r#"{{"cmd":"create","session":"{name}","config":{}}}"#,
+                config_json(strategy, budget, *seed)
+            );
+            assert!(is_ok(&resp(&server, &create)));
+            for _ in 0..5 {
+                let a = resp(&server, &format!(r#"{{"cmd":"ask","session":"{name}"}}"#));
+                if a.get("status").and_then(Json::as_str) != Some("eval") {
+                    break; // cache hits drained the budget early
+                }
+                let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+                let t = obj.evaluate(idx, &mut rng);
+                let tell = match t.value() {
+                    Some(v) => format!(
+                        r#"{{"cmd":"tell","session":"{name}","config_index":{idx},"time":{v}}}"#
+                    ),
+                    None => format!(
+                        r#"{{"cmd":"tell","session":"{name}","config_index":{idx},"invalid":"{}"}}"#,
+                        t.invalid_label().unwrap()
+                    ),
+                };
+                assert!(is_ok(&resp(&server, &tell)));
+            }
+            let ck = resp(&server, &format!(r#"{{"cmd":"checkpoint","session":"{name}"}}"#));
+            assert!(is_ok(&ck));
+            let trace =
+                trace_from_json(ck.get("checkpoint").unwrap().get("trace").unwrap()).unwrap();
+            assert!(!trace.records.is_empty(), "{name}: nothing recorded before the crash");
+            checkpointed_len.insert(*name, trace.len());
+        }
+    }
+    let journal = std::fs::read_to_string(dir.join("cache.jsonl")).unwrap();
+    assert!(
+        journal.starts_with(r#"{"type":"meta""#),
+        "journal must start with a versioned meta line"
+    );
+    assert!(journal.contains(&format!(r#""schema_version":{CACHE_SCHEMA_VERSION}"#)));
+
+    // Phase 2: a fresh server over the same state.
+    let server = TuningServer::new(opts).unwrap();
+    assert!(!server.cache().is_empty(), "persistent cache must reload from its journal");
+    assert!(server.cache().len() <= 128, "reloaded cache exceeded its cap");
+    for (name, strategy, seed) in sessions {
+        // Server-side checkpoint file, no inline document.
+        let r = resp(&server, &format!(r#"{{"cmd":"resume","session":"{name}"}}"#));
+        assert!(is_ok(&r), "resume failed: {r:?}");
+        assert_eq!(
+            r.get("resumed_evaluations").and_then(Json::as_f64),
+            Some(checkpointed_len[name] as f64),
+            "{name}: resume must replay exactly the checkpointed trace"
+        );
+        // Finish the run.
+        let ask = format!(r#"{{"cmd":"ask","session":"{name}"}}"#);
+        let mut rng = Rng::new(999);
+        loop {
+            let a = resp(&server, &ask);
+            match a.get("status").and_then(Json::as_str) {
+                Some("eval") => {
+                    let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+                    let t = obj.evaluate(idx, &mut rng);
+                    let tell = match t.value() {
+                        Some(v) => format!(
+                            r#"{{"cmd":"tell","session":"{name}","config_index":{idx},"time":{v}}}"#
+                        ),
+                        None => format!(
+                            r#"{{"cmd":"tell","session":"{name}","config_index":{idx},"invalid":"{}"}}"#,
+                            t.invalid_label().unwrap()
+                        ),
+                    };
+                    assert!(is_ok(&resp(&server, &tell)));
+                }
+                Some("done") => break,
+                other => panic!("unexpected status {other:?}"),
+            }
+        }
+        let ck = resp(&server, &format!(r#"{{"cmd":"checkpoint","session":"{name}"}}"#));
+        let trace =
+            trace_from_json(ck.get("checkpoint").unwrap().get("trace").unwrap()).unwrap();
+        let offline = offline_trace(strategy, budget, *seed, obj.as_ref());
+        assert_eq!(
+            trace.records, offline.records,
+            "{name} ({strategy}): resumed run diverged from offline"
+        );
+    }
+    assert!(server.cache().len() <= 128, "cache exceeded its cap after the resumed runs");
+}
+
+/// Satellite: a client that disconnects mid-`ask` (suggestion parked,
+/// never told) loses nothing — over real TCP, a second connection asks
+/// again, receives the same suggestion, and the finished run matches the
+/// offline trace. Double-`tell` on one suggestion is rejected on the
+/// wire, not re-recorded.
+#[test]
+fn tcp_mid_ask_disconnect_and_double_tell() {
+    use ktbo::serve::client::{LineTransport, TcpLine};
+    let Ok(listener) = std::net::TcpListener::bind("127.0.0.1:0") else {
+        return; // sandboxed environment without loopback
+    };
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = Arc::new(TuningServer::new(ServeOpts::default()).unwrap());
+    let accept = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || server.serve_tcp(listener))
+    };
+    let obj = objective_for("adding", &Device::a100());
+    let (strategy, budget, seed) = ("mls", 12usize, 31u64);
+
+    // Connection 1: create, ask, vanish without telling.
+    let first_idx = {
+        let mut c1 = TcpLine::connect(&addr).unwrap();
+        let create = format!(
+            r#"{{"cmd":"create","session":"tcp1","config":{}}}"#,
+            config_json(strategy, budget, seed)
+        );
+        let r = jsonparse::parse(&c1.round_trip(&create).unwrap()).unwrap();
+        assert!(is_ok(&r), "{r:?}");
+        let a = jsonparse::parse(&c1.round_trip(r#"{"cmd":"ask","session":"tcp1"}"#).unwrap())
+            .unwrap();
+        a.get("config_index").and_then(Json::as_f64).unwrap() as usize
+        // c1 drops here: mid-ask disconnect.
+    };
+
+    // Connection 2: the re-ask is idempotent, then finish the run.
+    let mut c2 = TcpLine::connect(&addr).unwrap();
+    let mut rng = Rng::new(999);
+    let a = jsonparse::parse(&c2.round_trip(r#"{"cmd":"ask","session":"tcp1"}"#).unwrap()).unwrap();
+    let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+    assert_eq!(idx, first_idx, "reconnect must resurface the parked suggestion");
+    let mut outstanding = Some(idx);
+    while let Some(idx) = outstanding {
+        let v = obj.evaluate(idx, &mut rng);
+        let tell = match v.value() {
+            Some(t) => {
+                format!(r#"{{"cmd":"tell","session":"tcp1","config_index":{idx},"time":{t}}}"#)
+            }
+            None => format!(
+                r#"{{"cmd":"tell","session":"tcp1","config_index":{idx},"invalid":"{}"}}"#,
+                v.invalid_label().unwrap()
+            ),
+        };
+        let t = jsonparse::parse(&c2.round_trip(&tell).unwrap()).unwrap();
+        assert!(is_ok(&t), "{t:?}");
+        // Double-tell: immediately repeating the same tell must fail and
+        // must not grow the trace (verified against offline below).
+        let dup = jsonparse::parse(&c2.round_trip(&tell).unwrap()).unwrap();
+        assert!(!is_ok(&dup), "double tell was accepted: {dup:?}");
+        let a =
+            jsonparse::parse(&c2.round_trip(r#"{"cmd":"ask","session":"tcp1"}"#).unwrap()).unwrap();
+        outstanding = match a.get("status").and_then(Json::as_str) {
+            Some("eval") => Some(a.get("config_index").and_then(Json::as_f64).unwrap() as usize),
+            _ => None,
+        };
+    }
+    // A re-recorded double-tell or a suggestion lost to the disconnect
+    // would both show up as a trace mismatch here.
+    let ck = jsonparse::parse(&c2.round_trip(r#"{"cmd":"checkpoint","session":"tcp1"}"#).unwrap())
+        .unwrap();
+    assert!(is_ok(&ck), "{ck:?}");
+    let trace = trace_from_json(ck.get("checkpoint").unwrap().get("trace").unwrap()).unwrap();
+    let offline = offline_trace(strategy, budget, seed, obj.as_ref());
+    assert_eq!(
+        trace.records, offline.records,
+        "served trace diverged despite disconnect + double-tell attempts"
+    );
+
+    let _ = c2.round_trip(r#"{"cmd":"shutdown"}"#);
+    accept.join().unwrap().unwrap();
+}
+
+/// Satellite regression: the committed version-less checkpoint fixture
+/// (written before `schema_version` existed) must keep loading, and a
+/// future version must be refused.
+#[test]
+fn legacy_versionless_checkpoint_fixture_loads() {
+    let text = include_str!("data/legacy_checkpoint.json");
+    assert!(!text.contains("schema_version"), "fixture must stay version-less");
+    let ckpt = SessionCheckpoint::parse(text).unwrap();
+    assert_eq!(
+        (ckpt.config.kernel.as_str(), ckpt.config.strategy.as_str(), ckpt.config.budget),
+        ("adding", "random", 20)
+    );
+    assert_eq!(ckpt.config.seed, 42);
+    assert_eq!(ckpt.trace.len(), 3);
+    assert_eq!(ckpt.trace.records[0].0, 3);
+
+    // The same document stamped with a future version is refused.
+    let future = text.replacen(
+        r#""type":"session_checkpoint""#,
+        r#""type":"session_checkpoint","schema_version":99"#,
+        1,
+    );
+    let err = SessionCheckpoint::parse(&future).unwrap_err();
+    assert!(err.contains("schema_version 99"), "{err}");
+
+    // And a resumed session accepts the legacy trace as its prefix.
+    let cfg = SessionConfig::from_json(&jsonparse::parse(text).unwrap().get("config").unwrap().clone())
+        .unwrap();
+    assert_eq!(cfg.gpu, "A100");
+}

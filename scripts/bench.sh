@@ -16,12 +16,14 @@ ROOT="$(pwd)"
 GP_OUT="$ROOT/BENCH_gp_hotpath.json"
 SPACE_OUT="$ROOT/BENCH_space_build.json"
 SURR_OUT="$ROOT/BENCH_surrogate_fit.json"
+SESSION_OUT="$ROOT/BENCH_session_step.json"
 for arg in "$@"; do
   # A smoke run must not overwrite the tracked full-grid trajectory files.
   if [ "$arg" = "--smoke" ]; then
     GP_OUT="$ROOT/BENCH_gp_hotpath.smoke.json"
     SPACE_OUT="$ROOT/BENCH_space_build.smoke.json"
     SURR_OUT="$ROOT/BENCH_surrogate_fit.smoke.json"
+    SESSION_OUT="$ROOT/BENCH_session_step.smoke.json"
   fi
 done
 
@@ -30,8 +32,10 @@ cargo build --release
 cargo bench --bench gp_hotpath -- --out "$GP_OUT" "$@"
 cargo bench --bench space_build -- --out "$SPACE_OUT" "$@"
 cargo bench --bench surrogate_fit -- --out "$SURR_OUT" "$@"
+cargo bench --bench session_step -- --out "$SESSION_OUT" "$@"
 
 echo
 echo "perf records: $GP_OUT"
 echo "              $SPACE_OUT"
-echo "              $SURR_OUT (update EXPERIMENTS.md §Perf after full runs)"
+echo "              $SURR_OUT"
+echo "              $SESSION_OUT (update EXPERIMENTS.md §Perf after full runs)"

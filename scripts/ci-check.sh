@@ -39,7 +39,7 @@ if [ "$FAST" = "1" ]; then
   exit 0
 fi
 
-step "smoke bench (gp_hotpath + space_build + surrogate_fit)"
+step "smoke bench (gp_hotpath + space_build + surrogate_fit + session_step)"
 scripts/bench.sh --smoke
 
 step "smoke sweep (orchestrator; bo_rf surrogate cell + faulted sa cells)"
@@ -49,10 +49,35 @@ step "smoke sweep on a JSON-defined space"
 cargo run --release -p ktbo -- sweep --smoke --fresh --out results \
   --tag smoke-space --strategies random --budget 20 --space examples/spaces/adding.json
 
+step "serve smoke (daemon + scripted 2-session client vs offline tune)"
+mkdir -p results
+SERVE_ADDR=127.0.0.1:47923
+cargo run --release -p ktbo -- serve --listen "$SERVE_ADDR" \
+  --cache-file results/serve-cache.jsonl >results/serve.log 2>&1 &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+for _ in $(seq 1 50); do
+  grep -q 'listening' results/serve.log 2>/dev/null && break
+  sleep 0.2
+done
+CLIENT_OUT="$(cargo run --release -p ktbo -- client --addr "$SERVE_ADDR" \
+  --sessions 2 --kernel adding --gpu a100 --strategy random --budget 40 --seed 7 --shutdown)"
+echo "$CLIENT_OUT"
+wait "$SERVE_PID"
+trap - EXIT
+TUNE_BEST="$(cargo run --release -p ktbo -- tune adding a100 --strategy random --budget 40 --seed 7 \
+  | grep -o 'best=[0-9.]*' | head -n1)"
+echo "offline tune: $TUNE_BEST"
+# Both served sessions evaluate client-side against the same table and
+# seed, so their best must match the offline run exactly.
+[ "$(echo "$CLIENT_OUT" | grep -cF -- "$TUNE_BEST")" = "2" ]
+test -s results/serve-cache.jsonl
+
 step "artifact sanity"
 test -s BENCH_gp_hotpath.smoke.json
 test -s BENCH_space_build.smoke.json
 test -s BENCH_surrogate_fit.smoke.json
+test -s BENCH_session_step.smoke.json
 test -s results/SWEEP_smoke.jsonl
 test -s results/SWEEP_smoke.results.jsonl
 grep -q '"type":"outcome"' results/SWEEP_smoke.results.jsonl
