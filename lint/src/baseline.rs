@@ -1,0 +1,219 @@
+//! Grandfathered-violation baseline: `lint/baseline.json`.
+//!
+//! The baseline records, per `(rule, file)`, how many violations were
+//! known when the entry was committed. The comparison is count-based:
+//!
+//! - current > recorded  → **fresh violations**, the run fails;
+//! - current < recorded  → **stale entry**, a warning inviting a
+//!   `--write-baseline` refresh (burn-down is progress, never an error);
+//! - current == recorded → clean.
+//!
+//! Counting (rather than exact line matching) keeps the file stable
+//! under unrelated edits that shift line numbers; recorded lines are
+//! kept for humans reading the file, not for the comparison.
+
+use crate::scan::Violation;
+use ktbo::util::json::Json;
+use ktbo::util::jsonparse;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One grandfathered `(rule, file)` bucket.
+#[derive(Clone, Debug)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub count: usize,
+    /// Line numbers at the time the entry was recorded (informational).
+    pub lines: Vec<u32>,
+}
+
+/// The committed baseline.
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+/// Result of comparing a scan against the baseline.
+#[derive(Debug, Default)]
+pub struct Diff {
+    /// Violations in `(rule, file)` buckets that exceed their recorded
+    /// count. The whole bucket is listed — a count-based baseline can't
+    /// tell old members from new ones once the count grows.
+    pub fresh: Vec<Violation>,
+    /// `(rule, file, recorded, current)` for buckets that shrank.
+    pub stale: Vec<(String, String, usize, usize)>,
+}
+
+impl Baseline {
+    pub fn empty() -> Baseline {
+        Baseline::default()
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read baseline {}: {e}", path.display()))?;
+        Baseline::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Baseline, String> {
+        let j = jsonparse::parse(text).map_err(|e| format!("baseline is not valid JSON: {e}"))?;
+        let version = j.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+        if version != 1.0 {
+            return Err(format!("unsupported baseline version {version} (expected 1)"));
+        }
+        let mut entries = Vec::new();
+        for e in j.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            let rule = e
+                .get("rule")
+                .and_then(Json::as_str)
+                .ok_or("baseline entry missing `rule`")?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or("baseline entry missing `file`")?
+                .to_string();
+            let count = e
+                .get("count")
+                .and_then(Json::as_f64)
+                .ok_or("baseline entry missing `count`")? as usize;
+            let lines = e
+                .get("lines")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_f64)
+                .map(|x| x as u32)
+                .collect();
+            entries.push(BaselineEntry { rule, file, count, lines });
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Group a scan's violations into a fresh baseline.
+    pub fn from_violations(violations: &[Violation]) -> Baseline {
+        let mut buckets: BTreeMap<(String, String), Vec<u32>> = BTreeMap::new();
+        for v in violations {
+            buckets.entry((v.file.clone(), v.rule.clone())).or_default().push(v.line);
+        }
+        let entries = buckets
+            .into_iter()
+            .map(|((file, rule), mut lines)| {
+                lines.sort_unstable();
+                BaselineEntry { rule, file, count: lines.len(), lines }
+            })
+            .collect();
+        Baseline { entries }
+    }
+
+    pub fn render(&self) -> String {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .set("rule", e.rule.as_str())
+                    .set("file", e.file.as_str())
+                    .set("count", e.count)
+                    .set(
+                        "lines",
+                        Json::Arr(e.lines.iter().map(|&l| Json::Num(l as f64)).collect()),
+                    )
+            })
+            .collect();
+        Json::obj()
+            .set("version", 1i64)
+            .set("entries", Json::Arr(entries))
+            .render_pretty()
+    }
+
+    fn count(&self, rule: &str, file: &str) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.rule == rule && e.file == file)
+            .map(|e| e.count)
+            .sum()
+    }
+}
+
+/// Compare the current scan against the baseline.
+pub fn diff(current: &[Violation], base: &Baseline) -> Diff {
+    let mut buckets: BTreeMap<(String, String), Vec<&Violation>> = BTreeMap::new();
+    for v in current {
+        buckets.entry((v.file.clone(), v.rule.clone())).or_default().push(v);
+    }
+    let mut out = Diff::default();
+    for ((file, rule), vs) in &buckets {
+        let recorded = base.count(rule, file);
+        if vs.len() > recorded {
+            out.fresh.extend(vs.iter().map(|v| (*v).clone()));
+        }
+    }
+    for e in &base.entries {
+        let cur = buckets.get(&(e.file.clone(), e.rule.clone())).map_or(0, Vec::len);
+        if cur < e.count {
+            out.stale.push((e.rule.clone(), e.file.clone(), e.count, cur));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(rule: &str, file: &str, line: u32) -> Violation {
+        Violation {
+            rule: rule.into(),
+            file: file.into(),
+            line,
+            message: "m".into(),
+            excerpt: "e".into(),
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let b = Baseline::from_violations(&[
+            v("no-hash-order", "rust/src/a.rs", 3),
+            v("no-hash-order", "rust/src/a.rs", 9),
+            v("rng-discipline", "rust/src/b.rs", 1),
+        ]);
+        let b2 = Baseline::from_json(&b.render()).unwrap();
+        assert_eq!(b2.entries.len(), 2);
+        assert_eq!(b2.count("no-hash-order", "rust/src/a.rs"), 2);
+        assert_eq!(b2.count("rng-discipline", "rust/src/b.rs"), 1);
+    }
+
+    #[test]
+    fn growth_is_fresh_shrink_is_stale() {
+        let base = Baseline::from_violations(&[
+            v("no-hash-order", "rust/src/a.rs", 3),
+            v("no-hash-order", "rust/src/a.rs", 9),
+        ]);
+        // Same count → clean.
+        let d = diff(&[v("no-hash-order", "rust/src/a.rs", 4), v("no-hash-order", "rust/src/a.rs", 9)], &base);
+        assert!(d.fresh.is_empty() && d.stale.is_empty());
+        // One more → the whole bucket is fresh.
+        let d = diff(
+            &[
+                v("no-hash-order", "rust/src/a.rs", 3),
+                v("no-hash-order", "rust/src/a.rs", 9),
+                v("no-hash-order", "rust/src/a.rs", 20),
+            ],
+            &base,
+        );
+        assert_eq!(d.fresh.len(), 3);
+        // One fewer → stale warning, not an error.
+        let d = diff(&[v("no-hash-order", "rust/src/a.rs", 3)], &base);
+        assert!(d.fresh.is_empty());
+        assert_eq!(d.stale, vec![("no-hash-order".into(), "rust/src/a.rs".into(), 2, 1)]);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        assert!(Baseline::from_json(r#"{"version": 2, "entries": []}"#).is_err());
+        assert!(Baseline::from_json("not json").is_err());
+    }
+}

@@ -1,0 +1,342 @@
+//! A minimal Rust lexer — just enough structure for `ktbo-lint`.
+//!
+//! The workspace is intentionally dependency-free, so there is no `syn`
+//! to lean on. The rules this tool enforces are all expressible over a
+//! token stream (identifier sequences, punctuation adjacency), so a
+//! hand-rolled lexer is sufficient — *provided* it gets the hard parts
+//! of Rust's lexical grammar right, because a mis-lexed string literal
+//! would turn prose into phantom violations. The tricky cases handled
+//! here:
+//!
+//! - line and nested block comments (`/* /* */ */`);
+//! - string, byte-string, and raw-string literals (`r#"…"#` with any
+//!   number of hashes), including newlines inside them;
+//! - the `'a` lifetime vs `'a'` char-literal ambiguity;
+//! - numeric literals with underscores/suffixes (skipped as one token).
+//!
+//! Comments are not discarded blindly: line comments are scanned for
+//! ktbo-lint suppression directives, which become [`Directive`]s.
+//! (This file documents the marker without ever spelling the full
+//! `marker + colon` sequence in a comment — the self-scan would treat
+//! it as a malformed directive.)
+
+/// One lexed token kind. Literal payloads are irrelevant to every rule,
+/// so literals collapse to a single marker variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`HashMap`, `fn`, `unwrap`, …).
+    Ident(String),
+    /// Single punctuation character (`.`, `:`, `[`, …).
+    Punct(char),
+    /// String / char / byte / numeric literal.
+    Lit,
+    /// Lifetime such as `'a` (distinguished from a char literal).
+    Life,
+}
+
+/// A token plus the 1-based line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// An inline suppression comment: the ktbo-lint marker followed by
+/// `allow(<rule>): <reason>` or `allow-file(<rule>): <reason>`.
+#[derive(Clone, Debug)]
+pub struct Directive {
+    pub rule: String,
+    /// `allow-file` suppresses the rule for the whole file; `allow`
+    /// only for the same line or the next line holding code.
+    pub file_wide: bool,
+    pub line: u32,
+}
+
+/// Result of lexing one file.
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub directives: Vec<Directive>,
+    /// `(line, message)` for comments that carry the ktbo-lint marker
+    /// but do not parse as a well-formed directive (missing reason,
+    /// unknown verb, unbalanced parens). Reported as `lint-directive`
+    /// findings so typos cannot silently disable a rule.
+    pub malformed: Vec<(u32, String)>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens + directives. Never fails: unrecognized bytes
+/// become `Punct` tokens, so a lexically odd file degrades to noise
+/// rather than a crash.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut out = Lexed { tokens: Vec::new(), directives: Vec::new(), malformed: Vec::new() };
+
+    while i < n {
+        let c = b[i];
+        // Whitespace.
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n {
+            if b[i + 1] == '/' {
+                let start = i + 2;
+                let mut j = start;
+                while j < n && b[j] != '\n' {
+                    j += 1;
+                }
+                let text: String = b[start..j].iter().collect();
+                parse_directive(&text, line, &mut out);
+                i = j;
+                continue;
+            }
+            if b[i + 1] == '*' {
+                // Nested block comment.
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+                continue;
+            }
+        }
+        // Raw / byte string prefixes: r"…", r#"…"#, br"…", b"…", b'…'.
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let raw = c == 'r' || (c == 'b' && j > i + 1);
+            if raw {
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    let tok_line = line;
+                    j += 1;
+                    'raw: while j < n {
+                        if b[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                        } else if b[j] == '"' {
+                            let mut k = j + 1;
+                            let mut seen = 0usize;
+                            while k < n && seen < hashes && b[k] == '#' {
+                                seen += 1;
+                                k += 1;
+                            }
+                            if seen == hashes {
+                                j = k;
+                                break 'raw;
+                            }
+                            j += 1;
+                        } else {
+                            j += 1;
+                        }
+                    }
+                    out.tokens.push(Token { tok: Tok::Lit, line: tok_line });
+                    i = j;
+                    continue;
+                }
+            } else if c == 'b' && b[j] == '"' {
+                let (nj, nl) = skip_string(&b, j, line);
+                out.tokens.push(Token { tok: Tok::Lit, line });
+                line = nl;
+                i = nj;
+                continue;
+            } else if c == 'b' && b[j] == '\'' {
+                let (nj, nl) = skip_char(&b, j, line);
+                out.tokens.push(Token { tok: Tok::Lit, line });
+                line = nl;
+                i = nj;
+                continue;
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        // String literal.
+        if c == '"' {
+            let tok_line = line;
+            let (nj, nl) = skip_string(&b, i, line);
+            out.tokens.push(Token { tok: Tok::Lit, line: tok_line });
+            line = nl;
+            i = nj;
+            continue;
+        }
+        // Char literal or lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                let (nj, nl) = skip_char(&b, i, line);
+                out.tokens.push(Token { tok: Tok::Lit, line });
+                line = nl;
+                i = nj;
+                continue;
+            }
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                // `'a'` is a char literal; `'a` (no closing quote right
+                // after the ident run) is a lifetime.
+                let mut j = i + 1;
+                while j < n && is_ident_continue(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' && j == i + 2 {
+                    out.tokens.push(Token { tok: Tok::Lit, line });
+                    i = j + 1;
+                } else {
+                    out.tokens.push(Token { tok: Tok::Life, line });
+                    i = j;
+                }
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                // '(' , '.' etc.
+                out.tokens.push(Token { tok: Tok::Lit, line });
+                i += 3;
+                continue;
+            }
+            out.tokens.push(Token { tok: Tok::Punct('\''), line });
+            i += 1;
+            continue;
+        }
+        // Numeric literal (suffixes and underscores ride along).
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && (is_ident_continue(b[j]) || b[j] == '.') {
+                // A dot continues the literal only into a fraction digit:
+                // `1..n` ranges and `x.0.method()` chains must not be
+                // swallowed (the method ident has to surface for matching).
+                if b[j] == '.' && !b.get(j + 1).is_some_and(|d| d.is_ascii_digit()) {
+                    break;
+                }
+                j += 1;
+            }
+            out.tokens.push(Token { tok: Tok::Lit, line });
+            i = j;
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_continue(b[j]) {
+                j += 1;
+            }
+            let id: String = b[i..j].iter().collect();
+            out.tokens.push(Token { tok: Tok::Ident(id), line });
+            i = j;
+            continue;
+        }
+        out.tokens.push(Token { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+    out
+}
+
+/// Skip a `"…"` literal starting at the opening quote; returns
+/// (index past the closing quote, updated line).
+fn skip_string(b: &[char], start: usize, mut line: u32) -> (usize, u32) {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            '\\' => {
+                // `\<newline>` line continuations still advance the line.
+                if b.get(j + 1) == Some(&'\n') {
+                    line += 1;
+                }
+                j += 2;
+            }
+            '\n' => {
+                line += 1;
+                j += 1;
+            }
+            '"' => return (j + 1, line),
+            _ => j += 1,
+        }
+    }
+    (n, line)
+}
+
+/// Skip a `'…'` char literal starting at the opening quote.
+fn skip_char(b: &[char], start: usize, line: u32) -> (usize, u32) {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            '\\' => j += 2,
+            '\'' => return (j + 1, line),
+            '\n' => return (j, line), // unterminated; bail at EOL
+            _ => j += 1,
+        }
+    }
+    (n, line)
+}
+
+/// Recognize suppression directives inside a line comment's text.
+fn parse_directive(text: &str, line: u32, out: &mut Lexed) {
+    const MARKER: &str = "ktbo-lint:";
+    let Some(pos) = text.find(MARKER) else {
+        return;
+    };
+    let rest = text[pos + MARKER.len()..].trim_start();
+    let (file_wide, after_verb) = if let Some(r) = rest.strip_prefix("allow-file(") {
+        (true, r)
+    } else if let Some(r) = rest.strip_prefix("allow(") {
+        (false, r)
+    } else {
+        out.malformed.push((
+            line,
+            "unrecognized directive (expected `allow(<rule>): <reason>` \
+             or `allow-file(<rule>): <reason>`)"
+                .to_string(),
+        ));
+        return;
+    };
+    let Some(close) = after_verb.find(')') else {
+        out.malformed.push((line, "unterminated rule name in directive".to_string()));
+        return;
+    };
+    let rule = after_verb[..close].trim().to_string();
+    if rule.is_empty() {
+        out.malformed.push((line, "empty rule name in directive".to_string()));
+        return;
+    }
+    let tail = after_verb[close + 1..].trim_start();
+    let reason = tail.strip_prefix(':').map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        out.malformed.push((
+            line,
+            format!("allow({rule}) is missing a `: <reason>` justification"),
+        ));
+        return;
+    }
+    out.directives.push(Directive { rule, file_wide, line });
+}

@@ -1,0 +1,28 @@
+//! # ktbo-lint — the workspace determinism auditor.
+//!
+//! Every result this repo reports — strategy rankings, bit-identical
+//! traces across shard/thread counts, serve-vs-offline equivalence —
+//! rests on determinism discipline that used to live in reviewers'
+//! heads: seeded child RNG streams, no hash-order iteration on trace
+//! paths, no wall-clock reads inside the optimizer, no panics on
+//! wire-derived data. At 50+ source files that discipline needs to be
+//! checkable by machine, not by diligence. This crate is that check.
+//!
+//! - [`rules`] — the five module-scoped rules plus the directive
+//!   pseudo-rule, each with scopes and a fix hint.
+//! - [`lexer`] — a dependency-free Rust lexer (the workspace vendors no
+//!   `syn`); tokens + suppression directives.
+//! - [`scan`] — test-code masking, token-pattern matching, suppression.
+//! - [`baseline`] — the committed grandfathered-violation ledger;
+//!   fresh violations fail, burn-down only warns.
+//!
+//! Run it as CI does:
+//!
+//! ```text
+//! cargo run -p ktbo-lint -- --workspace --baseline lint/baseline.json
+//! ```
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+pub mod scan;

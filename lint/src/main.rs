@@ -1,0 +1,172 @@
+//! `ktbo-lint` CLI.
+//!
+//! ```text
+//! ktbo-lint --workspace [--root DIR] [--baseline lint/baseline.json]
+//!           [--json] [--write-baseline]
+//! ```
+//!
+//! Exit codes: `0` clean (stale baseline entries and unused allows are
+//! warnings), `1` fresh violations, `2` usage / IO error.
+
+use ktbo::util::cli::Args;
+use ktbo::util::json::Json;
+use ktbo_lint::baseline::{diff, Baseline};
+use ktbo_lint::rules;
+use ktbo_lint::scan::{scan_workspace, Violation, WorkspaceScan};
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    match run(&args) {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("ktbo-lint: error: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: &Args) -> Result<ExitCode, String> {
+    let root = args.str_or("root", ".");
+    let ws = scan_workspace(Path::new(&root))?;
+
+    let baseline_path = args.get("baseline").map(|p| Path::new(&root).join(p));
+
+    if args.flag("write-baseline") {
+        let path = baseline_path.ok_or("--write-baseline requires --baseline <file>")?;
+        let base = Baseline::from_violations(&ws.violations);
+        std::fs::write(&path, base.render())
+            .map_err(|e| format!("write {}: {e}", path.display()))?;
+        println!(
+            "ktbo-lint: wrote {} ({} entries, {} findings) from {} files",
+            path.display(),
+            base.entries.len(),
+            ws.violations.len(),
+            ws.files_scanned
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let base = match &baseline_path {
+        Some(p) => Baseline::load(p)?,
+        None => Baseline::empty(),
+    };
+    let d = diff(&ws.violations, &base);
+
+    if args.flag("json") {
+        println!("{}", json_report(&ws, &d.fresh, &d.stale).render());
+    } else {
+        human_report(&ws, &d.fresh, &d.stale);
+    }
+    Ok(if d.fresh.is_empty() { ExitCode::SUCCESS } else { ExitCode::FAILURE })
+}
+
+fn human_report(
+    ws: &WorkspaceScan,
+    fresh: &[Violation],
+    stale: &[(String, String, usize, usize)],
+) {
+    for v in fresh {
+        println!("{}:{} [{}] {}", v.file, v.line, v.rule, v.message);
+        if !v.excerpt.is_empty() {
+            println!("    > {}", v.excerpt);
+        }
+        if let Some(r) = rules::rule(&v.rule) {
+            println!("    hint: {}", r.hint);
+        }
+    }
+    for (rule, file, recorded, current) in stale {
+        println!(
+            "warning: stale baseline entry {rule} @ {file}: recorded {recorded}, now {current} \
+             — refresh with --write-baseline"
+        );
+    }
+    for (file, rule, line) in &ws.unused_allows {
+        println!("warning: unused allow({rule}) at {file}:{line} — delete it");
+    }
+    let grandfathered = ws.violations.len() - fresh.len();
+    if fresh.is_empty() {
+        println!(
+            "ktbo-lint: clean — {} files scanned, {} grandfathered finding(s), {} stale \
+             baseline entr(y/ies), {} unused allow(s)",
+            ws.files_scanned,
+            grandfathered,
+            stale.len(),
+            ws.unused_allows.len()
+        );
+    } else {
+        println!(
+            "ktbo-lint: FAILED — {} fresh violation(s) over baseline ({} files scanned, \
+             {} grandfathered)",
+            fresh.len(),
+            ws.files_scanned,
+            grandfathered
+        );
+    }
+}
+
+fn violation_json(v: &Violation) -> Json {
+    let hint = rules::rule(&v.rule).map(|r| r.hint).unwrap_or("");
+    Json::obj()
+        .set("rule", v.rule.as_str())
+        .set("file", v.file.as_str())
+        .set("line", i64::from(v.line))
+        .set("message", v.message.as_str())
+        .set("excerpt", v.excerpt.as_str())
+        .set("hint", hint)
+}
+
+fn json_report(
+    ws: &WorkspaceScan,
+    fresh: &[Violation],
+    stale: &[(String, String, usize, usize)],
+) -> Json {
+    Json::obj()
+        .set("ok", fresh.is_empty())
+        .set("files_scanned", ws.files_scanned)
+        .set("fresh", Json::Arr(fresh.iter().map(violation_json).collect()))
+        .set(
+            "grandfathered",
+            Json::Arr(
+                ws.violations
+                    .iter()
+                    .filter(|v| {
+                        !fresh
+                            .iter()
+                            .any(|f| f.file == v.file && f.rule == v.rule && f.line == v.line)
+                    })
+                    .map(violation_json)
+                    .collect(),
+            ),
+        )
+        .set(
+            "stale_baseline",
+            Json::Arr(
+                stale
+                    .iter()
+                    .map(|(rule, file, recorded, current)| {
+                        Json::obj()
+                            .set("rule", rule.as_str())
+                            .set("file", file.as_str())
+                            .set("recorded", *recorded)
+                            .set("current", *current)
+                    })
+                    .collect(),
+            ),
+        )
+        .set(
+            "unused_allows",
+            Json::Arr(
+                ws.unused_allows
+                    .iter()
+                    .map(|(file, rule, line)| {
+                        Json::obj()
+                            .set("file", file.as_str())
+                            .set("rule", rule.as_str())
+                            .set("line", i64::from(*line))
+                    })
+                    .collect(),
+            ),
+        )
+}

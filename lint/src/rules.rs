@@ -1,0 +1,143 @@
+//! The determinism rule set: ids, module scopes, and fix hints.
+//!
+//! Every rule is *module-scoped*: it only fires for files whose
+//! workspace-relative path starts with one of the rule's scope
+//! prefixes. Scopes encode the repo's trace-path map — the modules
+//! whose behavior feeds the bit-identical sweep traces and the serve
+//! layer's offline-equivalence proofs (see EXPERIMENTS.md §Methodology).
+
+/// A single lint rule.
+pub struct Rule {
+    /// Stable identifier used in diagnostics, allow-comments, and the
+    /// baseline file.
+    pub id: &'static str,
+    /// Workspace-relative path prefixes the rule applies to.
+    pub scopes: &'static [&'static str],
+    /// One-line description of what the rule bans.
+    pub summary: &'static str,
+    /// Actionable remediation, printed with every finding.
+    pub hint: &'static str,
+}
+
+/// Modules on the deterministic trace path: everything whose outputs
+/// feed strategy decisions, sweep records, or checkpoints.
+const TRACE_CORE: &[&str] = &[
+    "rust/src/bo/",
+    "rust/src/gp/",
+    "rust/src/strategies/",
+    "rust/src/space/",
+    "rust/src/surrogate/",
+    "rust/src/objective/",
+];
+
+pub const NO_WALL_CLOCK: &str = "no-wall-clock";
+pub const NO_HASH_ORDER: &str = "no-hash-order";
+pub const RNG_DISCIPLINE: &str = "rng-discipline";
+pub const NO_PANIC_ON_WIRE: &str = "no-panic-on-wire";
+pub const STABLE_SORT_TIEBREAK: &str = "stable-sort-tiebreak";
+/// Pseudo-rule for malformed suppression comments; always in scope and
+/// never eligible for suppression (a broken directive must be fixed).
+pub const LINT_DIRECTIVE: &str = "lint-directive";
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: NO_WALL_CLOCK,
+        scopes: TRACE_CORE,
+        summary: "wall-clock reads (`Instant::now`, `SystemTime`) in trace-path modules",
+        hint: "thread simulated time / budgets through instead; timing belongs in \
+               harness benches or `WallClockBudget` (allow with a reason if this *is* \
+               the budget clock)",
+    },
+    Rule {
+        id: NO_HASH_ORDER,
+        scopes: &[
+            "rust/src/bo/",
+            "rust/src/gp/",
+            "rust/src/strategies/",
+            "rust/src/space/",
+            "rust/src/surrogate/",
+            "rust/src/objective/",
+            "rust/src/harness/",
+            "rust/src/serve/",
+        ],
+        summary: "`HashMap`/`HashSet` in trace-path modules (iteration order is unstable)",
+        hint: "use `BTreeMap`/`BTreeSet`, a packed-key index, or drain through a \
+               sorted Vec before anything order-sensitive",
+    },
+    Rule {
+        id: RNG_DISCIPLINE,
+        scopes: &[
+            "rust/src/bo/",
+            "rust/src/gp/",
+            "rust/src/strategies/",
+            "rust/src/space/",
+            "rust/src/surrogate/",
+            "rust/src/objective/",
+            "rust/src/serve/",
+        ],
+        summary: "ad-hoc RNG construction outside the blessed derivation tree",
+        hint: "derive from the parent stream: `rng.split(tag)`, `cell_rng(...)`, or a \
+               seed carried by `SessionConfig`; never `thread_rng`/`rand::random`, \
+               and `Rng::new`/`Rng::with_stream` only at an owned root (allow with \
+               a reason)",
+    },
+    Rule {
+        id: NO_PANIC_ON_WIRE,
+        scopes: &["rust/src/serve/"],
+        summary: "panic paths (`unwrap`/`expect`/`panic!`/indexing) in the serve layer",
+        hint: "the daemon must answer a protocol error, not die: return \
+               `protocol::err(...)`, propagate a `Result`, or use checked indexing",
+    },
+    Rule {
+        id: STABLE_SORT_TIEBREAK,
+        scopes: &["rust/src/bo/", "rust/src/strategies/"],
+        summary: "`sort_unstable*` in ranking code (equal f32 scores land in \
+                  platform-dependent order)",
+        hint: "use stable `sort_by` or add a deterministic tiebreak key \
+               (config index) to the comparator",
+    },
+    Rule {
+        id: LINT_DIRECTIVE,
+        scopes: &[""],
+        summary: "malformed `ktbo-lint:` suppression comment",
+        hint: "write `// ktbo-lint: allow(<rule>): <reason>` — the reason is required",
+    },
+];
+
+/// Look up a rule by id.
+pub fn rule(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Does `rule_id` apply to the file at workspace-relative `path`?
+pub fn in_scope(rule_id: &str, path: &str) -> bool {
+    match rule(rule_id) {
+        Some(r) => r.scopes.iter().any(|s| path.starts_with(s)),
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scopes_resolve() {
+        assert!(in_scope(NO_PANIC_ON_WIRE, "rust/src/serve/server.rs"));
+        assert!(!in_scope(NO_PANIC_ON_WIRE, "rust/src/bo/mod.rs"));
+        assert!(in_scope(NO_HASH_ORDER, "rust/src/harness/orchestrator.rs"));
+        assert!(!in_scope(NO_HASH_ORDER, "rust/src/util/cli.rs"));
+        assert!(in_scope(STABLE_SORT_TIEBREAK, "rust/src/strategies/driver.rs"));
+        assert!(!in_scope(STABLE_SORT_TIEBREAK, "rust/src/surrogate/forest.rs"));
+        assert!(in_scope(LINT_DIRECTIVE, "anything/at/all.rs"));
+    }
+
+    #[test]
+    fn every_rule_has_hint_and_summary() {
+        for r in RULES {
+            assert!(!r.hint.is_empty(), "{} lacks a hint", r.id);
+            assert!(!r.summary.is_empty(), "{} lacks a summary", r.id);
+            assert!(rule(r.id).is_some());
+        }
+    }
+}

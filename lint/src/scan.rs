@@ -1,0 +1,468 @@
+//! The scanning engine: token-pattern rule matching over non-test code,
+//! with inline `allow(<rule>): <reason>` suppression.
+//!
+//! Pipeline per file:
+//!
+//! 1. lex ([`crate::lexer`]);
+//! 2. compute the *active mask* — tokens under `#[cfg(test)]` / `#[test]`
+//!    items are masked out (the rules police shipping code, not tests);
+//! 3. run each in-scope rule's token matcher over the active stream;
+//! 4. apply suppression directives (same-line / next-line `allow`,
+//!    whole-file `allow-file`), tracking which directives actually
+//!    suppressed something so dead allows can be reported.
+//!
+//! Files reached only through a `#[cfg(test)] mod name;` declaration are
+//! skipped entirely by [`scan_workspace`] — the mask is per-file, so the
+//! declaring file reports the gated module name upward.
+
+use crate::lexer::{lex, Tok, Token};
+use crate::rules::{self, LINT_DIRECTIVE};
+use std::path::{Path, PathBuf};
+
+/// One finding, post-suppression.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: String,
+    /// Workspace-relative path, `/`-separated.
+    pub file: String,
+    pub line: u32,
+    /// What fired, e.g. "`Instant::now()` wall-clock read".
+    pub message: String,
+    /// Trimmed source line, for human diagnostics.
+    pub excerpt: String,
+}
+
+/// Result of scanning one file.
+#[derive(Default)]
+pub struct FileScan {
+    pub violations: Vec<Violation>,
+    /// `(rule, directive line)` for allow-comments that suppressed
+    /// nothing — stale escapes worth deleting.
+    pub unused_allows: Vec<(String, u32)>,
+    /// Module names declared as `#[cfg(test)] mod <name>;` — their
+    /// backing files are test-only and must be skipped by the caller.
+    pub test_gated_mods: Vec<String>,
+}
+
+/// Aggregate over a workspace walk.
+pub struct WorkspaceScan {
+    pub violations: Vec<Violation>,
+    pub unused_allows: Vec<(String, String, u32)>, // (file, rule, line)
+    pub files_scanned: usize,
+}
+
+fn ident<'a>(t: &'a Token) -> Option<&'a str> {
+    match &t.tok {
+        Tok::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn is_punct(t: &Token, c: char) -> bool {
+    matches!(t.tok, Tok::Punct(p) if p == c)
+}
+
+/// Mask out tokens belonging to `#[test]` / `#[cfg(test)]` items, and
+/// collect `#[cfg(test)] mod name;` declarations.
+fn active_mask(tokens: &[Token], gated_mods: &mut Vec<String>) -> Vec<bool> {
+    let n = tokens.len();
+    let mut mask = vec![true; n];
+    let mut i = 0usize;
+    while i < n {
+        if !is_punct(&tokens[i], '#') {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let mut j = i + 1;
+        let inner = j < n && is_punct(&tokens[j], '!');
+        if inner {
+            j += 1;
+        }
+        if j >= n || !is_punct(&tokens[j], '[') {
+            i += 1;
+            continue;
+        }
+        let (attr_end, is_test) = consume_attr(tokens, j);
+        if inner || !is_test {
+            i = attr_end + 1;
+            continue;
+        }
+        // Swallow any further attributes stacked on the same item.
+        let mut k = attr_end + 1;
+        while k + 1 < n && is_punct(&tokens[k], '#') && is_punct(&tokens[k + 1], '[') {
+            let (e, _) = consume_attr(tokens, k + 1);
+            k = e + 1;
+        }
+        if let Some(name) = gated_mod_decl(tokens, k) {
+            gated_mods.push(name);
+        }
+        let end = item_end(tokens, k);
+        for m in attr_start..=end.min(n - 1) {
+            mask[m] = false;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Consume a `[ ... ]` attribute body starting at the `[`; returns
+/// (index of closing `]`, whether it gates on test builds).
+fn consume_attr(tokens: &[Token], open: usize) -> (usize, bool) {
+    let n = tokens.len();
+    let mut depth = 0usize;
+    let mut ids: Vec<&str> = Vec::new();
+    let mut k = open;
+    while k < n {
+        match &tokens[k].tok {
+            Tok::Punct('[') => depth += 1,
+            Tok::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            Tok::Ident(s) => ids.push(s.as_str()),
+            _ => {}
+        }
+        k += 1;
+    }
+    // `#[test]`, `#[cfg(test)]`, `#[cfg(all(test, ...))]` gate the item
+    // to test builds; `#[cfg(not(test))]` and `#[cfg_attr(test, ...)]`
+    // do not remove it from the shipping build.
+    let is_test = ids.contains(&"test")
+        && !ids.contains(&"not")
+        && matches!(ids.first(), Some(&"test") | Some(&"cfg"));
+    (k.min(n.saturating_sub(1)), is_test)
+}
+
+/// Recognize `pub? mod <name> ;` starting at `k`; returns the name.
+fn gated_mod_decl(tokens: &[Token], mut k: usize) -> Option<String> {
+    let n = tokens.len();
+    if k < n && ident(&tokens[k]) == Some("pub") {
+        k += 1;
+        // `pub(crate)` etc.
+        if k < n && is_punct(&tokens[k], '(') {
+            while k < n && !is_punct(&tokens[k], ')') {
+                k += 1;
+            }
+            k += 1;
+        }
+    }
+    if k + 2 < n
+        && ident(&tokens[k]) == Some("mod")
+        && is_punct(&tokens[k + 2], ';')
+    {
+        return ident(&tokens[k + 1]).map(str::to_string);
+    }
+    None
+}
+
+/// Index of the last token of the item starting at `k`: the matching
+/// `}` of its first brace block, or the first top-level `;`.
+fn item_end(tokens: &[Token], mut k: usize) -> usize {
+    let n = tokens.len();
+    while k < n {
+        match tokens[k].tok {
+            Tok::Punct('{') => {
+                let mut depth = 1usize;
+                k += 1;
+                while k < n && depth > 0 {
+                    match tokens[k].tok {
+                        Tok::Punct('{') => depth += 1,
+                        Tok::Punct('}') => depth -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                return k.saturating_sub(1);
+            }
+            Tok::Punct(';') => return k,
+            _ => k += 1,
+        }
+    }
+    n.saturating_sub(1)
+}
+
+/// Run every in-scope rule's matcher over the active token stream.
+fn match_rules(path: &str, act: &[&Token], out: &mut Vec<(String, u32, String)>) {
+    let scoped = |id: &str| rules::in_scope(id, path);
+    let wall = scoped(rules::NO_WALL_CLOCK);
+    let hash = scoped(rules::NO_HASH_ORDER);
+    let rng = scoped(rules::RNG_DISCIPLINE);
+    let wire = scoped(rules::NO_PANIC_ON_WIRE);
+    let sort = scoped(rules::STABLE_SORT_TIEBREAK);
+    if !(wall || hash || rng || wire || sort) {
+        return;
+    }
+    let at = |k: usize| act.get(k).copied();
+    let id_at = |k: usize| at(k).and_then(ident);
+    let punct_at = |k: usize, c: char| at(k).is_some_and(|t| is_punct(t, c));
+
+    for k in 0..act.len() {
+        let t = act[k];
+        if let Some(id) = ident(t) {
+            if wall {
+                if id == "Instant" && punct_at(k + 1, ':') && punct_at(k + 2, ':')
+                    && id_at(k + 3) == Some("now")
+                {
+                    out.push((rules::NO_WALL_CLOCK.into(), t.line, "`Instant::now()` wall-clock read".into()));
+                }
+                if id == "SystemTime" {
+                    out.push((rules::NO_WALL_CLOCK.into(), t.line, "`SystemTime` wall-clock read".into()));
+                }
+            }
+            if hash && (id == "HashMap" || id == "HashSet") {
+                out.push((
+                    rules::NO_HASH_ORDER.into(),
+                    t.line,
+                    format!("`{id}` in a trace-path module (unstable iteration order)"),
+                ));
+            }
+            if rng {
+                if id == "thread_rng" {
+                    out.push((rules::RNG_DISCIPLINE.into(), t.line, "`thread_rng()` is nondeterministic".into()));
+                }
+                if id == "rand" && punct_at(k + 1, ':') && punct_at(k + 2, ':')
+                    && id_at(k + 3) == Some("random")
+                {
+                    out.push((rules::RNG_DISCIPLINE.into(), t.line, "`rand::random()` is nondeterministic".into()));
+                }
+                if id == "Rng" && punct_at(k + 1, ':') && punct_at(k + 2, ':') {
+                    if let Some(ctor @ ("new" | "with_stream" | "from_entropy" | "seed_from_u64")) =
+                        id_at(k + 3)
+                    {
+                        out.push((
+                            rules::RNG_DISCIPLINE.into(),
+                            t.line,
+                            format!("ad-hoc `Rng::{ctor}` — derive from the parent stream instead"),
+                        ));
+                    }
+                }
+            }
+            if wire {
+                if punct_at(k + 1, '!')
+                    && matches!(id, "panic" | "unreachable" | "todo" | "unimplemented")
+                {
+                    out.push((
+                        rules::NO_PANIC_ON_WIRE.into(),
+                        t.line,
+                        format!("`{id}!` in the serve layer"),
+                    ));
+                }
+                if (id == "unwrap" || id == "expect")
+                    && k > 0
+                    && is_punct(act[k - 1], '.')
+                    && punct_at(k + 1, '(')
+                {
+                    out.push((
+                        rules::NO_PANIC_ON_WIRE.into(),
+                        t.line,
+                        format!("`.{id}()` on the serve path — reply with a protocol error"),
+                    ));
+                }
+            }
+            if sort && id.starts_with("sort_unstable") && k > 0 && is_punct(act[k - 1], '.') {
+                out.push((
+                    rules::STABLE_SORT_TIEBREAK.into(),
+                    t.line,
+                    format!("`.{id}` in ranking code — equal scores land in unstable order"),
+                ));
+            }
+        } else if wire && is_punct(t, '[') && k > 0 {
+            // Slice/array indexing: `expr[...]` — previous token closes
+            // an expression. (`#[...]` attributes have `#` before the
+            // bracket and don't match.)
+            let prev = act[k - 1];
+            let indexing = matches!(&prev.tok, Tok::Ident(_))
+                || is_punct(prev, ')')
+                || is_punct(prev, ']');
+            if indexing {
+                out.push((
+                    rules::NO_PANIC_ON_WIRE.into(),
+                    t.line,
+                    "indexing can panic on wire-derived data — use `.get(..)`".into(),
+                ));
+            }
+        }
+    }
+}
+
+/// Scan one file's source. `path_rel` is the workspace-relative path
+/// used for scoping (e.g. `rust/src/serve/server.rs`).
+pub fn scan_source(path_rel: &str, src: &str) -> FileScan {
+    let lexed = lex(src);
+    let mut out = FileScan::default();
+    let mask = active_mask(&lexed.tokens, &mut out.test_gated_mods);
+    let act: Vec<&Token> = lexed
+        .tokens
+        .iter()
+        .zip(&mask)
+        .filter(|(_, m)| **m)
+        .map(|(t, _)| t)
+        .collect();
+
+    let mut raw: Vec<(String, u32, String)> = Vec::new();
+    match_rules(path_rel, &act, &mut raw);
+
+    for (line, msg) in &lexed.malformed {
+        raw.push((LINT_DIRECTIVE.into(), *line, msg.clone()));
+    }
+    for d in &lexed.directives {
+        if rules::rule(&d.rule).is_none() {
+            raw.push((
+                LINT_DIRECTIVE.into(),
+                d.line,
+                format!("allow names unknown rule `{}`", d.rule),
+            ));
+        }
+    }
+
+    // Resolve each line-targeted directive to the line it covers: its
+    // own line if that line holds code, else the next line that does.
+    let active_lines: Vec<u32> = {
+        let mut v: Vec<u32> = act.iter().map(|t| t.line).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let all_lines: Vec<u32> = {
+        let mut v: Vec<u32> = lexed.tokens.iter().map(|t| t.line).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    struct Allow {
+        rule: String,
+        file_wide: bool,
+        target: Option<u32>,
+        decl_line: u32,
+        used: bool,
+    }
+    let mut allows: Vec<Allow> = lexed
+        .directives
+        .iter()
+        .filter(|d| rules::rule(&d.rule).is_some() && d.rule != LINT_DIRECTIVE)
+        .map(|d| Allow {
+            rule: d.rule.clone(),
+            file_wide: d.file_wide,
+            target: if d.file_wide {
+                None
+            } else {
+                all_lines.iter().copied().find(|&l| l >= d.line)
+            },
+            decl_line: d.line,
+            used: false,
+        })
+        .collect();
+
+    let src_lines: Vec<&str> = src.lines().collect();
+    for (rule, line, message) in raw {
+        let suppressed = allows.iter_mut().any(|a| {
+            let hit = rule != LINT_DIRECTIVE
+                && a.rule == rule
+                && (a.file_wide || a.target == Some(line));
+            if hit {
+                a.used = true;
+            }
+            hit
+        });
+        if suppressed {
+            continue;
+        }
+        let excerpt = src_lines
+            .get(line as usize - 1)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default();
+        out.violations.push(Violation { rule, file: path_rel.to_string(), line, message, excerpt });
+    }
+
+    // Dead allows: only warn when the directive points at shipping code
+    // (a directive buried in a test mod guards nothing by design).
+    for a in &allows {
+        let points_at_active =
+            a.file_wide || a.target.is_none_or(|t| active_lines.binary_search(&t).is_ok());
+        if !a.used && points_at_active {
+            out.unused_allows.push((a.rule.clone(), a.decl_line));
+        }
+    }
+
+    out.violations.sort_by(|x, y| (x.line, &x.rule).cmp(&(y.line, &y.rule)));
+    out
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan the workspace's shipping source roots under `root`.
+///
+/// Only `src/` trees are walked: `tests/`, `benches/`, and `examples/`
+/// are test-tier code where the determinism rules don't apply.
+pub fn scan_workspace(root: &Path) -> Result<WorkspaceScan, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["rust/src", "lint/src"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, &mut files)?;
+        }
+    }
+
+    // Pass 1: read + scan everything, remembering cfg(test)-gated mods.
+    let mut scans: Vec<(String, FileScan)> = Vec::new();
+    let mut gated_prefixes: Vec<String> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| format!("{} escapes workspace root", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path).map_err(|e| format!("read {rel}: {e}"))?;
+        let scan = scan_source(&rel, &src);
+        if !scan.test_gated_mods.is_empty() {
+            let dir = match rel.rfind('/') {
+                Some(cut) => &rel[..cut + 1],
+                None => "",
+            };
+            for m in &scan.test_gated_mods {
+                gated_prefixes.push(format!("{dir}{m}.rs"));
+                gated_prefixes.push(format!("{dir}{m}/"));
+            }
+        }
+        scans.push((rel, scan));
+    }
+
+    // Pass 2: drop files reachable only through a test-gated mod.
+    let gated = |rel: &str| gated_prefixes.iter().any(|g| rel == g || rel.starts_with(g.as_str()));
+    let mut ws = WorkspaceScan {
+        violations: Vec::new(),
+        unused_allows: Vec::new(),
+        files_scanned: 0,
+    };
+    for (rel, scan) in scans {
+        ws.files_scanned += 1;
+        if gated(&rel) {
+            continue;
+        }
+        for (rule, line) in scan.unused_allows {
+            ws.unused_allows.push((rel.clone(), rule, line));
+        }
+        ws.violations.extend(scan.violations);
+    }
+    ws.violations
+        .sort_by(|x, y| (&x.file, x.line, &x.rule).cmp(&(&y.file, y.line, &y.rule)));
+    Ok(ws)
+}

@@ -1,0 +1,76 @@
+//! The baseline lifecycle the CI gate depends on: an unrecorded
+//! violation fails, a recorded one passes, a fixed one downgrades to a
+//! stale warning — and the file round-trips through its JSON form.
+
+use ktbo_lint::baseline::{diff, Baseline};
+use ktbo_lint::scan::{scan_source, Violation};
+
+const PATH: &str = "rust/src/harness/fixture.rs";
+
+const ONE: &str = "use std::collections::HashMap;\npub fn a() {}\n";
+const TWO: &str = "use std::collections::HashMap;\npub fn b() -> HashMap<u32, u32> {\n    panic!(\"x\")\n}\n";
+const THREE: &str = "use std::collections::HashMap;\npub fn c() -> HashMap<u32, u32> {\n    HashMap::new()\n}\n";
+
+fn violations(src: &str) -> Vec<Violation> {
+    scan_source(PATH, src).violations
+}
+
+#[test]
+fn unrecorded_violations_fail_the_run() {
+    let two = violations(TWO);
+    assert_eq!(two.len(), 2, "fixture should fire twice: {two:?}");
+    let d = diff(&two, &Baseline::empty());
+    assert_eq!(d.fresh.len(), 2, "no baseline → everything is fresh → exit 1");
+}
+
+#[test]
+fn recorded_violations_pass_and_new_ones_fail_again() {
+    let two = violations(TWO);
+    let base = Baseline::from_violations(&two);
+
+    // Recorded → clean.
+    let d = diff(&two, &base);
+    assert!(d.fresh.is_empty() && d.stale.is_empty(), "recorded counts must pass");
+
+    // A freshly introduced violation in the same bucket → the run fails.
+    // (Count-based buckets can't tell old members from new, so the whole
+    // bucket is surfaced.)
+    let three = violations(THREE);
+    assert_eq!(three.len(), 3);
+    let d = diff(&three, &base);
+    assert_eq!(d.fresh.len(), 3, "bucket over its recorded count is fresh");
+
+    // A violation in a bucket the baseline has never seen also fails.
+    let foreign = violations(TWO)
+        .into_iter()
+        .map(|mut v| {
+            v.file = "rust/src/serve/other.rs".to_string();
+            v
+        })
+        .collect::<Vec<_>>();
+    let d = diff(&foreign, &base);
+    assert_eq!(d.fresh.len(), 2, "unknown (rule, file) bucket is fresh");
+}
+
+#[test]
+fn burned_down_violations_warn_stale_but_pass() {
+    let base = Baseline::from_violations(&violations(TWO));
+    let one = violations(ONE);
+    assert_eq!(one.len(), 1);
+    let d = diff(&one, &base);
+    assert!(d.fresh.is_empty(), "burn-down must never fail the run");
+    assert_eq!(d.stale.len(), 1, "shrunk bucket warns so the baseline gets refreshed");
+    let (rule, file, recorded, current) = &d.stale[0];
+    assert_eq!((rule.as_str(), file.as_str(), *recorded, *current), ("no-hash-order", PATH, 2, 1));
+}
+
+#[test]
+fn baseline_file_round_trips() {
+    let two = violations(TWO);
+    let base = Baseline::from_violations(&two);
+    let reloaded = Baseline::from_json(&base.render()).expect("render must parse back");
+    assert!(diff(&two, &reloaded).fresh.is_empty(), "round-trip must preserve counts");
+    // Identical text on a second render: the file is regeneration-stable,
+    // so `--write-baseline` produces no spurious diffs.
+    assert_eq!(base.render(), Baseline::from_violations(&two).render());
+}

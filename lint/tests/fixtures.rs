@@ -1,0 +1,145 @@
+//! Every rule has a firing fixture and an allow-suppressed twin under
+//! `tests/fixtures/`. The fixtures are scanned with synthetic in-scope
+//! paths (fixtures live outside the workspace's scanned roots, so they
+//! never pollute the real scan).
+
+use ktbo_lint::scan::{scan_source, FileScan};
+
+fn scan(path: &str, src: &str) -> FileScan {
+    scan_source(path, src)
+}
+
+fn findings(fs: &FileScan) -> Vec<(&str, u32)> {
+    fs.violations.iter().map(|v| (v.rule.as_str(), v.line)).collect()
+}
+
+/// (fixture, synthetic scope path, expected (rule, line) findings).
+/// Every `*_allowed` twin must scan clean with zero unused allows — the
+/// directive both suppresses and counts as used.
+const CASES: &[(&str, &str, &[(&str, u32)])] = &[
+    (
+        include_str!("fixtures/no_wall_clock_fires.rs"),
+        "rust/src/strategies/fixture.rs",
+        &[("no-wall-clock", 4), ("no-wall-clock", 8)],
+    ),
+    (
+        include_str!("fixtures/no_wall_clock_allowed.rs"),
+        "rust/src/strategies/fixture.rs",
+        &[],
+    ),
+    (
+        include_str!("fixtures/no_hash_order_fires.rs"),
+        "rust/src/harness/fixture.rs",
+        &[("no-hash-order", 1), ("no-hash-order", 3), ("no-hash-order", 4)],
+    ),
+    (
+        include_str!("fixtures/no_hash_order_allowed.rs"),
+        "rust/src/harness/fixture.rs",
+        &[],
+    ),
+    (
+        include_str!("fixtures/rng_discipline_fires.rs"),
+        "rust/src/surrogate/fixture.rs",
+        &[("rng-discipline", 2), ("rng-discipline", 7)],
+    ),
+    (
+        include_str!("fixtures/rng_discipline_allowed.rs"),
+        "rust/src/surrogate/fixture.rs",
+        &[],
+    ),
+    (
+        include_str!("fixtures/no_panic_on_wire_fires.rs"),
+        "rust/src/serve/fixture.rs",
+        // Line 3 carries both the indexing and the `.unwrap()` finding.
+        &[("no-panic-on-wire", 3), ("no-panic-on-wire", 3), ("no-panic-on-wire", 8)],
+    ),
+    (
+        include_str!("fixtures/no_panic_on_wire_allowed.rs"),
+        "rust/src/serve/fixture.rs",
+        &[],
+    ),
+    (
+        include_str!("fixtures/stable_sort_fires.rs"),
+        "rust/src/bo/fixture.rs",
+        &[("stable-sort-tiebreak", 2)],
+    ),
+    (
+        include_str!("fixtures/stable_sort_allowed.rs"),
+        "rust/src/bo/fixture.rs",
+        &[],
+    ),
+    (
+        include_str!("fixtures/lint_directive_fires.rs"),
+        // lint-directive applies everywhere, even out of every other scope;
+        // the fixture's own allow-file(lint-directive) must not silence it.
+        "rust/src/util/fixture.rs",
+        &[("lint-directive", 3), ("lint-directive", 6)],
+    ),
+];
+
+#[test]
+fn every_rule_fires_and_its_allowed_twin_is_clean() {
+    for (src, path, expected) in CASES {
+        let fs = scan(path, src);
+        assert_eq!(&findings(&fs), expected, "fixture at {path} mismatched");
+        assert!(fs.unused_allows.is_empty(), "{path}: unused allows {:?}", fs.unused_allows);
+    }
+}
+
+#[test]
+fn out_of_scope_paths_are_exempt() {
+    // The same banned constructs outside a rule's module scope: no findings
+    // (util/ is deliberately unscoped for everything but lint-directive).
+    for (src, _, expected) in CASES {
+        if expected.iter().any(|(r, _)| *r == "lint-directive") {
+            continue;
+        }
+        let fs = scan("rust/src/util/fixture.rs", src);
+        assert!(findings(&fs).is_empty(), "util/ must be out of scope, got {:?}", findings(&fs));
+    }
+}
+
+#[test]
+fn test_gated_code_is_exempt() {
+    let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn t() { let m: HashMap<u32, u32> = HashMap::new(); m.len(); }\n}\n";
+    let fs = scan("rust/src/harness/fixture.rs", src);
+    assert!(fs.violations.is_empty(), "cfg(test) items must be masked: {:?}", findings(&fs));
+
+    let src = "#[test]\nfn check() {\n    let v = vec![1];\n    assert_eq!(v[0], 1);\n}\n";
+    let fs = scan("rust/src/serve/fixture.rs", src);
+    assert!(fs.violations.is_empty(), "#[test] fns must be masked: {:?}", findings(&fs));
+}
+
+#[test]
+fn test_gated_mod_declarations_are_reported_upward() {
+    let src = "#[cfg(test)]\nmod reference;\n\npub fn live() {}\n";
+    let fs = scan("rust/src/strategies/mod.rs", src);
+    assert_eq!(fs.test_gated_mods, vec!["reference".to_string()]);
+    assert!(fs.violations.is_empty());
+}
+
+#[test]
+fn dead_allow_on_shipping_code_is_reported() {
+    let src = "pub fn clean() -> usize {\n    // ktbo-lint: allow(no-hash-order): nothing here actually fires\n    7\n}\n";
+    let fs = scan("rust/src/harness/fixture.rs", src);
+    assert!(fs.violations.is_empty());
+    assert_eq!(fs.unused_allows, vec![("no-hash-order".to_string(), 2)]);
+}
+
+#[test]
+fn allow_does_not_leak_past_its_target_line() {
+    // The directive covers only the next code line; a second violation two
+    // lines later must still fire.
+    let src = "use std::collections::HashMap;\n";
+    let prefixed = format!(
+        "// ktbo-lint: allow(no-hash-order): first use is sanctioned\n{src}\npub fn second() -> HashMap<u32, u32> {{\n    HashMap::new()\n}}\n"
+    );
+    let fs = scan("rust/src/harness/fixture.rs", &prefixed);
+    let got = findings(&fs);
+    assert_eq!(
+        got,
+        vec![("no-hash-order", 4), ("no-hash-order", 5)],
+        "only the use-line is suppressed"
+    );
+    assert!(fs.unused_allows.is_empty());
+}

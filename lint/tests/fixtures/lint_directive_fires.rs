@@ -1,0 +1,7 @@
+// ktbo-lint: allow-file(lint-directive): directive errors must never be silenceable
+
+// ktbo-lint: allow(no-wall-clock)
+pub fn missing_reason() {}
+
+// ktbo-lint: allow(no-such-rule): a perfectly believable reason
+pub fn unknown_rule() {}

@@ -1,0 +1,6 @@
+// ktbo-lint: allow-file(no-hash-order): fixture — iteration order is never observed here
+use std::collections::HashSet;
+
+pub fn seen_set() -> HashSet<usize> {
+    HashSet::new()
+}

@@ -1,0 +1,5 @@
+use std::collections::HashMap;
+
+pub fn lookup_table() -> HashMap<usize, f64> {
+    HashMap::new()
+}

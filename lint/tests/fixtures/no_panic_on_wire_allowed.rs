@@ -1,0 +1,4 @@
+pub fn first_byte(buf: &[u8]) -> u8 {
+    // ktbo-lint: allow(no-panic-on-wire): fixture — length is checked by the caller
+    buf[0]
+}

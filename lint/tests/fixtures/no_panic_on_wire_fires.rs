@@ -1,0 +1,10 @@
+pub fn read_field(line: &str) -> usize {
+    let parts: Vec<&str> = line.split(',').collect();
+    parts[0].parse().unwrap()
+}
+
+pub fn must(ok: bool) {
+    if !ok {
+        panic!("bad request");
+    }
+}

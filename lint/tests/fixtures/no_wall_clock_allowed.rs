@@ -1,0 +1,6 @@
+use std::time::Instant;
+
+pub fn deadline() -> Instant {
+    // ktbo-lint: allow(no-wall-clock): fixture — this is the sanctioned budget clock
+    Instant::now()
+}

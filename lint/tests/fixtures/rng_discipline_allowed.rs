@@ -1,0 +1,4 @@
+pub fn root_stream(seed: u64) -> Rng {
+    // ktbo-lint: allow(rng-discipline): fixture — owned root stream, seed carried by config
+    Rng::new(seed)
+}

@@ -1,0 +1,9 @@
+pub fn ad_hoc_stream() -> u64 {
+    let mut rng = Rng::new(42);
+    rng.next()
+}
+
+pub fn os_entropy() -> f64 {
+    let mut r = thread_rng();
+    r.gen()
+}

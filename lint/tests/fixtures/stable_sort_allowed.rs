@@ -1,0 +1,4 @@
+pub fn rank(keys: &mut [usize]) {
+    // ktbo-lint: allow(stable-sort-tiebreak): fixture — keys are unique config indices
+    keys.sort_unstable();
+}

@@ -1,0 +1,3 @@
+pub fn rank(scores: &mut [(f64, usize)]) {
+    scores.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+}

@@ -1,0 +1,62 @@
+//! The gate itself, as a test: scan the real workspace against the
+//! committed baseline. This is what CI runs via the `ktbo-lint` binary;
+//! keeping it as a test means `cargo test --workspace` catches a fresh
+//! determinism violation even on machines that never invoke the binary.
+
+use ktbo_lint::baseline::{diff, Baseline};
+use ktbo_lint::scan::scan_workspace;
+use std::path::{Path, PathBuf};
+
+fn workspace_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+#[test]
+fn workspace_is_clean_against_committed_baseline() {
+    let root = workspace_root();
+    let ws = scan_workspace(&root).expect("workspace scan");
+    assert!(ws.files_scanned > 50, "scan found only {} files — wrong root?", ws.files_scanned);
+    let base = Baseline::load(&root.join("lint").join("baseline.json")).expect("baseline loads");
+    let d = diff(&ws.violations, &base);
+    let rendered: Vec<String> = d
+        .fresh
+        .iter()
+        .map(|v| format!("{}:{} [{}] {}", v.file, v.line, v.rule, v.message))
+        .collect();
+    assert!(rendered.is_empty(), "fresh determinism violations:\n{}", rendered.join("\n"));
+    assert!(
+        ws.unused_allows.is_empty(),
+        "stale allow directives (delete them): {:?}",
+        ws.unused_allows
+    );
+    assert!(
+        d.stale.is_empty(),
+        "baseline is stale (refresh with --write-baseline): {:?}",
+        d.stale
+    );
+}
+
+#[test]
+fn serve_layer_carries_zero_grandfathered_entries() {
+    // The wire-facing layer is fully burned down: no grandfathered panic
+    // paths, and none of its files appear in the baseline under any rule.
+    let base = Baseline::load(&workspace_root().join("lint").join("baseline.json")).unwrap();
+    for e in &base.entries {
+        assert_ne!(e.rule, "no-panic-on-wire", "no grandfathered panics anywhere: {e:?}");
+        assert!(
+            !e.file.starts_with("rust/src/serve/"),
+            "serve/ must stay at a zero-entry baseline: {e:?}"
+        );
+    }
+}
+
+#[test]
+fn baseline_matches_write_baseline_output_format() {
+    // The committed file is byte-identical to what `--write-baseline`
+    // would regenerate from the current scan — no drift, no hand edits.
+    let root = workspace_root();
+    let ws = scan_workspace(&root).unwrap();
+    let regenerated = Baseline::from_violations(&ws.violations).render();
+    let committed = std::fs::read_to_string(root.join("lint").join("baseline.json")).unwrap();
+    assert_eq!(committed, regenerated, "run ktbo-lint --write-baseline to refresh");
+}

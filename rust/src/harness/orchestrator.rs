@@ -32,7 +32,7 @@
 //! (objective id, config index) — table-backed objectives are evaluated
 //! once per sweep rather than once per session.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::io::Write as _;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -57,8 +57,10 @@ use crate::util::json::Json;
 use crate::util::jsonparse;
 use crate::util::pool::{enter_harness_workers, ShardPool};
 
-/// Coordinates of one session in the evaluation matrix.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+/// Coordinates of one session in the evaluation matrix. `Ord` because
+/// resume sets live in ordered maps — iteration order is part of the
+/// byte-stability contract on sweep artifacts.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct CellKey {
     pub kernel: String,
     /// Canonical device name (`Device::name`), not a CLI alias.
@@ -335,8 +337,8 @@ fn failed_cell_record(
 /// parse as a complete one); every intact record is kept. Errors if the
 /// file's meta line is incompatible with `spec` — resuming under
 /// different seeds/budgets would silently mix incomparable curves.
-fn load_progress(text: &str, path: &Path, spec: &SweepSpec) -> Result<HashMap<CellKey, Vec<f64>>, String> {
-    let mut completed = HashMap::new();
+fn load_progress(text: &str, path: &Path, spec: &SweepSpec) -> Result<BTreeMap<CellKey, Vec<f64>>, String> {
+    let mut completed = BTreeMap::new();
     let mut meta_seen = false;
     let mut saw_content = false;
     for line in text.lines() {
@@ -473,7 +475,7 @@ fn run_sessions(
     budget: usize,
     base_seed: u64,
     pool: &ShardPool,
-    completed: &HashMap<CellKey, Vec<f64>>,
+    completed: &BTreeMap<CellKey, Vec<f64>>,
     log: Option<&SweepLog>,
 ) -> Vec<CellResult> {
     // Nested consumers (the BO engine's auto thread mode) divide the
@@ -606,7 +608,7 @@ pub fn orchestrate_comparison(
         eval: Arc::clone(obj) as Arc<dyn Objective>,
     }];
     let (jobs, coords) = build_session_jobs(&entries, strategies, repeat_scale);
-    let results = run_sessions(&jobs, budget, base_seed, pool, &HashMap::new(), None);
+    let results = run_sessions(&jobs, budget, base_seed, pool, &BTreeMap::new(), None);
 
     let global_min = obj.known_minimum().expect("table objective knows its minimum");
     let fallback = fallback_value(obj);
@@ -891,7 +893,7 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         let torn = !text.is_empty() && !text.ends_with('\n');
         (load_progress(&text, &progress_path, spec)?, torn)
     } else {
-        (HashMap::new(), false)
+        (BTreeMap::new(), false)
     };
     let log = SweepLog::open(&progress_path, spec, torn_tail)?;
 
@@ -1429,6 +1431,45 @@ mod tests {
                 assert_eq!(o.maes, s.maes, "{} MAEs diverged at {threads} workers", o.name);
             }
         }
+    }
+
+    /// Satellite: the machine-readable sweep artifact is byte-stable.
+    /// Two fresh runs of the same spec into different out dirs, on
+    /// parallel workers, must write identical `results.jsonl` bytes, and
+    /// the human digest may differ only in wall time and output paths.
+    /// The BTreeMap-ordered trace path makes this a guarantee rather
+    /// than a scheduling coincidence.
+    #[test]
+    fn sweep_results_are_byte_identical_across_runs() {
+        let mut texts = Vec::new();
+        let mut summaries = Vec::new();
+        for run in ["run-a", "run-b"] {
+            let mut spec = small_spec(&format!("ktbo-orch-bytes-{run}"), "bytes");
+            spec.threads = 2;
+            // Cache hit/miss tallies depend on worker interleaving, so the
+            // digest's cache lines are the one legitimately racy section;
+            // disable them to pin everything else exactly.
+            spec.cache = false;
+            let report = sweep(&spec).unwrap();
+            texts.push(std::fs::read_to_string(spec.results_path()).unwrap());
+            summaries.push(report.summary);
+        }
+        assert_eq!(texts[0], texts[1], "results.jsonl must be byte-identical across runs");
+        // Drop the two path lines, truncate the wall-time suffix; every
+        // remaining byte must match.
+        let stable = |s: &str| {
+            s.lines()
+                .filter(|l| !l.starts_with("progress:") && !l.starts_with("results:"))
+                .map(|l| l.split(" | wall ").next().unwrap())
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(
+            stable(&summaries[0]),
+            stable(&summaries[1]),
+            "summary differs beyond wall time and paths"
+        );
+        assert!(summaries[0].contains(" | wall "), "wall-time marker moved; update the filter");
     }
 
     #[test]

@@ -212,7 +212,10 @@ fn cmd_tune(args: &Args) {
         eprintln!("{e}");
         std::process::exit(2);
     });
-    let dev = cfg.device();
+    let dev = cfg.device().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
 
     // Simulation-mode cache file takes precedence over the built-in
     // simulator (Kernel Tuner cache interchange); `--space` replaces the

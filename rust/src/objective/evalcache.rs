@@ -45,7 +45,7 @@
 //! same order `compact` uses), so persistence serializes inserts but can
 //! never deadlock against compaction.
 //!
-//! Cost model: for a plain [`TableObjective`] a lookup (lock + hash probe)
+//! Cost model: for a plain [`TableObjective`] a lookup (lock + map probe)
 //! is *more* work than the array read it avoids — the cache earns its keep
 //! only when re-evaluation is expensive. The sweep keeps it on by default
 //! because correctness is unaffected (asserted by the cache-on/off
@@ -54,7 +54,7 @@
 //! fixed-noise-seed PJRT/live objectives the ROADMAP targets; `--no-cache`
 //! drops it entirely.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
@@ -116,11 +116,11 @@ struct Entry {
 pub struct EvalCache {
     /// Stable objective-id → numeric key registry (collision-free by
     /// construction, unlike hashing the id).
-    keys: Mutex<HashMap<String, u64>>,
+    keys: Mutex<BTreeMap<String, u64>>,
     /// Per-key id + counters, indexed by numeric key; grown under the
     /// `keys` lock, read lock-free-ish everywhere else.
     registry: RwLock<Vec<KeyInfo>>,
-    shards: Vec<Mutex<HashMap<(u64, usize), Entry>>>,
+    shards: Vec<Mutex<BTreeMap<(u64, usize), Entry>>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -149,9 +149,9 @@ impl EvalCache {
     /// the shard count (64) is exact.
     pub fn bounded(capacity: Option<usize>) -> EvalCache {
         EvalCache {
-            keys: Mutex::new(HashMap::new()),
+            keys: Mutex::new(BTreeMap::new()),
             registry: RwLock::new(Vec::new()),
-            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -309,7 +309,7 @@ impl EvalCache {
 
     /// Evict stalest entries until the shard is within its cap; returns
     /// the evicted keys for counter attribution.
-    fn evict_over_cap(&self, shard: &mut HashMap<(u64, usize), Entry>) -> Vec<(u64, usize)> {
+    fn evict_over_cap(&self, shard: &mut BTreeMap<(u64, usize), Entry>) -> Vec<(u64, usize)> {
         let Some(cap) = self.shard_cap else { return Vec::new() };
         let mut evicted = Vec::new();
         while shard.len() > cap {
@@ -503,7 +503,7 @@ impl Objective for CachedObjective {
 /// Per-run memoization view over an [`EvalCache`]: the store every in-run
 /// cache (the ask/tell drive loop's memo, `CachedEvaluator`) delegates to,
 /// so in-run memoization and cross-session sweep caching share one keyed
-/// store instead of maintaining parallel private `HashMap`s.
+/// store instead of maintaining parallel private maps.
 ///
 /// Two layers of state with different scopes:
 ///
@@ -530,28 +530,28 @@ pub struct RunMemo {
 /// single-session case pays no sharding, locking, or stats traffic; only
 /// the shared variant touches an [`EvalCache`].
 enum MemoStore {
-    Private(HashMap<usize, Eval>),
+    Private(BTreeMap<usize, Eval>),
     Shared {
         cache: Arc<EvalCache>,
         key: u64,
         /// This run's own observations (budget semantics are per run;
         /// the shared store spans runs and may evict).
-        seen: HashMap<usize, Eval>,
+        seen: BTreeMap<usize, Eval>,
     },
 }
 
 impl RunMemo {
     /// A fresh private store: in-run memoization only, exactly the
-    /// semantics of the old per-strategy `HashMap`.
+    /// semantics of the old per-strategy map.
     pub fn private() -> RunMemo {
-        RunMemo { store: MemoStore::Private(HashMap::new()) }
+        RunMemo { store: MemoStore::Private(BTreeMap::new()) }
     }
 
     /// A view over a store shared across sessions (see the type docs for
     /// the RNG caveat). `objective_id` keys this run's entries.
     pub fn shared(cache: Arc<EvalCache>, objective_id: &str) -> RunMemo {
         let key = cache.key_for(objective_id);
-        RunMemo { store: MemoStore::Shared { cache, key, seen: HashMap::new() } }
+        RunMemo { store: MemoStore::Shared { cache, key, seen: BTreeMap::new() } }
     }
 
     /// Has this run evaluated `idx`?

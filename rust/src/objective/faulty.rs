@@ -16,7 +16,7 @@
 //! the global evaluation counter behind `crash_after`, which is
 //! documented as scheduling-dependent under concurrency.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -174,7 +174,7 @@ pub struct FaultyObjective {
     inner: Arc<dyn Objective>,
     plan: FaultPlan,
     /// Per-config attempt counters: retrying idx re-rolls its fault lanes.
-    attempts: Mutex<HashMap<usize, u64>>,
+    attempts: Mutex<BTreeMap<usize, u64>>,
     evals: AtomicUsize,
     hangs: AtomicUsize,
     transients: AtomicUsize,
@@ -186,7 +186,7 @@ impl FaultyObjective {
         FaultyObjective {
             inner,
             plan,
-            attempts: Mutex::new(HashMap::new()),
+            attempts: Mutex::new(BTreeMap::new()),
             evals: AtomicUsize::new(0),
             hangs: AtomicUsize::new(0),
             transients: AtomicUsize::new(0),

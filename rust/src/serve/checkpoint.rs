@@ -73,10 +73,9 @@ pub fn trace_to_json(trace: &Trace) -> Json {
                 );
                 match e.value() {
                     Some(t) => j.set("time", t),
-                    None => j.set(
-                        "invalid",
-                        e.invalid_label().expect("non-valid evals always carry a label"),
-                    ),
+                    // Non-valid evals always carry a label; fall back to
+                    // "runtime" rather than panic inside checkpoint writes.
+                    None => j.set("invalid", e.invalid_label().unwrap_or("runtime")),
                 }
             })
             .collect(),

@@ -93,19 +93,23 @@ impl SessionConfig {
         Ok(self)
     }
 
-    pub fn device(&self) -> Device {
-        Device::by_name(&self.gpu).expect("validated GPU name")
+    /// Resolve the device. `validate` canonicalized the name, but configs
+    /// also arrive straight off the wire and out of checkpoint files, so
+    /// this re-resolves instead of panicking on a stale or forged name.
+    pub fn device(&self) -> Result<Device, String> {
+        Device::by_name(&self.gpu).ok_or_else(|| format!("unknown GPU '{}'", self.gpu))
     }
 
     /// The search space this run tunes over plus its cache/objective id.
     /// Table values are not needed — this is the daemon-side half, where
     /// measurements arrive from clients.
     pub fn build_space(&self) -> Result<(Arc<SearchSpace>, String), String> {
-        let dev = self.device();
+        let dev = self.device()?;
         let base_id = objective_id(&self.kernel, dev.name);
         match &self.space {
             None => {
-                let k = kernel_by_name(&self.kernel).expect("validated kernel name");
+                let k = kernel_by_name(&self.kernel)
+                    .ok_or_else(|| format!("unknown kernel '{}'", self.kernel))?;
                 Ok((Arc::new(k.spec(&dev).build()), base_id))
             }
             Some(path) => {
@@ -119,12 +123,13 @@ impl SessionConfig {
     /// The client-side half: a concrete objective (simulation mode),
     /// wrapped in the configured fault/resilience layers.
     pub fn build_objective(&self) -> Result<BuiltObjective, String> {
-        let dev = self.device();
+        let dev = self.device()?;
         let table = match &self.space {
             None => crate::harness::figures::objective_for(&self.kernel, &dev),
             Some(path) => {
                 let spec = SpaceSpec::load(Path::new(path))?;
-                let k = kernel_by_name(&self.kernel).expect("validated kernel name");
+                let k = kernel_by_name(&self.kernel)
+                    .ok_or_else(|| format!("unknown kernel '{}'", self.kernel))?;
                 Arc::new(TableObjective::from_sim(SimulatedSpace::build_with_space(
                     k.as_ref(),
                     &dev,

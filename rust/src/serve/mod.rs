@@ -22,6 +22,11 @@
 //! sessions park fresh suggestions without drawing RNG, table objectives
 //! ignore the eval RNG, and budget accounting is shared with the in-process
 //! engine — so the daemon adds distribution, not behavior.
+//!
+//! A wire-facing module must never bring the daemon down on bad input, so
+//! unwrap/expect are compiler-denied here on top of ktbo-lint's
+//! no-panic-on-wire rule (tests are exempt; they panic on purpose).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod checkpoint;
 pub mod client;

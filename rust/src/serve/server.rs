@@ -18,12 +18,12 @@
 //! rebuilds each session from its checkpoint by trace replay and the
 //! cache warm-starts from its journal.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 use crate::objective::evalcache::{EvalCache, RunMemo};
@@ -31,7 +31,7 @@ use crate::serve::checkpoint::SessionCheckpoint;
 use crate::serve::config::SessionConfig;
 use crate::serve::protocol::{self, Request};
 use crate::space::SearchSpace;
-use crate::strategies::registry::by_name;
+use crate::strategies::registry::{by_name, unknown_strategy_message};
 use crate::strategies::{FevalBudget, Session, SessionNeed, SessionOpts, SessionTarget, Trace};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -59,12 +59,21 @@ struct Slot {
 pub struct TuningServer {
     opts: ServeOpts,
     cache: Arc<EvalCache>,
-    sessions: Mutex<HashMap<String, Arc<Mutex<Slot>>>>,
+    sessions: Mutex<BTreeMap<String, Arc<Mutex<Slot>>>>,
     /// Built spaces (and their objective ids) keyed by the config's
     /// (kernel, gpu, space-file) triple — thousands of sessions on one
     /// kernel share one space instead of re-enumerating it per `create`.
-    spaces: Mutex<HashMap<String, (Arc<SearchSpace>, String)>>,
+    spaces: Mutex<BTreeMap<String, (Arc<SearchSpace>, String)>>,
     shutdown: AtomicBool,
+}
+
+/// Lock acquisition that outlives panics: a poisoned mutex means some
+/// earlier request died mid-update, and the daemon's contract is to keep
+/// answering rather than cascade the crash — so recover the inner guard.
+/// (Map state stays structurally valid: both maps are only mutated by
+/// single `insert`/`remove` calls.)
+fn relock<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl TuningServer {
@@ -80,8 +89,8 @@ impl TuningServer {
         Ok(TuningServer {
             opts,
             cache: Arc::new(cache),
-            sessions: Mutex::new(HashMap::new()),
-            spaces: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(BTreeMap::new()),
+            spaces: Mutex::new(BTreeMap::new()),
             shutdown: AtomicBool::new(false),
         })
     }
@@ -161,13 +170,10 @@ impl TuningServer {
                 self.create(&session, ckpt.config, Some(ckpt.trace))
             }
             Request::Close { session } => {
-                let slot = self
-                    .sessions
-                    .lock()
-                    .unwrap()
+                let slot = relock(&self.sessions)
                     .remove(&session)
                     .ok_or_else(|| format!("no session named '{session}'"))?;
-                let slot = slot.lock().unwrap();
+                let slot = relock(&slot);
                 Ok(done_response(&slot).set("closed", true))
             }
             Request::Status => Ok(self.status()),
@@ -198,7 +204,7 @@ impl TuningServer {
             // product, so it happens once per distinct triple; holding the
             // lock across the build just serializes the rare cold creates.
             let key = format!("{}|{}|{}", cfg.kernel, cfg.gpu, cfg.space.as_deref().unwrap_or(""));
-            let mut spaces = self.spaces.lock().unwrap();
+            let mut spaces = relock(&self.spaces);
             match spaces.get(&key) {
                 Some((space, obj_id)) => (Arc::clone(space), obj_id.clone()),
                 None => {
@@ -208,12 +214,17 @@ impl TuningServer {
                 }
             }
         };
-        let driver = by_name(&cfg.strategy).expect("validated strategy name").driver(&space);
+        // `validate` already canonicalized the name, but the daemon never
+        // trusts that enough to panic on wire-derived data.
+        let driver = by_name(&cfg.strategy)
+            .ok_or_else(|| unknown_strategy_message(&cfg.strategy))?
+            .driver(&space);
         let resumed = resume_from.as_ref().map(Trace::len);
         let session = Session::build(
             driver,
             SessionTarget::External(Arc::clone(&space)),
             Box::new(FevalBudget::new(cfg.budget)),
+            // ktbo-lint: allow(rng-discipline): session root stream — the seed is owned by SessionConfig, matching offline `drive`
             Rng::new(cfg.seed),
             SessionOpts {
                 memo: Some(RunMemo::shared(Arc::clone(&self.cache), &obj_id)),
@@ -221,7 +232,7 @@ impl TuningServer {
             },
         );
         let slot = Slot { config: cfg, obj_id, session };
-        let mut sessions = self.sessions.lock().unwrap();
+        let mut sessions = relock(&self.sessions);
         if sessions.contains_key(name) {
             return Err(format!("session '{name}' already exists"));
         }
@@ -244,10 +255,10 @@ impl TuningServer {
         F: FnOnce(&mut Slot) -> Result<Json, String>,
     {
         let slot = {
-            let sessions = self.sessions.lock().unwrap();
+            let sessions = relock(&self.sessions);
             Arc::clone(sessions.get(name).ok_or_else(|| format!("no session named '{name}'"))?)
         };
-        let mut slot = slot.lock().unwrap();
+        let mut slot = relock(&slot);
         f(&mut slot)
     }
 
@@ -266,7 +277,7 @@ impl TuningServer {
             );
         }
         protocol::ok()
-            .set("sessions", self.sessions.lock().unwrap().len())
+            .set("sessions", relock(&self.sessions).len())
             .set(
                 "cache",
                 Json::obj()

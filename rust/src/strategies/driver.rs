@@ -272,12 +272,14 @@ impl WallClockBudget {
     }
 
     pub fn for_duration(d: Duration) -> WallClockBudget {
+        // ktbo-lint: allow(no-wall-clock): WallClockBudget IS the budget clock — the one sanctioned trace-path time source
         WallClockBudget { deadline: Instant::now() + d }
     }
 }
 
 impl Budget for WallClockBudget {
     fn proceed(&self, _trace: &Trace) -> bool {
+        // ktbo-lint: allow(no-wall-clock): WallClockBudget IS the budget clock — the one sanctioned trace-path time source
         Instant::now() < self.deadline
     }
 

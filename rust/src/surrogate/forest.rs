@@ -289,6 +289,7 @@ impl Model for ForestModel {
         }
         let rng = self
             .rng
+            // ktbo-lint: allow(rng-discipline): deterministic fixed-stream fallback for standalone (unseeded) model use; seeded runs go through seed()
             .get_or_insert_with(|| Rng::with_stream(0x9e37_79b9_7f4a_7c15, 0x464f_5245_5354));
         self.trees.clear();
         let cfg = self.cfg;

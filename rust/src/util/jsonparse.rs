@@ -4,11 +4,18 @@
 
 use crate::util::json::Json;
 
+/// Maximum container nesting the parser accepts. Each level costs one
+/// stack frame of recursive descent, and serve feeds wire input here
+/// verbatim — without a cap, a line of a few hundred thousand `[` bytes
+/// overflows the stack and aborts the whole daemon. 128 is far deeper
+/// than any document this workspace emits.
+const MAX_DEPTH: usize = 128;
+
 pub fn parse(input: &str) -> Result<Json, String> {
     let bytes = input.as_bytes();
     let mut p = Parser { b: bytes, i: 0 };
     p.skip_ws();
-    let v = p.value()?;
+    let v = p.value(0)?;
     p.skip_ws();
     if p.i != bytes.len() {
         return Err(format!("trailing data at byte {}", p.i));
@@ -55,11 +62,14 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} levels at byte {}", self.i));
+        }
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -69,7 +79,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'{')?;
         let mut kv = Vec::new();
         self.skip_ws();
@@ -82,7 +92,7 @@ impl<'a> Parser<'a> {
             let key = self.string()?;
             self.skip_ws();
             self.expect(b':')?;
-            let val = self.value()?;
+            let val = self.value(depth + 1)?;
             kv.push((key, val));
             self.skip_ws();
             match self.bump() {
@@ -93,7 +103,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -102,7 +112,7 @@ impl<'a> Parser<'a> {
             return Ok(Json::Arr(items));
         }
         loop {
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -244,6 +254,18 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn bounded_nesting_depth() {
+        // Reasonable nesting parses; a bracket flood is refused with an
+        // error instead of recursing until the stack overflows.
+        let deep_ok = format!("{}0{}", "[".repeat(64), "]".repeat(64));
+        assert!(parse(&deep_ok).is_ok());
+        let flood = "[".repeat(100_000);
+        assert!(parse(&flood).unwrap_err().contains("nesting"));
+        let obj_flood = "{\"a\":".repeat(100_000);
+        assert!(parse(&obj_flood).unwrap_err().contains("nesting"));
     }
 
     #[test]

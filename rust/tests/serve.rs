@@ -353,6 +353,147 @@ fn tcp_mid_ask_disconnect_and_double_tell() {
     accept.join().unwrap().unwrap();
 }
 
+/// Satellite: the malformed-request soak. A deterministic corpus of
+/// truncated, mangled, type-confused, and pathological request lines is
+/// fired at a live server. Every single line must come back as one
+/// parseable JSON response carrying an `ok` field — never a panic, never
+/// silence — and a session created before the soak must afterwards
+/// finish bit-identically to its offline run, proving garbage on the
+/// wire can neither kill the daemon nor corrupt live session state.
+#[test]
+fn malformed_request_soak_never_kills_the_daemon() {
+    let server = TuningServer::new(ServeOpts::default()).unwrap();
+    let obj = objective_for("adding", &Device::a100());
+
+    // A healthy session opened before the abuse starts.
+    let create = format!(
+        r#"{{"cmd":"create","session":"soak","config":{}}}"#,
+        config_json("mls", 12, 77)
+    );
+    assert!(is_ok(&resp(&server, &create)));
+
+    // Hand-picked pathological lines: wrong JSON types, unknown
+    // commands/sessions/kernels/GPUs/strategies, missing and negative
+    // fields, duplicate creates, control characters, non-JSON noise.
+    let fixed: &[&str] = &[
+        "",
+        "   \t  ",
+        "null",
+        "42",
+        "\"just a string\"",
+        "[1,2,3]",
+        "{}",
+        r#"{"cmd":7}"#,
+        r#"{"cmd":null}"#,
+        r#"{"cmd":"no-such-cmd"}"#,
+        r#"{"cmd":"ask"}"#,
+        r#"{"cmd":"ask","session":42}"#,
+        r#"{"cmd":"ask","session":"ghost"}"#,
+        r#"{"cmd":"tell","session":"soak"}"#,
+        r#"{"cmd":"tell","session":"soak","config_index":-3,"time":1.0}"#,
+        r#"{"cmd":"tell","session":"soak","config_index":0,"time":"fast"}"#,
+        r#"{"cmd":"tell","session":"soak","config_index":99999999,"time":0.5}"#,
+        r#"{"cmd":"create","session":"soak","config":{"kernel":"adding","gpu":"a100","strategy":"random","budget":5,"seed":"0x7"}}"#,
+        r#"{"cmd":"create","session":"../etc/passwd","config":{"kernel":"adding","gpu":"a100","strategy":"random","budget":5,"seed":"0x7"}}"#,
+        r#"{"cmd":"create","session":"k1","config":{"kernel":"nope","gpu":"a100","strategy":"random","budget":5,"seed":"0x7"}}"#,
+        r#"{"cmd":"create","session":"k2","config":{"kernel":"adding","gpu":"hal9000","strategy":"random","budget":5,"seed":"0x7"}}"#,
+        r#"{"cmd":"create","session":"k3","config":{"kernel":"adding","gpu":"a100","strategy":"gradient_descent","budget":5,"seed":"0x7"}}"#,
+        r#"{"cmd":"create","session":"k4","config":{"kernel":"adding","gpu":"a100","strategy":"random","budget":-5,"seed":"0x7"}}"#,
+        r#"{"cmd":"create","session":"k5","config":"not an object"}"#,
+        r#"{"cmd":"create","session":"k6"}"#,
+        r#"{"cmd":"resume","session":"never-checkpointed"}"#,
+        r#"{"cmd":"resume","session":"soak","checkpoint":{"type":"wrong"}}"#,
+        r#"{"cmd":"checkpoint","session":"ghost"}"#,
+        r#"{"cmd":"close","session":"ghost"}"#,
+        "{\"cmd\":\"ask\",\"session\":\"soak\"\u{0}}",
+        "{{{{{{{{",
+        "\u{fffd}\u{fffd}\u{fffd}",
+    ];
+    let mut corpus: Vec<String> = fixed.iter().map(|s| s.to_string()).collect();
+
+    // Every prefix truncation of real requests (simulates a connection
+    // cut mid-line).
+    let tell = r#"{"cmd":"tell","session":"soak","config_index":0,"time":0.5}"#;
+    for base in [create.as_str(), r#"{"cmd":"ask","session":"soak"}"#, tell] {
+        let chars: Vec<char> = base.chars().collect();
+        for cut in 0..chars.len() {
+            corpus.push(chars[..cut].iter().collect());
+        }
+    }
+
+    // Seeded random mangles of a valid request: same corpus every run.
+    // (Tells can't corrupt the session — with no outstanding ask they
+    // are rejected; asks are idempotent until told.)
+    let mut rng = Rng::with_stream(2026, 0x5041_11fe);
+    let palette: Vec<char> = "{}[]\":,x0\\".chars().collect();
+    for _ in 0..500 {
+        let mut chars: Vec<char> = tell.chars().collect();
+        for _ in 0..1 + rng.below(3) {
+            let pos = rng.below(chars.len());
+            chars[pos] = palette[rng.below(palette.len())];
+        }
+        corpus.push(chars.iter().collect());
+    }
+
+    // Parser-stressing floods: bracket/braces nesting that would
+    // overflow a recursive-descent parser without its depth cap, and a
+    // very long flat line.
+    corpus.push("[".repeat(200_000));
+    corpus.push("{\"a\":".repeat(200_000));
+    corpus.push(format!("{{\"cmd\":\"ask\",\"session\":\"{}\"}}", "s".repeat(1 << 20)));
+
+    for (i, line) in corpus.iter().enumerate() {
+        let raw = server.handle_line(line);
+        let j = jsonparse::parse(&raw)
+            .unwrap_or_else(|e| panic!("corpus[{i}]: response is not JSON ({e}): {raw}"));
+        let ok = j.get("ok").and_then(|v| match v {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        });
+        assert!(ok.is_some(), "corpus[{i}]: response lacks a boolean 'ok': {raw}");
+        if ok == Some(false) {
+            assert!(
+                j.get("error").and_then(Json::as_str).is_some_and(|e| !e.is_empty()),
+                "corpus[{i}]: error reply without an 'error' message: {raw}"
+            );
+        }
+    }
+
+    // The daemon is not only alive — the pre-soak session still finishes
+    // bit-identically to offline, so no garbage leaked into its state.
+    let mut rng = Rng::new(999);
+    let ask = r#"{"cmd":"ask","session":"soak"}"#;
+    loop {
+        let a = resp(&server, ask);
+        assert!(is_ok(&a), "post-soak ask failed: {a:?}");
+        match a.get("status").and_then(Json::as_str) {
+            Some("eval") => {
+                let idx = a.get("config_index").and_then(Json::as_f64).unwrap() as usize;
+                let t = obj.evaluate(idx, &mut rng);
+                let tell = match t.value() {
+                    Some(v) => format!(
+                        r#"{{"cmd":"tell","session":"soak","config_index":{idx},"time":{v}}}"#
+                    ),
+                    None => format!(
+                        r#"{{"cmd":"tell","session":"soak","config_index":{idx},"invalid":"{}"}}"#,
+                        t.invalid_label().unwrap()
+                    ),
+                };
+                assert!(is_ok(&resp(&server, &tell)));
+            }
+            Some("done") => break,
+            other => panic!("unexpected post-soak status {other:?}"),
+        }
+    }
+    let ck = resp(&server, r#"{"cmd":"checkpoint","session":"soak"}"#);
+    let trace = trace_from_json(ck.get("checkpoint").unwrap().get("trace").unwrap()).unwrap();
+    let offline = offline_trace("mls", 12, 77, obj.as_ref());
+    assert_eq!(
+        trace.records, offline.records,
+        "soak corrupted the live session: served trace diverged from offline"
+    );
+}
+
 /// Satellite regression: the committed version-less checkpoint fixture
 /// (written before `schema_version` existed) must keep loading, and a
 /// future version must be refused.

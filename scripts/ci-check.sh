@@ -2,12 +2,12 @@
 # Local mirror of .github/workflows/ci.yml — run before pushing to
 # reproduce a red pipeline with one command:
 #
-#   scripts/ci-check.sh          # everything the two CI jobs run
+#   scripts/ci-check.sh          # everything the CI jobs run
 #   scripts/ci-check.sh --fast   # skip the smoke bench + sweep tier
 #
-# Steps (same order as CI): fmt, clippy, release build, tests, then the
-# smoke bench and smoke sweep with the artifact sanity checks the CI
-# `smoke` job gates on.
+# Steps (same order as CI): fmt, clippy, release build, tests, docs, the
+# ktbo-lint determinism audit, then the smoke bench and smoke sweep with
+# the artifact sanity checks the CI `smoke` job gates on.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -33,6 +33,9 @@ cargo test -q
 
 step "cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --workspace --no-deps
+
+step "ktbo-lint (determinism audit vs lint/baseline.json)"
+cargo run --release -p ktbo-lint -- --workspace --baseline lint/baseline.json
 
 if [ "$FAST" = "1" ]; then
   printf '\nci-check: core checks green (smoke tier skipped via --fast)\n'
