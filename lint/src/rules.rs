@@ -90,7 +90,7 @@ pub const RULES: &[Rule] = &[
     },
     Rule {
         id: STABLE_SORT_TIEBREAK,
-        scopes: &["rust/src/bo/", "rust/src/strategies/"],
+        scopes: &["rust/src/bo/", "rust/src/strategies/", "rust/src/space/"],
         summary: "`sort_unstable*` in ranking code (equal f32 scores land in \
                   platform-dependent order)",
         hint: "use stable `sort_by` or add a deterministic tiebreak key \
@@ -128,6 +128,7 @@ mod tests {
         assert!(in_scope(NO_HASH_ORDER, "rust/src/harness/orchestrator.rs"));
         assert!(!in_scope(NO_HASH_ORDER, "rust/src/util/cli.rs"));
         assert!(in_scope(STABLE_SORT_TIEBREAK, "rust/src/strategies/driver.rs"));
+        assert!(in_scope(STABLE_SORT_TIEBREAK, "rust/src/space/view.rs"));
         assert!(!in_scope(STABLE_SORT_TIEBREAK, "rust/src/surrogate/forest.rs"));
         assert!(in_scope(LINT_DIRECTIVE, "anything/at/all.rs"));
     }

@@ -1,0 +1,63 @@
+//! Scale bench for implicit (lazy) spaces (custom harness — no criterion
+//! in the offline vendor set).
+//!
+//! Runs the lazy tuning path — `LazyView` oracle, pool drivers, the
+//! synthetic objective — over a family of spaces whose Cartesian size
+//! grows from 512 to 5.12·10⁸ (unconstrained filler dimensions), and
+//! asserts per-suggestion constraint work stays bounded by the
+//! candidate-pool knob: flat in Cartesian size. Results are written to
+//! `BENCH_space_scale.json` at the repo root (see EXPERIMENTS.md
+//! §Space scale).
+//!
+//! Run: `cargo bench --bench space_scale` (or `scripts/bench.sh`).
+//! Flags: `--smoke` (two sizes, seconds-scale), `--out PATH`.
+//!
+//! The timing/assertion logic lives in
+//! `ktbo::harness::space_scale_bench`, which the test suite also
+//! exercises — this binary cannot silently rot.
+
+use ktbo::harness::space_scale_bench::{flatness_violation, run_scenario, scenario_grid, to_json};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    // Smoke runs must never clobber the tracked full-grid trajectory file.
+    let default_name =
+        if smoke { "BENCH_space_scale.smoke.json" } else { "BENCH_space_scale.json" };
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| format!("{}/../{default_name}", env!("CARGO_MANIFEST_DIR")));
+
+    println!("== space_scale: lazy-view per-suggestion work vs Cartesian size ==");
+    println!(
+        "{:<10} {:>14} {:>6} {:>8} {:>8} {:>20} {:>18}",
+        "strategy", "cartesian", "dims", "budget", "pool", "probes/suggestion", "us/suggestion"
+    );
+    let mut records = Vec::new();
+    for sc in scenario_grid(smoke) {
+        let r = run_scenario(&sc);
+        println!(
+            "{:<10} {:>14} {:>6} {:>8} {:>8} {:>20.1} {:>18.1}",
+            r.scenario.strategy,
+            r.cartesian,
+            r.dims,
+            r.scenario.budget,
+            r.scenario.pool,
+            r.probes_per_suggestion,
+            r.us_per_suggestion
+        );
+        records.push(r);
+    }
+
+    if let Some(violation) = flatness_violation(&records) {
+        eprintln!("FLATNESS VIOLATION: {violation}");
+        std::process::exit(1);
+    }
+    println!("flatness: per-suggestion probe work bounded by the pool/dims cap at every size");
+
+    let doc = to_json(&records).render_pretty();
+    std::fs::write(&out, &doc).expect("write bench json");
+    println!("wrote {out}");
+}

@@ -57,14 +57,18 @@
 use std::sync::Arc;
 
 use crate::bo::acquisition::{reduce_shard_argmins, score_chunk, var_from_fp, var_to_fp};
-use crate::bo::config::{Acq, BoConfig, Exploration, InitialSampling};
+use crate::bo::config::{Acq, AcqPolicyKind, BoConfig, Exploration, InitialSampling};
 use crate::bo::multi::{make_policy, AcqPolicy};
+use crate::bo::pool::PoolBoDriver;
 use crate::bo::sampling::{lhs_points, maximin_lhs_points, random_untaken, snap_to_configs};
-use crate::gp::{IncrementalGp, Surrogate, DEFAULT_SHARD_LEN};
+use crate::gp::{IncrementalGp, NativeSurrogate, Surrogate, DEFAULT_SHARD_LEN};
+use crate::space::view::SpaceView;
 use crate::space::{neighbors, Neighborhood, SearchSpace};
 use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
 use crate::strategies::Strategy;
-use crate::surrogate::{predict_pass, FitCtx, Model};
+use crate::surrogate::{
+    predict_pass, FitCtx, ForestConfig, ForestPool, GpPool, Model, PoolModel, TpeConfig, TpePool,
+};
 use crate::util::linalg::{mean, std_dev};
 use crate::util::pool::{nested_threads, ShardPool};
 
@@ -168,6 +172,30 @@ impl Strategy for BoStrategy {
             chosen: None,
         })
     }
+
+    fn lazy_driver(
+        &self,
+        _view: &dyn SpaceView,
+        pool_size: usize,
+    ) -> Option<Box<dyn SearchDriver>> {
+        let cfg = self.config.clone();
+        let acq = match cfg.acq {
+            AcqPolicyKind::Single(a) => a,
+            // The multi policies lean on the fused whole-space sweep's
+            // per-AF argmins; they stay eager-only for now.
+            AcqPolicyKind::Multi | AcqPolicyKind::AdvancedMulti => return None,
+        };
+        // The pool surrogate mirrors the registry's eager backend for
+        // this label; unrecognized labels fall back to the one-shot GP
+        // (the same posterior the incremental sweep computes).
+        let model: Box<dyn PoolModel> = match self.label.as_str() {
+            "tpe" => Box::new(TpePool::new(TpeConfig::default())),
+            "bo_rf" => Box::new(ForestPool::new(ForestConfig::random_forest())),
+            "bo_et" => Box::new(ForestPool::new(ForestConfig::extra_trees())),
+            _ => Box::new(GpPool::new(NativeSurrogate::new(cfg.cov, cfg.noise))),
+        };
+        Some(Box::new(PoolBoDriver::new(self.label.clone(), cfg, acq, model, pool_size)))
+    }
 }
 
 enum BoPhase {
@@ -228,7 +256,7 @@ impl BoDriver {
     /// A uniformly random not-yet-visited configuration.
     fn random_unvisited(&mut self, ctx: &mut DriveCtx) -> Option<usize> {
         self.taken.copy_from_slice(&self.visited);
-        random_untaken(ctx.space, &mut self.taken, ctx.rng)
+        random_untaken(ctx.space(), &mut self.taken, ctx.rng)
     }
 
     /// Replace invalid/missing initial draws with random samples until
@@ -257,7 +285,7 @@ impl BoDriver {
         if !ctx.budget_left() {
             return Ask::Finished;
         }
-        let space = ctx.space;
+        let space = ctx.space();
         let m = space.len();
         let dims = space.dims();
 
@@ -478,7 +506,7 @@ impl SearchDriver for BoDriver {
         if !self.started {
             // ---- Initial sampling (§III-E) ----
             self.started = true;
-            let space = ctx.space;
+            let space = ctx.space();
             let m = space.len();
             let dims = space.dims();
             self.init_n = match ctx.max_fevals() {

@@ -6,7 +6,9 @@ pub mod acquisition;
 pub mod config;
 pub mod engine;
 pub mod multi;
+pub mod pool;
 pub mod sampling;
 
 pub use config::{Acq, AcqPolicyKind, BoConfig, Exploration, InitialSampling};
 pub use engine::{Backend, BoStrategy};
+pub use pool::{PoolBoDriver, DEFAULT_POOL_SIZE};

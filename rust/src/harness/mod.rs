@@ -10,6 +10,7 @@ pub mod orchestrator;
 pub mod runner;
 pub mod session_bench;
 pub mod space_bench;
+pub mod space_scale_bench;
 pub mod surrogate_bench;
 
 pub use figures::Options;

@@ -1,0 +1,225 @@
+//! Reusable core of the `space_scale` bench: per-suggestion work of the
+//! lazy (implicit-space) tuning path as the Cartesian size grows across
+//! ~5+ orders of magnitude, with machine-readable output
+//! (`BENCH_space_scale.json` at the repo root).
+//!
+//! The claim under test is ROADMAP item 1's acceptance: on a
+//! [`LazyView`], per-suggestion cost is bounded by the candidate-pool
+//! knob (plus an O(dims²) neighborhood term), **never** by the Cartesian
+//! size — no enumeration, no whole-space tiles. The bench measures
+//! constraint probes per suggestion (deterministic) and wall time per
+//! suggestion (informational) over a family of spaces that differ only
+//! in unconstrained filler dimensions, then checks every record against
+//! [`probe_cap`], a function of pool size and dimension count alone.
+//!
+//! The bench binary (`benches/space_scale.rs`) is a thin CLI over these
+//! functions, and the test suite runs a tiny smoke grid through the same
+//! code (`space_scale_bench_smoke` in `tests/integration.rs`) — so the
+//! bench logic compiles and runs on every `cargo test` and cannot
+//! silently rot.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::objective::synthetic::SyntheticObjective;
+use crate::objective::Objective;
+use crate::space::view::{LazyView, SpaceView};
+use crate::space::{Expr, SpaceSpec};
+use crate::strategies::registry::by_name;
+use crate::strategies::{FevalBudget, Session};
+use crate::util::json::Json;
+use crate::util::rng::{fnv1a, Rng};
+
+/// One scale scenario: `strategy` driven lazily over the scaled space
+/// with `filler_dims` unconstrained 10-value dimensions appended.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub strategy: &'static str,
+    pub filler_dims: usize,
+    pub budget: usize,
+    pub pool: usize,
+}
+
+/// Outcome of one scenario.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub scenario: Scenario,
+    pub cartesian: u64,
+    pub dims: usize,
+    pub evaluations: usize,
+    /// Constraint probes per suggestion — the deterministic work metric
+    /// the flatness assertion runs on.
+    pub probes_per_suggestion: f64,
+    /// Wall time per suggestion (informational; not asserted).
+    pub us_per_suggestion: f64,
+}
+
+/// The scaled space family: a constrained 3-dim core (512-config
+/// Cartesian, bx·by ≤ 256 pruning) plus `filler_dims` unconstrained
+/// 10-value dimensions. Restriction survival is identical at every
+/// scale, so any growth in per-suggestion work is attributable to size,
+/// not to a harder constraint set.
+pub fn scaled_spec(filler_dims: usize) -> SpaceSpec {
+    let mut spec = SpaceSpec::new(&format!("scale-f{filler_dims}"))
+        .ints("bx", &[1, 2, 4, 8, 16, 32, 64, 128])
+        .ints("by", &[1, 2, 4, 8, 16, 32, 64, 128])
+        .ints("tile", &[1, 2, 3, 4, 5, 6, 7, 8])
+        .restrict(Expr::var("bx").mul(Expr::var("by")).le(Expr::lit(256)));
+    let vals: Vec<i64> = (0..10).collect();
+    for d in 0..filler_dims {
+        spec = spec.ints(&format!("f{d}"), &vals);
+    }
+    spec
+}
+
+/// The per-suggestion probe ceiling: pool draws (≤ pool candidates ×
+/// the bounded per-draw rejection budget) plus the incumbent
+/// neighborhoods (≤ 3 incumbents × a full Adjacent scan, 2·dims one-dim
+/// moves + 4·dims² two-dim pairs) plus slack for the initial batch. A
+/// function of the pool knob and the dimension count ONLY — if probe
+/// work ever scales with Cartesian size, this cap breaks loudly.
+pub fn probe_cap(pool: usize, dims: usize) -> f64 {
+    let d = dims as f64;
+    (pool * 512) as f64 + 3.0 * (2.0 * d + 4.0 * d * d) + 512.0
+}
+
+/// Run one scenario: lazy view, pool driver, synthetic objective, full
+/// session loop under a feval budget.
+pub fn run_scenario(sc: &Scenario) -> Record {
+    let spec = scaled_spec(sc.filler_dims);
+    let view = Arc::new(LazyView::from_spec(&spec).expect("scaled spec builds"));
+    let cartesian = view.cartesian_size();
+    let dims = view.dims();
+    let strategy = by_name(sc.strategy).expect("bench strategy registered");
+    let driver =
+        strategy.lazy_driver(view.as_ref(), sc.pool).expect("bench strategy is lazy-capable");
+    let obj: Arc<dyn Objective> =
+        Arc::new(SyntheticObjective::new(Arc::clone(&view), fnv1a(&spec.name)));
+    let t0 = Instant::now();
+    let mut session =
+        Session::new(driver, obj, Box::new(FevalBudget::new(sc.budget)), Rng::new(0x5CA1E));
+    while session.step() {}
+    let total_s = t0.elapsed().as_secs_f64();
+    let evaluations = session.into_trace().len();
+    let n = evaluations.max(1) as f64;
+    Record {
+        scenario: sc.clone(),
+        cartesian,
+        dims,
+        evaluations,
+        probes_per_suggestion: view.probe_count() as f64 / n,
+        us_per_suggestion: total_s * 1e6 / n,
+    }
+}
+
+/// The bench grid. Full: TPE (the first-wired lazy strategy) across
+/// filler depths 0..=6 — Cartesian 512 up to 5.12·10⁸, a 10⁶× spread —
+/// plus the GP pool path at the extremes. Smoke: TPE at the two ends of
+/// a 10⁴× spread, seconds-scale.
+pub fn scenario_grid(smoke: bool) -> Vec<Scenario> {
+    if smoke {
+        return vec![
+            Scenario { strategy: "tpe", filler_dims: 0, budget: 15, pool: 32 },
+            Scenario { strategy: "tpe", filler_dims: 4, budget: 15, pool: 32 },
+        ];
+    }
+    let mut grid = Vec::new();
+    for filler_dims in 0..=6 {
+        grid.push(Scenario { strategy: "tpe", filler_dims, budget: 40, pool: 64 });
+    }
+    for filler_dims in [0, 6] {
+        grid.push(Scenario { strategy: "ei", filler_dims, budget: 25, pool: 64 });
+    }
+    grid
+}
+
+/// The bench's acceptance check. `None` means every record's probe work
+/// sits under its pool/dims cap and the grid actually spans the claimed
+/// size range; `Some(reason)` is a failure to surface. Kept here (not in
+/// the binary) so the test-suite smoke asserts the exact same predicate.
+pub fn flatness_violation(records: &[Record]) -> Option<String> {
+    let min = records.iter().map(|r| r.cartesian).min()?;
+    let max = records.iter().map(|r| r.cartesian).max()?;
+    if (max / min.max(1)) < 10_000 {
+        return Some(format!(
+            "grid spans only {min}..{max} Cartesian — too narrow to claim flatness"
+        ));
+    }
+    for r in records {
+        let cap = probe_cap(r.scenario.pool, r.dims);
+        if r.probes_per_suggestion > cap {
+            return Some(format!(
+                "{} at Cartesian {}: {:.0} probes/suggestion exceeds the pool/dims cap {:.0} — \
+                 per-suggestion work is scaling with space size",
+                r.scenario.strategy, r.cartesian, r.probes_per_suggestion, cap
+            ));
+        }
+    }
+    None
+}
+
+/// Render records as the `BENCH_space_scale.json` document.
+pub fn to_json(records: &[Record]) -> Json {
+    let rows: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("strategy", r.scenario.strategy)
+                .set("filler_dims", r.scenario.filler_dims)
+                .set("cartesian", format!("{}", r.cartesian))
+                .set("dims", r.dims)
+                .set("budget", r.scenario.budget)
+                .set("pool", r.scenario.pool)
+                .set("evaluations", r.evaluations)
+                .set("probes_per_suggestion", r.probes_per_suggestion)
+                .set("us_per_suggestion", r.us_per_suggestion)
+        })
+        .collect();
+    Json::obj()
+        .set("bench", "space_scale")
+        .set("unit", "probes_per_suggestion")
+        .set(
+            "description",
+            "lazy-view per-suggestion constraint work vs Cartesian size: bounded by the candidate pool, flat across orders of magnitude",
+        )
+        .set("records", Json::Arr(rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The end-to-end smoke of the grid + flatness predicate + JSON
+    // serialization lives in tests/integration.rs
+    // (space_scale_bench_smoke) — one copy only.
+
+    #[test]
+    fn scaled_spec_sizes_grow_by_tens() {
+        assert_eq!(scaled_spec(0).cartesian_size(), 512);
+        assert_eq!(scaled_spec(3).cartesian_size(), 512_000);
+        let v = LazyView::from_spec(&scaled_spec(2)).unwrap();
+        assert_eq!(v.cartesian_size(), 51_200);
+        assert_eq!(v.dims(), 5);
+    }
+
+    #[test]
+    fn flatness_predicate_rejects_sweeps_and_narrow_grids() {
+        let rec = |cartesian: u64, probes: f64| Record {
+            scenario: Scenario { strategy: "tpe", filler_dims: 0, budget: 10, pool: 32 },
+            cartesian,
+            dims: 3,
+            evaluations: 10,
+            probes_per_suggestion: probes,
+            us_per_suggestion: 1.0,
+        };
+        // A record whose probe work looks like an enumeration must fail.
+        let bad = vec![rec(512, 100.0), rec(51_200_000, 5_000_000.0)];
+        assert!(flatness_violation(&bad).unwrap().contains("exceeds"));
+        // A single-size grid can't claim flatness.
+        let narrow = vec![rec(512, 100.0)];
+        assert!(flatness_violation(&narrow).unwrap().contains("narrow"));
+        // Pool-bounded work across a wide spread passes.
+        let good = vec![rec(512, 100.0), rec(51_200_000, 300.0)];
+        assert_eq!(flatness_violation(&good), None);
+    }
+}

@@ -44,6 +44,11 @@ fn usage() {
     println!("  ktbo spaces");
     println!("  ktbo tune <kernel> <gpu> [--strategy NAME] [--budget N] [--seed N] [--backend native|xla]");
     println!("             [--space FILE.json]   declarative SpaceSpec replacing the kernel's built-in space");
+    println!("             [--lazy-space [true|false]] [--pool-size N]");
+    println!("                 implicit-space mode: tune --space through a lazy constraint oracle");
+    println!("                 (no enumeration; synthetic objective). Automatic when the spec's");
+    println!("                 Cartesian product exceeds 2^24 configs; lazy-capable strategies:");
+    println!("                 {}", ktbo::strategies::registry::lazy_names().join(" "));
     println!("             [--eval-timeout-ms N] [--max-retries N] [--fault-plan FILE.json]");
     println!("  ktbo sweep [--kernels a,b] [--gpus a,b] [--strategies a,b] [--smoke]");
     println!("             [--budget N] [--repeat-scale F] [--seed N] [--threads N]");
@@ -203,6 +208,12 @@ fn cmd_spaces(args: &Args) {
     }
 }
 
+/// Cartesian-size cutoff above which `ktbo tune --space` switches to the
+/// implicit (lazy) path automatically: 2^24 ≈ 16.8M configs, roughly
+/// where eager enumeration plus whole-space tiles stop being
+/// seconds-and-megabytes. Documented in README §Implicit spaces.
+const LAZY_CUTOFF: u128 = 1 << 24;
+
 fn cmd_tune(args: &Args) {
     let kernel = args.positionals.get(1).map(String::as_str).unwrap_or("gemm");
     let gpu = args.positionals.get(2).map(String::as_str).unwrap_or("titanx");
@@ -216,6 +227,35 @@ fn cmd_tune(args: &Args) {
         eprintln!("{e}");
         std::process::exit(2);
     });
+
+    // Implicit-space (lazy) decision. Forced by `--lazy-space`, forbidden
+    // by `--lazy-space false`; with neither, a declarative `--space` spec
+    // goes lazy automatically once its Cartesian product exceeds
+    // LAZY_CUTOFF — past that, enumeration time and tile memory dominate
+    // the run. Lazy mode never calls `spec.build()`.
+    if args.get("cache").is_none() {
+        if let Some(path) = cfg.space.clone() {
+            let spec = ktbo::space::SpaceSpec::load(std::path::Path::new(&path))
+                .unwrap_or_else(|e| {
+                    eprintln!("failed to load space spec: {e}");
+                    std::process::exit(2);
+                });
+            let go_lazy = match cfg.lazy_space {
+                Some(b) => b,
+                None => spec.cartesian_size() > LAZY_CUTOFF,
+            };
+            if go_lazy {
+                cmd_tune_lazy(&cfg, &spec, &path);
+                return;
+            }
+        } else if cfg.lazy_space == Some(true) {
+            eprintln!("--lazy-space requires --space FILE.json (built-in kernels are table-backed)");
+            std::process::exit(2);
+        }
+    } else if cfg.lazy_space == Some(true) {
+        eprintln!("--cache and --lazy-space conflict: a cache file enumerates the space");
+        std::process::exit(2);
+    }
 
     // Simulation-mode cache file takes precedence over the built-in
     // simulator (Kernel Tuner cache interchange); `--space` replaces the
@@ -296,6 +336,72 @@ fn cmd_tune(args: &Args) {
                 elapsed
             );
             println!("best config: {}", built.table.space().describe(idx));
+        }
+        None => println!("no valid configuration found in {} evaluations", trace.len()),
+    }
+}
+
+/// The implicit-space tune path: a [`LazyView`] constraint oracle plus
+/// the deterministic synthetic objective, driven through the same
+/// `Session` loop as eager runs. Never enumerates the space and never
+/// builds tiles — per-suggestion work is bounded by the candidate pool.
+///
+/// [`LazyView`]: ktbo::space::view::LazyView
+fn cmd_tune_lazy(cfg: &SessionConfig, spec: &ktbo::space::SpaceSpec, path: &str) {
+    use ktbo::objective::synthetic::SyntheticObjective;
+    use ktbo::space::view::{LazyView, SpaceView};
+
+    let view = match LazyView::from_spec(spec) {
+        Ok(v) => std::sync::Arc::new(v),
+        Err(e) => {
+            eprintln!("cannot open lazy view on space spec: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!(
+        "lazy space '{}' from {path}: {} params, Cartesian {} (unenumerated)",
+        view.name(),
+        view.dims(),
+        view.cartesian_size()
+    );
+    let strategy = by_name(&cfg.strategy).expect("validated strategy name");
+    let pool = cfg.pool_size.unwrap_or(ktbo::bo::DEFAULT_POOL_SIZE);
+    let driver = strategy.lazy_driver(view.as_ref(), pool).unwrap_or_else(|| {
+        eprintln!(
+            "strategy '{}' requires an enumerated space and has no lazy mode \
+             (lazy-capable strategies: {})",
+            cfg.strategy,
+            ktbo::strategies::registry::lazy_names().join(", ")
+        );
+        std::process::exit(2);
+    });
+    // The landscape salt is a pure function of the space name: different
+    // seeds explore the *same* synthetic landscape, matching how eager
+    // runs share one measurement table across seeds.
+    let salt = ktbo::util::rng::fnv1a(&spec.name);
+    let obj: std::sync::Arc<dyn Objective> =
+        std::sync::Arc::new(SyntheticObjective::new(std::sync::Arc::clone(&view), salt));
+
+    let t0 = std::time::Instant::now();
+    let mut session =
+        Session::new(driver, obj, Box::new(FevalBudget::new(cfg.budget)), Rng::new(cfg.seed));
+    while session.step() {}
+    let trace = session.into_trace();
+    let elapsed = t0.elapsed();
+    match trace.best() {
+        Some((idx, val)) => {
+            println!(
+                "space={} strategy={} mode=lazy pool={pool}",
+                view.name(),
+                cfg.strategy
+            );
+            println!(
+                "evaluations={} best={val:.4} constraint_probes={} wall={:.2?}",
+                trace.len(),
+                view.probe_count(),
+                elapsed
+            );
+            println!("best config: {}", view.describe_key(idx as u64));
         }
         None => println!("no valid configuration found in {} evaluations", trace.len()),
     }

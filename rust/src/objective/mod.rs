@@ -10,7 +10,9 @@ pub mod cache;
 pub mod evalcache;
 pub mod faulty;
 pub mod resilient;
+pub mod synthetic;
 
+use crate::space::view::SpaceView;
 use crate::space::SearchSpace;
 use crate::util::rng::Rng;
 
@@ -114,6 +116,13 @@ fn intern_label(label: &str) -> &'static str {
 /// A tunable objective over an enumerated search space.
 pub trait Objective: Send + Sync {
     fn space(&self) -> &SearchSpace;
+
+    /// The space as a backing-agnostic [`SpaceView`]. Defaults to the
+    /// enumerated space; objectives over implicit (lazy) spaces override
+    /// this instead of implementing [`Objective::space`].
+    fn view(&self) -> &dyn SpaceView {
+        self.space()
+    }
 
     /// Evaluate configuration `idx`. `rng` models measurement noise; table
     /// objectives ignore it.

@@ -1,0 +1,160 @@
+//! Synthetic analytic objective over an implicit ([`LazyView`]) space.
+//!
+//! Billion-scale spaces cannot carry a measurement table, so scale
+//! experiments need an objective computable from the configuration
+//! alone. This one is a deterministic quadratic bowl in normalized
+//! coordinates with a hash-seeded center, a small deterministic ripple
+//! (so it is multimodal, not trivially convex), and an optional
+//! deterministic invalid band — the same key always evaluates to the
+//! same `Eval`, so runs replay bit-identically regardless of pool
+//! composition or visit order.
+
+use std::sync::Arc;
+
+use crate::objective::{Eval, Objective};
+use crate::space::view::{LazyView, SpaceView};
+use crate::space::SearchSpace;
+use crate::util::rng::{fnv1a, hash64, hash_unit, Rng};
+
+/// Deterministic analytic objective over a [`LazyView`]. The trace index
+/// of a lazy run is the packed key itself, so `evaluate(idx)` decodes
+/// `idx as u64` through the view.
+pub struct SyntheticObjective {
+    view: Arc<LazyView>,
+    salt: u64,
+    /// Fraction of configurations deterministically marked invalid
+    /// (runtime errors), emulating the fail-at-runtime band real kernel
+    /// grids have.
+    invalid_rate: f64,
+}
+
+impl SyntheticObjective {
+    pub fn new(view: Arc<LazyView>, salt: u64) -> SyntheticObjective {
+        SyntheticObjective { view, salt, invalid_rate: 0.0 }
+    }
+
+    /// Same objective with a deterministic invalid band of the given rate.
+    pub fn with_invalid_rate(mut self, rate: f64) -> SyntheticObjective {
+        self.invalid_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn lazy_view(&self) -> &Arc<LazyView> {
+        &self.view
+    }
+
+    /// The bowl center for dimension `d`, in normalized coordinates.
+    fn center(&self, d: usize) -> f64 {
+        hash_unit(self.salt ^ hash64(d as u64 + 1))
+    }
+
+    /// The deterministic objective value for a packed key, ignoring the
+    /// invalid band. Positive, "milliseconds-like".
+    fn value_of(&self, key: u64) -> f64 {
+        let dims = self.view.dims();
+        let mut norm = vec![0.0f32; dims];
+        self.view.norm_point_into(key, &mut norm);
+        let mut bowl = 0.0f64;
+        let mut ripple = 0.0f64;
+        for (d, &x) in norm.iter().enumerate() {
+            let x = x as f64;
+            let c = self.center(d);
+            bowl += (x - c) * (x - c);
+            ripple += (8.0 * x + c).sin();
+        }
+        1.0 + bowl + 0.05 * (1.0 + ripple / dims.max(1) as f64)
+    }
+}
+
+impl Objective for SyntheticObjective {
+    /// Synthetic objectives exist precisely because the space is too
+    /// large to enumerate; nothing on the lazy path may ask for columns.
+    fn space(&self) -> &SearchSpace {
+        panic!(
+            "synthetic objective over lazy space '{}' has no enumerated SearchSpace",
+            self.view.name()
+        )
+    }
+
+    fn view(&self) -> &dyn SpaceView {
+        self.view.as_ref()
+    }
+
+    fn evaluate(&self, idx: usize, _rng: &mut Rng) -> Eval {
+        let key = idx as u64;
+        if self.invalid_rate > 0.0 {
+            let gate = hash_unit(hash64(key ^ self.salt ^ fnv1a("invalid-band")));
+            if gate < self.invalid_rate {
+                return Eval::RuntimeError;
+            }
+        }
+        Eval::Valid(self.value_of(key))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::spec::SpaceSpec;
+    use crate::space::Expr;
+
+    fn toy_view() -> Arc<LazyView> {
+        let spec = SpaceSpec::new("synth-toy")
+            .ints("bx", &[16, 32, 64])
+            .ints("tile", &[1, 2, 4, 8])
+            .restrict(Expr::var("bx").mul(Expr::var("tile")).le(Expr::lit(128)));
+        Arc::new(LazyView::from_spec(&spec).expect("toy spec builds"))
+    }
+
+    #[test]
+    fn evaluation_is_deterministic_and_positive() {
+        let obj = SyntheticObjective::new(toy_view(), 0xC0FFEE);
+        let mut rng = Rng::new(1);
+        let view = obj.lazy_view().clone();
+        for _ in 0..50 {
+            let key = view.sample_key(&mut rng).expect("toy space nonempty");
+            let a = obj.evaluate(key as usize, &mut Rng::new(7));
+            let b = obj.evaluate(key as usize, &mut Rng::new(99));
+            assert_eq!(a, b, "same key must evaluate identically");
+            match a {
+                Eval::Valid(v) => assert!(v > 0.0 && v.is_finite()),
+                other => panic!("no invalid band configured, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_band_is_deterministic_and_roughly_sized() {
+        let obj = SyntheticObjective::new(toy_view(), 7).with_invalid_rate(0.5);
+        let view = obj.lazy_view().clone();
+        let mut rng = Rng::new(3);
+        let mut bad = 0usize;
+        let n = 200usize;
+        for _ in 0..n {
+            let key = view.sample_key(&mut rng).expect("toy space nonempty");
+            let a = obj.evaluate(key as usize, &mut Rng::new(1));
+            assert_eq!(a, obj.evaluate(key as usize, &mut Rng::new(2)));
+            if a == Eval::RuntimeError {
+                bad += 1;
+            }
+        }
+        assert!(bad > 0 && bad < n, "0.5 band should reject some but not all ({bad}/{n})");
+    }
+
+    #[test]
+    #[should_panic(expected = "no enumerated SearchSpace")]
+    fn enumerated_space_access_panics() {
+        let obj = SyntheticObjective::new(toy_view(), 1);
+        let _ = obj.space();
+    }
+
+    #[test]
+    fn salt_moves_the_landscape() {
+        let view = toy_view();
+        let a = SyntheticObjective::new(view.clone(), 1);
+        let b = SyntheticObjective::new(view.clone(), 2);
+        let mut rng = Rng::new(9);
+        let key = view.sample_key(&mut rng).expect("toy space nonempty") as usize;
+        assert_ne!(a.evaluate(key, &mut Rng::new(0)), b.evaluate(key, &mut Rng::new(0)));
+    }
+}

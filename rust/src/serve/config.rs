@@ -40,6 +40,16 @@ pub struct SessionConfig {
     pub max_retries: u32,
     /// Optional deterministic fault-injection plan file.
     pub fault_plan: Option<String>,
+    /// Implicit-space mode: `Some(true)` forces the lazy [`SpaceView`]
+    /// path, `Some(false)` forbids it, `None` (default) lets `ktbo tune`
+    /// pick by the documented Cartesian-size cutoff. The serve daemon is
+    /// eager-only and rejects `Some(true)` at build time.
+    ///
+    /// [`SpaceView`]: crate::space::view::SpaceView
+    pub lazy_space: Option<bool>,
+    /// Candidate-pool size per lazy-mode suggestion (`None` = the
+    /// engine default, [`crate::bo::DEFAULT_POOL_SIZE`]).
+    pub pool_size: Option<usize>,
 }
 
 impl SessionConfig {
@@ -68,6 +78,14 @@ impl SessionConfig {
             eval_timeout_ms: SessionConfig::parse_eval_timeout(args)?,
             max_retries: args.usize_or("max-retries", 0) as u32,
             fault_plan: args.get("fault-plan").map(str::to_string),
+            lazy_space: if args.has("lazy-space") { Some(args.flag("lazy-space")) } else { None },
+            pool_size: args
+                .get("pool-size")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| format!("--pool-size must be a positive integer, got '{v}'"))
+                })
+                .transpose()?,
         }
         .validate()
     }
@@ -90,7 +108,33 @@ impl SessionConfig {
         if self.budget == 0 {
             return Err("budget must be positive".into());
         }
+        if self.pool_size == Some(0) {
+            return Err("pool_size must be positive".into());
+        }
+        if self.lazy_space == Some(true) {
+            let name = &self.strategy;
+            if !crate::strategies::registry::lazy_names().contains(&name.as_str()) {
+                return Err(format!(
+                    "strategy '{name}' requires an enumerated space and cannot run with \
+                     lazy_space=true (lazy-capable strategies: {})",
+                    crate::strategies::registry::lazy_names().join(", ")
+                ));
+            }
+        }
         Ok(self)
+    }
+
+    /// Serve-side guard: the daemon's session machinery keys caches and
+    /// checkpoints on enumerated indices, so it refuses lazy mode rather
+    /// than silently materializing a huge space.
+    fn require_eager(&self, what: &str) -> Result<(), String> {
+        if self.lazy_space == Some(true) {
+            return Err(format!(
+                "{what} is eager-only: lazy_space=true is not supported here \
+                 (run `ktbo tune --lazy-space` locally instead)"
+            ));
+        }
+        Ok(())
     }
 
     /// Resolve the device. `validate` canonicalized the name, but configs
@@ -104,6 +148,7 @@ impl SessionConfig {
     /// Table values are not needed — this is the daemon-side half, where
     /// measurements arrive from clients.
     pub fn build_space(&self) -> Result<(Arc<SearchSpace>, String), String> {
+        self.require_eager("the serve daemon")?;
         let dev = self.device()?;
         let base_id = objective_id(&self.kernel, dev.name);
         match &self.space {
@@ -123,6 +168,7 @@ impl SessionConfig {
     /// The client-side half: a concrete objective (simulation mode),
     /// wrapped in the configured fault/resilience layers.
     pub fn build_objective(&self) -> Result<BuiltObjective, String> {
+        self.require_eager("the table-objective build path")?;
         let dev = self.device()?;
         let table = match &self.space {
             None => crate::harness::figures::objective_for(&self.kernel, &dev),
@@ -194,6 +240,14 @@ impl SessionConfig {
         if let Some(ms) = self.eval_timeout_ms {
             j = j.set("eval_timeout_ms", ms as usize);
         }
+        // Lazy knobs are omitted when unset so configs written before
+        // implicit spaces existed stay byte-identical on re-render.
+        if let Some(b) = self.lazy_space {
+            j = j.set("lazy_space", b);
+        }
+        if let Some(p) = self.pool_size {
+            j = j.set("pool_size", p);
+        }
         j
     }
 
@@ -221,6 +275,8 @@ impl SessionConfig {
             eval_timeout_ms: j.get("eval_timeout_ms").and_then(Json::as_f64).map(|v| v as u64),
             max_retries: j.get("max_retries").and_then(Json::as_f64).unwrap_or(0.0) as u32,
             fault_plan: opt_s("fault_plan"),
+            lazy_space: j.get("lazy_space").and_then(Json::as_bool),
+            pool_size: j.get("pool_size").and_then(Json::as_f64).map(|v| v as usize),
         }
         .validate()
     }
@@ -251,6 +307,8 @@ mod tests {
             eval_timeout_ms: None,
             max_retries: 0,
             fault_plan: None,
+            lazy_space: None,
+            pool_size: None,
         }
     }
 
@@ -266,6 +324,41 @@ mod tests {
         .unwrap();
         let back = SessionConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back, cfg);
+        // The lazy knobs round-trip too (on a lazy-capable strategy).
+        let lazy = SessionConfig {
+            strategy: "tpe".into(),
+            lazy_space: Some(true),
+            pool_size: Some(128),
+            ..base()
+        }
+        .validate()
+        .unwrap();
+        let back = SessionConfig::from_json(&lazy.to_json()).unwrap();
+        assert_eq!(back, lazy);
+    }
+
+    #[test]
+    fn lazy_knobs_are_validated_and_serve_side_refuses_lazy() {
+        let err = SessionConfig { pool_size: Some(0), ..base() }.validate().unwrap_err();
+        assert!(err.contains("pool_size"), "{err}");
+        // An eager-only strategy cannot be forced lazy.
+        let err = SessionConfig {
+            strategy: "advanced_multi".into(),
+            lazy_space: Some(true),
+            ..base()
+        }
+        .validate()
+        .unwrap_err();
+        assert!(err.contains("enumerated"), "{err}");
+        assert!(err.contains("tpe"), "must list lazy-capable strategies: {err}");
+        // The daemon-side builders refuse lazy mode outright.
+        let cfg = SessionConfig { strategy: "tpe".into(), lazy_space: Some(true), ..base() }
+            .validate()
+            .unwrap();
+        let err = cfg.build_space().unwrap_err();
+        assert!(err.contains("eager-only"), "{err}");
+        let err = cfg.build_objective().unwrap_err();
+        assert!(err.contains("eager-only"), "{err}");
     }
 
     #[test]

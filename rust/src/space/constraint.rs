@@ -598,6 +598,7 @@ impl Restriction {
                 })
             })
             .collect();
+        // ktbo-lint: allow(stable-sort-tiebreak): usize dims are unique after dedup — no tie to break
         dims.sort_unstable();
         dims.dedup();
         Some(dims)

@@ -12,12 +12,14 @@ pub mod param;
 #[allow(clippy::module_inception)]
 pub mod space;
 pub mod spec;
+pub mod view;
 
 pub use constraint::{Assignment, Expr, Restriction, VarScope};
 pub use neighbors::{neighbors, Neighborhood};
 pub use param::{PValue, Param};
 pub use space::{Config, SearchSpace};
 pub use spec::{ParamSpec, RestrictionSpec, SpaceSpec};
+pub use view::{EagerView, LazyView, SpaceView};
 
 /// Test support: the seed-era serial odometer enumerator, kept verbatim
 /// as the single ordering/membership reference that both the space

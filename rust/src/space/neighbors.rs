@@ -102,6 +102,7 @@ fn adjacent(space: &SearchSpace, idx: usize) -> Vec<usize> {
             }
         }
     }
+    // ktbo-lint: allow(stable-sort-tiebreak): usize indices are unique after dedup — no tie to break
     out.sort_unstable();
     out.dedup();
     out

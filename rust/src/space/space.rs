@@ -157,8 +157,10 @@ impl VarScope for PrefixScope<'_> {
 /// Restrictions bucketed by check depth: entry `d` lists the restrictions
 /// decidable once dimensions `0..=d` are bound. Expression restrictions
 /// land at their deepest touched dimension (constraint propagation);
-/// closures are opaque and land at the leaf.
-fn restriction_depths(params: &[Param], restrictions: &[Restriction]) -> Vec<Vec<usize>> {
+/// closures are opaque and land at the leaf. Shared with the lazy
+/// [`view`](crate::space::view) backing, which prunes its sampling DFS
+/// with the same buckets.
+pub(crate) fn restriction_depths(params: &[Param], restrictions: &[Restriction]) -> Vec<Vec<usize>> {
     let dims = params.len();
     let mut at: Vec<Vec<usize>> = vec![Vec::new(); dims];
     for (ri, r) in restrictions.iter().enumerate() {
@@ -172,8 +174,9 @@ fn restriction_depths(params: &[Param], restrictions: &[Restriction]) -> Vec<Vec
 }
 
 /// Check every restriction bucketed at depth `bound - 1` against the
-/// cursor prefix `cursor[..bound]`.
-fn prefix_passes(
+/// cursor prefix `cursor[..bound]`. Shared with the lazy
+/// [`view`](crate::space::view) backing's sampling DFS.
+pub(crate) fn prefix_passes(
     params: &[Param],
     restrictions: &[Restriction],
     checks: &[usize],

@@ -193,18 +193,20 @@ impl SpaceSpec {
     }
 
     pub fn from_json(j: &Json) -> Result<SpaceSpec, String> {
-        let name = j.get("name").and_then(Json::as_str).ok_or("space spec missing 'name'")?;
-        let params_json = j.get("params").and_then(Json::as_arr).ok_or("space spec missing 'params'")?;
+        reject_unknown_keys(j, "space spec", &["name", "params", "restrictions"])?;
+        let name = require_str(j, "name", "space spec")?;
+        let params_json = require_arr(j, "params", "space spec")?;
         if params_json.is_empty() {
-            return Err("space spec declares no parameters".into());
+            return Err("space spec declares no parameters ('params' is empty)".into());
         }
         let mut spec = SpaceSpec::new(name);
-        for pj in params_json {
-            let pname = pj.get("name").and_then(Json::as_str).ok_or("param missing 'name'")?;
-            let values_json =
-                pj.get("values").and_then(Json::as_arr).ok_or("param missing 'values'")?;
+        for (pi, pj) in params_json.iter().enumerate() {
+            let at = format!("params[{pi}]");
+            reject_unknown_keys(pj, &at, &["name", "values"])?;
+            let pname = require_str(pj, "name", &at)?;
+            let values_json = require_arr(pj, "values", &at)?;
             if values_json.is_empty() {
-                return Err(format!("parameter '{pname}' has an empty domain"));
+                return Err(format!("{at}: parameter '{pname}' has an empty domain"));
             }
             let values: Vec<PValue> = values_json
                 .iter()
@@ -224,19 +226,27 @@ impl SpaceSpec {
                     // leaked once per load (bounded, same policy as the
                     // simulation-mode cache importer).
                     Json::Str(s) => Ok(PValue::Str(Box::leak(s.clone().into_boxed_str()))),
-                    _ => Err(format!("parameter '{pname}' has an unsupported value")),
+                    other => Err(format!(
+                        "{at}: parameter '{pname}' has an unsupported value {} \
+                         (expected number, bool, or string)",
+                        other.render()
+                    )),
                 })
                 .collect::<Result<_, _>>()?;
             if spec.params.iter().any(|p| p.name == pname) {
-                return Err(format!("parameter '{pname}' declared twice"));
+                return Err(format!("{at}: parameter '{pname}' declared twice"));
             }
             spec.params.push(ParamSpec { name: pname.to_string(), values });
         }
         if let Some(rs) = j.get("restrictions") {
-            let rs = rs.as_arr().ok_or("'restrictions' must be an array")?;
-            for rj in rs {
-                let expr_json = rj.get("expr").ok_or("restriction missing 'expr'")?;
-                let expr = Expr::from_json(expr_json)?;
+            let rs = rs
+                .as_arr()
+                .ok_or_else(|| wrong_type_msg(rs, "restrictions", "space spec", "an array"))?;
+            for (ri, rj) in rs.iter().enumerate() {
+                let at = format!("restrictions[{ri}]");
+                reject_unknown_keys(rj, &at, &["name", "expr"])?;
+                let expr_json = rj.get("expr").ok_or_else(|| format!("{at}: missing 'expr'"))?;
+                let expr = Expr::from_json(expr_json).map_err(|e| format!("{at}: {e}"))?;
                 let name = rj
                     .get("name")
                     .and_then(Json::as_str)
@@ -249,7 +259,7 @@ impl SpaceSpec {
                 for v in &vars {
                     if !spec.params.iter().any(|p| &p.name == v) {
                         return Err(format!(
-                            "restriction '{name}' references unknown parameter '{v}'"
+                            "{at}: restriction '{name}' references unknown parameter '{v}'"
                         ));
                     }
                 }
@@ -264,12 +274,67 @@ impl SpaceSpec {
         SpaceSpec::from_json(&jsonparse::parse(text)?)
     }
 
-    /// Load from a `.json` file.
+    /// Load from a `.json` file. Every error — unreadable file, truncated
+    /// JSON, schema violation — names the file, so a failing
+    /// `--space <file>` run points straight at the offending spec.
     pub fn load(path: &Path) -> Result<SpaceSpec, String> {
         let text =
             std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
-        SpaceSpec::parse(&text)
+        SpaceSpec::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
     }
+
+    /// Cartesian product of the declared domains (before restriction
+    /// pruning), computed without enumerating anything — the number the
+    /// session layer compares against the lazy-space cutoff. Saturates
+    /// at `u128::MAX`.
+    pub fn cartesian_size(&self) -> u128 {
+        self.params.iter().fold(1u128, |acc, p| acc.saturating_mul(p.values.len() as u128))
+    }
+}
+
+/// Error for a present-but-mistyped field, naming what was found.
+fn wrong_type_msg(found: &Json, key: &str, ctx: &str, want: &str) -> String {
+    let kind = match found {
+        Json::Null => "null",
+        Json::Bool(_) => "a bool",
+        Json::Num(_) => "a number",
+        Json::Str(_) => "a string",
+        Json::Arr(_) => "an array",
+        Json::Obj(_) => "an object",
+    };
+    format!("{ctx}: '{key}' must be {want}, got {kind}")
+}
+
+fn require_str<'j>(j: &'j Json, key: &str, ctx: &str) -> Result<&'j str, String> {
+    match j.get(key) {
+        None => Err(format!("{ctx}: missing '{key}'")),
+        Some(v) => v.as_str().ok_or_else(|| wrong_type_msg(v, key, ctx, "a string")),
+    }
+}
+
+fn require_arr<'j>(j: &'j Json, key: &str, ctx: &str) -> Result<&'j [Json], String> {
+    match j.get(key) {
+        None => Err(format!("{ctx}: missing '{key}'")),
+        Some(v) => v.as_arr().ok_or_else(|| wrong_type_msg(v, key, ctx, "an array")),
+    }
+}
+
+/// Reject misspelled/unknown keys instead of silently ignoring them — a
+/// typo like `"restictions"` would otherwise drop every constraint and
+/// quietly multiply the space.
+fn reject_unknown_keys(j: &Json, ctx: &str, allowed: &[&str]) -> Result<(), String> {
+    let Json::Obj(kv) = j else {
+        return Err(format!("{ctx}: expected an object"));
+    };
+    for (k, _) in kv {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!(
+                "{ctx}: unknown field '{k}' (allowed: {})",
+                allowed.join(", ")
+            ));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -340,6 +405,62 @@ mod tests {
     #[should_panic(expected = "twice")]
     fn builder_rejects_duplicate_params() {
         let _ = SpaceSpec::new("dup").ints("a", &[1]).ints("a", &[2]);
+    }
+
+    /// Errors name the offending key and position, not just "parse error".
+    #[test]
+    fn malformed_specs_report_key_and_path() {
+        let cases: &[(&str, &str)] = &[
+            // Wrong-typed fields.
+            (r#"{"name": 7, "params": [{"name": "a", "values": [1]}]}"#, "'name' must be a string, got a number"),
+            (r#"{"name": "x", "params": {"name": "a"}}"#, "'params' must be an array, got an object"),
+            (r#"{"name": "x", "params": [{"name": "a", "values": 3}]}"#, "params[0]: 'values' must be an array, got a number"),
+            (r#"{"name": "x", "params": [{"name": "a", "values": [1]}], "restrictions": true}"#, "'restrictions' must be an array, got a bool"),
+            // Unknown fields are rejected, not silently dropped.
+            (r#"{"name": "x", "params": [{"name": "a", "values": [1]}], "restictions": []}"#, "unknown field 'restictions'"),
+            (r#"{"name": "x", "params": [{"name": "a", "values": [1], "vals": []}]}"#, "params[0]: unknown field 'vals'"),
+            (r#"{"name": "x", "params": [{"name": "a", "values": [1]}], "restrictions": [{"exp": {"lit": 1}}]}"#, "restrictions[0]: unknown field 'exp'"),
+            // Position context on deeper errors.
+            (r#"{"name": "x", "params": [{"name": "a", "values": [1]}, {"values": [2]}]}"#, "params[1]: missing 'name'"),
+            (r#"{"name": "x", "params": [{"name": "a", "values": [null]}]}"#, "params[0]: parameter 'a' has an unsupported value null"),
+            (r#"{"name": "x", "params": [{"name": "a", "values": [1]}], "restrictions": [{"expr": {"op": "gt", "args": [{"var": "typo"}, {"lit": 0}]}}]}"#, "restrictions[0]: restriction"),
+        ];
+        for (text, want) in cases {
+            let err = SpaceSpec::parse(text).expect_err(&format!("accepted {text}"));
+            assert!(err.contains(want), "error for {text} must contain '{want}', got: {err}");
+        }
+    }
+
+    /// Truncated / unreadable / malformed files all name the file.
+    #[test]
+    fn load_errors_name_the_file() {
+        let dir = std::env::temp_dir().join("ktbo-specload-test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let truncated = dir.join("truncated.json");
+        std::fs::write(&truncated, r#"{"name": "x", "params": [{"name": "a", "va"#).unwrap();
+        let err = SpaceSpec::load(&truncated).unwrap_err();
+        assert!(err.contains("truncated.json"), "must name the file: {err}");
+
+        let wrong = dir.join("wrong-typed.json");
+        std::fs::write(&wrong, r#"{"name": "x", "params": [{"name": "a", "values": 3}]}"#).unwrap();
+        let err = SpaceSpec::load(&wrong).unwrap_err();
+        assert!(err.contains("wrong-typed.json") && err.contains("params[0]"), "{err}");
+
+        let err = SpaceSpec::load(&dir.join("does-not-exist.json")).unwrap_err();
+        assert!(err.contains("does-not-exist.json"), "{err}");
+    }
+
+    #[test]
+    fn cartesian_size_without_building() {
+        assert_eq!(toy_spec().cartesian_size(), 24);
+        // A spec far beyond enumerability still answers instantly.
+        let mut spec = SpaceSpec::new("huge");
+        let vals: Vec<i64> = (0..1000).collect();
+        for d in 0..5 {
+            spec = spec.ints(&format!("p{d}"), &vals);
+        }
+        assert_eq!(spec.cartesian_size(), 10u128.pow(15));
     }
 
     #[test]

@@ -1,0 +1,803 @@
+//! Implicit spaces: the [`SpaceView`] abstraction over *how a space is
+//! backed* — eagerly enumerated columns or a lazy constraint oracle.
+//!
+//! The paper's engine materializes every restricted configuration up
+//! front (`SearchSpace`), which is exact and fast at GEMM's ~18k configs
+//! but impossible at the 10⁹+-config spaces constraint-aware auto-tuning
+//! targets (ROADMAP item 1; PAPERS.md arXiv:2606.28372). This module
+//! splits "what the optimizer needs from a space" from "how the space is
+//! stored":
+//!
+//! - [`SpaceView`] — the probe surface: uniform valid draws, packed-key
+//!   membership, neighbor probes, per-key decode/normalize. Everything is
+//!   phrased in the *same* per-dim `u16` encoding and mixed-radix `u64`
+//!   packed keys the columnar space uses, so trace records, `KeyIndex`
+//!   lookups and `neighbors.rs` probes keep their exact format.
+//! - `impl SpaceView for SearchSpace` + [`EagerView`] — the enumerated
+//!   backing. Bit-identical to pre-view behavior: every answer routes
+//!   through the existing columnar structures.
+//! - [`LazyView`] — never enumerates. Membership and neighbor probes
+//!   decode the key and re-check the restriction set; uniform draws use
+//!   rejection sampling over the Cartesian key range (exactly uniform
+//!   over the valid set) with a randomized constraint-propagating DFS
+//!   fallback that reuses the eager enumerator's deepest-touched-dim
+//!   restriction buckets ([`restriction_depths`]) to prune dead prefixes.
+//!
+//! # Key ↔ index identity on the lazy path
+//!
+//! Mixed-radix packing is a *bijection* between configs of the full
+//! Cartesian product and keys `0..cartesian_size`. The eager backing maps
+//! keys to dense enumeration positions; the lazy backing has no positions,
+//! so it uses the key itself as the trace/engine index
+//! (`idx == key as usize`). Both directions are exposed via
+//! [`SpaceView::idx_of_key`] / [`SpaceView::key_of_index`], which is all
+//! the driver layer needs to stay backing-agnostic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::space::constraint::{Assignment, Restriction};
+use crate::space::neighbors::Neighborhood;
+use crate::space::param::Param;
+use crate::space::space::{prefix_passes, restriction_depths, SearchSpace};
+use crate::space::spec::SpaceSpec;
+use crate::util::rng::Rng;
+
+/// Uniform-draw attempts before [`LazyView::sample_key`] falls back from
+/// exact rejection sampling to the propagating DFS. 64 keeps the exactly
+/// uniform path overwhelmingly likely down to ~5% restriction survival.
+const REJECTION_TRIES: usize = 64;
+
+/// A space the optimizer can sample, probe, and score candidates from —
+/// without promising anything about how (or whether) it is enumerated.
+///
+/// All keys are the same mixed-radix `u64` packing the columnar space
+/// uses (`key = Σ value_index[d] · stride[d]`, last dimension fastest),
+/// so a view can be swapped under the driver layer without changing trace
+/// or wire formats.
+pub trait SpaceView: Send + Sync {
+    /// Space name (diagnostics and sweep metadata).
+    fn name(&self) -> &str;
+
+    /// Parameter definitions, in dimension order.
+    fn params(&self) -> &[Param];
+
+    /// Number of dimensions.
+    fn dims(&self) -> usize {
+        self.params().len()
+    }
+
+    /// Mixed-radix strides (`strides[dims-1] == 1`).
+    fn strides(&self) -> &[u64];
+
+    /// Size of the unrestricted Cartesian product.
+    fn cartesian_size(&self) -> u64;
+
+    /// `Some(valid count)` when the backing has enumerated the space,
+    /// `None` when the valid count is unknown (lazy).
+    fn size_hint(&self) -> Option<usize>;
+
+    /// Does `key` decode to a restriction-satisfying config?
+    fn contains_key(&self, key: u64) -> bool;
+
+    /// Decode `key` into per-dimension value indices.
+    /// `out.len()` must equal [`dims`](SpaceView::dims).
+    fn decode_into(&self, key: u64, out: &mut [u16]);
+
+    /// Normalized coordinates of `key`'s config (the same per-parameter
+    /// linear normalization the eager tiles use).
+    /// `out.len()` must equal [`dims`](SpaceView::dims).
+    fn norm_point_into(&self, key: u64, out: &mut [f32]);
+
+    /// Pack explicit value indices into a key; `None` when any index is
+    /// out of its dimension's radix. Packing does **not** imply validity.
+    fn pack(&self, cfg: &[u16]) -> Option<u64> {
+        if cfg.len() != self.dims() {
+            return None;
+        }
+        let mut key = 0u64;
+        for ((&vi, p), &s) in cfg.iter().zip(self.params()).zip(self.strides()) {
+            if (vi as usize) >= p.len() {
+                return None;
+            }
+            key += u64::from(vi) * s;
+        }
+        Some(key)
+    }
+
+    /// One uniform draw over the valid set; `None` when the valid set is
+    /// empty (or, for lazy backings, could not be certified non-empty).
+    fn sample_key(&self, rng: &mut Rng) -> Option<u64>;
+
+    /// Valid neighbor keys of `key` under `kind`, ascending, deduplicated.
+    fn neighbor_keys(&self, key: u64, kind: Neighborhood, out: &mut Vec<u64>);
+
+    /// Map a key to the engine/trace index, if the key is valid.
+    /// Eager: the dense enumeration position. Lazy: the key itself.
+    fn idx_of_key(&self, key: u64) -> Option<usize>;
+
+    /// Inverse of [`idx_of_key`](SpaceView::idx_of_key) for in-range
+    /// indices.
+    fn key_of_index(&self, idx: usize) -> u64;
+
+    /// Is `idx` a representable engine index for this view? (Eager: below
+    /// the enumerated length. Lazy: below the Cartesian size — validity
+    /// is a separate [`contains_key`](SpaceView::contains_key) question.)
+    fn index_in_range(&self, idx: usize) -> bool;
+
+    /// The enumerated backing, when there is one. Drivers that need whole
+    /// columns (tiles, exhaustive sweeps) route through this and simply
+    /// have no lazy mode.
+    fn as_eager(&self) -> Option<&SearchSpace> {
+        None
+    }
+
+    /// Constraint probes answered so far (lazy backings only; the
+    /// `space_scale` bench asserts per-suggestion probe work stays
+    /// bounded by the candidate-pool size).
+    fn probe_count(&self) -> u64 {
+        0
+    }
+
+    /// Human-readable rendering of `key`'s config.
+    fn describe_key(&self, key: u64) -> String {
+        let mut row = vec![0u16; self.dims()];
+        self.decode_into(key, &mut row);
+        self.params()
+            .iter()
+            .zip(&row)
+            .map(|(p, &v)| format!("{}={}", p.name, p.values[v as usize]))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// Shared mixed-radix decode: `out[d] = (key / stride[d]) mod radix[d]`.
+#[inline]
+fn decode_key(params: &[Param], strides: &[u64], key: u64, out: &mut [u16]) {
+    debug_assert_eq!(out.len(), params.len());
+    for (d, p) in params.iter().enumerate() {
+        out[d] = ((key / strides[d]) % p.len() as u64) as u16;
+    }
+}
+
+/// The enumerated columnar space *is* a view: every probe routes through
+/// the existing `KeyIndex`/columns, so behavior is bit-identical to the
+/// pre-view engine.
+impl SpaceView for SearchSpace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn params(&self) -> &[Param] {
+        &self.params
+    }
+
+    fn strides(&self) -> &[u64] {
+        // Inherent method — resolves to the struct's accessor, not this
+        // trait method.
+        SearchSpace::strides(self)
+    }
+
+    fn cartesian_size(&self) -> u64 {
+        self.cartesian_size as u64
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.len())
+    }
+
+    fn contains_key(&self, key: u64) -> bool {
+        self.index_of_key(key).is_some()
+    }
+
+    fn decode_into(&self, key: u64, out: &mut [u16]) {
+        decode_key(&self.params, SearchSpace::strides(self), key, out);
+    }
+
+    fn norm_point_into(&self, key: u64, out: &mut [f32]) {
+        // Decode-and-normalize rather than a tile lookup: keys outside
+        // the restricted set still have well-defined coordinates, which
+        // the pool surrogates rely on.
+        debug_assert_eq!(out.len(), self.dims());
+        for (d, p) in self.params.iter().enumerate() {
+            let vi = ((key / SearchSpace::strides(self)[d]) % p.len() as u64) as usize;
+            out[d] = p.norm(vi) as f32;
+        }
+    }
+
+    fn sample_key(&self, rng: &mut Rng) -> Option<u64> {
+        if self.is_empty() {
+            return None;
+        }
+        // Uniform over the enumerated valid set by construction.
+        Some(self.key(rng.below(self.len())))
+    }
+
+    fn neighbor_keys(&self, key: u64, kind: Neighborhood, out: &mut Vec<u64>) {
+        out.clear();
+        if let Some(idx) = self.index_of_key(key) {
+            out.extend(
+                crate::space::neighbors::neighbors(self, idx, kind).into_iter().map(|j| self.key(j)),
+            );
+        }
+        // ktbo-lint: allow(stable-sort-tiebreak): u64 keys are unique after dedup — no tie to break
+        out.sort_unstable();
+        out.dedup();
+    }
+
+    fn idx_of_key(&self, key: u64) -> Option<usize> {
+        self.index_of_key(key)
+    }
+
+    fn key_of_index(&self, idx: usize) -> u64 {
+        self.key(idx)
+    }
+
+    fn index_in_range(&self, idx: usize) -> bool {
+        idx < self.len()
+    }
+
+    fn as_eager(&self) -> Option<&SearchSpace> {
+        Some(self)
+    }
+}
+
+/// Owning wrapper around an enumerated [`SearchSpace`] — the named eager
+/// backing. Exists so call sites can hold `Arc<EagerView>` symmetric with
+/// `Arc<LazyView>`; every probe delegates to the inner space, so a run
+/// through an `EagerView` is bit-identical to a run on the bare space
+/// (asserted by `eager_view_is_transparent` below and the registry-wide
+/// equivalence test in `strategies::driver`).
+pub struct EagerView {
+    space: Arc<SearchSpace>,
+}
+
+impl EagerView {
+    pub fn new(space: Arc<SearchSpace>) -> EagerView {
+        EagerView { space }
+    }
+
+    pub fn space(&self) -> &Arc<SearchSpace> {
+        &self.space
+    }
+}
+
+impl SpaceView for EagerView {
+    fn name(&self) -> &str {
+        &self.space.name
+    }
+
+    fn params(&self) -> &[Param] {
+        &self.space.params
+    }
+
+    fn strides(&self) -> &[u64] {
+        SearchSpace::strides(&self.space)
+    }
+
+    fn cartesian_size(&self) -> u64 {
+        self.space.cartesian_size as u64
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.space.len())
+    }
+
+    fn contains_key(&self, key: u64) -> bool {
+        self.space.index_of_key(key).is_some()
+    }
+
+    fn decode_into(&self, key: u64, out: &mut [u16]) {
+        self.space.decode_into(key, out);
+    }
+
+    fn norm_point_into(&self, key: u64, out: &mut [f32]) {
+        self.space.norm_point_into(key, out);
+    }
+
+    fn sample_key(&self, rng: &mut Rng) -> Option<u64> {
+        self.space.sample_key(rng)
+    }
+
+    fn neighbor_keys(&self, key: u64, kind: Neighborhood, out: &mut Vec<u64>) {
+        self.space.neighbor_keys(key, kind, out);
+    }
+
+    fn idx_of_key(&self, key: u64) -> Option<usize> {
+        self.space.index_of_key(key)
+    }
+
+    fn key_of_index(&self, idx: usize) -> u64 {
+        self.space.key(idx)
+    }
+
+    fn index_in_range(&self, idx: usize) -> bool {
+        idx < self.space.len()
+    }
+
+    fn as_eager(&self) -> Option<&SearchSpace> {
+        Some(&self.space)
+    }
+}
+
+/// The implicit backing: a constraint oracle over an *unenumerated*
+/// Cartesian product. Holds only the parameter definitions, the
+/// restriction set (with the eager enumerator's deepest-touched-dim
+/// buckets), and the mixed-radix strides — O(dims) memory regardless of
+/// Cartesian size.
+pub struct LazyView {
+    name: String,
+    params: Vec<Param>,
+    restrictions: Vec<Restriction>,
+    /// Restrictions bucketed by deepest touched dimension (PR 4's `Expr`
+    /// bucketing) — drives prefix pruning in the DFS sampling fallback.
+    at: Vec<Vec<usize>>,
+    strides: Vec<u64>,
+    cartesian: u64,
+    /// Constraint probes answered (membership checks + DFS prefix
+    /// checks); the `space_scale` bench reads this to assert flat
+    /// per-suggestion work.
+    probes: AtomicU64,
+}
+
+impl LazyView {
+    /// Build the oracle from a declarative spec without enumerating
+    /// anything. Rejects spaces whose packed keys would not fit `u64`
+    /// (the key packing must stay exact — wrapping would silently alias
+    /// distinct configs).
+    pub fn from_spec(spec: &SpaceSpec) -> Result<LazyView, String> {
+        let params = spec.params();
+        let restrictions = spec.restrictions();
+        LazyView::from_parts(&spec.name, params, restrictions)
+    }
+
+    /// Build from explicit parts (tests and programmatic callers).
+    pub fn from_parts(
+        name: &str,
+        params: Vec<Param>,
+        restrictions: Vec<Restriction>,
+    ) -> Result<LazyView, String> {
+        if params.is_empty() {
+            return Err(format!("space '{name}' has no parameters"));
+        }
+        let mut cartesian: u128 = 1;
+        for p in &params {
+            if p.is_empty() {
+                return Err(format!("space '{name}': parameter '{}' has an empty domain", p.name));
+            }
+            if p.len() >= u16::MAX as usize {
+                return Err(format!(
+                    "space '{name}': parameter '{}' has {} values — beyond the u16 value-index radix",
+                    p.name,
+                    p.len()
+                ));
+            }
+            cartesian *= p.len() as u128; // radix < 2^16, dims bounded: no u128 overflow
+            if cartesian > u64::MAX as u128 {
+                return Err(format!(
+                    "space '{name}': packed keys overflow u64 (Cartesian size exceeds {}); \
+                     restrict the domains — wrapping keys would alias distinct configs",
+                    u64::MAX
+                ));
+            }
+        }
+        let dims = params.len();
+        let mut strides = vec![1u64; dims];
+        for d in (0..dims - 1).rev() {
+            // Cannot overflow: strides[0] * radix[0] == cartesian ≤ u64::MAX.
+            strides[d] = strides[d + 1] * params[d + 1].len() as u64;
+        }
+        let at = restriction_depths(&params, &restrictions);
+        Ok(LazyView {
+            name: name.to_string(),
+            params,
+            restrictions,
+            at,
+            strides,
+            cartesian: cartesian as u64,
+            probes: AtomicU64::new(0),
+        })
+    }
+
+    /// Full-row restriction check (all restrictions, closure and expr).
+    fn row_valid(&self, row: &[u16]) -> bool {
+        self.probes.fetch_add(1, Ordering::Relaxed);
+        let a = Assignment::new(&self.params, row);
+        self.restrictions.iter().all(|r| r.check(&a))
+    }
+
+    /// Randomized constraint-propagating DFS: the eager enumerator's
+    /// odometer with (a) values visited in a shuffled order per depth and
+    /// (b) the same deepest-touched-dim prefix pruning. Finds a valid
+    /// config iff one exists; not exactly uniform (used only when
+    /// rejection sampling keeps missing, i.e. at extreme survival rates).
+    fn sample_dfs(&self, rng: &mut Rng, cursor: &mut [u16], depth: usize) -> bool {
+        let dims = self.params.len();
+        let mut order: Vec<u16> = (0..self.params[depth].len() as u16).collect();
+        rng.shuffle(&mut order);
+        for v in order {
+            cursor[depth] = v;
+            self.probes.fetch_add(1, Ordering::Relaxed);
+            if !prefix_passes(&self.params, &self.restrictions, &self.at[depth], cursor, depth + 1) {
+                continue;
+            }
+            if depth + 1 == dims || self.sample_dfs(rng, cursor, depth + 1) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl SpaceView for LazyView {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn params(&self) -> &[Param] {
+        &self.params
+    }
+
+    fn strides(&self) -> &[u64] {
+        &self.strides
+    }
+
+    fn cartesian_size(&self) -> u64 {
+        self.cartesian
+    }
+
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+
+    fn contains_key(&self, key: u64) -> bool {
+        if key >= self.cartesian {
+            return false;
+        }
+        let mut row = vec![0u16; self.params.len()];
+        decode_key(&self.params, &self.strides, key, &mut row);
+        self.row_valid(&row)
+    }
+
+    fn decode_into(&self, key: u64, out: &mut [u16]) {
+        decode_key(&self.params, &self.strides, key, out);
+    }
+
+    fn norm_point_into(&self, key: u64, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.params.len());
+        for (d, p) in self.params.iter().enumerate() {
+            let vi = ((key / self.strides[d]) % p.len() as u64) as usize;
+            out[d] = p.norm(vi) as f32;
+        }
+    }
+
+    fn sample_key(&self, rng: &mut Rng) -> Option<u64> {
+        // Exactly uniform over the valid set: a uniform Cartesian key,
+        // accepted iff it satisfies every restriction.
+        let mut row = vec![0u16; self.params.len()];
+        for _ in 0..REJECTION_TRIES {
+            let key = rng.below(self.cartesian as usize) as u64;
+            decode_key(&self.params, &self.strides, key, &mut row);
+            if self.row_valid(&row) {
+                return Some(key);
+            }
+        }
+        // Survival too low for rejection — propagate constraints instead.
+        if self.sample_dfs(rng, &mut row, 0) {
+            return self.pack(&row);
+        }
+        None
+    }
+
+    fn neighbor_keys(&self, key: u64, kind: Neighborhood, out: &mut Vec<u64>) {
+        out.clear();
+        if key >= self.cartesian {
+            return;
+        }
+        let dims = self.params.len();
+        let mut row = vec![0u16; dims];
+        decode_key(&self.params, &self.strides, key, &mut row);
+        match kind {
+            Neighborhood::Hamming => {
+                // Configs differing in exactly one parameter (any value) —
+                // mirrors `neighbors::hamming`, with membership answered
+                // by the oracle instead of the key index.
+                for d in 0..dims {
+                    let orig = row[d];
+                    let stride = self.strides[d];
+                    for v in 0..self.params[d].len() as u16 {
+                        if v == orig {
+                            continue;
+                        }
+                        row[d] = v;
+                        if self.row_valid(&row) {
+                            out.push(
+                                key - u64::from(orig) * stride + u64::from(v) * stride,
+                            );
+                        }
+                    }
+                    row[d] = orig;
+                }
+            }
+            Neighborhood::Adjacent => {
+                // ≤2-dimension ±1 moves — mirrors `neighbors::adjacent`.
+                for d1 in 0..dims {
+                    let c1 = row[d1];
+                    for s1 in [-1i32, 1] {
+                        let n1 = c1 as i32 + s1;
+                        if n1 < 0 || n1 as usize >= self.params[d1].len() {
+                            continue;
+                        }
+                        row[d1] = n1 as u16;
+                        if self.row_valid(&row) {
+                            out.push(self.pack(&row).expect("±1 step stays in radix"));
+                        }
+                        for d2 in d1 + 1..dims {
+                            let c2 = row[d2];
+                            for s2 in [-1i32, 1] {
+                                let n2 = c2 as i32 + s2;
+                                if n2 < 0 || n2 as usize >= self.params[d2].len() {
+                                    continue;
+                                }
+                                row[d2] = n2 as u16;
+                                if self.row_valid(&row) {
+                                    out.push(self.pack(&row).expect("±1 step stays in radix"));
+                                }
+                            }
+                            row[d2] = c2;
+                        }
+                        row[d1] = c1;
+                    }
+                }
+            }
+        }
+        // ktbo-lint: allow(stable-sort-tiebreak): u64 keys are unique after dedup — no tie to break
+        out.sort_unstable();
+        out.dedup();
+    }
+
+    fn idx_of_key(&self, key: u64) -> Option<usize> {
+        // The lazy engine index IS the key (mixed-radix packing is a
+        // bijection over 0..cartesian_size).
+        if self.contains_key(key) {
+            Some(key as usize)
+        } else {
+            None
+        }
+    }
+
+    fn key_of_index(&self, idx: usize) -> u64 {
+        idx as u64
+    }
+
+    fn index_in_range(&self, idx: usize) -> bool {
+        (idx as u64) < self.cartesian
+    }
+
+    fn probe_count(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::constraint::Expr;
+    use crate::space::neighbors::neighbors;
+
+    /// A small restricted grid with corners and an irregular neighborhood.
+    fn toy_spec() -> SpaceSpec {
+        SpaceSpec::new("toy-view")
+            .ints("bx", &[16, 32, 64])
+            .ints("tile", &[1, 2, 4, 8])
+            .bools("pad")
+            .restrict(Expr::var("bx").mul(Expr::var("tile")).le(Expr::lit(128)))
+    }
+
+    fn both() -> (SearchSpace, LazyView) {
+        let spec = toy_spec();
+        (spec.build(), LazyView::from_spec(&spec).unwrap())
+    }
+
+    #[test]
+    fn lazy_matches_eager_membership_over_the_whole_cartesian_range() {
+        let (eager, lazy) = both();
+        assert_eq!(lazy.cartesian_size(), eager.cartesian_size as u64);
+        assert_eq!(SpaceView::strides(&lazy), SearchSpace::strides(&eager));
+        for key in 0..lazy.cartesian_size() {
+            assert_eq!(
+                lazy.contains_key(key),
+                eager.index_of_key(key).is_some(),
+                "membership diverged at key {key}"
+            );
+        }
+        assert!(!lazy.contains_key(lazy.cartesian_size()), "out-of-range key is not a member");
+    }
+
+    #[test]
+    fn lazy_decode_and_norm_match_eager_columns() {
+        let (eager, lazy) = both();
+        let dims = eager.dims();
+        let mut row = vec![0u16; dims];
+        let mut norm = vec![0f32; dims];
+        for i in 0..eager.len() {
+            let key = eager.key(i);
+            lazy.decode_into(key, &mut row);
+            assert_eq!(row, eager.config(i), "decode diverged at {i}");
+            lazy.norm_point_into(key, &mut norm);
+            assert_eq!(&norm[..], eager.point(i), "normalization diverged at {i}");
+            assert_eq!(lazy.pack(&row), Some(key), "pack must invert decode");
+        }
+    }
+
+    /// Neighbor probes — including at space corners — brute-force-verified
+    /// against the eager key index (satellite: packed-key edge cases).
+    #[test]
+    fn lazy_neighbor_probes_match_eager_at_every_config() {
+        let (eager, lazy) = both();
+        let mut lazy_out = Vec::new();
+        let mut eager_out = Vec::new();
+        for kind in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+            for i in 0..eager.len() {
+                let key = eager.key(i);
+                lazy.neighbor_keys(key, kind, &mut lazy_out);
+                eager.neighbor_keys(key, kind, &mut eager_out);
+                assert_eq!(lazy_out, eager_out, "{kind:?} neighbors diverged at config {i}");
+                // And the eager view agrees with the index-space operator.
+                let mut via_idx: Vec<u64> =
+                    neighbors(&eager, i, kind).into_iter().map(|j| eager.key(j)).collect();
+                via_idx.sort_unstable();
+                assert_eq!(eager_out, via_idx);
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_uniform_valid_and_seed_deterministic() {
+        let (eager, lazy) = both();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            let a = lazy.sample_key(&mut r1).expect("valid set is non-empty");
+            let b = lazy.sample_key(&mut r2).expect("valid set is non-empty");
+            assert_eq!(a, b, "sampling must be a pure function of the RNG stream");
+            assert!(eager.index_of_key(a).is_some(), "sampled key {a} is not a valid config");
+            seen.insert(a);
+        }
+        // 200 draws over 18 valid configs: rejection sampling covers the set.
+        assert_eq!(seen.len(), eager.len(), "uniform draws must reach every valid config");
+    }
+
+    /// Extreme survival rates force the propagating-DFS fallback; draws
+    /// must stay valid and deterministic.
+    #[test]
+    fn dfs_fallback_engages_at_extreme_survival() {
+        let n: Vec<i64> = (0..500).collect();
+        let spec = SpaceSpec::new("needle")
+            .ints("a", &n)
+            .ints("b", &n)
+            .restrict(Expr::var("a").eq(Expr::var("b"))); // survival 1/500
+        let lazy = LazyView::from_spec(&spec).unwrap();
+        let mut rng = Rng::new(3);
+        let mut row = vec![0u16; 2];
+        for _ in 0..20 {
+            let key = lazy.sample_key(&mut rng).expect("diagonal is non-empty");
+            lazy.decode_into(key, &mut row);
+            assert_eq!(row[0], row[1], "sampled config violates a==b");
+        }
+    }
+
+    #[test]
+    fn empty_valid_set_samples_none() {
+        let spec = SpaceSpec::new("void")
+            .ints("a", &[1, 2])
+            .restrict(Expr::var("a").gt(Expr::lit(10)));
+        let lazy = LazyView::from_spec(&spec).unwrap();
+        let mut rng = Rng::new(1);
+        assert_eq!(lazy.sample_key(&mut rng), None);
+        assert!(!lazy.contains_key(0) && !lazy.contains_key(1));
+    }
+
+    /// Satellite: dims at the u16 radix boundary. 65534 values is the
+    /// largest legal radix (value indices must stay below u16::MAX).
+    #[test]
+    fn u16_radix_boundary_round_trips() {
+        let vals: Vec<i64> = (0..65534).collect();
+        let spec = SpaceSpec::new("wide").ints("huge", &vals).ints("b", &[0, 1, 2]);
+        let lazy = LazyView::from_spec(&spec).unwrap();
+        assert_eq!(lazy.cartesian_size(), 65534 * 3);
+        let corner = lazy.pack(&[65533, 2]).unwrap();
+        assert_eq!(corner, lazy.cartesian_size() - 1);
+        let mut row = vec![0u16; 2];
+        lazy.decode_into(corner, &mut row);
+        assert_eq!(row, vec![65533u16, 2]);
+        assert!(lazy.contains_key(corner));
+
+        let over: Vec<i64> = (0..65535).collect();
+        let bad = SpaceSpec::new("over").ints("huge", &over);
+        let err = LazyView::from_spec(&bad).unwrap_err();
+        assert!(err.contains("u16 value-index radix"), "unexpected error: {err}");
+    }
+
+    /// Satellite: mixed-radix packs that nearly overflow u64 build fine;
+    /// actual overflow is rejected with a clear error, never wrapped.
+    #[test]
+    fn key_overflow_is_rejected_not_wrapped() {
+        // 65534^4 ≈ 0.9999 · 2^64 — fits (barely).
+        let vals: Vec<i64> = (0..65534).collect();
+        let mut near = SpaceSpec::new("near-max");
+        for name in ["a", "b", "c", "d"] {
+            near = near.ints(name, &vals);
+        }
+        let lazy = LazyView::from_spec(&near).unwrap();
+        let expect = 65534u128.pow(4);
+        assert_eq!(lazy.cartesian_size() as u128, expect);
+        // The extreme corner key decodes exactly (no wrapping anywhere).
+        let corner = lazy.pack(&[65533; 4]).unwrap();
+        assert_eq!(corner, (expect - 1) as u64);
+        let mut row = vec![0u16; 4];
+        lazy.decode_into(corner, &mut row);
+        assert_eq!(row, vec![65533u16; 4]);
+
+        // One more dimension pushes past u64 — a clear error, not a wrap.
+        let mut over = near;
+        over = over.ints("e", &[0, 1, 2]);
+        let err = LazyView::from_spec(&over).unwrap_err();
+        assert!(err.contains("overflow u64"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn eager_view_is_transparent() {
+        let spec = toy_spec();
+        let space = Arc::new(spec.build());
+        let view = EagerView::new(Arc::clone(&space));
+        assert_eq!(view.size_hint(), Some(space.len()));
+        assert!(view.as_eager().is_some());
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for i in 0..space.len() {
+            let key = space.key(i);
+            assert_eq!(view.idx_of_key(key), Some(i));
+            assert_eq!(view.key_of_index(i), key);
+            for kind in [Neighborhood::Hamming, Neighborhood::Adjacent] {
+                view.neighbor_keys(key, kind, &mut a);
+                space.neighbor_keys(key, kind, &mut b);
+                assert_eq!(a, b);
+            }
+        }
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for _ in 0..50 {
+            assert_eq!(view.sample_key(&mut r1), space.sample_key(&mut r2));
+        }
+    }
+
+    #[test]
+    fn lazy_index_identity_is_the_key_bijection() {
+        let (eager, lazy) = both();
+        for i in 0..eager.len() {
+            let key = eager.key(i);
+            assert_eq!(lazy.idx_of_key(key), Some(key as usize));
+            assert_eq!(lazy.key_of_index(key as usize), key);
+            assert!(lazy.index_in_range(key as usize));
+        }
+        assert!(!lazy.index_in_range(lazy.cartesian_size() as usize));
+        // An in-Cartesian but restriction-invalid key has an index slot
+        // but is not a member: 64*8 violates bx*tile<=128.
+        let bad = lazy.pack(&[2, 3, 0]).unwrap();
+        assert!(lazy.index_in_range(bad as usize));
+        assert_eq!(lazy.idx_of_key(bad), None);
+    }
+
+    #[test]
+    fn describe_and_probe_counter() {
+        let (_, lazy) = both();
+        let before = lazy.probe_count();
+        assert!(lazy.contains_key(0));
+        assert!(lazy.probe_count() > before, "membership must count a probe");
+        let d = lazy.describe_key(0);
+        assert!(d.contains("bx=16") && d.contains("tile=1") && d.contains("pad="), "{d}");
+    }
+}

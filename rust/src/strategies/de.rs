@@ -73,7 +73,7 @@ pub struct DeDriver {
 impl DeDriver {
     /// Generation loop top: stop conditions, then the first trial.
     fn begin_generation(&mut self, ctx: &mut DriveCtx) -> Ask {
-        if !ctx.budget_left() || ctx.n_seen() >= ctx.space.len() {
+        if !ctx.budget_left() || ctx.n_seen() >= ctx.space().len() {
             return Ask::Finished;
         }
         self.improved = false;
@@ -82,7 +82,7 @@ impl DeDriver {
 
     /// Build trial `self.i` (DE/rand/1/bin) and propose its snap.
     fn next_trial(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let dims = ctx.space.dims();
+        let dims = ctx.space().dims();
         let i = self.i;
         // Three distinct agents a, b, c ≠ i.
         let mut picks = [0usize; 3];
@@ -105,7 +105,7 @@ impl DeDriver {
                     (self.pop[a][d] + self.f * (self.pop[b][d] - self.pop[c][d])).clamp(0.0, 1.0);
             }
         }
-        let idx = snap(ctx.space, &trial);
+        let idx = snap(ctx.space(), &trial);
         self.trial = trial;
         Ask::Suggest(vec![idx])
     }
@@ -117,7 +117,7 @@ impl SearchDriver for DeDriver {
     }
 
     fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let dims = ctx.space.dims();
+        let dims = ctx.space().dims();
         if !self.started {
             // Population of continuous agents, all drawn up front; their
             // snapped indices form the initial batch.
@@ -125,7 +125,7 @@ impl SearchDriver for DeDriver {
             self.pop = (0..self.pop_size)
                 .map(|_| (0..dims).map(|_| ctx.rng.f64()).collect())
                 .collect();
-            let idxs: Vec<usize> = self.pop.iter().map(|a| snap(ctx.space, a)).collect();
+            let idxs: Vec<usize> = self.pop.iter().map(|a| snap(ctx.space(), a)).collect();
             return Ask::Suggest(idxs);
         }
         if self.in_init {

@@ -102,6 +102,7 @@ use std::time::{Duration, Instant};
 
 use crate::objective::evalcache::RunMemo;
 use crate::objective::{Eval, Objective};
+use crate::space::view::SpaceView;
 use crate::space::SearchSpace;
 use crate::strategies::{Trace, OUT_OF_SPACE};
 use crate::util::pool::ShardPool;
@@ -129,10 +130,14 @@ pub struct Observation {
     pub cached: bool,
 }
 
-/// Read-only run context handed to `ask`: the space, the run RNG, and the
-/// budget/memo views the legacy loops used to read off `CachedEvaluator`.
+/// Read-only run context handed to `ask`: the space view, the run RNG,
+/// and the budget/memo views the legacy loops used to read off
+/// `CachedEvaluator`.
 pub struct DriveCtx<'a> {
-    pub space: &'a SearchSpace,
+    /// The backing-agnostic space. Enumerated-space drivers reach the
+    /// columnar structures through [`DriveCtx::space`]; lazy-capable
+    /// drivers stay on [`DriveCtx::view`].
+    view: &'a dyn SpaceView,
     pub rng: &'a mut Rng,
     trace: &'a Trace,
     memo: &'a RunMemo,
@@ -142,16 +147,34 @@ pub struct DriveCtx<'a> {
 impl<'a> DriveCtx<'a> {
     /// Assemble a context directly — for driver unit tests and custom
     /// harnesses; production drivers receive contexts from the drive
-    /// loop.
+    /// loop. (A `&SearchSpace` coerces: the enumerated space is a view.)
     #[doc(hidden)]
     pub fn probe(
-        space: &'a SearchSpace,
+        view: &'a dyn SpaceView,
         rng: &'a mut Rng,
         trace: &'a Trace,
         memo: &'a RunMemo,
         budget: &'a dyn Budget,
     ) -> DriveCtx<'a> {
-        DriveCtx { space, rng, trace, memo, budget }
+        DriveCtx { view, rng, trace, memo, budget }
+    }
+
+    /// The space as a backing-agnostic view. The returned borrow has the
+    /// context's full lifetime (the view reference is `Copy`), so it can
+    /// be used alongside `ctx.rng` in one expression.
+    pub fn view(&self) -> &'a dyn SpaceView {
+        self.view
+    }
+
+    /// The enumerated space. Drivers that sweep whole columns call this;
+    /// they are only ever constructed for eager views (the registry's
+    /// lazy path goes through [`crate::strategies::Strategy::lazy_driver`],
+    /// which such drivers don't implement), so the expect cannot fire in
+    /// a correctly wired engine.
+    pub fn space(&self) -> &'a SearchSpace {
+        self.view
+            .as_eager()
+            .expect("this driver requires an enumerated (eager) space; use a lazy-capable driver")
     }
 }
 
@@ -344,7 +367,7 @@ pub struct DriveOpts<'p> {
 /// engine parks fresh suggestions instead of measuring them.
 #[derive(Clone, Copy)]
 struct EvalSrc<'a> {
-    space: &'a SearchSpace,
+    view: &'a dyn SpaceView,
     obj: Option<&'a dyn Objective>,
 }
 
@@ -425,9 +448,11 @@ impl DriveCore {
     /// How many consecutive steps without a new trace record the loop
     /// tolerates. Generous — asks and memo revisits legitimately add no
     /// record — but finite, so a driver spinning on revisits against an
-    /// all-invalid objective ends the run instead of hanging it.
-    fn stall_limit(space: &SearchSpace) -> usize {
-        4096 + 4 * space.len()
+    /// all-invalid objective ends the run instead of hanging it. Lazy
+    /// views have no enumerated length, so they get the flat base bound
+    /// (their drivers propose from bounded candidate pools).
+    fn stall_limit(view: &dyn SpaceView) -> usize {
+        4096 + 4 * view.size_hint().unwrap_or(0)
     }
 
     /// Advance by one unit of work: deliver one pending suggestion, or
@@ -448,7 +473,7 @@ impl DriveCore {
             self.stalls = 0;
         } else if live {
             self.stalls += 1;
-            if self.stalls > Self::stall_limit(src.space) {
+            if self.stalls > Self::stall_limit(src.view) {
                 self.end_run();
                 return false;
             }
@@ -477,7 +502,7 @@ impl DriveCore {
         }
         let ask = {
             let mut ctx = DriveCtx {
-                space: src.space,
+                view: src.view,
                 rng,
                 trace: &self.trace,
                 memo: &self.memo,
@@ -527,7 +552,7 @@ impl DriveCore {
             driver.tell(Observation { idx, eval: Eval::CompileError, cached: false });
             return;
         }
-        debug_assert!(idx < src.space.len(), "driver proposed index {idx} out of range");
+        debug_assert!(src.view.index_in_range(idx), "driver proposed index {idx} out of range");
         if self.memoize {
             if let Some(eval) = self.memo.recall(idx) {
                 driver.tell(Observation { idx, eval, cached: true });
@@ -707,7 +732,7 @@ pub fn drive_with(
 ) -> Trace {
     let pool = opts.pool;
     let mut core = DriveCore::new(driver.memoize(), opts.memo, opts.resume_from);
-    let src = EvalSrc { space: obj.space(), obj: Some(obj) };
+    let src = EvalSrc { view: obj.view(), obj: Some(obj) };
     while core.step(driver, budget, rng, src, pool) {}
     core.trace
 }
@@ -852,9 +877,9 @@ impl Session {
     /// client.
     pub fn step(&mut self) -> bool {
         let src = EvalSrc {
-            space: match (&self.space, &self.objective) {
-                (Some(s), _) => s,
-                (None, Some(o)) => o.space(),
+            view: match (&self.space, &self.objective) {
+                (Some(s), _) => s.as_ref() as &dyn SpaceView,
+                (None, Some(o)) => o.view(),
                 (None, None) => unreachable!("a session holds an objective or a space"),
             },
             obj: self.objective.as_deref(),
@@ -979,7 +1004,7 @@ mod tests {
         }
 
         fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
-            if self.next >= ctx.space.len() {
+            if self.next >= ctx.space().len() {
                 return Ask::Finished;
             }
             let i = self.next;
@@ -1005,7 +1030,7 @@ mod tests {
                 return Ask::Finished;
             }
             self.asked = true;
-            Ask::Suggest((0..ctx.space.len()).collect())
+            Ask::Suggest((0..ctx.space().len()).collect())
         }
 
         fn tell(&mut self, _obs: Observation) {}
@@ -1376,5 +1401,70 @@ mod tests {
         assert!(ckpt.len() < full.len(), "checkpoint is a strict prefix");
         let resumed = run(Some(ckpt), None);
         assert_eq!(resumed.records, full.records);
+    }
+
+    /// A table objective whose `view()` routes through an [`EagerView`]
+    /// wrapper instead of the bare space — the shape `ktbo tune` takes
+    /// when a view object owns the backing.
+    struct ViewWrapped {
+        inner: Arc<crate::objective::TableObjective>,
+        view: crate::space::view::EagerView,
+    }
+
+    impl Objective for ViewWrapped {
+        fn space(&self) -> &SearchSpace {
+            self.inner.space()
+        }
+
+        fn view(&self) -> &dyn SpaceView {
+            &self.view
+        }
+
+        fn evaluate(&self, idx: usize, rng: &mut Rng) -> Eval {
+            self.inner.evaluate(idx, rng)
+        }
+    }
+
+    /// THE eager-mode acceptance test of the view refactor: for every
+    /// registry strategy on two real kernels, a session whose probes
+    /// route through an [`EagerView`] wrapper replays the bare-space
+    /// session's trace bit for bit. The view layer must be invisible
+    /// when the space is enumerated.
+    #[test]
+    fn eager_view_sessions_replay_bare_space_traces_bit_identically() {
+        use crate::space::view::EagerView;
+        use crate::strategies::Strategy;
+        let dev = crate::gpusim::device::Device::by_name("titanx").unwrap();
+        for kernel in ["adding", "pnpoly"] {
+            let table = crate::harness::figures::objective_for(kernel, &dev);
+            // An independently built (deterministically identical) space
+            // for the wrapper — `TableObjective` owns its space, so the
+            // wrapper gets its own `Arc` of the same columns.
+            let k = crate::gpusim::kernels::kernel_by_name(kernel).unwrap();
+            let space = Arc::new(k.spec(&dev).build());
+            assert_eq!(space.len(), table.space().len(), "rebuild must be deterministic");
+            for name in crate::strategies::registry::all_names() {
+                let strat = crate::strategies::registry::by_name(name).unwrap();
+                let run = |obj: Arc<dyn Objective>| -> Trace {
+                    let mut s = Session::new(
+                        strat.driver(table.space()),
+                        obj,
+                        Box::new(FevalBudget::new(20)),
+                        Rng::new(11),
+                    );
+                    while s.step() {}
+                    s.into_trace()
+                };
+                let bare = run(Arc::clone(&table) as Arc<dyn Objective>);
+                let wrapped = run(Arc::new(ViewWrapped {
+                    inner: Arc::clone(&table),
+                    view: EagerView::new(Arc::clone(&space)),
+                }));
+                assert_eq!(
+                    bare.records, wrapped.records,
+                    "{kernel}/{name}: EagerView session diverged from the bare-space session"
+                );
+            }
+        }
     }
 }

@@ -128,7 +128,7 @@ impl FrameworkBoDriver {
         if !ctx.budget_left() {
             return Ask::Finished;
         }
-        let space = ctx.space;
+        let space = ctx.space();
         let dims = space.dims();
         // z-score observations (both packages normalize y).
         let y_mean = mean(&self.ys);
@@ -216,8 +216,8 @@ impl SearchDriver for FrameworkBoDriver {
         }
         if self.init_left > 0 {
             self.init_left -= 1;
-            let cfg = FrameworkBo::random_cartesian(ctx.space, ctx.rng);
-            return self.propose(ctx.space, &cfg);
+            let cfg = FrameworkBo::random_cartesian(ctx.space(), ctx.rng);
+            return self.propose(ctx.space(), &cfg);
         }
         self.step(ctx)
     }

@@ -99,7 +99,7 @@ impl SearchDriver for GaDriver {
     }
 
     fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let space = ctx.space;
+        let space = ctx.space();
         let n = space.len();
         if !self.started {
             // Initial population: all draws up front, then one batch.

@@ -110,7 +110,7 @@ impl GpHedgeDriver {
     fn top_up(&mut self, ctx: &mut DriveCtx) -> Ask {
         if self.obs_y.len() < self.init_n && ctx.budget_left() {
             let mut taken = self.visited.clone();
-            if let Some(idx) = random_untaken(ctx.space, &mut taken, ctx.rng) {
+            if let Some(idx) = random_untaken(ctx.space(), &mut taken, ctx.rng) {
                 self.phase = HedgePhase::TopUp;
                 return Ask::Suggest(vec![idx]);
             }
@@ -128,7 +128,7 @@ impl GpHedgeDriver {
         if !ctx.budget_left() {
             return Ask::Finished;
         }
-        let space = ctx.space;
+        let space = ctx.space();
         let m = space.len();
         if self.gp.is_none() {
             self.gp =
@@ -191,7 +191,7 @@ impl SearchDriver for GpHedgeDriver {
             // §III-E protocol as the paper's BO, for a like-for-like
             // portfolio test).
             self.started = true;
-            let space = ctx.space;
+            let space = ctx.space();
             let m = space.len();
             self.init_n = self.init_samples.min(ctx.max_fevals().unwrap_or(m)).min(m);
             let pts = maximin_lhs_points(self.init_n, space.dims(), 16, ctx.rng);

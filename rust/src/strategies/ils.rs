@@ -95,7 +95,7 @@ pub struct IlsDriver {
 impl IlsDriver {
     /// The `'outer` loop top: stop conditions, then a descent iteration.
     fn outer_top(&mut self, ctx: &mut DriveCtx) -> Ask {
-        if !ctx.budget_left() || ctx.n_seen() >= ctx.space.len() {
+        if !ctx.budget_left() || ctx.n_seen() >= ctx.space().len() {
             return Ask::Finished;
         }
         self.descend(ctx)
@@ -105,7 +105,7 @@ impl IlsDriver {
     /// neighborhood, proposed as a batch.
     fn descend(&mut self, ctx: &mut DriveCtx) -> Ask {
         self.best = None;
-        let ns = neighbors(ctx.space, self.cur, Neighborhood::Hamming);
+        let ns = neighbors(ctx.space(), self.cur, Neighborhood::Hamming);
         if ns.is_empty() {
             return self.accept_and_kick(ctx);
         }
@@ -119,7 +119,7 @@ impl IlsDriver {
             self.home = self.cur;
             self.home_val = self.cur_val;
         }
-        let kicked = kick(ctx.space, self.home, self.kick_strength, ctx.rng);
+        let kicked = kick(ctx.space(), self.home, self.kick_strength, ctx.rng);
         self.phase = IlsPhase::KickAsked;
         Ask::Suggest(vec![kicked])
     }
@@ -131,7 +131,7 @@ impl SearchDriver for IlsDriver {
     }
 
     fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let n = ctx.space.len();
+        let n = ctx.space().len();
         if !self.started {
             // Valid starting point.
             self.started = true;

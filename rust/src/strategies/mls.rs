@@ -57,7 +57,7 @@ pub struct MlsDriver {
 impl MlsDriver {
     /// The `'restarts` loop top: stop conditions, then a fresh start.
     fn restart(&mut self, ctx: &mut DriveCtx) -> Ask {
-        if !ctx.budget_left() || ctx.n_seen() >= ctx.space.len() {
+        if !ctx.budget_left() || ctx.n_seen() >= ctx.space().len() {
             return Ask::Finished;
         }
         self.attempts = 0;
@@ -65,7 +65,7 @@ impl MlsDriver {
     }
 
     fn next_start(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let n = ctx.space.len();
+        let n = ctx.space().len();
         self.attempts += 1;
         if self.attempts > 4 * n {
             return Ask::Finished;
@@ -78,7 +78,7 @@ impl MlsDriver {
     /// One best-improvement climb iteration: propose the whole shuffled
     /// Hamming neighborhood as a batch.
     fn climb(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let mut ns = neighbors(ctx.space, self.cur, Neighborhood::Hamming);
+        let mut ns = neighbors(ctx.space(), self.cur, Neighborhood::Hamming);
         ctx.rng.shuffle(&mut ns);
         self.best = None;
         if ns.is_empty() {

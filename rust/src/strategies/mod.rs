@@ -194,6 +194,19 @@ pub trait Strategy: Send + Sync {
     /// belong to the drive loop.
     fn driver(&self, space: &SearchSpace) -> Box<dyn SearchDriver>;
 
+    /// A fresh driver for one run over an *implicit* (possibly lazy)
+    /// space, proposing from bounded candidate pools instead of sweeping
+    /// an enumeration. `None` (the default) means the strategy requires
+    /// an enumerated space; the session layer then refuses lazy mode for
+    /// it with a clear error instead of materializing the space.
+    fn lazy_driver(
+        &self,
+        _view: &dyn crate::space::view::SpaceView,
+        _pool_size: usize,
+    ) -> Option<Box<dyn SearchDriver>> {
+        None
+    }
+
     /// Run with a total budget of `max_fevals` objective evaluations
     /// (invalid evaluations consume budget too — they cost real time on a
     /// real tuner and Kernel Tuner counts them).

@@ -79,7 +79,7 @@ pub struct PsoDriver {
 impl PsoDriver {
     /// Swarm-sweep loop top: stop conditions, then particle 0.
     fn sweep_top(&mut self, ctx: &mut DriveCtx) -> Ask {
-        if !ctx.budget_left() || ctx.n_seen() >= ctx.space.len() {
+        if !ctx.budget_left() || ctx.n_seen() >= ctx.space().len() {
             return Ask::Finished;
         }
         self.progressed = false;
@@ -87,7 +87,7 @@ impl PsoDriver {
     }
 
     fn propose_current(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let idx = snap(ctx.space, &self.swarm[self.k].pos);
+        let idx = snap(ctx.space(), &self.swarm[self.k].pos);
         Ask::Suggest(vec![idx])
     }
 }
@@ -98,7 +98,7 @@ impl SearchDriver for PsoDriver {
     }
 
     fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let dims = ctx.space.dims();
+        let dims = ctx.space().dims();
         if !self.started {
             self.started = true;
             self.swarm = (0..self.particles)

@@ -6,9 +6,13 @@
 //! loop did) and proposed as one batch, so the drive loop can evaluate it
 //! in parallel or stop it early under a non-feval budget.
 
+use std::collections::BTreeSet;
+
+use crate::space::view::SpaceView;
 use crate::space::SearchSpace;
 use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
 use crate::strategies::Strategy;
+use crate::util::rng::Rng;
 
 pub struct RandomSearch;
 
@@ -19,6 +23,14 @@ impl Strategy for RandomSearch {
 
     fn driver(&self, _space: &SearchSpace) -> Box<dyn SearchDriver> {
         Box::new(RandomDriver { proposed: false })
+    }
+
+    fn lazy_driver(
+        &self,
+        _view: &dyn SpaceView,
+        _pool_size: usize,
+    ) -> Option<Box<dyn SearchDriver>> {
+        Some(Box::new(LazyRandomDriver { rng: None, seen: BTreeSet::new() }))
     }
 }
 
@@ -37,9 +49,48 @@ impl SearchDriver for RandomDriver {
             return Ask::Finished;
         }
         self.proposed = true;
-        let n = ctx.space.len();
+        let n = ctx.space().len();
         let k = ctx.max_fevals().unwrap_or(n).min(n);
         Ask::Suggest(ctx.rng.sample_indices(n, k))
+    }
+
+    fn tell(&mut self, _obs: Observation) {}
+}
+
+/// Lazy-space random search: one uniform valid draw per ask through the
+/// view's constraint-propagating sampler, never revisiting a proposed
+/// key. The whole-space `sample_indices` order is unavailable without an
+/// enumeration, so draws come stepwise from a private child stream —
+/// the lazy analogue of without-replacement sampling.
+pub struct LazyRandomDriver {
+    /// Private child stream, split from the run RNG at the first ask
+    /// (the same discipline as the pool BO driver).
+    rng: Option<Rng>,
+    seen: BTreeSet<u64>,
+}
+
+/// Rejection attempts per fresh draw before declaring the space dry.
+const LAZY_DRAW_TRIES: usize = 256;
+
+impl SearchDriver for LazyRandomDriver {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
+        if !ctx.budget_left() {
+            return Ask::Finished;
+        }
+        let view = ctx.view();
+        let rng = self.rng.get_or_insert_with(|| ctx.rng.split(0x524e_444d)); // "RNDM"
+        for _ in 0..LAZY_DRAW_TRIES {
+            match view.sample_key(rng) {
+                Some(k) if self.seen.insert(k) => return Ask::Suggest(vec![k as usize]),
+                Some(_) => {}
+                None => return Ask::Finished,
+            }
+        }
+        Ask::Finished // draws dried up: treat the valid set as exhausted
     }
 
     fn tell(&mut self, _obs: Observation) {}

@@ -98,6 +98,14 @@ pub fn surrogate_methods() -> Vec<&'static str> {
     vec!["bo_rf", "bo_et", "tpe"]
 }
 
+/// Strategies that scale to implicit (lazy) spaces today: they implement
+/// [`Strategy::lazy_driver`], proposing from bounded candidate pools
+/// instead of sweeping an enumeration. The multi-AF policies and the
+/// population/local-search baselines remain eager-only.
+pub fn lazy_names() -> Vec<&'static str> {
+    vec!["random", "ei", "poi", "lcb", "bo_rf", "bo_et", "tpe"]
+}
+
 /// Everything, for exhaustive CLI listings.
 pub fn all_names() -> Vec<&'static str> {
     let mut v = our_methods();
@@ -142,6 +150,26 @@ mod tests {
         for n in surrogate_methods() {
             assert!(all_names().contains(&n), "{n} missing from all_names");
             assert_eq!(by_name(n).unwrap().name(), n);
+        }
+    }
+
+    #[test]
+    fn lazy_names_have_lazy_drivers_and_the_rest_refuse() {
+        use crate::space::view::LazyView;
+        use crate::space::{Expr, SpaceSpec};
+        let spec = SpaceSpec::new("lazy-registry")
+            .ints("a", &[1, 2, 3, 4])
+            .ints("b", &[1, 2, 3, 4])
+            .restrict(Expr::var("a").mul(Expr::var("b")).le(Expr::lit(8)));
+        let view = LazyView::from_spec(&spec).expect("toy spec builds");
+        for n in all_names() {
+            let s = by_name(n).unwrap();
+            let has = s.lazy_driver(&view, 64).is_some();
+            assert_eq!(
+                has,
+                lazy_names().contains(&n),
+                "strategy '{n}' lazy capability must match lazy_names()"
+            );
         }
     }
 

@@ -77,12 +77,12 @@ impl SaDriver {
     /// The main loop's top: cool, propose an adjacent neighbor (with the
     /// stale-escape draw), matching the legacy iteration order exactly.
     fn propose_step(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let n = ctx.space.len();
+        let n = ctx.space().len();
         if !ctx.budget_left() || ctx.n_seen() >= n {
             return Ask::Finished;
         }
         self.temp *= self.cool;
-        let ns = neighbors(ctx.space, self.cur, Neighborhood::Adjacent);
+        let ns = neighbors(ctx.space(), self.cur, Neighborhood::Adjacent);
         let mut proposal = if ns.is_empty() { ctx.rng.below(n) } else { *ctx.rng.choose(&ns) };
         // A fully memoized neighborhood burns no budget: after enough
         // stale iterations, teleport (Kernel Tuner restarts likewise).
@@ -112,7 +112,7 @@ impl SearchDriver for SaDriver {
     }
 
     fn ask(&mut self, ctx: &mut DriveCtx) -> Ask {
-        let n = ctx.space.len();
+        let n = ctx.space().len();
         if !self.started {
             // Random valid-ish starting point.
             self.started = true;

@@ -128,8 +128,34 @@ impl ForestModel {
         ForestModel { cfg, label, rng: None, trees: Vec::new(), dims: 0 }
     }
 
+    /// Fit the ensemble on pre-materialized training rows (`x` is n×dims
+    /// row-major normalized coordinates). The whole-space `fit` and the
+    /// candidate-pool path both land here.
+    pub(crate) fn fit_rows(&mut self, x: &[f32], dims: usize, y: &[f64]) {
+        let n = y.len();
+        assert!(n > 0, "forest fit needs at least one observation");
+        debug_assert_eq!(x.len(), n * dims, "row matrix shape mismatch");
+        self.dims = dims;
+        let rng = self
+            .rng
+            // ktbo-lint: allow(rng-discipline): deterministic fixed-stream fallback for standalone (unseeded) model use; seeded runs go through seed()
+            .get_or_insert_with(|| Rng::with_stream(0x9e37_79b9_7f4a_7c15, 0x464f_5245_5354));
+        self.trees.clear();
+        let cfg = self.cfg;
+        for _ in 0..cfg.n_trees {
+            let sample: Vec<usize> = if cfg.bootstrap {
+                (0..n).map(|_| rng.below(n)).collect()
+            } else {
+                (0..n).collect()
+            };
+            let mut nodes = Vec::new();
+            grow(&mut nodes, x, dims, y, &sample, 0, &cfg, rng);
+            self.trees.push(Tree { nodes });
+        }
+    }
+
     /// Mean and per-tree variance for one candidate row.
-    fn predict_row(&self, row: &[f32]) -> (f64, f64) {
+    pub(crate) fn predict_row(&self, row: &[f32]) -> (f64, f64) {
         let k = self.trees.len();
         debug_assert!(k > 0, "fit before predict");
         let mut sum = 0.0;
@@ -280,29 +306,12 @@ impl Model for ForestModel {
     fn fit(&mut self, ctx: &FitCtx<'_>) {
         let dims = ctx.space.dims();
         let n = ctx.obs_idx.len();
-        assert!(n > 0, "forest fit needs at least one observation");
-        self.dims = dims;
         // Materialize the training rows once per fit (n ≤ a few hundred).
         let mut x = Vec::with_capacity(n * dims);
         for &i in ctx.obs_idx {
             x.extend_from_slice(ctx.space.point(i));
         }
-        let rng = self
-            .rng
-            // ktbo-lint: allow(rng-discipline): deterministic fixed-stream fallback for standalone (unseeded) model use; seeded runs go through seed()
-            .get_or_insert_with(|| Rng::with_stream(0x9e37_79b9_7f4a_7c15, 0x464f_5245_5354));
-        self.trees.clear();
-        let cfg = self.cfg;
-        for _ in 0..cfg.n_trees {
-            let sample: Vec<usize> = if cfg.bootstrap {
-                (0..n).map(|_| rng.below(n)).collect()
-            } else {
-                (0..n).collect()
-            };
-            let mut nodes = Vec::new();
-            grow(&mut nodes, &x, dims, ctx.y_z, &sample, 0, &cfg, rng);
-            self.trees.push(Tree { nodes });
-        }
+        self.fit_rows(&x, dims, ctx.y_z);
     }
 
     fn predict_tiles(&self, space: &SearchSpace, start: usize, mu: &mut [f64], var: &mut [f64]) {

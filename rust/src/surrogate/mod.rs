@@ -43,10 +43,12 @@
 
 pub mod forest;
 pub mod gp;
+pub mod pool;
 pub mod tpe;
 
 pub use forest::{ForestConfig, ForestModel};
 pub use gp::GpModel;
+pub use pool::{ForestPool, GpPool, PoolModel, TpePool};
 pub use tpe::{TpeConfig, TpeModel};
 
 use crate::space::SearchSpace;

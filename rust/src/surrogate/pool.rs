@@ -1,0 +1,281 @@
+//! Candidate-pool surrogate path for implicit ([`SpaceView`]) spaces.
+//!
+//! The whole-space [`Model`](crate::surrogate::Model) contract fits once
+//! and sweeps `predict_tiles` over *every* enumerated configuration —
+//! exactly the O(m)-per-iteration cost a lazy space exists to avoid. A
+//! [`PoolModel`] answers the same surrogate question over an explicit
+//! candidate pool instead: fit on the observed packed keys, predict
+//! mean/variance for the pool's keys only. Per-iteration work is bounded
+//! by `n_obs + pool_size`, independent of the Cartesian size.
+//!
+//! Three backends mirror the registry's eager surrogates:
+//!
+//! - [`TpePool`] — the TPE histograms over decoded `u16` value rows
+//!   (shares [`TpeModel`]'s fit arithmetic bit for bit);
+//! - [`ForestPool`] — RF/ET ensembles over normalized coordinate rows
+//!   (shares [`ForestModel`]'s `fit_rows`/`predict_row`);
+//! - [`GpPool`] — the one-shot native GP ([`NativeSurrogate`]) over
+//!   widened normalized rows.
+//!
+//! Determinism mirrors the eager path: any backend randomness comes from
+//! a private child stream split once per run via [`PoolModel::seed`];
+//! fits and predictions are pure functions of (observations, pool).
+
+use crate::gp::{NativeSurrogate, Surrogate};
+use crate::space::view::SpaceView;
+use crate::surrogate::forest::{ForestConfig, ForestModel};
+use crate::surrogate::tpe::{TpeConfig, TpeModel};
+use crate::util::rng::Rng;
+
+/// A surrogate that fits on observed packed keys and scores an explicit
+/// candidate pool — the lazy-space counterpart of
+/// [`Model`](crate::surrogate::Model).
+pub trait PoolModel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Derive any private RNG stream from the run RNG. Called exactly
+    /// once per run, before the first fit. Deterministic backends keep
+    /// the default no-op.
+    fn seed(&mut self, _rng: &mut Rng) {}
+
+    /// Fit on `(obs_keys, y_z)` and write posterior mean/variance for
+    /// each key in `cand_keys`. `Err` signals a degenerate fit (e.g. a
+    /// singular GP system) — the caller falls back rather than panics.
+    fn fit_predict(
+        &mut self,
+        view: &dyn SpaceView,
+        obs_keys: &[u64],
+        y_z: &[f64],
+        cand_keys: &[u64],
+        mu: &mut [f64],
+        var: &mut [f64],
+    ) -> Result<(), String>;
+}
+
+/// Decoded `u16` value-index rows for a key set (row-major n×dims).
+fn value_rows(view: &dyn SpaceView, keys: &[u64]) -> Vec<u16> {
+    let dims = view.dims();
+    let mut rows = vec![0u16; keys.len() * dims];
+    for (r, &k) in keys.iter().enumerate() {
+        view.decode_into(k, &mut rows[r * dims..(r + 1) * dims]);
+    }
+    rows
+}
+
+/// Normalized-coordinate rows for a key set (row-major n×dims).
+fn norm_rows(view: &dyn SpaceView, keys: &[u64]) -> Vec<f32> {
+    let dims = view.dims();
+    let mut rows = vec![0.0f32; keys.len() * dims];
+    for (r, &k) in keys.iter().enumerate() {
+        view.norm_point_into(k, &mut rows[r * dims..(r + 1) * dims]);
+    }
+    rows
+}
+
+/// TPE over decoded value rows. Deterministic — no `seed` needed.
+pub struct TpePool {
+    model: TpeModel,
+}
+
+impl TpePool {
+    pub fn new(cfg: TpeConfig) -> TpePool {
+        TpePool { model: TpeModel::new(cfg) }
+    }
+}
+
+impl PoolModel for TpePool {
+    fn name(&self) -> &'static str {
+        "tpe"
+    }
+
+    fn fit_predict(
+        &mut self,
+        view: &dyn SpaceView,
+        obs_keys: &[u64],
+        y_z: &[f64],
+        cand_keys: &[u64],
+        mu: &mut [f64],
+        var: &mut [f64],
+    ) -> Result<(), String> {
+        let dims = view.dims();
+        let radices: Vec<usize> = view.params().iter().map(|p| p.len()).collect();
+        let rows = value_rows(view, obs_keys);
+        self.model.fit_rows(&rows, dims, &radices, y_z);
+        let cand_rows = value_rows(view, cand_keys);
+        for (j, m) in mu.iter_mut().enumerate() {
+            *m = self.model.score_row(&cand_rows[j * dims..(j + 1) * dims]);
+        }
+        // Constant predictive variance — same contract as the eager TPE:
+        // under it every acquisition argmin equals argmax l(x)/g(x).
+        var.fill(1.0);
+        Ok(())
+    }
+}
+
+/// RF/ET ensemble over normalized coordinate rows.
+pub struct ForestPool {
+    model: ForestModel,
+}
+
+impl ForestPool {
+    pub fn new(cfg: ForestConfig) -> ForestPool {
+        ForestPool { model: ForestModel::new(cfg) }
+    }
+}
+
+impl PoolModel for ForestPool {
+    fn name(&self) -> &'static str {
+        self.model.name()
+    }
+
+    fn seed(&mut self, rng: &mut Rng) {
+        self.model.seed(rng);
+    }
+
+    fn fit_predict(
+        &mut self,
+        view: &dyn SpaceView,
+        obs_keys: &[u64],
+        y_z: &[f64],
+        cand_keys: &[u64],
+        mu: &mut [f64],
+        var: &mut [f64],
+    ) -> Result<(), String> {
+        let dims = view.dims();
+        let x = norm_rows(view, obs_keys);
+        self.model.fit_rows(&x, dims, y_z);
+        let cand = norm_rows(view, cand_keys);
+        for (j, (m, v)) in mu.iter_mut().zip(var.iter_mut()).enumerate() {
+            let (pm, pv) = self.model.predict_row(&cand[j * dims..(j + 1) * dims]);
+            *m = pm;
+            *v = pv;
+        }
+        Ok(())
+    }
+}
+
+/// One-shot native GP over widened normalized rows.
+pub struct GpPool {
+    surrogate: NativeSurrogate,
+}
+
+impl GpPool {
+    pub fn new(surrogate: NativeSurrogate) -> GpPool {
+        GpPool { surrogate }
+    }
+}
+
+impl PoolModel for GpPool {
+    fn name(&self) -> &'static str {
+        "gp"
+    }
+
+    fn fit_predict(
+        &mut self,
+        view: &dyn SpaceView,
+        obs_keys: &[u64],
+        y_z: &[f64],
+        cand_keys: &[u64],
+        mu: &mut [f64],
+        var: &mut [f64],
+    ) -> Result<(), String> {
+        let dims = view.dims();
+        let widen = |rows: Vec<f32>| rows.into_iter().map(f64::from).collect::<Vec<f64>>();
+        let x = widen(norm_rows(view, obs_keys));
+        let cand = widen(norm_rows(view, cand_keys));
+        self.surrogate.fit_predict(&x, y_z, dims, &cand, mu, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::CovFn;
+    use crate::space::view::{EagerView, LazyView};
+    use crate::space::{Expr, SpaceSpec};
+    use crate::surrogate::{FitCtx, Model};
+    use crate::util::pool::ShardPool;
+    use std::sync::Arc;
+
+    fn toy_spec() -> SpaceSpec {
+        SpaceSpec::new("pool-toy")
+            .ints("bx", &[16, 32, 64])
+            .ints("tile", &[1, 2, 4, 8])
+            .bools("pad")
+            .restrict(Expr::var("bx").mul(Expr::var("tile")).le(Expr::lit(128)))
+    }
+
+    /// Observed keys / values over the eager space, by dense index.
+    fn observations(view: &EagerView, take: usize) -> (Vec<u64>, Vec<usize>, Vec<f64>) {
+        let space = view.space().clone();
+        let idxs: Vec<usize> = (0..space.len()).step_by(2).take(take).collect();
+        let keys: Vec<u64> = idxs.iter().map(|&i| space.key(i)).collect();
+        let y: Vec<f64> = idxs.iter().map(|&i| ((i * 7) % 5) as f64 - 2.0).collect();
+        (keys, idxs, y)
+    }
+
+    /// The pool TPE must reproduce the eager TPE's `mu` exactly when fed
+    /// the same observations — same histograms, same lookups.
+    #[test]
+    fn tpe_pool_matches_eager_tpe_scores() {
+        let spec = toy_spec();
+        let eager = EagerView::new(Arc::new(spec.build()));
+        let lazy = LazyView::from_spec(&spec).expect("toy spec is lazy-compatible");
+        let (keys, idxs, y) = observations(&eager, 6);
+
+        let space: &crate::space::SearchSpace = eager.space().as_ref();
+        let shard_pool = ShardPool::new(1);
+        let mut reference = TpeModel::default();
+        reference
+            .fit(&FitCtx { space, obs_idx: &idxs, y_z: &y, shard_len: 8, pool: &shard_pool });
+        let n = space.len();
+        let mut mu_ref = vec![0.0; n];
+        let mut var_ref = vec![0.0; n];
+        reference.predict_tiles(space, 0, &mut mu_ref, &mut var_ref);
+
+        let cand_keys: Vec<u64> = (0..n).map(|i| space.key(i)).collect();
+        let mut pool = TpePool::new(TpeConfig::default());
+        let mut mu = vec![0.0; n];
+        let mut var = vec![0.0; n];
+        pool.fit_predict(&lazy, &keys, &y, &cand_keys, &mut mu, &mut var)
+            .expect("tpe pool fit is infallible");
+        assert_eq!(mu, mu_ref, "pool TPE must match eager TPE bit for bit");
+        assert!(var.iter().all(|&v| v == 1.0));
+    }
+
+    /// Forest and GP pools produce finite, non-degenerate posteriors over
+    /// a lazy view, deterministically under an identical seed.
+    #[test]
+    fn forest_and_gp_pools_are_finite_and_deterministic() {
+        let spec = toy_spec();
+        let eager = EagerView::new(Arc::new(spec.build()));
+        let lazy = LazyView::from_spec(&spec).expect("toy spec is lazy-compatible");
+        let (keys, _, y) = observations(&eager, 8);
+        let cand_keys: Vec<u64> =
+            (0..eager.space().len()).step_by(3).map(|i| eager.space().key(i)).collect();
+
+        let run = |pool: &mut dyn PoolModel| {
+            let mut rng = Rng::new(11);
+            pool.seed(&mut rng);
+            let mut mu = vec![0.0; cand_keys.len()];
+            let mut var = vec![0.0; cand_keys.len()];
+            pool.fit_predict(&lazy, &keys, &y, &cand_keys, &mut mu, &mut var)
+                .expect("fit on a well-conditioned toy set");
+            (mu, var)
+        };
+
+        let mut rf_a = ForestPool::new(ForestConfig::random_forest());
+        let mut rf_b = ForestPool::new(ForestConfig::random_forest());
+        let (mu_a, var_a) = run(&mut rf_a);
+        let (mu_b, var_b) = run(&mut rf_b);
+        assert_eq!(mu_a, mu_b);
+        assert_eq!(var_a, var_b);
+        assert!(mu_a.iter().all(|v| v.is_finite()));
+        assert!(var_a.iter().all(|&v| v >= 1e-12));
+
+        let mut gp = GpPool::new(NativeSurrogate::new(CovFn::Matern32 { lengthscale: 1.5 }, 1e-6));
+        let (mu_g, var_g) = run(&mut gp);
+        assert!(mu_g.iter().all(|v| v.is_finite()));
+        assert!(var_g.iter().all(|&v| v > 0.0 && v.is_finite()));
+    }
+}

@@ -61,29 +61,22 @@ impl TpeModel {
     fn n_good(&self, n: usize) -> usize {
         ((self.cfg.gamma * n as f64).ceil() as usize).clamp(1, n)
     }
-}
 
-impl Default for TpeModel {
-    fn default() -> TpeModel {
-        TpeModel::new(TpeConfig::default())
-    }
-}
-
-impl Model for TpeModel {
-    fn name(&self) -> &'static str {
-        "tpe"
-    }
-
-    fn fit(&mut self, ctx: &FitCtx<'_>) {
-        let n = ctx.obs_idx.len();
+    /// Fit the per-dimension histograms from pre-materialized value-index
+    /// rows (`rows` is n×dims row-major; `radices[d]` is dimension `d`'s
+    /// value count). The whole-space `fit` and the candidate-pool path
+    /// both land here; the arithmetic is identical, so eager fits are
+    /// bit-identical to the pre-factoring code.
+    pub(crate) fn fit_rows(&mut self, rows: &[u16], dims: usize, radices: &[usize], y_z: &[f64]) {
+        let n = y_z.len();
         assert!(n > 0, "TPE fit needs at least one observation");
-        let dims = ctx.space.dims();
+        debug_assert_eq!(rows.len(), n * dims, "row matrix shape mismatch");
         // Rank observations by value; ties break by evaluation order so
         // the split is a pure function of the observation sequence.
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by(|&a, &b| {
-            ctx.y_z[a]
-                .partial_cmp(&ctx.y_z[b])
+            y_z[a]
+                .partial_cmp(&y_z[b])
                 .expect("z-scored observations are finite")
                 .then(a.cmp(&b))
         });
@@ -93,11 +86,11 @@ impl Model for TpeModel {
         let pw = self.cfg.prior_weight;
         self.neg_log_ratio = (0..dims)
             .map(|d| {
-                let radix = ctx.space.params[d].len();
+                let radix = radices[d];
                 let mut good = vec![0usize; radix];
                 let mut bad = vec![0usize; radix];
                 for (rank, &o) in order.iter().enumerate() {
-                    let v = ctx.space.value_index(ctx.obs_idx[o], d) as usize;
+                    let v = rows[o * dims + d] as usize;
                     if rank < n_good {
                         good[v] += 1;
                     } else {
@@ -115,6 +108,38 @@ impl Model for TpeModel {
                     .collect()
             })
             .collect();
+    }
+
+    /// `mu` of one candidate row of value indices: Σ_d [ln g − ln l].
+    pub(crate) fn score_row(&self, row: &[u16]) -> f64 {
+        debug_assert_eq!(self.neg_log_ratio.len(), row.len(), "fit before predict");
+        self.neg_log_ratio.iter().zip(row).map(|(table, &v)| table[v as usize]).sum()
+    }
+}
+
+impl Default for TpeModel {
+    fn default() -> TpeModel {
+        TpeModel::new(TpeConfig::default())
+    }
+}
+
+impl Model for TpeModel {
+    fn name(&self) -> &'static str {
+        "tpe"
+    }
+
+    fn fit(&mut self, ctx: &FitCtx<'_>) {
+        let n = ctx.obs_idx.len();
+        assert!(n > 0, "TPE fit needs at least one observation");
+        let dims = ctx.space.dims();
+        let radices: Vec<usize> = ctx.space.params.iter().map(|p| p.len()).collect();
+        let mut rows = Vec::with_capacity(n * dims);
+        for &i in ctx.obs_idx {
+            for d in 0..dims {
+                rows.push(ctx.space.value_index(i, d));
+            }
+        }
+        self.fit_rows(&rows, dims, &radices, ctx.y_z);
     }
 
     fn predict_tiles(&self, space: &SearchSpace, start: usize, mu: &mut [f64], var: &mut [f64]) {

@@ -201,6 +201,26 @@ fn session_step_bench_smoke() {
 }
 
 #[test]
+fn space_scale_bench_smoke() {
+    // The space_scale bench binary is a thin CLI over
+    // harness::space_scale_bench; running the smoke grid here keeps the
+    // bench — and its flatness assertion — from silently rotting.
+    use ktbo::harness::space_scale_bench::{flatness_violation, run_scenario, scenario_grid, to_json};
+    let records: Vec<_> = scenario_grid(true).iter().map(run_scenario).collect();
+    assert!(!records.is_empty());
+    for r in &records {
+        assert!(r.us_per_suggestion.is_finite() && r.us_per_suggestion > 0.0, "bad timing in {:?}", r.scenario);
+        assert_eq!(r.evaluations, r.scenario.budget, "scenario {:?} under-evaluated", r.scenario);
+    }
+    // The bench's acceptance predicate itself: per-suggestion probe work
+    // bounded by the pool/dims cap at every size in the grid.
+    assert_eq!(flatness_violation(&records), None);
+    let doc = to_json(&records).render_pretty();
+    assert!(doc.contains("\"bench\": \"space_scale\""));
+    assert!(doc.contains("probes_per_suggestion"));
+}
+
+#[test]
 fn surrogate_zoo_sweeps_all_kernels() {
     // Acceptance: bo_rf, bo_et, and tpe run end-to-end on all five
     // kernels via the orchestrated sweep, producing valid JSONL records
@@ -567,5 +587,63 @@ fn bo_under_fault_injection_survives_thread_and_shard_sweep() {
     );
     for &(sl, th) in &[(0, 8), (64, 2)] {
         assert_eq!(seq(sl, th), reference, "diverged at shard_len={sl} threads={th}");
+    }
+}
+
+#[test]
+fn lazy_tune_completes_on_the_billion_scale_spec_without_enumeration() {
+    // Acceptance (implicit spaces): `ktbo tune --space megakernel_1g.json`
+    // — a constraint-pruned ≥10⁹-config Cartesian product — runs `tpe`
+    // AND a GP pool-mode strategy (`ei`) to completion under a feval
+    // budget through the exact layers the CLI wires: LazyView oracle,
+    // SyntheticObjective, Strategy::lazy_driver, Session. No enumeration,
+    // no tiles; per-suggestion constraint work stays pool-bounded.
+    use ktbo::objective::synthetic::SyntheticObjective;
+    use ktbo::space::view::{LazyView, SpaceView};
+    use ktbo::space::SpaceSpec;
+    use ktbo::strategies::{FevalBudget, Session};
+    use ktbo::util::rng::fnv1a;
+
+    let path = format!("{}/../examples/spaces/megakernel_1g.json", env!("CARGO_MANIFEST_DIR"));
+    let spec = SpaceSpec::load(std::path::Path::new(&path)).expect("spec loads");
+    assert!(
+        spec.cartesian_size() >= 1_000_000_000,
+        "spec must be billion-scale, got {}",
+        spec.cartesian_size()
+    );
+
+    let budget = 30usize;
+    let pool = 64usize;
+    for strategy_name in ["tpe", "ei"] {
+        let view = Arc::new(LazyView::from_spec(&spec).expect("lazy view builds"));
+        let strat = by_name(strategy_name).unwrap();
+        let driver = strat
+            .lazy_driver(view.as_ref(), pool)
+            .unwrap_or_else(|| panic!("{strategy_name} must be lazy-capable"));
+        let obj: Arc<dyn Objective> =
+            Arc::new(SyntheticObjective::new(Arc::clone(&view), fnv1a(&spec.name)));
+        let mut session =
+            Session::new(driver, obj, Box::new(FevalBudget::new(budget)), Rng::new(20260807));
+        while session.step() {}
+        let trace = session.into_trace();
+        assert_eq!(trace.len(), budget, "{strategy_name}: budget must be spent in full");
+        let (best_idx, best) = trace.best().expect("a valid config is found");
+        assert!(best.is_finite() && best > 0.0);
+        for &(idx, _) in &trace.records {
+            assert!(
+                view.contains_key(idx as u64),
+                "{strategy_name}: proposed key {idx} violates the restrictions"
+            );
+        }
+        assert!(view.contains_key(best_idx as u64));
+        // Per-suggestion constraint probes bounded by pool mechanics, not
+        // by the 10⁹ Cartesian size: each iteration draws ≤ pool
+        // candidates (bounded rejection tries each) plus neighbor probes
+        // of ≤3 incumbents. A generous static ceiling proves no sweep.
+        let per_suggestion = view.probe_count() / budget as u64;
+        assert!(
+            per_suggestion < 200_000,
+            "{strategy_name}: {per_suggestion} probes/suggestion looks like an enumeration"
+        );
     }
 }

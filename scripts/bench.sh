@@ -17,6 +17,7 @@ GP_OUT="$ROOT/BENCH_gp_hotpath.json"
 SPACE_OUT="$ROOT/BENCH_space_build.json"
 SURR_OUT="$ROOT/BENCH_surrogate_fit.json"
 SESSION_OUT="$ROOT/BENCH_session_step.json"
+SCALE_OUT="$ROOT/BENCH_space_scale.json"
 for arg in "$@"; do
   # A smoke run must not overwrite the tracked full-grid trajectory files.
   if [ "$arg" = "--smoke" ]; then
@@ -24,6 +25,7 @@ for arg in "$@"; do
     SPACE_OUT="$ROOT/BENCH_space_build.smoke.json"
     SURR_OUT="$ROOT/BENCH_surrogate_fit.smoke.json"
     SESSION_OUT="$ROOT/BENCH_session_step.smoke.json"
+    SCALE_OUT="$ROOT/BENCH_space_scale.smoke.json"
   fi
 done
 
@@ -33,9 +35,11 @@ cargo bench --bench gp_hotpath -- --out "$GP_OUT" "$@"
 cargo bench --bench space_build -- --out "$SPACE_OUT" "$@"
 cargo bench --bench surrogate_fit -- --out "$SURR_OUT" "$@"
 cargo bench --bench session_step -- --out "$SESSION_OUT" "$@"
+cargo bench --bench space_scale -- --out "$SCALE_OUT" "$@"
 
 echo
 echo "perf records: $GP_OUT"
 echo "              $SPACE_OUT"
 echo "              $SURR_OUT"
-echo "              $SESSION_OUT (update EXPERIMENTS.md §Perf after full runs)"
+echo "              $SESSION_OUT"
+echo "              $SCALE_OUT (update EXPERIMENTS.md §Perf after full runs)"

@@ -42,7 +42,7 @@ if [ "$FAST" = "1" ]; then
   exit 0
 fi
 
-step "smoke bench (gp_hotpath + space_build + surrogate_fit + session_step)"
+step "smoke bench (gp_hotpath + space_build + surrogate_fit + session_step + space_scale)"
 scripts/bench.sh --smoke
 
 step "smoke sweep (orchestrator; bo_rf surrogate cell + faulted sa cells)"
@@ -51,6 +51,13 @@ cargo run --release -p ktbo -- sweep --smoke --fresh --out results
 step "smoke sweep on a JSON-defined space"
 cargo run --release -p ktbo -- sweep --smoke --fresh --out results \
   --tag smoke-space --strategies random --budget 20 --space examples/spaces/adding.json
+
+step "lazy tune smoke (TPE on the billion-scale implicit space, no enumeration)"
+LAZY_OUT="$(cargo run --release -p ktbo -- tune gemm titanx --strategy tpe --budget 25 --seed 7 \
+  --space examples/spaces/megakernel_1g.json --pool-size 64)"
+echo "$LAZY_OUT"
+echo "$LAZY_OUT" | grep -q 'mode=lazy'
+echo "$LAZY_OUT" | grep -q 'evaluations=25'
 
 step "serve smoke (daemon + scripted 2-session client vs offline tune)"
 mkdir -p results
@@ -81,6 +88,7 @@ test -s BENCH_gp_hotpath.smoke.json
 test -s BENCH_space_build.smoke.json
 test -s BENCH_surrogate_fit.smoke.json
 test -s BENCH_session_step.smoke.json
+test -s BENCH_space_scale.smoke.json
 test -s results/SWEEP_smoke.jsonl
 test -s results/SWEEP_smoke.results.jsonl
 grep -q '"type":"outcome"' results/SWEEP_smoke.results.jsonl
