@@ -13,6 +13,10 @@ pub struct Rule {
     pub id: &'static str,
     /// Workspace-relative path prefixes the rule applies to.
     pub scopes: &'static [&'static str],
+    /// Path prefixes carved *out* of the scopes — for workspace-wide
+    /// rules with a sanctioned implementation module (e.g. the clock
+    /// rule excludes `telemetry/clock`, where the real reads live).
+    pub excludes: &'static [&'static str],
     /// One-line description of what the rule bans.
     pub summary: &'static str,
     /// Actionable remediation, printed with every finding.
@@ -35,6 +39,7 @@ pub const NO_HASH_ORDER: &str = "no-hash-order";
 pub const RNG_DISCIPLINE: &str = "rng-discipline";
 pub const NO_PANIC_ON_WIRE: &str = "no-panic-on-wire";
 pub const STABLE_SORT_TIEBREAK: &str = "stable-sort-tiebreak";
+pub const NO_UNTRACKED_CLOCK: &str = "no-untracked-clock";
 /// Pseudo-rule for malformed suppression comments; always in scope and
 /// never eligible for suppression (a broken directive must be fixed).
 pub const LINT_DIRECTIVE: &str = "lint-directive";
@@ -43,6 +48,7 @@ pub const RULES: &[Rule] = &[
     Rule {
         id: NO_WALL_CLOCK,
         scopes: TRACE_CORE,
+        excludes: &[],
         summary: "wall-clock reads (`Instant::now`, `SystemTime`) in trace-path modules",
         hint: "thread simulated time / budgets through instead; timing belongs in \
                harness benches or `WallClockBudget` (allow with a reason if this *is* \
@@ -60,6 +66,7 @@ pub const RULES: &[Rule] = &[
             "rust/src/harness/",
             "rust/src/serve/",
         ],
+        excludes: &[],
         summary: "`HashMap`/`HashSet` in trace-path modules (iteration order is unstable)",
         hint: "use `BTreeMap`/`BTreeSet`, a packed-key index, or drain through a \
                sorted Vec before anything order-sensitive",
@@ -75,6 +82,7 @@ pub const RULES: &[Rule] = &[
             "rust/src/objective/",
             "rust/src/serve/",
         ],
+        excludes: &[],
         summary: "ad-hoc RNG construction outside the blessed derivation tree",
         hint: "derive from the parent stream: `rng.split(tag)`, `cell_rng(...)`, or a \
                seed carried by `SessionConfig`; never `thread_rng`/`rand::random`, \
@@ -84,6 +92,7 @@ pub const RULES: &[Rule] = &[
     Rule {
         id: NO_PANIC_ON_WIRE,
         scopes: &["rust/src/serve/"],
+        excludes: &[],
         summary: "panic paths (`unwrap`/`expect`/`panic!`/indexing) in the serve layer",
         hint: "the daemon must answer a protocol error, not die: return \
                `protocol::err(...)`, propagate a `Result`, or use checked indexing",
@@ -91,14 +100,29 @@ pub const RULES: &[Rule] = &[
     Rule {
         id: STABLE_SORT_TIEBREAK,
         scopes: &["rust/src/bo/", "rust/src/strategies/", "rust/src/space/"],
+        excludes: &[],
         summary: "`sort_unstable*` in ranking code (equal f32 scores land in \
                   platform-dependent order)",
         hint: "use stable `sort_by` or add a deterministic tiebreak key \
                (config index) to the comparator",
     },
     Rule {
+        id: NO_UNTRACKED_CLOCK,
+        // Workspace-wide: unlike `no-wall-clock` (which bans timing from
+        // the trace path outright), this rule routes *all* timing through
+        // the injectable `telemetry::clock::Clock` so tests can substitute
+        // `ManualClock` anywhere — benches carry reasoned allow-files.
+        scopes: &[""],
+        excludes: &["rust/src/telemetry/clock"],
+        summary: "direct `Instant::now()`/`SystemTime` outside `telemetry::clock`",
+        hint: "inject a `telemetry::clock::Clock` (`MonotonicClock` in production, \
+               `ManualClock` in tests) instead of reading the OS clock in place; \
+               allow-file with a reason for standalone bench harnesses",
+    },
+    Rule {
         id: LINT_DIRECTIVE,
         scopes: &[""],
+        excludes: &[],
         summary: "malformed `ktbo-lint:` suppression comment",
         hint: "write `// ktbo-lint: allow(<rule>): <reason>` — the reason is required",
     },
@@ -110,9 +134,13 @@ pub fn rule(id: &str) -> Option<&'static Rule> {
 }
 
 /// Does `rule_id` apply to the file at workspace-relative `path`?
+/// Excludes win over scopes.
 pub fn in_scope(rule_id: &str, path: &str) -> bool {
     match rule(rule_id) {
-        Some(r) => r.scopes.iter().any(|s| path.starts_with(s)),
+        Some(r) => {
+            r.scopes.iter().any(|s| path.starts_with(s))
+                && !r.excludes.iter().any(|s| path.starts_with(s))
+        }
         None => false,
     }
 }
@@ -131,6 +159,12 @@ mod tests {
         assert!(in_scope(STABLE_SORT_TIEBREAK, "rust/src/space/view.rs"));
         assert!(!in_scope(STABLE_SORT_TIEBREAK, "rust/src/surrogate/forest.rs"));
         assert!(in_scope(LINT_DIRECTIVE, "anything/at/all.rs"));
+        // The clock rule is workspace-wide minus its sanctioned module.
+        assert!(in_scope(NO_UNTRACKED_CLOCK, "rust/src/harness/gp_bench.rs"));
+        assert!(in_scope(NO_UNTRACKED_CLOCK, "rust/src/main.rs"));
+        assert!(in_scope(NO_UNTRACKED_CLOCK, "lint/src/scan.rs"));
+        assert!(!in_scope(NO_UNTRACKED_CLOCK, "rust/src/telemetry/clock.rs"));
+        assert!(!in_scope(NO_UNTRACKED_CLOCK, "rust/src/telemetry/clock/impls.rs"));
     }
 
     #[test]

@@ -188,11 +188,12 @@ fn item_end(tokens: &[Token], mut k: usize) -> usize {
 fn match_rules(path: &str, act: &[&Token], out: &mut Vec<(String, u32, String)>) {
     let scoped = |id: &str| rules::in_scope(id, path);
     let wall = scoped(rules::NO_WALL_CLOCK);
+    let clock = scoped(rules::NO_UNTRACKED_CLOCK);
     let hash = scoped(rules::NO_HASH_ORDER);
     let rng = scoped(rules::RNG_DISCIPLINE);
     let wire = scoped(rules::NO_PANIC_ON_WIRE);
     let sort = scoped(rules::STABLE_SORT_TIEBREAK);
-    if !(wall || hash || rng || wire || sort) {
+    if !(wall || clock || hash || rng || wire || sort) {
         return;
     }
     let at = |k: usize| act.get(k).copied();
@@ -202,14 +203,35 @@ fn match_rules(path: &str, act: &[&Token], out: &mut Vec<(String, u32, String)>)
     for k in 0..act.len() {
         let t = act[k];
         if let Some(id) = ident(t) {
-            if wall {
+            if wall || clock {
+                // One matcher, two rules: `no-wall-clock` bans timing on
+                // the trace path outright; `no-untracked-clock` routes it
+                // workspace-wide through `telemetry::clock::Clock`.
                 if id == "Instant" && punct_at(k + 1, ':') && punct_at(k + 2, ':')
                     && id_at(k + 3) == Some("now")
                 {
-                    out.push((rules::NO_WALL_CLOCK.into(), t.line, "`Instant::now()` wall-clock read".into()));
+                    if wall {
+                        out.push((rules::NO_WALL_CLOCK.into(), t.line, "`Instant::now()` wall-clock read".into()));
+                    }
+                    if clock {
+                        out.push((
+                            rules::NO_UNTRACKED_CLOCK.into(),
+                            t.line,
+                            "`Instant::now()` outside `telemetry::clock`".into(),
+                        ));
+                    }
                 }
                 if id == "SystemTime" {
-                    out.push((rules::NO_WALL_CLOCK.into(), t.line, "`SystemTime` wall-clock read".into()));
+                    if wall {
+                        out.push((rules::NO_WALL_CLOCK.into(), t.line, "`SystemTime` wall-clock read".into()));
+                    }
+                    if clock {
+                        out.push((
+                            rules::NO_UNTRACKED_CLOCK.into(),
+                            t.line,
+                            "`SystemTime` outside `telemetry::clock`".into(),
+                        ));
+                    }
                 }
             }
             if hash && (id == "HashMap" || id == "HashSet") {

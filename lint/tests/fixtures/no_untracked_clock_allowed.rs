@@ -1,0 +1,10 @@
+// ktbo-lint: allow-file(no-untracked-clock): fixture — standalone bench harness, wall time is informational
+use std::time::Instant;
+
+pub fn stamp_now() -> Instant {
+    Instant::now()
+}
+
+pub fn epoch_read() {
+    let _ = std::time::SystemTime::now();
+}

@@ -1,0 +1,9 @@
+use std::time::Instant;
+
+pub fn stamp_now() -> Instant {
+    Instant::now()
+}
+
+pub fn epoch_read() {
+    let _ = std::time::SystemTime::now();
+}

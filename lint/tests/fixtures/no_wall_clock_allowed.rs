@@ -2,5 +2,6 @@ use std::time::Instant;
 
 pub fn deadline() -> Instant {
     // ktbo-lint: allow(no-wall-clock): fixture — this is the sanctioned budget clock
+    // ktbo-lint: allow(no-untracked-clock): fixture — budget clock wants wall semantics, not a `Clock`
     Instant::now()
 }

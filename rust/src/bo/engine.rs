@@ -66,6 +66,7 @@ use crate::space::view::SpaceView;
 use crate::space::{neighbors, Neighborhood, SearchSpace};
 use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
 use crate::strategies::Strategy;
+use crate::telemetry::{EventKind, Phase};
 use crate::surrogate::{
     predict_pass, FitCtx, ForestConfig, ForestPool, GpPool, Model, PoolModel, TpeConfig, TpePool,
 };
@@ -317,6 +318,9 @@ impl BoDriver {
         // backend defers its posterior sweep to the fused pass below; a
         // pluggable batch model refits and is swept shard-parallel here;
         // the one-shot backend must produce mu/var up front.
+        let tel = ctx.telemetry();
+        let step_no = ctx.fevals_used();
+        let t_fit = tel.start();
         if let Some(model) = &mut self.model {
             if !self.model_seeded {
                 // One deterministic split of the run stream, at a fixed
@@ -366,6 +370,7 @@ impl BoDriver {
                 }
             }
         }
+        tel.span(step_no, Phase::Fit, t_fit, self.obs_idx.len());
 
         // Candidate mask (§III-D: evaluated configs are out; pruned
         // configs — ≥2 invalid adjacent neighbors — are out while
@@ -422,6 +427,7 @@ impl BoDriver {
         // exhaustive argmin (plus, for the incremental backend, the
         // posterior itself; one-shot/Model posteriors are already in
         // `mu`/`var`, so their sweep is the sharded score pass alone).
+        let t_score = tel.start();
         let wanted = self.policy.wanted();
         let suggestions: Vec<Option<usize>> = if wanted.is_empty() {
             Vec::new()
@@ -453,8 +459,12 @@ impl BoDriver {
             );
             reduce_shard_argmins(&parts, wanted.len())
         };
+        tel.span(step_no, Phase::Score, t_score, wanted.len());
 
         let pick = self.policy.choose(&suggestions);
+        if let Some(arm) = self.policy.chosen_arm() {
+            tel.record(step_no, EventKind::AfChoice { arm });
+        }
 
         if self.cfg.batch_ask {
             // Batch mode: the fused sweep already produced one argmin per

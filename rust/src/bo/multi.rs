@@ -36,6 +36,14 @@ pub trait AcqPolicy: Send {
 
     /// Currently active basic AFs (for logging/tests).
     fn active(&self) -> Vec<Acq>;
+
+    /// Rotation position of the AF that made the last `choose` decision
+    /// — telemetry reads this to record multi-AF arm selections. `None`
+    /// for single-AF policies (no decision to report) and before the
+    /// first choose.
+    fn chosen_arm(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// Discounted observation score: dos_t = Σᵢ oᵢ·γ^(t−i) — recent
@@ -223,6 +231,10 @@ impl AcqPolicy for MultiPolicy {
             .map(|(q, _)| *q)
             .collect()
     }
+
+    fn chosen_arm(&self) -> Option<usize> {
+        self.last_chooser
+    }
 }
 
 /// The `advanced multi` acquisition function: judges AFs directly by their
@@ -343,6 +355,10 @@ impl AcqPolicy for AdvancedMultiPolicy {
             .filter(|(_, a)| **a)
             .map(|(q, _)| *q)
             .collect()
+    }
+
+    fn chosen_arm(&self) -> Option<usize> {
+        self.last_chooser
     }
 }
 

@@ -37,6 +37,7 @@ use crate::space::view::SpaceView;
 use crate::space::Neighborhood;
 use crate::strategies::driver::{Ask, DriveCtx, Observation, SearchDriver};
 use crate::surrogate::PoolModel;
+use crate::telemetry::Phase;
 use crate::util::linalg::{mean, std_dev};
 use crate::util::rng::Rng;
 
@@ -177,7 +178,11 @@ impl PoolBoDriver {
         }
         let mu_s = *self.mu_s.get_or_insert_with(|| mean(&self.obs_y));
 
+        let tel = ctx.telemetry();
+        let step_no = ctx.fevals_used();
+        let t_pool = tel.start();
         let pool = self.build_pool(view);
+        tel.span(step_no, Phase::PoolDraw, t_pool, pool.len());
         if pool.is_empty() {
             return Ask::Finished; // valid set exhausted (or sampler dry)
         }
@@ -202,11 +207,10 @@ impl PoolBoDriver {
         }
         let mut mu = vec![0.0; pool.len()];
         let mut var = vec![0.0; pool.len()];
-        if self
-            .model
-            .fit_predict(view, &self.obs_keys, &y_z, &pool, &mut mu, &mut var)
-            .is_err()
-        {
+        let t_fit = tel.start();
+        let fit = self.model.fit_predict(view, &self.obs_keys, &y_z, &pool, &mut mu, &mut var);
+        tel.span(step_no, Phase::Fit, t_fit, self.obs_keys.len());
+        if fit.is_err() {
             // Degenerate fit (singular GP): explore uniformly this step.
             return match self.random_unvisited(view) {
                 Some(k) => Ask::Suggest(vec![k as usize]),
@@ -229,6 +233,7 @@ impl PoolBoDriver {
 
         // Acquisition argmin; strict `<` keeps the first (lowest) key on
         // ties since the pool is in ascending key order.
+        let t_score = tel.start();
         let mut best: Option<(f64, u64)> = None;
         for (j, &k) in pool.iter().enumerate() {
             let s = score(self.acq, mu[j], var[j], f_best_z, lambda);
@@ -236,6 +241,7 @@ impl PoolBoDriver {
                 best = Some((s, k));
             }
         }
+        tel.span(step_no, Phase::Score, t_score, pool.len());
         match best {
             Some((_, k)) => Ask::Suggest(vec![k as usize]),
             None => Ask::Finished,
@@ -377,5 +383,35 @@ mod tests {
             probes < 15 * 32 * 64,
             "per-suggestion probe work must stay bounded by the pool size (got {probes})"
         );
+    }
+
+    /// THE telemetry acceptance invariant, lazy half (the eager half
+    /// lives in `strategies::driver`): for every lazy-capable registry
+    /// strategy, a recording telemetry handle leaves the evaluation
+    /// trace bit-identical to a telemetry-off run.
+    #[test]
+    fn telemetry_on_vs_off_lazy_traces_bit_identical_registry_wide() {
+        use crate::strategies::driver::{drive_with, DriveOpts};
+        use crate::strategies::registry;
+        use crate::telemetry::Telemetry;
+        let view = lazy_view();
+        let obj = SyntheticObjective::new(view.clone(), 42).with_invalid_rate(0.1);
+        for name in registry::lazy_names() {
+            let strat = registry::by_name(name).unwrap();
+            let run = |telemetry: Telemetry| {
+                let mut d = strat.lazy_driver(view.as_ref(), 32).expect("lazy-capable");
+                let mut rng = Rng::new(7);
+                let opts = DriveOpts { telemetry, ..DriveOpts::default() };
+                drive_with(d.as_mut(), &obj, &FevalBudget { max_fevals: 15 }, &mut rng, opts)
+            };
+            let off = run(Telemetry::default());
+            let tel = Telemetry::recording(crate::telemetry::DEFAULT_RING_CAPACITY);
+            let on = run(tel.clone());
+            assert_eq!(
+                off.records, on.records,
+                "{name}: recording telemetry changed the lazy evaluation trace"
+            );
+            assert!(!tel.is_empty(), "{name}: a recording lazy run must capture events");
+        }
     }
 }

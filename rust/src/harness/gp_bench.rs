@@ -15,6 +15,8 @@
 //! - `fused_sharded` — this PR's engine path: pooled shard-parallel add,
 //!   one folded mask+variance pass, and the fused predict+score sweep.
 
+// ktbo-lint: allow-file(no-untracked-clock): standalone bench harness — wall
+// time is informational output here, never on the trace path.
 use std::time::Instant;
 
 use crate::bo::acquisition::{argmin_score, reduce_shard_argmins, score_chunk, var_from_fp};

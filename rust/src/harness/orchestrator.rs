@@ -38,7 +38,7 @@ use std::io::Write as _;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::gpusim::device::Device;
 use crate::gpusim::kernels::kernel_by_name;
@@ -53,6 +53,8 @@ use crate::objective::resilient::{ResilienceConfig, ResilientEvaluator};
 use crate::objective::{Objective, TableObjective};
 use crate::strategies::registry::{by_name, unknown_strategy_message};
 use crate::strategies::Strategy;
+use crate::telemetry::clock::{Clock, MonotonicClock};
+use crate::telemetry::{metrics, EventKind, Telemetry, DEFAULT_RING_CAPACITY};
 use crate::util::json::Json;
 use crate::util::jsonparse;
 use crate::util::pool::{enter_harness_workers, ShardPool};
@@ -109,6 +111,13 @@ pub struct SweepSpec {
     pub eval_timeout_ms: Option<u64>,
     /// Transient-failure retries per evaluation (`--max-retries`).
     pub max_retries: u32,
+    /// Capture per-cell telemetry (`ktbo sweep --telemetry`): phase
+    /// spans and events land in `SWEEP_<tag>.telemetry.jsonl`, tagged
+    /// with cell coordinates. Observation-only — evaluation traces and
+    /// `results.jsonl` are byte-identical with it on or off (asserted in
+    /// tests), which is also why the flag is *not* part of the meta
+    /// record's resume-compatibility check.
+    pub telemetry: bool,
 }
 
 impl SweepSpec {
@@ -118,6 +127,10 @@ impl SweepSpec {
 
     pub fn results_path(&self) -> PathBuf {
         Path::new(&self.out_dir).join(format!("SWEEP_{}.results.jsonl", self.tag))
+    }
+
+    pub fn telemetry_path(&self) -> PathBuf {
+        Path::new(&self.out_dir).join(format!("SWEEP_{}.telemetry.jsonl", self.tag))
     }
 
     /// The CI tier: a seconds-scale matrix that still exercises multiple
@@ -150,6 +163,7 @@ impl SweepSpec {
             fault_strategies: vec!["simulated_annealing".into()],
             eval_timeout_ms: None,
             max_retries: 2,
+            telemetry: false,
         }
     }
 }
@@ -293,7 +307,14 @@ fn meta_record(spec: &SweepSpec) -> Json {
         .set("max_retries", spec.max_retries as usize)
 }
 
-fn cell_record(key: &CellKey, obj_id: &str, base_seed: u64, budget: usize, curve: &[f64]) -> Json {
+fn cell_record(
+    key: &CellKey,
+    obj_id: &str,
+    base_seed: u64,
+    budget: usize,
+    probes: u64,
+    curve: &[f64],
+) -> Json {
     Json::obj()
         .set("type", "cell")
         .set("kernel", key.kernel.as_str())
@@ -304,6 +325,9 @@ fn cell_record(key: &CellKey, obj_id: &str, base_seed: u64, budget: usize, curve
         .set("seed", hex_u64(base_seed))
         .set("stream", hex_u64(cell_stream(obj_id, &key.strategy, key.rep)))
         .set("budget", budget)
+        // Cumulative constraint-oracle probes the cell's view answered
+        // (deterministically 0 for enumerated spaces).
+        .set("probes", probes as usize)
         .set("curve", Json::Arr(curve.iter().map(|&v| Json::Num(v)).collect()))
 }
 
@@ -477,29 +501,50 @@ fn run_sessions(
     pool: &ShardPool,
     completed: &BTreeMap<CellKey, Vec<f64>>,
     log: Option<&SweepLog>,
-) -> Vec<CellResult> {
+    telemetry: bool,
+) -> Vec<(CellResult, Vec<String>)> {
     // Nested consumers (the BO engine's auto thread mode) divide the
     // machine by the session workers running above them.
     let _scope = enter_harness_workers(pool.threads());
-    let mut slots: Vec<Option<CellResult>> =
-        jobs.iter().map(|j| completed.get(&j.key).cloned().map(CellResult::Done)).collect();
+    let mut slots: Vec<Option<(CellResult, Vec<String>)>> = jobs
+        .iter()
+        .map(|j| completed.get(&j.key).cloned().map(|c| (CellResult::Done(c), Vec::new())))
+        .collect();
     let batch: Vec<Box<dyn FnOnce() + Send + '_>> = slots
         .iter_mut()
         .zip(jobs)
         .filter(|(slot, _)| slot.is_none())
         .map(|(slot, job)| {
             Box::new(move || {
+                let tel = if telemetry {
+                    Telemetry::recording(DEFAULT_RING_CAPACITY)
+                } else {
+                    Telemetry::default()
+                };
                 let run = catch_unwind(AssertUnwindSafe(|| {
                     let mut rng =
                         cell_rng(base_seed, &job.obj_id, &job.key.strategy, job.key.rep);
-                    let trace = job.strategy_impl.run(job.eval_obj.as_ref(), budget, &mut rng);
+                    let trace = job.strategy_impl.run_with(
+                        job.eval_obj.as_ref(),
+                        budget,
+                        &mut rng,
+                        tel.clone(),
+                    );
                     trace.best_curve()
                 }));
                 *slot = Some(match run {
                     Ok(curve) => {
+                        let probes = job.eval_obj.view().probe_count();
+                        if tel.enabled() {
+                            tel.record(curve.len(), EventKind::Probes { total: probes });
+                            if let Some(r) = &job.resilient {
+                                tel.record(curve.len(), EventKind::Resilience(r.stats()));
+                            }
+                        }
                         if let Some(log) = log {
-                            let mut rec =
-                                cell_record(&job.key, &job.obj_id, base_seed, budget, &curve);
+                            let mut rec = cell_record(
+                                &job.key, &job.obj_id, base_seed, budget, probes, &curve,
+                            );
                             if let (Some(f), Some(r)) = (&job.faulty, &job.resilient) {
                                 rec = rec.set(
                                     "faults",
@@ -510,7 +555,18 @@ fn run_sessions(
                             }
                             log.append(&rec);
                         }
-                        CellResult::Done(curve)
+                        let lines = if tel.enabled() {
+                            let key = &job.key;
+                            tel.export_lines(|j| {
+                                j.set("kernel", key.kernel.as_str())
+                                    .set("gpu", key.gpu.as_str())
+                                    .set("strategy", key.strategy.as_str())
+                                    .set("rep", key.rep)
+                            })
+                        } else {
+                            Vec::new()
+                        };
+                        (CellResult::Done(curve), lines)
                     }
                     Err(payload) => {
                         let msg = panic_message(payload.as_ref());
@@ -519,7 +575,7 @@ fn run_sessions(
                                 &job.key, &job.obj_id, base_seed, budget, &msg,
                             ));
                         }
-                        CellResult::Failed(msg)
+                        (CellResult::Failed(msg), Vec::new())
                     }
                 });
             }) as Box<dyn FnOnce() + Send + '_>
@@ -608,12 +664,12 @@ pub fn orchestrate_comparison(
         eval: Arc::clone(obj) as Arc<dyn Objective>,
     }];
     let (jobs, coords) = build_session_jobs(&entries, strategies, repeat_scale);
-    let results = run_sessions(&jobs, budget, base_seed, pool, &BTreeMap::new(), None);
+    let results = run_sessions(&jobs, budget, base_seed, pool, &BTreeMap::new(), None, false);
 
     let global_min = obj.known_minimum().expect("table objective knows its minimum");
     let fallback = fallback_value(obj);
     let mut grouped: Vec<Vec<Vec<f64>>> = strategies.iter().map(|_| Vec::new()).collect();
-    for ((_oi, si), result) in coords.into_iter().zip(results) {
+    for ((_oi, si), (result, _tel)) in coords.into_iter().zip(results) {
         match result {
             // Job order is rep-ascending per strategy.
             CellResult::Done(curve) => grouped[si].push(curve),
@@ -787,7 +843,8 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     }
     std::fs::create_dir_all(&spec.out_dir).map_err(|e| format!("create {}: {e}", spec.out_dir))?;
 
-    let t0 = Instant::now();
+    let wall_clock = MonotonicClock::new();
+    let t0_ns = wall_clock.now_ns();
 
     // One objective per (kernel, gpu); sessions share it through an Arc,
     // optionally behind the cross-session eval cache. `tables` keeps the
@@ -901,7 +958,15 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     let total_cells = jobs.len();
 
     let pool = ShardPool::new(spec.threads);
-    let results = run_sessions(&jobs, spec.budget, spec.seed, &pool, &completed, Some(&log));
+    let results = run_sessions(
+        &jobs,
+        spec.budget,
+        spec.seed,
+        &pool,
+        &completed,
+        Some(&log),
+        spec.telemetry,
+    );
     if let Some(e) = log.take_error() {
         // The cells ran, but the resume log lost records (disk full,
         // unwritable dir): reporting success would let a later resume
@@ -920,11 +985,33 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         .map(|_| strategies.iter().map(|_| Vec::new()).collect())
         .collect();
     let mut failed_cells: Vec<(CellKey, String)> = Vec::new();
-    for (((oi, si), result), job) in coords.into_iter().zip(results).zip(&jobs) {
+    let mut tel_lines: Vec<String> = Vec::new();
+    for (((oi, si), (result, cell_tel)), job) in coords.into_iter().zip(results).zip(&jobs) {
+        tel_lines.extend(cell_tel);
         match result {
             CellResult::Done(curve) => grouped[oi][si].push(curve),
             CellResult::Failed(msg) => failed_cells.push((job.key.clone(), msg)),
         }
+    }
+    metrics::global().counter(
+        "sweep.cells.completed",
+        (total_cells - resumed_cells - failed_cells.len()) as u64,
+    );
+    metrics::global().counter("sweep.cells.failed", failed_cells.len() as u64);
+
+    // Telemetry export: meta line plus every cell's tagged events, in
+    // deterministic jobs order (rewritten whole each run — events from
+    // cells resumed out of the progress file were never re-captured).
+    if spec.telemetry {
+        let tel_path = spec.telemetry_path();
+        let mut text = crate::telemetry::meta_record().render();
+        text.push('\n');
+        for line in &tel_lines {
+            text.push_str(line);
+            text.push('\n');
+        }
+        std::fs::write(&tel_path, &text)
+            .map_err(|e| format!("write {}: {e}", tel_path.display()))?;
     }
     let outcomes: Vec<((String, String), Vec<StrategyOutcome>)> = objectives
         .iter()
@@ -945,7 +1032,7 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
 
     let cache_stats = cache.stats();
     let (cache_hits, cache_misses) = (cache_stats.hits, cache_stats.misses);
-    let wall_s = t0.elapsed().as_secs_f64();
+    let wall_s = wall_clock.seconds_since(t0_ns);
 
     // Machine-readable aggregates (rewritten whole each run).
     let results_path = spec.results_path();
@@ -1045,6 +1132,14 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     }
     let _ = writeln!(summary, "progress: {}", progress_path.display());
     let _ = writeln!(summary, "results:  {}", results_path.display());
+    if spec.telemetry {
+        let _ = writeln!(
+            summary,
+            "telemetry: {} ({} events; render with `ktbo report`)",
+            spec.telemetry_path().display(),
+            tel_lines.len()
+        );
+    }
 
     Ok(SweepReport {
         outcomes,
@@ -1087,6 +1182,7 @@ mod tests {
             fault_strategies: vec![],
             eval_timeout_ms: None,
             max_retries: 0,
+            telemetry: false,
         }
     }
 
@@ -1481,7 +1577,7 @@ mod tests {
             rep: 0,
         };
         let curve = vec![f64::INFINITY, f64::INFINITY, 3.25, 1.0 / 3.0];
-        let line = cell_record(&key, "k@g", 7, 4, &curve).render();
+        let line = cell_record(&key, "k@g", 7, 4, 0, &curve).render();
         let parsed = jsonparse::parse(&line).unwrap();
         let back: Vec<f64> = parsed
             .get("curve")
@@ -1497,6 +1593,61 @@ mod tests {
         assert!(back[0].is_infinite() && back[1].is_infinite());
         assert_eq!(back[2].to_bits(), curve[2].to_bits());
         assert_eq!(back[3].to_bits(), curve[3].to_bits(), "shortest-repr floats round-trip exactly");
+    }
+
+    /// Satellite regression: the cell-record byte layout is a
+    /// resume-compat surface. `"probes"` is the only field the telemetry
+    /// work added, and it sits between `"budget"` and `"curve"`; every
+    /// other byte must match the pre-telemetry layout exactly.
+    #[test]
+    fn cell_record_field_layout_is_pinned() {
+        let key = CellKey { kernel: "k".into(), gpu: "g".into(), strategy: "s".into(), rep: 2 };
+        let line = cell_record(&key, "k@g", 7, 4, 0, &[1.0, 0.5]).render();
+        let expected = format!(
+            "{{\"type\":\"cell\",\"kernel\":\"k\",\"gpu\":\"g\",\"strategy\":\"s\",\
+             \"rep\":2,\"objective\":\"k@g\",\"seed\":\"{}\",\"stream\":\"{}\",\
+             \"budget\":4,\"probes\":0,\"curve\":[1,0.5]}}",
+            hex_u64(7),
+            hex_u64(cell_stream("k@g", "s", 2)),
+        );
+        assert_eq!(line, expected, "cell-record byte layout drifted");
+    }
+
+    /// Tentpole acceptance: telemetry is strictly observational at the
+    /// sweep level too — `results.jsonl` and every progress record are
+    /// byte-identical with recording on or off, the telemetry export is
+    /// non-empty and schema-versioned, and `ktbo report` renders it.
+    #[test]
+    fn sweep_telemetry_on_vs_off_results_are_byte_identical() {
+        let mut artifacts = Vec::new();
+        for (run, telemetry) in [("off", false), ("on", true)] {
+            let mut spec = small_spec(&format!("ktbo-orch-tel-{run}"), "tel");
+            spec.threads = 2;
+            spec.telemetry = telemetry;
+            let report = sweep(&spec).unwrap();
+            let results = std::fs::read_to_string(spec.results_path()).unwrap();
+            let progress = std::fs::read_to_string(spec.progress_path()).unwrap();
+            artifacts.push((results, progress, report.summary, spec));
+        }
+        assert_eq!(artifacts[0].0, artifacts[1].0, "results.jsonl must not see telemetry");
+        assert_eq!(artifacts[0].1, artifacts[1].1, "progress records must not see telemetry");
+        assert!(
+            !artifacts[0].2.contains("telemetry:"),
+            "summary must not mention telemetry when off"
+        );
+        assert!(artifacts[1].2.contains("telemetry:"), "summary must point at the export");
+
+        let tel_path = artifacts[1].3.telemetry_path();
+        let text = std::fs::read_to_string(&tel_path).unwrap();
+        let head = text.lines().next().expect("telemetry export must be non-empty");
+        assert!(
+            head.contains("\"schema_version\"") && head.contains("\"telemetry\""),
+            "export must open with the versioned meta record, got: {head}"
+        );
+        assert!(text.lines().count() > 1, "export must carry events, not just the meta line");
+        let rendered = crate::telemetry::report::render(&text).expect("report renders the export");
+        assert!(rendered.contains("adding/a100/random#0"), "per-cell section missing:\n{rendered}");
+        assert!(rendered.contains("ask"), "phase breakdown missing:\n{rendered}");
     }
 
     /// Tentpole acceptance: a crashing cell is isolated — listed in the

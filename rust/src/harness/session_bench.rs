@@ -17,6 +17,8 @@
 //!   response render) without socket noise.
 
 use std::sync::Arc;
+// ktbo-lint: allow-file(no-untracked-clock): standalone bench harness — wall
+// time is informational output here, never on the trace path.
 use std::time::Instant;
 
 use crate::gpusim::device::Device;

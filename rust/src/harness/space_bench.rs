@@ -15,6 +15,8 @@
 //!   restriction keeps ~207k configs, the 200k-candidate scale the
 //!   gp_hotpath bench and the ROADMAP's sweep scenarios target.
 
+// ktbo-lint: allow-file(no-untracked-clock): standalone bench harness — wall
+// time is informational output here, never on the trace path.
 use std::time::Instant;
 
 use crate::gpusim::device::Device;

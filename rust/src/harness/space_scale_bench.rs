@@ -19,6 +19,8 @@
 //! silently rot.
 
 use std::sync::Arc;
+// ktbo-lint: allow-file(no-untracked-clock): standalone bench harness — wall
+// time is informational output here, never on the trace path.
 use std::time::Instant;
 
 use crate::objective::synthetic::SyntheticObjective;

@@ -16,6 +16,8 @@
 //! per-iteration workload each surrogate adds to a BO run. Models: the
 //! incremental GP adapter, random forest, extra trees, and TPE.
 
+// ktbo-lint: allow-file(no-untracked-clock): standalone bench harness — wall
+// time is informational output here, never on the trace path.
 use std::time::Instant;
 
 use crate::gp::DEFAULT_SHARD_LEN;

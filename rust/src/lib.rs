@@ -33,4 +33,7 @@ pub mod strategies;
 /// Pluggable surrogate-model subsystem: the batch `Model` trait with GP,
 /// tree-ensemble (random forest / extra trees), and TPE implementations.
 pub mod surrogate;
+/// Determinism-safe instrumentation: the injectable `Clock`, per-session
+/// span tracing, the metrics registry, and `ktbo report` rendering.
+pub mod telemetry;
 pub mod util;

@@ -18,7 +18,9 @@ use ktbo::harness::Options;
 use ktbo::objective::Objective;
 use ktbo::serve::SessionConfig;
 use ktbo::strategies::registry::{all_names, by_name};
-use ktbo::strategies::{FevalBudget, Session, Strategy};
+use ktbo::strategies::{FevalBudget, Session, SessionOpts, SessionTarget, Strategy};
+use ktbo::telemetry::clock::{Clock, MonotonicClock};
+use ktbo::telemetry::Telemetry;
 use ktbo::util::cli::Args;
 use ktbo::util::rng::Rng;
 
@@ -31,6 +33,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "report" => cmd_report(&args),
         "experiment" => cmd_experiment(&args),
         "hypertune" => cmd_hypertune(&args),
         _ => usage(),
@@ -50,15 +53,20 @@ fn usage() {
     println!("                 Cartesian product exceeds 2^24 configs; lazy-capable strategies:");
     println!("                 {}", ktbo::strategies::registry::lazy_names().join(" "));
     println!("             [--eval-timeout-ms N] [--max-retries N] [--fault-plan FILE.json]");
+    println!("             [--telemetry FILE.jsonl]   export the session's phase spans and events");
     println!("  ktbo sweep [--kernels a,b] [--gpus a,b] [--strategies a,b] [--smoke]");
     println!("             [--budget N] [--repeat-scale F] [--seed N] [--threads N]");
     println!("             [--out DIR] [--tag NAME] [--no-cache] [--fresh] [--space FILE.json]");
     println!("             [--eval-timeout-ms N] [--max-retries N]");
     println!("             [--fault-plan FILE.json] [--fault-strategies a,b]   deterministic fault injection");
+    println!("             [--telemetry]   also write SWEEP_<tag>.telemetry.jsonl (phase spans + events;");
+    println!("                             observation-only: results are byte-identical either way)");
     println!("  ktbo serve [--listen ADDR:PORT] [--cache-file FILE.jsonl] [--cache-capacity N]");
     println!("             [--checkpoint-dir DIR]   tuning daemon (JSON lines over TCP)");
     println!("  ktbo client [--addr ADDR:PORT] [--sessions N] [--kernel K] [--gpu G] [--resume]");
     println!("             [--strategy NAME] [--budget N] [--seed N] [--shutdown]");
+    println!("             [--metrics]   query the daemon's metrics snapshot instead of tuning");
+    println!("  ktbo report <telemetry.jsonl>   render per-phase timings and time-to-solution curves");
     println!("  ktbo experiment <fig1..fig7|table1..table3|headline|ablation|extended|noise|all>");
     println!("  ktbo hypertune [--repeat-scale F] [--top N]");
     println!("                  [--repeat-scale F] [--seed N] [--threads N] [--out DIR]");
@@ -112,6 +120,7 @@ fn cmd_sweep(args: &Args) {
             fault_strategies: vec![],
             eval_timeout_ms: None,
             max_retries: 0,
+            telemetry: false,
         }
     };
     let list = |key: &str, default: &[String]| -> Vec<String> {
@@ -173,6 +182,7 @@ fn cmd_sweep(args: &Args) {
             })
             .or(base.eval_timeout_ms),
         max_retries: args.usize_or("max-retries", base.max_retries as usize) as u32,
+        telemetry: args.flag("telemetry"),
     };
     match sweep(&spec) {
         Ok(report) => {
@@ -245,7 +255,7 @@ fn cmd_tune(args: &Args) {
                 None => spec.cartesian_size() > LAZY_CUTOFF,
             };
             if go_lazy {
-                cmd_tune_lazy(&cfg, &spec, &path);
+                cmd_tune_lazy(args, &cfg, &spec, &path);
                 return;
             }
         } else if cfg.lazy_space == Some(true) {
@@ -309,16 +319,22 @@ fn cmd_tune(args: &Args) {
         by_name(&cfg.strategy).expect("validated strategy name")
     };
 
-    let t0 = std::time::Instant::now();
-    let mut session = Session::new(
+    let (telemetry, tel_path) = telemetry_from_args(args);
+    let clock = MonotonicClock::new();
+    let t0_ns = clock.now_ns();
+    let mut session = Session::build(
         strategy.driver(built.run.space()),
-        std::sync::Arc::clone(&built.run),
+        SessionTarget::Objective(std::sync::Arc::clone(&built.run)),
         Box::new(FevalBudget::new(cfg.budget)),
         Rng::new(cfg.seed),
+        SessionOpts { telemetry: telemetry.clone(), ..SessionOpts::default() },
     );
     while session.step() {}
     let trace = session.into_trace();
-    let elapsed = t0.elapsed();
+    let elapsed = std::time::Duration::from_nanos(clock.now_ns().saturating_sub(t0_ns));
+    if let Some(path) = &tel_path {
+        write_session_telemetry(path, &telemetry);
+    }
     if let Some(f) = &built.faulty {
         println!("faults injected: {}", f.stats().to_json().render());
     }
@@ -341,13 +357,41 @@ fn cmd_tune(args: &Args) {
     }
 }
 
+/// Resolve `--telemetry [FILE.jsonl]` into a recording (or disabled)
+/// handle plus the export path. Recording is observational — the trace
+/// is bit-identical with or without it.
+fn telemetry_from_args(args: &Args) -> (Telemetry, Option<String>) {
+    match args.get("telemetry") {
+        Some(v) => {
+            let path = if v == "true" { "telemetry.jsonl".to_string() } else { v.to_string() };
+            (Telemetry::recording(ktbo::telemetry::DEFAULT_RING_CAPACITY), Some(path))
+        }
+        None => (Telemetry::default(), None),
+    }
+}
+
+/// Write a session's telemetry ring as a versioned JSONL export
+/// (`ktbo report` renders it).
+fn write_session_telemetry(path: &str, tel: &Telemetry) {
+    let mut text = ktbo::telemetry::meta_record().render();
+    text.push('\n');
+    for line in tel.export_lines(|j| j) {
+        text.push_str(&line);
+        text.push('\n');
+    }
+    match std::fs::write(path, &text) {
+        Ok(()) => println!("telemetry: {path} (render with `ktbo report {path}`)"),
+        Err(e) => eprintln!("cannot write telemetry {path}: {e}"),
+    }
+}
+
 /// The implicit-space tune path: a [`LazyView`] constraint oracle plus
 /// the deterministic synthetic objective, driven through the same
 /// `Session` loop as eager runs. Never enumerates the space and never
 /// builds tiles — per-suggestion work is bounded by the candidate pool.
 ///
 /// [`LazyView`]: ktbo::space::view::LazyView
-fn cmd_tune_lazy(cfg: &SessionConfig, spec: &ktbo::space::SpaceSpec, path: &str) {
+fn cmd_tune_lazy(args: &Args, cfg: &SessionConfig, spec: &ktbo::space::SpaceSpec, path: &str) {
     use ktbo::objective::synthetic::SyntheticObjective;
     use ktbo::space::view::{LazyView, SpaceView};
 
@@ -382,12 +426,22 @@ fn cmd_tune_lazy(cfg: &SessionConfig, spec: &ktbo::space::SpaceSpec, path: &str)
     let obj: std::sync::Arc<dyn Objective> =
         std::sync::Arc::new(SyntheticObjective::new(std::sync::Arc::clone(&view), salt));
 
-    let t0 = std::time::Instant::now();
-    let mut session =
-        Session::new(driver, obj, Box::new(FevalBudget::new(cfg.budget)), Rng::new(cfg.seed));
+    let (telemetry, tel_path) = telemetry_from_args(args);
+    let clock = MonotonicClock::new();
+    let t0_ns = clock.now_ns();
+    let mut session = Session::build(
+        driver,
+        SessionTarget::Objective(obj),
+        Box::new(FevalBudget::new(cfg.budget)),
+        Rng::new(cfg.seed),
+        SessionOpts { telemetry: telemetry.clone(), ..SessionOpts::default() },
+    );
     while session.step() {}
     let trace = session.into_trace();
-    let elapsed = t0.elapsed();
+    let elapsed = std::time::Duration::from_nanos(clock.now_ns().saturating_sub(t0_ns));
+    if let Some(p) = &tel_path {
+        write_session_telemetry(p, &telemetry);
+    }
     match trace.best() {
         Some((idx, val)) => {
             println!(
@@ -444,8 +498,27 @@ fn cmd_serve(args: &Args) {
 /// mode). In simulation mode the result is bit-identical to `ktbo tune`
 /// with the same kernel/gpu/strategy/budget/seed.
 fn cmd_client(args: &Args) {
-    use ktbo::serve::client::{run_session, TcpLine};
+    use ktbo::serve::client::{run_session, LineTransport, TcpLine};
     let addr = args.str_or("addr", "127.0.0.1:4276");
+    // `--metrics`: one-shot query of the daemon's metrics snapshot, no
+    // tuning session.
+    if args.flag("metrics") {
+        let mut transport = TcpLine::connect(&addr).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        match transport.round_trip(r#"{"cmd":"metrics"}"#) {
+            Ok(resp) => println!("{resp}"),
+            Err(e) => {
+                eprintln!("metrics query failed: {e}");
+                std::process::exit(2);
+            }
+        }
+        if args.flag("shutdown") {
+            let _ = transport.round_trip(r#"{"cmd":"shutdown"}"#);
+        }
+        return;
+    }
     let kernel = args.str_or("kernel", "gemm");
     let gpu = args.str_or("gpu", "titanx");
     let cfg = SessionConfig::from_args(args, &kernel, &gpu).unwrap_or_else(|e| {
@@ -479,8 +552,28 @@ fn cmd_client(args: &Args) {
         }
     }
     if args.flag("shutdown") {
-        use ktbo::serve::client::LineTransport;
         let _ = transport.round_trip(r#"{"cmd":"shutdown"}"#);
+    }
+}
+
+/// `ktbo report <telemetry.jsonl>`: human-readable per-phase timings,
+/// counters, and time-to-solution milestones from a telemetry export
+/// (written by `ktbo sweep --telemetry` or `ktbo tune --telemetry`).
+fn cmd_report(args: &Args) {
+    let Some(path) = args.positionals.get(1) else {
+        eprintln!("usage: ktbo report <telemetry.jsonl>");
+        std::process::exit(2);
+    };
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("cannot read {path}: {e}");
+        std::process::exit(2);
+    });
+    match ktbo::telemetry::report::render(&text) {
+        Ok(rendered) => println!("{rendered}"),
+        Err(e) => {
+            eprintln!("report failed: {e}");
+            std::process::exit(2);
+        }
     }
 }
 
@@ -518,8 +611,9 @@ fn cmd_experiment(args: &Args) {
         out_dir: args.str_or("out", "results"),
     };
     std::fs::create_dir_all(&opts.out_dir).expect("create out dir");
+    let clock = MonotonicClock::new();
     let run_one = |id: &str| -> Option<String> {
-        let t0 = std::time::Instant::now();
+        let t0_ns = clock.now_ns();
         let r = match id {
             "fig1" => Some(figs::fig1(&opts)),
             "fig2" => Some(figs::fig2(&opts)),
@@ -537,7 +631,10 @@ fn cmd_experiment(args: &Args) {
             "noise" => Some(figs::noise(&opts)),
             _ => None,
         };
-        r.map(|s| format!("{s}\n[{id} took {:.1?}]\n", t0.elapsed()))
+        r.map(|s| {
+            let took = std::time::Duration::from_nanos(clock.now_ns().saturating_sub(t0_ns));
+            format!("{s}\n[{id} took {took:.1?}]\n")
+        })
     };
     if id == "all" {
         for id in [

@@ -13,6 +13,7 @@
 //! {"cmd":"resume","session":"s1","checkpoint":{...}}
 //! {"cmd":"close","session":"s1"}
 //! {"cmd":"status"}
+//! {"cmd":"metrics"}
 //! {"cmd":"shutdown"}
 //! ```
 //!
@@ -36,7 +37,27 @@ pub enum Request {
     Resume { session: String, checkpoint: Option<Json> },
     Close { session: String },
     Status,
+    /// Snapshot of the daemon's owned metrics registry (per-verb request
+    /// counters, error and session tallies).
+    Metrics,
     Shutdown,
+}
+
+impl Request {
+    /// The wire verb, for per-verb request counters.
+    pub fn verb(&self) -> &'static str {
+        match self {
+            Request::Create { .. } => "create",
+            Request::Ask { .. } => "ask",
+            Request::Tell { .. } => "tell",
+            Request::Checkpoint { .. } => "checkpoint",
+            Request::Resume { .. } => "resume",
+            Request::Close { .. } => "close",
+            Request::Status => "status",
+            Request::Metrics => "metrics",
+            Request::Shutdown => "shutdown",
+        }
+    }
 }
 
 /// Parse one request line.
@@ -79,9 +100,10 @@ pub fn parse(line: &str) -> Result<Request, String> {
         }
         "close" => Ok(Request::Close { session: session()? }),
         "status" => Ok(Request::Status),
+        "metrics" => Ok(Request::Metrics),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(format!(
-            "unknown command '{other}' (expected create/ask/tell/checkpoint/resume/close/status/shutdown)"
+            "unknown command '{other}' (expected create/ask/tell/checkpoint/resume/close/status/metrics/shutdown)"
         )),
     }
 }
@@ -119,6 +141,8 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert!(matches!(parse(r#"{"cmd":"status"}"#).unwrap(), Request::Status));
+        assert!(matches!(parse(r#"{"cmd":"metrics"}"#).unwrap(), Request::Metrics));
+        assert_eq!(parse(r#"{"cmd":"metrics"}"#).unwrap().verb(), "metrics");
         assert!(matches!(parse(r#"{"cmd":"shutdown"}"#).unwrap(), Request::Shutdown));
         assert!(matches!(
             parse(r#"{"cmd":"resume","session":"s"}"#).unwrap(),

@@ -18,7 +18,7 @@
 //! rebuilds each session from its checkpoint by trace replay and the
 //! cache warm-starts from its journal.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -26,6 +26,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
+use crate::harness::runner::objective_id;
 use crate::objective::evalcache::{EvalCache, RunMemo};
 use crate::serve::checkpoint::SessionCheckpoint;
 use crate::serve::config::SessionConfig;
@@ -33,6 +34,7 @@ use crate::serve::protocol::{self, Request};
 use crate::space::SearchSpace;
 use crate::strategies::registry::{by_name, unknown_strategy_message};
 use crate::strategies::{FevalBudget, Session, SessionNeed, SessionOpts, SessionTarget, Trace};
+use crate::telemetry::metrics::MetricsRegistry;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -64,6 +66,15 @@ pub struct TuningServer {
     /// (kernel, gpu, space-file) triple — thousands of sessions on one
     /// kernel share one space instead of re-enumerating it per `create`.
     spaces: Mutex<BTreeMap<String, (Arc<SearchSpace>, String)>>,
+    /// Every objective id a `create`/`resume` has named — including ones
+    /// whose create was *refused* (e.g. lazy-mode configs) — so `status`
+    /// reports per-objective cache stats uniformly, zeros included,
+    /// instead of only the objectives the cache happened to touch.
+    tracked_objectives: Mutex<BTreeSet<String>>,
+    /// Owned registry (not [`crate::telemetry::metrics::global`]): the
+    /// `metrics` verb reports *this daemon's* traffic, and parallel test
+    /// servers don't bleed counts into each other.
+    metrics: MetricsRegistry,
     shutdown: AtomicBool,
 }
 
@@ -91,6 +102,8 @@ impl TuningServer {
             cache: Arc::new(cache),
             sessions: Mutex::new(BTreeMap::new()),
             spaces: Mutex::new(BTreeMap::new()),
+            tracked_objectives: Mutex::new(BTreeSet::new()),
+            metrics: MetricsRegistry::new(),
             shutdown: AtomicBool::new(false),
         })
     }
@@ -108,11 +121,21 @@ impl TuningServer {
     /// `{"ok":false,"error":...}`.
     pub fn handle_line(&self, line: &str) -> String {
         match protocol::parse(line) {
-            Ok(req) => match self.handle(req) {
-                Ok(resp) => resp.render(),
-                Err(e) => protocol::err(&e),
-            },
-            Err(e) => protocol::err(&e),
+            Ok(req) => {
+                self.metrics.counter(&format!("serve.requests.{}", req.verb()), 1);
+                match self.handle(req) {
+                    Ok(resp) => resp.render(),
+                    Err(e) => {
+                        self.metrics.counter("serve.errors", 1);
+                        protocol::err(&e)
+                    }
+                }
+            }
+            Err(e) => {
+                self.metrics.counter("serve.requests.invalid", 1);
+                self.metrics.counter("serve.errors", 1);
+                protocol::err(&e)
+            }
         }
     }
 
@@ -177,6 +200,7 @@ impl TuningServer {
                 Ok(done_response(&slot).set("closed", true))
             }
             Request::Status => Ok(self.status()),
+            Request::Metrics => Ok(protocol::ok().set("metrics", self.metrics.snapshot())),
             Request::Shutdown => {
                 self.shutdown.store(true, Ordering::SeqCst);
                 Ok(protocol::ok().set("shutting_down", true))
@@ -199,21 +223,36 @@ impl TuningServer {
                 "session name '{name}' is invalid (use letters, digits, '.', '_', '-')"
             ));
         }
-        let (space, obj_id) = {
+        let built = {
             // Building a space enumerates the full restricted Cartesian
             // product, so it happens once per distinct triple; holding the
             // lock across the build just serializes the rare cold creates.
             let key = format!("{}|{}|{}", cfg.kernel, cfg.gpu, cfg.space.as_deref().unwrap_or(""));
             let mut spaces = relock(&self.spaces);
             match spaces.get(&key) {
-                Some((space, obj_id)) => (Arc::clone(space), obj_id.clone()),
-                None => {
-                    let (space, obj_id) = cfg.build_space()?;
+                Some((space, obj_id)) => Ok((Arc::clone(space), obj_id.clone())),
+                None => cfg.build_space().map(|(space, obj_id)| {
                     spaces.insert(key, (Arc::clone(&space), obj_id.clone()));
                     (space, obj_id)
-                }
+                }),
             }
         };
+        let (space, obj_id) = match built {
+            Ok(v) => v,
+            Err(e) => {
+                // A refused create (the daemon is eager-only, so a
+                // lazy-mode config lands here) still registers the
+                // objective it named: `status` then reports its cache
+                // stats — zeros — uniformly with live sessions. The base
+                // id is used because a refusal happens before any space
+                // file is loaded.
+                if let Ok(dev) = cfg.device() {
+                    self.track_objective(objective_id(&cfg.kernel, dev.name));
+                }
+                return Err(e);
+            }
+        };
+        self.track_objective(obj_id.clone());
         // `validate` already canonicalized the name, but the daemon never
         // trusts that enough to panic on wire-derived data.
         let driver = by_name(&cfg.strategy)
@@ -247,7 +286,12 @@ impl TuningServer {
             None => resp,
         };
         sessions.insert(name.to_string(), Arc::new(Mutex::new(slot)));
+        self.metrics.counter("serve.sessions.created", 1);
         Ok(resp)
+    }
+
+    fn track_objective(&self, id: String) {
+        relock(&self.tracked_objectives).insert(id);
     }
 
     fn with_slot<F>(&self, name: &str, f: F) -> Result<Json, String>
@@ -262,14 +306,24 @@ impl TuningServer {
         f(&mut slot)
     }
 
-    /// The `status` response: live-session count plus global and
-    /// per-objective cache effectiveness.
+    /// The `status` response: live-session count, global and
+    /// per-objective cache effectiveness, and a folded metrics summary.
+    ///
+    /// The per-objective section is the *union* of objectives any create
+    /// named (refused ones included) and objectives the cache has seen,
+    /// in name order; ids without cache activity report zeros rather
+    /// than disappearing, so clients can poll one shape uniformly.
     fn status(&self) -> Json {
         let s = self.cache.stats();
+        let mut ids: BTreeSet<String> = relock(&self.tracked_objectives).clone();
+        for (id, _) in self.cache.objective_stats() {
+            ids.insert(id);
+        }
         let mut per_obj = Json::obj();
-        for (id, os) in self.cache.objective_stats() {
+        for id in &ids {
+            let os = self.cache.stats_for(id).unwrap_or_default();
             per_obj = per_obj.set(
-                &id,
+                id,
                 Json::obj()
                     .set("hits", os.hits as usize)
                     .set("misses", os.misses as usize)
@@ -287,6 +341,16 @@ impl TuningServer {
                     .set("evictions", s.evictions as usize),
             )
             .set("objectives", per_obj)
+            .set(
+                "metrics",
+                Json::obj()
+                    .set("requests", self.metrics.counter_sum("serve.requests.") as usize)
+                    .set("errors", self.metrics.counter_value("serve.errors") as usize)
+                    .set(
+                        "sessions_created",
+                        self.metrics.counter_value("serve.sessions.created") as usize,
+                    ),
+            )
     }
 
     /// Accept loop: thread-per-connection, JSON lines in, JSON lines out.
@@ -440,6 +504,58 @@ mod tests {
         let per_obj = s.get("objectives").unwrap();
         let adding = per_obj.get("adding@A100").expect("per-objective stats present");
         assert_eq!(adding.get("misses").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn status_includes_refused_lazy_creates_with_zero_cache_stats() {
+        // Satellite: the per-objective section is uniform — a create the
+        // daemon refused (lazy mode is eager-only) still registers its
+        // objective, reported with zero stats, alongside live sessions.
+        let srv = server();
+        let refused = req(
+            &srv,
+            r#"{"cmd":"create","session":"lz","config":{"kernel":"gemm","gpu":"a100","strategy":"tpe","budget":5,"seed":"0x7","lazy_space":true}}"#,
+        );
+        assert!(!ok(&refused), "{refused:?}");
+        assert!(refused.get("error").and_then(Json::as_str).unwrap().contains("eager-only"));
+        assert!(ok(&req(&srv, CREATE)));
+        let s = req(&srv, r#"{"cmd":"status"}"#);
+        assert_eq!(s.get("sessions").and_then(Json::as_f64), Some(1.0), "{s:?}");
+        let per_obj = s.get("objectives").unwrap();
+        let refused_obj = per_obj.get("gemm@A100").expect("refused objective still listed");
+        for field in ["hits", "misses", "evictions"] {
+            assert_eq!(refused_obj.get(field).and_then(Json::as_f64), Some(0.0), "{field}");
+        }
+        assert!(per_obj.get("adding@A100").is_some(), "live session's objective listed");
+    }
+
+    #[test]
+    fn metrics_verb_reports_per_verb_counters_and_status_folds_them() {
+        let srv = server();
+        assert!(ok(&req(&srv, CREATE)));
+        assert!(!ok(&req(&srv, r#"{"cmd":"ask","session":"ghost"}"#)));
+        assert!(!ok(&req(&srv, "not json")));
+        let m = req(&srv, r#"{"cmd":"metrics"}"#);
+        assert!(ok(&m), "{m:?}");
+        let snap = m.get("metrics").expect("metrics snapshot present");
+        let counter = |name: &str| {
+            snap.get(name)
+                .and_then(|c| c.get("value"))
+                .and_then(Json::as_f64)
+                .unwrap_or_default()
+        };
+        assert_eq!(counter("serve.requests.create"), 1.0, "{snap:?}");
+        assert_eq!(counter("serve.requests.ask"), 1.0);
+        assert_eq!(counter("serve.requests.invalid"), 1.0);
+        assert_eq!(counter("serve.requests.metrics"), 1.0);
+        assert_eq!(counter("serve.errors"), 2.0, "ghost ask + malformed line");
+        assert_eq!(counter("serve.sessions.created"), 1.0);
+        let s = req(&srv, r#"{"cmd":"status"}"#);
+        let folded = s.get("metrics").expect("status folds a metrics summary");
+        // create + ask + invalid + metrics + this status = 5 requests.
+        assert_eq!(folded.get("requests").and_then(Json::as_f64), Some(5.0), "{folded:?}");
+        assert_eq!(folded.get("errors").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(folded.get("sessions_created").and_then(Json::as_f64), Some(1.0));
     }
 
     #[test]

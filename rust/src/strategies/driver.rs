@@ -98,13 +98,15 @@
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::objective::evalcache::RunMemo;
 use crate::objective::{Eval, Objective};
 use crate::space::view::SpaceView;
 use crate::space::SearchSpace;
 use crate::strategies::{Trace, OUT_OF_SPACE};
+use crate::telemetry::clock::{Clock, MonotonicClock};
+use crate::telemetry::{EventKind, Phase, Telemetry};
 use crate::util::pool::ShardPool;
 use crate::util::rng::Rng;
 
@@ -142,6 +144,10 @@ pub struct DriveCtx<'a> {
     trace: &'a Trace,
     memo: &'a RunMemo,
     budget: &'a dyn Budget,
+    /// The session's telemetry handle (disabled unless the run opted
+    /// in). Drivers record phase spans through it; nothing they read
+    /// from it may influence what they propose.
+    tel: &'a Telemetry,
 }
 
 impl<'a> DriveCtx<'a> {
@@ -156,7 +162,7 @@ impl<'a> DriveCtx<'a> {
         memo: &'a RunMemo,
         budget: &'a dyn Budget,
     ) -> DriveCtx<'a> {
-        DriveCtx { view, rng, trace, memo, budget }
+        DriveCtx { view, rng, trace, memo, budget, tel: Telemetry::off() }
     }
 
     /// The space as a backing-agnostic view. The returned borrow has the
@@ -164,6 +170,13 @@ impl<'a> DriveCtx<'a> {
     /// be used alongside `ctx.rng` in one expression.
     pub fn view(&self) -> &'a dyn SpaceView {
         self.view
+    }
+
+    /// The telemetry handle, with the context's full lifetime (the
+    /// reference is `Copy`), usable alongside `ctx.rng` in one
+    /// expression. Disabled handles make every recording call a no-op.
+    pub fn telemetry(&self) -> &'a Telemetry {
+        self.tel
     }
 
     /// The enumerated space. Drivers that sweep whole columns call this;
@@ -284,26 +297,33 @@ impl Budget for FevalBudget {
 
 /// Time-to-solution budget: the run stops at a wall-clock deadline —
 /// the comparison axis arXiv:2210.01465 adds beyond raw feval counts.
-#[derive(Clone, Copy, Debug)]
+/// Time comes from an injected [`Clock`], so the one sanctioned
+/// trace-affecting time source is swappable (tests pin a `ManualClock`
+/// and expire the budget deterministically).
+#[derive(Clone)]
 pub struct WallClockBudget {
-    deadline: Instant,
+    clock: Arc<dyn Clock>,
+    deadline_ns: u64,
 }
 
 impl WallClockBudget {
-    pub fn until(deadline: Instant) -> WallClockBudget {
-        WallClockBudget { deadline }
+    /// Deadline `d` from now on the process monotonic clock.
+    pub fn for_duration(d: Duration) -> WallClockBudget {
+        WallClockBudget::starting_now(Arc::new(MonotonicClock::new()), d)
     }
 
-    pub fn for_duration(d: Duration) -> WallClockBudget {
-        // ktbo-lint: allow(no-wall-clock): WallClockBudget IS the budget clock — the one sanctioned trace-path time source
-        WallClockBudget { deadline: Instant::now() + d }
+    /// Deadline `d` from `clock`'s current reading — the injection
+    /// point for deterministic tests.
+    pub fn starting_now(clock: Arc<dyn Clock>, d: Duration) -> WallClockBudget {
+        let d_ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        let deadline_ns = clock.now_ns().saturating_add(d_ns);
+        WallClockBudget { clock, deadline_ns }
     }
 }
 
 impl Budget for WallClockBudget {
     fn proceed(&self, _trace: &Trace) -> bool {
-        // ktbo-lint: allow(no-wall-clock): WallClockBudget IS the budget clock — the one sanctioned trace-path time source
-        Instant::now() < self.deadline
+        self.clock.now_ns() < self.deadline_ns
     }
 
     fn describe(&self) -> String {
@@ -360,6 +380,10 @@ pub struct DriveOpts<'p> {
     /// Evaluate the fresh suggestions of a multi-suggestion batch
     /// concurrently on this pool (see module docs for RNG semantics).
     pub pool: Option<&'p ShardPool>,
+    /// Telemetry handle for the run. Default (disabled) records
+    /// nothing; a recording handle captures phase spans and
+    /// observation events without touching the trace.
+    pub telemetry: Telemetry,
 }
 
 /// Where one step of the engine gets its space and its fresh
@@ -424,10 +448,19 @@ struct DriveCore {
     last_len: usize,
     stalls: usize,
     done: bool,
+    /// The run's telemetry handle (disabled unless the caller opted in).
+    /// Recording is strictly observational: nothing the engine decides
+    /// reads it back.
+    tel: Telemetry,
 }
 
 impl DriveCore {
-    fn new(memoize: bool, memo: Option<RunMemo>, resume_from: Option<Trace>) -> DriveCore {
+    fn new(
+        memoize: bool,
+        memo: Option<RunMemo>,
+        resume_from: Option<Trace>,
+        tel: Telemetry,
+    ) -> DriveCore {
         let memo = memo.unwrap_or_default();
         let replay =
             resume_from.map(|t| t.records.into_iter().collect()).unwrap_or_default();
@@ -442,6 +475,7 @@ impl DriveCore {
             last_len: 0,
             stalls: 0,
             done: false,
+            tel,
         }
     }
 
@@ -500,6 +534,7 @@ impl DriveCore {
             self.done = true;
             return false;
         }
+        let t0 = self.tel.start();
         let ask = {
             let mut ctx = DriveCtx {
                 view: src.view,
@@ -507,9 +542,15 @@ impl DriveCore {
                 trace: &self.trace,
                 memo: &self.memo,
                 budget,
+                tel: &self.tel,
             };
             driver.ask(&mut ctx)
         };
+        let batch_len = match &ask {
+            Ask::Suggest(batch) => batch.len(),
+            Ask::Finished => 0,
+        };
+        self.tel.span(self.trace.len(), Phase::Ask, t0, batch_len);
         match ask {
             Ask::Finished => {
                 self.done = true;
@@ -555,6 +596,7 @@ impl DriveCore {
         debug_assert!(src.view.index_in_range(idx), "driver proposed index {idx} out of range");
         if self.memoize {
             if let Some(eval) = self.memo.recall(idx) {
+                self.tel.record(self.trace.len(), EventKind::CacheHit { idx });
                 driver.tell(Observation { idx, eval, cached: true });
                 return;
             }
@@ -573,10 +615,16 @@ impl DriveCore {
             // Cross-session hit in a shared store: first in-run touch
             // still costs budget and is recorded (unique-feval semantics
             // are per run), but the objective is not re-executed.
+            self.tel.record(self.trace.len(), EventKind::SharedHit { idx });
             e
         } else {
             match src.obj {
-                Some(obj) => obj.evaluate(idx, rng),
+                Some(obj) => {
+                    let t0 = self.tel.start();
+                    let e = obj.evaluate(idx, rng);
+                    self.tel.span(self.trace.len(), Phase::Eval, t0, 1);
+                    e
+                }
                 None => {
                     // External-evaluation mode: park the suggestion until
                     // the client reports its measurement via `tell`.
@@ -596,6 +644,11 @@ impl DriveCore {
             self.memo.record(idx, eval);
         }
         self.trace.push(idx, eval);
+        let value = match eval {
+            Eval::Valid(v) => v,
+            _ => f64::NAN,
+        };
+        self.tel.record(self.trace.len(), EventKind::Observe { idx, value });
         driver.tell(Observation { idx, eval, cached: false });
     }
 
@@ -692,6 +745,8 @@ impl DriveCore {
         let mut seeder = rng.clone();
         let mut rngs: Vec<Rng> = (0..to_eval.len()).map(|i| seeder.split(i as u64 + 1)).collect();
         let mut results: Vec<Option<Eval>> = vec![None; to_eval.len()];
+        let t0 = self.tel.start();
+        let n_jobs = to_eval.len();
         {
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = to_eval
                 .iter()
@@ -705,6 +760,7 @@ impl DriveCore {
                 .collect();
             pool.run(jobs);
         }
+        self.tel.span(self.trace.len(), Phase::Eval, t0, n_jobs);
         for (idx, e) in to_eval.into_iter().zip(results) {
             self.prefetched.insert(idx, e.expect("prefetch job did not run"));
         }
@@ -731,7 +787,7 @@ pub fn drive_with(
     opts: DriveOpts<'_>,
 ) -> Trace {
     let pool = opts.pool;
-    let mut core = DriveCore::new(driver.memoize(), opts.memo, opts.resume_from);
+    let mut core = DriveCore::new(driver.memoize(), opts.memo, opts.resume_from, opts.telemetry);
     let src = EvalSrc { view: obj.view(), obj: Some(obj) };
     while core.step(driver, budget, rng, src, pool) {}
     core.trace
@@ -767,6 +823,8 @@ pub struct SessionOpts {
     pub memo: Option<RunMemo>,
     /// Trace prefix (a checkpoint) to replay through the fresh driver.
     pub resume_from: Option<Trace>,
+    /// Telemetry handle for the session (disabled by default).
+    pub telemetry: Telemetry,
 }
 
 /// One tuning run held open between steps — the owned unit of
@@ -858,8 +916,15 @@ impl Session {
             rng,
             objective,
             space,
-            core: DriveCore::new(memoize, opts.memo, opts.resume_from),
+            core: DriveCore::new(memoize, opts.memo, opts.resume_from, opts.telemetry),
         }
+    }
+
+    /// The session's telemetry handle — disabled unless the session was
+    /// built with a recording one. Cheap to clone; events recorded by
+    /// the engine and the driver land in the same ring.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.core.tel
     }
 
     /// The session's search space (the objective's, or the owned one in
@@ -1099,15 +1164,20 @@ mod tests {
 
     #[test]
     fn wall_clock_budget_expires() {
+        use crate::telemetry::clock::ManualClock;
         let obj = ladder(4);
         let mut rng = Rng::new(5);
-        let past = WallClockBudget::until(Instant::now() - Duration::from_millis(1));
-        let t = drive(&mut Counter { next: 0 }, &obj, &past, &mut rng);
+        let clock = Arc::new(ManualClock::new());
+        let expiring =
+            WallClockBudget::starting_now(Arc::clone(&clock) as Arc<dyn Clock>, Duration::ZERO);
+        let t = drive(&mut Counter { next: 0 }, &obj, &expiring, &mut rng);
         assert!(t.is_empty(), "expired deadline runs nothing");
-        let generous = WallClockBudget::for_duration(Duration::from_secs(60));
+        let generous = WallClockBudget::starting_now(clock, Duration::from_secs(60));
         let t = drive(&mut Counter { next: 0 }, &obj, &generous, &mut rng);
         assert_eq!(t.len(), 4, "generous deadline lets the driver finish");
         assert!(generous.max_fevals().is_none());
+        let real = WallClockBudget::for_duration(Duration::from_secs(60));
+        assert!(real.proceed(&Trace::new()), "monotonic deadline 60s out is live");
     }
 
     #[test]
@@ -1465,6 +1535,56 @@ mod tests {
                     "{kernel}/{name}: EagerView session diverged from the bare-space session"
                 );
             }
+        }
+    }
+
+    /// THE telemetry acceptance invariant, eager half: for every registry
+    /// strategy on a real kernel, a session run with a recording
+    /// telemetry handle produces a bit-identical evaluation trace to the
+    /// same session run with telemetry off. Recording is observation,
+    /// never influence. (The lazy half lives in `bo::pool` next to the
+    /// lazy-view fixtures.)
+    #[test]
+    fn telemetry_on_vs_off_eager_traces_bit_identical_registry_wide() {
+        use crate::strategies::Strategy;
+        let dev = crate::gpusim::device::Device::by_name("titanx").unwrap();
+        let table = crate::harness::figures::objective_for("adding", &dev);
+        for name in crate::strategies::registry::all_names() {
+            let strat = crate::strategies::registry::by_name(name).unwrap();
+            let run = |telemetry: Telemetry| -> (Trace, Telemetry) {
+                let opts = SessionOpts { telemetry, ..SessionOpts::default() };
+                let mut s = Session::build(
+                    strat.driver(table.space()),
+                    SessionTarget::Objective(Arc::clone(&table) as Arc<dyn Objective>),
+                    Box::new(FevalBudget::new(20)),
+                    Rng::new(11),
+                    opts,
+                );
+                while s.step() {}
+                let tel = s.telemetry().clone();
+                (s.into_trace(), tel)
+            };
+            let (off, _) = run(Telemetry::default());
+            let (on, tel) = run(Telemetry::recording(crate::telemetry::DEFAULT_RING_CAPACITY));
+            assert_eq!(
+                off.records, on.records,
+                "{name}: recording telemetry changed the evaluation trace"
+            );
+            assert!(
+                !tel.is_empty(),
+                "{name}: a recording run must actually capture events"
+            );
+            let events = tel.events();
+            assert!(
+                events.iter().any(|e| matches!(e.kind, EventKind::Observe { .. })),
+                "{name}: no observe events captured"
+            );
+            assert!(
+                events
+                    .iter()
+                    .any(|e| matches!(e.kind, EventKind::Span { phase: Phase::Ask, .. })),
+                "{name}: no ask spans captured"
+            );
         }
     }
 }

@@ -30,13 +30,15 @@ pub mod registry;
 pub mod sa;
 
 pub use driver::{
-    drive, interleave, Ask, Budget, DriveCtx, FevalBudget, Observation, SearchDriver, Session,
-    SessionNeed, SessionOpts, SessionTarget, TargetBudget, TellError, WallClockBudget,
+    drive, drive_with, interleave, Ask, Budget, DriveCtx, DriveOpts, FevalBudget, Observation,
+    SearchDriver, Session, SessionNeed, SessionOpts, SessionTarget, TargetBudget, TellError,
+    WallClockBudget,
 };
 
 use crate::objective::evalcache::RunMemo;
 use crate::objective::{Eval, Objective};
 use crate::space::SearchSpace;
+use crate::telemetry::Telemetry;
 use crate::util::rng::Rng;
 
 /// Record of one tuning run.
@@ -213,6 +215,21 @@ pub trait Strategy: Send + Sync {
     fn run(&self, obj: &dyn Objective, max_fevals: usize, rng: &mut Rng) -> Trace {
         let mut d = self.driver(obj.space());
         drive(d.as_mut(), obj, &FevalBudget::new(max_fevals), rng)
+    }
+
+    /// [`Strategy::run`] with a telemetry handle: identical evaluation
+    /// trace (recording is observational), plus captured phase spans and
+    /// events for the handle's owner to export.
+    fn run_with(
+        &self,
+        obj: &dyn Objective,
+        max_fevals: usize,
+        rng: &mut Rng,
+        telemetry: Telemetry,
+    ) -> Trace {
+        let mut d = self.driver(obj.space());
+        let opts = DriveOpts { telemetry, ..DriveOpts::default() };
+        drive_with(d.as_mut(), obj, &FevalBudget::new(max_fevals), rng, opts)
     }
 }
 

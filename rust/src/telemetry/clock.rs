@@ -1,0 +1,111 @@
+//! Injectable time sources for the telemetry layer.
+//!
+//! Every wall-clock read in the workspace funnels through the [`Clock`]
+//! trait so that (a) tests drive timing-dependent code with a
+//! [`ManualClock`] instead of sleeping, and (b) `ktbo-lint`'s
+//! `no-untracked-clock` rule can ban raw `Instant::now()` /
+//! `SystemTime` reads everywhere else. This file is the single module
+//! excluded from that rule — the one place allowed to touch the OS
+//! clock.
+//!
+//! Timestamps are monotonic nanoseconds relative to an arbitrary epoch
+//! (clock construction for [`MonotonicClock`], zero for
+//! [`ManualClock`]). They are *observability data only*: nothing on the
+//! deterministic trace path may branch on them (see the telemetry
+//! module docs for the invariant and the tests that pin it).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotonic nanosecond time source.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since this clock's epoch. Must be monotone
+    /// non-decreasing across calls.
+    fn now_ns(&self) -> u64;
+}
+
+/// The real thing: monotonic OS time relative to construction.
+pub struct MonotonicClock {
+    base: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { base: Instant::now() }
+    }
+
+    /// Seconds elapsed since the timestamp `t0_ns` (itself from this
+    /// clock), for human-facing wall-time reporting.
+    pub fn seconds_since(&self, t0_ns: u64) -> f64 {
+        self.now_ns().saturating_sub(t0_ns) as f64 / 1e9
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> MonotonicClock {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        // u64 nanoseconds overflow after ~584 years of process uptime.
+        self.base.elapsed().as_nanos() as u64
+    }
+}
+
+/// A hand-cranked clock for tests: starts at zero, advances only when
+/// told to. Shared freely (`Arc<ManualClock>`) between the test body
+/// and the code under test.
+#[derive(Default)]
+pub struct ManualClock {
+    now_ns: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> ManualClock {
+        ManualClock::default()
+    }
+
+    /// Move time forward by `ns` nanoseconds.
+    pub fn advance(&self, ns: u64) {
+        self.now_ns.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute timestamp. Monotonicity is the caller's
+    /// contract — tests that rewind get the garbage they asked for.
+    pub fn set(&self, ns: u64) {
+        self.now_ns.store(ns, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ns(&self) -> u64 {
+        self.now_ns.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_advances_and_sets() {
+        let c = ManualClock::new();
+        assert_eq!(c.now_ns(), 0);
+        c.advance(250);
+        c.advance(50);
+        assert_eq!(c.now_ns(), 300);
+        c.set(1_000_000);
+        assert_eq!(c.now_ns(), 1_000_000);
+    }
+
+    #[test]
+    fn monotonic_clock_is_monotone() {
+        let c = MonotonicClock::new();
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+        assert!(c.seconds_since(a) >= 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Process metrics: named counters, gauges, and fixed-bound histograms.
+//!
+//! Two usage patterns:
+//!
+//! - [`global()`] — the process-wide registry, for tallies that cross
+//!   subsystem boundaries (the sweep orchestrator counts completed and
+//!   failed cells there).
+//! - An owned [`MetricsRegistry`] — the serve daemon embeds its own so
+//!   the `metrics` wire verb reports *that daemon's* traffic, and
+//!   parallel test servers don't bleed counts into each other.
+//!
+//! Snapshots render deterministically (`BTreeMap` name order,
+//! insertion-order JSON) so wire replies and artifacts diff cleanly.
+//! Nothing on the deterministic trace path reads a metric back.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::util::json::Json;
+
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Histogram { bounds: Vec<f64>, counts: Vec<u64>, count: u64, sum: f64 },
+}
+
+/// A named metric store. All methods take `&self`; lock poisoning is
+/// recovered (metrics must never take a process down).
+pub struct MetricsRegistry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+/// The process-wide registry.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: MetricsRegistry = MetricsRegistry::new();
+    &GLOBAL
+}
+
+impl MetricsRegistry {
+    pub const fn new() -> MetricsRegistry {
+        MetricsRegistry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Add `delta` to counter `name` (created at zero on first use).
+    /// A name already registered as another kind is left untouched —
+    /// metrics never panic over a naming collision.
+    pub fn counter(&self, name: &str, delta: u64) {
+        let mut m = self.lock();
+        if let Metric::Counter(v) = m.entry(name.to_string()).or_insert(Metric::Counter(0)) {
+            *v += delta;
+        }
+    }
+
+    /// Set gauge `name` to `value`.
+    pub fn gauge(&self, name: &str, value: f64) {
+        let mut m = self.lock();
+        if let Metric::Gauge(v) = m.entry(name.to_string()).or_insert(Metric::Gauge(0.0)) {
+            *v = value;
+        }
+    }
+
+    /// Record `value` into histogram `name` with fixed bucket `bounds`
+    /// (upper-inclusive, ascending; an implicit +inf bucket catches the
+    /// rest). Bounds are fixed by the first call; later calls reuse
+    /// them.
+    pub fn observe(&self, name: &str, bounds: &[f64], value: f64) {
+        let mut m = self.lock();
+        let metric = m.entry(name.to_string()).or_insert_with(|| Metric::Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            count: 0,
+            sum: 0.0,
+        });
+        if let Metric::Histogram { bounds, counts, count, sum } = metric {
+            let slot = bounds.iter().position(|b| value <= *b).unwrap_or(bounds.len());
+            counts[slot] += 1;
+            *count += 1;
+            *sum += value;
+        }
+    }
+
+    /// Current value of counter `name` (zero when absent or not a
+    /// counter) — the convenient form for tests and status folding.
+    pub fn counter_value(&self, name: &str) -> u64 {
+        match self.lock().get(name) {
+            Some(Metric::Counter(v)) => *v,
+            _ => 0,
+        }
+    }
+
+    /// Sum of every counter whose name starts with `prefix`.
+    pub fn counter_sum(&self, prefix: &str) -> u64 {
+        self.lock()
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, m)| match m {
+                Metric::Counter(v) => *v,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Deterministic JSON snapshot: `{name: {type, ...}}` in name order.
+    pub fn snapshot(&self) -> Json {
+        let m = self.lock();
+        let mut out = Json::obj();
+        for (name, metric) in m.iter() {
+            let body = match metric {
+                Metric::Counter(v) => {
+                    Json::obj().set("type", "counter").set("value", *v as usize)
+                }
+                Metric::Gauge(v) => Json::obj().set("type", "gauge").set("value", *v),
+                Metric::Histogram { bounds, counts, count, sum } => {
+                    let mut buckets = Vec::with_capacity(counts.len());
+                    for (i, c) in counts.iter().enumerate() {
+                        let le = bounds.get(i).map(|b| Json::Num(*b)).unwrap_or(Json::Null);
+                        buckets.push(Json::obj().set("le", le).set("count", *c as usize));
+                    }
+                    Json::obj()
+                        .set("type", "histogram")
+                        .set("count", *count as usize)
+                        .set("sum", *sum)
+                        .set("buckets", Json::Arr(buckets))
+                }
+            };
+            out = out.set(name, body);
+        }
+        out
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> MetricsRegistry {
+        MetricsRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot_in_name_order() {
+        let r = MetricsRegistry::new();
+        r.counter("b.two", 1);
+        r.counter("a.one", 2);
+        r.counter("b.two", 3);
+        assert_eq!(r.counter_value("b.two"), 4);
+        assert_eq!(r.counter_value("missing"), 0);
+        assert_eq!(r.counter_sum("b."), 4);
+        assert_eq!(r.counter_sum(""), 6);
+        assert_eq!(
+            r.snapshot().render(),
+            r#"{"a.one":{"type":"counter","value":2},"b.two":{"type":"counter","value":4}}"#
+        );
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let r = MetricsRegistry::new();
+        r.gauge("sessions", 2.0);
+        r.gauge("sessions", 5.0);
+        assert!(r.snapshot().render().contains(r#""sessions":{"type":"gauge","value":5}"#));
+    }
+
+    #[test]
+    fn histograms_bucket_by_fixed_bounds() {
+        let r = MetricsRegistry::new();
+        let bounds = [0.001, 0.01, 0.1];
+        for v in [0.0005, 0.002, 0.05, 3.0] {
+            r.observe("latency", &bounds, v);
+        }
+        let s = r.snapshot().render();
+        assert!(s.contains(r#""type":"histogram","count":4"#), "{s}");
+        // One value per bucket, including the +inf overflow (le null).
+        assert!(s.contains(r#"{"le":0.001,"count":1}"#), "{s}");
+        assert!(s.contains(r#"{"le":null,"count":1}"#), "{s}");
+    }
+
+    #[test]
+    fn kind_collisions_are_ignored_not_fatal() {
+        let r = MetricsRegistry::new();
+        r.counter("x", 1);
+        r.gauge("x", 9.0);
+        r.observe("x", &[1.0], 0.5);
+        assert_eq!(r.counter_value("x"), 1);
+    }
+}

@@ -1,0 +1,376 @@
+//! Determinism-safe instrumentation: per-session tracing, per-phase
+//! timing, and process metrics.
+//!
+//! The paper's cost story — where does optimization time go: surrogate
+//! fit/predict versus evaluation, pool draws versus scoring — needs
+//! numbers, and this module is where they come from. Three pieces:
+//!
+//! - [`Telemetry`] / [`SessionTelemetry`]: a cheap cloneable handle to a
+//!   per-session recorder of typed [`Event`]s (phase spans,
+//!   observations, cache hits, acquisition choices, probe and
+//!   resilience counters), buffered in a bounded ring and exportable as
+//!   versioned JSONL next to the sweep records. The disabled handle
+//!   ([`Telemetry::off`]) is a `None` — every recording call is a
+//!   single branch, no allocation, no clock read.
+//! - [`clock`]: the injectable [`clock::Clock`] trait. Real runs use
+//!   [`clock::MonotonicClock`]; tests use [`clock::ManualClock`].
+//!   Raw `Instant::now()` outside that module fails `ktbo-lint`'s
+//!   `no-untracked-clock` rule.
+//! - [`metrics`]: counters/gauges/histograms for the serve daemon's
+//!   `metrics` wire verb and process-wide tallies.
+//!
+//! **The invariant** (asserted registry-wide in `strategies::driver`
+//! and `harness::orchestrator` tests): telemetry on versus off produces
+//! bit-identical evaluation traces and byte-identical sweep
+//! `results.jsonl`. Instrumentation observes; it never touches an RNG
+//! stream, an iteration order, or a record the trace path reads back.
+//! Concretely: timestamps never cross back into strategy code, and
+//! telemetry output lives in its own `*.telemetry.jsonl` file.
+
+pub mod clock;
+pub mod metrics;
+pub mod report;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::objective::resilient::ResilienceStats;
+use crate::util::json::Json;
+use clock::{Clock, MonotonicClock};
+
+/// Schema version stamped on the meta line of every telemetry JSONL
+/// export; readers refuse files from the future.
+pub const TELEMETRY_SCHEMA_VERSION: u64 = 1;
+
+/// Default bounded-ring capacity: generous for any single session
+/// (a full-budget BO run emits a few events per evaluation) while
+/// bounding a runaway emitter to a few MB.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// The instrumented phases of a session step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// The driver's whole `ask` — suggestion latency.
+    Ask,
+    /// One objective evaluation (in-process path).
+    Eval,
+    /// Surrogate fit / incremental update.
+    Fit,
+    /// Surrogate posterior prediction over the candidate tile.
+    Predict,
+    /// Acquisition scoring sweep (fused predict+score counts here too).
+    Score,
+    /// Lazy-mode candidate pool construction (global draws + neighbor
+    /// probes through the constraint oracle).
+    PoolDraw,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Ask => "ask",
+            Phase::Eval => "eval",
+            Phase::Fit => "fit",
+            Phase::Predict => "predict",
+            Phase::Score => "score",
+            Phase::PoolDraw => "pool_draw",
+        }
+    }
+}
+
+/// What happened. Payloads are counters and ids only — nothing here is
+/// ever read back by the trace path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A timed phase: `dur_ns` of wall time, covering `n` items
+    /// (batch size, pool size, tile size — phase-dependent).
+    Span { phase: Phase, dur_ns: u64, n: usize },
+    /// A committed observation (the tell side), valid or not. `value`
+    /// is NaN for invalid/timeout evaluations and renders as JSON
+    /// null. Feeds time-to-solution curves in `ktbo report`.
+    Observe { idx: usize, value: f64 },
+    /// The session memo (eval-cache) answered without an evaluation.
+    CacheHit { idx: usize },
+    /// A concurrent session's in-flight result was reused.
+    SharedHit { idx: usize },
+    /// A multi-AF policy picked the suggestion from arm `arm`.
+    AfChoice { arm: usize },
+    /// Cumulative constraint-oracle probe count at this point
+    /// (`SpaceView::probe_count`).
+    Probes { total: u64 },
+    /// Snapshot of the resilient evaluator's counters.
+    Resilience(ResilienceStats),
+}
+
+/// One telemetry event: a monotonic timestamp, the evaluation-trace
+/// step it belongs to, and the typed payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub t_ns: u64,
+    /// Trace length when the event fired — ties events to evaluations
+    /// without perturbing the trace itself.
+    pub step: usize,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Append this event's fields to a (possibly pre-tagged) JSON
+    /// object — the sweep exporter prefixes cell coordinates, the
+    /// session exporter passes a bare object.
+    pub fn to_json_into(&self, base: Json) -> Json {
+        let j = base.set("t_ns", self.t_ns as usize).set("step", self.step);
+        match &self.kind {
+            EventKind::Span { phase, dur_ns, n } => j
+                .set("event", "span")
+                .set("phase", phase.label())
+                .set("dur_ns", *dur_ns as usize)
+                .set("n", *n),
+            EventKind::Observe { idx, value } => {
+                j.set("event", "observe").set("idx", *idx).set("value", *value)
+            }
+            EventKind::CacheHit { idx } => j.set("event", "cache_hit").set("idx", *idx),
+            EventKind::SharedHit { idx } => j.set("event", "shared_hit").set("idx", *idx),
+            EventKind::AfChoice { arm } => j.set("event", "af_choice").set("arm", *arm),
+            EventKind::Probes { total } => j.set("event", "probes").set("total", *total as usize),
+            EventKind::Resilience(stats) => j.set("event", "resilience").set("stats", stats.to_json()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.to_json_into(Json::obj().set("type", "event"))
+    }
+}
+
+/// The meta line heading every telemetry JSONL export.
+pub fn meta_record() -> Json {
+    Json::obj()
+        .set("type", "meta")
+        .set("kind", "telemetry")
+        .set("schema_version", TELEMETRY_SCHEMA_VERSION as usize)
+}
+
+/// Bounded event buffer: oldest events fall off, with a drop count so
+/// exports can say so instead of silently truncating.
+struct Ring {
+    buf: VecDeque<Event>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, e: Event) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(e);
+    }
+}
+
+/// The per-session recorder: a clock plus the bounded ring. Shared
+/// through [`Telemetry`] handles; all methods take `&self`.
+pub struct SessionTelemetry {
+    clock: Arc<dyn Clock>,
+    ring: Mutex<Ring>,
+}
+
+impl SessionTelemetry {
+    fn ring(&self) -> MutexGuard<'_, Ring> {
+        // A panic while holding this lock loses nothing we care about —
+        // recover the buffer rather than poisoning telemetry forever.
+        self.ring.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Cheap cloneable handle: `None` = disabled (every call is one branch,
+/// no clock read), `Some` = shared recorder.
+#[derive(Clone, Default)]
+pub struct Telemetry(Option<Arc<SessionTelemetry>>);
+
+/// The canonical disabled handle.
+static OFF: Telemetry = Telemetry(None);
+
+impl Telemetry {
+    /// A disabled handle by reference — the default everywhere a
+    /// borrowed `&Telemetry` is threaded through.
+    pub fn off() -> &'static Telemetry {
+        &OFF
+    }
+
+    /// A recording handle on the real monotonic clock.
+    pub fn recording(capacity: usize) -> Telemetry {
+        Telemetry::with_clock(Arc::new(MonotonicClock::new()), capacity)
+    }
+
+    /// A recording handle on an injected clock (tests).
+    pub fn with_clock(clock: Arc<dyn Clock>, capacity: usize) -> Telemetry {
+        Telemetry(Some(Arc::new(SessionTelemetry {
+            clock,
+            ring: Mutex::new(Ring { buf: VecDeque::new(), cap: capacity, dropped: 0 }),
+        })))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Open a span: the phase start timestamp, or 0 when disabled.
+    /// Pair with [`Telemetry::span`].
+    pub fn start(&self) -> u64 {
+        match &self.0 {
+            Some(t) => t.clock.now_ns(),
+            None => 0,
+        }
+    }
+
+    /// Close a span opened with [`Telemetry::start`]: records a
+    /// [`EventKind::Span`] with the elapsed time and item count `n`.
+    pub fn span(&self, step: usize, phase: Phase, t0_ns: u64, n: usize) {
+        if let Some(t) = &self.0 {
+            let now = t.clock.now_ns();
+            t.ring().push(Event {
+                t_ns: now,
+                step,
+                kind: EventKind::Span { phase, dur_ns: now.saturating_sub(t0_ns), n },
+            });
+        }
+    }
+
+    /// Record a non-span event, stamped with the current time.
+    pub fn record(&self, step: usize, kind: EventKind) {
+        if let Some(t) = &self.0 {
+            let now = t.clock.now_ns();
+            t.ring().push(Event { t_ns: now, step, kind });
+        }
+    }
+
+    /// Snapshot of the buffered events, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        match &self.0 {
+            Some(t) => t.ring().buf.iter().cloned().collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Events lost to the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        match &self.0 {
+            Some(t) => t.ring().dropped,
+            None => 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.0 {
+            Some(t) => t.ring().buf.len(),
+            None => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render the buffer as JSONL event lines (no meta line — the
+    /// exporter owns file framing), each tagged by `tag` first so cell
+    /// coordinates lead the record.
+    pub fn export_lines(&self, tag: impl Fn(Json) -> Json) -> Vec<String> {
+        self.events().iter().map(|e| e.to_json_into(tag(Json::obj().set("type", "event"))).render()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::clock::ManualClock;
+    use super::*;
+
+    fn manual() -> (Arc<ManualClock>, Telemetry) {
+        let clock = Arc::new(ManualClock::new());
+        let tel = Telemetry::with_clock(Arc::clone(&clock) as Arc<dyn Clock>, 8);
+        (clock, tel)
+    }
+
+    #[test]
+    fn disabled_handle_records_nothing_and_reads_no_clock() {
+        let off = Telemetry::off();
+        assert!(!off.enabled());
+        assert_eq!(off.start(), 0);
+        off.span(0, Phase::Ask, 0, 1);
+        off.record(0, EventKind::CacheHit { idx: 3 });
+        assert!(off.events().is_empty());
+        assert_eq!((off.len(), off.dropped()), (0, 0));
+    }
+
+    #[test]
+    fn spans_measure_manual_time_and_nest() {
+        let (clock, tel) = manual();
+        let outer = tel.start();
+        clock.advance(100);
+        let inner = tel.start();
+        clock.advance(40);
+        tel.span(2, Phase::Fit, inner, 12);
+        clock.advance(10);
+        tel.span(2, Phase::Ask, outer, 1);
+        let ev = tel.events();
+        assert_eq!(ev.len(), 2);
+        // Inner span closes first; both durations are exact.
+        assert_eq!(ev[0].kind, EventKind::Span { phase: Phase::Fit, dur_ns: 40, n: 12 });
+        assert_eq!(ev[0].t_ns, 140);
+        assert_eq!(ev[1].kind, EventKind::Span { phase: Phase::Ask, dur_ns: 150, n: 1 });
+        assert_eq!(ev[1].step, 2);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let (clock, tel) = manual();
+        for i in 0..11usize {
+            clock.advance(1);
+            tel.record(i, EventKind::CacheHit { idx: i });
+        }
+        assert_eq!(tel.len(), 8, "capacity bounds the buffer");
+        assert_eq!(tel.dropped(), 3);
+        let ev = tel.events();
+        // Oldest three fell off; the survivors are 3..=10 in order.
+        assert_eq!(ev.first().unwrap().step, 3);
+        assert_eq!(ev.last().unwrap().step, 10);
+    }
+
+    #[test]
+    fn zero_capacity_ring_drops_everything() {
+        let tel = Telemetry::with_clock(Arc::new(ManualClock::new()), 0);
+        tel.record(0, EventKind::AfChoice { arm: 1 });
+        assert!(tel.is_empty());
+        assert_eq!(tel.dropped(), 1);
+    }
+
+    #[test]
+    fn events_render_as_tagged_jsonl() {
+        let (clock, tel) = manual();
+        clock.advance(5);
+        tel.record(1, EventKind::Observe { idx: 7, value: 2.5 });
+        tel.record(1, EventKind::Observe { idx: 8, value: f64::NAN });
+        tel.record(2, EventKind::Probes { total: 31 });
+        let lines = tel.export_lines(|j| j.set("cell", "adding/a100"));
+        assert_eq!(lines.len(), 3);
+        assert_eq!(
+            lines[0],
+            r#"{"type":"event","cell":"adding/a100","t_ns":5,"step":1,"event":"observe","idx":7,"value":2.5}"#
+        );
+        assert!(lines[1].ends_with(r#""value":null}"#), "NaN renders as null: {}", lines[1]);
+        assert!(lines[2].contains(r#""event":"probes","total":31"#));
+        let meta = meta_record().render();
+        assert!(meta.contains(r#""kind":"telemetry""#) && meta.contains("\"schema_version\":1"));
+    }
+
+    #[test]
+    fn clones_share_one_ring() {
+        let (_clock, tel) = manual();
+        let other = tel.clone();
+        other.record(0, EventKind::AfChoice { arm: 2 });
+        assert_eq!(tel.len(), 1);
+    }
+}

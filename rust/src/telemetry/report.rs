@@ -1,0 +1,278 @@
+//! `ktbo report` — render a telemetry JSONL export for humans.
+//!
+//! Input is the file the sweep orchestrator (or any exporter) writes: a
+//! `{"type":"meta","kind":"telemetry","schema_version":N}` head line
+//! followed by `{"type":"event",...}` lines, each optionally tagged
+//! with cell coordinates (`kernel`/`gpu`/`strategy`/`rep`). Output per
+//! cell: a per-phase time breakdown (span counts, total, mean) and the
+//! time-to-solution curve — every step where the incumbent improved,
+//! stamped with wall time relative to the cell's first event.
+
+use std::collections::BTreeMap;
+
+use super::TELEMETRY_SCHEMA_VERSION;
+use crate::util::json::Json;
+use crate::util::jsonparse;
+
+/// Fixed display order for the phase table.
+const PHASE_ORDER: &[&str] = &["ask", "eval", "fit", "predict", "score", "pool_draw"];
+
+#[derive(Default)]
+struct PhaseAgg {
+    spans: u64,
+    total_ns: u64,
+    items: u64,
+}
+
+#[derive(Default)]
+struct CellAgg {
+    events: u64,
+    first_t_ns: Option<u64>,
+    phases: BTreeMap<String, PhaseAgg>,
+    /// (t_ns, step, value) for valid observations, in arrival order.
+    observes: Vec<(u64, usize, f64)>,
+    invalid_observes: u64,
+    cache_hits: u64,
+    shared_hits: u64,
+    /// Multi-AF arm → times chosen.
+    af_choices: BTreeMap<usize, u64>,
+    probes: Option<u64>,
+    resilience: Option<String>,
+}
+
+fn fmt_ns(ns: u64) -> String {
+    let ns = ns as f64;
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.1}us", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
+fn cell_label(j: &Json) -> String {
+    let field = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+    match (field("kernel"), field("gpu"), field("strategy")) {
+        (Some(k), Some(g), Some(s)) => {
+            let rep = j.get("rep").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+            format!("{k}/{g}/{s}#{rep}")
+        }
+        _ => field("cell").unwrap_or_else(|| "session".to_string()),
+    }
+}
+
+/// Render a report from telemetry JSONL text.
+pub fn render(text: &str) -> Result<String, String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let head = lines.next().ok_or("telemetry file is empty")?;
+    let meta = jsonparse::parse(head).map_err(|e| format!("telemetry meta line: {e}"))?;
+    if meta.get("type").and_then(Json::as_str) != Some("meta")
+        || meta.get("kind").and_then(Json::as_str) != Some("telemetry")
+    {
+        return Err("not a telemetry export: first line must be a telemetry meta record".into());
+    }
+    let version = meta
+        .get("schema_version")
+        .and_then(Json::as_f64)
+        .ok_or("telemetry meta line lacks a schema_version")? as u64;
+    if version > TELEMETRY_SCHEMA_VERSION {
+        return Err(format!(
+            "telemetry schema_version {version} is newer than this build understands \
+             ({TELEMETRY_SCHEMA_VERSION})"
+        ));
+    }
+
+    let mut cells: BTreeMap<String, CellAgg> = BTreeMap::new();
+    let mut total_events = 0u64;
+    for line in lines {
+        let j = jsonparse::parse(line).map_err(|e| format!("telemetry event line: {e}"))?;
+        if j.get("type").and_then(Json::as_str) != Some("event") {
+            continue;
+        }
+        total_events += 1;
+        let agg = cells.entry(cell_label(&j)).or_default();
+        agg.events += 1;
+        let t_ns = j.get("t_ns").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        agg.first_t_ns.get_or_insert(t_ns);
+        let step = j.get("step").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+        match j.get("event").and_then(Json::as_str).unwrap_or("") {
+            "span" => {
+                let phase = j.get("phase").and_then(Json::as_str).unwrap_or("?").to_string();
+                let p = agg.phases.entry(phase).or_default();
+                p.spans += 1;
+                p.total_ns += j.get("dur_ns").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                p.items += j.get("n").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            }
+            "observe" => match j.get("value").and_then(Json::as_f64) {
+                Some(v) if v.is_finite() => agg.observes.push((t_ns, step, v)),
+                _ => agg.invalid_observes += 1,
+            },
+            "cache_hit" => agg.cache_hits += 1,
+            "shared_hit" => agg.shared_hits += 1,
+            "af_choice" => {
+                let arm = j.get("arm").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+                *agg.af_choices.entry(arm).or_default() += 1;
+            }
+            "probes" => {
+                agg.probes = Some(j.get("total").and_then(Json::as_f64).unwrap_or(0.0) as u64);
+            }
+            "resilience" => {
+                agg.resilience = j.get("stats").map(Json::render);
+            }
+            _ => {}
+        }
+    }
+
+    let mut out = format!(
+        "telemetry report (schema v{version}): {total_events} events, {} cell(s)\n",
+        cells.len()
+    );
+    for (label, agg) in &cells {
+        out.push_str(&format!("\n== {label} ==\n"));
+        let t0 = agg.first_t_ns.unwrap_or(0);
+        if !agg.phases.is_empty() {
+            out.push_str(&format!(
+                "{:<10} {:>7} {:>10} {:>10} {:>8}\n",
+                "phase", "spans", "total", "mean", "items"
+            ));
+            let known = PHASE_ORDER.iter().filter(|p| agg.phases.contains_key(**p)).copied();
+            let extra = agg.phases.keys().map(String::as_str).filter(|p| !PHASE_ORDER.contains(p));
+            for phase in known.chain(extra) {
+                let p = &agg.phases[phase];
+                let mean = if p.spans > 0 { p.total_ns / p.spans } else { 0 };
+                out.push_str(&format!(
+                    "{:<10} {:>7} {:>10} {:>10} {:>8}\n",
+                    phase,
+                    p.spans,
+                    fmt_ns(p.total_ns),
+                    fmt_ns(mean),
+                    p.items
+                ));
+            }
+        }
+        let mut counters: Vec<String> = Vec::new();
+        if agg.cache_hits > 0 {
+            counters.push(format!("cache_hits={}", agg.cache_hits));
+        }
+        if agg.shared_hits > 0 {
+            counters.push(format!("shared_hits={}", agg.shared_hits));
+        }
+        if agg.invalid_observes > 0 {
+            counters.push(format!("invalid_observations={}", agg.invalid_observes));
+        }
+        for (arm, n) in &agg.af_choices {
+            counters.push(format!("af_choice[{arm}]={n}"));
+        }
+        if let Some(p) = agg.probes {
+            counters.push(format!("probes={p}"));
+        }
+        if !counters.is_empty() {
+            out.push_str(&format!("counters: {}\n", counters.join(" ")));
+        }
+        if let Some(r) = &agg.resilience {
+            out.push_str(&format!("resilience: {r}\n"));
+        }
+        // Time-to-solution: each strict improvement of the incumbent.
+        let mut best = f64::INFINITY;
+        let mut milestones: Vec<String> = Vec::new();
+        for (t_ns, step, v) in &agg.observes {
+            if *v < best {
+                best = *v;
+                milestones.push(format!(
+                    "  step {:<5} +{:<10} best={:.4}",
+                    step,
+                    fmt_ns(t_ns.saturating_sub(t0)),
+                    best
+                ));
+            }
+        }
+        if !milestones.is_empty() {
+            out.push_str("time-to-solution:\n");
+            for m in &milestones {
+                out.push_str(m);
+                out.push('\n');
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{meta_record, Event, EventKind, Phase};
+    use super::*;
+
+    fn event_line(tag: &str, e: &Event) -> String {
+        e.to_json_into(
+            Json::obj()
+                .set("type", "event")
+                .set("kernel", "adding")
+                .set("gpu", "A100")
+                .set("strategy", tag)
+                .set("rep", 0usize),
+        )
+        .render()
+    }
+
+    fn sample() -> String {
+        let mut lines = vec![meta_record().render()];
+        let ev = |t_ns, step, kind| Event { t_ns, step, kind };
+        for e in [
+            ev(100, 0, EventKind::Span { phase: Phase::Ask, dur_ns: 90, n: 1 }),
+            ev(220, 0, EventKind::Span { phase: Phase::Eval, dur_ns: 100, n: 1 }),
+            ev(230, 1, EventKind::Observe { idx: 4, value: 5.5 }),
+            ev(300, 1, EventKind::Span { phase: Phase::Fit, dur_ns: 50, n: 8 }),
+            ev(400, 1, EventKind::AfChoice { arm: 2 }),
+            ev(430, 2, EventKind::Observe { idx: 9, value: 4.25 }),
+            ev(500, 3, EventKind::Observe { idx: 2, value: f64::NAN }),
+            ev(550, 3, EventKind::Observe { idx: 5, value: 9.0 }),
+            ev(600, 3, EventKind::Probes { total: 17 }),
+        ] {
+            lines.push(event_line("ei", &e));
+        }
+        lines.join("\n") + "\n"
+    }
+
+    #[test]
+    fn renders_phase_table_and_time_to_solution() {
+        let r = render(&sample()).unwrap();
+        assert!(r.contains("9 events, 1 cell(s)"), "{r}");
+        assert!(r.contains("== adding/A100/ei#0 =="), "{r}");
+        for marker in ["ask", "eval", "fit"] {
+            assert!(r.contains(marker), "missing phase {marker}: {r}");
+        }
+        assert!(r.contains("af_choice[2]=1"), "{r}");
+        assert!(r.contains("probes=17"), "{r}");
+        assert!(r.contains("invalid_observations=1"), "{r}");
+        assert!(r.contains("time-to-solution:"), "{r}");
+        // Two improvements (5.5 then 4.25); 9.0 is not an improvement.
+        assert!(r.contains("best=5.5000") && r.contains("best=4.2500"), "{r}");
+        assert!(!r.contains("best=9.0000"), "{r}");
+        // Milestone time is relative to the cell's first event (t0=100).
+        assert!(r.contains("+130ns"), "{r}");
+    }
+
+    #[test]
+    fn refuses_future_schema_and_non_telemetry_files() {
+        let future = r#"{"type":"meta","kind":"telemetry","schema_version":99}"#;
+        assert!(render(future).unwrap_err().contains("schema_version 99"));
+        let sweep = r#"{"type":"meta","kind":"sweep","schema_version":1}"#;
+        assert!(render(sweep).unwrap_err().contains("telemetry meta record"));
+        assert!(render("").unwrap_err().contains("empty"));
+    }
+
+    #[test]
+    fn untagged_events_group_as_session() {
+        let text = format!(
+            "{}\n{}\n",
+            meta_record().render(),
+            Event { t_ns: 10, step: 0, kind: EventKind::CacheHit { idx: 1 } }.to_json().render()
+        );
+        let r = render(&text).unwrap();
+        assert!(r.contains("== session =="), "{r}");
+        assert!(r.contains("cache_hits=1"), "{r}");
+    }
+}

@@ -45,8 +45,18 @@ fi
 step "smoke bench (gp_hotpath + space_build + surrogate_fit + session_step + space_scale)"
 scripts/bench.sh --smoke
 
-step "smoke sweep (orchestrator; bo_rf surrogate cell + faulted sa cells)"
-cargo run --release -p ktbo -- sweep --smoke --fresh --out results
+step "smoke sweep (orchestrator; bo_rf surrogate cell + faulted sa cells; telemetry on)"
+cargo run --release -p ktbo -- sweep --smoke --fresh --out results --telemetry
+
+step "telemetry export + ktbo report"
+test -s results/SWEEP_smoke.telemetry.jsonl
+# Versioned meta head line, then at least one real event.
+head -n1 results/SWEEP_smoke.telemetry.jsonl | grep -q '"schema_version"'
+[ "$(wc -l < results/SWEEP_smoke.telemetry.jsonl)" -gt 1 ]
+REPORT_OUT="$(cargo run --release -p ktbo -- report results/SWEEP_smoke.telemetry.jsonl)"
+echo "$REPORT_OUT" | head -n 30
+# The per-phase table must render with real spans for the ask phase.
+echo "$REPORT_OUT" | grep -q 'ask'
 
 step "smoke sweep on a JSON-defined space"
 cargo run --release -p ktbo -- sweep --smoke --fresh --out results \
@@ -71,8 +81,14 @@ for _ in $(seq 1 50); do
   sleep 0.2
 done
 CLIENT_OUT="$(cargo run --release -p ktbo -- client --addr "$SERVE_ADDR" \
-  --sessions 2 --kernel adding --gpu a100 --strategy random --budget 40 --seed 7 --shutdown)"
+  --sessions 2 --kernel adding --gpu a100 --strategy random --budget 40 --seed 7)"
 echo "$CLIENT_OUT"
+# The daemon's metrics registry must have counted the session traffic;
+# the metrics query also delivers the shutdown.
+METRICS_OUT="$(cargo run --release -p ktbo -- client --addr "$SERVE_ADDR" --metrics --shutdown)"
+echo "$METRICS_OUT"
+echo "$METRICS_OUT" | grep -qF '"serve.sessions.created":{"type":"counter","value":2}'
+echo "$METRICS_OUT" | grep -qF '"serve.requests.ask"'
 wait "$SERVE_PID"
 trap - EXIT
 TUNE_BEST="$(cargo run --release -p ktbo -- tune adding a100 --strategy random --budget 40 --seed 7 \
